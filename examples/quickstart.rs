@@ -1,0 +1,87 @@
+//! Quickstart: the whole CapMin flow on the tiny model, in under a
+//! minute on one CPU core.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Steps: synthesize data -> train a tiny BNN via the AOT train-step
+//! artifact -> fold to hardware tensors -> extract F_MAC -> pick a
+//! CapMin window -> size the capacitor -> evaluate accuracy with the
+//! error model injected at sub-MAC granularity.
+
+use anyhow::Result;
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::coordinator::evaluator::Evaluator;
+use capmin::coordinator::histogrammer::Histogrammer;
+use capmin::coordinator::pipeline::Pipeline;
+use capmin::coordinator::trainer::Trainer;
+use capmin::data::synth::Dataset;
+use capmin::data::{Loader, Split};
+use capmin::runtime::Runtime;
+use capmin::util::table::si;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new()?;
+    let model = "vgg3_tiny";
+    let spec = Dataset::FashionSyn.spec();
+    let mi = rt.manifest.model(model).clone();
+    println!("model: {} ({})", model, mi.description);
+
+    // 1. train via the AOT train-step artifact (Rust owns the loop)
+    let trainer = Trainer::new(&rt);
+    let mut loader =
+        Loader::new(spec.clone(), Split::Train, mi.train_batch, 512, 1);
+    let trained = trainer.train(
+        model, &mut loader, 80, 1e-2, 60, 42,
+        &mut |step, loss| {
+            if step % 20 == 0 {
+                println!("  step {step:>3}  loss {loss:.4}");
+            }
+        },
+    )?;
+
+    // 2. fold BN + binarize into the IF-SNN hardware tensors
+    let folded = trainer.export(&trained)?;
+    println!("folded {} hardware tensors", folded.len());
+
+    // 3. extract F_MAC (the SW statistics CapMin feeds on)
+    let hist = Histogrammer::new(&rt);
+    let hres = hist.extract_dataset(
+        model, &folded, spec.clone(), 128, 7)?;
+    println!(
+        "F_MAC over {} samples (clean train-acc {:.1}%), peak level {}",
+        hres.n_samples,
+        100.0 * hres.accuracy,
+        (0..33).max_by_key(|&m| hres.sum.counts[m]).unwrap()
+    );
+
+    // 4. CapMin at k = 14 + capacitor sizing + error models
+    let mut cfg = ExperimentConfig::default();
+    cfg.mc_samples = 500;
+    cfg.run_dir = std::env::temp_dir()
+        .join("capmin_quickstart")
+        .to_str()
+        .unwrap()
+        .into();
+    let pipe = Pipeline::new(&rt, cfg)?;
+    let hw32 = pipe.hw_config(&hres.per_matmul, 32, 0.0, 0);
+    let hw14 = pipe.hw_config(&hres.per_matmul, 14, 0.0, 0);
+    let hw14v = pipe.hw_config(&hres.per_matmul, 14, 0.02, 0);
+    println!(
+        "capacitor: baseline {} -> CapMin(k=14) {}  ({:.2}x smaller)",
+        si(hw32.c, "F"),
+        si(hw14.c, "F"),
+        hw32.c / hw14.c
+    );
+
+    // 5. hardware-mode accuracy (error model injected per sub-MAC)
+    let ev = Evaluator::new(&rt, "eval");
+    let a32 = ev.accuracy(model, &folded, spec.clone(), &hw32.ems, 64, 1)?;
+    let a14 = ev.accuracy(model, &folded, spec.clone(), &hw14.ems, 64, 1)?;
+    let a14v =
+        ev.accuracy(model, &folded, spec.clone(), &hw14v.ems, 64, 1)?;
+    println!("accuracy: k=32 {:.1}% | k=14 clean {:.1}% | k=14 under \
+              2% current variation {:.1}%",
+             100.0 * a32, 100.0 * a14, 100.0 * a14v);
+    println!("quickstart OK");
+    Ok(())
+}

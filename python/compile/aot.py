@@ -1,0 +1,174 @@
+"""AOT driver: lower every L2 graph to HLO *text* + write the manifest.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once via `make artifacts`; Python never appears on the request path.
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts [--models vgg3,vgg7,...]
+                        [--full]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import arch, configs, model, nn, train
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir('stablehlo')
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(args):
+    """JSON signature entries for a list of (name, ShapeDtypeStruct)."""
+    out = []
+    for name, s in args:
+        dt = {'float32': 'f32', 'uint32': 'u32',
+              'int32': 'i32'}[str(s.dtype)]
+        out.append({'name': name, 'dtype': dt, 'shape': list(s.shape)})
+    return out
+
+
+def lower_model(name, cfg, out_dir):
+    spec = configs.build_spec(cfg)
+    in_shape = cfg['in_shape']
+    ncls = cfg['n_classes']
+
+    # Trace shapes once with a throwaway init.
+    key = jax.random.PRNGKey(0)
+    params, state, pnames, snames = nn.init_model(key, spec, in_shape)
+    folded, fnames = nn.export_folded(spec, params, state)
+    np_, ns_, nf_ = len(params), len(state), len(folded)
+
+    def write(kind, fn, in_named, out_named):
+        in_sds = [s for _, s in in_named]
+        text = to_hlo_text(jax.jit(fn).lower(*in_sds))
+        path = f'{name}_{kind}.hlo.txt'
+        with open(os.path.join(out_dir, path), 'w') as f:
+            f.write(text)
+        return {'kind': kind, 'path': path,
+                'inputs': _sig(in_named), 'outputs': _sig(out_named)}
+
+    p_named = [(n, _sds(p.shape)) for n, p in zip(pnames, params)]
+    s_named = [(n, _sds(s.shape)) for n, s in zip(snames, state)]
+    f_named = [(n, _sds(t.shape)) for n, t in zip(fnames, folded)]
+    m_named = [(f'm.{n}', _sds(p.shape)) for n, p in zip(pnames, params)]
+    v_named = [(f'v.{n}', _sds(p.shape)) for n, p in zip(pnames, params)]
+
+    tb, eb, hb = cfg['train_batch'], cfg['eval_batch'], cfg['hist_batch']
+    x_t = ('x', _sds((tb,) + in_shape))
+    y_t = ('y_pm', _sds((tb, ncls)))
+    x_e = ('x', _sds((eb,) + in_shape))
+    x_h = ('x', _sds((hb,) + in_shape))
+    n_mat = nn.count_matmuls(spec)
+    cdf_in = ('cdf', _sds((n_mat, 33, 33)))
+    vals_in = ('vals', _sds((n_mat, 33)))
+    seed_in = ('seed', _sds((), jnp.uint32))
+
+    artifacts = []
+    artifacts.append(write(
+        'init', model.make_init(spec, in_shape),
+        [('key', _sds((2,), jnp.uint32))], p_named + s_named))
+    mhl_b = train.margin_for(spec, in_shape)
+    artifacts.append(write(
+        'train', model.make_train_fn(spec, np_, ns_, mhl_b),
+        p_named + s_named + m_named + v_named
+        + [('step', _sds(())), ('lr', _sds(())), x_t, y_t],
+        p_named + s_named + m_named + v_named + [('loss', _sds(()))]))
+    artifacts.append(write(
+        'export', model.make_export(spec, np_),
+        p_named + s_named, f_named))
+    artifacts.append(write(
+        'hist', model.make_hist(spec, nf_),
+        f_named + [x_h],
+        [('fmac', _sds((n_mat, 33))), ('logits', _sds((hb, ncls)))]))
+    artifacts.append(write(
+        'eval', model.make_eval(spec, nf_, 'jnp'),
+        f_named + [x_e, cdf_in, vals_in, seed_in],
+        [('logits', _sds((eb, ncls)))]))
+    artifacts.append(write(
+        'evalp', model.make_eval(spec, nf_, 'pallas'),
+        f_named + [x_e, cdf_in, vals_in, seed_in],
+        [('logits', _sds((eb, ncls)))]))
+    # standalone L1 kernel artifact: single grouped sub-MAC matmul through
+    # the Pallas kernel — the bit-exactness bridge for the Rust engine
+    # (rust/tests/integration.rs). Shapes: first folded weight x D=64.
+    o0, k0 = folded[0].shape
+    d0 = 64
+    beta0 = params[0].shape[1] * 9 if False else None
+    from .kernels import submac as ksub
+
+    def kernel_fn(wb, xb, cdf, vals, seed):
+        return (ksub.submac_matmul_pallas(
+            wb, xb, cdf, vals, seed, salt=0, beta=k0),)
+
+    artifacts.append(write(
+        'kernel', kernel_fn,
+        [('wb', _sds((o0, k0))), ('xb', _sds((k0, d0))),
+         ('cdf', _sds((33, 33))), ('vals', _sds((33,))),
+         ('seed', _sds((), jnp.uint32))],
+        [('out', _sds((o0, d0)))]))
+
+    return {
+        'arch': cfg['arch'],
+        'description': arch.describe(spec),
+        'in_shape': list(in_shape),
+        'n_classes': ncls,
+        'train_batch': tb, 'eval_batch': eb, 'hist_batch': hb,
+        'n_params': np_, 'n_state': ns_, 'n_folded': nf_,
+        'n_matmuls': n_mat,
+        'mhl_b': mhl_b,
+        'param_names': pnames, 'state_names': snames,
+        'folded_names': fnames,
+        'artifacts': artifacts,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--out-dir', default='../artifacts')
+    ap.add_argument('--models', default='all')
+    ap.add_argument('--full', action='store_true',
+                    help="paper-exact widths (Table II); default is the "
+                         "CPU-budget scaling (DESIGN.md §6)")
+    # kept for Makefile compatibility: --out <file> writes a stamp
+    ap.add_argument('--out', default=None)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    mcfgs = configs.model_configs(full=args.full)
+    names = list(mcfgs) if args.models == 'all' else args.models.split(',')
+
+    manifest = {'full': args.full, 'array_size': 32, 'n_levels': 33,
+                'models': {}, 'datasets': configs.DATASETS}
+    for name in names:
+        print(f'[aot] lowering {name} ...', flush=True)
+        manifest['models'][name] = lower_model(name, mcfgs[name], out_dir)
+
+    with open(os.path.join(out_dir, 'manifest.json'), 'w') as f:
+        json.dump(manifest, f, indent=1)
+    print(f'[aot] wrote {out_dir}/manifest.json '
+          f'({len(names)} models x 6 artifacts)')
+    if args.out:
+        with open(args.out, 'w') as f:
+            f.write('ok\n')
+
+
+if __name__ == '__main__':
+    main()

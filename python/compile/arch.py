@@ -1,0 +1,93 @@
+"""Architecture specs — the paper's Table II, as data.
+
+A spec is a list of ops consumed by `nn.py`/`model.py`:
+
+  ('conv', out_c, stride)   binarized 3x3 conv, SAME padding via explicit
+                            -1 padding (binary domain has no zero)
+  ('conv1', out_c, stride)  binarized 1x1 conv (ResNet projection)
+  ('mp', k)                 max pool k x k
+  ('bn',)                   batch norm (folded to a digital affine at export)
+  ('sign',)                 binarize activations (+-1, STE in training)
+  ('scb', out_c, stride)    ResNet skip-connection block (expanded below)
+  ('flatten',)
+  ('fc', out_f)             binarized fully connected
+  ('out', n_classes)        final binarized FC with f32 bias, emits logits
+
+Widths are configurable (`width` multiplies the per-arch base channel
+plan) so the paper's full-size models and CPU-budget models share code.
+"""
+
+
+def _scb(out_c, stride):
+    """Skip-connection block: two binarized 3x3 convs with BN, plus a
+    projection shortcut (binarized 1x1 conv + BN) when shape changes.
+    The branch merge is a digital add of BN-affine outputs, then sign —
+    consistent with the paper's 'digital components follow conventional
+    designs' accumulation model (DESIGN.md §4)."""
+    return [('scb', out_c, stride)]
+
+
+def vgg3(width=1.0, fc_width=1.0):
+    c = max(8, int(64 * width))
+    f = max(16, int(2048 * fc_width))
+    return ([('conv', c, 1), ('mp', 2), ('bn',), ('sign',),
+             ('conv', c, 1), ('mp', 2), ('bn',), ('sign',),
+             ('flatten',),
+             ('fc', f), ('bn',), ('sign',)]
+            + [('out', 10)])
+
+
+def vgg7(width=1.0, fc_width=1.0):
+    c1 = max(8, int(128 * width))
+    c2 = max(8, int(256 * width))
+    c3 = max(8, int(512 * width))
+    f = max(16, int(1024 * fc_width))
+    return ([('conv', c1, 1), ('bn',), ('sign',),
+             ('conv', c1, 1), ('mp', 2), ('bn',), ('sign',),
+             ('conv', c2, 1), ('bn',), ('sign',),
+             ('conv', c2, 1), ('mp', 2), ('bn',), ('sign',),
+             ('conv', c3, 1), ('bn',), ('sign',),
+             ('conv', c3, 1), ('mp', 2), ('bn',), ('sign',),
+             ('flatten',),
+             ('fc', f), ('bn',), ('sign',)]
+            + [('out', 10)])
+
+
+def resnet18(width=1.0):
+    b = max(8, int(64 * width))
+    return ([('conv', b, 1), ('bn',), ('sign',)]
+            + _scb(b, 1)
+            + _scb(2 * b, 2)
+            + _scb(4 * b, 2)
+            + [('mp', 2)]
+            + _scb(8 * b, 1)
+            + [('mp', 4), ('flatten',)]
+            + [('out', 10)])
+
+
+ARCH_BUILDERS = {
+    'vgg3': vgg3,
+    'vgg7': vgg7,
+    'resnet18': resnet18,
+}
+
+
+def describe(spec):
+    """One-line per-op description (Table II regeneration)."""
+    rows = []
+    for op in spec:
+        if op[0] == 'conv':
+            rows.append(f'C{op[1]}' + (f'/s{op[2]}' if op[2] != 1 else ''))
+        elif op[0] == 'conv1':
+            rows.append(f'C1x1-{op[1]}')
+        elif op[0] == 'mp':
+            rows.append(f'MP{op[1]}')
+        elif op[0] == 'scb':
+            rows.append(f'SCB{op[1]}' + (f'/s{op[2]}' if op[2] != 1 else ''))
+        elif op[0] == 'fc':
+            rows.append(f'FC{op[1]}')
+        elif op[0] == 'out':
+            rows.append(f'FC{op[1]}')
+        elif op[0] in ('bn', 'sign', 'flatten'):
+            continue
+    return ' -> '.join(rows)

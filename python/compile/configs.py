@@ -1,0 +1,58 @@
+"""Model and dataset registry — Table I / Table II of the paper, plus the
+CPU-budget scaling this reproduction runs by default.
+
+`full=True` restores the paper's exact widths (Table II); the default
+configs scale channel counts down so the single-core CPU testbed can train
+and sweep all five benchmarks inside the experiment budget. Architecture,
+depth, input shapes, class counts, and the a=32 sub-MAC structure are
+identical in both modes (DESIGN.md §6).
+"""
+
+from . import arch
+
+
+def model_configs(full=False):
+    w = 1.0 if full else 0.5
+    w7 = 1.0 if full else 0.25
+    wr = 1.0 if full else 0.25
+    fc = 1.0 if full else 0.25
+    return {
+        'vgg3': dict(
+            arch='vgg3', width=w, fc_width=fc, in_shape=(1, 28, 28),
+            train_batch=64, eval_batch=16, hist_batch=32, n_classes=10),
+        'vgg7': dict(
+            arch='vgg7', width=w7, fc_width=fc, in_shape=(3, 32, 32),
+            train_batch=32, eval_batch=8, hist_batch=16, n_classes=10),
+        'resnet18': dict(
+            arch='resnet18', width=wr, fc_width=1.0, in_shape=(3, 64, 64),
+            train_batch=16, eval_batch=8, hist_batch=8, n_classes=10),
+        # tiny twin of vgg3 used by fast tests and the quickstart example
+        'vgg3_tiny': dict(
+            arch='vgg3', width=0.125, fc_width=32 / 2048,
+            in_shape=(1, 28, 28), train_batch=16, eval_batch=8,
+            hist_batch=8, n_classes=10),
+    }
+
+
+# Table I: dataset name -> (model, generator id, #train, #test).
+# The generators are procedural synthetic equivalents built in
+# rust/src/data/ (no dataset downloads in this environment; DESIGN.md §6).
+DATASETS = {
+    'fashion_syn': dict(model='vgg3', shape=(1, 28, 28), classes=10,
+                        n_train=60000, n_test=10000, paper='FashionMNIST'),
+    'kmnist_syn': dict(model='vgg3', shape=(1, 28, 28), classes=10,
+                       n_train=60000, n_test=10000, paper='KuzushijiMNIST'),
+    'svhn_syn': dict(model='vgg7', shape=(3, 32, 32), classes=10,
+                     n_train=73257, n_test=26032, paper='SVHN'),
+    'cifar_syn': dict(model='vgg7', shape=(3, 32, 32), classes=10,
+                      n_train=50000, n_test=10000, paper='CIFAR10'),
+    'imagenette_syn': dict(model='resnet18', shape=(3, 64, 64), classes=10,
+                           n_train=9470, n_test=3925, paper='Imagenette'),
+}
+
+
+def build_spec(cfg):
+    builder = arch.ARCH_BUILDERS[cfg['arch']]
+    if cfg['arch'] == 'resnet18':
+        return builder(width=cfg['width'])
+    return builder(width=cfg['width'], fc_width=cfg['fc_width'])

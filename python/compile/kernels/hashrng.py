@@ -1,0 +1,43 @@
+"""Counter-based hash PRNG shared by the Pallas kernel and the jnp reference.
+
+The error-injection path needs one uniform sample per sub-MAC result. A
+counter-based hash (murmur3 finalizer over a linear index mixed with a seed)
+keeps the AOT graphs stateless: Rust passes a u32 seed per forward pass and
+the kernel derives every sample from (seed, logical position). Because the
+reference oracle (`ref.py`) and the Pallas kernel (`submac.py`) use the same
+hash over the same logical indices, their stochastic outputs are
+*bit-identical*, which turns stochastic-mode testing into exact comparison.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+_GOLDEN = np.uint32(0x9E3779B9)
+_M1 = np.uint32(0x85EBCA6B)
+_M2 = np.uint32(0xC2B2AE35)
+
+
+def hash_u32(seed, idx):
+    """Murmur3 finalizer over a u32 index stream, keyed by `seed`.
+
+    seed: scalar uint32 (or broadcastable). idx: uint32 array of logical
+    positions. Returns uint32 array of well-mixed words.
+    """
+    x = idx.astype(jnp.uint32) + jnp.asarray(seed).astype(jnp.uint32) * _GOLDEN
+    x = x ^ (x >> np.uint32(16))
+    x = x * _M1
+    x = x ^ (x >> np.uint32(13))
+    x = x * _M2
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def hash01(seed, idx):
+    """Uniform f32 samples in [0, 1) derived from (seed, idx).
+
+    Uses the top 24 bits so the f32 value is exact and strictly < 1.0
+    (dividing the full 32-bit word by 2^32 can round up to 1.0 in f32,
+    which would walk off the end of a CDF row).
+    """
+    h = hash_u32(seed, idx) >> np.uint32(8)
+    return h.astype(jnp.float32) * np.float32(1.0 / (1 << 24))

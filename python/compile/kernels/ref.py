@@ -1,0 +1,147 @@
+"""Pure-jnp oracle for the sub-MAC engine.
+
+This is the semantic ground truth for the Pallas kernel in `submac.py` and
+for the Rust bit-packed engine (`rust/src/bnn/engine.rs`): a binarized
+matmul computed at *sub-MAC granularity* — the granularity of the paper's
+a=32 XNOR computing array — with the IF-SNN read-out model applied to every
+sub-MAC level:
+
+  1. split the reduction dimension into groups of ARRAY_SIZE=32 (the array),
+  2. per group, the XNOR-popcount level  M = (32 + dot)/2  in [0, 32]
+     (padding cells are (w=+1, x=-1) pairs, i.e. non-conducting: they
+     contribute 0 to M, exactly like unused cells in a partially filled
+     array),
+  3. read-out through the spike-time error model: a row-stochastic 33x33
+     CDF matrix maps the true level M to a decoded level (CapMin clipping
+     and CapMin-V / Monte-Carlo variation are all expressed as this one
+     matrix; the identity matrix is the ideal circuit),
+  4. the digital accumulator sums decoded levels:  out = 2*sum_g D_g - beta.
+
+Everything is f32; levels are small integers so the arithmetic is exact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .hashrng import hash01
+
+ARRAY_SIZE = 32
+N_LEVELS = ARRAY_SIZE + 1  # sub-MAC levels 0..32
+
+
+def pad_operands(wb, xb):
+    """Pad the reduction dim of (wb: [O,K], xb: [K,D]) to a multiple of 32.
+
+    Pads are non-conducting cells: w=+1 rows against x=-1 columns contribute
+    -1 to the group dot product and therefore 0 to the popcount level M.
+    """
+    k = wb.shape[1]
+    kp = (k + ARRAY_SIZE - 1) // ARRAY_SIZE * ARRAY_SIZE
+    if kp != k:
+        wb = jnp.pad(wb, ((0, 0), (0, kp - k)), constant_values=1.0)
+        xb = jnp.pad(xb, ((0, kp - k), (0, 0)), constant_values=-1.0)
+    return wb, xb
+
+
+def identity_cdf():
+    """CDF of the ideal (error-free) read-out: level M decodes to M."""
+    return jnp.cumsum(jnp.eye(N_LEVELS, dtype=jnp.float32), axis=1)
+
+
+def identity_vals():
+    """Decoded value of each read-out column under the ideal circuit."""
+    return jnp.arange(N_LEVELS, dtype=jnp.float32)
+
+
+def decode_levels(m, cdf, vals, u):
+    """Map true levels `m` (int32) to decoded values via CDF inversion.
+
+    col = #{c : cdf[m, c] <= u}; decoded = vals[col]. (`<=`, not `<`: with
+    `<` a sample u exactly 0 would land in a zero-probability prefix
+    column; `<=` is the correct right-continuous CDF inversion and gives
+    P(col=j) = cdf[j] - cdf[j-1] for u ~ U[0,1).) The 33-column scan is
+    expressed as a fori_loop so no [..., 33] gather tensor is materialised
+    (on the jnp batch path that would be GiB-scale).
+    """
+    def body(c, col):
+        return col + (jnp.take(cdf[:, c], m, axis=0) <= u).astype(jnp.int32)
+
+    col = jax.lax.fori_loop(0, N_LEVELS, body, jnp.zeros_like(m))
+    return jnp.take(vals, col, axis=0)
+
+
+def submac_matmul_ref(wb, xb, cdf, vals, seed, salt, beta=None):
+    """Binarized matmul with per-sub-MAC error injection (jnp oracle).
+
+    wb: [O, K] in {-1,+1} f32 (K a multiple of 32 — use `pad_operands`).
+    xb: [K, D] in {-1,+1} f32.
+    cdf: [33, 33] row-CDF of the level-transition matrix (rows: true level).
+    vals: [33] decoded value of each column (f32).
+    seed: scalar uint32; salt: python int, decorrelates call sites.
+    beta: true (pre-padding) reduction length the digital accumulator
+    subtracts; defaults to K. Pad cells are non-conducting (level
+    contribution 0), so with beta = true K the result equals the valid
+    dot product exactly under the identity CDF.
+    Returns [O, D] f32: 2 * sum_g decoded_g - beta.
+    """
+    o, k = wb.shape
+    if beta is None:
+        beta = k
+    d = xb.shape[1]
+    g = k // ARRAY_SIZE
+    w3 = wb.reshape(o, g, ARRAY_SIZE)
+    x3 = xb.reshape(g, ARRAY_SIZE, d)
+    salt = jnp.uint32(salt)
+    seed = jnp.asarray(seed, dtype=jnp.uint32)
+
+    def body(gi, acc):
+        wg = jax.lax.dynamic_index_in_dim(w3, gi, 1, keepdims=False)
+        xg = jax.lax.dynamic_index_in_dim(x3, gi, 0, keepdims=False)
+        dot = wg @ xg
+        m = ((dot + ARRAY_SIZE) * 0.5).astype(jnp.int32)  # [O, D]
+        oidx = jnp.arange(o, dtype=jnp.uint32)[:, None]
+        didx = jnp.arange(d, dtype=jnp.uint32)[None, :]
+        lin = salt + (oidx * jnp.uint32(g) + gi.astype(jnp.uint32)) \
+            * jnp.uint32(d) + didx
+        u = hash01(seed, lin)
+        dv = decode_levels(m, cdf, vals, u)
+        return acc + 2.0 * dv
+
+    acc = jax.lax.fori_loop(0, g, body,
+                            jnp.zeros((o, d), dtype=jnp.float32))
+    return acc - jnp.float32(beta)
+
+
+def submac_levels_ref(wb, xb):
+    """True sub-MAC levels [O, G, D] (int32), for tests and histograms."""
+    o, k = wb.shape
+    d = xb.shape[1]
+    g = k // ARRAY_SIZE
+    w3 = wb.reshape(o, g, ARRAY_SIZE)
+    x3 = xb.reshape(g, ARRAY_SIZE, d)
+    dot = jnp.einsum('ogk,gkd->ogd', w3, x3)
+    return ((dot + ARRAY_SIZE) * 0.5).astype(jnp.int32)
+
+
+def submac_hist(wb, xb):
+    """Absolute frequency of occurrence of sub-MAC levels: [33] f32 counts.
+
+    One matmul's contribution to the paper's F_MAC histograms (Fig. 1).
+    """
+    o, k = wb.shape
+    d = xb.shape[1]
+    g = k // ARRAY_SIZE
+    w3 = wb.reshape(o, g, ARRAY_SIZE)
+    x3 = xb.reshape(g, ARRAY_SIZE, d)
+
+    def body(gi, hist):
+        wg = jax.lax.dynamic_index_in_dim(w3, gi, 1, keepdims=False)
+        xg = jax.lax.dynamic_index_in_dim(x3, gi, 0, keepdims=False)
+        dot = wg @ xg
+        m = ((dot + ARRAY_SIZE) * 0.5).astype(jnp.int32)
+        onehot = (m[:, :, None] ==
+                  jnp.arange(N_LEVELS, dtype=jnp.int32)).astype(jnp.float32)
+        return hist + onehot.sum(axis=(0, 1))
+
+    return jax.lax.fori_loop(
+        0, g, body, jnp.zeros((N_LEVELS,), dtype=jnp.float32))

@@ -1,0 +1,178 @@
+"""L1: Pallas sub-MAC kernel — the paper's custom MAC engine, for TPU.
+
+The paper replaces PyTorch's closed-source GPU MAC engine with a custom
+CUDA kernel so that clipping (CapMin, Eq. 4) and the variation error model
+(CapMin-V, Eq. 6) can be applied at *sub-MAC* granularity (one a=32 XNOR
+array invocation). This kernel is that engine rethought for TPU:
+
+  * CUDA threadblock tiling        -> Pallas grid over (O-blocks, D-blocks)
+    with BlockSpec index maps; the W tile and the error-model tables are
+    grid-invariant along D, so Pallas keeps them resident in VMEM across
+    grid steps (the analogue of caching weights in shared memory).
+  * warp ballot/popcount           -> +-1 dot products over 32-wide groups;
+    popcount(XNOR) == (32 + w.x)/2 exactly, and the 32xD times Ox32 group
+    product maps onto the MXU systolic array on a real TPU.
+  * shared-memory LUT + divergent
+    branchy error sampling         -> the 33x33 row-CDF lives in VMEM
+    (4.4 KiB) and sampling is a vectorised comparison scan (no divergence).
+
+Lowered with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so correctness runs through the interpreter while the real-TPU
+resource usage (VMEM footprint, MXU shapes) is estimated statically — see
+DESIGN.md §7 and `vmem_footprint_bytes` below.
+
+Bit-exactness: the kernel derives its per-sub-MAC uniforms from the same
+counter-based hash over the same *logical* (o, g, d) indices as the jnp
+oracle in `ref.py`, so `submac_matmul_pallas == submac_matmul_ref` exactly,
+including in stochastic mode.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import numpy as np
+
+from .hashrng import hash01
+from .ref import ARRAY_SIZE, N_LEVELS
+
+DEFAULT_BLOCK_O = 32
+DEFAULT_BLOCK_D = 128
+
+
+def adaptive_block_o(o):
+    """Perf pass (EXPERIMENTS.md §Perf L1): one group matmul is
+    (block_o x 32) @ (32 x block_d); with block_o = 32 a 128x128 MXU pass
+    is only 32*32*128 / 128^3 = 6.2% utilized. Widening block_o to the
+    output size (capped at 128, the MXU edge) packs 4x more useful work
+    per pass for the wide layers (25% util; the 32-deep reduction is the
+    a=32 array structure and cannot fill the remaining factor without
+    fusing groups, which would break per-group read-out semantics)."""
+    if o >= 128:
+        return 128
+    # round up to the next multiple of 8 (sublane) without exceeding 128
+    return max(8, min(128, (o + 7) // 8 * 8))
+
+
+def _kernel(w_ref, x_ref, cdf_ref, vals_ref, seed_ref, out_ref,
+            *, n_groups, block_o, block_d, d_logical, salt, beta):
+    """One (block_o x block_d) output tile.
+
+    w_ref: [block_o, K] (grid-invariant along D). x_ref: [K, block_d].
+    cdf_ref: [33, 33]; vals_ref: [33]; seed_ref: [1] u32.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    w = w_ref[...]
+    x = x_ref[...]
+    cdf = cdf_ref[...]
+    vals = vals_ref[...]
+    seed = seed_ref[0]
+
+    # Logical coordinates of this tile's elements; used for the counter-based
+    # PRNG so results are independent of the blocking (and identical to ref).
+    oidx = (i * block_o +
+            jnp.arange(block_o, dtype=jnp.uint32)[:, None])
+    didx = (j * block_d +
+            jnp.arange(block_d, dtype=jnp.uint32)[None, :])
+
+    def body(g, acc):
+        wg = jax.lax.dynamic_slice(w, (0, g * ARRAY_SIZE),
+                                   (block_o, ARRAY_SIZE))
+        xg = jax.lax.dynamic_slice(x, (g * ARRAY_SIZE, 0),
+                                   (ARRAY_SIZE, block_d))
+        dot = wg @ xg  # MXU-shaped on real TPU
+        m = ((dot + ARRAY_SIZE) * 0.5).astype(jnp.int32)
+        lin = (np.uint32(salt) +
+               (oidx * np.uint32(n_groups) + g.astype(jnp.uint32)) *
+               np.uint32(d_logical) + didx)
+        u = hash01(seed, lin)
+
+        def col_body(c, col):
+            # right-continuous CDF inversion (see ref.decode_levels)
+            return col + (jnp.take(cdf[:, c], m, axis=0) <= u)\
+                .astype(jnp.int32)
+
+        col = jax.lax.fori_loop(0, N_LEVELS, col_body, jnp.zeros_like(m))
+        dv = jnp.take(vals, col, axis=0)
+        return acc + 2.0 * dv
+
+    acc = jax.lax.fori_loop(
+        0, n_groups, body,
+        jnp.zeros((block_o, block_d), dtype=jnp.float32))
+    out_ref[...] = acc - np.float32(beta)
+
+
+def submac_matmul_pallas(wb, xb, cdf, vals, seed, salt, beta=None,
+                         block_o=None, block_d=DEFAULT_BLOCK_D):
+    """Pallas twin of `ref.submac_matmul_ref` (same signature + blocks).
+
+    wb: [O, K] +-1 f32 with K % 32 == 0; xb: [K, D] +-1 f32.
+    Output [O, D] f32. O and D are padded up to block multiples internally
+    (pads are non-conducting and sliced off), so any shape is accepted.
+
+    The kernel subtracts n_groups*32 == K at the end, matching ref.py
+    exactly (K here is already group-padded; O/D pads added below are
+    non-conducting cells whose outputs are sliced off).
+    """
+    o, k = wb.shape
+    d = xb.shape[1]
+    assert k % ARRAY_SIZE == 0, "pad reduction dim with pad_operands first"
+    if beta is None:
+        beta = k
+    if block_o is None:
+        block_o = adaptive_block_o(o)
+    n_groups = k // ARRAY_SIZE
+    op = (o + block_o - 1) // block_o * block_o
+    dp = (d + block_d - 1) // block_d * block_d
+    if op != o:
+        wb = jnp.pad(wb, ((0, op - o), (0, 0)), constant_values=1.0)
+    if dp != d:
+        xb = jnp.pad(xb, ((0, 0), (0, dp - d)), constant_values=-1.0)
+    seed_arr = jnp.asarray(seed, dtype=jnp.uint32).reshape((1,))
+
+    kernel = functools.partial(
+        _kernel, n_groups=n_groups, block_o=block_o, block_d=block_d,
+        d_logical=d, salt=salt, beta=beta)
+    out = pl.pallas_call(
+        kernel,
+        grid=(op // block_o, dp // block_d),
+        in_specs=[
+            pl.BlockSpec((block_o, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_d), lambda i, j: (0, j)),
+            pl.BlockSpec((N_LEVELS, N_LEVELS), lambda i, j: (0, 0)),
+            pl.BlockSpec((N_LEVELS,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_o, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((op, dp), jnp.float32),
+        interpret=True,
+    )(wb, xb, cdf, vals, seed_arr)
+    return out[:o, :d]
+
+
+def vmem_footprint_bytes(k, block_o=DEFAULT_BLOCK_O, block_d=DEFAULT_BLOCK_D):
+    """Static VMEM estimate per grid step (real-TPU sizing, DESIGN.md §7).
+
+    W tile + X tile + CDF/vals tables + accumulator + level/uniform temps.
+    """
+    f32 = 4
+    w_tile = block_o * k * f32
+    x_tile = k * block_d * f32
+    tables = (N_LEVELS * N_LEVELS + N_LEVELS) * f32
+    acc = block_o * block_d * f32
+    temps = 3 * block_o * block_d * f32  # dot/m/u live ranges overlap acc
+    return w_tile + x_tile + tables + acc + temps
+
+
+def mxu_utilization_estimate(block_o=DEFAULT_BLOCK_O,
+                             block_d=DEFAULT_BLOCK_D):
+    """Fraction of a 128x128 MXU pass doing useful work for one group
+    matmul tile (block_o x 32) @ (32 x block_d)."""
+    useful = block_o * ARRAY_SIZE * block_d
+    passes_o = (block_o + 127) // 128
+    passes_d = (block_d + 127) // 128
+    full = passes_o * passes_d * 128 * 128 * 128
+    return useful / full

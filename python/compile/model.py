@@ -1,0 +1,98 @@
+"""L2 entry points lowered by aot.py — one pure function per artifact kind.
+
+Artifact kinds (all per model config; shapes are static):
+
+  init   (key u32[2])                          -> params..., state...
+  train  (params..., state..., m..., v...,
+          step f32, lr f32, x, y_pm)           -> params', state', m', v',
+                                                  loss
+  export (params..., state...)                 -> folded hardware tensors
+  hist   (folded..., x)                        -> per-matmul F_MAC [n,33],
+                                                  logits
+  eval   (folded..., x, cdf, vals, seed u32)   -> logits   (jnp engine)
+  evalp  (folded..., x, cdf, vals, seed u32)   -> logits   (Pallas engine)
+
+`folded` = export's output list: per-matmul +-1 padded weights, per-BN
+digital affines, final bias. The error model (cdf/vals) and the PRNG seed
+are *runtime inputs*, so the Rust coordinator sweeps CapMin's k and
+CapMin-V's phi without recompiling.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import nn, train
+from .kernels import ref as kref
+
+
+def make_init(spec, in_shape):
+    def init(key):
+        params, state, _, _ = nn.init_model(key, spec, in_shape)
+        return tuple(params) + tuple(state)
+
+    return init
+
+
+def make_train_fn(spec, n_params, n_state, mhl_b=None):
+    if mhl_b is None:
+        mhl_b = train.MHL_B
+    step_fn = train.make_train_step(spec, mhl_b)
+
+    def train_fn(*args):
+        params = list(args[:n_params])
+        state = list(args[n_params:n_params + n_state])
+        off = n_params + n_state
+        m = list(args[off:off + n_params])
+        v = list(args[off + n_params:off + 2 * n_params])
+        step, lr, x, y_pm = args[off + 2 * n_params:]
+        new_p, new_s, new_m, new_v, loss = step_fn(
+            params, state, m, v, step, lr, x, y_pm)
+        return tuple(new_p) + tuple(new_s) + tuple(new_m) + tuple(new_v) \
+            + (loss,)
+
+    return train_fn
+
+
+def make_export(spec, n_params):
+    def export(*args):
+        params = list(args[:n_params])
+        state = list(args[n_params:])
+        out, _ = nn.export_folded(spec, params, state)
+        return tuple(out)
+
+    return export
+
+
+def make_hist(spec, n_folded):
+    def hist(*args):
+        folded = list(args[:n_folded])
+        x = args[n_folded]
+        eng = nn.SubMacEngine('exact', None, None, None, hist=True)
+        logits = nn.forward_eval(spec, folded, x, eng)
+        return jnp.stack(eng.hists), logits
+
+    return hist
+
+
+def make_eval(spec, n_folded, engine):
+    def eval_fn(*args):
+        folded = list(args[:n_folded])
+        x, cdf, vals, seed = args[n_folded:]
+        eng = nn.SubMacEngine(engine, cdf, vals, seed)
+        return nn.forward_eval(spec, folded, x, eng)
+
+    return eval_fn
+
+
+def folded_signature(spec, in_shape, key=None):
+    """Shapes/names of the folded tensors (drives the AOT manifest)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    params, state, pnames, snames = nn.init_model(key, spec, in_shape)
+    out, names = nn.export_folded(spec, params, state)
+    return [(n, tuple(t.shape)) for n, t in zip(names, out)], \
+        (params, state, pnames, snames)
+
+
+def identity_error_model():
+    return kref.identity_cdf(), kref.identity_vals()

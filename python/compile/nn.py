@@ -1,0 +1,430 @@
+"""BNN building blocks (L2): training-mode layers, export-time folding,
+and the grouped sub-MAC evaluation path that calls the L1 kernel.
+
+Three views of the same network:
+
+  * `forward_train`  — float latent weights, STE binarization, live batch
+    norm. Used by the AOT train-step artifact (the Rust trainer drives it).
+  * `export_folded`  — freezes a trained model into exactly what the
+    IF-SNN hardware stores: +-1 weight matrices padded to a=32 groups and
+    per-channel digital affines (BN folded; sign(BN(x)) == sign(ax+b)).
+  * `forward_eval`   — the hardware-mode forward pass: every binarized
+    matmul runs at sub-MAC granularity through the error model, via either
+    the jnp oracle (`engine='jnp'`), the Pallas kernel (`engine='pallas'`),
+    or the idealized fast path (`engine='exact'`, no grouping — used for
+    clean-accuracy baselines and tests).
+
+Conventions: NCHW activations, OIHW weights, +-1 binary domain (SAME
+padding pads with -1: the binary domain has no zero, and the padded cells
+behave as non-conducting array cells, mirroring the hardware).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref as kref
+from .kernels import submac as ksub
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+_SALT_STRIDE = 0x9E3779B1  # decorrelates per-matmul PRNG streams
+
+
+def ste_sign(x):
+    """Binarize to {-1,+1} with a straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.where(x >= 0, 1.0, -1.0) - x)
+
+
+def _pad_same(x, k, stride):
+    """Explicit SAME padding with -1 (binary 'off'), NCHW."""
+    h, w = x.shape[2], x.shape[3]
+    oh = -(-h // stride)
+    ow = -(-w // stride)
+    ph = max(0, (oh - 1) * stride + k - h)
+    pw = max(0, (ow - 1) * stride + k - w)
+    return jnp.pad(x, ((0, 0), (0, 0),
+                       (ph // 2, ph - ph // 2),
+                       (pw // 2, pw - pw // 2)),
+                   constant_values=-1.0)
+
+
+def conv_bin(x, w_latent, stride, k):
+    """Training-mode binarized conv: STE weights, -1-padded SAME."""
+    wb = ste_sign(w_latent)
+    xp = _pad_same(x, k, stride)
+    return jax.lax.conv_general_dilated(
+        xp, wb, (stride, stride), 'VALID',
+        dimension_numbers=('NCHW', 'OIHW', 'NCHW'))
+
+
+def maxpool(x, k):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, k, k), (1, 1, k, k), 'VALID')
+
+
+def bn_train(x, gamma, beta, mean, var):
+    """Batch norm over (N, H, W) or (N,); returns (y, new_mean, new_var)."""
+    axes = (0, 2, 3) if x.ndim == 4 else (0,)
+    mu = jnp.mean(x, axis=axes)
+    sig2 = jnp.var(x, axis=axes)
+    shape = (1, -1, 1, 1) if x.ndim == 4 else (1, -1)
+    y = (x - mu.reshape(shape)) / jnp.sqrt(sig2.reshape(shape) + BN_EPS)
+    y = y * gamma.reshape(shape) + beta.reshape(shape)
+    new_mean = BN_MOMENTUM * mean + (1 - BN_MOMENTUM) * mu
+    new_var = BN_MOMENTUM * var + (1 - BN_MOMENTUM) * sig2
+    return y, new_mean, new_var
+
+
+def bn_fold(gamma, beta, mean, var):
+    """BN -> digital affine: y = scale*x + bias (DESIGN.md §4).
+
+    sign(BN(x)) == sign(scale*x + bias), and at branch merges the affine
+    is what the digital accumulator applies to decoded MAC values.
+    """
+    scale = gamma / jnp.sqrt(var + BN_EPS)
+    bias = beta - scale * mean
+    return scale, bias
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization (walks the arch spec, returns flat lists).
+# --------------------------------------------------------------------------
+
+def _glorot(key, shape):
+    fan_in = int(np.prod(shape[1:]))
+    fan_out = shape[0]
+    s = np.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, shape, dtype=jnp.float32) * s
+
+
+def init_model(key, spec, in_shape):
+    """Initialize latent params and BN state for an arch spec.
+
+    Returns (params, state, pnames, snames): flat lists of f32 arrays plus
+    their names (the AOT manifest records names/shapes for the Rust side).
+    """
+    params, state, pnames, snames = [], [], [], []
+    c, h, w = in_shape
+
+    def add_p(name, arr):
+        params.append(arr)
+        pnames.append(name)
+
+    def add_bn(name, ch):
+        add_p(f'{name}.gamma', jnp.ones((ch,), jnp.float32))
+        add_p(f'{name}.beta', jnp.zeros((ch,), jnp.float32))
+        state.append(jnp.zeros((ch,), jnp.float32))
+        snames.append(f'{name}.mean')
+        state.append(jnp.ones((ch,), jnp.float32))
+        snames.append(f'{name}.var')
+
+    li = 0
+    flat = None
+    for op in spec:
+        kind = op[0]
+        if kind == 'conv':
+            oc, s = op[1], op[2]
+            key, sub = jax.random.split(key)
+            add_p(f'conv{li}.w', _glorot(sub, (oc, c, 3, 3)))
+            c, h, w = oc, -(-h // s), -(-w // s)
+            li += 1
+        elif kind == 'mp':
+            h, w = h // op[1], w // op[1]
+        elif kind == 'bn':
+            add_bn(f'bn{li - 1}', c if flat is None else flat)
+        elif kind == 'sign':
+            pass
+        elif kind == 'scb':
+            oc, s = op[1], op[2]
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            add_p(f'scb{li}.w1', _glorot(k1, (oc, c, 3, 3)))
+            add_bn(f'scb{li}.bn1', oc)
+            add_p(f'scb{li}.w2', _glorot(k2, (oc, oc, 3, 3)))
+            add_bn(f'scb{li}.bn2', oc)
+            add_p(f'scb{li}.wp', _glorot(k3, (oc, c, 1, 1)))
+            add_bn(f'scb{li}.bnp', oc)
+            c, h, w = oc, -(-h // s), -(-w // s)
+            li += 1
+        elif kind == 'flatten':
+            flat = c * h * w
+        elif kind == 'fc':
+            key, sub = jax.random.split(key)
+            add_p(f'fc{li}.w', _glorot(sub, (op[1], flat)))
+            flat = op[1]
+            li += 1
+        elif kind == 'out':
+            key, sub = jax.random.split(key)
+            add_p(f'out.w', _glorot(sub, (op[1], flat)))
+            add_p(f'out.b', jnp.zeros((op[1],), jnp.float32))
+        else:
+            raise ValueError(f'unknown op {kind}')
+    return params, state, pnames, snames
+
+
+# --------------------------------------------------------------------------
+# Training-mode forward.
+# --------------------------------------------------------------------------
+
+def forward_train(spec, params, state, x):
+    """Training forward pass. x: NCHW +-1. Returns (logits, new_state)."""
+    p = iter(params)
+    new_state = []
+    st = iter(state)
+
+    def bn(y):
+        gamma, beta = next(p), next(p)
+        mean, var = next(st), next(st)
+        y, nm, nv = bn_train(y, gamma, beta, mean, var)
+        new_state.extend([nm, nv])
+        return y
+
+    h = x
+    for op in spec:
+        kind = op[0]
+        if kind == 'conv':
+            h = conv_bin(h, next(p), op[2], 3)
+        elif kind == 'mp':
+            h = maxpool(h, op[1])
+        elif kind == 'bn':
+            h = bn(h)
+        elif kind == 'sign':
+            h = ste_sign(h)
+        elif kind == 'scb':
+            s = op[2]
+            y = ste_sign(bn(conv_bin(h, next(p), s, 3)))
+            z = bn(conv_bin(y, next(p), 1, 3))
+            sc = bn(conv_bin(h, next(p), s, 1))
+            h = ste_sign(z + sc)
+        elif kind == 'flatten':
+            h = h.reshape(h.shape[0], -1)
+        elif kind == 'fc':
+            # input is already +-1 here (spec places 'sign' before 'fc')
+            h = h @ ste_sign(next(p)).T
+        elif kind == 'out':
+            w, b = next(p), next(p)
+            h = h @ ste_sign(w).T + b
+    return h, new_state
+
+
+# --------------------------------------------------------------------------
+# Export: fold a trained model into hardware tensors.
+# --------------------------------------------------------------------------
+
+def _pad_w(wb):
+    """Pad a +-1 [O, K] weight matrix along K to a multiple of 32 with +1
+    (non-conducting against the matching -1 activation pads)."""
+    o, k = wb.shape
+    kp = -(-k // kref.ARRAY_SIZE) * kref.ARRAY_SIZE
+    if kp != k:
+        wb = jnp.pad(wb, ((0, 0), (0, kp - k)), constant_values=1.0)
+    return wb
+
+
+def hard_sign(x):
+    return jnp.where(x >= 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def export_folded(spec, params, state):
+    """Freeze (params, state) into the folded hardware tensors.
+
+    Returns (tensors, names): per matmul a padded +-1 weight `wb{i}`
+    (reshaped to [O, C*kh*kw -> padded]), per BN a `scale{i}`/`bias{i}`
+    pair, and the final f32 `out.b`. Order matches forward_eval's
+    consumption order; the AOT manifest records it.
+    """
+    p = iter(params)
+    st = iter(state)
+    out, names = [], []
+    mat = 0
+    bni = 0
+
+    def emit_w(w):
+        nonlocal mat
+        wb = _pad_w(hard_sign(w.reshape(w.shape[0], -1)))
+        out.append(wb)
+        names.append(f'wb{mat}')
+        mat += 1
+
+    def emit_bn():
+        nonlocal bni
+        gamma, beta = next(p), next(p)
+        mean, var = next(st), next(st)
+        scale, bias = bn_fold(gamma, beta, mean, var)
+        out.append(scale)
+        names.append(f'scale{bni}')
+        out.append(bias)
+        names.append(f'bias{bni}')
+        bni += 1
+
+    for op in spec:
+        kind = op[0]
+        if kind == 'conv':
+            emit_w(next(p))
+        elif kind == 'bn':
+            emit_bn()
+        elif kind == 'scb':
+            emit_w(next(p))
+            emit_bn()
+            emit_w(next(p))
+            emit_bn()
+            emit_w(next(p))
+            emit_bn()
+        elif kind == 'fc':
+            emit_w(next(p))
+        elif kind == 'out':
+            emit_w(next(p))
+            out.append(next(p))
+            names.append('out.b')
+    return out, names
+
+
+# --------------------------------------------------------------------------
+# Hardware-mode (grouped sub-MAC) forward.
+# --------------------------------------------------------------------------
+
+def _patches(x, k, stride):
+    """im2col: NCHW -> (F=C*kh*kw, B*H'*W') matching OIHW weight reshape."""
+    xp = _pad_same(x, k, stride)
+    pat = jax.lax.conv_general_dilated_patches(
+        xp, (k, k), (stride, stride), 'VALID',
+        dimension_numbers=('NCHW', 'OIHW', 'NCHW'))
+    b, f, oh, ow = pat.shape
+    return pat.transpose(1, 0, 2, 3).reshape(f, b * oh * ow), (b, oh, ow)
+
+
+def centered_pad(beta):
+    """Dummy-cell biasing for a partial tail group (DESIGN.md §4).
+
+    A group with r = beta % 32 < 32 live cells would emit levels in
+    [0, r] — far below the peak-16 window every full group lives in, so
+    CapMin clipping would wipe it out. Real arrays bias unused cells:
+    `p_on` of the 32-r pads are driven conducting (w=+1, x=+1), shifting
+    the group's levels to [p_on, p_on + r], centered on 16; the digital
+    accumulator subtracts the known 2*p_on offset. Returns
+    (p_on, beta_eff) with beta_eff = beta + 2*p_on."""
+    r = beta % kref.ARRAY_SIZE
+    if r == 0:
+        return 0, beta
+    p_on = (kref.ARRAY_SIZE - r) // 2
+    return p_on, beta + 2 * p_on
+
+
+def _pad_x_rows(xm):
+    """Pad activation rows to a group multiple: the first `p_on` pad
+    rows are conducting (+1, dummy bias cells), the rest non-conducting
+    (-1). Returns (padded, beta_eff)."""
+    k = xm.shape[0]
+    kp = -(-k // kref.ARRAY_SIZE) * kref.ARRAY_SIZE
+    p_on, beta_eff = centered_pad(k)
+    if kp != k:
+        ones = jnp.ones((p_on, xm.shape[1]), xm.dtype)
+        minus = -jnp.ones((kp - k - p_on, xm.shape[1]), xm.dtype)
+        xm = jnp.concatenate([xm, ones, minus], axis=0)
+    return xm, beta_eff
+
+
+class SubMacEngine:
+    """Dispatches every binarized matmul of the eval pass.
+
+    engine: 'exact' (plain matmul, ideal circuit), 'jnp' (grouped oracle),
+    'pallas' (L1 kernel). `hist=True` additionally accumulates the F_MAC
+    level histogram per matmul (clean compute; used by the hist artifact).
+
+    The error model is *per matmul*: `cdf` has shape [n_mat, 33, 33] and
+    `vals` [n_mat, 33]. The IF-SNN hardware has one capacitor and one set
+    of physical spike times, but the digital decoder is per layer — a
+    layer whose reduction length beta only reaches level 9 (e.g. a
+    grayscale first conv, beta = 9) keeps its own narrow read-out window
+    instead of being wiped out by the peak-centered global window
+    (DESIGN.md §CapMin-L).
+    """
+
+    def __init__(self, engine, cdf, vals, seed, hist=False):
+        self.engine = engine
+        self.cdf = cdf
+        self.vals = vals
+        self.seed = seed
+        self.hist = hist
+        self.hists = []
+        self._mat = 0
+
+    def matmul(self, wb, xm):
+        # `xm` arrives unpadded: its row count is the true beta. The K-pad
+        # cells are non-conducting, so the digital accumulator subtracts
+        # the *true* beta (2*sum_g M_g - beta), not the padded one.
+        beta = xm.shape[0]
+        xm, beta_eff = _pad_x_rows(xm)
+        mat = self._mat
+        salt = (mat * _SALT_STRIDE) & 0xFFFFFFFF
+        self._mat += 1
+        if self.hist:
+            self.hists.append(kref.submac_hist(wb, xm))
+        if self.engine == 'exact':
+            return wb[:, :beta] @ xm[:beta]
+        cdf = self.cdf[mat]
+        vals = self.vals[mat]
+        if self.engine == 'jnp':
+            return kref.submac_matmul_ref(
+                wb, xm, cdf, vals, self.seed, salt, beta=beta_eff)
+        if self.engine == 'pallas':
+            return ksub.submac_matmul_pallas(
+                wb, xm, cdf, vals, self.seed, salt, beta=beta_eff)
+        raise ValueError(self.engine)
+
+
+def forward_eval(spec, folded, x, eng):
+    """Hardware-mode forward. folded: tensors from `export_folded` (same
+    order); x: NCHW +-1; eng: SubMacEngine. Returns logits [B, n_cls]."""
+    f = iter(folded)
+
+    def affine(y):
+        scale, bias = next(f), next(f)
+        shape = (1, -1, 1, 1) if y.ndim == 4 else (1, -1)
+        return y * scale.reshape(shape) + bias.reshape(shape)
+
+    def conv(h, k, stride):
+        wb = next(f)
+        xm, (b, oh, ow) = _patches(h, k, stride)
+        y = eng.matmul(wb, xm)  # (O, B*oh*ow)
+        return y.reshape(-1, b, oh, ow).transpose(1, 0, 2, 3)
+
+    h = x
+    for op in spec:
+        kind = op[0]
+        if kind == 'conv':
+            h = conv(h, 3, op[2])
+        elif kind == 'mp':
+            h = maxpool(h, op[1])
+        elif kind == 'bn':
+            h = affine(h)
+        elif kind == 'sign':
+            h = hard_sign(h)
+        elif kind == 'scb':
+            s = op[2]
+            y = hard_sign(affine(conv(h, 3, s)))
+            z = affine(conv(y, 3, 1))
+            sc = affine(conv(h, 1, s))
+            h = hard_sign(z + sc)
+        elif kind == 'flatten':
+            h = h.reshape(h.shape[0], -1)
+        elif kind == 'fc':
+            wb = next(f)
+            h = eng.matmul(wb, h.T).T
+        elif kind == 'out':
+            wb = next(f)
+            b = None
+            y = eng.matmul(wb, h.T).T
+            b = next(f)
+            h = y + b
+    return h
+
+
+def count_matmuls(spec):
+    n = 0
+    for op in spec:
+        if op[0] in ('conv', 'fc', 'out'):
+            n += 1
+        elif op[0] == 'scb':
+            n += 3
+    return n

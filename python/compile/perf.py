@@ -1,0 +1,101 @@
+"""L1/L2 performance profile (build-time): per-matmul VMEM footprint and
+MXU-utilization estimates for the Pallas kernel's block plan, plus HLO
+op-count statistics of the lowered eval graphs.
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the L1
+optimization loop is *structural*: pick block shapes that (a) fit VMEM
+with headroom for double buffering, (b) keep the MXU pass shape as full
+as the a=32 group structure allows, (c) keep W and the error tables
+grid-invariant (resident). This script prints the numbers EXPERIMENTS.md
+§Perf cites and fails loudly if a model's plan exceeds the VMEM budget.
+
+Usage: python -m compile.perf [--full]
+"""
+
+import argparse
+import collections
+import re
+
+import jax
+
+from . import configs, nn
+from .kernels import submac
+
+
+VMEM_BUDGET = 16 * 1024 * 1024  # v4/v5e per-core VMEM
+VMEM_TARGET = 8 * 1024 * 1024   # leave half for double buffering
+
+
+def matmul_shapes(cfg):
+    """(name, O, K_padded, beta) for every binarized matmul of a model."""
+    spec = configs.build_spec(cfg)
+    params, state, _, _ = nn.init_model(
+        jax.random.PRNGKey(0), spec, cfg['in_shape'])
+    folded, names = nn.export_folded(spec, params, state)
+    out = []
+    for t, n in zip(folded, names):
+        if n.startswith('wb'):
+            out.append((n, t.shape[0], t.shape[1]))
+    return out
+
+
+def profile_model(name, cfg):
+    print(f'\n== {name} — L1 block plan (adaptive block_o, '
+          f'block_d={submac.DEFAULT_BLOCK_D}) ==')
+    print(f'{"matmul":>8} {"O":>6} {"K_pad":>6} {"groups":>6} '
+          f'{"blk_o":>6} {"VMEM/step":>12} {"fits":>5} '
+          f'{"MXU util":>9} {"(was)":>7}')
+    worst = 0
+    for n, o, k in matmul_shapes(cfg):
+        bo = submac.adaptive_block_o(o)
+        vmem = submac.vmem_footprint_bytes(k, block_o=bo)
+        worst = max(worst, vmem)
+        mxu = submac.mxu_utilization_estimate(block_o=bo)
+        was = submac.mxu_utilization_estimate(block_o=32)
+        print(f'{n:>8} {o:>6} {k:>6} {k // 32:>6} {bo:>6} '
+              f'{vmem / 1024:>10.1f}KB '
+              f'{"yes" if vmem < VMEM_TARGET else "NO":>5} '
+              f'{mxu:>9.3f} {was:>7.3f}')
+    assert worst < VMEM_TARGET, \
+        f'{name}: block plan exceeds VMEM target ({worst} B)'
+    return worst
+
+
+def hlo_op_stats(path):
+    """Histogram of HLO opcodes in a lowered artifact (fusion check)."""
+    ops = collections.Counter()
+    with open(path) as f:
+        for line in f:
+            m = re.search(r'=\s+\S+\s+([a-z0-9-]+)\(', line)
+            if m:
+                ops[m.group(1)] += 1
+    return ops
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--full', action='store_true')
+    ap.add_argument('--artifacts', default='../artifacts')
+    args = ap.parse_args()
+    mcfgs = configs.model_configs(full=args.full)
+    for name in ('vgg3', 'vgg7', 'resnet18'):
+        profile_model(name, mcfgs[name])
+
+    print('\n== L2 HLO op profile (eval graphs) ==')
+    import os
+    for name in ('vgg3', 'vgg7', 'resnet18'):
+        path = os.path.join(args.artifacts, f'{name}_eval.hlo.txt')
+        if not os.path.exists(path):
+            print(f'{name}: run `make artifacts` first')
+            continue
+        ops = hlo_op_stats(path)
+        total = sum(ops.values())
+        top = ', '.join(f'{k}:{v}' for k, v in ops.most_common(6))
+        print(f'{name}: {total} ops | {top}')
+        # no per-layer host round-trips: a single fused module per model
+        assert ops.get('custom-call', 0) == 0, \
+            'CPU-incompatible custom call leaked into the artifact'
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,92 @@
+"""Training-path graph: modified hinge loss + Adam over latent weights.
+
+The paper trains BNNs with Adam and the modified hinge loss (MHL, b=128,
+Buschjäger et al. DATE'21) for margin-maximization, which is also what
+gives BNNs their error tolerance. This module builds the *pure* train-step
+function that `aot.py` lowers to HLO; the Rust coordinator owns the loop,
+the LR schedule (halving per the paper), batching and logging.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+
+MHL_B = 128.0
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def mhl_loss(logits, y_pm, b=MHL_B):
+    """Modified hinge loss. y_pm: [B, C] targets in {-1,+1} (+1 = true
+    class). mean over classes and batch of max(0, b - t*logit)/b.
+
+    The margin b is capped by the caller to the output layer's fan-in:
+    a +-1 FC with K inputs can only produce |logit| <= K, so the paper's
+    b=128 is unreachable for narrow models and would flatten the loss."""
+    return jnp.mean(jnp.maximum(0.0, b - y_pm * logits)) / b
+
+
+def adam_update(p, g, m, v, step, lr):
+    m = ADAM_B1 * m + (1 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+    mhat = m / (1 - ADAM_B1 ** step)
+    vhat = v / (1 - ADAM_B2 ** step)
+    return p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+
+def margin_for(spec, in_shape):
+    """Margin b = min(128, fan-in of the output FC).
+
+    Walks the spec with the same shape inference as nn.init_model."""
+    c, h, w = in_shape
+    flat = None
+    for op in spec:
+        kind = op[0]
+        if kind == 'conv':
+            c, h, w = op[1], -(-h // op[2]), -(-w // op[2])
+        elif kind == 'scb':
+            c, h, w = op[1], -(-h // op[2]), -(-w // op[2])
+        elif kind == 'mp':
+            h, w = h // op[1], w // op[1]
+        elif kind == 'flatten':
+            flat = c * h * w
+        elif kind == 'fc':
+            flat = op[1]
+        elif kind == 'out':
+            return float(min(MHL_B, flat))
+    raise ValueError('spec has no out layer')
+
+
+def make_train_step(spec, mhl_b=MHL_B):
+    """Returns train_step(params, state, m, v, step, lr, x, y_pm) ->
+    (params', state', m', v', loss). All lists are flat (AOT-friendly)."""
+
+    def train_step(params, state, m, v, step, lr, x, y_pm):
+        def loss_fn(ps):
+            logits, new_state = nn.forward_train(spec, ps, state, x)
+            return mhl_loss(logits, y_pm, mhl_b), new_state
+
+        (loss, new_state), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_p, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(params, grads, m, v):
+            pn, mn, vn = adam_update(p, g, mi, vi, step, lr)
+            new_p.append(pn)
+            new_m.append(mn)
+            new_v.append(vn)
+        return new_p, new_state, new_m, new_v, loss
+
+    return train_step
+
+
+def make_accuracy(spec):
+    """Clean training-graph accuracy (used by the trainer's val hook)."""
+
+    def acc_fn(params, state, x, y_idx):
+        logits, _ = nn.forward_train(spec, params, state, x)
+        return jnp.mean((jnp.argmax(logits, axis=1) == y_idx)
+                        .astype(jnp.float32))
+
+    return acc_fn

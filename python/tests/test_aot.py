@@ -1,0 +1,65 @@
+"""AOT artifacts: manifest integrity and HLO-text round-trip contract."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), '..', '..', 'artifacts')
+MANIFEST = os.path.join(ART, 'manifest.json')
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST),
+    reason='run `make artifacts` first')
+
+
+def _manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_models_have_all_kinds():
+    man = _manifest()
+    kinds = {'init', 'train', 'export', 'hist', 'eval', 'evalp', 'kernel'}
+    for name, m in man['models'].items():
+        got = {a['kind'] for a in m['artifacts']}
+        assert kinds <= got, (name, got)
+
+
+def test_hlo_text_parseable_header():
+    man = _manifest()
+    for m in man['models'].values():
+        for a in m['artifacts']:
+            path = os.path.join(ART, a['path'])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(200)
+            assert head.startswith('HloModule'), path
+
+
+def test_signatures_consistent():
+    man = _manifest()
+    for m in man['models'].values():
+        by_kind = {a['kind']: a for a in m['artifacts']}
+        # init outputs == train's leading params+state inputs
+        init_out = by_kind['init']['outputs']
+        train_in = by_kind['train']['inputs']
+        n = m['n_params'] + m['n_state']
+        assert [o['shape'] for o in init_out] == \
+            [i['shape'] for i in train_in[:n]]
+        # export outputs == eval's folded inputs
+        exp_out = by_kind['export']['outputs']
+        eval_in = by_kind['eval']['inputs']
+        assert [o['shape'] for o in exp_out] == \
+            [i['shape'] for i in eval_in[:m['n_folded']]]
+        # eval and evalp share the full signature
+        assert by_kind['eval']['inputs'] == by_kind['evalp']['inputs']
+        # error-model inputs are runtime inputs (sweeps need no recompile)
+        names = [i['name'] for i in eval_in]
+        assert names[-3:] == ['cdf', 'vals', 'seed']
+
+
+def test_datasets_reference_known_models():
+    man = _manifest()
+    for ds, d in man['datasets'].items():
+        assert d['model'] in {'vgg3', 'vgg7', 'resnet18'}, ds

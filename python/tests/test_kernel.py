@@ -1,0 +1,174 @@
+"""Pallas sub-MAC kernel vs pure-jnp oracle — the core L1 signal.
+
+The kernel and the oracle share the counter-based PRNG over logical
+indices, so even the *stochastic* outputs must match bit-for-bit.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, submac
+
+RNG = np.random.default_rng(42)
+
+
+def rand_pm(shape):
+    return jnp.asarray(RNG.choice([-1.0, 1.0], shape).astype(np.float32))
+
+
+def rand_cdf(alpha=0.3):
+    p = RNG.dirichlet(np.ones(ref.N_LEVELS) * alpha,
+                      size=ref.N_LEVELS).astype(np.float32)
+    cdf = np.cumsum(p, axis=1)
+    cdf[:, -1] = 1.0
+    return jnp.asarray(cdf)
+
+
+SHAPES = [
+    (8, 32, 16),     # single group
+    (16, 64, 40),    # two groups, ragged D
+    (48, 96, 200),   # ragged everything vs default blocks
+    (33, 160, 129),  # prime-ish
+    (4, 320, 8),     # many groups, few outputs
+]
+
+
+@pytest.mark.parametrize('o,k,d', SHAPES)
+def test_exact_mode_matches_dot(o, k, d):
+    wb, xb = rand_pm((o, k)), rand_pm((k, d))
+    out = ref.submac_matmul_ref(wb, xb, ref.identity_cdf(),
+                                ref.identity_vals(), jnp.uint32(1), 0)
+    np.testing.assert_array_equal(np.array(out), np.array(wb @ xb))
+
+
+@pytest.mark.parametrize('o,k,d', SHAPES)
+def test_pallas_matches_ref_exact(o, k, d):
+    wb, xb = rand_pm((o, k)), rand_pm((k, d))
+    r = ref.submac_matmul_ref(wb, xb, ref.identity_cdf(),
+                              ref.identity_vals(), jnp.uint32(1), 5)
+    p = submac.submac_matmul_pallas(wb, xb, ref.identity_cdf(),
+                                    ref.identity_vals(), jnp.uint32(1), 5)
+    np.testing.assert_array_equal(np.array(r), np.array(p))
+
+
+@pytest.mark.parametrize('o,k,d', SHAPES)
+def test_pallas_matches_ref_stochastic(o, k, d):
+    wb, xb = rand_pm((o, k)), rand_pm((k, d))
+    cdf = rand_cdf()
+    vals = ref.identity_vals()
+    for seed in (0, 7, 12345):
+        r = ref.submac_matmul_ref(wb, xb, cdf, vals, jnp.uint32(seed), 9)
+        p = submac.submac_matmul_pallas(wb, xb, cdf, vals,
+                                        jnp.uint32(seed), 9)
+        np.testing.assert_array_equal(np.array(r), np.array(p))
+
+
+@pytest.mark.parametrize('bo,bd', [(8, 32), (16, 64), (32, 128), (64, 256)])
+def test_pallas_block_shape_invariance(bo, bd):
+    """The PRNG uses logical indices, so blocking must not change results."""
+    wb, xb = rand_pm((40, 64)), rand_pm((64, 100))
+    cdf = rand_cdf()
+    base = ref.submac_matmul_ref(wb, xb, cdf, ref.identity_vals(),
+                                 jnp.uint32(3), 2)
+    p = submac.submac_matmul_pallas(wb, xb, cdf, ref.identity_vals(),
+                                    jnp.uint32(3), 2,
+                                    block_o=bo, block_d=bd)
+    np.testing.assert_array_equal(np.array(base), np.array(p))
+
+
+def test_clip_cdf_equals_eq4():
+    """A deterministic clip CDF reproduces the paper's Eq. (4) exactly."""
+    q_first, q_last = 10, 22
+    p = np.zeros((33, 33), np.float32)
+    for m in range(33):
+        p[m, min(max(m, q_first), q_last)] = 1.0
+    cdf = jnp.asarray(np.cumsum(p, axis=1))
+    wb, xb = rand_pm((16, 64)), rand_pm((64, 50))
+    out = ref.submac_matmul_ref(wb, xb, cdf, ref.identity_vals(),
+                                jnp.uint32(0), 0)
+    lv = np.array(ref.submac_levels_ref(wb, xb))  # [O, G, D]
+    clipped = np.clip(lv, q_first, q_last)
+    expect = 2.0 * clipped.sum(axis=1) - 64.0
+    np.testing.assert_array_equal(np.array(out), expect.astype(np.float32))
+
+
+def test_partial_group_padding_is_nonconducting():
+    """K not multiple of 32: pads contribute level 0 and beta subtraction
+    recovers the exact valid dot product."""
+    o, k, d = 8, 41, 13
+    wb, xb = rand_pm((o, k)), rand_pm((k, d))
+    wp, xp = ref.pad_operands(wb, xb)
+    out = ref.submac_matmul_ref(wp, xp, ref.identity_cdf(),
+                                ref.identity_vals(), jnp.uint32(2), 1,
+                                beta=k)
+    np.testing.assert_array_equal(np.array(out), np.array(wb @ xb))
+    pout = submac.submac_matmul_pallas(wp, xp, ref.identity_cdf(),
+                                       ref.identity_vals(), jnp.uint32(2),
+                                       1, beta=k)
+    np.testing.assert_array_equal(np.array(pout), np.array(wb @ xb))
+
+
+def test_levels_and_hist_consistent():
+    wb, xb = rand_pm((12, 96), ), rand_pm((96, 30))
+    lv = np.array(ref.submac_levels_ref(wb, xb))
+    hist = np.array(ref.submac_hist(wb, xb))
+    assert hist.sum() == lv.size
+    counts = np.bincount(lv.ravel(), minlength=33)
+    np.testing.assert_array_equal(hist, counts.astype(np.float32))
+    assert lv.min() >= 0 and lv.max() <= 32
+
+
+def test_stochastic_respects_transition_matrix():
+    """Empirical transition frequencies converge to the CDF's PMF."""
+    p = np.zeros((33, 33), np.float32)
+    p[:, :] = 0.0
+    for m in range(33):
+        p[m, m] = 0.7
+        p[m, min(m + 1, 32)] += 0.2
+        p[m, max(m - 1, 0)] += 0.1
+    cdf = jnp.asarray(np.cumsum(p, axis=1))
+    wb, xb = rand_pm((32, 32)), rand_pm((32, 512))
+    lv = np.array(ref.submac_levels_ref(wb, xb))[:, 0, :]
+    outs = []
+    for seed in range(30):
+        out = ref.submac_matmul_ref(wb, xb, cdf, ref.identity_vals(),
+                                    jnp.uint32(seed), 0)
+        decoded = (np.array(out) + 32.0) / 2.0
+        outs.append(decoded - lv)  # per-element level shift
+    shifts = np.stack(outs).ravel()
+    frac_same = (shifts == 0).mean()
+    frac_up = (shifts == 1).mean()
+    frac_dn = (shifts == -1).mean()
+    # interior levels dominate; boundary rows fold +-1 mass inward
+    assert abs(frac_same - 0.7) < 0.03
+    assert abs(frac_up - 0.2) < 0.03
+    assert abs(frac_dn - 0.1) < 0.03
+
+
+def test_vmem_footprint_within_budget():
+    """Default blocks keep the largest model layer under 8 MiB VMEM."""
+    k_max = 4608  # fc1 of full-width vgg7: 512*3*3
+    assert submac.vmem_footprint_bytes(k_max) < 8 * 1024 * 1024
+
+
+def test_adaptive_block_o_defaults():
+    """Default (adaptive) blocking must match explicit blocking and the
+    oracle — the perf-pass block plan cannot change semantics."""
+    wb, xb = rand_pm((150, 96)), rand_pm((96, 70))
+    cdf = rand_cdf()
+    base = ref.submac_matmul_ref(wb, xb, cdf, ref.identity_vals(),
+                                 jnp.uint32(5), 4)
+    auto = submac.submac_matmul_pallas(wb, xb, cdf, ref.identity_vals(),
+                                       jnp.uint32(5), 4)
+    np.testing.assert_array_equal(np.array(base), np.array(auto))
+    assert submac.adaptive_block_o(150) == 128
+    assert submac.adaptive_block_o(10) == 16
+    assert submac.adaptive_block_o(64) == 64
+
+
+def test_adaptive_blocks_raise_mxu_utilization():
+    before = submac.mxu_utilization_estimate(block_o=32)
+    after = submac.mxu_utilization_estimate(
+        block_o=submac.adaptive_block_o(256))
+    assert after >= 4 * before - 1e-9, (before, after)

@@ -1,0 +1,114 @@
+"""Train step, export, and hist graphs behave as the Rust coordinator
+assumes: loss decreases, shapes match, histograms count every sub-MAC."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import configs, model, nn
+
+RNG = np.random.default_rng(11)
+
+
+def _toy_batch(cfg, n, cls_sep=True):
+    """Linearly separable +-1 images: class c gets a distinctive corner
+    patch sign pattern."""
+    c, h, w = cfg['in_shape']
+    ncls = cfg['n_classes']
+    y = RNG.integers(0, ncls, n)
+    x = RNG.choice([-1.0, 1.0], (n, c, h, w)).astype(np.float32)
+    if cls_sep:
+        for i in range(n):
+            cl = y[i]
+            pat = np.where(
+                (np.arange(h * w).reshape(h, w) // (cl + 1)) % 2 == 0,
+                1.0, -1.0)
+            x[i, 0, :, :] = pat  # strong per-class structure
+    y_pm = -np.ones((n, ncls), np.float32)
+    y_pm[np.arange(n), y] = 1.0
+    return jnp.asarray(x), jnp.asarray(y_pm), jnp.asarray(y)
+
+
+def test_train_step_decreases_loss():
+    cfg = configs.model_configs()['vgg3_tiny']
+    spec = configs.build_spec(cfg)
+    params, state, _, _ = nn.init_model(
+        jax.random.PRNGKey(0), spec, cfg['in_shape'])
+    from compile import train as tr
+    step_fn = jax.jit(tr.make_train_step(spec, tr.margin_for(spec, cfg['in_shape'])))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    x, y_pm, _ = _toy_batch(cfg, 16)
+    losses = []
+    for i in range(1, 61):
+        params, state, m, v, loss = step_fn(
+            params, state, m, v, jnp.float32(i), jnp.float32(5e-3),
+            x, y_pm)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.92, (losses[0], losses[-1])
+
+
+def test_trained_model_classifies_toy_data():
+    cfg = configs.model_configs()['vgg3_tiny']
+    spec = configs.build_spec(cfg)
+    params, state, _, _ = nn.init_model(
+        jax.random.PRNGKey(0), spec, cfg['in_shape'])
+    from compile import train as tr
+    step_fn = jax.jit(tr.make_train_step(spec, tr.margin_for(spec, cfg['in_shape'])))
+    acc_fn = jax.jit(tr.make_accuracy(spec))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    for i in range(1, 81):
+        x, y_pm, _ = _toy_batch(cfg, 32)
+        params, state, m, v, _ = step_fn(
+            params, state, m, v, jnp.float32(i), jnp.float32(1e-2),
+            x, y_pm)
+    x, _, y = _toy_batch(cfg, 64)
+    acc = float(acc_fn(params, state, x, y))
+    assert acc > 0.5, acc  # 10-way, separable -> way above chance
+
+    # hardware-mode eval of the same trained model agrees with train graph
+    folded, _ = nn.export_folded(spec, params, state)
+    from compile.kernels import ref as kref
+    eng = nn.SubMacEngine('exact', kref.identity_cdf(),
+                          kref.identity_vals(), jnp.uint32(0))
+    logits_hw = nn.forward_eval(spec, folded, x, eng)
+    acc_hw = float(jnp.mean(
+        (jnp.argmax(logits_hw, 1) == y).astype(jnp.float32)))
+    # BN uses batch stats in train graph vs running stats in hw graph, so
+    # agreement is statistical, not exact.
+    assert acc_hw > 0.4, (acc, acc_hw)
+
+
+def test_hist_counts_every_submac():
+    cfg = configs.model_configs()['vgg3_tiny']
+    spec = configs.build_spec(cfg)
+    params, state, _, _ = nn.init_model(
+        jax.random.PRNGKey(2), spec, cfg['in_shape'])
+    folded, _ = nn.export_folded(spec, params, state)
+    b = 4
+    x = jnp.asarray(RNG.choice(
+        [-1.0, 1.0], (b,) + cfg['in_shape']).astype(np.float32))
+    hist_fn = model.make_hist(spec, len(folded))
+    fmac, logits = hist_fn(*(folded + [x]))
+    fmac = np.array(fmac)
+    assert fmac.shape == (nn.count_matmuls(spec), 33)
+    assert (fmac >= 0).all()
+    # each matmul contributes O * G * D sub-MACs
+    f = iter(folded)
+    # first conv: O x (B*28*28) output positions, G=1 group
+    wb0 = next(f)
+    o0 = wb0.shape[0]
+    g0 = wb0.shape[1] // 32
+    assert fmac[0].sum() == o0 * g0 * b * 28 * 28
+    assert logits.shape == (b, cfg['n_classes'])
+
+
+def test_folded_signature_matches_manifest_contract():
+    cfg = configs.model_configs()['vgg3_tiny']
+    spec = configs.build_spec(cfg)
+    sig, _ = model.folded_signature(spec, cfg['in_shape'])
+    names = [n for n, _ in sig]
+    assert names[0] == 'wb0'
+    assert 'out.b' == names[-1]
+    assert any(n.startswith('scale') for n in names)

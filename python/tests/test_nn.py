@@ -1,0 +1,155 @@
+"""L2 layer semantics: conv-as-patches equivalence, BN folding, and the
+train-graph / hardware-graph agreement that the whole codesign rests on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, nn
+
+RNG = np.random.default_rng(7)
+
+
+def rand_pm(shape):
+    return jnp.asarray(RNG.choice([-1.0, 1.0], shape).astype(np.float32))
+
+
+def test_patches_match_conv():
+    """im2col + matmul == lax.conv for every (stride, k) we use."""
+    for k, stride, cin in [(3, 1, 2), (3, 2, 3), (1, 1, 4), (1, 2, 2)]:
+        x = rand_pm((2, cin, 9, 9))
+        w = rand_pm((5, cin, k, k))
+        xp = nn._pad_same(x, k, stride)
+        want = jax.lax.conv_general_dilated(
+            xp, w, (stride, stride), 'VALID',
+            dimension_numbers=('NCHW', 'OIHW', 'NCHW'))
+        xm, (b, oh, ow) = nn._patches(x, k, stride)
+        got = (w.reshape(5, -1) @ xm).reshape(5, b, oh, ow)\
+            .transpose(1, 0, 2, 3)
+        np.testing.assert_array_equal(np.array(want), np.array(got))
+
+
+def test_bn_fold_matches_bn():
+    gamma = jnp.asarray(RNG.normal(1.0, 0.3, 8).astype(np.float32))
+    beta = jnp.asarray(RNG.normal(0.0, 0.5, 8).astype(np.float32))
+    mean = jnp.asarray(RNG.normal(0.0, 2.0, 8).astype(np.float32))
+    var = jnp.asarray(RNG.uniform(0.5, 4.0, 8).astype(np.float32))
+    x = jnp.asarray(RNG.normal(0, 3, (4, 8, 5, 5)).astype(np.float32))
+    scale, bias = nn.bn_fold(gamma, beta, mean, var)
+    want = (x - mean.reshape(1, -1, 1, 1)) / \
+        jnp.sqrt(var.reshape(1, -1, 1, 1) + nn.BN_EPS) \
+        * gamma.reshape(1, -1, 1, 1) + beta.reshape(1, -1, 1, 1)
+    got = x * scale.reshape(1, -1, 1, 1) + bias.reshape(1, -1, 1, 1)
+    np.testing.assert_allclose(np.array(want), np.array(got),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ste_sign_values_and_grad():
+    x = jnp.asarray([-2.0, -0.0, 0.0, 0.5, 3.0])
+    np.testing.assert_array_equal(
+        np.array(nn.ste_sign(x)), [-1.0, 1.0, 1.0, 1.0, 1.0])
+    g = jax.grad(lambda v: jnp.sum(nn.ste_sign(v) * 2.0))(x)
+    np.testing.assert_array_equal(np.array(g), np.full(5, 2.0))
+
+
+@pytest.mark.parametrize('mname', ['vgg3_tiny'])
+def test_eval_engines_agree(mname):
+    """exact == jnp == pallas under the identity error model, end to end."""
+    cfg = configs.model_configs()[mname]
+    spec = configs.build_spec(cfg)
+    key = jax.random.PRNGKey(3)
+    params, state, _, _ = nn.init_model(key, spec, cfg['in_shape'])
+    # give BN state non-trivial values so folding is actually exercised
+    state = [s + 0.1 * (i + 1) for i, s in enumerate(state)]
+    folded, _ = nn.export_folded(spec, params, state)
+    x = rand_pm((4,) + cfg['in_shape'])
+    from compile.kernels import ref as kref
+    n_mat = nn.count_matmuls(spec)
+    cdf = jnp.stack([kref.identity_cdf()] * n_mat)
+    vals = jnp.stack([kref.identity_vals()] * n_mat)
+    outs = {}
+    for engine in ('exact', 'jnp', 'pallas'):
+        eng = nn.SubMacEngine(engine, cdf, vals, jnp.uint32(11))
+        outs[engine] = np.array(nn.forward_eval(spec, folded, x, eng))
+    np.testing.assert_allclose(outs['exact'], outs['jnp'],
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(outs['jnp'], outs['pallas'])
+
+
+def test_eval_stochastic_engines_bit_identical():
+    cfg = configs.model_configs()['vgg3_tiny']
+    spec = configs.build_spec(cfg)
+    params, state, _, _ = nn.init_model(
+        jax.random.PRNGKey(5), spec, cfg['in_shape'])
+    folded, _ = nn.export_folded(spec, params, state)
+    x = rand_pm((2,) + cfg['in_shape'])
+    p = RNG.dirichlet(np.ones(33) * 0.5, size=33).astype(np.float32)
+    cdf2 = np.cumsum(p, axis=1)
+    cdf2[:, -1] = 1.0
+    n_mat = nn.count_matmuls(spec)
+    cdf = jnp.stack([jnp.asarray(cdf2)] * n_mat)
+    from compile.kernels import ref as kref
+    vals = jnp.stack([kref.identity_vals()] * n_mat)
+    a = nn.forward_eval(spec, folded, x,
+                        nn.SubMacEngine('jnp', cdf, vals, jnp.uint32(4)))
+    b = nn.forward_eval(spec, folded, x,
+                        nn.SubMacEngine('pallas', cdf, vals, jnp.uint32(4)))
+    np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_folded_weights_are_pm_one_and_padded():
+    cfg = configs.model_configs()['vgg3_tiny']
+    spec = configs.build_spec(cfg)
+    params, state, _, _ = nn.init_model(
+        jax.random.PRNGKey(1), spec, cfg['in_shape'])
+    folded, names = nn.export_folded(spec, params, state)
+    for t, n in zip(folded, names):
+        if n.startswith('wb'):
+            assert t.shape[1] % 32 == 0
+            vals = np.unique(np.array(t))
+            assert set(vals.tolist()) <= {-1.0, 1.0}
+
+
+def test_count_matmuls():
+    cfgs = configs.model_configs()
+    for name, want in [('vgg3', 4), ('vgg7', 8)]:
+        spec = configs.build_spec(cfgs[name])
+        assert nn.count_matmuls(spec) == want
+    spec = configs.build_spec(cfgs['resnet18'])
+    assert nn.count_matmuls(spec) == 1 + 4 * 3 + 1  # stem + 4 SCBs + out
+
+
+def test_centered_pad_properties():
+    """Dummy-cell biasing: partial groups center on the peak and the
+    effective beta compensates exactly."""
+    from compile.kernels import ref as kref
+    for beta in [9, 27, 41, 72, 144, 392, 288]:
+        p_on, beta_eff = nn.centered_pad(beta)
+        r = beta % 32
+        if r == 0:
+            assert (p_on, beta_eff) == (0, beta)
+        else:
+            assert abs((p_on + r / 2.0) - 16.0) <= 1.0
+            assert beta_eff == beta + 2 * p_on
+        # end-to-end: padded rows + beta_eff recover the exact dot
+        wb = rand_pm((4, beta))
+        xm = rand_pm((beta, 6))
+        wbp = nn._pad_w(wb)
+        xmp, be = nn._pad_x_rows(xm)
+        assert be == beta_eff
+        out = kref.submac_matmul_ref(
+            wbp, xmp, kref.identity_cdf(), kref.identity_vals(),
+            jnp.asarray(0, jnp.uint32), 0, beta=be)
+        np.testing.assert_array_equal(np.array(out), np.array(wb.T.T @ xm))
+
+
+def test_partial_group_levels_centered():
+    """After biasing, a beta=9 matmul's levels sit inside [10, 22]."""
+    from compile.kernels import ref as kref
+    wb = rand_pm((8, 9))
+    xm = rand_pm((9, 50))
+    wbp = nn._pad_w(wb)
+    xmp, _ = nn._pad_x_rows(xm)
+    lv = np.array(kref.submac_levels_ref(wbp, xmp))
+    assert lv.min() >= 10 and lv.max() <= 22, (lv.min(), lv.max())

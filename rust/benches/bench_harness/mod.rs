@@ -1,0 +1,55 @@
+//! Shared micro-bench harness (no criterion offline; DESIGN.md §8).
+//!
+//! Warmup + N timed iterations, reports mean / p50 / p95 and a derived
+//! throughput. Wall-clock on a single core; variance on this testbed is
+//! low, so the simple estimator is adequate for before/after comparisons
+//! (EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        p50_s: samples[samples.len() / 2],
+        p95_s: samples[((samples.len() as f64 * 0.95) as usize)
+            .min(samples.len() - 1)],
+    }
+}
+
+pub fn report(r: &BenchResult, unit_per_iter: f64, unit: &str) {
+    println!(
+        "{:<44} {:>10.3} ms/iter  p50 {:>8.3} ms  p95 {:>8.3} ms  \
+         {:>12.2} {unit}/s",
+        r.name,
+        r.mean_s * 1e3,
+        r.p50_s * 1e3,
+        r.p95_s * 1e3,
+        unit_per_iter / r.mean_s,
+    );
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,77 @@
+//! Bench: F_MAC extraction throughput (Fig. 1 pipeline) — the AOT hist
+//! artifact vs the Rust native engine, plus the data generator.
+//! Requires `make artifacts`.
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, header, report};
+use capmin::bnn::{BitMatrix, SubMacEngine};
+use capmin::coordinator::histogrammer::Histogrammer;
+use capmin::coordinator::trainer::Trainer;
+use capmin::data::synth::Dataset;
+use capmin::data::{Loader, Split};
+use capmin::runtime::{artifacts_dir, lit_u32, Runtime};
+use capmin::util::rng::Rng;
+
+fn main() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping fig1_hist bench: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new().unwrap();
+    let model = "vgg3_tiny";
+    let mi = rt.manifest.model(model).clone();
+    let spec = Dataset::FashionSyn.spec();
+
+    header("data generator");
+    let r = bench("synthesize 28x28 sample", 100, 2000, || {
+        std::hint::black_box(spec.sample(Split::Train, 123));
+    });
+    report(&r, 1.0, "sample");
+
+    // fresh (untrained) weights suffice for throughput numbers
+    let init = rt.load(model, "init").unwrap();
+    let ps = init.run(&[lit_u32(&[2], &[0, 1]).unwrap()]).unwrap();
+    let trained = capmin::coordinator::trainer::Trained {
+        model: model.to_string(),
+        params_state: ps,
+        losses: vec![],
+    };
+    let folded = Trainer::new(&rt).export(&trained).unwrap();
+
+    header(format!(
+        "hist artifact ({} batch {})",
+        model, mi.hist_batch
+    )
+    .as_str());
+    let hist = Histogrammer::new(&rt);
+    let mut loader = Loader::new(
+        spec.clone(),
+        Split::Train,
+        mi.hist_batch,
+        512,
+        1,
+    );
+    let hb = mi.hist_batch;
+    let r = bench("F_MAC extraction per batch (AOT path)", 1, 10, || {
+        std::hint::black_box(
+            hist.extract(model, &folded, &mut loader, hb).unwrap(),
+        );
+    });
+    report(&r, hb as f64, "sample");
+
+    header("rust native engine histogram (same sub-MAC count)");
+    // conv1-equivalent workload: O=8, K=32, D = 28*28*hb
+    let mut rng = Rng::new(5);
+    let (o, k) = (8usize, 32usize);
+    let d = 28 * 28 * hb;
+    let w: Vec<f32> = (0..o * k).map(|_| rng.pm1(0.5)).collect();
+    let x: Vec<f32> = (0..d * k).map(|_| rng.pm1(0.5)).collect();
+    let eng = SubMacEngine::new(o, k, &w, 9);
+    let xb = BitMatrix::pack(d, k, &x, false);
+    let r = bench("conv1-shaped histogram (native)", 1, 10, || {
+        std::hint::black_box(eng.histogram(&xb));
+    });
+    report(&r, hb as f64, "sample");
+}

@@ -1,0 +1,106 @@
+//! Bench: the Fig. 8 sweep machinery — error-model construction (CapMin,
+//! CapMin-V) and eval-artifact batch latency for both engines (jnp vs
+//! Pallas interpret). The jnp/Pallas latency gap is the L1 interpret-mode
+//! overhead documented in EXPERIMENTS.md §Perf. Requires `make artifacts`.
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, header, report};
+use capmin::bnn::ErrorModel;
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::coordinator::evaluator::{stack_error_models, Evaluator};
+use capmin::coordinator::pipeline::Pipeline;
+use capmin::coordinator::trainer::Trainer;
+use capmin::data::synth::Dataset;
+use capmin::runtime::{
+    artifacts_dir, lit_f32, lit_u32, lit_u32_scalar, Runtime,
+};
+use capmin::util::rng::Rng;
+
+fn main() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping fig8_sweep bench: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new().unwrap();
+    let mut cfg = ExperimentConfig::default();
+    cfg.mc_samples = 1000;
+    cfg.run_dir = std::env::temp_dir()
+        .join("capmin_bench_runs")
+        .to_str()
+        .unwrap()
+        .into();
+    let pipe = Pipeline::new(&rt, cfg).unwrap();
+
+    // synthetic per-matmul F_MACs shaped like a trained vgg3_tiny
+    let mi = rt.manifest.model("vgg3_tiny").clone();
+    let mut fmacs = vec![];
+    for m in 0..mi.n_matmuls {
+        let mut f = capmin::capmin::Fmac::new();
+        let peak = if m == 0 { 5 } else { 16 };
+        for lvl in 0..33 {
+            let dd = lvl as f64 - peak as f64;
+            f.counts[lvl] = (1e8 * (-dd * dd / 8.0).exp()) as u64;
+        }
+        fmacs.push(f);
+    }
+
+    header("error-model construction (per k point of Fig. 8)");
+    let r = bench("CapMin hw_config (clean)", 2, 50, || {
+        std::hint::black_box(pipe.hw_config(&fmacs, 14, 0.0, 0));
+    });
+    report(&r, 1.0, "config");
+    let r = bench("CapMin hw_config (variation MC)", 2, 20, || {
+        std::hint::black_box(pipe.hw_config(&fmacs, 14, 0.02, 0));
+    });
+    report(&r, 1.0, "config");
+    let r = bench("CapMin-V hw_config (phi=2)", 2, 20, || {
+        std::hint::black_box(pipe.hw_config(&fmacs, 16, 0.02, 2));
+    });
+    report(&r, 1.0, "config");
+
+    // eval artifact latency, jnp vs pallas engine
+    let init = rt.load("vgg3_tiny", "init").unwrap();
+    let ps = init.run(&[lit_u32(&[2], &[0, 1]).unwrap()]).unwrap();
+    let trained = capmin::coordinator::trainer::Trained {
+        model: "vgg3_tiny".into(),
+        params_state: ps,
+        losses: vec![],
+    };
+    let folded = Trainer::new(&rt).export(&trained).unwrap();
+    let spec = Dataset::FashionSyn.spec();
+    let ems: Vec<ErrorModel> =
+        (0..mi.n_matmuls).map(|_| ErrorModel::identity()).collect();
+    let _ = stack_error_models(&ems);
+    let eb = mi.eval_batch;
+
+    for engine in ["eval", "evalp"] {
+        // compile outside the timed region
+        rt.load("vgg3_tiny", engine).unwrap();
+        let ev = Evaluator::new(&rt, engine);
+        let label = format!(
+            "{} batch (B={eb}) accuracy pass",
+            if engine == "eval" { "jnp engine" } else { "Pallas engine" }
+        );
+        let r = bench(&label, 1, 5, || {
+            std::hint::black_box(
+                ev.accuracy("vgg3_tiny", &folded, spec.clone(), &ems,
+                            eb, 1)
+                    .unwrap(),
+            );
+        });
+        report(&r, eb as f64, "sample");
+    }
+
+    header("runtime literal marshalling");
+    let mut rng = Rng::new(3);
+    let px: usize = mi.in_shape.iter().product();
+    let x: Vec<f32> = (0..eb * px).map(|_| rng.pm1(0.5)).collect();
+    let x_shape = [&[eb], mi.in_shape.as_slice()].concat();
+    let r = bench("batch literal creation", 10, 200, || {
+        std::hint::black_box(lit_f32(&x_shape, &x).unwrap());
+    });
+    report(&r, (eb * px) as f64, "elem");
+    let _ = lit_u32_scalar(0);
+}

@@ -1,0 +1,78 @@
+//! Bench: the analog substrate — capacitor sizing, spike-time sets, and
+//! Monte-Carlo P_map extraction (the paper's SPICE-MC replacement).
+//! Regenerates Fig. 9's data as part of the run.
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, header, report};
+use capmin::analog::capacitor::{
+    paper_fit, CapacitorModel, CapacitorSolver,
+};
+use capmin::analog::montecarlo::MonteCarlo;
+use capmin::analog::neuron::SpikeTimeSet;
+use capmin::analog::params::AnalogParams;
+use capmin::util::rng::Rng;
+
+fn main() {
+    let p = AnalogParams::paper_calibrated().with_sigma(0.02);
+    let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+
+    header("capacitor sizing (Fig. 9 substrate)");
+    let r = bench("closed-form sizing, full k-sweep (28 pts)", 10, 100,
+                  || {
+        for k in 5..=32 {
+            std::hint::black_box(
+                solver.size_for_window(17 - k.min(16) / 2, 16 + k / 2),
+            );
+        }
+    });
+    report(&r, 28.0, "sizing");
+
+    let r = bench("binary-search sizing, window [10,23]", 2, 20, || {
+        std::hint::black_box(
+            solver.solve_binary_search(&(10..=23).collect::<Vec<_>>()),
+        );
+    });
+    report(&r, 1.0, "sizing");
+
+    header("Monte-Carlo P_map (1000 samples/level, paper Sec. IV-C)");
+    let c = solver.size_for_window(10, 23);
+    let set = SpikeTimeSet::new(&p, c, (10..=23).collect());
+    let mc = MonteCarlo::new(p);
+    let mut rng = Rng::new(7);
+    let r = bench("14x14 P_map extraction", 2, 20, || {
+        std::hint::black_box(mc.pmap(&set, &mut rng));
+    });
+    report(&r, 14.0 * 1000.0, "sample");
+
+    let r = bench("full 33x33 transition map", 2, 20, || {
+        std::hint::black_box(mc.full_map(&set, &mut rng));
+    });
+    report(&r, 33.0 * 1000.0, "sample");
+
+    // Fig. 9 numbers (physics + paper-fit), so `cargo bench` regenerates
+    // the table's substance even without trained models
+    header("Fig. 9 capacitor values");
+    let c32 = solver.size_for_window(1, 32);
+    let c14 = solver.size_for_window(10, 23);
+    let c16 = solver.size_for_window(9, 24);
+    println!(
+        "physics : C(32) = {:.2} pF  C(16) = {:.2} pF  C(14) = {:.2} pF \
+         -> reduction {:.2}x, CapMin-V premium {:.2}x",
+        c32 * 1e12,
+        c16 * 1e12,
+        c14 * 1e12,
+        c32 / c14,
+        c16 / c14
+    );
+    println!(
+        "paperfit: C(32) = {:.2} pF  C(16) = {:.2} pF  C(14) = {:.2} pF \
+         -> reduction {:.2}x, CapMin-V premium {:.2}x (paper: 14.08x, 1.28x)",
+        paper_fit(32) * 1e12,
+        paper_fit(16) * 1e12,
+        paper_fit(14) * 1e12,
+        paper_fit(32) / paper_fit(14),
+        paper_fit(16) / paper_fit(14)
+    );
+}

@@ -1,0 +1,170 @@
+//! Capacitor sizing — the heart of CapMin's HW half.
+//!
+//! Two models (DESIGN.md §4, §6):
+//!
+//! * `Physics` — first-principles: the smallest C such that every
+//!   represented level's spike time lands on a distinct rising clock edge
+//!   (paper Sec. II-C). Closed form: adjacent levels M, M+1 are separated
+//!   by `C*V0*lambda/i_on * 1/(M(M+1))`, tightest at the window top, so
+//!   `C_min = t_clk * i_on * q_hi*(q_hi-1) / (V0*lambda)`; a binary-search
+//!   solver over the actual quantized feasibility check cross-validates
+//!   the closed form (property-tested).
+//!
+//! * `PaperFit` — the paper's SPICE-derived C(k) is close to exponential
+//!   in the window top (fit through its published points 135.2 pF @ k=32,
+//!   12.27 pF @ k=16, 9.6 pF @ k=14). The paper's own first-order
+//!   equations do not reproduce its 14x headline (our physics model gives
+//!   ~1.8x for the same window; see EXPERIMENTS.md §Fig9 discussion), so
+//!   both models are reported side by side.
+
+use super::neuron::SpikeTimeSet;
+use super::params::{
+    AnalogParams, PAPER_BASELINE_C, PAPER_CAPMIN_C,
+};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CapacitorModel {
+    Physics,
+    PaperFit,
+}
+
+pub struct CapacitorSolver {
+    pub params: AnalogParams,
+    pub model: CapacitorModel,
+}
+
+impl CapacitorSolver {
+    pub fn new(params: AnalogParams, model: CapacitorModel) -> Self {
+        CapacitorSolver { params, model }
+    }
+
+    /// Minimum capacitance representing the level window [q_lo, q_hi]
+    /// (q_lo >= 1) with distinct quantized spike times.
+    pub fn size_for_window(&self, q_lo: usize, q_hi: usize) -> f64 {
+        assert!(q_lo >= 1 && q_hi >= q_lo);
+        match self.model {
+            CapacitorModel::Physics => self.physics_closed_form(q_hi),
+            CapacitorModel::PaperFit => paper_fit(q_hi - q_lo + 1),
+        }
+    }
+
+    /// Closed-form physics sizing (see module docs). Only the window top
+    /// matters: lower levels have wider gaps. A hair of margin keeps the
+    /// exactly-one-clock-period gap at the tightest pair from colliding
+    /// under f64 rounding when a spike time sits on a clock edge.
+    fn physics_closed_form(&self, q_hi: usize) -> f64 {
+        const MARGIN: f64 = 1.0 + 1e-9;
+        let p = &self.params;
+        if q_hi == 1 {
+            // single level: just needs one clock period to fire
+            return MARGIN * p.t_clk() * p.i_on / (p.v0 * p.lambda());
+        }
+        let m = q_hi as f64;
+        MARGIN * p.t_clk() * p.i_on * m * (m - 1.0) / (p.v0 * p.lambda())
+    }
+
+    /// Binary-search the smallest feasible C against the real quantized
+    /// distinctness check (validates the closed form; also handles
+    /// non-contiguous level sets from CapMin-V merges).
+    pub fn solve_binary_search(&self, levels: &[usize]) -> f64 {
+        let p = &self.params;
+        let feasible = |c: f64| {
+            SpikeTimeSet::new(p, c, levels.to_vec()).distinct(p)
+        };
+        let mut hi = 1e-9; // 1 nF upper bracket
+        let mut lo = 1e-15;
+        assert!(feasible(hi), "1 nF must be feasible for a <= 32");
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if feasible(mid) {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        hi
+    }
+}
+
+/// Exponential fit through the paper's published (k, C) points:
+/// C(k) = A * exp(gamma * k); gamma from (14, 9.6 pF) and (32, 135.2 pF).
+pub fn paper_fit(k: usize) -> f64 {
+    let gamma = (PAPER_BASELINE_C / PAPER_CAPMIN_C).ln() / (32.0 - 14.0);
+    let a = PAPER_CAPMIN_C / (gamma * 14.0).exp();
+    a * (gamma * k as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solver(model: CapacitorModel) -> CapacitorSolver {
+        CapacitorSolver::new(AnalogParams::paper_calibrated(), model)
+    }
+
+    #[test]
+    fn physics_baseline_is_calibrated_to_paper() {
+        let s = solver(CapacitorModel::Physics);
+        let c = s.size_for_window(1, 32);
+        assert!((c - PAPER_BASELINE_C).abs() / PAPER_BASELINE_C < 1e-6);
+    }
+
+    #[test]
+    fn closed_form_matches_binary_search() {
+        let s = solver(CapacitorModel::Physics);
+        for (lo, hi) in [(1, 32), (10, 23), (9, 24), (14, 18), (1, 2)] {
+            let cf = s.size_for_window(lo, hi);
+            let bs = s.solve_binary_search(&(lo..=hi).collect::<Vec<_>>());
+            // the closed form guarantees distinctness for any clock
+            // phase (ideal gap >= t_clk); the search finds the smallest C
+            // whose *particular* quantization stays distinct, which can
+            // undercut the guarantee slightly — never exceed it
+            assert!(
+                bs <= cf * 1.001,
+                "search must not exceed closed form: [{lo},{hi}]"
+            );
+            // opportunistic phase alignment lets the search undercut the
+            // guarantee, but never below half (slots would collide)
+            assert!(
+                bs >= cf * 0.49,
+                "window [{lo},{hi}]: closed {cf:.3e} vs search {bs:.3e}"
+            );
+        }
+    }
+
+    #[test]
+    fn smaller_windows_need_smaller_caps() {
+        let s = solver(CapacitorModel::Physics);
+        let c32 = s.size_for_window(1, 32);
+        let c14 = s.size_for_window(10, 23);
+        assert!(c14 < c32);
+        let ratio = c32 / c14;
+        assert!(ratio > 1.5 && ratio < 3.0, "physics ratio {ratio}");
+    }
+
+    #[test]
+    fn paper_fit_reproduces_published_points() {
+        assert!((paper_fit(32) - PAPER_BASELINE_C).abs()
+            / PAPER_BASELINE_C < 1e-6);
+        assert!((paper_fit(14) - PAPER_CAPMIN_C).abs()
+            / PAPER_CAPMIN_C < 1e-6);
+        // k=16 published as 12.27 pF; the 2-point fit lands within 6%
+        let c16 = paper_fit(16);
+        assert!((c16 - 12.27e-12).abs() / 12.27e-12 < 0.06, "{c16:.3e}");
+    }
+
+    #[test]
+    fn paper_fit_headline_ratio() {
+        let ratio = paper_fit(32) / paper_fit(14);
+        assert!((ratio - 14.08).abs() < 0.1, "{ratio}");
+    }
+
+    #[test]
+    fn binary_search_handles_merged_sets() {
+        let s = solver(CapacitorModel::Physics);
+        // CapMin-V-style thinned set: some levels removed
+        let c = s.solve_binary_search(&[10, 12, 14, 17, 20, 23]);
+        let c_full = s.solve_binary_search(&(10..=23).collect::<Vec<_>>());
+        assert!(c <= c_full * 1.001, "thinned set never needs more C");
+    }
+}

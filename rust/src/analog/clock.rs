@@ -1,0 +1,61 @@
+//! Clock quantization: the FF registers a spike at the first rising edge
+//! at or after the comparator output (paper Sec. II-C, Fig. 3).
+
+use super::params::AnalogParams;
+
+/// Clock slot (1-based rising-edge index) that registers an ideal spike
+/// at time `t`. Slot 0 is reserved for "fires before the first edge can
+/// sample" and never occurs for t > 0 quantization.
+pub fn slot(p: &AnalogParams, t: f64) -> u64 {
+    if !t.is_finite() {
+        return u64::MAX; // never fires (level 0 / timeout)
+    }
+    let ticks = t / p.t_clk();
+    ticks.ceil().max(1.0) as u64
+}
+
+/// Quantized spike time: the wall-clock time of `slot(t)`'s rising edge.
+pub fn quantize(p: &AnalogParams, t: f64) -> f64 {
+    if !t.is_finite() {
+        return f64::INFINITY;
+    }
+    slot(p, t) as f64 * p.t_clk()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::params::AnalogParams;
+
+    fn p() -> AnalogParams {
+        AnalogParams::paper_calibrated()
+    }
+
+    #[test]
+    fn rounds_up_to_edges() {
+        let p = p();
+        let tc = p.t_clk();
+        assert_eq!(slot(&p, 0.2 * tc), 1);
+        assert_eq!(slot(&p, 1.0 * tc), 1);
+        assert_eq!(slot(&p, 1.0001 * tc), 2);
+        assert!((quantize(&p, 2.5 * tc) - 3.0 * tc).abs() < 1e-18);
+    }
+
+    #[test]
+    fn infinite_never_fires() {
+        let p = p();
+        assert_eq!(slot(&p, f64::INFINITY), u64::MAX);
+        assert!(quantize(&p, f64::INFINITY).is_infinite());
+    }
+
+    #[test]
+    fn quantization_is_monotone() {
+        let p = p();
+        let mut prev = 0;
+        for j in 1..1000 {
+            let s = slot(&p, j as f64 * 0.37e-9);
+            assert!(s >= prev);
+            prev = s;
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Energy / latency / area accounting for the neuron circuit (Fig. 9).
+//!
+//! Energy per MAC read-out is the capacitor charge energy E = 1/2 C Vth^2
+//! (the paper's own expression, Sec. IV-B); latency is the guaranteed
+//! response time (GRT, [3]); area is proportional to C (MIM-cap density).
+
+use super::neuron::SpikeTimeSet;
+use super::params::AnalogParams;
+
+/// MIM capacitor density [F/m^2]; ~8 fF/µm^2 for a 14nm-class MIM stack.
+/// Only ratios are reported, so the constant cancels in comparisons.
+pub const CAP_DENSITY: f64 = 8e-3;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CircuitCost {
+    /// Capacitance [F].
+    pub c: f64,
+    /// Energy per sub-MAC read-out [J].
+    pub energy: f64,
+    /// Guaranteed response time [s].
+    pub grt: f64,
+    /// Capacitor area [m^2].
+    pub area: f64,
+}
+
+pub fn cost(p: &AnalogParams, set: &SpikeTimeSet) -> CircuitCost {
+    CircuitCost {
+        c: set.c,
+        energy: 0.5 * set.c * p.vth * p.vth,
+        grt: set.grt(),
+        area: set.c / CAP_DENSITY,
+    }
+}
+
+impl CircuitCost {
+    /// Ratios vs a baseline cost (the paper reports everything as "x
+    /// smaller than the state of the art").
+    pub fn ratio_vs(&self, base: &CircuitCost) -> (f64, f64, f64) {
+        (base.c / self.c, base.energy / self.energy, base.grt / self.grt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::capacitor::{CapacitorModel, CapacitorSolver};
+
+    #[test]
+    fn energy_proportional_to_c() {
+        let p = AnalogParams::paper_calibrated();
+        let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+        let c32 = solver.size_for_window(1, 32);
+        let c14 = solver.size_for_window(10, 23);
+        let s32 = SpikeTimeSet::new(&p, c32, (1..=32).collect());
+        let s14 = SpikeTimeSet::new(&p, c14, (10..=23).collect());
+        let b = cost(&p, &s32);
+        let m = cost(&p, &s14);
+        let (rc_, re, _) = m.ratio_vs(&b);
+        assert!((rc_ - re).abs() < 1e-9, "energy ratio == cap ratio");
+        assert!(rc_ > 1.0);
+    }
+
+    #[test]
+    fn capmin_reduces_latency_strongly() {
+        // GRT gain combines smaller C and a faster slowest level
+        let p = AnalogParams::paper_calibrated();
+        let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+        let c32 = solver.size_for_window(1, 32);
+        let c14 = solver.size_for_window(10, 23);
+        let b = cost(&p, &SpikeTimeSet::new(&p, c32, (1..=32).collect()));
+        let m = cost(&p, &SpikeTimeSet::new(&p, c14, (10..=23).collect()));
+        let (_, _, rt) = m.ratio_vs(&b);
+        assert!(rt > 5.0, "latency ratio {rt}");
+    }
+}

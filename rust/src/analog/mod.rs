@@ -1,0 +1,26 @@
+//! Analog IF-SNN circuit substrate (the paper's SPICE stand-in).
+//!
+//! The paper evaluates on SPICE with a BSIM-IMG 14nm FD-SOI model-card;
+//! the *method* layer only consumes the first-order circuit behaviour the
+//! paper itself derives (Eqs. 2/3/5): an RC membrane charged by the
+//! computing array's summed current, a comparator firing at Vth, and a
+//! 2 GHz flip-flop quantizing the spike to clock edges. This module
+//! implements exactly that model plus the Monte-Carlo variation analysis
+//! used to build the paper's P_map (Eq. 6). DESIGN.md §4 and §6 record
+//! the substitution and its calibration against the paper's published
+//! capacitor numbers.
+
+pub mod capacitor;
+pub mod clock;
+pub mod cost;
+pub mod montecarlo;
+pub mod neuron;
+pub mod params;
+pub mod pmap;
+pub mod rc;
+
+pub use capacitor::{CapacitorModel, CapacitorSolver};
+pub use montecarlo::MonteCarlo;
+pub use neuron::SpikeTimeSet;
+pub use params::AnalogParams;
+pub use pmap::Pmap;

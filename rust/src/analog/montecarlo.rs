@@ -1,0 +1,230 @@
+//! Monte-Carlo variation engine — the paper's SPICE-MC stand-in
+//! (Sec. IV-C: 1000 samples per spike time, bucket decode at midpoints).
+//!
+//! Current variation is proportional to the level current (epsilon_i ~
+//! sigma_rel * I_i, paper Sec. III-B); each sample charges the capacitor,
+//! fires at Eq. (5)'s time, is clock-quantized, and decoded through the
+//! spike-time set's decision boundaries. Counting decodes yields P_map.
+
+use super::clock;
+use super::neuron::SpikeTimeSet;
+use super::params::AnalogParams;
+use super::pmap::Pmap;
+use super::rc;
+use crate::capmin::N_LEVELS;
+use crate::util::rng::Rng;
+
+pub struct MonteCarlo {
+    pub params: AnalogParams,
+    pub n_samples: usize,
+}
+
+impl MonteCarlo {
+    pub fn new(params: AnalogParams) -> MonteCarlo {
+        MonteCarlo {
+            params,
+            n_samples: 1000,
+        }
+    }
+
+    pub fn with_samples(mut self, n: usize) -> MonteCarlo {
+        self.n_samples = n;
+        self
+    }
+
+    /// One varied read-out of level `m` through `set`: sample the current,
+    /// fire, quantize, decode.
+    pub fn sample_decode(
+        &self,
+        set: &SpikeTimeSet,
+        m: usize,
+        rng: &mut Rng,
+    ) -> usize {
+        let p = &self.params;
+        if m == 0 {
+            // no conducting cell -> no current -> GRT timeout
+            return set.levels[0];
+        }
+        let i_nom = rc::level_current(p, m);
+        let i = rng
+            .normal_scaled(i_nom, p.sigma_rel * i_nom)
+            .max(1e-3 * p.i_on);
+        let t = clock::quantize(p, rc::spike_time(p, set.c, i));
+        set.decode(t)
+    }
+
+    /// k x k P_map over the represented levels (paper Eq. 6).
+    pub fn pmap(&self, set: &SpikeTimeSet, rng: &mut Rng) -> Pmap {
+        let k = set.levels.len();
+        let mut counts = vec![vec![0u64; k]; k];
+        let index_of = |lvl: usize| {
+            set.levels.iter().position(|&l| l == lvl).unwrap()
+        };
+        for (i, &m) in set.levels.iter().enumerate() {
+            let mut r = rng.split(m as u64 + 1);
+            for _ in 0..self.n_samples {
+                let d = self.sample_decode(set, m, &mut r);
+                counts[i][index_of(d)] += 1;
+            }
+        }
+        let p = counts
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|&c| c as f64 / self.n_samples as f64)
+                    .collect()
+            })
+            .collect();
+        Pmap {
+            levels: set.levels.clone(),
+            p,
+        }
+    }
+
+    /// Full 33x33 level-transition matrix: every physical level 0..=32 is
+    /// read out through `set` (clipping of out-of-window levels and
+    /// variation effects in one matrix — the runtime input of the eval
+    /// artifacts).
+    pub fn full_map(&self, set: &SpikeTimeSet, rng: &mut Rng)
+        -> Vec<Vec<f64>> {
+        let mut full = vec![vec![0.0; N_LEVELS]; N_LEVELS];
+        for (m, row) in full.iter_mut().enumerate() {
+            let mut r = rng.split(1000 + m as u64);
+            for _ in 0..self.n_samples {
+                let d = self.sample_decode(set, m, &mut r);
+                row[d] += 1.0 / self.n_samples as f64;
+            }
+        }
+        full
+    }
+
+    /// Deterministic (sigma = 0) full map: pure CapMin clipping.
+    pub fn clean_map(&self, set: &SpikeTimeSet) -> Vec<Vec<f64>> {
+        let p = &self.params;
+        let mut full = vec![vec![0.0; N_LEVELS]; N_LEVELS];
+        for (m, row) in full.iter_mut().enumerate() {
+            let t = clock::quantize(p, rc::level_spike_time(p, set.c, m));
+            row[set.decode(t)] = 1.0;
+        }
+        full
+    }
+
+    /// Variation interval E_i = [t(I+eps), t(I-eps)] with eps = 3 sigma
+    /// (Fig. 6 regeneration + the r_i = |B_i|/|E_i| analysis).
+    pub fn variation_interval(&self, set: &SpikeTimeSet, m: usize)
+        -> (f64, f64) {
+        let p = &self.params;
+        let i_nom = rc::level_current(p, m);
+        let eps = 3.0 * p.sigma_rel * i_nom;
+        (
+            rc::spike_time(p, set.c, i_nom + eps),
+            rc::spike_time(p, set.c, i_nom - eps),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(sigma: f64, window: (usize, usize)) -> (MonteCarlo, SpikeTimeSet) {
+        let p = AnalogParams::paper_calibrated().with_sigma(sigma);
+        let solver = crate::analog::capacitor::CapacitorSolver::new(
+            p,
+            crate::analog::capacitor::CapacitorModel::Physics,
+        );
+        let c = solver.size_for_window(window.0, window.1);
+        let set = SpikeTimeSet::new(&p, c, (window.0..=window.1).collect());
+        (MonteCarlo::new(p), set)
+    }
+
+    #[test]
+    fn zero_variation_gives_identity_block() {
+        let (mc, set) = setup(0.0, (10, 23));
+        let mut rng = Rng::new(1);
+        let pm = mc.pmap(&set, &mut rng);
+        for (i, row) in pm.p.iter().enumerate() {
+            assert!((row[i] - 1.0).abs() < 1e-12, "row {i}: {row:?}");
+        }
+    }
+
+    #[test]
+    fn pmap_rows_are_stochastic() {
+        let (mc, set) = setup(0.03, (10, 23));
+        let mut rng = Rng::new(2);
+        let pm = mc.pmap(&set, &mut rng);
+        for s in pm.row_sums() {
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn higher_levels_less_tolerant() {
+        // the paper's hypothesis: slower spike times (lower levels) have
+        // larger diagonal probability
+        let (mc, set) = setup(0.04, (1, 32));
+        let mut rng = Rng::new(3);
+        let pm = mc.pmap(&set, &mut rng);
+        let d = pm.diag();
+        let low_avg: f64 = d[..5].iter().sum::<f64>() / 5.0;
+        let high_avg: f64 = d[d.len() - 5..].iter().sum::<f64>() / 5.0;
+        assert!(
+            low_avg > high_avg + 0.05,
+            "low {low_avg} vs high {high_avg}"
+        );
+    }
+
+    #[test]
+    fn clean_map_equals_eq4_clipping() {
+        let (mc, set) = setup(0.0, (10, 23));
+        let full = mc.clean_map(&set);
+        for m in 0..=32usize {
+            let want = m.clamp(10, 23);
+            assert_eq!(full[m][want], 1.0, "level {m}");
+        }
+    }
+
+    #[test]
+    fn full_map_statistics_match_pmap_block() {
+        let (mc, set) = setup(0.03, (12, 20));
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(8);
+        let pm = mc.pmap(&set, &mut r1);
+        let full = mc.full_map(&set, &mut r2);
+        for (i, &mi) in set.levels.iter().enumerate() {
+            for (j, &mj) in set.levels.iter().enumerate() {
+                assert!(
+                    (pm.p[i][j] - full[mi][mj]).abs() < 0.06,
+                    "({mi},{mj}): {} vs {}",
+                    pm.p[i][j],
+                    full[mi][mj]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn variation_interval_brackets_nominal() {
+        let (mc, set) = setup(0.02, (10, 23));
+        for m in 10..=23 {
+            let t_nom = rc::level_spike_time(&mc.params, set.c, m);
+            let (lo, hi) = mc.variation_interval(&set, m);
+            assert!(lo < t_nom && t_nom < hi);
+        }
+    }
+
+    #[test]
+    fn ratio_r_grows_for_slower_spikes() {
+        // r_i = |B_i| / |E_i| grows with i (slower spike times) —
+        // the monotonicity CapMin-V's hypothesis rests on
+        let (mc, set) = setup(0.02, (1, 32));
+        let k = set.levels.len();
+        let r_at = |idx: usize| {
+            let (lo, hi) = mc.variation_interval(&set, set.levels[idx]);
+            set.bucket_len(idx) / (hi - lo)
+        };
+        let r_slow = r_at(2); // low level = slow spike
+        let r_fast = r_at(k - 3);
+        assert!(r_slow > r_fast, "r_slow {r_slow} r_fast {r_fast}");
+    }
+}

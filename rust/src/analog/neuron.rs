@@ -1,0 +1,169 @@
+//! Spike-time sets: S_FIRE and its mapping to MAC levels (paper Sec. II-B).
+//!
+//! A `SpikeTimeSet` is the hardware read-out configuration: for each
+//! represented sub-MAC level (a contiguous window [q_lo, q_hi] selected by
+//! CapMin, possibly thinned by CapMin-V merges) the ideal and quantized
+//! spike times at a given capacitance. Decision boundaries for read-out
+//! sit midway between adjacent spike times (paper Sec. IV-C); everything
+//! slower than the last boundary is decoded as the slowest represented
+//! level at the guaranteed response time (GRT).
+
+use super::clock;
+use super::params::AnalogParams;
+use super::rc;
+
+#[derive(Clone, Debug)]
+pub struct SpikeTimeSet {
+    /// Capacitance this set was realized with [F].
+    pub c: f64,
+    /// Represented levels, ascending (e.g. [10, 11, ..., 23]); level 0 is
+    /// never in the set (no current -> no spike).
+    pub levels: Vec<usize>,
+    /// Quantized spike time per represented level [s] (descending: higher
+    /// level = larger current = earlier spike).
+    pub times: Vec<f64>,
+    /// Clock slot (rising-edge index) per represented level.
+    pub slots: Vec<u64>,
+    /// Decision boundaries between adjacent represented levels, in time
+    /// order: boundary[j] separates levels[j+1]'s bucket (faster) from
+    /// levels[j]'s ... see `decode`.
+    pub boundaries: Vec<f64>,
+}
+
+impl SpikeTimeSet {
+    /// Build the set for a contiguous window of levels at capacitance c.
+    pub fn new(p: &AnalogParams, c: f64, levels: Vec<usize>) -> SpikeTimeSet {
+        assert!(!levels.is_empty());
+        assert!(levels[0] >= 1, "level 0 has no spike time");
+        let ideal: Vec<f64> = levels
+            .iter()
+            .map(|&m| rc::level_spike_time(p, c, m))
+            .collect();
+        let slots: Vec<u64> =
+            ideal.iter().map(|&t| clock::slot(p, t)).collect();
+        let times: Vec<f64> =
+            ideal.iter().map(|&t| clock::quantize(p, t)).collect();
+        // boundaries between adjacent levels (ascending level = descending
+        // time): midpoint rule from the paper.
+        let mut boundaries = vec![];
+        for j in 0..levels.len() - 1 {
+            boundaries.push(0.5 * (times[j] + times[j + 1]));
+        }
+        SpikeTimeSet {
+            c,
+            levels,
+            times,
+            slots,
+            boundaries,
+        }
+    }
+
+    /// All spike times distinct after clock quantization (the sizing
+    /// feasibility criterion, paper Sec. II-C)? Uses the slots computed
+    /// from the *ideal* times at construction — re-quantizing the
+    /// already-quantized times would hit f64 edge rounding.
+    pub fn distinct(&self, _p: &AnalogParams) -> bool {
+        let mut slots = self.slots.clone();
+        let n = slots.len();
+        slots.dedup();
+        slots.len() == n && self.times.iter().all(|t| t.is_finite())
+    }
+
+    /// Decode an observed firing time into a represented level.
+    /// Faster than the fastest boundary -> highest level; slower than the
+    /// slowest boundary (or no spike) -> lowest level (GRT timeout).
+    pub fn decode(&self, t: f64) -> usize {
+        // times are descending with ascending level index
+        let n = self.levels.len();
+        if n == 1 {
+            return self.levels[0];
+        }
+        // walk from fastest (last index) to slowest
+        for j in (0..n - 1).rev() {
+            // bucket of levels[j+1]: t <= boundaries[j]
+            if t <= self.boundaries[j] {
+                return self.levels[j + 1];
+            }
+        }
+        self.levels[0]
+    }
+
+    /// Guaranteed response time: the instant the read-out can finalize —
+    /// one boundary interval past the slowest spike time (anything later
+    /// decodes to the lowest level anyway).
+    pub fn grt(&self) -> f64 {
+        let n = self.levels.len();
+        if n == 1 {
+            return self.times[0];
+        }
+        // slowest spike time + half the gap to its faster neighbour,
+        // mirrored on the slow side (symmetric bucket).
+        let slowest = self.times[0];
+        let gap = self.times[0] - self.times[1];
+        slowest + 0.5 * gap
+    }
+
+    /// Length |B_i| of level i's decision interval (paper Sec. III-B);
+    /// outermost buckets are half-open, reported as f64::INFINITY.
+    pub fn bucket_len(&self, idx: usize) -> f64 {
+        let n = self.levels.len();
+        if n == 1 || idx == 0 || idx == n - 1 {
+            return f64::INFINITY;
+        }
+        self.boundaries[idx - 1] - self.boundaries[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> AnalogParams {
+        AnalogParams::paper_calibrated()
+    }
+
+    #[test]
+    fn times_descend_with_level() {
+        let p = p();
+        let s = SpikeTimeSet::new(&p, 50e-12, (10..=23).collect());
+        for j in 0..s.times.len() - 1 {
+            assert!(s.times[j] > s.times[j + 1]);
+        }
+    }
+
+    #[test]
+    fn decode_recovers_exact_times() {
+        let p = p();
+        let s = SpikeTimeSet::new(&p, 135.2e-12, (1..=32).collect());
+        assert!(s.distinct(&p), "paper baseline must be feasible");
+        for (j, &m) in s.levels.iter().enumerate() {
+            assert_eq!(s.decode(s.times[j]), m, "level {m}");
+        }
+    }
+
+    #[test]
+    fn decode_clips_at_extremes() {
+        let p = p();
+        let s = SpikeTimeSet::new(&p, 50e-12, (10..=23).collect());
+        assert_eq!(s.decode(0.0), 23, "too fast -> highest level");
+        assert_eq!(s.decode(1.0), 10, "too slow -> lowest level");
+        assert_eq!(s.decode(f64::INFINITY), 10, "no spike -> lowest");
+    }
+
+    #[test]
+    fn grt_past_slowest_spike() {
+        let p = p();
+        let s = SpikeTimeSet::new(&p, 50e-12, (10..=23).collect());
+        assert!(s.grt() > s.times[0]);
+    }
+
+    #[test]
+    fn interior_buckets_grow_with_time() {
+        // |B_i| grows for slower spike times (paper Sec. III-B analysis)
+        let p = p();
+        let s = SpikeTimeSet::new(&p, 135.2e-12, (1..=32).collect());
+        let b_slow = s.bucket_len(1); // level 2 (slow side)
+        let b_fast = s.bucket_len(s.levels.len() - 2); // level 31
+        assert!(b_slow > b_fast);
+    }
+}

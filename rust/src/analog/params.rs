@@ -1,0 +1,92 @@
+//! Electrical constants of the IF-SNN circuit (paper Sec. II-C / IV-A2).
+//!
+//! `i_on` is the calibration knob: the paper does not publish the cell
+//! on-current, but it does publish the baseline capacitor (135.2 pF for
+//! k = 32 spike times at a 2 GHz read-out clock, Vth = 0.225 V). We pick
+//! `i_on` so that the first-principles sizing rule (all 32 spike times
+//! land on distinct clock edges, see `capacitor.rs`) reproduces that
+//! baseline exactly; every other capacitor value is then a *prediction*
+//! of the model, compared against the paper in EXPERIMENTS.md.
+
+/// Parameters of the neuron circuit + computing array.
+#[derive(Clone, Copy, Debug)]
+pub struct AnalogParams {
+    /// Supply voltage V0 [V].
+    pub v0: f64,
+    /// Comparator threshold Vth [V] (paper: 0.225 V).
+    pub vth: f64,
+    /// Read-out clock frequency [Hz] (paper: 2 GHz Verilog-A FF).
+    pub f_clk: f64,
+    /// Single-cell on-state current I_ON [A]; current for sub-MAC level M
+    /// is M * i_on (Kirchhoff sum on the match line).
+    pub i_on: f64,
+    /// Computing array size a (paper: 32).
+    pub array_size: usize,
+    /// Relative current variation sigma (epsilon_i proportional to I_i,
+    /// paper Sec. III-B); calibratable per technology.
+    pub sigma_rel: f64,
+}
+
+/// The paper's published k=32 baseline capacitor [F].
+pub const PAPER_BASELINE_C: f64 = 135.2e-12;
+/// The paper's CapMin capacitor at k=14 [F] (Fig. 9).
+pub const PAPER_CAPMIN_C: f64 = 9.6e-12;
+/// The paper's k=16 capacitor [F] (CapMin-V starting point, Sec. IV-C).
+pub const PAPER_K16_C: f64 = 12.27e-12;
+
+impl AnalogParams {
+    /// -ln(1 - Vth/V0): the charging-curve factor in Eq. (5).
+    pub fn lambda(&self) -> f64 {
+        -(1.0 - self.vth / self.v0).ln()
+    }
+
+    /// Clock period [s].
+    pub fn t_clk(&self) -> f64 {
+        1.0 / self.f_clk
+    }
+
+    /// Calibrated to the paper's testbed: V0 = 0.8 V (14nm FD-SOI core
+    /// rail), Vth = 0.225 V, 2 GHz clock, a = 32, and i_on solved so the
+    /// k = 32 baseline sizes to exactly 135.2 pF (see module docs).
+    pub fn paper_calibrated() -> AnalogParams {
+        let mut p = AnalogParams {
+            v0: 0.8,
+            vth: 0.225,
+            f_clk: 2e9,
+            i_on: 0.0,
+            array_size: 32,
+            sigma_rel: 0.02,
+        };
+        // C_base = t_clk * i_on * M(M+1) / (V0 * lambda) at the tightest
+        // adjacent pair M = a-1 (see capacitor.rs closed form); invert.
+        let a = p.array_size as f64;
+        p.i_on = PAPER_BASELINE_C * p.v0 * p.lambda()
+            / (p.t_clk() * a * (a - 1.0));
+        p
+    }
+
+    /// Same testbed with a different variation strength.
+    pub fn with_sigma(mut self, sigma_rel: f64) -> AnalogParams {
+        self.sigma_rel = sigma_rel;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_matches_hand_computation() {
+        let p = AnalogParams::paper_calibrated();
+        // -ln(1 - 0.225/0.8) = -ln(0.71875)
+        assert!((p.lambda() - 0.330_241_f64).abs() < 1e-5);
+    }
+
+    #[test]
+    fn calibration_solves_positive_current() {
+        let p = AnalogParams::paper_calibrated();
+        // ~70 µA match-line drive; sanity band, not an exact target.
+        assert!(p.i_on > 1e-6 && p.i_on < 1e-3, "i_on = {}", p.i_on);
+    }
+}

@@ -1,0 +1,211 @@
+//! P_map — the spike-time transition-probability matrix (paper Eq. 6).
+//!
+//! Rows index the *true* spike time (level), columns the spike time
+//! actually selected under current variation. CapMin-V (Alg. 1) edits
+//! this matrix by merging columns/rows; the evaluator expands any P_map
+//! into the full 33x33 level-transition matrix that the AOT kernels take
+//! as a runtime input (row-CDF form).
+
+use crate::capmin::N_LEVELS;
+
+#[derive(Clone, Debug)]
+pub struct Pmap {
+    /// Represented levels, ascending (row/col labels).
+    pub levels: Vec<usize>,
+    /// Row-stochastic transition matrix, p[i][j] = P(level_i read as
+    /// level_j).
+    pub p: Vec<Vec<f64>>,
+}
+
+impl Pmap {
+    pub fn identity(levels: Vec<usize>) -> Pmap {
+        let k = levels.len();
+        let mut p = vec![vec![0.0; k]; k];
+        for (i, row) in p.iter_mut().enumerate() {
+            row[i] = 1.0;
+        }
+        Pmap { levels, p }
+    }
+
+    pub fn k(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.k()).map(|i| self.p[i][i]).collect()
+    }
+
+    /// Index of the smallest diagonal element (Alg. 1 line 4).
+    pub fn argmin_diag(&self) -> usize {
+        let d = self.diag();
+        let mut best = 0;
+        for (i, &v) in d.iter().enumerate() {
+            if v < d[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Merge column `j` into column `dst` (dst = j-1 or j+1), then remove
+    /// row and column `j` (Alg. 1 lines 6-13). The merged bucket is the
+    /// union of the two old decision intervals, so adding columns is
+    /// exact, not an approximation.
+    pub fn merge_into(&mut self, j: usize, dst: usize) {
+        assert!(dst == j.wrapping_sub(1) || dst == j + 1);
+        let k = self.k();
+        assert!(j < k && dst < k);
+        for row in self.p.iter_mut() {
+            row[dst] += row[j];
+            row.remove(j);
+        }
+        self.p.remove(j);
+        self.levels.remove(j);
+    }
+
+    /// Row sums (must stay 1 under merges; checked by tests).
+    pub fn row_sums(&self) -> Vec<f64> {
+        self.p.iter().map(|r| r.iter().sum()).collect()
+    }
+
+    /// Expand to the full 33x33 level-transition matrix: rows for all
+    /// levels 0..=32; unrepresented rows take the transition profile of
+    /// the row computed for them by the caller (see montecarlo::full_map)
+    /// — this type only handles the represented block plus deterministic
+    /// clipping padding (Alg. 1 line 15: "add padding ... and 1s to
+    /// realize the clipping from CapMin").
+    pub fn pad_to_full(&self) -> Vec<Vec<f64>> {
+        let mut full = vec![vec![0.0; N_LEVELS]; N_LEVELS];
+        let lo = self.levels[0];
+        let hi = *self.levels.last().unwrap();
+        for m in 0..N_LEVELS {
+            if m < lo {
+                full[m][lo] = 1.0; // clip low (incl. level 0: no spike)
+            } else if m > hi {
+                full[m][hi] = 1.0; // clip high
+            }
+        }
+        for (i, &mi) in self.levels.iter().enumerate() {
+            for (j, &mj) in self.levels.iter().enumerate() {
+                full[mi][mj] = self.p[i][j];
+            }
+        }
+        // unrepresented interior levels (CapMin-V removed their spike
+        // time): decode to the nearest represented level
+        for m in lo..=hi {
+            if !self.levels.contains(&m) {
+                let nearest = self
+                    .levels
+                    .iter()
+                    .min_by_key(|&&l| {
+                        (l as i64 - m as i64).unsigned_abs()
+                    })
+                    .copied()
+                    .unwrap();
+                full[m] = vec![0.0; N_LEVELS];
+                full[m][nearest] = 1.0;
+            }
+        }
+        full
+    }
+}
+
+/// Row-CDF (f32, 33x33 flattened row-major) + decoded level values, the
+/// exact runtime-input format of the AOT eval artifacts.
+pub fn to_cdf_inputs(full: &[Vec<f64>]) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(full.len(), N_LEVELS);
+    let mut cdf = Vec::with_capacity(N_LEVELS * N_LEVELS);
+    for row in full {
+        assert_eq!(row.len(), N_LEVELS);
+        let mut acc = 0.0f64;
+        for (j, &v) in row.iter().enumerate() {
+            acc += v;
+            // clamp + pin the last column to exactly 1.0 so the kernel's
+            // CDF inversion can never walk off the row
+            let c = if j == N_LEVELS - 1 { 1.0 } else { acc.min(1.0) };
+            cdf.push(c as f32);
+        }
+    }
+    let vals: Vec<f32> = (0..N_LEVELS).map(|m| m as f32).collect();
+    (cdf, vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Pmap {
+        let levels: Vec<usize> = (10..=13).collect();
+        let p = vec![
+            vec![0.9, 0.1, 0.0, 0.0],
+            vec![0.1, 0.8, 0.1, 0.0],
+            vec![0.0, 0.2, 0.6, 0.2],
+            vec![0.0, 0.0, 0.1, 0.9],
+        ];
+        Pmap { levels, p }
+    }
+
+    #[test]
+    fn merge_preserves_row_stochasticity() {
+        let mut pm = sample();
+        pm.merge_into(2, 3);
+        assert_eq!(pm.k(), 3);
+        for s in pm.row_sums() {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        assert_eq!(pm.levels, vec![10, 11, 13]);
+    }
+
+    #[test]
+    fn merge_raises_destination_diag() {
+        let pm = sample();
+        let before = pm.p[3][3];
+        let mut pm2 = pm.clone();
+        pm2.merge_into(2, 3);
+        // new diag of (old) level 13 row: p[13][13] + p[13][12]
+        let after = pm2.p[2][2];
+        assert!(after >= before);
+        assert!((after - (0.9 + 0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pad_to_full_clips_like_eq4() {
+        let pm = sample();
+        let full = pm.pad_to_full();
+        assert_eq!(full[0][10], 1.0, "level 0 -> q_lo");
+        assert_eq!(full[5][10], 1.0, "below window -> q_lo");
+        assert_eq!(full[32][13], 1.0, "above window -> q_hi");
+        assert_eq!(full[11][11], 0.8, "represented block preserved");
+    }
+
+    #[test]
+    fn pad_handles_removed_interior_level() {
+        let mut pm = sample();
+        pm.merge_into(1, 0); // remove level 11
+        let full = pm.pad_to_full();
+        // level 11 physically still occurs; decodes to nearest (10)
+        assert_eq!(full[11][10], 1.0);
+    }
+
+    #[test]
+    fn cdf_rows_end_at_one() {
+        let pm = sample();
+        let (cdf, vals) = to_cdf_inputs(&pm.pad_to_full());
+        assert_eq!(cdf.len(), 33 * 33);
+        for m in 0..33 {
+            assert_eq!(cdf[m * 33 + 32], 1.0);
+            // monotone
+            for j in 1..33 {
+                assert!(cdf[m * 33 + j] >= cdf[m * 33 + j - 1]);
+            }
+        }
+        assert_eq!(vals[32], 32.0);
+    }
+
+    #[test]
+    fn identity_pmap_is_identity() {
+        let pm = Pmap::identity((5..=8).collect());
+        assert_eq!(pm.argmin_diag(), 0);
+        assert!(pm.diag().iter().all(|&d| d == 1.0));
+    }
+}

@@ -1,0 +1,107 @@
+//! RC membrane charging — the paper's Eqs. (2), (3), (5).
+
+use super::params::AnalogParams;
+
+/// Voltage across the membrane capacitor at time `t` under constant
+/// initial current `i_init` (paper Eq. 3):
+/// `V(t) = V0 * (1 - exp(-t * i_init / (C * V0)))`.
+pub fn v_of_t(p: &AnalogParams, c: f64, i_init: f64, t: f64) -> f64 {
+    p.v0 * (1.0 - (-t * i_init / (c * p.v0)).exp())
+}
+
+/// Ideal (unquantized) spike time for initial current `i` (paper Eq. 5):
+/// `t(I) = -(C*V0/I) * ln(1 - Vth/V0) = C*V0*lambda / I`.
+/// Returns +inf for non-positive current (level 0 never fires).
+pub fn spike_time(p: &AnalogParams, c: f64, i: f64) -> f64 {
+    if i <= 0.0 {
+        return f64::INFINITY;
+    }
+    c * p.v0 * p.lambda() / i
+}
+
+/// Current for sub-MAC level `m` (Kirchhoff sum of m conducting cells).
+pub fn level_current(p: &AnalogParams, m: usize) -> f64 {
+    m as f64 * p.i_on
+}
+
+/// Ideal spike time of sub-MAC level `m` with capacitance `c`.
+pub fn level_spike_time(p: &AnalogParams, c: f64, m: usize) -> f64 {
+    spike_time(p, c, level_current(p, m))
+}
+
+/// Sample of the V(t) curve for plotting (Fig. 3 regeneration).
+pub fn charging_curve(
+    p: &AnalogParams,
+    c: f64,
+    i_init: f64,
+    t_end: f64,
+    n: usize,
+) -> Vec<(f64, f64)> {
+    (0..n)
+        .map(|j| {
+            let t = t_end * j as f64 / (n - 1) as f64;
+            (t, v_of_t(p, c, i_init, t))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> AnalogParams {
+        AnalogParams::paper_calibrated()
+    }
+
+    #[test]
+    fn charging_is_monotone_and_saturates() {
+        let p = p();
+        let c = 10e-12;
+        let i = 1e-5;
+        let mut prev = -1.0;
+        for j in 1..100 {
+            let v = v_of_t(&p, c, i, j as f64 * 1e-9);
+            assert!(v > prev);
+            prev = v;
+        }
+        let v_late = v_of_t(&p, c, i, 1.0);
+        assert!((v_late - p.v0).abs() < 1e-9, "saturates at V0");
+    }
+
+    #[test]
+    fn spike_time_crosses_vth_exactly() {
+        let p = p();
+        let c = 20e-12;
+        for m in 1..=32 {
+            let i = level_current(&p, m);
+            let t = spike_time(&p, c, i);
+            let v = v_of_t(&p, c, i, t);
+            assert!((v - p.vth).abs() < 1e-12, "m={m} v={v}");
+        }
+    }
+
+    #[test]
+    fn spike_time_reciprocal_in_current() {
+        let p = p();
+        let c = 5e-12;
+        let t1 = level_spike_time(&p, c, 1);
+        let t2 = level_spike_time(&p, c, 2);
+        let t32 = level_spike_time(&p, c, 32);
+        assert!((t1 / t2 - 2.0).abs() < 1e-12);
+        assert!((t1 / t32 - 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn level_zero_never_fires() {
+        let p = p();
+        assert!(level_spike_time(&p, 10e-12, 0).is_infinite());
+    }
+
+    #[test]
+    fn faster_charging_with_larger_current_smaller_cap() {
+        let p = p();
+        let base = spike_time(&p, 10e-12, 1e-5);
+        assert!(spike_time(&p, 10e-12, 2e-5) < base);
+        assert!(spike_time(&p, 5e-12, 1e-5) < base);
+    }
+}

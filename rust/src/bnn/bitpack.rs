@@ -1,0 +1,138 @@
+//! Bit-packed +-1 matrices: one u32 word per a=32 sub-MAC group.
+//!
+//! Bit = 1 encodes +1. The XNOR-popcount level of a group is then
+//! `popcount(!(w ^ x))` — but padding must contribute 0, so pad bits are
+//! set to w=1, x=0, and the level is computed as
+//! `popcount(!(w ^ x) & mask)` with `mask` covering... no mask needed:
+//! w_pad=1 ^ x_pad=0 = 1, negated = 0, so pads vanish for free — exactly
+//! the (w=+1, x=-1) non-conducting convention of the kernels.
+
+/// Row-major bit-packed matrix: `rows x cols` logical +-1 entries,
+/// `words_per_row = ceil(cols/32)` u32 words per row.
+#[derive(Clone, Debug)]
+pub struct BitMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub words_per_row: usize,
+    pub data: Vec<u32>,
+    /// Fill value for pad bits (true = +1). Weights pad with +1,
+    /// activations with -1 (bit 0), per the non-conducting convention.
+    pub pad_one: bool,
+}
+
+impl BitMatrix {
+    /// Pack a +-1 f32 matrix (row-major `rows x cols`).
+    pub fn pack(rows: usize, cols: usize, vals: &[f32], pad_one: bool)
+        -> BitMatrix {
+        assert_eq!(vals.len(), rows * cols);
+        let wpr = cols.div_ceil(32);
+        let mut data = vec![0u32; rows * wpr];
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = vals[r * cols + c];
+                debug_assert!(v == 1.0 || v == -1.0, "not binary: {v}");
+                if v > 0.0 {
+                    data[r * wpr + c / 32] |= 1 << (c % 32);
+                }
+            }
+            if pad_one {
+                // set pad bits of the last word to 1 (+1)
+                let used = cols % 32;
+                if used != 0 {
+                    let pad_mask = !0u32 << used;
+                    data[r * wpr + wpr - 1] |= pad_mask;
+                }
+            }
+        }
+        BitMatrix {
+            rows,
+            cols,
+            words_per_row: wpr,
+            data,
+            pad_one,
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u32] {
+        &self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// Logical +-1 value at (r, c).
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        let w = self.data[r * self.words_per_row + c / 32];
+        if (w >> (c % 32)) & 1 == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+/// XNOR-popcount level of one 32-cell group: `popcount(!(w ^ x))`.
+/// With w padded to 1 and x padded to 0, pad cells contribute 0 —
+/// the level equals the count over valid cells only.
+#[inline]
+pub fn group_level(w: u32, x: u32) -> u32 {
+    (!(w ^ x)).count_ones()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_roundtrip() {
+        let vals: Vec<f32> = (0..2 * 40)
+            .map(|i| if i % 3 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let m = BitMatrix::pack(2, 40, &vals, true);
+        for r in 0..2 {
+            for c in 0..40 {
+                assert_eq!(m.get(r, c), vals[r * 40 + c], "({r},{c})");
+            }
+        }
+        assert_eq!(m.words_per_row, 2);
+    }
+
+    #[test]
+    fn group_level_counts_matches() {
+        // w = x -> all 32 match
+        assert_eq!(group_level(0xDEAD_BEEF, 0xDEAD_BEEF), 32);
+        // complement -> none match
+        assert_eq!(group_level(0xDEAD_BEEF, !0xDEAD_BEEF), 0);
+        // single-bit difference
+        assert_eq!(group_level(0, 1), 31);
+    }
+
+    #[test]
+    fn pad_cells_are_nonconducting() {
+        // 5 valid cells, all matching (+1/+1): level must be 5
+        let w = BitMatrix::pack(1, 5, &[1.0; 5], true);
+        let x = BitMatrix::pack(1, 5, &[1.0; 5], false);
+        assert_eq!(group_level(w.row(0)[0], x.row(0)[0]), 5);
+        // 5 valid cells, all mismatching: level 0
+        let x2 = BitMatrix::pack(1, 5, &[-1.0; 5], false);
+        assert_eq!(group_level(w.row(0)[0], x2.row(0)[0]), 0);
+    }
+
+    #[test]
+    fn exact_dot_recovered_from_levels() {
+        // dot = 2 * sum(levels) - beta over groups
+        let cols = 70;
+        let wv: Vec<f32> = (0..cols)
+            .map(|i| if (i * 7) % 5 < 2 { 1.0 } else { -1.0 })
+            .collect();
+        let xv: Vec<f32> = (0..cols)
+            .map(|i| if (i * 3) % 4 < 2 { 1.0 } else { -1.0 })
+            .collect();
+        let w = BitMatrix::pack(1, cols, &wv, true);
+        let x = BitMatrix::pack(1, cols, &xv, false);
+        let mut level_sum = 0i64;
+        for g in 0..w.words_per_row {
+            level_sum += group_level(w.row(0)[g], x.row(0)[g]) as i64;
+        }
+        let dot: f32 = wv.iter().zip(&xv).map(|(a, b)| a * b).sum();
+        assert_eq!(2 * level_sum - cols as i64, dot as i64);
+    }
+}

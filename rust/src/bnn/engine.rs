@@ -1,0 +1,372 @@
+//! Bit-packed sub-MAC matmul engine — the Rust twin of the L1 kernel.
+//!
+//! Semantics (identical to `python/compile/kernels/ref.py`):
+//!   out[o][d] = 2 * sum_g decode(level_g(o, d), u(o, g, d)) - beta
+//! where `decode` inverts the 33x33 row-CDF of the error model with the
+//! shared counter-based PRNG. With the identity model this is the exact
+//! +-1 dot product. The engine exists to (a) cross-check the AOT
+//! artifacts bit-for-bit, (b) serve as the host-engine baseline the
+//! paper replaces, and (c) run large sweeps at native speed.
+
+use super::bitpack::{group_level, BitMatrix};
+use super::hashrng::hash01;
+use crate::capmin::N_LEVELS;
+
+/// 33x33 row-CDF + decoded column values (the AOT artifacts' runtime
+/// error-model inputs, host-side).
+#[derive(Clone, Debug)]
+pub struct ErrorModel {
+    pub cdf: Vec<f32>,  // row-major 33*33
+    pub vals: Vec<f32>, // 33
+}
+
+impl ErrorModel {
+    pub fn identity() -> ErrorModel {
+        let mut cdf = vec![0.0f32; N_LEVELS * N_LEVELS];
+        for m in 0..N_LEVELS {
+            for j in m..N_LEVELS {
+                cdf[m * N_LEVELS + j] = 1.0;
+            }
+        }
+        ErrorModel {
+            cdf,
+            vals: (0..N_LEVELS).map(|v| v as f32).collect(),
+        }
+    }
+
+    pub fn from_full(full: &[Vec<f64>]) -> ErrorModel {
+        let (cdf, vals) = crate::analog::pmap::to_cdf_inputs(full);
+        ErrorModel { cdf, vals }
+    }
+
+    /// Decode a true level under sample u — right-continuous CDF
+    /// inversion, identical to the kernels (`<=`, not `<`).
+    ///
+    /// Perf (EXPERIMENTS.md §Perf L3): the CDF row is sorted, so
+    /// `partition_point` (binary search, <=6 comparisons) replaces the
+    /// original 33-comparison linear scan kept below as
+    /// `decode_linear` for the before/after benchmark.
+    #[inline]
+    pub fn decode(&self, level: usize, u: f32) -> f32 {
+        let row = &self.cdf[level * N_LEVELS..(level + 1) * N_LEVELS];
+        let col = row.partition_point(|&c| c <= u);
+        self.vals[col.min(N_LEVELS - 1)]
+    }
+
+    /// The pre-optimization linear-scan decode (benchmark baseline).
+    #[inline]
+    pub fn decode_linear(&self, level: usize, u: f32) -> f32 {
+        let row = &self.cdf[level * N_LEVELS..(level + 1) * N_LEVELS];
+        let mut col = 0usize;
+        for &c in row {
+            if c <= u {
+                col += 1;
+            }
+        }
+        self.vals[col.min(N_LEVELS - 1)]
+    }
+}
+
+/// The engine: W is packed once (weights are stationary), X per call.
+pub struct SubMacEngine {
+    pub w: BitMatrix,
+    /// true (pre-padding) reduction length the accumulator subtracts
+    pub beta: usize,
+}
+
+impl SubMacEngine {
+    /// `w_vals`: row-major [o x k_padded] +-1 weights (k_padded % 32 == 0,
+    /// pads +1 — i.e. the AOT export's `wb` tensors verbatim).
+    pub fn new(o: usize, k_padded: usize, w_vals: &[f32], beta: usize)
+        -> SubMacEngine {
+        assert_eq!(k_padded % 32, 0);
+        SubMacEngine {
+            w: BitMatrix::pack(o, k_padded, w_vals, true),
+            beta,
+        }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.w.words_per_row
+    }
+
+    /// Exact +-1 matmul (identity circuit): out [o x d] row-major.
+    /// `x` is packed with pad bits 0 (-1).
+    pub fn matmul_exact(&self, x: &BitMatrix) -> Vec<f32> {
+        let (o, d, g) = (self.w.rows, x.rows, self.n_groups());
+        assert_eq!(x.words_per_row, g);
+        let mut out = vec![0.0f32; o * d];
+        for oi in 0..o {
+            let wr = self.w.row(oi);
+            for di in 0..d {
+                let xr = x.row(di);
+                let mut level_sum = 0u32;
+                for gi in 0..g {
+                    level_sum += group_level(wr[gi], xr[gi]);
+                }
+                out[oi * d + di] =
+                    (2 * level_sum as i64 - self.beta as i64) as f32;
+            }
+        }
+        out
+    }
+
+    /// Sub-MAC matmul through the error model, bit-identical to the AOT
+    /// kernels given the same (seed, salt).
+    pub fn matmul_error(
+        &self,
+        x: &BitMatrix,
+        em: &ErrorModel,
+        seed: u32,
+        salt: u32,
+    ) -> Vec<f32> {
+        let (o, d, g) = (self.w.rows, x.rows, self.n_groups());
+        assert_eq!(x.words_per_row, g);
+        let mut out = vec![0.0f32; o * d];
+        for oi in 0..o {
+            let wr = self.w.row(oi);
+            for di in 0..d {
+                let xr = x.row(di);
+                let mut acc = 0.0f32;
+                for gi in 0..g {
+                    let level = group_level(wr[gi], xr[gi]) as usize;
+                    // logical index (o*G + g)*D + d — the kernels' layout
+                    let lin = salt.wrapping_add(
+                        ((oi as u32) * (g as u32))
+                            .wrapping_add(gi as u32)
+                            .wrapping_mul(d as u32)
+                            .wrapping_add(di as u32),
+                    );
+                    let u = hash01(seed, lin);
+                    acc += 2.0 * em.decode(level, u);
+                }
+                out[oi * d + di] = acc - self.beta as f32;
+            }
+        }
+        out
+    }
+
+    /// Sub-MAC level histogram contribution (F_MAC of one matmul).
+    pub fn histogram(&self, x: &BitMatrix) -> [u64; N_LEVELS] {
+        let (o, d, g) = (self.w.rows, x.rows, self.n_groups());
+        let mut hist = [0u64; N_LEVELS];
+        for oi in 0..o {
+            let wr = self.w.row(oi);
+            for di in 0..d {
+                let xr = x.row(di);
+                for gi in 0..g {
+                    hist[group_level(wr[gi], xr[gi]) as usize] += 1;
+                }
+            }
+        }
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_pm(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.pm1(0.5)).collect()
+    }
+
+    fn dense_dot(w: &[f32], x: &[f32], o: usize, k: usize, d: usize)
+        -> Vec<f32> {
+        let mut out = vec![0.0; o * d];
+        for oi in 0..o {
+            for di in 0..d {
+                let mut s = 0.0;
+                for ki in 0..k {
+                    s += w[oi * k + ki] * x[di * k + ki];
+                }
+                out[oi * d + di] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn exact_matches_dense() {
+        let mut rng = Rng::new(1);
+        for (o, k, d) in [(4, 32, 6), (3, 64, 5), (7, 96, 11)] {
+            let w = rand_pm(&mut rng, o * k);
+            let x = rand_pm(&mut rng, d * k);
+            let eng = SubMacEngine::new(o, k, &w, k);
+            let xb = BitMatrix::pack(d, k, &x, false);
+            assert_eq!(eng.matmul_exact(&xb), dense_dot(&w, &x, o, k, d));
+        }
+    }
+
+    #[test]
+    fn identity_error_model_equals_exact() {
+        let mut rng = Rng::new(2);
+        let (o, k, d) = (5, 64, 9);
+        let w = rand_pm(&mut rng, o * k);
+        let x = rand_pm(&mut rng, d * k);
+        let eng = SubMacEngine::new(o, k, &w, k);
+        let xb = BitMatrix::pack(d, k, &x, false);
+        let em = ErrorModel::identity();
+        assert_eq!(
+            eng.matmul_error(&xb, &em, 17, 3),
+            eng.matmul_exact(&xb)
+        );
+    }
+
+    #[test]
+    fn ragged_beta_subtraction() {
+        // 41 valid cells padded to 64: pads non-conducting, beta = 41
+        let mut rng = Rng::new(3);
+        let (o, k, kp, d) = (2, 41, 64, 4);
+        let mut w = vec![1.0f32; o * kp];
+        let mut x = vec![-1.0f32; d * kp];
+        let wv = rand_pm(&mut rng, o * k);
+        let xv = rand_pm(&mut rng, d * k);
+        for oi in 0..o {
+            w[oi * kp..oi * kp + k].copy_from_slice(&wv[oi * k..(oi + 1) * k]);
+        }
+        for di in 0..d {
+            x[di * kp..di * kp + k].copy_from_slice(&xv[di * k..(di + 1) * k]);
+        }
+        let eng = SubMacEngine::new(o, kp, &w, k);
+        let xb = BitMatrix::pack(d, kp, &x, false);
+        assert_eq!(eng.matmul_exact(&xb), dense_dot(&wv, &xv, o, k, d));
+    }
+
+    #[test]
+    fn histogram_total() {
+        let mut rng = Rng::new(4);
+        let (o, k, d) = (6, 96, 10);
+        let w = rand_pm(&mut rng, o * k);
+        let x = rand_pm(&mut rng, d * k);
+        let eng = SubMacEngine::new(o, k, &w, k);
+        let xb = BitMatrix::pack(d, k, &x, false);
+        let h = eng.histogram(&xb);
+        assert_eq!(h.iter().sum::<u64>(), (o * d * 3) as u64);
+    }
+
+    #[test]
+    fn decode_binary_search_equals_linear() {
+        let mut rng = Rng::new(77);
+        // random stochastic model
+        let mut full = vec![vec![0.0f64; 33]; 33];
+        for (m, row) in full.iter_mut().enumerate() {
+            let mut tot = 0.0;
+            for d in -3i64..=3 {
+                let j = (m as i64 + d).clamp(0, 32) as usize;
+                let w = rng.f64() + 0.01;
+                row[j] += w;
+                tot += w;
+            }
+            row.iter_mut().for_each(|v| *v /= tot);
+        }
+        let em = ErrorModel::from_full(&full);
+        for _ in 0..20_000 {
+            let level = rng.below(33) as usize;
+            let u = rng.f32();
+            assert_eq!(
+                em.decode(level, u),
+                em.decode_linear(level, u),
+                "level {level} u {u}"
+            );
+        }
+        // the u = 0 edge (hash(0) = 0) that forced `<=`
+        assert_eq!(em.decode(5, 0.0), em.decode_linear(5, 0.0));
+    }
+
+    #[test]
+    fn clip_model_bounds_levels() {
+        let mut rng = Rng::new(5);
+        let (o, k, d) = (4, 64, 8);
+        let w = rand_pm(&mut rng, o * k);
+        let x = rand_pm(&mut rng, d * k);
+        let eng = SubMacEngine::new(o, k, &w, k);
+        let xb = BitMatrix::pack(d, k, &x, false);
+        // clip to [14, 18]
+        let mut full = vec![vec![0.0f64; 33]; 33];
+        for (m, row) in full.iter_mut().enumerate() {
+            row[m.clamp(14, 18)] = 1.0;
+        }
+        let em = ErrorModel::from_full(&full);
+        let out = eng.matmul_error(&xb, &em, 0, 0);
+        for &v in &out {
+            // each group decodes in [14,18] -> out in [2*2*14-64, 2*2*18-64]
+            assert!((2.0 * 2.0 * 14.0 - 64.0..=2.0 * 2.0 * 18.0 - 64.0)
+                .contains(&v));
+        }
+    }
+}
+
+/// Dummy-cell biasing for a partial tail group (mirrors
+/// python/compile/nn.py::centered_pad; DESIGN.md §4): `p_on` of the
+/// 32 - (beta % 32) pad cells are driven conducting, centering the
+/// partial group's levels on the peak; the accumulator subtracts
+/// beta_eff = beta + 2 * p_on. Returns (p_on, beta_eff).
+pub fn centered_pad(beta: usize) -> (usize, usize) {
+    let r = beta % 32;
+    if r == 0 {
+        return (0, beta);
+    }
+    let p_on = (32 - r) / 2;
+    (p_on, beta + 2 * p_on)
+}
+
+#[cfg(test)]
+mod centered_pad_tests {
+    use super::centered_pad;
+    use super::{BitMatrix, SubMacEngine};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn centers_partial_groups_on_the_peak() {
+        for beta in [9usize, 27, 72, 144, 392] {
+            let (p_on, beta_eff) = centered_pad(beta);
+            let r = beta % 32;
+            if r == 0 {
+                assert_eq!((p_on, beta_eff), (0, beta));
+            } else {
+                // shifted peak p_on + r/2 within 1 of level 16
+                let peak = p_on as f64 + r as f64 / 2.0;
+                assert!((peak - 16.0).abs() <= 1.0, "beta {beta}");
+                assert_eq!(beta_eff, beta + 2 * p_on);
+            }
+        }
+    }
+
+    #[test]
+    fn biased_padding_recovers_exact_dot() {
+        // engine with conducting pads + beta_eff == plain dot product
+        let mut rng = Rng::new(8);
+        let (o, beta, d) = (3usize, 41usize, 5usize);
+        let (p_on, beta_eff) = centered_pad(beta);
+        let kp = beta.div_ceil(32) * 32;
+        let wv: Vec<f32> = (0..o * beta).map(|_| rng.pm1(0.5)).collect();
+        let xv: Vec<f32> = (0..d * beta).map(|_| rng.pm1(0.5)).collect();
+        let mut w = vec![1.0f32; o * kp];
+        let mut x = vec![-1.0f32; d * kp];
+        for oi in 0..o {
+            w[oi * kp..oi * kp + beta]
+                .copy_from_slice(&wv[oi * beta..(oi + 1) * beta]);
+        }
+        for di in 0..d {
+            x[di * kp..di * kp + beta]
+                .copy_from_slice(&xv[di * beta..(di + 1) * beta]);
+            for j in 0..p_on {
+                x[di * kp + beta + j] = 1.0; // conducting dummy cells
+            }
+        }
+        let eng = SubMacEngine::new(o, kp, &w, beta_eff);
+        let xb = BitMatrix::pack(d, kp, &x, false);
+        let got = eng.matmul_exact(&xb);
+        for oi in 0..o {
+            for di in 0..d {
+                let mut dot = 0.0f32;
+                for ki in 0..beta {
+                    dot += wv[oi * beta + ki] * xv[di * beta + ki];
+                }
+                assert_eq!(got[oi * d + di], dot);
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Host-side binarized-NN engine.
+//!
+//! A bit-packed XNOR-popcount sub-MAC engine that mirrors the L1 Pallas
+//! kernel *bit-for-bit* (same counter-based PRNG, same CDF inversion).
+//! Three roles: (1) independent oracle for integration tests against the
+//! AOT artifacts, (2) the baseline comparator the paper's framework
+//! replaces (a host MAC engine), (3) a fast native path for large
+//! Monte-Carlo sweeps in the benches.
+
+pub mod bitpack;
+pub mod engine;
+pub mod hashrng;
+
+pub use bitpack::BitMatrix;
+pub use engine::{ErrorModel, SubMacEngine};

@@ -1,0 +1,147 @@
+//! CapMin — capacitor size minimization from MAC-level statistics
+//! (paper Sec. III-A).
+//!
+//! CapMin keeps only the k most frequently occurring MAC levels in
+//! S_MAC,min; all other levels are clipped to the nearest kept level
+//! (Eq. 4). Because the F_MAC histograms are unimodal (Fig. 1), the top-k
+//! levels form a contiguous window; we make that explicit by selecting
+//! the contiguous width-k window of *spike-time-bearing* levels (1..=32,
+//! level 0 needs no spike time) with maximum covered frequency — identical
+//! to top-k for unimodal inputs and well-defined for any input.
+
+use super::{Fmac, N_LEVELS};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CapMinResult {
+    /// Number of spike times kept (the paper's k).
+    pub k: usize,
+    /// Smallest kept level (q_first in Eq. 4).
+    pub q_lo: usize,
+    /// Largest kept level (q_last in Eq. 4).
+    pub q_hi: usize,
+    /// Fraction of all sub-MAC occurrences inside the window.
+    pub coverage: f64,
+}
+
+impl CapMinResult {
+    /// Eq. (4): clip a level into the kept window.
+    pub fn clip(&self, m: usize) -> usize {
+        m.clamp(self.q_lo, self.q_hi)
+    }
+
+    pub fn levels(&self) -> Vec<usize> {
+        (self.q_lo..=self.q_hi).collect()
+    }
+}
+
+/// Select the k-level window over levels 1..=32 maximizing covered AFO.
+/// Ties resolve to the lowest window (slower spike times are both cheaper
+/// and more variation-tolerant — paper Sec. IV-C).
+pub fn select_window(fmac: &Fmac, k: usize) -> CapMinResult {
+    select_window_pmf(&fmac.pmf(), k)
+}
+
+/// Same, over an already-normalized (or combined) frequency vector.
+pub fn select_window_pmf(pmf: &[f64; N_LEVELS], k: usize) -> CapMinResult {
+    assert!(k >= 1 && k <= N_LEVELS - 1, "k in 1..=32");
+    let total: f64 = pmf.iter().sum();
+    let mut best_lo = 1usize;
+    let mut best_cov = -1.0f64;
+    for lo in 1..=(N_LEVELS - k) {
+        let hi = lo + k - 1;
+        // coverage counts only exactly-represented levels; clipped levels
+        // (outside the window) are what accuracy degradation comes from
+        let cov: f64 = pmf[lo..=hi].iter().sum();
+        if cov > best_cov + 1e-15 {
+            best_cov = cov;
+            best_lo = lo;
+        }
+    }
+    CapMinResult {
+        k,
+        q_lo: best_lo,
+        q_hi: best_lo + k - 1,
+        coverage: if total > 0.0 { best_cov / total } else { 0.0 },
+    }
+}
+
+/// The k-sweep the paper's Fig. 8 walks (k = 32 down to 5).
+pub fn sweep(fmac: &Fmac, ks: &[usize]) -> Vec<CapMinResult> {
+    ks.iter().map(|&k| select_window(fmac, k)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian_fmac(peak: usize, sharp: f64) -> Fmac {
+        let mut f = Fmac::new();
+        for m in 0..N_LEVELS {
+            let d = m as f64 - peak as f64;
+            f.counts[m] = (1e9 * (-d * d / (2.0 * sharp * sharp)).exp())
+                as u64;
+        }
+        f
+    }
+
+    #[test]
+    fn baseline_k32_keeps_all_spike_levels() {
+        let f = gaussian_fmac(16, 3.0);
+        let r = select_window(&f, 32);
+        assert_eq!((r.q_lo, r.q_hi), (1, 32));
+    }
+
+    #[test]
+    fn window_centers_on_peak() {
+        let f = gaussian_fmac(16, 3.0);
+        let r = select_window(&f, 14);
+        assert!(r.q_lo <= 16 && 16 <= r.q_hi, "{r:?}");
+        assert!((r.q_hi - r.q_lo + 1) == 14);
+        // symmetric-ish around the peak
+        assert!((16 - r.q_lo).abs_diff(r.q_hi - 16) <= 1, "{r:?}");
+    }
+
+    #[test]
+    fn coverage_monotone_in_k() {
+        let f = gaussian_fmac(14, 4.0);
+        let mut prev = 0.0;
+        for k in [5, 8, 12, 16, 24, 32] {
+            let r = select_window(&f, k);
+            assert!(r.coverage >= prev - 1e-12, "k={k}");
+            prev = r.coverage;
+        }
+        assert!(select_window(&f, 32).coverage > 0.999);
+    }
+
+    #[test]
+    fn clip_is_eq4() {
+        let r = CapMinResult {
+            k: 14,
+            q_lo: 10,
+            q_hi: 23,
+            coverage: 0.99,
+        };
+        assert_eq!(r.clip(5), 10);
+        assert_eq!(r.clip(16), 16);
+        assert_eq!(r.clip(30), 23);
+    }
+
+    #[test]
+    fn skewed_histogram_shifts_window() {
+        let f = gaussian_fmac(10, 2.0);
+        let r = select_window(&f, 8);
+        assert!(r.q_lo <= 10 && 10 <= r.q_hi);
+        assert!(r.q_hi < 20, "window follows the skewed peak: {r:?}");
+    }
+
+    #[test]
+    fn ties_pick_lowest_window() {
+        // uniform histogram: every window covers the same mass
+        let mut f = Fmac::new();
+        for m in 1..N_LEVELS {
+            f.counts[m] = 100;
+        }
+        let r = select_window(&f, 10);
+        assert_eq!(r.q_lo, 1, "lowest window on ties: {r:?}");
+    }
+}

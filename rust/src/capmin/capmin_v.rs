@@ -1,0 +1,145 @@
+//! CapMin-V — variation-tolerant spike-time sets (paper Alg. 1).
+//!
+//! Starting from CapMin's S_FIRE,min and its Monte-Carlo P_map, repeat phi
+//! times: find the spike time with the smallest diagonal probability
+//! (most error-prone), merge it into whichever neighbour has the *smaller*
+//! diagonal (boundary rows merge inward; ties arbitrary), i.e. add its
+//! column into the neighbour's and drop its row and column. Each merge
+//! widens the surviving spike time's decision interval, raising its
+//! diagonal probability at the cost of one representable level.
+
+use crate::analog::pmap::Pmap;
+
+#[derive(Clone, Debug)]
+pub struct CapMinVResult {
+    /// Surviving levels (spike times) after phi merges, ascending.
+    pub levels: Vec<usize>,
+    /// The merged (k - phi)^2 matrix, padded use via `Pmap::pad_to_full`.
+    pub pmap: Pmap,
+    /// Merge log: (removed_level, absorbed_into_level) per step.
+    pub merges: Vec<(usize, usize)>,
+}
+
+/// Alg. 1. `pmap` is CapMin's k x k matrix; `phi` the number of merges.
+pub fn capmin_v(mut pmap: Pmap, phi: usize) -> CapMinVResult {
+    assert!(phi < pmap.k(), "phi must leave at least one spike time");
+    let mut merges = vec![];
+    for _ in 0..phi {
+        let j = pmap.argmin_diag();
+        let k = pmap.k();
+        // out-of-bound cases merge inward (Alg. 1 line 5)
+        let dst = if j == 0 {
+            1
+        } else if j == k - 1 {
+            k - 2
+        } else if pmap.p[j - 1][j - 1] < pmap.p[j + 1][j + 1] {
+            // left neighbour weaker -> left merge (Alg. 1 lines 6-8)
+            j - 1
+        } else {
+            j + 1
+        };
+        merges.push((pmap.levels[j], pmap.levels[dst]));
+        pmap.merge_into(j, dst);
+    }
+    CapMinVResult {
+        levels: pmap.levels.clone(),
+        pmap,
+        merges,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::capacitor::{CapacitorModel, CapacitorSolver};
+    use crate::analog::montecarlo::MonteCarlo;
+    use crate::analog::neuron::SpikeTimeSet;
+    use crate::analog::params::AnalogParams;
+    use crate::util::rng::Rng;
+
+    fn mc_pmap(sigma: f64, lo: usize, hi: usize) -> (Pmap, SpikeTimeSet) {
+        let p = AnalogParams::paper_calibrated().with_sigma(sigma);
+        let c = CapacitorSolver::new(p, CapacitorModel::Physics)
+            .size_for_window(lo, hi);
+        let set = SpikeTimeSet::new(&p, c, (lo..=hi).collect());
+        let pm = MonteCarlo::new(p).pmap(&set, &mut Rng::new(42));
+        (pm, set)
+    }
+
+    #[test]
+    fn merges_reduce_k_by_phi() {
+        let (pm, _) = mc_pmap(0.03, 9, 24);
+        let k0 = pm.k();
+        let r = capmin_v(pm, 4);
+        assert_eq!(r.levels.len(), k0 - 4);
+        assert_eq!(r.merges.len(), 4);
+    }
+
+    #[test]
+    fn min_diagonal_improves() {
+        let (pm, _) = mc_pmap(0.04, 9, 24);
+        let before = pm
+            .diag()
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        let r = capmin_v(pm, 5);
+        let after = r
+            .pmap
+            .diag()
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            after >= before,
+            "worst-case diagonal must not degrade: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn rows_stay_stochastic_through_merges() {
+        let (pm, _) = mc_pmap(0.05, 10, 23);
+        let r = capmin_v(pm, 6);
+        for s in r.pmap.row_sums() {
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn removes_mostly_fast_levels_first() {
+        // with current-proportional variation the fast (high) side of the
+        // window is least tolerant; clock-quantization phase effects can
+        // perturb individual picks, but the removed levels should sit in
+        // the upper half of the window on average
+        let (pm, _) = mc_pmap(0.04, 9, 24);
+        let r = capmin_v(pm, 4);
+        let mean_removed: f64 = r
+            .merges
+            .iter()
+            .map(|&(rm, _)| rm as f64)
+            .sum::<f64>()
+            / r.merges.len() as f64;
+        assert!(
+            mean_removed > 16.5,
+            "removed levels should skew fast: mean {mean_removed}, \
+             merges {:?}",
+            r.merges
+        );
+    }
+
+    #[test]
+    fn identity_pmap_merges_boundary_inward() {
+        let pm = Pmap::identity((10..=15).collect());
+        // all diagonals equal 1.0 -> argmin is index 0 -> inward merge
+        let r = capmin_v(pm, 1);
+        assert_eq!(r.merges[0], (10, 11));
+        assert_eq!(r.levels, vec![11, 12, 13, 14, 15]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn phi_bounded_by_k() {
+        let pm = Pmap::identity((10..=12).collect());
+        capmin_v(pm, 3);
+    }
+}

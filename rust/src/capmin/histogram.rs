@@ -1,0 +1,135 @@
+//! F_MAC — absolute frequency of MAC level occurrences (paper Fig. 1).
+
+use super::N_LEVELS;
+
+/// Absolute-frequency histogram over the 33 sub-MAC levels.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fmac {
+    pub counts: [u64; N_LEVELS],
+}
+
+impl Default for Fmac {
+    fn default() -> Fmac {
+        Fmac::new()
+    }
+}
+
+impl Fmac {
+    pub fn new() -> Fmac {
+        Fmac {
+            counts: [0; N_LEVELS],
+        }
+    }
+
+    pub fn from_counts(counts: [u64; N_LEVELS]) -> Fmac {
+        Fmac { counts }
+    }
+
+    /// Accumulate counts delivered by the hist artifact (f32 counts are
+    /// exact integers below 2^24 per batch; summation happens here in u64).
+    pub fn add_f32(&mut self, batch: &[f32]) {
+        assert_eq!(batch.len(), N_LEVELS);
+        for (c, &b) in self.counts.iter_mut().zip(batch) {
+            debug_assert!(b >= 0.0 && b.fract() == 0.0, "count {b}");
+            *c += b as u64;
+        }
+    }
+
+    pub fn merge(&mut self, other: &Fmac) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Normalized frequencies.
+    pub fn pmf(&self) -> [f64; N_LEVELS] {
+        let t = self.total().max(1) as f64;
+        let mut out = [0.0; N_LEVELS];
+        for (o, &c) in out.iter_mut().zip(self.counts.iter()) {
+            *o = c as f64 / t;
+        }
+        out
+    }
+
+    /// Normalize-and-add across benchmarks (the paper sums normalized
+    /// F_MACs over all five datasets before applying CapMin, Sec. IV-B).
+    pub fn combine_normalized(fmacs: &[&Fmac]) -> [f64; N_LEVELS] {
+        let mut out = [0.0; N_LEVELS];
+        for f in fmacs {
+            let p = f.pmf();
+            for (o, v) in out.iter_mut().zip(p.iter()) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Dynamic range: max/min over non-zero bins (the paper observes 5-7
+    /// orders of magnitude between the peak and the tails).
+    pub fn dynamic_range(&self) -> f64 {
+        let nz: Vec<u64> = self
+            .counts
+            .iter()
+            .copied()
+            .filter(|&c| c > 0)
+            .collect();
+        if nz.is_empty() {
+            return 0.0;
+        }
+        let max = *nz.iter().max().unwrap() as f64;
+        let min = *nz.iter().min().unwrap() as f64;
+        max / min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_merge() {
+        let mut a = Fmac::new();
+        let mut batch = vec![0.0f32; N_LEVELS];
+        batch[16] = 100.0;
+        batch[15] = 50.0;
+        a.add_f32(&batch);
+        let mut b = Fmac::new();
+        b.add_f32(&batch);
+        a.merge(&b);
+        assert_eq!(a.counts[16], 200);
+        assert_eq!(a.total(), 300);
+    }
+
+    #[test]
+    fn pmf_sums_to_one() {
+        let mut f = Fmac::new();
+        f.counts[10] = 30;
+        f.counts[20] = 70;
+        let p = f.pmf();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((p[20] - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn combine_normalized_weighs_benchmarks_equally() {
+        let mut small = Fmac::new();
+        small.counts[10] = 10;
+        let mut big = Fmac::new();
+        big.counts[20] = 1_000_000;
+        let comb = Fmac::combine_normalized(&[&small, &big]);
+        assert!((comb[10] - 1.0).abs() < 1e-12);
+        assert!((comb[20] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_range_over_nonzero() {
+        let mut f = Fmac::new();
+        f.counts[16] = 1_000_000;
+        f.counts[2] = 10;
+        assert_eq!(f.dynamic_range(), 100_000.0);
+    }
+}

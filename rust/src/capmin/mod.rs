@@ -1,0 +1,15 @@
+//! The paper's SW half: F_MAC histograms, CapMin (Sec. III-A) and
+//! CapMin-V (Sec. III-B, Alg. 1).
+
+pub mod capmin;
+pub mod capmin_v;
+pub mod histogram;
+
+pub use capmin::{select_window, CapMinResult};
+pub use capmin_v::{capmin_v, CapMinVResult};
+pub use histogram::Fmac;
+
+/// Sub-MAC levels 0..=32 for the a = 32 computing array.
+pub const N_LEVELS: usize = 33;
+/// Computing array size (paper Sec. IV-A2).
+pub const ARRAY_SIZE: usize = 32;

@@ -1,0 +1,128 @@
+//! Experiment configuration: defaults sized for the single-core CPU
+//! testbed, every knob overridable from the CLI (DESIGN.md §6).
+
+use crate::util::cli::Args;
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Training steps per model (paper: 100-200 epochs on GPUs; the
+    /// synthetic tasks converge in a few hundred steps).
+    pub train_steps: usize,
+    /// Initial learning rate (paper: 1e-3; halved on a schedule).
+    pub lr0: f64,
+    /// Halve the LR every this many steps (paper: every 10th/50th epoch).
+    pub lr_halve_every: usize,
+    /// Training-set subset size (0 = full Table I size).
+    pub train_limit: usize,
+    /// Test-set subset for accuracy sweeps.
+    pub eval_limit: usize,
+    /// Training-set subset for F_MAC extraction.
+    pub hist_limit: usize,
+    /// Relative current variation sigma (paper's process variation).
+    pub sigma_rel: f64,
+    /// Monte-Carlo samples per spike time (paper: 1000).
+    pub mc_samples: usize,
+    /// k values of the Fig. 8 sweep.
+    pub ks: Vec<usize>,
+    /// Seeds for variation runs (paper: average of 3).
+    pub n_seeds: usize,
+    /// Evaluation engine artifact: "eval" (jnp) or "evalp" (Pallas).
+    pub engine: String,
+    /// Directory for cached runs (trained weights, F_MACs, results).
+    pub run_dir: String,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            train_steps: 300,
+            lr0: 1e-2,
+            lr_halve_every: 100,
+            train_limit: 4096,
+            eval_limit: 256,
+            hist_limit: 512,
+            sigma_rel: 0.02,
+            mc_samples: 1000,
+            ks: vec![32, 28, 24, 20, 18, 16, 14, 12, 10, 8, 6, 5],
+            n_seeds: 3,
+            engine: "eval".to_string(),
+            run_dir: "runs".to_string(),
+            seed: 42,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_args(args: &Args) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        if args.flag("quick") {
+            // smoke-test scale: seconds, not minutes
+            c.train_steps = 30;
+            c.train_limit = 256;
+            c.eval_limit = 64;
+            c.hist_limit = 64;
+            c.mc_samples = 200;
+            c.ks = vec![32, 24, 16, 14, 10, 6];
+            c.n_seeds = 1;
+        }
+        if args.flag("paper-scale") {
+            // full Table I splits + paper step counts; hours of CPU time
+            c.train_steps = 2000;
+            c.train_limit = 0;
+            c.eval_limit = 0;
+            c.hist_limit = 4096;
+        }
+        c.train_steps = args.usize_or("steps", c.train_steps);
+        c.lr0 = args.f64_or("lr", c.lr0);
+        c.lr_halve_every =
+            args.usize_or("lr-halve-every", c.lr_halve_every);
+        c.train_limit = args.usize_or("train-limit", c.train_limit);
+        c.eval_limit = args.usize_or("eval-limit", c.eval_limit);
+        c.hist_limit = args.usize_or("hist-limit", c.hist_limit);
+        c.sigma_rel = args.f64_or("sigma", c.sigma_rel);
+        c.mc_samples = args.usize_or("mc-samples", c.mc_samples);
+        c.n_seeds = args.usize_or("seeds", c.n_seeds);
+        c.engine = args.str_or("engine", &c.engine);
+        c.run_dir = args.str_or("run-dir", &c.run_dir);
+        c.seed = args.usize_or("seed", c.seed as usize) as u64;
+        if let Some(ks) = args.get("ks") {
+            c.ks = ks
+                .split(',')
+                .map(|s| s.trim().parse().expect("bad --ks"))
+                .collect();
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let c = ExperimentConfig::from_args(&parse(&["x"]));
+        assert_eq!(c.train_steps, 300);
+        let c = ExperimentConfig::from_args(&parse(&[
+            "x", "--steps", "7", "--sigma", "0.05", "--ks", "32,16,8",
+        ]));
+        assert_eq!(c.train_steps, 7);
+        assert_eq!(c.sigma_rel, 0.05);
+        assert_eq!(c.ks, vec![32, 16, 8]);
+    }
+
+    #[test]
+    fn quick_mode_shrinks_everything() {
+        let c = ExperimentConfig::from_args(&parse(&["x", "--quick"]));
+        assert!(c.train_steps <= 30);
+        assert!(c.eval_limit <= 64);
+        assert_eq!(c.n_seeds, 1);
+    }
+}

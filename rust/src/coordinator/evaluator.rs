@@ -1,0 +1,137 @@
+//! Hardware-mode accuracy evaluation: run the eval artifact (grouped
+//! sub-MAC path, jnp or Pallas engine) with *per-matmul* level-transition
+//! CDFs as runtime inputs — CapMin clipping, Monte-Carlo variation, and
+//! CapMin-V merged read-outs are all just different matrices, so a whole
+//! k-sweep reuses one compiled executable.
+
+use anyhow::Result;
+
+use crate::bnn::ErrorModel;
+use crate::capmin::N_LEVELS;
+use crate::data::{Loader, Split};
+use crate::runtime::{lit_f32, lit_u32_scalar, to_f32, Runtime};
+use crate::util::stats::argmax;
+
+pub struct Evaluator<'rt> {
+    pub rt: &'rt Runtime,
+    /// "eval" (jnp engine) or "evalp" (Pallas kernel engine).
+    pub engine: String,
+}
+
+/// Stack per-matmul error models into the artifacts' [n_mat, 33, 33] cdf
+/// and [n_mat, 33] vals input tensors.
+pub fn stack_error_models(ems: &[ErrorModel]) -> (Vec<f32>, Vec<f32>) {
+    let mut cdf = Vec::with_capacity(ems.len() * N_LEVELS * N_LEVELS);
+    let mut vals = Vec::with_capacity(ems.len() * N_LEVELS);
+    for em in ems {
+        cdf.extend_from_slice(&em.cdf);
+        vals.extend_from_slice(&em.vals);
+    }
+    (cdf, vals)
+}
+
+impl<'rt> Evaluator<'rt> {
+    pub fn new(rt: &'rt Runtime, engine: &str) -> Evaluator<'rt> {
+        Evaluator {
+            rt,
+            engine: engine.to_string(),
+        }
+    }
+
+    /// Accuracy of `folded` on the test split under per-matmul error
+    /// models `ems`, over `limit` samples, with PRNG seed `seed`.
+    pub fn accuracy(
+        &self,
+        model: &str,
+        folded: &[xla::Literal],
+        spec: crate::data::synth::DatasetSpec,
+        ems: &[ErrorModel],
+        limit: usize,
+        seed: u32,
+    ) -> Result<f64> {
+        let mi = self.rt.manifest.model(model);
+        anyhow::ensure!(
+            ems.len() == mi.n_matmuls,
+            "need {} error models, got {}",
+            mi.n_matmuls,
+            ems.len()
+        );
+        let eval = self.rt.load(model, &self.engine)?;
+        let eb = mi.eval_batch;
+        let x_shape = [&[eb], mi.in_shape.as_slice()].concat();
+        let mut loader = Loader::new(spec, Split::Test, eb, limit, 0xE7A1);
+        let n_batches = (limit / eb).max(1);
+
+        let (cdf_v, vals_v) = stack_error_models(ems);
+        let cdf = lit_f32(&[mi.n_matmuls, N_LEVELS, N_LEVELS], &cdf_v)?;
+        let vals = lit_f32(&[mi.n_matmuls, N_LEVELS], &vals_v)?;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..n_batches {
+            let batch = loader.next_batch();
+            let x = lit_f32(&x_shape, &batch.x)?;
+            // per-batch seed: decorrelates batches within one run
+            let seed_l =
+                lit_u32_scalar(seed.wrapping_add(bi as u32 * 0x9E37));
+            let mut inputs: Vec<&xla::Literal> = folded.iter().collect();
+            inputs.push(&x);
+            inputs.push(&cdf);
+            inputs.push(&vals);
+            inputs.push(&seed_l);
+            let outs = eval.run_borrowed(&inputs)?;
+            let logits = to_f32(&outs[0])?;
+            for (i, &label) in batch.labels.iter().enumerate() {
+                let row =
+                    &logits[i * mi.n_classes..(i + 1) * mi.n_classes];
+                if argmax(row) == label {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Mean accuracy over `n_seeds` PRNG seeds (paper: average of 3 runs
+    /// for the variation curves).
+    pub fn accuracy_multi_seed(
+        &self,
+        model: &str,
+        folded: &[xla::Literal],
+        spec: crate::data::synth::DatasetSpec,
+        ems: &[ErrorModel],
+        limit: usize,
+        n_seeds: usize,
+        base_seed: u32,
+    ) -> Result<f64> {
+        let mut acc = 0.0;
+        for s in 0..n_seeds {
+            acc += self.accuracy(
+                model,
+                folded,
+                spec.clone(),
+                ems,
+                limit,
+                base_seed.wrapping_add(s as u32 * 7919),
+            )?;
+        }
+        Ok(acc / n_seeds as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stacking_preserves_layout() {
+        let a = ErrorModel::identity();
+        let mut b = ErrorModel::identity();
+        b.vals[0] = 5.0;
+        let (cdf, vals) = stack_error_models(&[a.clone(), b]);
+        assert_eq!(cdf.len(), 2 * 33 * 33);
+        assert_eq!(vals.len(), 2 * 33);
+        assert_eq!(vals[33], 5.0);
+        assert_eq!(&cdf[..33 * 33], a.cdf.as_slice());
+    }
+}

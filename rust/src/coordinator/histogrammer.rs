@@ -1,0 +1,93 @@
+//! F_MAC extraction: forward passes over the training set through the
+//! hist artifact, accumulating per-matmul and summed level histograms
+//! (the SW half of CapMin; paper Fig. 1 / Sec. IV-B).
+
+use anyhow::Result;
+
+use crate::capmin::{Fmac, N_LEVELS};
+use crate::data::{Loader, Split};
+use crate::runtime::{lit_f32, to_f32, Runtime};
+use crate::util::stats::argmax;
+
+pub struct HistResult {
+    pub per_matmul: Vec<Fmac>,
+    pub sum: Fmac,
+    /// Clean accuracy measured on the same passes (sanity signal).
+    pub accuracy: f64,
+    pub n_samples: usize,
+}
+
+pub struct Histogrammer<'rt> {
+    pub rt: &'rt Runtime,
+}
+
+impl<'rt> Histogrammer<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Histogrammer<'rt> {
+        Histogrammer { rt }
+    }
+
+    /// Run `limit` training samples of `dataset` through the model's hist
+    /// artifact (batch size fixed by the manifest).
+    pub fn extract(
+        &self,
+        model: &str,
+        folded: &[xla::Literal],
+        loader: &mut Loader,
+        limit: usize,
+    ) -> Result<HistResult> {
+        let mi = self.rt.manifest.model(model);
+        let hist = self.rt.load(model, "hist")?;
+        let hb = mi.hist_batch;
+        let x_shape = [&[hb], mi.in_shape.as_slice()].concat();
+        let n_batches = (limit / hb).max(1);
+
+        let mut per = vec![Fmac::new(); mi.n_matmuls];
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for _ in 0..n_batches {
+            let batch = loader.next_batch();
+            let x = lit_f32(&x_shape, &batch.x)?;
+            let mut inputs: Vec<&xla::Literal> = folded.iter().collect();
+            inputs.push(&x);
+            let outs = hist.run_borrowed(&inputs)?;
+            let fmac = to_f32(&outs[0])?; // [n_matmuls, 33]
+            for (i, f) in per.iter_mut().enumerate() {
+                f.add_f32(&fmac[i * N_LEVELS..(i + 1) * N_LEVELS]);
+            }
+            let logits = to_f32(&outs[1])?;
+            for (i, &label) in batch.labels.iter().enumerate() {
+                let row =
+                    &logits[i * mi.n_classes..(i + 1) * mi.n_classes];
+                if argmax(row) == label {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        let mut sum = Fmac::new();
+        for f in &per {
+            sum.merge(f);
+        }
+        Ok(HistResult {
+            per_matmul: per,
+            sum,
+            accuracy: correct as f64 / total.max(1) as f64,
+            n_samples: total,
+        })
+    }
+
+    /// Convenience: loader construction + extraction.
+    pub fn extract_dataset(
+        &self,
+        model: &str,
+        folded: &[xla::Literal],
+        spec: crate::data::synth::DatasetSpec,
+        limit: usize,
+        seed: u64,
+    ) -> Result<HistResult> {
+        let mi = self.rt.manifest.model(model);
+        let mut loader =
+            Loader::new(spec, Split::Train, mi.hist_batch, limit, seed);
+        self.extract(model, folded, &mut loader, limit)
+    }
+}

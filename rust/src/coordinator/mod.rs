@@ -1,0 +1,9 @@
+//! L3 coordinator: experiment orchestration over the PJRT runtime.
+
+pub mod config;
+pub mod evaluator;
+pub mod histogrammer;
+pub mod pipeline;
+pub mod report;
+pub mod store;
+pub mod trainer;

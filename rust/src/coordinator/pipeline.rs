@@ -1,0 +1,247 @@
+//! End-to-end experiment pipeline with run caching.
+//!
+//! Stage graph (DESIGN.md §2): train -> export(fold) -> F_MAC -> CapMin
+//! window -> capacitor sizing -> Monte-Carlo P_map -> (CapMin-V) ->
+//! error-injected evaluation. Trained weights and histograms cache in
+//! `runs/` so figure commands compose without retraining.
+
+use anyhow::Result;
+
+use super::config::ExperimentConfig;
+use super::evaluator::Evaluator;
+use super::histogrammer::Histogrammer;
+use super::store::{NamedTensor, Store};
+use super::trainer::Trainer;
+use crate::analog::capacitor::{CapacitorModel, CapacitorSolver};
+use crate::analog::montecarlo::MonteCarlo;
+use crate::analog::neuron::SpikeTimeSet;
+use crate::analog::params::AnalogParams;
+use crate::analog::pmap::Pmap;
+use crate::bnn::ErrorModel;
+use crate::capmin::{capmin::select_window, capmin_v::capmin_v, Fmac};
+use crate::data::synth::Dataset;
+use crate::data::{Loader, Split};
+use crate::runtime::{lit_f32, to_f32, Runtime};
+use crate::util::rng::Rng;
+
+pub struct Pipeline<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: ExperimentConfig,
+    pub store: Store,
+}
+
+impl<'rt> Pipeline<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: ExperimentConfig) -> Result<Self> {
+        let store = Store::new(&cfg.run_dir)?;
+        Ok(Pipeline { rt, cfg, store })
+    }
+
+    pub fn params(&self) -> AnalogParams {
+        AnalogParams::paper_calibrated().with_sigma(self.cfg.sigma_rel)
+    }
+
+    fn folded_cache_name(&self, ds: Dataset) -> String {
+        format!("{}_folded.capt", ds.spec().name)
+    }
+
+    fn fmac_cache_name(&self, ds: Dataset) -> String {
+        format!("{}_fmac.capt", ds.spec().name)
+    }
+
+    /// Trained + folded hardware tensors for `ds` (cached).
+    pub fn ensure_folded(&self, ds: Dataset) -> Result<Vec<xla::Literal>> {
+        let spec = ds.spec();
+        let mi = self.rt.manifest.model(spec.model).clone();
+        let cache = self.folded_cache_name(ds);
+        if self.store.exists(&cache) {
+            let ts = self.store.load_tensors(&cache)?;
+            return ts
+                .iter()
+                .map(|t| lit_f32(&t.shape, &t.data))
+                .collect::<Result<Vec<_>>>();
+        }
+        eprintln!(
+            "[pipeline] training {} on {} ({} steps)...",
+            mi.name,
+            spec.name,
+            self.cfg.train_steps
+        );
+        let trainer = Trainer::new(self.rt);
+        let mut loader = Loader::new(
+            spec.clone(),
+            Split::Train,
+            mi.train_batch,
+            self.cfg.train_limit,
+            self.cfg.seed,
+        );
+        let t0 = std::time::Instant::now();
+        let trained = trainer.train(
+            &mi.name,
+            &mut loader,
+            self.cfg.train_steps,
+            self.cfg.lr0,
+            self.cfg.lr_halve_every,
+            self.cfg.seed,
+            &mut |step, loss| {
+                if step % 50 == 0 {
+                    eprintln!("[train {}] step {step} loss {loss:.4}",
+                              spec.name);
+                }
+            },
+        )?;
+        eprintln!(
+            "[pipeline] trained {} in {:.1?} (loss {:.3} -> {:.3})",
+            spec.name,
+            t0.elapsed(),
+            trained.losses.first().unwrap_or(&f32::NAN),
+            trained.losses.last().unwrap_or(&f32::NAN)
+        );
+        let folded = trainer.export(&trained)?;
+        // persist loss curve + folded tensors
+        let mut ts = Vec::with_capacity(folded.len());
+        for (lit, sig) in folded.iter().zip(
+            mi.artifacts["export"].outputs.iter(),
+        ) {
+            ts.push(NamedTensor {
+                name: sig.name.clone(),
+                shape: sig.shape.clone(),
+                data: to_f32(lit)?,
+            });
+        }
+        self.store.save_tensors(&cache, &ts)?;
+        self.store.save_tensors(
+            &format!("{}_losses.capt", spec.name),
+            &[NamedTensor {
+                name: "loss".into(),
+                shape: vec![trained.losses.len()],
+                data: trained.losses.clone(),
+            }],
+        )?;
+        Ok(folded)
+    }
+
+    /// F_MAC histograms for `ds` (cached). Also reports clean accuracy.
+    pub fn ensure_fmac(&self, ds: Dataset) -> Result<(Vec<Fmac>, Fmac)> {
+        let cache = self.fmac_cache_name(ds);
+        if self.store.exists(&cache) {
+            return self.store.load_fmac(&cache);
+        }
+        let spec = ds.spec();
+        let folded = self.ensure_folded(ds)?;
+        eprintln!("[pipeline] extracting F_MAC for {}...", spec.name);
+        let hist = Histogrammer::new(self.rt);
+        let res = hist.extract_dataset(
+            &spec.model.to_string(),
+            &folded,
+            spec.clone(),
+            self.cfg.hist_limit,
+            self.cfg.seed ^ 0x48_31u64,
+        )?;
+        eprintln!(
+            "[pipeline] {}: F_MAC over {} samples, clean train-acc {:.3}",
+            spec.name, res.n_samples, res.accuracy
+        );
+        self.store
+            .save_fmac(&cache, &res.per_matmul, &res.sum)?;
+        Ok((res.per_matmul, res.sum))
+    }
+
+    /// The full hardware read-out configuration for one model at CapMin
+    /// parameter k: per-matmul windows, one shared capacitor, and the
+    /// per-matmul error models the eval artifacts consume.
+    ///
+    /// The IF-SNN has ONE membrane capacitor, but the spike-time decoder
+    /// is digital and per layer: a matmul whose reduction length only
+    /// reaches level 9 (grayscale first conv, beta = 9) keeps its own
+    /// narrow window instead of being wiped out by the peak-centered
+    /// global window. The capacitor is sized by the most demanding
+    /// window (largest q_hi) — lower windows have wider time gaps and
+    /// ride along for free. `phi > 0` applies CapMin-V merging to each
+    /// window (clamped to its size). `sigma = 0` yields the
+    /// deterministic Eq.-4 clipping maps.
+    pub fn hw_config(
+        &self,
+        per_fmac: &[Fmac],
+        k: usize,
+        sigma: f64,
+        phi: usize,
+    ) -> HwConfig {
+        let p = self.params().with_sigma(sigma);
+        let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+        let windows: Vec<_> = per_fmac
+            .iter()
+            .map(|f| select_window(f, k))
+            .collect();
+        let c = windows
+            .iter()
+            .map(|w| solver.size_for_window(w.q_lo, w.q_hi))
+            .fold(0.0f64, f64::max);
+        let mc = MonteCarlo::new(p).with_samples(self.cfg.mc_samples);
+        let mut sets = Vec::with_capacity(windows.len());
+        let mut ems = Vec::with_capacity(windows.len());
+        for (i, w) in windows.iter().enumerate() {
+            let base = SpikeTimeSet::new(&p, c, w.levels());
+            let levels = if phi > 0 {
+                let pmap: Pmap = mc.pmap(
+                    &base,
+                    &mut Rng::new(self.cfg.seed ^ 0x5107 ^ i as u64),
+                );
+                let res = capmin_v(pmap, phi.min(w.k - 1));
+                res.levels
+            } else {
+                w.levels()
+            };
+            let set = SpikeTimeSet::new(&p, c, levels);
+            let full = if sigma == 0.0 {
+                mc.clean_map(&set)
+            } else {
+                mc.full_map(
+                    &set,
+                    &mut Rng::new(self.cfg.seed ^ 0x4D43 ^ (i as u64) << 8),
+                )
+            };
+            ems.push(ErrorModel::from_full(&full));
+            sets.push(set);
+        }
+        HwConfig {
+            c,
+            windows,
+            sets,
+            ems,
+        }
+    }
+
+    pub fn evaluator(&self) -> Evaluator<'rt> {
+        Evaluator::new(self.rt, &self.cfg.engine)
+    }
+}
+
+/// One hardware operating point: shared capacitor + per-matmul read-out.
+pub struct HwConfig {
+    /// Shared membrane capacitance [F] (sized by the topmost window).
+    pub c: f64,
+    /// CapMin window per matmul.
+    pub windows: Vec<crate::capmin::CapMinResult>,
+    /// Spike-time set per matmul (post CapMin-V merging when phi > 0).
+    pub sets: Vec<SpikeTimeSet>,
+    /// Error model per matmul (the eval artifacts' runtime input).
+    pub ems: Vec<ErrorModel>,
+}
+
+impl HwConfig {
+    /// Guaranteed response time of the slowest window (system latency).
+    pub fn grt(&self) -> f64 {
+        self.sets
+            .iter()
+            .map(|s| s.grt())
+            .fold(0.0f64, f64::max)
+    }
+
+    /// The peak (topmost) window — what drives the capacitor.
+    pub fn peak_window(&self) -> &crate::capmin::CapMinResult {
+        self.windows
+            .iter()
+            .max_by_key(|w| w.q_hi)
+            .expect("at least one matmul")
+    }
+}

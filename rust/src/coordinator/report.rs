@@ -1,0 +1,83 @@
+//! Experiment result reporting: paper-style tables on stdout + JSON
+//! series into `runs/results_*.json` (EXPERIMENTS.md references these).
+
+use anyhow::Result;
+
+use super::store::Store;
+use crate::util::json::{arr_f64, obj, Json};
+
+pub struct Report<'s> {
+    pub store: &'s Store,
+}
+
+impl<'s> Report<'s> {
+    pub fn new(store: &'s Store) -> Report<'s> {
+        Report { store }
+    }
+
+    /// Persist a named result series (figure data) as JSON.
+    pub fn save_series(
+        &self,
+        name: &str,
+        meta: Vec<(&str, Json)>,
+        series: Vec<(&str, Vec<f64>)>,
+    ) -> Result<()> {
+        let mut fields = meta;
+        let mut s = vec![];
+        for (k, v) in series {
+            s.push((k, arr_f64(&v)));
+        }
+        fields.push(("series", obj(s)));
+        self.store
+            .save_text(&format!("results_{name}.json"),
+                       &obj(fields).to_string())?;
+        Ok(())
+    }
+}
+
+/// Format an accuracy as the paper plots it.
+pub fn pct(a: f64) -> String {
+    format!("{:.1}%", 100.0 * a)
+}
+
+/// Format a multiplicative ratio.
+pub fn ratio(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::store::Store;
+
+    #[test]
+    fn saves_parseable_series() {
+        let dir = std::env::temp_dir().join(format!(
+            "capmin_report_test_{}",
+            std::process::id()
+        ));
+        let store = Store::new(dir.to_str().unwrap()).unwrap();
+        let r = Report::new(&store);
+        r.save_series(
+            "fig8_test",
+            vec![("dataset", Json::Str("x".into()))],
+            vec![("k", vec![32.0, 16.0]), ("acc", vec![0.9, 0.8])],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(
+            store.path("results_fig8_test.json"),
+        )
+        .unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(
+            j.req("series").req("acc").as_arr()[1].as_f64(),
+            0.8
+        );
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(pct(0.914), "91.4%");
+        assert_eq!(ratio(14.083), "14.08x");
+    }
+}

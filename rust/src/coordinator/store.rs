@@ -1,0 +1,218 @@
+//! Run store: cached trained weights, F_MAC histograms and result files.
+//!
+//! Simple self-describing binary tensor format (no serde offline):
+//!   magic "CAPT" | u32 n_tensors | per tensor:
+//!     u32 name_len | name bytes | u32 ndims | u64 dims[] | f32 data[]
+//! plus JSON result files written via util::json.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::capmin::{Fmac, N_LEVELS};
+
+const MAGIC: &[u8; 4] = b"CAPT";
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct NamedTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+pub struct Store {
+    pub dir: PathBuf,
+}
+
+impl Store {
+    pub fn new(dir: &str) -> Result<Store> {
+        fs::create_dir_all(dir)?;
+        Ok(Store {
+            dir: PathBuf::from(dir),
+        })
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.path(name).exists()
+    }
+
+    pub fn save_tensors(&self, name: &str, tensors: &[NamedTensor])
+        -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for t in tensors {
+            let nb = t.name.as_bytes();
+            buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+            buf.extend_from_slice(nb);
+            buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            debug_assert_eq!(
+                t.shape.iter().product::<usize>().max(1),
+                t.data.len()
+            );
+            for &v in &t.data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let tmp = self.path(&format!("{name}.tmp"));
+        fs::File::create(&tmp)?.write_all(&buf)?;
+        fs::rename(tmp, self.path(name))?;
+        Ok(())
+    }
+
+    pub fn load_tensors(&self, name: &str) -> Result<Vec<NamedTensor>> {
+        let mut bytes = Vec::new();
+        fs::File::open(self.path(name))
+            .with_context(|| format!("open {name}"))?
+            .read_to_end(&mut bytes)?;
+        let mut i = 0usize;
+        let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+            if *i + n > bytes.len() {
+                return Err(anyhow!("truncated store file {name}"));
+            }
+            let s = &bytes[*i..*i + n];
+            *i += n;
+            Ok(s)
+        };
+        if take(&mut i, 4)? != MAGIC {
+            return Err(anyhow!("bad magic in {name}"));
+        }
+        let n = u32::from_le_bytes(take(&mut i, 4)?.try_into()?) as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let nl =
+                u32::from_le_bytes(take(&mut i, 4)?.try_into()?) as usize;
+            let nm = String::from_utf8(take(&mut i, nl)?.to_vec())?;
+            let nd =
+                u32::from_le_bytes(take(&mut i, 4)?.try_into()?) as usize;
+            let mut shape = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                shape.push(u64::from_le_bytes(
+                    take(&mut i, 8)?.try_into()?,
+                ) as usize);
+            }
+            let len = shape.iter().product::<usize>().max(1);
+            let raw = take(&mut i, len * 4)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            out.push(NamedTensor {
+                name: nm,
+                shape,
+                data,
+            });
+        }
+        Ok(out)
+    }
+
+    /// F_MAC histograms are stored as one tensor per matmul plus "sum".
+    pub fn save_fmac(
+        &self,
+        name: &str,
+        per_matmul: &[Fmac],
+        sum: &Fmac,
+    ) -> Result<()> {
+        let mut ts: Vec<NamedTensor> = per_matmul
+            .iter()
+            .enumerate()
+            .map(|(i, f)| NamedTensor {
+                name: format!("mat{i}"),
+                shape: vec![N_LEVELS],
+                data: f.counts.iter().map(|&c| c as f32).collect(),
+            })
+            .collect();
+        ts.push(NamedTensor {
+            name: "sum".into(),
+            shape: vec![N_LEVELS],
+            data: sum.counts.iter().map(|&c| c as f32).collect(),
+        });
+        self.save_tensors(name, &ts)
+    }
+
+    pub fn load_fmac(&self, name: &str) -> Result<(Vec<Fmac>, Fmac)> {
+        let ts = self.load_tensors(name)?;
+        let mut per = vec![];
+        let mut sum = Fmac::new();
+        for t in ts {
+            let mut f = Fmac::new();
+            for (c, &v) in f.counts.iter_mut().zip(t.data.iter()) {
+                *c = v as u64;
+            }
+            if t.name == "sum" {
+                sum = f;
+            } else {
+                per.push(f);
+            }
+        }
+        Ok((per, sum))
+    }
+
+    pub fn save_text(&self, name: &str, text: &str) -> Result<()> {
+        fs::write(self.path(name), text)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store() -> Store {
+        let dir = std::env::temp_dir().join(format!(
+            "capmin_store_test_{}",
+            std::process::id()
+        ));
+        Store::new(dir.to_str().unwrap()).unwrap()
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let s = tmp_store();
+        let ts = vec![
+            NamedTensor {
+                name: "wb0".into(),
+                shape: vec![2, 3],
+                data: vec![1., -1., 1., -1., 1., -1.],
+            },
+            NamedTensor {
+                name: "bias".into(),
+                shape: vec![],
+                data: vec![0.5],
+            },
+        ];
+        s.save_tensors("t.capt", &ts).unwrap();
+        assert_eq!(s.load_tensors("t.capt").unwrap(), ts);
+    }
+
+    #[test]
+    fn fmac_roundtrip() {
+        let s = tmp_store();
+        let mut a = Fmac::new();
+        a.counts[16] = 12345;
+        let mut b = Fmac::new();
+        b.counts[10] = 7;
+        let mut sum = a.clone();
+        sum.merge(&b);
+        s.save_fmac("f.capt", &[a.clone(), b.clone()], &sum).unwrap();
+        let (per, s2) = s.load_fmac("f.capt").unwrap();
+        assert_eq!(per, vec![a, b]);
+        assert_eq!(s2, sum);
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let s = tmp_store();
+        std::fs::write(s.path("bad.capt"), b"nope").unwrap();
+        assert!(s.load_tensors("bad.capt").is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! Training driver: Rust owns the loop, LR schedule, batching and
+//! logging; the AOT train-step artifact owns the math (fwd/bwd/Adam).
+
+use anyhow::Result;
+
+use crate::data::Loader;
+use crate::runtime::{
+    lit_f32, lit_f32_scalar, lit_u32, lit_zeros, to_f32_scalar,
+    Runtime,
+};
+
+/// Trained model: the init/train artifacts' params+state literals, plus
+/// the loss curve for EXPERIMENTS.md.
+pub struct Trained {
+    pub model: String,
+    pub params_state: Vec<xla::Literal>,
+    pub losses: Vec<f32>,
+}
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Trainer<'rt> {
+        Trainer { rt }
+    }
+
+    /// Train `model` on `loader` for `steps` steps. The LR halving
+    /// schedule mirrors the paper (halve every `halve_every` steps).
+    pub fn train(
+        &self,
+        model: &str,
+        loader: &mut Loader,
+        steps: usize,
+        lr0: f64,
+        halve_every: usize,
+        seed: u64,
+        log: &mut dyn FnMut(usize, f32),
+    ) -> Result<Trained> {
+        let mi = self.rt.manifest.model(model);
+        let init = self.rt.load(model, "init")?;
+        let train = self.rt.load(model, "train")?;
+
+        let key = lit_u32(&[2], &[(seed >> 32) as u32, seed as u32])?;
+        let mut params_state = init.run(&[key])?;
+        let np = mi.n_params;
+
+        // Adam state starts at zero
+        let mut m: Vec<xla::Literal> = Vec::with_capacity(np);
+        let mut v: Vec<xla::Literal> = Vec::with_capacity(np);
+        for sig in &train.sig.inputs[mi.n_params + mi.n_state..]
+            [..mi.n_params]
+        {
+            m.push(lit_zeros(&sig.shape)?);
+        }
+        for sig in &train.sig.inputs
+            [2 * mi.n_params + mi.n_state..][..mi.n_params]
+        {
+            v.push(lit_zeros(&sig.shape)?);
+        }
+
+        let in_shape = &mi.in_shape;
+        let tb = mi.train_batch;
+        let x_shape =
+            [&[tb], in_shape.as_slice()].concat();
+        let mut losses = Vec::with_capacity(steps);
+        for step in 1..=steps {
+            let batch = loader.next_batch();
+            let lr = lr0 * 0.5f64.powi((step / halve_every.max(1)) as i32);
+            let x = lit_f32(&x_shape, &batch.x)?;
+            let y = lit_f32(&[tb, mi.n_classes], &batch.y_pm)?;
+            let mut inputs: Vec<&xla::Literal> =
+                params_state.iter().collect();
+            inputs.extend(m.iter());
+            inputs.extend(v.iter());
+            let step_l = lit_f32_scalar(step as f32);
+            let lr_l = lit_f32_scalar(lr as f32);
+            inputs.push(&step_l);
+            inputs.push(&lr_l);
+            inputs.push(&x);
+            inputs.push(&y);
+            let mut outs = train.run_borrowed(&inputs)?;
+            let loss = to_f32_scalar(outs.last().unwrap())?;
+            losses.push(loss);
+            outs.pop();
+            let vv: Vec<xla::Literal> = outs.split_off(
+                mi.n_params + mi.n_state + np,
+            );
+            let mm: Vec<xla::Literal> =
+                outs.split_off(mi.n_params + mi.n_state);
+            params_state = outs;
+            m = mm;
+            v = vv;
+            log(step, loss);
+        }
+        Ok(Trained {
+            model: model.to_string(),
+            params_state,
+            losses,
+        })
+    }
+
+    /// Fold a trained model into the hardware tensors (export artifact).
+    pub fn export(&self, trained: &Trained) -> Result<Vec<xla::Literal>> {
+        let export = self.rt.load(&trained.model, "export")?;
+        let refs: Vec<&xla::Literal> =
+            trained.params_state.iter().collect();
+        export.run_borrowed(&refs)
+    }
+
+    /// Clean train-split loss-proxy evaluation is done by the evaluator on
+    /// the folded model; the trainer only reports the loss curve.
+    pub fn final_loss(trained: &Trained) -> f32 {
+        *trained.losses.last().unwrap_or(&f32::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Dataset;
+    use crate::data::Split;
+
+    #[test]
+    fn tiny_model_trains_and_loss_drops() {
+        if !crate::runtime::artifacts_dir().join("manifest.json").exists()
+        {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let rt = Runtime::new().unwrap();
+        let tr = Trainer::new(&rt);
+        let mut loader = Loader::new(
+            Dataset::FashionSyn.spec(),
+            Split::Train,
+            rt.manifest.model("vgg3_tiny").train_batch,
+            256,
+            1,
+        );
+        let trained = tr
+            .train("vgg3_tiny", &mut loader, 25, 1e-2, 1000, 7,
+                   &mut |_, _| {})
+            .unwrap();
+        assert_eq!(trained.losses.len(), 25);
+        let first = trained.losses[..5].iter().sum::<f32>() / 5.0;
+        let last = trained.losses[20..].iter().sum::<f32>() / 5.0;
+        assert!(
+            last < first,
+            "loss should fall: {first} -> {last} ({:?})",
+            trained.losses
+        );
+        // export folds to the manifest's folded signature
+        let folded = tr.export(&trained).unwrap();
+        assert_eq!(
+            folded.len(),
+            rt.manifest.model("vgg3_tiny").n_folded
+        );
+    }
+}

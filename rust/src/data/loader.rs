@@ -1,0 +1,167 @@
+//! Batching pipeline: shuffled train batches, sequential eval batches,
+//! targets in both one-hot +-1 (MHL) and index form.
+
+use super::synth::DatasetSpec;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// One host-side batch, ready to become PJRT literals.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// NCHW pixels, +-1.
+    pub x: Vec<f32>,
+    /// One-hot +-1 targets [n x classes] (MHL form).
+    pub y_pm: Vec<f32>,
+    /// Class indices.
+    pub labels: Vec<usize>,
+    pub n: usize,
+}
+
+pub struct Loader {
+    pub spec: DatasetSpec,
+    pub split: Split,
+    pub batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    epoch: usize,
+    /// Cap on the split size (CPU-budget subsets; 0 = full split).
+    pub limit: usize,
+}
+
+impl Loader {
+    pub fn new(
+        spec: DatasetSpec,
+        split: Split,
+        batch: usize,
+        limit: usize,
+        seed: u64,
+    ) -> Loader {
+        let full = match split {
+            Split::Train => spec.n_train,
+            Split::Test => spec.n_test,
+        };
+        let n = if limit == 0 { full } else { limit.min(full) };
+        let mut l = Loader {
+            spec,
+            split,
+            batch,
+            order: (0..n).collect(),
+            cursor: 0,
+            rng: Rng::new(seed),
+            epoch: 0,
+            limit: n,
+        };
+        if split == Split::Train {
+            let mut rng = l.rng.split(0);
+            rng.shuffle(&mut l.order);
+        }
+        l
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn n_batches_per_epoch(&self) -> usize {
+        self.len() / self.batch
+    }
+
+    /// Next batch; reshuffles per epoch on the train split, wraps on test.
+    pub fn next_batch(&mut self) -> Batch {
+        let b = self.batch;
+        let cls = self.spec.classes;
+        let px = self.spec.pixels();
+        let mut x = Vec::with_capacity(b * px);
+        let mut y_pm = vec![-1.0f32; b * cls];
+        let mut labels = Vec::with_capacity(b);
+        for i in 0..b {
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+                self.epoch += 1;
+                if self.split == Split::Train {
+                    let mut rng = self.rng.split(self.epoch as u64);
+                    rng.shuffle(&mut self.order);
+                }
+            }
+            let idx = self.order[self.cursor];
+            self.cursor += 1;
+            let (pix, label) = self.spec.sample(self.split, idx);
+            x.extend_from_slice(&pix);
+            y_pm[i * cls + label] = 1.0;
+            labels.push(label);
+        }
+        Batch {
+            x,
+            y_pm,
+            labels,
+            n: b,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Dataset;
+
+    #[test]
+    fn batches_have_right_shapes() {
+        let spec = Dataset::FashionSyn.spec();
+        let mut l = Loader::new(spec.clone(), Split::Train, 8, 100, 1);
+        let b = l.next_batch();
+        assert_eq!(b.x.len(), 8 * spec.pixels());
+        assert_eq!(b.y_pm.len(), 8 * 10);
+        assert_eq!(b.labels.len(), 8);
+        for (i, &label) in b.labels.iter().enumerate() {
+            assert_eq!(b.y_pm[i * 10 + label], 1.0);
+            let ones = b.y_pm[i * 10..(i + 1) * 10]
+                .iter()
+                .filter(|&&v| v == 1.0)
+                .count();
+            assert_eq!(ones, 1);
+        }
+    }
+
+    #[test]
+    fn limit_caps_split() {
+        let spec = Dataset::FashionSyn.spec();
+        let l = Loader::new(spec, Split::Test, 4, 32, 1);
+        assert_eq!(l.len(), 32);
+        assert_eq!(l.n_batches_per_epoch(), 8);
+    }
+
+    #[test]
+    fn train_epochs_reshuffle_test_wraps_stably() {
+        let spec = Dataset::FashionSyn.spec();
+        let mut tr = Loader::new(spec.clone(), Split::Train, 16, 32, 7);
+        let e0: Vec<usize> =
+            (0..2).flat_map(|_| tr.next_batch().labels).collect();
+        let e1: Vec<usize> =
+            (0..2).flat_map(|_| tr.next_batch().labels).collect();
+        assert_ne!(e0, e1, "train epochs should reshuffle");
+        let mut te = Loader::new(spec, Split::Test, 16, 32, 7);
+        let t0: Vec<usize> =
+            (0..2).flat_map(|_| te.next_batch().labels).collect();
+        let t1: Vec<usize> =
+            (0..2).flat_map(|_| te.next_batch().labels).collect();
+        assert_eq!(t0, t1, "test order must be stable across wraps");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = Dataset::CifarSyn.spec();
+        let mut a = Loader::new(spec.clone(), Split::Train, 8, 64, 3);
+        let mut b = Loader::new(spec, Split::Train, 8, 64, 3);
+        assert_eq!(a.next_batch().x, b.next_batch().x);
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic dataset substrate (Table I stand-ins; DESIGN.md §6).
+//!
+//! No dataset downloads exist in this environment, and CapMin consumes
+//! only the MAC-level statistics of a trained BNN — a property of
+//! binarized dot products, not of specific images (the paper's own Fig. 1
+//! shows all five benchmarks produce near-identical histograms). Each
+//! generator is a procedural, deterministic, class-conditional +-1 image
+//! source with a difficulty knob chosen so the models train to accuracies
+//! in the same band the paper reports.
+
+pub mod loader;
+pub mod synth;
+
+pub use loader::{Batch, Loader, Split};
+pub use synth::{Dataset, DatasetSpec};

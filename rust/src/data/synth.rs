@@ -1,0 +1,304 @@
+//! Procedural class-conditional +-1 image generators — one per paper
+//! benchmark (Table I).
+//!
+//! Common construction: each (dataset, class) owns a fixed coarse +-1
+//! template (drawn once from a class-seeded stream); a sample is the
+//! template upsampled to the target resolution, randomly translated,
+//! with per-pixel sign-flip noise. Per-dataset parameters (template
+//! resolution, flip probability, jitter, channel coupling) give the five
+//! benchmarks distinct difficulty, mirroring the easy->hard spread of
+//! FashionMNIST -> Imagenette.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    FashionSyn,
+    KmnistSyn,
+    SvhnSyn,
+    CifarSyn,
+    ImagenetteSyn,
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// Model key in the AOT manifest.
+    pub model: &'static str,
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub classes: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Coarse template grid (template is `grid x grid`).
+    grid: usize,
+    /// Per-pixel sign-flip probability (difficulty).
+    flip_p: f64,
+    /// Max |translation| in pixels.
+    jitter: i64,
+    /// Paper dataset this stands in for.
+    pub paper_name: &'static str,
+    /// Base seed decorrelating datasets.
+    seed: u64,
+}
+
+impl Dataset {
+    pub fn all() -> [Dataset; 5] {
+        [
+            Dataset::FashionSyn,
+            Dataset::KmnistSyn,
+            Dataset::SvhnSyn,
+            Dataset::CifarSyn,
+            Dataset::ImagenetteSyn,
+        ]
+    }
+
+    pub fn from_name(name: &str) -> Option<Dataset> {
+        Dataset::all()
+            .into_iter()
+            .find(|d| d.spec().name == name)
+    }
+
+    pub fn spec(&self) -> DatasetSpec {
+        match self {
+            Dataset::FashionSyn => DatasetSpec {
+                name: "fashion_syn",
+                model: "vgg3",
+                channels: 1,
+                height: 28,
+                width: 28,
+                classes: 10,
+                n_train: 60000,
+                n_test: 10000,
+                grid: 7,
+                flip_p: 0.08,
+                jitter: 2,
+                paper_name: "FashionMNIST",
+                seed: 0xFA51_0001,
+            },
+            Dataset::KmnistSyn => DatasetSpec {
+                name: "kmnist_syn",
+                model: "vgg3",
+                channels: 1,
+                height: 28,
+                width: 28,
+                classes: 10,
+                n_train: 60000,
+                n_test: 10000,
+                grid: 9,
+                flip_p: 0.12,
+                jitter: 2,
+                paper_name: "KuzushijiMNIST",
+                seed: 0x4B4D_0002,
+            },
+            Dataset::SvhnSyn => DatasetSpec {
+                name: "svhn_syn",
+                model: "vgg7",
+                channels: 3,
+                height: 32,
+                width: 32,
+                classes: 10,
+                n_train: 73257,
+                n_test: 26032,
+                grid: 8,
+                flip_p: 0.15,
+                jitter: 3,
+                paper_name: "SVHN",
+                seed: 0x5348_0003,
+            },
+            Dataset::CifarSyn => DatasetSpec {
+                name: "cifar_syn",
+                model: "vgg7",
+                channels: 3,
+                height: 32,
+                width: 32,
+                classes: 10,
+                n_train: 50000,
+                n_test: 10000,
+                grid: 8,
+                flip_p: 0.18,
+                jitter: 3,
+                paper_name: "CIFAR10",
+                seed: 0xC1FA_0004,
+            },
+            Dataset::ImagenetteSyn => DatasetSpec {
+                name: "imagenette_syn",
+                model: "resnet18",
+                channels: 3,
+                height: 64,
+                width: 64,
+                classes: 10,
+                n_train: 9470,
+                n_test: 3925,
+                grid: 8,
+                flip_p: 0.15,
+                jitter: 4,
+                paper_name: "Imagenette",
+                seed: 0x1433_0005,
+            },
+        }
+    }
+}
+
+impl DatasetSpec {
+    pub fn pixels(&self) -> usize {
+        self.channels * self.height * self.width
+    }
+
+    /// Fixed +-1 template of one class (per channel).
+    fn template(&self, class: usize) -> Vec<f32> {
+        let mut rng =
+            Rng::new(self.seed ^ (class as u64).wrapping_mul(0x9E37));
+        let g = self.grid;
+        let mut t = vec![-1.0f32; self.channels * g * g];
+        // structured template: a few random filled rectangles per channel
+        // (gives spatial correlation, unlike iid noise)
+        for ch in 0..self.channels {
+            let base = ch * g * g;
+            // channel coupling: channel 0 pattern reused with flips for
+            // RGB sets so color carries class signal too
+            let n_rects = 2 + rng.below(3) as usize;
+            for _ in 0..n_rects {
+                let r0 = rng.below(g as u64) as usize;
+                let c0 = rng.below(g as u64) as usize;
+                let rh = 1 + rng.below((g - r0) as u64) as usize;
+                let rw = 1 + rng.below((g - c0) as u64) as usize;
+                for r in r0..(r0 + rh).min(g) {
+                    for c in c0..(c0 + rw).min(g) {
+                        t[base + r * g + c] = 1.0;
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Deterministic sample `idx` of `split`: (pixels CHW +-1, label).
+    pub fn sample(&self, split: Split, idx: usize) -> (Vec<f32>, usize) {
+        let split_salt = match split {
+            Split::Train => 0x7121u64,
+            Split::Test => 0x7E57u64,
+        };
+        let mut rng = Rng::new(
+            self.seed
+                ^ split_salt.wrapping_mul(0x2545_F491_4F6C_DD1D)
+                ^ (idx as u64).wrapping_mul(0x1000_0000_1B3),
+        );
+        let class = rng.below(self.classes as u64) as usize;
+        let t = self.template(class);
+        let g = self.grid;
+        let (h, w) = (self.height, self.width);
+        let (dy, dx) = (
+            rng.range_i64(-self.jitter, self.jitter),
+            rng.range_i64(-self.jitter, self.jitter),
+        );
+        let mut px = vec![-1.0f32; self.pixels()];
+        let sy = h as f64 / g as f64;
+        let sx = w as f64 / g as f64;
+        for ch in 0..self.channels {
+            for r in 0..h {
+                for c in 0..w {
+                    let tr = ((r as i64 - dy).clamp(0, h as i64 - 1) as f64
+                        / sy) as usize;
+                    let tc = ((c as i64 - dx).clamp(0, w as i64 - 1) as f64
+                        / sx) as usize;
+                    let mut v =
+                        t[ch * g * g + tr.min(g - 1) * g + tc.min(g - 1)];
+                    if rng.f64() < self.flip_p {
+                        v = -v;
+                    }
+                    px[ch * h * w + r * w + c] = v;
+                }
+            }
+        }
+        (px, class)
+    }
+}
+
+pub use super::loader::Split;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_samples() {
+        for ds in Dataset::all() {
+            let spec = ds.spec();
+            let (a, la) = spec.sample(Split::Train, 17);
+            let (b, lb) = spec.sample(Split::Train, 17);
+            assert_eq!(a, b);
+            assert_eq!(la, lb);
+        }
+    }
+
+    #[test]
+    fn splits_differ() {
+        let spec = Dataset::FashionSyn.spec();
+        let (a, _) = spec.sample(Split::Train, 3);
+        let (b, _) = spec.sample(Split::Test, 3);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn values_are_pm_one_and_shape_correct() {
+        for ds in Dataset::all() {
+            let spec = ds.spec();
+            let (px, label) = spec.sample(Split::Test, 0);
+            assert_eq!(px.len(), spec.pixels());
+            assert!(px.iter().all(|&v| v == 1.0 || v == -1.0));
+            assert!(label < spec.classes);
+        }
+    }
+
+    #[test]
+    fn classes_roughly_balanced() {
+        let spec = Dataset::CifarSyn.spec();
+        let mut counts = [0usize; 10];
+        for i in 0..2000 {
+            counts[spec.sample(Split::Train, i).1] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 120 && c < 280, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn same_class_samples_correlate_more_than_cross_class() {
+        let spec = Dataset::FashionSyn.spec();
+        let mut by_class: Vec<Vec<Vec<f32>>> = vec![vec![]; 10];
+        let mut i = 0;
+        while by_class.iter().filter(|v| v.len() >= 2).count() < 10 {
+            let (px, c) = spec.sample(Split::Train, i);
+            by_class[c].push(px);
+            i += 1;
+        }
+        let corr = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>()
+                / a.len() as f32
+        };
+        let mut same = 0.0;
+        for v in &by_class {
+            same += corr(&v[0], &v[1]);
+        }
+        same /= 10.0;
+        let mut cross = 0.0;
+        for c in 0..10 {
+            cross += corr(&by_class[c][0], &by_class[(c + 1) % 10][0]);
+        }
+        cross /= 10.0;
+        assert!(
+            same > cross + 0.1,
+            "class signal too weak: same {same} cross {cross}"
+        );
+    }
+
+    #[test]
+    fn from_name_roundtrip() {
+        for ds in Dataset::all() {
+            assert_eq!(Dataset::from_name(ds.spec().name), Some(ds));
+        }
+        assert_eq!(Dataset::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,51 @@
+//! Fig. 1 — absolute frequencies of MAC level occurrences (summed over
+//! layers) on the training sets, per benchmark.
+
+use anyhow::Result;
+
+use crate::coordinator::pipeline::Pipeline;
+use crate::coordinator::report::Report;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
+    -> Result<()> {
+    println!("== Fig. 1: F_MAC histograms (summed over layers) ==");
+    for &ds in datasets {
+        let spec = ds.spec();
+        let (_per, sum) = pipe.ensure_fmac(ds)?;
+        let mut t = Table::new(&["level", "count", "log10", "bar"]);
+        let max = *sum.counts.iter().max().unwrap() as f64;
+        for (m, &c) in sum.counts.iter().enumerate() {
+            let l10 = if c > 0 { (c as f64).log10() } else { 0.0 };
+            let bar_len = if max > 1.0 && c > 0 {
+                (40.0 * (c as f64).ln() / max.ln()).round() as usize
+            } else {
+                0
+            };
+            t.row(vec![
+                m.to_string(),
+                c.to_string(),
+                format!("{l10:.2}"),
+                "#".repeat(bar_len),
+            ]);
+        }
+        println!("\n-- {} (paper: {}) --", spec.name, spec.paper_name);
+        println!("{}", t.render());
+        println!(
+            "dynamic range (max/min nonzero): {:.1e}  | paper observes \
+             1e5..1e7 between peak and tails",
+            sum.dynamic_range()
+        );
+        let rep = Report::new(&pipe.store);
+        rep.save_series(
+            &format!("fig1_{}", spec.name),
+            vec![("dataset", Json::Str(spec.name.into()))],
+            vec![(
+                "counts",
+                sum.counts.iter().map(|&c| c as f64).collect(),
+            )],
+        )?;
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Fig. 3 — capacitor voltage over time for different initial currents,
+//! with clock-quantized spike times.
+
+use anyhow::Result;
+
+use crate::analog::{clock, rc};
+use crate::coordinator::pipeline::Pipeline;
+use crate::coordinator::report::Report;
+use crate::util::json::Json;
+use crate::util::table::{si, Table};
+
+pub fn run(pipe: &Pipeline) -> Result<()> {
+    let p = pipe.params();
+    let c = crate::analog::params::PAPER_BASELINE_C;
+    println!("== Fig. 3: V(t) for different I_init (C = {}) ==",
+             si(c, "F"));
+    let levels = [32usize, 24, 16, 8, 4, 1];
+    let mut t = Table::new(&[
+        "level M", "I_init", "ideal t_fire", "clock slot", "quantized",
+    ]);
+    for &m in &levels {
+        let i = rc::level_current(&p, m);
+        let tf = rc::level_spike_time(&p, c, m);
+        t.row(vec![
+            m.to_string(),
+            si(i, "A"),
+            si(tf, "s"),
+            clock::slot(&p, tf).to_string(),
+            si(clock::quantize(&p, tf), "s"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // curve data for the highest/lowest current (plotting series)
+    let rep = Report::new(&pipe.store);
+    for &m in &[32usize, 8, 1] {
+        let i = rc::level_current(&p, m);
+        let t_end = 2.0 * rc::level_spike_time(&p, c, m.max(1));
+        let curve = rc::charging_curve(&p, c, i, t_end.min(2e-6), 200);
+        rep.save_series(
+            &format!("fig3_level{m}"),
+            vec![("level", Json::Num(m as f64))],
+            vec![
+                ("t", curve.iter().map(|&(t, _)| t).collect()),
+                ("v", curve.iter().map(|&(_, v)| v).collect()),
+            ],
+        )?;
+    }
+    println!("(series saved to runs/results_fig3_level*.json; Vth = {} V)",
+             p.vth);
+    Ok(())
+}

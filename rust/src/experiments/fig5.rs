@@ -1,0 +1,41 @@
+//! Fig. 5 — role of the inclusion parameter k: window borders over the
+//! (combined) F_MAC histogram.
+
+use anyhow::Result;
+
+use crate::capmin::capmin::select_window_pmf;
+use crate::capmin::Fmac;
+use crate::coordinator::pipeline::Pipeline;
+use crate::util::table::Table;
+
+pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
+    -> Result<()> {
+    // the paper normalizes and sums F_MAC across benchmarks (Sec. IV-B)
+    let mut fmacs = vec![];
+    for &ds in datasets {
+        fmacs.push(pipe.ensure_fmac(ds)?.1);
+    }
+    let refs: Vec<&Fmac> = fmacs.iter().collect();
+    let combined = Fmac::combine_normalized(&refs);
+
+    println!("== Fig. 5: CapMin borders over the combined histogram ==");
+    let mut t = Table::new(&[
+        "k", "q_first", "q_last", "coverage", "clipped mass",
+    ]);
+    for k in [32, 24, 16, 14, 12, 8, 5] {
+        let w = select_window_pmf(&combined, k);
+        t.row(vec![
+            k.to_string(),
+            w.q_lo.to_string(),
+            w.q_hi.to_string(),
+            format!("{:.5}", w.coverage),
+            format!("{:.2e}", 1.0 - w.coverage),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "(all levels inside the borders get a unique spike time; mass \
+         outside is clipped per Eq. 4)"
+    );
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! Fig. 8 — accuracy over k for each benchmark, three curves:
+//!   circles:   CapMin clipping, no variation
+//!   stars:     CapMin under current variation (mean of n_seeds runs)
+//!   triangles: CapMin-V (merges from the k=16 set) under variation
+//!
+//! The error model reaches the BNN as a runtime CDF input to the AOT
+//! eval artifact, so the whole sweep reuses one compiled executable.
+
+use anyhow::Result;
+
+use crate::coordinator::pipeline::Pipeline;
+use crate::coordinator::report::{pct, Report};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+pub const CAPMINV_K_START: usize = 16; // paper Sec. IV-C
+
+pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
+    -> Result<()> {
+    let cfg = &pipe.cfg;
+    let ev = pipe.evaluator();
+    for &ds in datasets {
+        let spec = ds.spec();
+        let folded = pipe.ensure_folded(ds)?;
+        let (per_fmac, _) = pipe.ensure_fmac(ds)?;
+        println!(
+            "\n== Fig. 8 [{}]: accuracy over k (sigma_rel = {}, {} \
+             test samples, engine = {}) ==",
+            spec.name, cfg.sigma_rel, cfg.eval_limit, cfg.engine
+        );
+        let mut t = Table::new(&[
+            "k", "window", "CapMin clean", "CapMin +var", "CapMin-V +var",
+        ]);
+        let mut ks = vec![];
+        let mut clean = vec![];
+        let mut var = vec![];
+        let mut capv: Vec<f64> = vec![];
+        for &k in &cfg.ks {
+            // circles: clipping only
+            let hw_clean = pipe.hw_config(&per_fmac, k, 0.0, 0);
+            let a_clean = ev.accuracy(
+                spec.model,
+                &folded,
+                spec.clone(),
+                &hw_clean.ems,
+                cfg.eval_limit,
+                1,
+            )?;
+            // stars: clipping + variation
+            let hw_var =
+                pipe.hw_config(&per_fmac, k, cfg.sigma_rel, 0);
+            let a_var = ev.accuracy_multi_seed(
+                spec.model,
+                &folded,
+                spec.clone(),
+                &hw_var.ems,
+                cfg.eval_limit,
+                cfg.n_seeds,
+                100,
+            )?;
+            // triangles: CapMin-V from k=16 merged down to k spike times
+            let a_capv = if k < CAPMINV_K_START {
+                let phi = CAPMINV_K_START - k;
+                let hw_v = pipe.hw_config(
+                    &per_fmac,
+                    CAPMINV_K_START,
+                    cfg.sigma_rel,
+                    phi,
+                );
+                Some(ev.accuracy_multi_seed(
+                    spec.model,
+                    &folded,
+                    spec.clone(),
+                    &hw_v.ems,
+                    cfg.eval_limit,
+                    cfg.n_seeds,
+                    200,
+                )?)
+            } else {
+                None
+            };
+            let w = hw_clean.peak_window();
+            t.row(vec![
+                k.to_string(),
+                format!("[{},{}]", w.q_lo, w.q_hi),
+                pct(a_clean),
+                pct(a_var),
+                a_capv.map(pct).unwrap_or_else(|| "-".into()),
+            ]);
+            ks.push(k as f64);
+            clean.push(a_clean);
+            var.push(a_var);
+            capv.push(a_capv.unwrap_or(f64::NAN));
+        }
+        println!("{}", t.render());
+        let rep = Report::new(&pipe.store);
+        rep.save_series(
+            &format!("fig8_{}", spec.name),
+            vec![
+                ("dataset", Json::Str(spec.name.into())),
+                ("sigma_rel", Json::Num(cfg.sigma_rel)),
+                ("eval_limit", Json::Num(cfg.eval_limit as f64)),
+            ],
+            vec![
+                ("k", ks),
+                ("capmin_clean", clean),
+                ("capmin_var", var),
+                ("capminv_var", capv),
+            ],
+        )?;
+    }
+    Ok(())
+}
+
+/// Smallest k whose clean accuracy stays within `tol` of the k=32 clean
+/// accuracy (the paper's "1% accepted degradation" operating point).
+pub fn choose_k(ks: &[usize], clean: &[f64], tol: f64) -> usize {
+    let base = clean
+        .iter()
+        .zip(ks)
+        .find(|&(_, &k)| k == 32)
+        .map(|(&a, _)| a)
+        .unwrap_or(clean[0]);
+    let mut best = ks[0];
+    for (&k, &a) in ks.iter().zip(clean) {
+        if a >= base - tol && k < best {
+            best = k;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::choose_k;
+
+    #[test]
+    fn choose_k_respects_tolerance() {
+        let ks = [32, 24, 16, 14, 10, 6];
+        let clean = [0.90, 0.90, 0.895, 0.893, 0.85, 0.60];
+        assert_eq!(choose_k(&ks, &clean, 0.01), 14);
+        assert_eq!(choose_k(&ks, &clean, 0.06), 10);
+        assert_eq!(choose_k(&ks, &clean, 0.0005), 24);
+    }
+}

@@ -1,0 +1,134 @@
+//! Fig. 9 — capacitor size and latency of the neuron circuit: baseline
+//! (one spike time per level, SoA [3]) vs CapMin (k = 14 at 1% accuracy
+//! cost) vs CapMin-V (k = 16 capacitor, phi = 2 merges).
+//!
+//! Reported under both capacitor models (physics-mode prediction and the
+//! paper-calibrated fit; DESIGN.md §4): the *shape* — CapMin wins big,
+//! CapMin-V costs a small premium over CapMin — holds in both.
+
+use anyhow::Result;
+
+use crate::analog::capacitor::{paper_fit, CapacitorModel, CapacitorSolver};
+use crate::analog::cost::cost;
+use crate::analog::neuron::SpikeTimeSet;
+use crate::capmin::Fmac;
+use crate::coordinator::pipeline::Pipeline;
+use crate::coordinator::report::ratio;
+use crate::util::table::{si, Table};
+
+pub struct Fig9Row {
+    pub name: String,
+    pub k: usize,
+    pub c_physics: f64,
+    pub c_paperfit: f64,
+    pub grt: f64,
+    pub energy: f64,
+}
+
+pub fn compute(pipe: &Pipeline, per_fmac: &[Fmac], k_capmin: usize)
+    -> Vec<Fig9Row> {
+    let p = pipe.params();
+    let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+
+    // baseline: every level 1..=32 has a spike time
+    let c_base = solver.size_for_window(1, 32);
+    let set_base = SpikeTimeSet::new(&p, c_base, (1..=32).collect());
+    let cost_base = cost(&p, &set_base);
+
+    // CapMin at k_capmin: capacitor sized by the peak per-matmul window
+    let hw_min = pipe.hw_config(per_fmac, k_capmin, 0.0, 0);
+    let w = hw_min.peak_window().clone();
+    let c_min = hw_min.c;
+    let set_min = SpikeTimeSet::new(&p, c_min, w.levels());
+    let cost_min = cost(&p, &set_min);
+
+    // CapMin-V: k=16 capacitor, phi merges down to k_capmin spike times
+    let phi = super::fig8::CAPMINV_K_START - k_capmin;
+    let hw_v = pipe.hw_config(
+        per_fmac,
+        super::fig8::CAPMINV_K_START,
+        pipe.cfg.sigma_rel,
+        phi,
+    );
+    let c16 = hw_v.c;
+    let cost_v = crate::analog::cost::CircuitCost {
+        c: c16,
+        energy: 0.5 * c16 * p.vth * p.vth,
+        grt: hw_v.grt(),
+        area: c16 / crate::analog::cost::CAP_DENSITY,
+    };
+
+    vec![
+        Fig9Row {
+            name: "baseline (SoA [3])".into(),
+            k: 32,
+            c_physics: c_base,
+            c_paperfit: paper_fit(32),
+            grt: cost_base.grt,
+            energy: cost_base.energy,
+        },
+        Fig9Row {
+            name: format!("CapMin (k={k_capmin})"),
+            k: k_capmin,
+            c_physics: c_min,
+            c_paperfit: paper_fit(k_capmin),
+            grt: cost_min.grt,
+            energy: cost_min.energy,
+        },
+        Fig9Row {
+            name: format!(
+                "CapMin-V (k16 cap, phi={phi})"
+            ),
+            k: k_capmin,
+            c_physics: c16,
+            c_paperfit: paper_fit(super::fig8::CAPMINV_K_START),
+            grt: cost_v.grt,
+            energy: 0.5 * c16 * p.vth * p.vth,
+        },
+    ]
+}
+
+pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
+    -> Result<()> {
+    // the capacitor story is driven by the peak window, which Fig. 1
+    // shows is identical across benchmarks — one representative model's
+    // per-matmul histograms suffice (the paper's combined-F_MAC move)
+    let (per_fmac, _): (Vec<Fmac>, Fmac) =
+        pipe.ensure_fmac(datasets[0])?;
+
+    let k = pipe.cfg.ks.iter().copied().find(|&k| k == 14).unwrap_or(14);
+    let rows = compute(pipe, &per_fmac, k);
+    println!("\n== Fig. 9: capacitor size & latency at 1% accuracy cost ==");
+    let mut t = Table::new(&[
+        "config", "k", "C (physics)", "C (paper-fit)", "GRT", "E/submac",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            r.k.to_string(),
+            si(r.c_physics, "F"),
+            si(r.c_paperfit, "F"),
+            si(r.grt, "s"),
+            si(r.energy, "J"),
+        ]);
+    }
+    println!("{}", t.render());
+    let base = &rows[0];
+    let cm = &rows[1];
+    let cv = &rows[2];
+    println!(
+        "capacitor reduction  : physics {} | paper-fit {}  (paper: 14.08x)",
+        ratio(base.c_physics / cm.c_physics),
+        ratio(base.c_paperfit / cm.c_paperfit),
+    );
+    println!(
+        "latency (GRT) gain   : physics {}            (paper: ~14x)",
+        ratio(base.grt / cm.grt),
+    );
+    println!(
+        "CapMin-V premium     : physics {} | paper-fit {} (paper: +28%)",
+        ratio(cv.c_physics / cm.c_physics),
+        ratio(cv.c_paperfit / cm.c_paperfit),
+    );
+    Ok(())
+}

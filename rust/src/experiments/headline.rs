@@ -1,0 +1,86 @@
+//! Headline claims check: 14x capacitor reduction at <= 1% accuracy cost;
+//! CapMin-V variation tolerance for a small capacitor premium.
+
+use anyhow::Result;
+
+use crate::analog::capacitor::paper_fit;
+use crate::coordinator::pipeline::Pipeline;
+use crate::coordinator::report::{pct, ratio};
+use crate::util::json::Json;
+use crate::util::table::si;
+
+pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
+    -> Result<()> {
+    println!("== Headline reproduction summary ==");
+    // capacitor story is dataset-independent
+    let c32 = paper_fit(32);
+    let c14 = paper_fit(14);
+    let c16 = paper_fit(16);
+    println!(
+        "paper-fit model : C(32) = {}  C(14) = {}  -> {}",
+        si(c32, "F"),
+        si(c14, "F"),
+        ratio(c32 / c14)
+    );
+    println!(
+        "CapMin-V premium: C(16)/C(14) = {} (paper: +28%)",
+        ratio(c16 / c14)
+    );
+
+    // accuracy story: read the fig8 result series if present
+    for &ds in datasets {
+        let spec = ds.spec();
+        let path = pipe
+            .store
+            .path(&format!("results_fig8_{}.json", spec.name));
+        if !path.exists() {
+            println!(
+                "{}: no fig8 results yet (run `capmin fig8`)",
+                spec.name
+            );
+            continue;
+        }
+        let j = Json::parse(&std::fs::read_to_string(path)?)
+            .map_err(anyhow::Error::msg)?;
+        let s = j.req("series");
+        let ks: Vec<f64> =
+            s.req("k").as_arr().iter().map(|v| v.as_f64()).collect();
+        let clean: Vec<f64> = s
+            .req("capmin_clean")
+            .as_arr()
+            .iter()
+            .map(|v| v.as_f64())
+            .collect();
+        let var: Vec<f64> = s
+            .req("capmin_var")
+            .as_arr()
+            .iter()
+            .map(|v| v.as_f64())
+            .collect();
+        let capv: Vec<f64> = s
+            .req("capminv_var")
+            .as_arr()
+            .iter()
+            .map(|v| v.as_f64())
+            .collect();
+        let ku: Vec<usize> = ks.iter().map(|&k| k as usize).collect();
+        let k_star =
+            super::fig8::choose_k(&ku, &clean, 0.01);
+        let at = |k: usize, xs: &[f64]| {
+            ku.iter()
+                .position(|&kk| kk == k)
+                .map(|i| xs[i])
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "{}: clean@32 {} | clean@{k_star} {} (1% point) | \
+             +var@{k_star} {} | CapMin-V@{k_star} {}",
+            spec.name,
+            pct(at(32, &clean)),
+            pct(at(k_star, &clean)),
+            pct(at(k_star, &var)),
+            pct(at(k_star, &capv)),
+        );
+    }
+    Ok(())
+}

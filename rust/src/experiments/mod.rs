@@ -1,0 +1,25 @@
+//! Experiment drivers — one module per paper table/figure (DESIGN.md §5).
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod fig8;
+pub mod fig9;
+pub mod headline;
+pub mod sigma_sweep;
+pub mod tables;
+
+use crate::data::synth::Dataset;
+use crate::util::cli::Args;
+
+/// Datasets selected by --dataset (name | "all").
+pub fn selected_datasets(args: &Args) -> Vec<Dataset> {
+    match args.get("dataset") {
+        None => Dataset::all().to_vec(),
+        Some("all") => Dataset::all().to_vec(),
+        Some(name) => vec![Dataset::from_name(name)
+            .unwrap_or_else(|| panic!("unknown dataset {name}"))],
+    }
+}

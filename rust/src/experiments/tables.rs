@@ -1,0 +1,54 @@
+//! Tables I & II regeneration from the data registry and the manifest.
+
+use anyhow::Result;
+
+use crate::coordinator::pipeline::Pipeline;
+use crate::data::synth::Dataset;
+use crate::util::table::Table;
+
+pub fn table1(_pipe: &Pipeline) -> Result<()> {
+    println!("== Table I: datasets ==");
+    let mut t = Table::new(&[
+        "name", "stands in for", "#train", "#test", "dim", "#classes",
+    ]);
+    for ds in Dataset::all() {
+        let s = ds.spec();
+        t.row(vec![
+            s.name.into(),
+            s.paper_name.into(),
+            s.n_train.to_string(),
+            s.n_test.to_string(),
+            format!("({},{},{})", s.channels, s.height, s.width),
+            s.classes.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+pub fn table2(pipe: &Pipeline) -> Result<()> {
+    println!("== Table II: BNN architectures (from the AOT manifest) ==");
+    let mut t = Table::new(&[
+        "model", "architecture", "params", "matmuls", "MHL margin",
+    ]);
+    for (name, m) in &pipe.rt.manifest.models {
+        if name == "vgg3_tiny" {
+            continue; // test-only twin
+        }
+        t.row(vec![
+            name.clone(),
+            m.description.clone(),
+            m.n_params.to_string(),
+            m.n_matmuls.to_string(),
+            format!("{}", m.mhl_b),
+        ]);
+    }
+    println!("{}", t.render());
+    if !pipe.rt.manifest.full {
+        println!(
+            "(CPU-budget widths; `make artifacts` with --full restores \
+             the paper's exact channel plan — DESIGN.md §6)"
+        );
+    }
+    Ok(())
+}

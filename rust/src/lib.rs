@@ -1,0 +1,21 @@
+//! CapMin / CapMin-V — HW/SW codesign for robust and efficient binarized
+//! SNNs by capacitor minimization (CS.AR 2023 reproduction).
+//!
+//! Three-layer architecture (DESIGN.md §2):
+//!  * L3 (this crate): the codesign framework — analog IF-SNN circuit
+//!    substrate, CapMin/CapMin-V algorithms, data pipeline, experiment
+//!    coordinator, PJRT runtime.
+//!  * L2: JAX BNN graphs, AOT-lowered once to `artifacts/*.hlo.txt`.
+//!  * L1: the Pallas sub-MAC kernel inside those graphs.
+//!
+//! Python never runs on the request path: the `capmin` binary loads HLO
+//! text via PJRT and drives everything from Rust.
+
+pub mod analog;
+pub mod bnn;
+pub mod capmin;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,167 @@
+//! `capmin` — L3 coordinator CLI.
+//!
+//! Python ran once (`make artifacts`); everything below executes from
+//! Rust against the compiled PJRT artifacts.
+
+use anyhow::Result;
+
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::coordinator::pipeline::Pipeline;
+use capmin::experiments;
+use capmin::runtime::Runtime;
+use capmin::util::cli::Args;
+
+const HELP: &str = "\
+capmin — CapMin / CapMin-V reproduction (CS.AR 2023)
+
+USAGE: capmin <command> [options]
+
+experiment commands (paper artifacts):
+  table1          Table I  — datasets
+  table2          Table II — BNN architectures
+  fig1            F_MAC histograms per benchmark
+  fig3            capacitor charging curves + quantized spike times
+  fig5            CapMin window borders over the combined histogram
+  fig6            variation vs decision intervals (r_i analysis)
+  fig8            accuracy over k (CapMin / +variation / CapMin-V)
+  fig9            capacitor size & latency comparison
+  headline        summary of the paper's headline claims
+  ablation        design-choice ablations (window placement, merge rule)
+  sigma-sweep     variation-tolerance curve (CapMin vs CapMin-V)
+  all             tables + all figures in order
+
+pipeline commands:
+  train           train a model on a dataset (cached in runs/)
+  hist            extract F_MAC for a dataset
+  verify          cross-check rust engine determinism + artifact wiring
+  info            manifest / runtime info
+
+common options:
+  --dataset <name|all>     (fashion_syn kmnist_syn svhn_syn cifar_syn
+                            imagenette_syn)
+  --quick                  smoke-test scale (seconds)
+  --paper-scale            full Table I splits (hours)
+  --steps N --lr F --train-limit N --eval-limit N --hist-limit N
+  --sigma F --mc-samples N --seeds N --ks 32,28,...
+  --engine eval|evalp      jnp engine or Pallas-kernel engine artifact
+  --run-dir DIR            cache directory (default runs/)
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    if args.cmd == "help" || args.flag("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    let cfg = ExperimentConfig::from_args(&args);
+    let rt = Runtime::new()?;
+    let pipe = Pipeline::new(&rt, cfg)?;
+    let datasets = experiments::selected_datasets(&args);
+
+    match args.cmd.as_str() {
+        "info" => {
+            println!(
+                "platform: {} ({} devices)",
+                rt.client.platform_name(),
+                rt.client.device_count()
+            );
+            println!("artifacts: {}", rt.dir.display());
+            for (name, m) in &rt.manifest.models {
+                println!(
+                    "  {name}: {} | in {:?} | {} artifacts | {} params",
+                    m.description,
+                    m.in_shape,
+                    m.artifacts.len(),
+                    m.n_params
+                );
+            }
+        }
+        "table1" => experiments::tables::table1(&pipe)?,
+        "table2" => experiments::tables::table2(&pipe)?,
+        "fig1" => experiments::fig1::run(&pipe, &datasets)?,
+        "fig3" => experiments::fig3::run(&pipe)?,
+        "fig5" => experiments::fig5::run(&pipe, &datasets)?,
+        "fig6" => experiments::fig6::run(&pipe)?,
+        "fig8" => experiments::fig8::run(&pipe, &datasets)?,
+        "fig9" => experiments::fig9::run(&pipe, &datasets)?,
+        "headline" => experiments::headline::run(&pipe, &datasets)?,
+        "all" => {
+            experiments::tables::table1(&pipe)?;
+            experiments::tables::table2(&pipe)?;
+            experiments::fig1::run(&pipe, &datasets)?;
+            experiments::fig3::run(&pipe)?;
+            experiments::fig5::run(&pipe, &datasets)?;
+            experiments::fig6::run(&pipe)?;
+            experiments::fig8::run(&pipe, &datasets)?;
+            experiments::fig9::run(&pipe, &datasets)?;
+            experiments::headline::run(&pipe, &datasets)?;
+        }
+        "train" => {
+            for ds in datasets {
+                pipe.ensure_folded(ds)?;
+            }
+        }
+        "hist" => {
+            for ds in datasets {
+                let (_, sum) = pipe.ensure_fmac(ds)?;
+                println!(
+                    "{}: {} sub-MACs, dynamic range {:.1e}",
+                    ds.spec().name,
+                    sum.total(),
+                    sum.dynamic_range()
+                );
+            }
+        }
+        "ablation" => experiments::ablation::run(&pipe, &datasets)?,
+        "sigma-sweep" => experiments::sigma_sweep::run(&pipe, &datasets)?,
+        "verify" => verify(&pipe)?,
+        other => {
+            eprintln!("unknown command `{other}`\n\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+/// Sanity pass over the full pipeline wiring: trains (or loads) the tiny
+/// model's dataset, folds, builds an error model and checks the Rust
+/// bit-packed engine is deterministic on the folded weights. The
+/// bit-exact rust-vs-artifact comparison lives in tests/integration.rs.
+fn verify(pipe: &Pipeline) -> Result<()> {
+    use capmin::bnn::{BitMatrix, SubMacEngine};
+    use capmin::runtime::to_f32;
+
+    let rt = pipe.rt;
+    let ds = capmin::data::synth::Dataset::FashionSyn;
+    let model = rt.manifest.datasets["fashion_syn"].model.clone();
+    let mi = rt.manifest.model(&model);
+    println!("verify: {} via {} artifact", model, pipe.cfg.engine);
+
+    let folded = pipe.ensure_folded(ds)?;
+    let sig = &mi.artifacts["export"].outputs[0];
+    anyhow::ensure!(sig.name == "wb0");
+    let wb = to_f32(&folded[0])?;
+    let (o, kp) = (sig.shape[0], sig.shape[1]);
+    let beta = 9; // first conv of a 1-channel 3x3 model
+    let d = 37;
+    let mut rng = capmin::util::rng::Rng::new(99);
+    let x_rows: Vec<f32> = (0..d * kp).map(|_| rng.pm1(0.5)).collect();
+
+    let (per_fmac, _) = pipe.ensure_fmac(ds)?;
+    let hw = pipe.hw_config(&per_fmac, 14, 0.03, 0);
+    let em = hw.ems[0].clone();
+
+    let eng = SubMacEngine::new(o, kp, &wb, beta);
+    let xb = BitMatrix::pack(d, kp, &x_rows, false);
+    let a = eng.matmul_error(&xb, &em, 7, 0);
+    let b = eng.matmul_error(&xb, &em, 7, 0);
+    anyhow::ensure!(a == b, "engine must be deterministic");
+    println!(
+        "verify OK: {} outputs, range [{}, {}]",
+        a.len(),
+        a.iter().cloned().fold(f32::INFINITY, f32::min),
+        a.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+    );
+    println!("(bit-exact rust-vs-artifact check: cargo test)");
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! Typed view of `artifacts/manifest.json` (written by python aot.py).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> DType {
+        match s {
+            "f32" => DType::F32,
+            "u32" => DType::U32,
+            "i32" => DType::I32,
+            other => panic!("unknown dtype {other}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub kind: String,
+    pub path: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub arch: String,
+    pub description: String,
+    pub in_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub hist_batch: usize,
+    pub n_params: usize,
+    pub n_state: usize,
+    pub n_folded: usize,
+    pub n_matmuls: usize,
+    pub mhl_b: f64,
+    pub folded_names: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetInfo {
+    pub model: String,
+    pub shape: Vec<usize>,
+    pub classes: usize,
+    pub paper: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub full: bool,
+    pub array_size: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub datasets: BTreeMap<String, DatasetInfo>,
+}
+
+fn tensor_sigs(j: &Json) -> Vec<TensorSig> {
+    j.as_arr()
+        .iter()
+        .map(|t| TensorSig {
+            name: t.req("name").as_str().to_string(),
+            dtype: DType::parse(t.req("dtype").as_str()),
+            shape: t
+                .req("shape")
+                .as_arr()
+                .iter()
+                .map(|d| d.as_usize())
+                .collect(),
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("read manifest: {e}"))?;
+        let j = Json::parse(&text)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models").as_obj() {
+            let mut artifacts = BTreeMap::new();
+            for a in m.req("artifacts").as_arr() {
+                let sig = ArtifactSig {
+                    kind: a.req("kind").as_str().to_string(),
+                    path: a.req("path").as_str().to_string(),
+                    inputs: tensor_sigs(a.req("inputs")),
+                    outputs: tensor_sigs(a.req("outputs")),
+                };
+                artifacts.insert(sig.kind.clone(), sig);
+            }
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    arch: m.req("arch").as_str().to_string(),
+                    description: m.req("description").as_str().to_string(),
+                    in_shape: m
+                        .req("in_shape")
+                        .as_arr()
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect(),
+                    n_classes: m.req("n_classes").as_usize(),
+                    train_batch: m.req("train_batch").as_usize(),
+                    eval_batch: m.req("eval_batch").as_usize(),
+                    hist_batch: m.req("hist_batch").as_usize(),
+                    n_params: m.req("n_params").as_usize(),
+                    n_state: m.req("n_state").as_usize(),
+                    n_folded: m.req("n_folded").as_usize(),
+                    n_matmuls: m.req("n_matmuls").as_usize(),
+                    mhl_b: m.req("mhl_b").as_f64(),
+                    folded_names: m
+                        .req("folded_names")
+                        .as_arr()
+                        .iter()
+                        .map(|s| s.as_str().to_string())
+                        .collect(),
+                    artifacts,
+                },
+            );
+        }
+        let mut datasets = BTreeMap::new();
+        for (name, d) in j.req("datasets").as_obj() {
+            datasets.insert(
+                name.clone(),
+                DatasetInfo {
+                    model: d.req("model").as_str().to_string(),
+                    shape: d
+                        .req("shape")
+                        .as_arr()
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect(),
+                    classes: d.req("classes").as_usize(),
+                    paper: d.req("paper").as_str().to_string(),
+                },
+            );
+        }
+        Ok(Manifest {
+            full: j.req("full").as_bool(),
+            array_size: j.req("array_size").as_usize(),
+            models,
+            datasets,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> &ModelInfo {
+        self.models
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown model {name}"))
+    }
+
+    pub fn model_for_dataset(&self, ds: &str) -> &ModelInfo {
+        let d = self
+            .datasets
+            .get(ds)
+            .unwrap_or_else(|| panic!("unknown dataset {ds}"));
+        self.model(&d.model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.array_size, 32);
+        assert!(m.models.contains_key("vgg3_tiny"));
+        let t = m.model("vgg3_tiny");
+        assert!(t.artifacts.len() >= 6);
+        let eval = &t.artifacts["eval"];
+        assert_eq!(eval.inputs.len(), t.n_folded + 4);
+        assert_eq!(
+            eval.inputs[t.n_folded + 1].shape,
+            vec![t.n_matmuls, 33, 33],
+            "per-matmul cdf input"
+        );
+        assert_eq!(m.datasets.len(), 5);
+    }
+}

@@ -1,0 +1,223 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the Rust hot path (pattern from /opt/xla-example/load_hlo).
+//!
+//! HLO *text* is the interchange format — jax >= 0.5 serialized protos
+//! carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see aot.py docstring).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactSig, DType, Manifest, ModelInfo, TensorSig};
+
+/// Default artifacts directory: $CAPMIN_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("CAPMIN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// A compiled artifact with its manifest signature.
+pub struct Executable {
+    pub sig: ArtifactSig,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.run_borrowed(&refs)
+    }
+
+    /// Same, over borrowed literals — the training loop feeds the previous
+    /// step's outputs back without cloning the weight tensors.
+    pub fn run_borrowed(&self, inputs: &[&xla::Literal])
+        -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.sig.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.sig.path,
+                self.sig.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let bufs = self.exe.execute::<&xla::Literal>(inputs)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.sig.outputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} outputs, got {}",
+                self.sig.path,
+                self.sig.outputs.len(),
+                outs.len()
+            ));
+        }
+        Ok(outs)
+    }
+}
+
+/// The runtime: one CPU PJRT client + a compile cache keyed by artifact
+/// path (compilation happens once per process per artifact).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        Runtime::with_dir(&artifacts_dir())
+    }
+
+    pub fn with_dir(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)
+            .map_err(|e| anyhow!("manifest: {e} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load + compile (cached) the `kind` artifact of `model`.
+    pub fn load(&self, model: &str, kind: &str)
+        -> Result<std::sync::Arc<Executable>> {
+        let sig = self
+            .manifest
+            .model(model)
+            .artifacts
+            .get(kind)
+            .ok_or_else(|| anyhow!("no {kind} artifact for {model}"))?
+            .clone();
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(&sig.path) {
+                return Ok(e.clone());
+            }
+        }
+        let path = self.dir.join(&sig.path);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        let exec = std::sync::Arc::new(Executable { sig, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(exec.sig.path.clone(), exec.clone());
+        Ok(exec)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Literal helpers.
+// ----------------------------------------------------------------------
+
+/// f32 literal with shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(
+        shape.iter().product::<usize>(),
+        data.len(),
+        "shape/data mismatch"
+    );
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Zero-filled f32 literal (Adam state init).
+pub fn lit_zeros(shape: &[usize]) -> Result<xla::Literal> {
+    lit_f32(shape, &vec![0.0; shape.iter().product::<usize>().max(1)])
+}
+
+/// Scalar literals.
+pub fn lit_f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_u32_scalar(v: u32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// u32 vector literal (PRNG keys).
+pub fn lit_u32(shape: &[usize], data: &[u32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Extract an f32 literal to a host vector.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Scalar f32 extraction.
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = lit_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        let z = lit_zeros(&[4]).unwrap();
+        assert_eq!(to_f32(&z).unwrap(), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn loads_and_runs_init_artifact() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let rt = Runtime::new().unwrap();
+        let init = rt.load("vgg3_tiny", "init").unwrap();
+        let key = lit_u32(&[2], &[0, 42]).unwrap();
+        let outs = init.run(&[key]).unwrap();
+        let mi = rt.manifest.model("vgg3_tiny");
+        assert_eq!(outs.len(), mi.n_params + mi.n_state);
+        // params are finite floats
+        let w0 = to_f32(&outs[0]).unwrap();
+        assert!(w0.iter().all(|v| v.is_finite()));
+        assert!(w0.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn compile_cache_reuses_executables() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new().unwrap();
+        let a = rt.load("vgg3_tiny", "init").unwrap();
+        let b = rt.load("vgg3_tiny", "init").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn arity_errors_are_reported() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::new().unwrap();
+        let init = rt.load("vgg3_tiny", "init").unwrap();
+        assert!(init.run(&[]).is_err());
+    }
+}

@@ -1,0 +1,88 @@
+//! Tiny CLI argument helper (no clap offline; DESIGN.md §8).
+//!
+//! `Args::parse` splits `--key value` / `--flag` pairs after a subcommand.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub cmd: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: Iterator<Item = String>>(mut argv: I) -> Args {
+        let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+        let rest: Vec<String> = argv.collect();
+        let mut opts = BTreeMap::new();
+        let mut flags = vec![];
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    opts.insert(key.to_string(), rest[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                flags.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { cmd, opts, flags }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --{key}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --{key}")))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_opts_and_flags() {
+        let a = parse(&["fig8", "--dataset", "cifar_syn", "--quick",
+                        "--k", "14"]);
+        assert_eq!(a.cmd, "fig8");
+        assert_eq!(a.get("dataset"), Some("cifar_syn"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.usize_or("k", 0), 14);
+        assert_eq!(a.f64_or("sigma", 0.03), 0.03);
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = parse(&[]);
+        assert_eq!(a.cmd, "help");
+    }
+}

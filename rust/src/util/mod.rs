@@ -1,0 +1,12 @@
+//! Small self-contained utilities.
+//!
+//! This environment has no network access and only the crates vendored for
+//! the `xla` bridge, so the usual ecosystem picks (rand, serde, clap,
+//! criterion, rayon) are hand-rolled here at the size this project needs
+//! (DESIGN.md §8). Each has its own tests.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,111 @@
+//! ASCII table rendering for experiment reports (paper-style rows).
+
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row));
+        }
+        out
+    }
+}
+
+/// 3-sig-fig engineering formatting with SI prefix (e.g. 135.2e-12 F ->
+/// "135.2 pF").
+pub fn si(value: f64, unit: &str) -> String {
+    if value == 0.0 {
+        return format!("0 {unit}");
+    }
+    let prefixes: [(f64, &str); 7] = [
+        (1e-15, "f"),
+        (1e-12, "p"),
+        (1e-9, "n"),
+        (1e-6, "µ"),
+        (1e-3, "m"),
+        (1.0, ""),
+        (1e3, "k"),
+    ];
+    let a = value.abs();
+    let mut best = prefixes[prefixes.len() - 1];
+    for &(scale, _) in prefixes.iter().rev() {
+        if a >= scale {
+            best = (scale, prefixes.iter().find(|p| p.0 == scale).unwrap().1);
+        }
+    }
+    for &(scale, p) in &prefixes {
+        if a >= scale && a < scale * 1e3 {
+            best = (scale, p);
+            break;
+        }
+    }
+    format!("{:.4} {}{}", value / best.0, best.1, unit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["k", "C"]);
+        t.row(vec!["32".into(), "135.2 pF".into()]);
+        t.row(vec!["14".into(), "9.6 pF".into()]);
+        let s = t.render();
+        assert!(s.contains("| k  | C        |"), "{s}");
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(si(135.2e-12, "F"), "135.2000 pF");
+        assert_eq!(si(0.5e-9, "s"), "500.0000 ps");
+        assert_eq!(si(72e-6, "A"), "72.0000 µA");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Cross-layer integration tests: Rust substrates vs the AOT artifacts.
+//!
+//! The strongest signal in the repo: the Rust bit-packed engine, the jnp
+//! oracle artifact and the Pallas-kernel artifact must agree
+//! *bit-for-bit*, including in stochastic error-injection mode (shared
+//! counter-based PRNG over logical indices). Requires `make artifacts`.
+
+use capmin::bnn::{BitMatrix, ErrorModel, SubMacEngine};
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::coordinator::evaluator::stack_error_models;
+use capmin::coordinator::pipeline::Pipeline;
+use capmin::data::synth::Dataset;
+use capmin::data::{Loader, Split};
+use capmin::runtime::{
+    artifacts_dir, lit_f32, lit_u32_scalar, to_f32, Runtime,
+};
+use capmin::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping integration tests: run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new().unwrap())
+}
+
+fn rand_pm(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.pm1(0.5)).collect()
+}
+
+fn random_error_model(rng: &mut Rng) -> ErrorModel {
+    // random row-stochastic matrix with mass spread over +-2 diagonals
+    let mut full = vec![vec![0.0f64; 33]; 33];
+    for (m, row) in full.iter_mut().enumerate() {
+        let mut weights = [0.0f64; 5];
+        let mut sum = 0.0;
+        for w in weights.iter_mut() {
+            *w = rng.f64() + 0.05;
+            sum += *w;
+        }
+        for (d, w) in (-2i64..=2).zip(weights.iter()) {
+            let j = (m as i64 + d).clamp(0, 32) as usize;
+            row[j] += w / sum;
+        }
+    }
+    ErrorModel::from_full(&full)
+}
+
+/// Rust engine == Pallas kernel artifact, bit for bit, stochastic mode.
+#[test]
+fn rust_engine_matches_kernel_artifact_bit_exact() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("vgg3_tiny", "kernel").unwrap();
+    let sig = &exe.sig;
+    let (o, k) = (sig.inputs[0].shape[0], sig.inputs[0].shape[1]);
+    let d = sig.inputs[1].shape[1];
+
+    let mut rng = Rng::new(2024);
+    let wv = rand_pm(&mut rng, o * k);
+    let xv_colmajor = rand_pm(&mut rng, k * d); // [k, d] row-major
+    let em = random_error_model(&mut rng);
+
+    for seed in [0u32, 7, 0xDEAD_BEEF] {
+        // artifact side
+        let outs = exe
+            .run(&[
+                lit_f32(&[o, k], &wv).unwrap(),
+                lit_f32(&[k, d], &xv_colmajor).unwrap(),
+                lit_f32(&[33, 33], &em.cdf).unwrap(),
+                lit_f32(&[33], &em.vals).unwrap(),
+                lit_u32_scalar(seed),
+            ])
+            .unwrap();
+        let artifact_out = to_f32(&outs[0]).unwrap();
+
+        // rust side: engine wants X rows = D entries of length k
+        let mut x_rows = vec![0.0f32; d * k];
+        for ki in 0..k {
+            for di in 0..d {
+                x_rows[di * k + ki] = xv_colmajor[ki * d + di];
+            }
+        }
+        // kernel artifact was lowered with beta = padded k and salt = 0
+        let eng = SubMacEngine::new(o, k, &wv, k);
+        let xb = BitMatrix::pack(d, k, &x_rows, false);
+        let rust_out = eng.matmul_error(&xb, &em, seed, 0);
+
+        assert_eq!(
+            rust_out, artifact_out,
+            "bit-exact mismatch at seed {seed}"
+        );
+    }
+}
+
+/// jnp-engine artifact == Pallas-engine artifact on a whole model
+/// forward pass, stochastic mode (bit-exact by shared PRNG).
+#[test]
+fn eval_and_evalp_artifacts_bit_identical() {
+    let Some(rt) = runtime() else { return };
+    let mi = rt.manifest.model("vgg3_tiny").clone();
+    let init = rt.load("vgg3_tiny", "init").unwrap();
+    let export = rt.load("vgg3_tiny", "export").unwrap();
+    let key = capmin::runtime::lit_u32(&[2], &[1, 2]).unwrap();
+    let ps = init.run(&[key]).unwrap();
+    let folded = export.run(&ps).unwrap();
+
+    let mut rng = Rng::new(5);
+    let eb = mi.eval_batch;
+    let px: usize = mi.in_shape.iter().product();
+    let x = rand_pm(&mut rng, eb * px);
+    let ems: Vec<ErrorModel> = (0..mi.n_matmuls)
+        .map(|_| random_error_model(&mut rng))
+        .collect();
+    let (cdf_v, vals_v) = stack_error_models(&ems);
+
+    let x_shape = [&[eb], mi.in_shape.as_slice()].concat();
+    let mut run = |kind: &str| -> Vec<f32> {
+        let exe = rt.load("vgg3_tiny", kind).unwrap();
+        let mut inputs: Vec<xla::Literal> =
+            folded.iter().map(clone_lit).collect();
+        inputs.push(lit_f32(&x_shape, &x).unwrap());
+        inputs
+            .push(lit_f32(&[mi.n_matmuls, 33, 33], &cdf_v).unwrap());
+        inputs.push(lit_f32(&[mi.n_matmuls, 33], &vals_v).unwrap());
+        inputs.push(lit_u32_scalar(99));
+        to_f32(&exe.run(&inputs).unwrap()[0]).unwrap()
+    };
+    let a = run("eval");
+    let b = run("evalp");
+    assert_eq!(a, b, "jnp and Pallas engines must agree bit-for-bit");
+    assert!(a.iter().all(|v| v.is_finite()));
+}
+
+fn clone_lit(l: &xla::Literal) -> xla::Literal {
+    // Literal has no Clone; round-trip through host (test-only helper)
+    let shape: Vec<usize> = l
+        .array_shape()
+        .unwrap()
+        .dims()
+        .iter()
+        .map(|&d| d as usize)
+        .collect();
+    lit_f32(&shape, &to_f32(l).unwrap()).unwrap()
+}
+
+/// Identity error model through the eval artifact == ideal accuracy
+/// computed by the hist artifact's clean logits, sample for sample.
+#[test]
+fn identity_error_model_matches_clean_forward() {
+    let Some(rt) = runtime() else { return };
+    let mi = rt.manifest.model("vgg3_tiny").clone();
+    let init = rt.load("vgg3_tiny", "init").unwrap();
+    let export = rt.load("vgg3_tiny", "export").unwrap();
+    let key = capmin::runtime::lit_u32(&[2], &[3, 4]).unwrap();
+    let ps = init.run(&[key]).unwrap();
+    let folded = export.run(&ps).unwrap();
+
+    let spec = Dataset::FashionSyn.spec();
+    let mut loader =
+        Loader::new(spec, Split::Test, mi.eval_batch, 64, 11);
+    let batch = loader.next_batch();
+    let x_shape = [&[mi.eval_batch], mi.in_shape.as_slice()].concat();
+    let x = lit_f32(&x_shape, &batch.x).unwrap();
+
+    // eval with identity per-matmul models
+    let ems: Vec<ErrorModel> =
+        (0..mi.n_matmuls).map(|_| ErrorModel::identity()).collect();
+    let (cdf_v, vals_v) = stack_error_models(&ems);
+    let eval = rt.load("vgg3_tiny", "eval").unwrap();
+    let mut inputs: Vec<xla::Literal> =
+        folded.iter().map(clone_lit).collect();
+    inputs.push(x);
+    inputs.push(lit_f32(&[mi.n_matmuls, 33, 33], &cdf_v).unwrap());
+    inputs.push(lit_f32(&[mi.n_matmuls, 33], &vals_v).unwrap());
+    inputs.push(lit_u32_scalar(0));
+    let eval_logits = to_f32(&eval.run(&inputs).unwrap()[0]).unwrap();
+
+    // hist artifact computes the exact (ungrouped) logits — but on the
+    // hist batch size; reuse eval batch if equal, else skip comparison
+    if mi.hist_batch == mi.eval_batch {
+        let hist = rt.load("vgg3_tiny", "hist").unwrap();
+        let mut hin: Vec<xla::Literal> =
+            folded.iter().map(clone_lit).collect();
+        hin.push(lit_f32(&x_shape, &batch.x).unwrap());
+        let outs = hist.run(&hin).unwrap();
+        let clean_logits = to_f32(&outs[1]).unwrap();
+        for (a, b) in eval_logits.iter().zip(clean_logits.iter()) {
+            assert!(
+                (a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                "identity model must reproduce clean logits: {a} vs {b}"
+            );
+        }
+    }
+}
+
+/// Full-pipeline smoke: train tiny model, fold, build hardware configs,
+/// and check the accuracy ordering the paper's Fig. 8 rests on.
+#[test]
+fn pipeline_smoke_orderings() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = ExperimentConfig::default();
+    cfg.train_steps = 40;
+    cfg.train_limit = 256;
+    cfg.eval_limit = 64;
+    cfg.hist_limit = 64;
+    cfg.mc_samples = 200;
+    cfg.run_dir = std::env::temp_dir()
+        .join(format!("capmin_it_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string();
+    // use the tiny model by overriding the dataset->model binding via a
+    // direct trainer run on vgg3_tiny
+    let pipe = Pipeline::new(&rt, cfg).unwrap();
+    // patch: train vgg3_tiny through the Trainer directly
+    let trainer = capmin::coordinator::trainer::Trainer::new(&rt);
+    let spec = Dataset::FashionSyn.spec();
+    let mi = rt.manifest.model("vgg3_tiny").clone();
+    let mut loader = Loader::new(
+        spec.clone(),
+        Split::Train,
+        mi.train_batch,
+        256,
+        1,
+    );
+    let trained = trainer
+        .train("vgg3_tiny", &mut loader, 40, 1e-2, 1000, 3, &mut |_, _| {})
+        .unwrap();
+    let folded = trainer.export(&trained).unwrap();
+
+    let hist = capmin::coordinator::histogrammer::Histogrammer::new(&rt);
+    let hres = hist
+        .extract_dataset("vgg3_tiny", &folded, spec.clone(), 64, 9)
+        .unwrap();
+    assert!(hres.accuracy > 0.3, "tiny model should learn something");
+    // histogram sanity: peak near mid levels for the big matmuls
+    let total = hres.sum.total();
+    assert!(total > 0);
+
+    let ev = capmin::coordinator::evaluator::Evaluator::new(&rt, "eval");
+    let hw32 = pipe.hw_config(&hres.per_matmul, 32, 0.0, 0);
+    let a32 = ev
+        .accuracy("vgg3_tiny", &folded, spec.clone(), &hw32.ems, 64, 1)
+        .unwrap();
+    let hw6 = pipe.hw_config(&hres.per_matmul, 6, 0.0, 0);
+    let a6 = ev
+        .accuracy("vgg3_tiny", &folded, spec.clone(), &hw6.ems, 64, 1)
+        .unwrap();
+    // k=32 is lossless: must match the clean accuracy of the same split
+    assert!(a32 >= a6 - 1e-9, "more levels can't hurt: {a32} vs {a6}");
+    // capacitor ordering
+    assert!(hw6.c < hw32.c, "smaller k -> smaller capacitor");
+}

@@ -1,0 +1,304 @@
+//! Property-based tests over the substrates' invariants (hand-rolled
+//! driver — no proptest offline; DESIGN.md §8). Each property runs many
+//! randomized cases from a deterministic seed and reports the failing
+//! case's seed on panic.
+
+use capmin::analog::capacitor::{CapacitorModel, CapacitorSolver};
+use capmin::analog::montecarlo::MonteCarlo;
+use capmin::analog::neuron::SpikeTimeSet;
+use capmin::analog::params::AnalogParams;
+use capmin::analog::pmap::{to_cdf_inputs, Pmap};
+use capmin::analog::{clock, rc};
+use capmin::bnn::{BitMatrix, ErrorModel, SubMacEngine};
+use capmin::capmin::capmin::select_window;
+use capmin::capmin::capmin_v::capmin_v;
+use capmin::capmin::Fmac;
+use capmin::util::rng::Rng;
+
+/// Mini property-test driver: `cases` randomized executions, seed
+/// reported on failure.
+fn forall(name: &str, cases: usize, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xBA5E_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f(&mut rng)),
+        );
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at seed {seed:#x}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_fmac(rng: &mut Rng) -> Fmac {
+    // unimodal-ish histogram with a random peak and sharpness
+    let peak = 4 + rng.below(25) as usize;
+    let sharp = 1.5 + 5.0 * rng.f64();
+    let mut f = Fmac::new();
+    for m in 0..33 {
+        let d = m as f64 - peak as f64;
+        f.counts[m] =
+            (1e9 * (-d * d / (2.0 * sharp * sharp)).exp()) as u64;
+    }
+    f
+}
+
+fn random_pmap(rng: &mut Rng, lo: usize, k: usize) -> Pmap {
+    let levels: Vec<usize> = (lo..lo + k).collect();
+    let p: Vec<Vec<f64>> = (0..k)
+        .map(|_| {
+            let mut row: Vec<f64> =
+                (0..k).map(|_| rng.f64() + 1e-3).collect();
+            let s: f64 = row.iter().sum();
+            row.iter_mut().for_each(|v| *v /= s);
+            row
+        })
+        .collect();
+    Pmap { levels, p }
+}
+
+#[test]
+fn prop_capacitor_monotone_in_window_top() {
+    let p = AnalogParams::paper_calibrated();
+    let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+    forall("cap monotone", 200, |rng| {
+        let hi = 2 + rng.below(31) as usize;
+        let lo = 1 + rng.below(hi as u64 - 1) as usize;
+        let c1 = solver.size_for_window(lo, hi);
+        let c2 = solver.size_for_window(lo, (hi + 1).min(32));
+        assert!(c2 >= c1, "C must grow with q_hi: [{lo},{hi}]");
+        // and sizing is independent of q_lo (top-dominated)
+        let c3 = solver.size_for_window(1, hi);
+        assert!((c3 - c1).abs() < 1e-18);
+    });
+}
+
+#[test]
+fn prop_sized_window_always_feasible() {
+    let p = AnalogParams::paper_calibrated();
+    let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+    forall("sized window feasible", 100, |rng| {
+        let hi = 2 + rng.below(31) as usize;
+        let lo = 1 + rng.below(hi as u64 - 1) as usize;
+        let c = solver.size_for_window(lo, hi);
+        let set = SpikeTimeSet::new(&p, c, (lo..=hi).collect());
+        assert!(set.distinct(&p), "[{lo},{hi}] at sized C");
+    });
+}
+
+#[test]
+fn prop_select_window_contains_peak_and_is_width_k() {
+    forall("window contains peak", 300, |rng| {
+        let f = random_fmac(rng);
+        let peak = (1..33)
+            .max_by_key(|&m| f.counts[m])
+            .unwrap();
+        let k = 1 + rng.below(32) as usize;
+        let w = select_window(&f, k);
+        assert_eq!(w.q_hi - w.q_lo + 1, k);
+        assert!(w.q_lo >= 1 && w.q_hi <= 32);
+        if k >= 3 {
+            assert!(
+                w.q_lo <= peak && peak <= w.q_hi,
+                "window {w:?} must contain peak {peak}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_select_window_coverage_monotone_in_k() {
+    forall("coverage monotone", 100, |rng| {
+        let f = random_fmac(rng);
+        let mut prev = -1.0;
+        for k in 1..=32 {
+            let w = select_window(&f, k);
+            assert!(
+                w.coverage >= prev - 1e-12,
+                "coverage must grow with k ({k})"
+            );
+            prev = w.coverage;
+        }
+        // k=32 covers exactly the mass of spike-bearing levels 1..=32
+        // (level 0 never has a spike time and is clipped by design)
+        let pmf = f.pmf();
+        let spike_mass: f64 = pmf[1..].iter().sum();
+        assert!(
+            (prev - spike_mass).abs() < 1e-9,
+            "k=32 coverage {prev} vs spike mass {spike_mass}"
+        );
+    });
+}
+
+#[test]
+fn prop_capmin_v_preserves_stochasticity_and_improves_min_diag() {
+    forall("capmin-v invariants", 200, |rng| {
+        let k = 4 + rng.below(12) as usize;
+        let lo = 1 + rng.below((33 - k) as u64 - 1) as usize;
+        let pm = random_pmap(rng, lo, k);
+        let phi = 1 + rng.below(k as u64 - 1) as usize;
+        let before_min = pm
+            .diag()
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        let res = capmin_v(pm, phi);
+        assert_eq!(res.levels.len(), k - phi);
+        for s in res.pmap.row_sums() {
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+        let after_min = res
+            .pmap
+            .diag()
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!(after_min >= before_min - 1e-12);
+        // surviving levels are a subset of the originals, still sorted
+        assert!(res.levels.windows(2).all(|w| w[0] < w[1]));
+    });
+}
+
+#[test]
+fn prop_cdf_inputs_well_formed_for_any_padded_pmap() {
+    forall("cdf well-formed", 200, |rng| {
+        let k = 2 + rng.below(14) as usize;
+        let lo = 1 + rng.below((33 - k) as u64 - 1) as usize;
+        let mut pm = random_pmap(rng, lo, k);
+        for _ in 0..rng.below(3) {
+            if pm.k() > 2 {
+                let j = pm.argmin_diag();
+                let dst = if j == 0 { 1 } else { j - 1 };
+                pm.merge_into(j, dst);
+            }
+        }
+        let (cdf, vals) = to_cdf_inputs(&pm.pad_to_full());
+        assert_eq!(vals.len(), 33);
+        for m in 0..33 {
+            let row = &cdf[m * 33..(m + 1) * 33];
+            assert_eq!(row[32], 1.0);
+            for j in 1..33 {
+                assert!(row[j] >= row[j - 1]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_engine_exact_equals_dense_dot() {
+    forall("engine == dense", 60, |rng| {
+        let o = 1 + rng.below(12) as usize;
+        let k = 1 + rng.below(200) as usize;
+        let d = 1 + rng.below(20) as usize;
+        let kp = k.div_ceil(32) * 32;
+        let mut w = vec![1.0f32; o * kp];
+        let mut x = vec![-1.0f32; d * kp];
+        for oi in 0..o {
+            for ki in 0..k {
+                w[oi * kp + ki] = rng.pm1(0.5);
+            }
+        }
+        for di in 0..d {
+            for ki in 0..k {
+                x[di * kp + ki] = rng.pm1(0.5);
+            }
+        }
+        let eng = SubMacEngine::new(o, kp, &w, k);
+        let xb = BitMatrix::pack(d, kp, &x, false);
+        let got = eng.matmul_exact(&xb);
+        for oi in 0..o {
+            for di in 0..d {
+                let mut dot = 0.0f32;
+                for ki in 0..k {
+                    dot += w[oi * kp + ki] * x[di * kp + ki];
+                }
+                assert_eq!(got[oi * d + di], dot, "({oi},{di})");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_error_model_decode_matches_row_distribution() {
+    forall("decode ~ matrix row", 20, |rng| {
+        let em = {
+            let mut full = vec![vec![0.0f64; 33]; 33];
+            for (m, row) in full.iter_mut().enumerate() {
+                let spread = 1 + rng.below(3) as i64;
+                let mut total = 0.0;
+                for d in -spread..=spread {
+                    let j = (m as i64 + d).clamp(0, 32) as usize;
+                    let w = rng.f64() + 0.1;
+                    row[j] += w;
+                    total += w;
+                }
+                row.iter_mut().for_each(|v| *v /= total);
+            }
+            ErrorModel::from_full(&full)
+        };
+        // empirical frequency of decode(m, u) over uniform u
+        let m = rng.below(33) as usize;
+        let n = 20_000;
+        let mut counts = [0usize; 33];
+        let mut r2 = rng.split(1);
+        for _ in 0..n {
+            let u = r2.f32();
+            counts[em.decode(m, u) as usize] += 1;
+        }
+        for j in 0..33 {
+            let want = em.cdf[m * 33 + j]
+                - if j > 0 { em.cdf[m * 33 + j - 1] } else { 0.0 };
+            let got = counts[j] as f32 / n as f32;
+            assert!(
+                (got - want).abs() < 0.02,
+                "level {m}->{j}: want {want} got {got}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_spike_decode_roundtrip_with_clipping() {
+    let p = AnalogParams::paper_calibrated();
+    let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+    forall("decode == clip", 100, |rng| {
+        let hi = 3 + rng.below(30) as usize;
+        let lo = 1 + rng.below(hi as u64 - 2) as usize;
+        let c = solver.size_for_window(lo, hi);
+        let set = SpikeTimeSet::new(&p, c, (lo..=hi).collect());
+        for m in 0..=32usize {
+            let t = clock::quantize(&p, rc::level_spike_time(&p, c, m));
+            assert_eq!(
+                set.decode(t),
+                m.clamp(lo, hi),
+                "level {m} window [{lo},{hi}]"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_mc_pmap_diag_improves_with_smaller_sigma() {
+    let p = AnalogParams::paper_calibrated();
+    let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+    forall("diag vs sigma", 10, |rng| {
+        let hi = 20 + rng.below(12) as usize;
+        let lo = hi - 10;
+        let c = solver.size_for_window(lo, hi);
+        let mean_diag = |sigma: f64, rng: &mut Rng| {
+            let pp = p.with_sigma(sigma);
+            let set = SpikeTimeSet::new(&pp, c, (lo..=hi).collect());
+            let mc = MonteCarlo::new(pp).with_samples(400);
+            let pm = mc.pmap(&set, rng);
+            let d = pm.diag();
+            d.iter().sum::<f64>() / d.len() as f64
+        };
+        let d_small = mean_diag(0.005, rng);
+        let d_large = mean_diag(0.08, rng);
+        assert!(
+            d_small > d_large,
+            "less variation -> better diagonal ({d_small} vs {d_large})"
+        );
+    });
+}
