@@ -5,36 +5,36 @@
 //!
 //! Trains the full vgg3 BNN on the fashion_syn benchmark through the AOT
 //! train-step artifact (L2 fwd/bwd + Adam, Rust loop), logs the loss
-//! curve, folds to hardware tensors, extracts F_MAC, runs the CapMin
-//! k-sweep with variation and CapMin-V through BOTH eval engines (jnp
-//! oracle and the L1 Pallas kernel), and prints the paper-shaped summary.
+//! curve, folds to hardware tensors, extracts F_MAC, queries the CapMin
+//! k-sweep operating points with variation and CapMin-V from one
+//! `DesignSession`, evaluates them through BOTH eval engines (jnp
+//! oracle and the L1 Pallas kernel), and prints the paper-shaped
+//! summary.
 
 use anyhow::Result;
 use capmin::coordinator::config::ExperimentConfig;
 use capmin::coordinator::evaluator::Evaluator;
-use capmin::coordinator::pipeline::Pipeline;
 use capmin::data::synth::Dataset;
-use capmin::runtime::Runtime;
+use capmin::session::{DesignSession, OperatingPointSpec};
 use capmin::util::cli::Args;
 use capmin::util::table::{si, Table};
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let rt = Runtime::new()?;
-    let mut cfg = ExperimentConfig::from_args(&args);
+    let mut cfg = ExperimentConfig::from_args(&args)?;
     if args.get("steps").is_none() {
         cfg.train_steps = 300;
     }
     cfg.run_dir = args.str_or("run-dir", "runs/end_to_end");
-    let pipe = Pipeline::new(&rt, cfg)?;
+    let session = DesignSession::builder().config(cfg).build()?;
     let ds = Dataset::FashionSyn;
     let spec = ds.spec();
 
     let t0 = std::time::Instant::now();
     // 1-2. train + fold (cached if a previous run exists)
-    let folded = pipe.ensure_folded(ds)?;
+    let folded = session.folded(ds)?;
     // loss curve from the run store
-    if let Ok(ts) = pipe.store.load_tensors(&format!(
+    if let Ok(ts) = session.store().load_tensors(&format!(
         "{}_losses.capt",
         spec.name
     )) {
@@ -49,23 +49,30 @@ fn main() -> Result<()> {
     }
 
     // 3. F_MAC
-    let (per_fmac, sum) = pipe.ensure_fmac(ds)?;
+    let (_per_fmac, sum) = session.fmac(ds)?;
     println!(
         "F_MAC: {} sub-MACs, dynamic range {:.1e} (paper: 1e5..1e7)",
         sum.total(),
         sum.dynamic_range()
     );
 
-    // 4. k-sweep through BOTH engines at three operating points
+    // 4. k-sweep through BOTH engines at three operating points —
+    // hardware-only queries here; the engines are driven explicitly
+    // below because the Pallas interpret path needs a smaller limit
+    let sigma = session.config().sigma_rel;
     let mut table = Table::new(&[
         "k", "C (physics)", "engine", "clean", "+variation", "CapMin-V",
     ]);
     for &k in &[32usize, 14, 8] {
-        let hw_clean = pipe.hw_config(&per_fmac, k, 0.0, 0);
-        let hw_var = pipe.hw_config(&per_fmac, k, pipe.cfg.sigma_rel, 0);
+        let hw_clean =
+            session.query(&OperatingPointSpec::new(ds, k, 0.0, 0))?;
+        let hw_var =
+            session.query(&OperatingPointSpec::new(ds, k, sigma, 0))?;
         let phi = 16usize.saturating_sub(k);
         let hw_v = if k < 16 {
-            Some(pipe.hw_config(&per_fmac, 16, pipe.cfg.sigma_rel, phi))
+            Some(session.query(&OperatingPointSpec::new(
+                ds, 16, sigma, phi,
+            ))?)
         } else {
             None
         };
@@ -75,23 +82,23 @@ fn main() -> Result<()> {
                 continue;
             }
             let limit = if engine == "evalp" {
-                pipe.cfg.eval_limit.min(32)
+                session.config().eval_limit.min(32)
             } else {
-                pipe.cfg.eval_limit
+                session.config().eval_limit
             };
-            let ev = Evaluator::new(&rt, engine);
+            let ev = Evaluator::new(session.runtime()?, engine);
             let a_clean = ev.accuracy(
-                spec.model, &folded, spec.clone(), &hw_clean.ems,
-                limit, 1)?;
+                spec.model, folded.as_slice(), spec.clone(),
+                &hw_clean.ems, limit, 1)?;
             let a_var = ev.accuracy(
-                spec.model, &folded, spec.clone(), &hw_var.ems,
-                limit, 100)?;
+                spec.model, folded.as_slice(), spec.clone(),
+                &hw_var.ems, limit, 100)?;
             let a_v = match &hw_v {
                 Some(hw) => format!(
                     "{:.1}%",
                     100.0 * ev.accuracy(
-                        spec.model, &folded, spec.clone(), &hw.ems,
-                        limit, 200)?
+                        spec.model, folded.as_slice(), spec.clone(),
+                        &hw.ems, limit, 200)?
                 ),
                 None => "-".into(),
             };

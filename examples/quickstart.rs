@@ -1,87 +1,78 @@
-//! Quickstart: the whole CapMin flow on the tiny model, in under a
-//! minute on one CPU core.
+//! Quickstart: the whole CapMin flow through the `DesignSession` API,
+//! in about a minute on one CPU core.
 //!
 //!   cargo run --release --example quickstart
 //!
-//! Steps: synthesize data -> train a tiny BNN via the AOT train-step
-//! artifact -> fold to hardware tensors -> extract F_MAC -> pick a
-//! CapMin window -> size the capacitor -> evaluate accuracy with the
-//! error model injected at sub-MAC granularity.
+//! One session owns the runtime, the run store and the config; typed
+//! operating-point queries do the rest (train -> fold -> F_MAC ->
+//! CapMin window -> capacitor sizing -> error model -> accuracy), with
+//! every stage cached so a second run answers from `runs/points/`.
 
 use anyhow::Result;
 use capmin::coordinator::config::ExperimentConfig;
-use capmin::coordinator::evaluator::Evaluator;
-use capmin::coordinator::histogrammer::Histogrammer;
-use capmin::coordinator::pipeline::Pipeline;
-use capmin::coordinator::trainer::Trainer;
 use capmin::data::synth::Dataset;
-use capmin::data::{Loader, Split};
-use capmin::runtime::Runtime;
+use capmin::session::{DesignSession, OperatingPointSpec};
 use capmin::util::table::si;
 
 fn main() -> Result<()> {
-    let rt = Runtime::new()?;
-    let model = "vgg3_tiny";
-    let spec = Dataset::FashionSyn.spec();
-    let mi = rt.manifest.model(model).clone();
-    println!("model: {} ({})", model, mi.description);
-
-    // 1. train via the AOT train-step artifact (Rust owns the loop)
-    let trainer = Trainer::new(&rt);
-    let mut loader =
-        Loader::new(spec.clone(), Split::Train, mi.train_batch, 512, 1);
-    let trained = trainer.train(
-        model, &mut loader, 80, 1e-2, 60, 42,
-        &mut |step, loss| {
-            if step % 20 == 0 {
-                println!("  step {step:>3}  loss {loss:.4}");
-            }
-        },
-    )?;
-
-    // 2. fold BN + binarize into the IF-SNN hardware tensors
-    let folded = trainer.export(&trained)?;
-    println!("folded {} hardware tensors", folded.len());
-
-    // 3. extract F_MAC (the SW statistics CapMin feeds on)
-    let hist = Histogrammer::new(&rt);
-    let hres = hist.extract_dataset(
-        model, &folded, spec.clone(), 128, 7)?;
-    println!(
-        "F_MAC over {} samples (clean train-acc {:.1}%), peak level {}",
-        hres.n_samples,
-        100.0 * hres.accuracy,
-        (0..33).max_by_key(|&m| hres.sum.counts[m]).unwrap()
-    );
-
-    // 4. CapMin at k = 14 + capacitor sizing + error models
+    // quickstart scale: small training budget, temp run directory
     let mut cfg = ExperimentConfig::default();
+    cfg.train_steps = 80;
+    cfg.train_limit = 512;
+    cfg.hist_limit = 128;
+    cfg.eval_limit = 64;
     cfg.mc_samples = 500;
     cfg.run_dir = std::env::temp_dir()
         .join("capmin_quickstart")
         .to_str()
         .unwrap()
         .into();
-    let pipe = Pipeline::new(&rt, cfg)?;
-    let hw32 = pipe.hw_config(&hres.per_matmul, 32, 0.0, 0);
-    let hw14 = pipe.hw_config(&hres.per_matmul, 14, 0.0, 0);
-    let hw14v = pipe.hw_config(&hres.per_matmul, 14, 0.02, 0);
+
+    // the 10-line core (mirrored in DESIGN.md §3):
+    let session = DesignSession::builder().config(cfg).build()?;
+    let ds = Dataset::FashionSyn;
+    let points = session.query_many(&[
+        // baseline: all 32 spike times, no variation
+        OperatingPointSpec::new(ds, 32, 0.0, 0).with_eval(1, 1),
+        // CapMin at k = 14, clean
+        OperatingPointSpec::new(ds, 14, 0.0, 0).with_eval(1, 1),
+        // CapMin at k = 14 under 2% current variation
+        OperatingPointSpec::new(ds, 14, 0.02, 0).with_eval(1, 1),
+    ])?;
+    let (hw32, hw14, hw14v) = (&points[0], &points[1], &points[2]);
+
     println!(
         "capacitor: baseline {} -> CapMin(k=14) {}  ({:.2}x smaller)",
         si(hw32.c, "F"),
         si(hw14.c, "F"),
         hw32.c / hw14.c
     );
+    println!(
+        "peak window at k=14: [{}, {}] covering {:.3} of all sub-MACs",
+        hw14.peak_window().q_lo,
+        hw14.peak_window().q_hi,
+        hw14.peak_window().coverage
+    );
+    println!(
+        "accuracy: k=32 {:.1}% | k=14 clean {:.1}% | k=14 under \
+         2% current variation {:.1}%",
+        100.0 * hw32.accuracy.unwrap(),
+        100.0 * hw14.accuracy.unwrap(),
+        100.0 * hw14v.accuracy.unwrap()
+    );
 
-    // 5. hardware-mode accuracy (error model injected per sub-MAC)
-    let ev = Evaluator::new(&rt, "eval");
-    let a32 = ev.accuracy(model, &folded, spec.clone(), &hw32.ems, 64, 1)?;
-    let a14 = ev.accuracy(model, &folded, spec.clone(), &hw14.ems, 64, 1)?;
-    let a14v =
-        ev.accuracy(model, &folded, spec.clone(), &hw14v.ems, 64, 1)?;
-    println!("accuracy: k=32 {:.1}% | k=14 clean {:.1}% | k=14 under \
-              2% current variation {:.1}%",
-             100.0 * a32, 100.0 * a14, 100.0 * a14v);
+    // repeat queries are memoized: no second training / MC run
+    let again = session
+        .query(&OperatingPointSpec::new(ds, 14, 0.0, 0).with_eval(1, 1))?;
+    assert_eq!(again.accuracy, hw14.accuracy);
+    let s = session.stats();
+    println!(
+        "session stats: {} queries, {} hits, {} solves (points cached \
+         under runs/points/)",
+        s.queries,
+        s.hits(),
+        s.solves
+    );
     println!("quickstart OK");
     Ok(())
 }

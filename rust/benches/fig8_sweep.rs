@@ -1,64 +1,65 @@
-//! Bench: the Fig. 8 sweep machinery — error-model construction (CapMin,
-//! CapMin-V) and eval-artifact batch latency for both engines (jnp vs
-//! Pallas interpret). The jnp/Pallas latency gap is the L1 interpret-mode
-//! overhead documented in EXPERIMENTS.md §Perf. Requires `make artifacts`.
+//! Bench: the Fig. 8 sweep machinery — operating-point solves (CapMin,
+//! CapMin-V) through `session::solver`, and eval-artifact batch latency
+//! for both engines (jnp vs Pallas interpret). The jnp/Pallas latency
+//! gap is the L1 interpret-mode overhead documented in EXPERIMENTS.md
+//! §Perf. The solve section runs without artifacts; the eval section
+//! requires `make artifacts`.
 
 #[path = "bench_harness/mod.rs"]
 mod bench_harness;
 
 use bench_harness::{bench, header, report};
+use capmin::analog::params::AnalogParams;
 use capmin::bnn::ErrorModel;
-use capmin::coordinator::config::ExperimentConfig;
 use capmin::coordinator::evaluator::{stack_error_models, Evaluator};
-use capmin::coordinator::pipeline::Pipeline;
 use capmin::coordinator::trainer::Trainer;
 use capmin::data::synth::Dataset;
 use capmin::runtime::{
     artifacts_dir, lit_f32, lit_u32, lit_u32_scalar, Runtime,
 };
+use capmin::session::solver::solve;
 use capmin::util::rng::Rng;
 
+/// Synthetic per-matmul F_MACs shaped like a trained vgg3_tiny.
+fn synthetic_fmacs(n_matmuls: usize) -> Vec<capmin::capmin::Fmac> {
+    (0..n_matmuls)
+        .map(|m| {
+            capmin::capmin::Fmac::gaussian(
+                if m == 0 { 5 } else { 16 },
+                2.0,
+                1e8,
+            )
+        })
+        .collect()
+}
+
 fn main() {
+    let p = AnalogParams::paper_calibrated();
+    let fmacs = synthetic_fmacs(3);
+    let (seed, mc) = (42u64, 1000usize);
+
+    header("operating-point solve (per k point of Fig. 8)");
+    let r = bench("CapMin solve (clean)", 2, 50, || {
+        std::hint::black_box(solve(p, seed, mc, &fmacs, 14, 0.0, 0));
+    });
+    report(&r, 1.0, "solve");
+    let r = bench("CapMin solve (variation MC)", 2, 20, || {
+        std::hint::black_box(solve(p, seed, mc, &fmacs, 14, 0.02, 0));
+    });
+    report(&r, 1.0, "solve");
+    let r = bench("CapMin-V solve (phi=2)", 2, 20, || {
+        std::hint::black_box(solve(p, seed, mc, &fmacs, 16, 0.02, 2));
+    });
+    report(&r, 1.0, "solve");
+
     if !artifacts_dir().join("manifest.json").exists() {
-        eprintln!("skipping fig8_sweep bench: run `make artifacts`");
+        eprintln!(
+            "skipping fig8_sweep eval benches: run `make artifacts`"
+        );
         return;
     }
     let rt = Runtime::new().unwrap();
-    let mut cfg = ExperimentConfig::default();
-    cfg.mc_samples = 1000;
-    cfg.run_dir = std::env::temp_dir()
-        .join("capmin_bench_runs")
-        .to_str()
-        .unwrap()
-        .into();
-    let pipe = Pipeline::new(&rt, cfg).unwrap();
-
-    // synthetic per-matmul F_MACs shaped like a trained vgg3_tiny
     let mi = rt.manifest.model("vgg3_tiny").clone();
-    let mut fmacs = vec![];
-    for m in 0..mi.n_matmuls {
-        let mut f = capmin::capmin::Fmac::new();
-        let peak = if m == 0 { 5 } else { 16 };
-        for lvl in 0..33 {
-            let dd = lvl as f64 - peak as f64;
-            f.counts[lvl] = (1e8 * (-dd * dd / 8.0).exp()) as u64;
-        }
-        fmacs.push(f);
-    }
-
-    header("error-model construction (per k point of Fig. 8)");
-    let r = bench("CapMin hw_config (clean)", 2, 50, || {
-        std::hint::black_box(pipe.hw_config(&fmacs, 14, 0.0, 0));
-    });
-    report(&r, 1.0, "config");
-    let r = bench("CapMin hw_config (variation MC)", 2, 20, || {
-        std::hint::black_box(pipe.hw_config(&fmacs, 14, 0.02, 0));
-    });
-    report(&r, 1.0, "config");
-    let r = bench("CapMin-V hw_config (phi=2)", 2, 20, || {
-        std::hint::black_box(pipe.hw_config(&fmacs, 16, 0.02, 2));
-    });
-    report(&r, 1.0, "config");
 
     // eval artifact latency, jnp vs pallas engine
     let init = rt.load("vgg3_tiny", "init").unwrap();

@@ -1,0 +1,115 @@
+//! Bench: the `DesignSession` query service — sequential `query` loop
+//! vs the thread-parallel `query_many` over a fig8-shaped k-sweep, and
+//! warm-cache replay from memory and from `runs/points/`. Runs entirely
+//! offline (hardware-only queries on injected F_MAC statistics; no
+//! artifacts needed).
+
+use std::time::Instant;
+
+use capmin::capmin::Fmac;
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::data::synth::Dataset;
+use capmin::session::{DesignSession, OperatingPointSpec};
+
+fn synthetic_fmacs(n_matmuls: usize) -> (Vec<Fmac>, Fmac) {
+    let mut per = vec![];
+    let mut sum = Fmac::new();
+    for m in 0..n_matmuls {
+        let f = Fmac::gaussian(if m == 0 { 5 } else { 16 }, 2.0, 1e8);
+        sum.merge(&f);
+        per.push(f);
+    }
+    (per, sum)
+}
+
+fn fresh_session(tag: &str, persist: bool) -> DesignSession {
+    let dir = std::env::temp_dir().join(format!(
+        "capmin_session_bench_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = ExperimentConfig::default();
+    cfg.mc_samples = 1000;
+    cfg.point_cache = persist;
+    cfg.run_dir = dir.to_str().unwrap().into();
+    let session = DesignSession::builder().config(cfg).build().unwrap();
+    let (per, sum) = synthetic_fmacs(3);
+    session.put_fmac(Dataset::FashionSyn, per, sum);
+    session
+}
+
+fn cleanup(session: &DesignSession) {
+    let _ = std::fs::remove_dir_all(&session.config().run_dir);
+}
+
+fn main() {
+    // the fig8 k-sweep at sigma > 0: every point pays a Monte-Carlo
+    // full map per matmul — the stage query_many parallelizes
+    let specs: Vec<OperatingPointSpec> = ExperimentConfig::default()
+        .ks
+        .iter()
+        .map(|&k| {
+            OperatingPointSpec::new(Dataset::FashionSyn, k, 0.02, 0)
+        })
+        .collect();
+    println!(
+        "fig8-shaped sweep: {} hardware points, {} MC samples/level, \
+         {} worker threads available",
+        specs.len(),
+        1000,
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    );
+
+    // cold sequential
+    let seq = fresh_session("seq", false);
+    let t0 = Instant::now();
+    for s in &specs {
+        seq.query(s).unwrap();
+    }
+    let t_seq = t0.elapsed();
+    println!("sequential query loop : {:>8.1} ms", t_seq.as_secs_f64() * 1e3);
+    cleanup(&seq);
+
+    // cold parallel
+    let par = fresh_session("par", true);
+    let t0 = Instant::now();
+    let points = par.query_many(&specs).unwrap();
+    let t_par = t0.elapsed();
+    println!(
+        "query_many (parallel) : {:>8.1} ms  ({:.2}x vs sequential)",
+        t_par.as_secs_f64() * 1e3,
+        t_seq.as_secs_f64() / t_par.as_secs_f64().max(1e-9)
+    );
+    assert_eq!(points.len(), specs.len());
+
+    // warm replay from the in-memory map
+    let t0 = Instant::now();
+    par.query_many(&specs).unwrap();
+    println!(
+        "replay (memory cache) : {:>8.3} ms",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // warm replay from runs/points/ only (fresh session, same run dir)
+    let mut cfg = par.config().clone();
+    cfg.point_cache = true;
+    let disk = DesignSession::builder().config(cfg).build().unwrap();
+    let (per, sum) = synthetic_fmacs(3);
+    disk.put_fmac(Dataset::FashionSyn, per, sum);
+    let t0 = Instant::now();
+    disk.query_many(&specs).unwrap();
+    println!(
+        "replay (disk cache)   : {:>8.3} ms",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    let s = disk.stats();
+    assert_eq!(s.disk_hits, specs.len() as u64, "all served from disk");
+    assert_eq!(s.solves, 0, "no MC rerun on replay");
+    println!(
+        "disk session stats: {} queries | {} disk hits | {} solves",
+        s.queries, s.disk_hits, s.solves
+    );
+    cleanup(&par);
+}

@@ -13,8 +13,9 @@ use super::hashrng::hash01;
 use crate::capmin::N_LEVELS;
 
 /// 33x33 row-CDF + decoded column values (the AOT artifacts' runtime
-/// error-model inputs, host-side).
-#[derive(Clone, Debug)]
+/// error-model inputs, host-side). `PartialEq` is bitwise — operating
+/// points compare and round-trip exactly (DESIGN.md §3).
+#[derive(Clone, Debug, PartialEq)]
 pub struct ErrorModel {
     pub cdf: Vec<f32>,  // row-major 33*33
     pub vals: Vec<f32>, // 33

@@ -25,6 +25,20 @@ impl Fmac {
         Fmac { counts }
     }
 
+    /// Synthetic unimodal histogram: counts follow a gaussian bump of
+    /// height `scale` at `peak` with width `sharp` — the shape trained
+    /// models produce (Fig. 1). The shared fixture of the session tests
+    /// and benches, also handy to probe operating points without a
+    /// model.
+    pub fn gaussian(peak: usize, sharp: f64, scale: f64) -> Fmac {
+        let mut f = Fmac::new();
+        for (m, c) in f.counts.iter_mut().enumerate() {
+            let d = m as f64 - peak as f64;
+            *c = (scale * (-d * d / (2.0 * sharp * sharp)).exp()) as u64;
+        }
+        f
+    }
+
     /// Accumulate counts delivered by the hist artifact (f32 counts are
     /// exact integers below 2^24 per batch; summation happens here in u64).
     pub fn add_f32(&mut self, batch: &[f32]) {

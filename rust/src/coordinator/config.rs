@@ -1,6 +1,8 @@
 //! Experiment configuration: defaults sized for the single-core CPU
 //! testbed, every knob overridable from the CLI (DESIGN.md §6).
 
+use anyhow::{anyhow, ensure, Result};
+
 use crate::util::cli::Args;
 
 #[derive(Clone, Debug)]
@@ -30,6 +32,9 @@ pub struct ExperimentConfig {
     pub engine: String,
     /// Directory for cached runs (trained weights, F_MACs, results).
     pub run_dir: String,
+    /// Persist operating points to `<run_dir>/points/` (DESIGN.md §7);
+    /// `--no-point-cache` disables the disk layer for cold-path timing.
+    pub point_cache: bool,
     /// Base seed.
     pub seed: u64,
 }
@@ -49,13 +54,14 @@ impl Default for ExperimentConfig {
             n_seeds: 3,
             engine: "eval".to_string(),
             run_dir: "runs".to_string(),
+            point_cache: true,
             seed: 42,
         }
     }
 }
 
 impl ExperimentConfig {
-    pub fn from_args(args: &Args) -> ExperimentConfig {
+    pub fn from_args(args: &Args) -> Result<ExperimentConfig> {
         let mut c = ExperimentConfig::default();
         if args.flag("quick") {
             // smoke-test scale: seconds, not minutes
@@ -86,14 +92,31 @@ impl ExperimentConfig {
         c.n_seeds = args.usize_or("seeds", c.n_seeds);
         c.engine = args.str_or("engine", &c.engine);
         c.run_dir = args.str_or("run-dir", &c.run_dir);
+        c.point_cache = !args.flag("no-point-cache");
         c.seed = args.usize_or("seed", c.seed as usize) as u64;
         if let Some(ks) = args.get("ks") {
             c.ks = ks
                 .split(',')
-                .map(|s| s.trim().parse().expect("bad --ks"))
-                .collect();
+                .map(|s| {
+                    s.trim().parse::<usize>().map_err(|_| {
+                        anyhow!(
+                            "bad --ks entry `{}`: expected a \
+                             comma-separated list of integers, e.g. \
+                             --ks 32,24,16,14,10,6",
+                            s.trim()
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            for &k in &c.ks {
+                ensure!(
+                    (1..=32).contains(&k),
+                    "bad --ks entry `{k}`: CapMin k must be in 1..=32"
+                );
+            }
+            ensure!(!c.ks.is_empty(), "--ks must list at least one k");
         }
-        c
+        Ok(c)
     }
 }
 
@@ -108,21 +131,38 @@ mod tests {
 
     #[test]
     fn defaults_and_overrides() {
-        let c = ExperimentConfig::from_args(&parse(&["x"]));
+        let c = ExperimentConfig::from_args(&parse(&["x"])).unwrap();
         assert_eq!(c.train_steps, 300);
+        assert!(c.point_cache);
         let c = ExperimentConfig::from_args(&parse(&[
             "x", "--steps", "7", "--sigma", "0.05", "--ks", "32,16,8",
-        ]));
+            "--no-point-cache",
+        ]))
+        .unwrap();
         assert_eq!(c.train_steps, 7);
         assert_eq!(c.sigma_rel, 0.05);
         assert_eq!(c.ks, vec![32, 16, 8]);
+        assert!(!c.point_cache);
     }
 
     #[test]
     fn quick_mode_shrinks_everything() {
-        let c = ExperimentConfig::from_args(&parse(&["x", "--quick"]));
+        let c = ExperimentConfig::from_args(&parse(&["x", "--quick"]))
+            .unwrap();
         assert!(c.train_steps <= 30);
         assert!(c.eval_limit <= 64);
         assert_eq!(c.n_seeds, 1);
+    }
+
+    #[test]
+    fn bad_ks_is_an_error_naming_the_value() {
+        let e = ExperimentConfig::from_args(&parse(&[
+            "x", "--ks", "32,banana",
+        ]))
+        .unwrap_err();
+        assert!(e.to_string().contains("banana"), "{e}");
+        let e = ExperimentConfig::from_args(&parse(&["x", "--ks", "0,4"]))
+            .unwrap_err();
+        assert!(e.to_string().contains("1..=32"), "{e}");
     }
 }

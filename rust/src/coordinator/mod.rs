@@ -1,9 +1,12 @@
-//! L3 coordinator: experiment orchestration over the PJRT runtime.
+//! L3 coordinator: training, F_MAC extraction and evaluation over the
+//! PJRT runtime (DESIGN.md §2). External consumers drive these stages
+//! through [`crate::session::DesignSession`]; the stage-graph `Pipeline`
+//! is crate-internal.
 
 pub mod config;
 pub mod evaluator;
 pub mod histogrammer;
-pub mod pipeline;
+pub(crate) mod pipeline;
 pub mod report;
 pub mod store;
 pub mod trainer;

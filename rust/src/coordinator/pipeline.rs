@@ -1,28 +1,24 @@
-//! End-to-end experiment pipeline with run caching.
+//! Training / F_MAC stage graph with run caching — a crate-internal
+//! implementation detail of [`crate::session`] (DESIGN.md §2).
 //!
-//! Stage graph (DESIGN.md §2): train -> export(fold) -> F_MAC -> CapMin
-//! window -> capacitor sizing -> Monte-Carlo P_map -> (CapMin-V) ->
-//! error-injected evaluation. Trained weights and histograms cache in
-//! `runs/` so figure commands compose without retraining.
+//! Stage graph: train -> export(fold) -> F_MAC. Trained weights and
+//! histograms cache in `runs/` so sessions compose without retraining.
+//! The hardware solve (CapMin window -> capacitor sizing -> Monte-Carlo
+//! P_map -> CapMin-V -> error models) lives in
+//! `crate::session::solver`; accuracy evaluation in
+//! `crate::coordinator::evaluator`. External consumers go through
+//! `DesignSession` — this type is not part of the public API.
 
 use anyhow::Result;
 
 use super::config::ExperimentConfig;
-use super::evaluator::Evaluator;
 use super::histogrammer::Histogrammer;
 use super::store::{NamedTensor, Store};
 use super::trainer::Trainer;
-use crate::analog::capacitor::{CapacitorModel, CapacitorSolver};
-use crate::analog::montecarlo::MonteCarlo;
-use crate::analog::neuron::SpikeTimeSet;
-use crate::analog::params::AnalogParams;
-use crate::analog::pmap::Pmap;
-use crate::bnn::ErrorModel;
-use crate::capmin::{capmin::select_window, capmin_v::capmin_v, Fmac};
+use crate::capmin::Fmac;
 use crate::data::synth::Dataset;
 use crate::data::{Loader, Split};
 use crate::runtime::{lit_f32, to_f32, Runtime};
-use crate::util::rng::Rng;
 
 pub struct Pipeline<'rt> {
     pub rt: &'rt Runtime,
@@ -36,15 +32,11 @@ impl<'rt> Pipeline<'rt> {
         Ok(Pipeline { rt, cfg, store })
     }
 
-    pub fn params(&self) -> AnalogParams {
-        AnalogParams::paper_calibrated().with_sigma(self.cfg.sigma_rel)
-    }
-
-    fn folded_cache_name(&self, ds: Dataset) -> String {
+    pub(crate) fn folded_cache_name(ds: Dataset) -> String {
         format!("{}_folded.capt", ds.spec().name)
     }
 
-    fn fmac_cache_name(&self, ds: Dataset) -> String {
+    pub(crate) fn fmac_cache_name(ds: Dataset) -> String {
         format!("{}_fmac.capt", ds.spec().name)
     }
 
@@ -52,7 +44,7 @@ impl<'rt> Pipeline<'rt> {
     pub fn ensure_folded(&self, ds: Dataset) -> Result<Vec<xla::Literal>> {
         let spec = ds.spec();
         let mi = self.rt.manifest.model(spec.model).clone();
-        let cache = self.folded_cache_name(ds);
+        let cache = Self::folded_cache_name(ds);
         if self.store.exists(&cache) {
             let ts = self.store.load_tensors(&cache)?;
             return ts
@@ -122,7 +114,7 @@ impl<'rt> Pipeline<'rt> {
 
     /// F_MAC histograms for `ds` (cached). Also reports clean accuracy.
     pub fn ensure_fmac(&self, ds: Dataset) -> Result<(Vec<Fmac>, Fmac)> {
-        let cache = self.fmac_cache_name(ds);
+        let cache = Self::fmac_cache_name(ds);
         if self.store.exists(&cache) {
             return self.store.load_fmac(&cache);
         }
@@ -144,104 +136,5 @@ impl<'rt> Pipeline<'rt> {
         self.store
             .save_fmac(&cache, &res.per_matmul, &res.sum)?;
         Ok((res.per_matmul, res.sum))
-    }
-
-    /// The full hardware read-out configuration for one model at CapMin
-    /// parameter k: per-matmul windows, one shared capacitor, and the
-    /// per-matmul error models the eval artifacts consume.
-    ///
-    /// The IF-SNN has ONE membrane capacitor, but the spike-time decoder
-    /// is digital and per layer: a matmul whose reduction length only
-    /// reaches level 9 (grayscale first conv, beta = 9) keeps its own
-    /// narrow window instead of being wiped out by the peak-centered
-    /// global window. The capacitor is sized by the most demanding
-    /// window (largest q_hi) — lower windows have wider time gaps and
-    /// ride along for free. `phi > 0` applies CapMin-V merging to each
-    /// window (clamped to its size). `sigma = 0` yields the
-    /// deterministic Eq.-4 clipping maps.
-    pub fn hw_config(
-        &self,
-        per_fmac: &[Fmac],
-        k: usize,
-        sigma: f64,
-        phi: usize,
-    ) -> HwConfig {
-        let p = self.params().with_sigma(sigma);
-        let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
-        let windows: Vec<_> = per_fmac
-            .iter()
-            .map(|f| select_window(f, k))
-            .collect();
-        let c = windows
-            .iter()
-            .map(|w| solver.size_for_window(w.q_lo, w.q_hi))
-            .fold(0.0f64, f64::max);
-        let mc = MonteCarlo::new(p).with_samples(self.cfg.mc_samples);
-        let mut sets = Vec::with_capacity(windows.len());
-        let mut ems = Vec::with_capacity(windows.len());
-        for (i, w) in windows.iter().enumerate() {
-            let base = SpikeTimeSet::new(&p, c, w.levels());
-            let levels = if phi > 0 {
-                let pmap: Pmap = mc.pmap(
-                    &base,
-                    &mut Rng::new(self.cfg.seed ^ 0x5107 ^ i as u64),
-                );
-                let res = capmin_v(pmap, phi.min(w.k - 1));
-                res.levels
-            } else {
-                w.levels()
-            };
-            let set = SpikeTimeSet::new(&p, c, levels);
-            let full = if sigma == 0.0 {
-                mc.clean_map(&set)
-            } else {
-                mc.full_map(
-                    &set,
-                    &mut Rng::new(self.cfg.seed ^ 0x4D43 ^ (i as u64) << 8),
-                )
-            };
-            ems.push(ErrorModel::from_full(&full));
-            sets.push(set);
-        }
-        HwConfig {
-            c,
-            windows,
-            sets,
-            ems,
-        }
-    }
-
-    pub fn evaluator(&self) -> Evaluator<'rt> {
-        Evaluator::new(self.rt, &self.cfg.engine)
-    }
-}
-
-/// One hardware operating point: shared capacitor + per-matmul read-out.
-pub struct HwConfig {
-    /// Shared membrane capacitance [F] (sized by the topmost window).
-    pub c: f64,
-    /// CapMin window per matmul.
-    pub windows: Vec<crate::capmin::CapMinResult>,
-    /// Spike-time set per matmul (post CapMin-V merging when phi > 0).
-    pub sets: Vec<SpikeTimeSet>,
-    /// Error model per matmul (the eval artifacts' runtime input).
-    pub ems: Vec<ErrorModel>,
-}
-
-impl HwConfig {
-    /// Guaranteed response time of the slowest window (system latency).
-    pub fn grt(&self) -> f64 {
-        self.sets
-            .iter()
-            .map(|s| s.grt())
-            .fold(0.0f64, f64::max)
-    }
-
-    /// The peak (topmost) window — what drives the capacitor.
-    pub fn peak_window(&self) -> &crate::capmin::CapMinResult {
-        self.windows
-            .iter()
-            .max_by_key(|w| w.q_hi)
-            .expect("at least one matmul")
     }
 }

@@ -14,57 +14,61 @@ use crate::analog::neuron::SpikeTimeSet;
 use crate::bnn::ErrorModel;
 use crate::capmin::capmin::select_window;
 use crate::capmin::Fmac;
-use crate::coordinator::pipeline::Pipeline;
 use crate::coordinator::report::pct;
+use crate::session::{DesignSession, OperatingPointSpec};
 use crate::util::rng::Rng;
 use crate::util::table::Table;
 
-/// Global-window variant of `Pipeline::hw_config` (the ablated design):
-/// every matmul reads out through the window selected on the *summed*
-/// F_MAC, exactly as a literal reading of the paper prescribes.
+/// Global-window variant of the session's operating-point solve (the
+/// ablated design): every matmul reads out through the window selected
+/// on the *summed* F_MAC, exactly as a literal reading of the paper
+/// prescribes.
 pub fn hw_config_global(
-    pipe: &Pipeline,
+    session: &DesignSession,
     sum_fmac: &Fmac,
     n_mat: usize,
     k: usize,
     sigma: f64,
 ) -> Vec<ErrorModel> {
-    let p = pipe.params().with_sigma(sigma);
+    let cfg = session.config();
+    let p = session.params().with_sigma(sigma);
     let w = select_window(sum_fmac, k);
     let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
     let c = solver.size_for_window(w.q_lo, w.q_hi);
     let set = SpikeTimeSet::new(&p, c, w.levels());
-    let mc = MonteCarlo::new(p).with_samples(pipe.cfg.mc_samples);
+    let mc = MonteCarlo::new(p).with_samples(cfg.mc_samples);
     let full = if sigma == 0.0 {
         mc.clean_map(&set)
     } else {
-        mc.full_map(&set, &mut Rng::new(pipe.cfg.seed ^ 0xAB1A))
+        mc.full_map(&set, &mut Rng::new(cfg.seed ^ 0xAB1A))
     };
     let em = ErrorModel::from_full(&full);
     vec![em; n_mat]
 }
 
-pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
-    -> Result<()> {
-    let ev = pipe.evaluator();
+pub fn run(session: &DesignSession,
+           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
+    let cfg = session.config();
+    let ev = session.evaluator()?;
     println!("== Ablation (a): per-matmul windows vs one global window ==");
     let mut t = Table::new(&[
         "dataset", "k", "per-matmul (ours)", "global (paper literal)",
     ]);
     for &ds in datasets {
         let spec = ds.spec();
-        let folded = pipe.ensure_folded(ds)?;
-        let (per, sum) = pipe.ensure_fmac(ds)?;
-        let mi = pipe.rt.manifest.model(spec.model).clone();
+        let folded = session.folded(ds)?;
+        let (_, sum) = session.fmac(ds)?;
+        let mi = session.runtime()?.manifest.model(spec.model).clone();
         for k in [16usize, 14, 10] {
-            let ours = pipe.hw_config(&per, k, 0.0, 0);
-            let a_ours = ev.accuracy(
-                spec.model, &folded, spec.clone(), &ours.ems,
-                pipe.cfg.eval_limit, 1)?;
-            let glob = hw_config_global(pipe, &sum, mi.n_matmuls, k, 0.0);
+            let ours = session.query(
+                &OperatingPointSpec::new(ds, k, 0.0, 0).with_eval(1, 1),
+            )?;
+            let a_ours = ours.accuracy.expect("eval requested");
+            let glob =
+                hw_config_global(session, &sum, mi.n_matmuls, k, 0.0);
             let a_glob = ev.accuracy(
-                spec.model, &folded, spec.clone(), &glob,
-                pipe.cfg.eval_limit, 1)?;
+                spec.model, folded.as_slice(), spec.clone(), &glob,
+                cfg.eval_limit, 1)?;
             t.row(vec![
                 spec.name.into(),
                 k.to_string(),
@@ -84,12 +88,12 @@ pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
     let mut t = Table::new(&[
         "phi", "min-diag merge (Alg. 1)", "fast-end merge (naive)",
     ]);
-    let p = pipe.params();
+    let p = session.params();
     let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
     let (lo, hi) = (9usize, 24usize);
     let c = solver.size_for_window(lo, hi);
     let set = SpikeTimeSet::new(&p, c, (lo..=hi).collect());
-    let mc = MonteCarlo::new(p).with_samples(pipe.cfg.mc_samples);
+    let mc = MonteCarlo::new(p).with_samples(cfg.mc_samples);
     for phi in [2usize, 4, 6] {
         // Alg. 1
         let pm = mc.pmap(&set, &mut Rng::new(11));

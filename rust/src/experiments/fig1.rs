@@ -3,17 +3,17 @@
 
 use anyhow::Result;
 
-use crate::coordinator::pipeline::Pipeline;
 use crate::coordinator::report::Report;
+use crate::session::DesignSession;
 use crate::util::json::Json;
 use crate::util::table::Table;
 
-pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
-    -> Result<()> {
+pub fn run(session: &DesignSession,
+           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
     println!("== Fig. 1: F_MAC histograms (summed over layers) ==");
     for &ds in datasets {
         let spec = ds.spec();
-        let (_per, sum) = pipe.ensure_fmac(ds)?;
+        let (_per, sum) = session.fmac(ds)?;
         let mut t = Table::new(&["level", "count", "log10", "bar"]);
         let max = *sum.counts.iter().max().unwrap() as f64;
         for (m, &c) in sum.counts.iter().enumerate() {
@@ -37,7 +37,7 @@ pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
              1e5..1e7 between peak and tails",
             sum.dynamic_range()
         );
-        let rep = Report::new(&pipe.store);
+        let rep = Report::new(session.store());
         rep.save_series(
             &format!("fig1_{}", spec.name),
             vec![("dataset", Json::Str(spec.name.into()))],

@@ -4,13 +4,13 @@
 use anyhow::Result;
 
 use crate::analog::{clock, rc};
-use crate::coordinator::pipeline::Pipeline;
 use crate::coordinator::report::Report;
+use crate::session::DesignSession;
 use crate::util::json::Json;
 use crate::util::table::{si, Table};
 
-pub fn run(pipe: &Pipeline) -> Result<()> {
-    let p = pipe.params();
+pub fn run(session: &DesignSession) -> Result<()> {
+    let p = session.params();
     let c = crate::analog::params::PAPER_BASELINE_C;
     println!("== Fig. 3: V(t) for different I_init (C = {}) ==",
              si(c, "F"));
@@ -32,7 +32,7 @@ pub fn run(pipe: &Pipeline) -> Result<()> {
     println!("{}", t.render());
 
     // curve data for the highest/lowest current (plotting series)
-    let rep = Report::new(&pipe.store);
+    let rep = Report::new(session.store());
     for &m in &[32usize, 8, 1] {
         let i = rc::level_current(&p, m);
         let t_end = 2.0 * rc::level_spike_time(&p, c, m.max(1));

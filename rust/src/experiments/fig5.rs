@@ -5,15 +5,15 @@ use anyhow::Result;
 
 use crate::capmin::capmin::select_window_pmf;
 use crate::capmin::Fmac;
-use crate::coordinator::pipeline::Pipeline;
+use crate::session::DesignSession;
 use crate::util::table::Table;
 
-pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
-    -> Result<()> {
+pub fn run(session: &DesignSession,
+           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
     // the paper normalizes and sums F_MAC across benchmarks (Sec. IV-B)
     let mut fmacs = vec![];
     for &ds in datasets {
-        fmacs.push(pipe.ensure_fmac(ds)?.1);
+        fmacs.push(session.fmac(ds)?.1);
     }
     let refs: Vec<&Fmac> = fmacs.iter().collect();
     let combined = Fmac::combine_normalized(&refs);

@@ -6,11 +6,11 @@ use anyhow::Result;
 
 use crate::analog::montecarlo::MonteCarlo;
 use crate::analog::neuron::SpikeTimeSet;
-use crate::coordinator::pipeline::Pipeline;
+use crate::session::DesignSession;
 use crate::util::table::{si, Table};
 
-pub fn run(pipe: &Pipeline) -> Result<()> {
-    let p = pipe.params();
+pub fn run(session: &DesignSession) -> Result<()> {
+    let p = session.params();
     let solver = crate::analog::capacitor::CapacitorSolver::new(
         p,
         crate::analog::capacitor::CapacitorModel::Physics,

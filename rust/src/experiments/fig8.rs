@@ -3,31 +3,59 @@
 //!   stars:     CapMin under current variation (mean of n_seeds runs)
 //!   triangles: CapMin-V (merges from the k=16 set) under variation
 //!
-//! The error model reaches the BNN as a runtime CDF input to the AOT
-//! eval artifact, so the whole sweep reuses one compiled executable.
+//! The whole sweep is one `query_many` batch: the session solves the
+//! cache-missing operating points in parallel (the MC stage dominates)
+//! and replays repeated invocations from `runs/points/`.
 
 use anyhow::Result;
 
-use crate::coordinator::pipeline::Pipeline;
 use crate::coordinator::report::{pct, Report};
+use crate::session::{DesignSession, OperatingPointSpec};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
 pub const CAPMINV_K_START: usize = 16; // paper Sec. IV-C
 
-pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
-    -> Result<()> {
-    let cfg = &pipe.cfg;
-    let ev = pipe.evaluator();
+pub fn run(session: &DesignSession,
+           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
+    let cfg = session.config();
     for &ds in datasets {
         let spec = ds.spec();
-        let folded = pipe.ensure_folded(ds)?;
-        let (per_fmac, _) = pipe.ensure_fmac(ds)?;
+        // train/extract up front so the sweep below is pure query traffic
+        session.ensure_trained(ds)?;
         println!(
             "\n== Fig. 8 [{}]: accuracy over k (sigma_rel = {}, {} \
              test samples, engine = {}) ==",
             spec.name, cfg.sigma_rel, cfg.eval_limit, cfg.engine
         );
+        // one spec per curve point, k-major so the result walk below
+        // stays aligned
+        let mut specs = vec![];
+        for &k in &cfg.ks {
+            // circles: clipping only
+            specs.push(
+                OperatingPointSpec::new(ds, k, 0.0, 0).with_eval(1, 1),
+            );
+            // stars: clipping + variation
+            specs.push(
+                OperatingPointSpec::new(ds, k, cfg.sigma_rel, 0)
+                    .with_eval(100, cfg.n_seeds),
+            );
+            // triangles: CapMin-V from k=16 merged down to k spike times
+            if k < CAPMINV_K_START {
+                specs.push(
+                    OperatingPointSpec::new(
+                        ds,
+                        CAPMINV_K_START,
+                        cfg.sigma_rel,
+                        CAPMINV_K_START - k,
+                    )
+                    .with_eval(200, cfg.n_seeds),
+                );
+            }
+        }
+        let points = session.query_many(&specs)?;
+
         let mut t = Table::new(&[
             "k", "window", "CapMin clean", "CapMin +var", "CapMin-V +var",
         ]);
@@ -35,51 +63,19 @@ pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
         let mut clean = vec![];
         let mut var = vec![];
         let mut capv: Vec<f64> = vec![];
+        let mut it = points.iter();
         for &k in &cfg.ks {
-            // circles: clipping only
-            let hw_clean = pipe.hw_config(&per_fmac, k, 0.0, 0);
-            let a_clean = ev.accuracy(
-                spec.model,
-                &folded,
-                spec.clone(),
-                &hw_clean.ems,
-                cfg.eval_limit,
-                1,
-            )?;
-            // stars: clipping + variation
-            let hw_var =
-                pipe.hw_config(&per_fmac, k, cfg.sigma_rel, 0);
-            let a_var = ev.accuracy_multi_seed(
-                spec.model,
-                &folded,
-                spec.clone(),
-                &hw_var.ems,
-                cfg.eval_limit,
-                cfg.n_seeds,
-                100,
-            )?;
-            // triangles: CapMin-V from k=16 merged down to k spike times
+            let p_clean = it.next().expect("clean point per k");
+            let p_var = it.next().expect("variation point per k");
+            let a_clean = p_clean.accuracy.expect("eval requested");
+            let a_var = p_var.accuracy.expect("eval requested");
             let a_capv = if k < CAPMINV_K_START {
-                let phi = CAPMINV_K_START - k;
-                let hw_v = pipe.hw_config(
-                    &per_fmac,
-                    CAPMINV_K_START,
-                    cfg.sigma_rel,
-                    phi,
-                );
-                Some(ev.accuracy_multi_seed(
-                    spec.model,
-                    &folded,
-                    spec.clone(),
-                    &hw_v.ems,
-                    cfg.eval_limit,
-                    cfg.n_seeds,
-                    200,
-                )?)
+                let p_v = it.next().expect("capmin-v point below k=16");
+                Some(p_v.accuracy.expect("eval requested"))
             } else {
                 None
             };
-            let w = hw_clean.peak_window();
+            let w = p_clean.peak_window();
             t.row(vec![
                 k.to_string(),
                 format!("[{},{}]", w.q_lo, w.q_hi),
@@ -93,7 +89,7 @@ pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
             capv.push(a_capv.unwrap_or(f64::NAN));
         }
         println!("{}", t.render());
-        let rep = Report::new(&pipe.store);
+        let rep = Report::new(session.store());
         rep.save_series(
             &format!("fig8_{}", spec.name),
             vec![

@@ -11,9 +11,9 @@ use anyhow::Result;
 use crate::analog::capacitor::{paper_fit, CapacitorModel, CapacitorSolver};
 use crate::analog::cost::cost;
 use crate::analog::neuron::SpikeTimeSet;
-use crate::capmin::Fmac;
-use crate::coordinator::pipeline::Pipeline;
 use crate::coordinator::report::ratio;
+use crate::data::synth::Dataset;
+use crate::session::{DesignSession, OperatingPointSpec};
 use crate::util::table::{si, Table};
 
 pub struct Fig9Row {
@@ -25,9 +25,9 @@ pub struct Fig9Row {
     pub energy: f64,
 }
 
-pub fn compute(pipe: &Pipeline, per_fmac: &[Fmac], k_capmin: usize)
-    -> Vec<Fig9Row> {
-    let p = pipe.params();
+pub fn compute(session: &DesignSession, ds: Dataset, k_capmin: usize)
+    -> Result<Vec<Fig9Row>> {
+    let p = session.params();
     let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
 
     // baseline: every level 1..=32 has a spike time
@@ -36,7 +36,8 @@ pub fn compute(pipe: &Pipeline, per_fmac: &[Fmac], k_capmin: usize)
     let cost_base = cost(&p, &set_base);
 
     // CapMin at k_capmin: capacitor sized by the peak per-matmul window
-    let hw_min = pipe.hw_config(per_fmac, k_capmin, 0.0, 0);
+    let hw_min = session
+        .query(&OperatingPointSpec::new(ds, k_capmin, 0.0, 0))?;
     let w = hw_min.peak_window().clone();
     let c_min = hw_min.c;
     let set_min = SpikeTimeSet::new(&p, c_min, w.levels());
@@ -44,21 +45,21 @@ pub fn compute(pipe: &Pipeline, per_fmac: &[Fmac], k_capmin: usize)
 
     // CapMin-V: k=16 capacitor, phi merges down to k_capmin spike times
     let phi = super::fig8::CAPMINV_K_START - k_capmin;
-    let hw_v = pipe.hw_config(
-        per_fmac,
+    let hw_v = session.query(&OperatingPointSpec::new(
+        ds,
         super::fig8::CAPMINV_K_START,
-        pipe.cfg.sigma_rel,
+        session.config().sigma_rel,
         phi,
-    );
+    ))?;
     let c16 = hw_v.c;
     let cost_v = crate::analog::cost::CircuitCost {
         c: c16,
         energy: 0.5 * c16 * p.vth * p.vth,
-        grt: hw_v.grt(),
+        grt: hw_v.grt,
         area: c16 / crate::analog::cost::CAP_DENSITY,
     };
 
-    vec![
+    Ok(vec![
         Fig9Row {
             name: "baseline (SoA [3])".into(),
             k: 32,
@@ -85,19 +86,17 @@ pub fn compute(pipe: &Pipeline, per_fmac: &[Fmac], k_capmin: usize)
             grt: cost_v.grt,
             energy: 0.5 * c16 * p.vth * p.vth,
         },
-    ]
+    ])
 }
 
-pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
-    -> Result<()> {
+pub fn run(session: &DesignSession,
+           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
     // the capacitor story is driven by the peak window, which Fig. 1
     // shows is identical across benchmarks — one representative model's
     // per-matmul histograms suffice (the paper's combined-F_MAC move)
-    let (per_fmac, _): (Vec<Fmac>, Fmac) =
-        pipe.ensure_fmac(datasets[0])?;
-
-    let k = pipe.cfg.ks.iter().copied().find(|&k| k == 14).unwrap_or(14);
-    let rows = compute(pipe, &per_fmac, k);
+    let cfg = session.config();
+    let k = cfg.ks.iter().copied().find(|&k| k == 14).unwrap_or(14);
+    let rows = compute(session, datasets[0], k)?;
     println!("\n== Fig. 9: capacitor size & latency at 1% accuracy cost ==");
     let mut t = Table::new(&[
         "config", "k", "C (physics)", "C (paper-fit)", "GRT", "E/submac",

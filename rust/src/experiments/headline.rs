@@ -4,13 +4,13 @@
 use anyhow::Result;
 
 use crate::analog::capacitor::paper_fit;
-use crate::coordinator::pipeline::Pipeline;
 use crate::coordinator::report::{pct, ratio};
+use crate::session::DesignSession;
 use crate::util::json::Json;
 use crate::util::table::si;
 
-pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
-    -> Result<()> {
+pub fn run(session: &DesignSession,
+           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
     println!("== Headline reproduction summary ==");
     // capacitor story is dataset-independent
     let c32 = paper_fit(32);
@@ -30,8 +30,8 @@ pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
     // accuracy story: read the fig8 result series if present
     for &ds in datasets {
         let spec = ds.spec();
-        let path = pipe
-            .store
+        let path = session
+            .store()
             .path(&format!("results_fig8_{}.json", spec.name));
         if !path.exists() {
             println!(

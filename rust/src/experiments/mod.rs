@@ -1,4 +1,7 @@
-//! Experiment drivers — one module per paper table/figure (DESIGN.md §5).
+//! Experiment drivers — one module per paper table/figure (DESIGN.md
+//! §5). Every driver takes a [`crate::session::DesignSession`] and goes
+//! through typed operating-point queries; none touches the stage graph
+//! directly.
 
 pub mod ablation;
 pub mod fig1;
@@ -11,15 +14,66 @@ pub mod headline;
 pub mod sigma_sweep;
 pub mod tables;
 
+use anyhow::{anyhow, Result};
+
 use crate::data::synth::Dataset;
 use crate::util::cli::Args;
 
 /// Datasets selected by --dataset (name | "all").
-pub fn selected_datasets(args: &Args) -> Vec<Dataset> {
+pub fn selected_datasets(args: &Args) -> Result<Vec<Dataset>> {
     match args.get("dataset") {
-        None => Dataset::all().to_vec(),
-        Some("all") => Dataset::all().to_vec(),
-        Some(name) => vec![Dataset::from_name(name)
-            .unwrap_or_else(|| panic!("unknown dataset {name}"))],
+        None | Some("all") => Ok(Dataset::all().to_vec()),
+        Some(name) => {
+            let ds = Dataset::from_name(name).ok_or_else(|| {
+                let valid: Vec<&str> = Dataset::all()
+                    .iter()
+                    .map(|d| d.spec().name)
+                    .collect();
+                anyhow!(
+                    "unknown dataset `{name}` (valid choices: {}, all)",
+                    valid.join(", ")
+                )
+            })?;
+            Ok(vec![ds])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn selects_all_by_default() {
+        assert_eq!(selected_datasets(&parse(&["x"])).unwrap().len(), 5);
+        assert_eq!(
+            selected_datasets(&parse(&["x", "--dataset", "all"]))
+                .unwrap()
+                .len(),
+            5
+        );
+    }
+
+    #[test]
+    fn selects_one_by_name() {
+        let ds = selected_datasets(&parse(&[
+            "x", "--dataset", "cifar_syn",
+        ]))
+        .unwrap();
+        assert_eq!(ds, vec![Dataset::CifarSyn]);
+    }
+
+    #[test]
+    fn unknown_dataset_error_lists_choices() {
+        let e = selected_datasets(&parse(&["x", "--dataset", "mnist"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("mnist"), "{e}");
+        assert!(e.contains("fashion_syn"), "{e}");
+        assert!(e.contains("imagenette_syn"), "{e}");
     }
 }

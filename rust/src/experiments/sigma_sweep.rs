@@ -2,48 +2,60 @@
 //! tolerance curve — accuracy vs sigma_rel at a fixed operating point,
 //! CapMin (k = 14) vs CapMin-V (k = 16 capacitor, phi = 2). Quantifies
 //! *how much* process variation each configuration absorbs, beyond the
-//! single-sigma snapshot of Fig. 8.
+//! single-sigma snapshot of Fig. 8. One `query_many` batch per dataset:
+//! the per-sigma Monte-Carlo solves run in parallel.
 
 use anyhow::Result;
 
-use crate::coordinator::pipeline::Pipeline;
 use crate::coordinator::report::{pct, Report};
+use crate::session::{DesignSession, OperatingPointSpec};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
-pub fn run(pipe: &Pipeline, datasets: &[crate::data::synth::Dataset])
-    -> Result<()> {
-    let cfg = &pipe.cfg;
-    let ev = pipe.evaluator();
+pub fn run(session: &DesignSession,
+           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
+    let cfg = session.config();
     let sigmas = [0.0, 0.01, 0.02, 0.04, 0.06, 0.08];
     for &ds in datasets {
         let spec = ds.spec();
-        let folded = pipe.ensure_folded(ds)?;
-        let (per_fmac, _) = pipe.ensure_fmac(ds)?;
+        session.ensure_trained(ds)?;
         println!(
             "\n== sigma sweep [{}]: CapMin(k=14) vs CapMin-V(16, phi=2) ==",
             spec.name
         );
+        let mut specs = vec![];
+        for &sigma in &sigmas {
+            specs.push(
+                OperatingPointSpec::new(ds, 14, sigma, 0)
+                    .with_eval(300, cfg.n_seeds),
+            );
+            specs.push(
+                OperatingPointSpec::new(ds, 16, sigma, 2)
+                    .with_eval(400, cfg.n_seeds),
+            );
+        }
+        let points = session.query_many(&specs)?;
         let mut t = Table::new(&["sigma_rel", "CapMin k=14", "CapMin-V"]);
         let mut xs = vec![];
         let mut a_cm = vec![];
         let mut a_cv = vec![];
+        let mut it = points.iter();
         for &sigma in &sigmas {
-            let hw = pipe.hw_config(&per_fmac, 14, sigma, 0);
-            let a1 = ev.accuracy_multi_seed(
-                spec.model, &folded, spec.clone(), &hw.ems,
-                cfg.eval_limit, cfg.n_seeds, 300)?;
-            let hwv = pipe.hw_config(&per_fmac, 16, sigma, 2);
-            let a2 = ev.accuracy_multi_seed(
-                spec.model, &folded, spec.clone(), &hwv.ems,
-                cfg.eval_limit, cfg.n_seeds, 400)?;
+            let a1 = it
+                .next()
+                .and_then(|p| p.accuracy)
+                .expect("eval requested");
+            let a2 = it
+                .next()
+                .and_then(|p| p.accuracy)
+                .expect("eval requested");
             t.row(vec![format!("{sigma:.2}"), pct(a1), pct(a2)]);
             xs.push(sigma);
             a_cm.push(a1);
             a_cv.push(a2);
         }
         println!("{}", t.render());
-        Report::new(&pipe.store).save_series(
+        Report::new(session.store()).save_series(
             &format!("sigma_sweep_{}", spec.name),
             vec![("dataset", Json::Str(spec.name.into()))],
             vec![("sigma", xs), ("capmin", a_cm), ("capminv", a_cv)],

@@ -2,11 +2,11 @@
 
 use anyhow::Result;
 
-use crate::coordinator::pipeline::Pipeline;
 use crate::data::synth::Dataset;
+use crate::session::DesignSession;
 use crate::util::table::Table;
 
-pub fn table1(_pipe: &Pipeline) -> Result<()> {
+pub fn table1(_session: &DesignSession) -> Result<()> {
     println!("== Table I: datasets ==");
     let mut t = Table::new(&[
         "name", "stands in for", "#train", "#test", "dim", "#classes",
@@ -26,12 +26,13 @@ pub fn table1(_pipe: &Pipeline) -> Result<()> {
     Ok(())
 }
 
-pub fn table2(pipe: &Pipeline) -> Result<()> {
+pub fn table2(session: &DesignSession) -> Result<()> {
     println!("== Table II: BNN architectures (from the AOT manifest) ==");
+    let manifest = &session.runtime()?.manifest;
     let mut t = Table::new(&[
         "model", "architecture", "params", "matmuls", "MHL margin",
     ]);
-    for (name, m) in &pipe.rt.manifest.models {
+    for (name, m) in &manifest.models {
         if name == "vgg3_tiny" {
             continue; // test-only twin
         }
@@ -44,7 +45,7 @@ pub fn table2(pipe: &Pipeline) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
-    if !pipe.rt.manifest.full {
+    if !manifest.full {
         println!(
             "(CPU-budget widths; `make artifacts` with --full restores \
              the paper's exact channel plan — DESIGN.md §6)"

@@ -10,6 +10,12 @@
 //!
 //! Python never runs on the request path: the `capmin` binary loads HLO
 //! text via PJRT and drives everything from Rust.
+//!
+//! The public entry point is [`session::DesignSession`] (DESIGN.md §3):
+//! a typed, memoized operating-point service. Experiment drivers, the
+//! CLI, benches and examples all issue
+//! [`session::OperatingPointSpec`] queries against it; the training /
+//! F_MAC stage graph behind it is crate-internal.
 
 pub mod analog;
 pub mod bnn;
@@ -18,4 +24,5 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod runtime;
+pub mod session;
 pub mod util;

@@ -1,20 +1,27 @@
-//! `capmin` — L3 coordinator CLI.
+//! `capmin` — L3 coordinator CLI over the `DesignSession` query service.
 //!
 //! Python ran once (`make artifacts`); everything below executes from
-//! Rust against the compiled PJRT artifacts.
+//! Rust against the compiled PJRT artifacts, routed through one
+//! memoizing [`DesignSession`] (DESIGN.md §3).
 
 use anyhow::Result;
 
 use capmin::coordinator::config::ExperimentConfig;
-use capmin::coordinator::pipeline::Pipeline;
 use capmin::experiments;
-use capmin::runtime::Runtime;
+use capmin::session::{DesignSession, OperatingPointSpec};
 use capmin::util::cli::Args;
+use capmin::util::table::si;
 
 const HELP: &str = "\
 capmin — CapMin / CapMin-V reproduction (CS.AR 2023)
 
 USAGE: capmin <command> [options]
+
+Every command runs against one DesignSession: a typed, memoized
+operating-point service. Queries (dataset, k, sigma, phi) resolve from
+memory, then from the runs/points/ JSON cache, and only then recompute
+(training, F_MAC extraction and Monte-Carlo maps are all cached in the
+run directory, so figure commands compose without retraining).
 
 experiment commands (paper artifacts):
   table1          Table I  — datasets
@@ -23,14 +30,18 @@ experiment commands (paper artifacts):
   fig3            capacitor charging curves + quantized spike times
   fig5            CapMin window borders over the combined histogram
   fig6            variation vs decision intervals (r_i analysis)
-  fig8            accuracy over k (CapMin / +variation / CapMin-V)
+  fig8            accuracy over k (CapMin / +variation / CapMin-V);
+                  one parallel query_many batch per dataset
   fig9            capacitor size & latency comparison
   headline        summary of the paper's headline claims
   ablation        design-choice ablations (window placement, merge rule)
   sigma-sweep     variation-tolerance curve (CapMin vs CapMin-V)
   all             tables + all figures in order
 
-pipeline commands:
+session commands:
+  point           answer one codesign query and print the operating
+                  point (--k N --phi N --no-eval; sigma from --sigma);
+                  the JSON lands in <run-dir>/points/<key>.json
   train           train a model on a dataset (cached in runs/)
   hist            extract F_MAC for a dataset
   verify          cross-check rust engine determinism + artifact wiring
@@ -43,8 +54,13 @@ common options:
   --paper-scale            full Table I splits (hours)
   --steps N --lr F --train-limit N --eval-limit N --hist-limit N
   --sigma F --mc-samples N --seeds N --ks 32,28,...
+  --k N --phi N --no-eval  (point command)
   --engine eval|evalp      jnp engine or Pallas-kernel engine artifact
   --run-dir DIR            cache directory (default runs/)
+  --no-point-cache         keep operating points in memory only
+
+library use: see DESIGN.md §3 / examples/quickstart.rs —
+`DesignSession::builder().config(cfg).build()?.query(&spec)?`.
 ";
 
 fn main() -> Result<()> {
@@ -53,13 +69,13 @@ fn main() -> Result<()> {
         print!("{HELP}");
         return Ok(());
     }
-    let cfg = ExperimentConfig::from_args(&args);
-    let rt = Runtime::new()?;
-    let pipe = Pipeline::new(&rt, cfg)?;
-    let datasets = experiments::selected_datasets(&args);
+    let cfg = ExperimentConfig::from_args(&args)?;
+    let session = DesignSession::builder().config(cfg).build()?;
+    let datasets = experiments::selected_datasets(&args)?;
 
     match args.cmd.as_str() {
         "info" => {
+            let rt = session.runtime()?;
             println!(
                 "platform: {} ({} devices)",
                 rt.client.platform_name(),
@@ -76,34 +92,85 @@ fn main() -> Result<()> {
                 );
             }
         }
-        "table1" => experiments::tables::table1(&pipe)?,
-        "table2" => experiments::tables::table2(&pipe)?,
-        "fig1" => experiments::fig1::run(&pipe, &datasets)?,
-        "fig3" => experiments::fig3::run(&pipe)?,
-        "fig5" => experiments::fig5::run(&pipe, &datasets)?,
-        "fig6" => experiments::fig6::run(&pipe)?,
-        "fig8" => experiments::fig8::run(&pipe, &datasets)?,
-        "fig9" => experiments::fig9::run(&pipe, &datasets)?,
-        "headline" => experiments::headline::run(&pipe, &datasets)?,
+        "table1" => experiments::tables::table1(&session)?,
+        "table2" => experiments::tables::table2(&session)?,
+        "fig1" => experiments::fig1::run(&session, &datasets)?,
+        "fig3" => experiments::fig3::run(&session)?,
+        "fig5" => experiments::fig5::run(&session, &datasets)?,
+        "fig6" => experiments::fig6::run(&session)?,
+        "fig8" => experiments::fig8::run(&session, &datasets)?,
+        "fig9" => experiments::fig9::run(&session, &datasets)?,
+        "headline" => experiments::headline::run(&session, &datasets)?,
         "all" => {
-            experiments::tables::table1(&pipe)?;
-            experiments::tables::table2(&pipe)?;
-            experiments::fig1::run(&pipe, &datasets)?;
-            experiments::fig3::run(&pipe)?;
-            experiments::fig5::run(&pipe, &datasets)?;
-            experiments::fig6::run(&pipe)?;
-            experiments::fig8::run(&pipe, &datasets)?;
-            experiments::fig9::run(&pipe, &datasets)?;
-            experiments::headline::run(&pipe, &datasets)?;
+            experiments::tables::table1(&session)?;
+            experiments::tables::table2(&session)?;
+            experiments::fig1::run(&session, &datasets)?;
+            experiments::fig3::run(&session)?;
+            experiments::fig5::run(&session, &datasets)?;
+            experiments::fig6::run(&session)?;
+            experiments::fig8::run(&session, &datasets)?;
+            experiments::fig9::run(&session, &datasets)?;
+            experiments::headline::run(&session, &datasets)?;
+        }
+        "point" => {
+            let cfg = session.config();
+            let k = args.usize_or("k", 14);
+            let phi = args.usize_or("phi", 0);
+            anyhow::ensure!(
+                (1..=32).contains(&k),
+                "bad --k `{k}`: CapMin k must be in 1..=32"
+            );
+            anyhow::ensure!(
+                phi < k,
+                "bad --phi `{phi}`: CapMin-V merges must leave at least \
+                 one spike time (phi < k)"
+            );
+            let (sigma, n_seeds) = (cfg.sigma_rel, cfg.n_seeds);
+            for &ds in &datasets {
+                let mut spec = OperatingPointSpec::new(ds, k, sigma, phi);
+                if !args.flag("no-eval") {
+                    spec = spec.with_eval(1, n_seeds);
+                }
+                let key = spec.cache_key(cfg);
+                let point = session.query(&spec)?;
+                let w = point.peak_window();
+                println!(
+                    "{}: k={k} sigma={sigma} phi={phi} -> C {} | GRT {} \
+                     | peak window [{},{}] | accuracy {}",
+                    ds.spec().name,
+                    si(point.c, "F"),
+                    si(point.grt, "s"),
+                    w.q_lo,
+                    w.q_hi,
+                    point
+                        .accuracy
+                        .map(|a| format!("{:.1}%", 100.0 * a))
+                        .unwrap_or_else(|| "-".into()),
+                );
+                if cfg.point_cache {
+                    println!(
+                        "  cached at {}",
+                        session.store().path("points").join(
+                            format!("{key}.json")
+                        ).display()
+                    );
+                }
+            }
+            let s = session.stats();
+            println!(
+                "session stats: {} queries | {} memory hits | {} disk \
+                 hits | {} solves | {} evals",
+                s.queries, s.mem_hits, s.disk_hits, s.solves, s.evals
+            );
         }
         "train" => {
             for ds in datasets {
-                pipe.ensure_folded(ds)?;
+                session.ensure_trained(ds)?;
             }
         }
         "hist" => {
             for ds in datasets {
-                let (_, sum) = pipe.ensure_fmac(ds)?;
+                let (_, sum) = session.fmac(ds)?;
                 println!(
                     "{}: {} sub-MACs, dynamic range {:.1e}",
                     ds.spec().name,
@@ -112,9 +179,11 @@ fn main() -> Result<()> {
                 );
             }
         }
-        "ablation" => experiments::ablation::run(&pipe, &datasets)?,
-        "sigma-sweep" => experiments::sigma_sweep::run(&pipe, &datasets)?,
-        "verify" => verify(&pipe)?,
+        "ablation" => experiments::ablation::run(&session, &datasets)?,
+        "sigma-sweep" => {
+            experiments::sigma_sweep::run(&session, &datasets)?
+        }
+        "verify" => verify(&session)?,
         other => {
             eprintln!("unknown command `{other}`\n\n{HELP}");
             std::process::exit(2);
@@ -124,20 +193,24 @@ fn main() -> Result<()> {
 }
 
 /// Sanity pass over the full pipeline wiring: trains (or loads) the tiny
-/// model's dataset, folds, builds an error model and checks the Rust
-/// bit-packed engine is deterministic on the folded weights. The
+/// model's dataset, folds, queries an operating point and checks the
+/// Rust bit-packed engine is deterministic on the folded weights. The
 /// bit-exact rust-vs-artifact comparison lives in tests/integration.rs.
-fn verify(pipe: &Pipeline) -> Result<()> {
+fn verify(session: &DesignSession) -> Result<()> {
     use capmin::bnn::{BitMatrix, SubMacEngine};
     use capmin::runtime::to_f32;
 
-    let rt = pipe.rt;
+    let rt = session.runtime()?;
     let ds = capmin::data::synth::Dataset::FashionSyn;
     let model = rt.manifest.datasets["fashion_syn"].model.clone();
     let mi = rt.manifest.model(&model);
-    println!("verify: {} via {} artifact", model, pipe.cfg.engine);
+    println!(
+        "verify: {} via {} artifact",
+        model,
+        session.config().engine
+    );
 
-    let folded = pipe.ensure_folded(ds)?;
+    let folded = session.folded(ds)?;
     let sig = &mi.artifacts["export"].outputs[0];
     anyhow::ensure!(sig.name == "wb0");
     let wb = to_f32(&folded[0])?;
@@ -147,9 +220,9 @@ fn verify(pipe: &Pipeline) -> Result<()> {
     let mut rng = capmin::util::rng::Rng::new(99);
     let x_rows: Vec<f32> = (0..d * kp).map(|_| rng.pm1(0.5)).collect();
 
-    let (per_fmac, _) = pipe.ensure_fmac(ds)?;
-    let hw = pipe.hw_config(&per_fmac, 14, 0.03, 0);
-    let em = hw.ems[0].clone();
+    let point =
+        session.query(&OperatingPointSpec::new(ds, 14, 0.03, 0))?;
+    let em = point.ems[0].clone();
 
     let eng = SubMacEngine::new(o, kp, &wb, beta);
     let xb = BitMatrix::pack(d, kp, &x_rows, false);

@@ -1,0 +1,158 @@
+//! Operating-point memoization: an in-memory map in front of the
+//! on-disk `runs/points/` directory (DESIGN.md §7).
+//!
+//! Entries are keyed by the spec's content-addressed key; a disk entry
+//! is trusted only if its embedded spec matches the request (collision
+//! and stale-format guard). Corrupt or mismatched files are treated as
+//! misses and overwritten on the next store.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::point::OperatingPoint;
+use super::spec::OperatingPointSpec;
+use crate::util::json::Json;
+
+pub struct PointCache {
+    dir: PathBuf,
+    /// When false, the disk layer is bypassed entirely (benchmarks and
+    /// cold-path measurements; `--no-point-cache` on the CLI).
+    persist: bool,
+    mem: Mutex<HashMap<String, Arc<OperatingPoint>>>,
+}
+
+impl PointCache {
+    pub fn new(dir: PathBuf, persist: bool) -> PointCache {
+        PointCache {
+            dir,
+            persist,
+            mem: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.json"))
+    }
+
+    pub fn get_memory(&self, key: &str) -> Option<Arc<OperatingPoint>> {
+        self.mem.lock().unwrap().get(key).cloned()
+    }
+
+    /// Disk probe: parse + spec check; promotes a hit into memory.
+    pub fn get_disk(
+        &self,
+        key: &str,
+        spec: &OperatingPointSpec,
+    ) -> Option<Arc<OperatingPoint>> {
+        if !self.persist {
+            return None;
+        }
+        let text = fs::read_to_string(self.path(key)).ok()?;
+        let json = Json::parse(&text).ok()?;
+        let point = OperatingPoint::from_json(&json).ok()?;
+        if point.spec != *spec {
+            return None;
+        }
+        let point = Arc::new(point);
+        self.mem
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), point.clone());
+        Some(point)
+    }
+
+    /// Insert into memory and (atomically) onto disk.
+    pub fn put(&self, key: &str, point: Arc<OperatingPoint>)
+        -> Result<()> {
+        if self.persist {
+            fs::create_dir_all(&self.dir)?;
+            let tmp = self.dir.join(format!("{key}.json.tmp"));
+            fs::write(&tmp, point.to_json().to_string())?;
+            fs::rename(tmp, self.path(key))?;
+        }
+        self.mem
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), point);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::params::AnalogParams;
+    use crate::capmin::Fmac;
+    use crate::data::synth::Dataset;
+    use crate::session::solver::solve;
+
+    fn test_point(k: usize) -> (OperatingPointSpec, Arc<OperatingPoint>) {
+        let spec = OperatingPointSpec::new(Dataset::FashionSyn, k, 0.0, 0);
+        let hw = solve(
+            AnalogParams::paper_calibrated(),
+            1,
+            50,
+            &[Fmac::gaussian(16, 2.0, 1e8)],
+            k,
+            0.0,
+            0,
+        );
+        (spec, Arc::new(OperatingPoint::from_solve(spec, hw, None)))
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "capmin_pointcache_{tag}_{}",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn disk_roundtrip_and_spec_guard() {
+        let dir = tmp_dir("rt");
+        let _ = fs::remove_dir_all(&dir);
+        let cache = PointCache::new(dir.clone(), true);
+        let (spec, point) = test_point(14);
+        cache.put("abc", point.clone()).unwrap();
+        // fresh cache over the same dir: memory cold, disk warm
+        let cold = PointCache::new(dir.clone(), true);
+        assert!(cold.get_memory("abc").is_none());
+        let hit = cold.get_disk("abc", &spec).unwrap();
+        assert_eq!(*hit, *point);
+        // after the disk hit the entry is promoted to memory
+        assert!(cold.get_memory("abc").is_some());
+        // a different spec under the same key is rejected
+        let other = OperatingPointSpec::new(Dataset::FashionSyn, 8, 0.0, 0);
+        assert!(cold.get_disk("abc", &other).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_entries_are_misses() {
+        let dir = tmp_dir("corrupt");
+        let _ = fs::remove_dir_all(&dir);
+        let cache = PointCache::new(dir.clone(), true);
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(cache.path("bad"), "{not json").unwrap();
+        let (spec, _) = test_point(14);
+        assert!(cache.get_disk("bad", &spec).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persist_false_skips_disk() {
+        let dir = tmp_dir("nopersist");
+        let _ = fs::remove_dir_all(&dir);
+        let cache = PointCache::new(dir.clone(), false);
+        let (spec, point) = test_point(14);
+        cache.put("xyz", point).unwrap();
+        assert!(!cache.path("xyz").exists());
+        assert!(cache.get_memory("xyz").is_some());
+        assert!(cache.get_disk("xyz", &spec).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,437 @@
+//! `DesignSession` — the crate's public codesign query service
+//! (DESIGN.md §3).
+//!
+//! The paper's core deliverable is a *codesign query*: given a model's
+//! F_MAC statistics and a (k, sigma, phi) choice, produce a hardware
+//! operating point — window, capacitor size, spike-time set, error
+//! model, accuracy. A session owns the PJRT [`Runtime`] (lazily
+//! initialized: hardware-only queries never load artifacts), the run
+//! [`Store`] and the [`ExperimentConfig`], and answers typed
+//! [`OperatingPointSpec`] requests with memoized [`OperatingPoint`]s:
+//!
+//! ```no_run
+//! use capmin::coordinator::config::ExperimentConfig;
+//! use capmin::data::synth::Dataset;
+//! use capmin::session::{DesignSession, OperatingPointSpec};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let session = DesignSession::builder()
+//!     .config(ExperimentConfig::default())
+//!     .build()?;
+//! let spec = OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 0)
+//!     .with_eval(1, 3);
+//! let point = session.query(&spec)?;
+//! println!("C = {:.3e} F, accuracy {:?}", point.c, point.accuracy);
+//! # Ok(()) }
+//! ```
+//!
+//! Repeated (spec -> point) queries hit an in-memory map, then the
+//! on-disk `runs/points/` cache, before any Monte-Carlo work reruns;
+//! [`DesignSession::query_many`] additionally fans independent solves
+//! out across threads. The old `Pipeline` stage graph survives as a
+//! crate-internal implementation detail of this module.
+
+pub mod cache;
+pub mod point;
+pub mod solver;
+pub mod spec;
+
+use std::cell::{Cell, OnceCell};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::analog::params::AnalogParams;
+use crate::capmin::Fmac;
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::evaluator::Evaluator;
+use crate::coordinator::pipeline::Pipeline;
+use crate::coordinator::store::Store;
+use crate::data::synth::Dataset;
+use crate::runtime::Runtime;
+
+use cache::PointCache;
+pub use point::OperatingPoint;
+use solver::HwSolve;
+pub use spec::{EvalSettings, OperatingPointSpec};
+
+/// Monotone counters exposing the session's cache behaviour: tests
+/// assert memoization through them (`solves` must not grow on a repeat
+/// query) and the CLI prints them after a `point` command.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Specs received via `query` / `query_many`.
+    pub queries: u64,
+    /// Answered from the in-memory map.
+    pub mem_hits: u64,
+    /// Answered from `runs/points/` (then promoted to memory).
+    pub disk_hits: u64,
+    /// Hardware solves actually executed (window + capacitor + MC).
+    pub solves: u64,
+    /// Accuracy evaluations actually executed (PJRT eval artifact).
+    pub evals: u64,
+}
+
+impl SessionStats {
+    pub fn hits(&self) -> u64 {
+        self.mem_hits + self.disk_hits
+    }
+}
+
+pub struct DesignSession {
+    cfg: ExperimentConfig,
+    store: Store,
+    /// Lazily constructed: a session serving cached points (or
+    /// hardware-only queries on injected F_MACs) never compiles
+    /// artifacts.
+    rt: OnceCell<Runtime>,
+    points: PointCache,
+    /// Hardware solves keyed without the eval settings: querying the
+    /// same (dataset, k, sigma, phi) with and without accuracy
+    /// evaluation shares one Monte-Carlo solve.
+    hw_solves: Mutex<HashMap<String, HwSolve>>,
+    fmacs: Mutex<HashMap<Dataset, (Vec<Fmac>, Fmac)>>,
+    folded: Mutex<HashMap<Dataset, Arc<Vec<xla::Literal>>>>,
+    stats: Cell<SessionStats>,
+}
+
+pub struct DesignSessionBuilder {
+    cfg: ExperimentConfig,
+    runtime: Option<Runtime>,
+}
+
+impl DesignSessionBuilder {
+    pub fn config(mut self, cfg: ExperimentConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Override the run/cache directory without touching the rest of
+    /// the config.
+    pub fn run_dir(mut self, dir: &str) -> Self {
+        self.cfg.run_dir = dir.to_string();
+        self
+    }
+
+    /// Supply a pre-built runtime (benches that also drive the trainer
+    /// directly share one PJRT client with the session).
+    pub fn runtime(mut self, rt: Runtime) -> Self {
+        self.runtime = Some(rt);
+        self
+    }
+
+    pub fn build(self) -> Result<DesignSession> {
+        let store = Store::new(&self.cfg.run_dir)?;
+        let points =
+            PointCache::new(store.path("points"), self.cfg.point_cache);
+        let rt = OnceCell::new();
+        if let Some(r) = self.runtime {
+            let _ = rt.set(r);
+        }
+        Ok(DesignSession {
+            cfg: self.cfg,
+            store,
+            rt,
+            points,
+            hw_solves: Mutex::new(HashMap::new()),
+            fmacs: Mutex::new(HashMap::new()),
+            folded: Mutex::new(HashMap::new()),
+            stats: Cell::new(SessionStats::default()),
+        })
+    }
+}
+
+impl DesignSession {
+    pub fn builder() -> DesignSessionBuilder {
+        DesignSessionBuilder {
+            cfg: ExperimentConfig::default(),
+            runtime: None,
+        }
+    }
+
+    /// Shorthand for `builder().config(cfg).build()`.
+    pub fn new(cfg: ExperimentConfig) -> Result<DesignSession> {
+        DesignSession::builder().config(cfg).build()
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn store(&self) -> &Store {
+        &self.store
+    }
+
+    /// The analog substrate parameters at the session's default sigma.
+    pub fn params(&self) -> AnalogParams {
+        AnalogParams::paper_calibrated().with_sigma(self.cfg.sigma_rel)
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        self.stats.get()
+    }
+
+    /// The PJRT runtime, constructed on first use.
+    pub fn runtime(&self) -> Result<&Runtime> {
+        if self.rt.get().is_none() {
+            let rt = Runtime::new()?;
+            // single-threaded session: set cannot race
+            let _ = self.rt.set(rt);
+        }
+        Ok(self.rt.get().expect("runtime just initialized"))
+    }
+
+    /// Hardware-mode accuracy evaluator on the session's engine.
+    pub fn evaluator(&self) -> Result<Evaluator<'_>> {
+        Ok(Evaluator::new(self.runtime()?, &self.cfg.engine))
+    }
+
+    fn pipeline(&self) -> Result<Pipeline<'_>> {
+        Pipeline::new(self.runtime()?, self.cfg.clone())
+    }
+
+    /// Train (or load) `ds`'s model so later queries only pay for the
+    /// solve + eval.
+    pub fn ensure_trained(&self, ds: Dataset) -> Result<()> {
+        self.folded(ds).map(|_| ())
+    }
+
+    /// Trained + folded hardware tensors for `ds` (memory-, then
+    /// disk-cached; trains on a cold store).
+    pub fn folded(&self, ds: Dataset) -> Result<Arc<Vec<xla::Literal>>> {
+        if let Some(f) = self.folded.lock().unwrap().get(&ds) {
+            return Ok(f.clone());
+        }
+        let lits = Arc::new(self.pipeline()?.ensure_folded(ds)?);
+        self.folded.lock().unwrap().insert(ds, lits.clone());
+        Ok(lits)
+    }
+
+    /// F_MAC histograms for `ds`: (per-matmul, sum). Served from memory
+    /// or the run store without touching the runtime when possible.
+    pub fn fmac(&self, ds: Dataset) -> Result<(Vec<Fmac>, Fmac)> {
+        if let Some(f) = self.fmacs.lock().unwrap().get(&ds) {
+            return Ok(f.clone());
+        }
+        let cache = Pipeline::fmac_cache_name(ds);
+        let res = if self.store.exists(&cache) {
+            self.store.load_fmac(&cache)?
+        } else {
+            self.pipeline()?.ensure_fmac(ds)?
+        };
+        self.fmacs.lock().unwrap().insert(ds, res.clone());
+        Ok(res)
+    }
+
+    /// Inject F_MAC statistics for `ds` instead of extracting them —
+    /// offline tests and benches query hardware points on synthetic
+    /// histograms without artifacts or training.
+    pub fn put_fmac(&self, ds: Dataset, per_matmul: Vec<Fmac>, sum: Fmac) {
+        self.fmacs.lock().unwrap().insert(ds, (per_matmul, sum));
+    }
+
+    /// Answer one codesign query (memoized).
+    pub fn query(&self, spec: &OperatingPointSpec)
+        -> Result<Arc<OperatingPoint>> {
+        self.bump(|s| s.queries += 1);
+        let key = spec.cache_key(&self.cfg);
+        if let Some(p) = self.lookup(&key, spec) {
+            return Ok(p);
+        }
+        let hw = self.hw_solve(spec)?;
+        self.finish(spec, &key, hw)
+    }
+
+    /// The shared hardware solve behind a spec: served from the
+    /// in-memory solve cache when only the eval settings differ.
+    fn hw_solve(&self, spec: &OperatingPointSpec) -> Result<HwSolve> {
+        let hkey = spec.hw_cache_key(&self.cfg);
+        if let Some(hw) = self.hw_solves.lock().unwrap().get(&hkey) {
+            return Ok(hw.clone());
+        }
+        let (per_fmac, _) = self.fmac(spec.dataset)?;
+        let hw = solver::solve(
+            self.params(),
+            self.cfg.seed,
+            self.cfg.mc_samples,
+            &per_fmac,
+            spec.k,
+            spec.sigma,
+            spec.phi,
+        );
+        self.bump(|s| s.solves += 1);
+        self.hw_solves.lock().unwrap().insert(hkey, hw.clone());
+        Ok(hw)
+    }
+
+    /// Answer a batch of independent queries, solving cache misses in
+    /// parallel with scoped threads (the MC/pmap stage is embarrassingly
+    /// parallel and dominates sweep wall time). Results match
+    /// sequential [`DesignSession::query`] calls exactly: every solve
+    /// seeds its PRNG streams from (config seed, matmul index) only, so
+    /// thread scheduling cannot change an answer.
+    pub fn query_many(&self, specs: &[OperatingPointSpec])
+        -> Result<Vec<Arc<OperatingPoint>>> {
+        self.bump(|s| s.queries += specs.len() as u64);
+        let keys: Vec<String> =
+            specs.iter().map(|s| s.cache_key(&self.cfg)).collect();
+        let mut out: Vec<Option<Arc<OperatingPoint>>> = specs
+            .iter()
+            .zip(&keys)
+            .map(|(s, k)| self.lookup(k, s))
+            .collect();
+
+        // one solve job per distinct *hardware* key among the misses
+        // (eval variants of the same point share it)
+        let hkeys: Vec<String> = specs
+            .iter()
+            .map(|s| s.hw_cache_key(&self.cfg))
+            .collect();
+        struct Job {
+            hkey: String,
+            base: AnalogParams,
+            seed: u64,
+            mc_samples: usize,
+            per_fmac: Vec<Fmac>,
+            k: usize,
+            sigma: f64,
+            phi: usize,
+        }
+        let mut jobs: Vec<Job> = vec![];
+        let mut queued: HashSet<String> = HashSet::new();
+        for (i, spec) in specs.iter().enumerate() {
+            if out[i].is_some()
+                || queued.contains(&hkeys[i])
+                || self.hw_solves.lock().unwrap().contains_key(&hkeys[i])
+            {
+                continue;
+            }
+            // F_MAC extraction (and any training) happens here,
+            // sequentially: the runtime is not thread-safe, the solve is.
+            let (per_fmac, _) = self.fmac(spec.dataset)?;
+            queued.insert(hkeys[i].clone());
+            jobs.push(Job {
+                hkey: hkeys[i].clone(),
+                base: self.params(),
+                seed: self.cfg.seed,
+                mc_samples: self.cfg.mc_samples,
+                per_fmac,
+                k: spec.k,
+                sigma: spec.sigma,
+                phi: spec.phi,
+            });
+        }
+
+        let solved: Mutex<Vec<(String, HwSolve)>> =
+            Mutex::new(Vec::with_capacity(jobs.len()));
+        if !jobs.is_empty() {
+            let n_workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(jobs.len());
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..n_workers {
+                    // handles are joined by the scope itself
+                    let _ = scope.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        let j = &jobs[i];
+                        let hw = solver::solve(
+                            j.base,
+                            j.seed,
+                            j.mc_samples,
+                            &j.per_fmac,
+                            j.k,
+                            j.sigma,
+                            j.phi,
+                        );
+                        solved.lock().unwrap().push((j.hkey.clone(), hw));
+                    });
+                }
+            });
+            self.bump(|s| s.solves += jobs.len() as u64);
+            let mut hw_solves = self.hw_solves.lock().unwrap();
+            for (hkey, hw) in solved.into_inner().unwrap() {
+                hw_solves.insert(hkey, hw);
+            }
+        }
+
+        // finish in request order (accuracy evaluation is sequential:
+        // one PJRT client); duplicates of an already-finished key are
+        // served from memory
+        for (i, spec) in specs.iter().enumerate() {
+            if out[i].is_some() {
+                continue;
+            }
+            if let Some(p) = self.points.get_memory(&keys[i]) {
+                out[i] = Some(p);
+                continue;
+            }
+            let hw = self
+                .hw_solves
+                .lock()
+                .unwrap()
+                .get(&hkeys[i])
+                .cloned()
+                .expect("a solve was queued for every miss");
+            out[i] = Some(self.finish(spec, &keys[i], hw)?);
+        }
+        Ok(out.into_iter().map(|p| p.expect("filled above")).collect())
+    }
+
+    fn lookup(&self, key: &str, spec: &OperatingPointSpec)
+        -> Option<Arc<OperatingPoint>> {
+        if let Some(p) = self.points.get_memory(key) {
+            self.bump(|s| s.mem_hits += 1);
+            return Some(p);
+        }
+        if let Some(p) = self.points.get_disk(key, spec) {
+            self.bump(|s| s.disk_hits += 1);
+            return Some(p);
+        }
+        None
+    }
+
+    /// Accuracy-evaluate (if requested), package, and cache one solved
+    /// point.
+    fn finish(
+        &self,
+        spec: &OperatingPointSpec,
+        key: &str,
+        hw: HwSolve,
+    ) -> Result<Arc<OperatingPoint>> {
+        let accuracy = match spec.eval {
+            None => None,
+            Some(e) => {
+                let ds = spec.dataset.spec();
+                let folded = self.folded(spec.dataset)?;
+                let ev = self.evaluator()?;
+                self.bump(|s| s.evals += 1);
+                Some(ev.accuracy_multi_seed(
+                    ds.model,
+                    folded.as_slice(),
+                    ds.clone(),
+                    &hw.ems,
+                    self.cfg.eval_limit,
+                    e.n_seeds,
+                    e.seed,
+                )?)
+            }
+        };
+        let point =
+            Arc::new(OperatingPoint::from_solve(*spec, hw, accuracy));
+        self.points.put(key, point.clone())?;
+        Ok(point)
+    }
+
+    fn bump(&self, f: impl FnOnce(&mut SessionStats)) {
+        let mut s = self.stats.get();
+        f(&mut s);
+        self.stats.set(s);
+    }
+}

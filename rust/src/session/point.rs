@@ -1,0 +1,283 @@
+//! The typed result of a codesign query, with a stable JSON form
+//! (DESIGN.md §3, §7): everything a downstream consumer (bench, plot
+//! script, future HTTP front-end) needs without re-running the pipeline.
+
+use anyhow::{anyhow, Result};
+
+use super::solver::HwSolve;
+use super::spec::OperatingPointSpec;
+use crate::bnn::ErrorModel;
+use crate::capmin::{CapMinResult, N_LEVELS};
+use crate::util::json::{obj, Json};
+
+/// One hardware operating point: the answer to an
+/// [`OperatingPointSpec`] query.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OperatingPoint {
+    pub spec: OperatingPointSpec,
+    /// Shared membrane capacitance [F] (sized by the topmost window).
+    pub c: f64,
+    /// Guaranteed response time of the slowest window [s].
+    pub grt: f64,
+    /// CapMin window per matmul.
+    pub windows: Vec<CapMinResult>,
+    /// Read-out levels per matmul (post CapMin-V merging when phi > 0).
+    pub levels: Vec<Vec<usize>>,
+    /// Quantized spike time per read-out level, per matmul [s].
+    pub times: Vec<Vec<f64>>,
+    /// Error model per matmul (the eval artifacts' runtime input).
+    pub ems: Vec<ErrorModel>,
+    /// Mean test accuracy under the error models (None for hardware-only
+    /// queries, `spec.eval = None`).
+    pub accuracy: Option<f64>,
+}
+
+impl OperatingPoint {
+    pub fn from_solve(
+        spec: OperatingPointSpec,
+        hw: HwSolve,
+        accuracy: Option<f64>,
+    ) -> OperatingPoint {
+        OperatingPoint {
+            spec,
+            c: hw.c,
+            grt: hw.grt(),
+            levels: hw.sets.iter().map(|s| s.levels.clone()).collect(),
+            times: hw.sets.iter().map(|s| s.times.clone()).collect(),
+            windows: hw.windows,
+            ems: hw.ems,
+            accuracy,
+        }
+    }
+
+    /// The peak (topmost) window — what drives the capacitor.
+    pub fn peak_window(&self) -> &CapMinResult {
+        self.windows
+            .iter()
+            .max_by_key(|w| w.q_hi)
+            .expect("at least one matmul")
+    }
+
+    /// Stable JSON form written to `runs/points/<key>.json`.
+    pub fn to_json(&self) -> Json {
+        let windows = Json::Arr(
+            self.windows
+                .iter()
+                .map(|w| {
+                    obj(vec![
+                        ("k", Json::Num(w.k as f64)),
+                        ("q_lo", Json::Num(w.q_lo as f64)),
+                        ("q_hi", Json::Num(w.q_hi as f64)),
+                        ("coverage", Json::Num(w.coverage)),
+                    ])
+                })
+                .collect(),
+        );
+        let levels = Json::Arr(
+            self.levels
+                .iter()
+                .map(|ls| {
+                    Json::Arr(
+                        ls.iter().map(|&l| Json::Num(l as f64)).collect(),
+                    )
+                })
+                .collect(),
+        );
+        let times = Json::Arr(
+            self.times
+                .iter()
+                .map(|ts| {
+                    Json::Arr(ts.iter().map(|&t| Json::Num(t)).collect())
+                })
+                .collect(),
+        );
+        let ems = Json::Arr(
+            self.ems
+                .iter()
+                .map(|em| {
+                    obj(vec![
+                        (
+                            "cdf",
+                            Json::Arr(
+                                em.cdf
+                                    .iter()
+                                    .map(|&v| Json::Num(v as f64))
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "vals",
+                            Json::Arr(
+                                em.vals
+                                    .iter()
+                                    .map(|&v| Json::Num(v as f64))
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("spec", self.spec.to_json()),
+            ("c", Json::Num(self.c)),
+            ("grt", Json::Num(self.grt)),
+            ("windows", windows),
+            ("levels", levels),
+            ("times", times),
+            ("ems", ems),
+            (
+                "accuracy",
+                match self.accuracy {
+                    Some(a) => Json::Num(a),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<OperatingPoint> {
+        let field = |k: &str| {
+            j.get(k)
+                .ok_or_else(|| anyhow!("point JSON missing `{k}`"))
+        };
+        let num = |v: &Json, what: &str| -> Result<f64> {
+            match v {
+                Json::Num(n) => Ok(*n),
+                other => Err(anyhow!("bad {what}: {other:?}")),
+            }
+        };
+        let arr = |v: &Json, what: &str| -> Result<Vec<Json>> {
+            match v {
+                Json::Arr(a) => Ok(a.clone()),
+                other => Err(anyhow!("bad {what}: {other:?}")),
+            }
+        };
+        let spec = OperatingPointSpec::from_json(field("spec")?)?;
+        let mut windows = vec![];
+        for w in arr(field("windows")?, "windows")? {
+            windows.push(CapMinResult {
+                k: num(
+                    w.get("k")
+                        .ok_or_else(|| anyhow!("window missing k"))?,
+                    "window k",
+                )? as usize,
+                q_lo: num(
+                    w.get("q_lo")
+                        .ok_or_else(|| anyhow!("window missing q_lo"))?,
+                    "window q_lo",
+                )? as usize,
+                q_hi: num(
+                    w.get("q_hi")
+                        .ok_or_else(|| anyhow!("window missing q_hi"))?,
+                    "window q_hi",
+                )? as usize,
+                coverage: num(
+                    w.get("coverage")
+                        .ok_or_else(|| anyhow!("window missing coverage"))?,
+                    "window coverage",
+                )?,
+            });
+        }
+        let mut levels = vec![];
+        for ls in arr(field("levels")?, "levels")? {
+            let mut row = vec![];
+            for l in arr(&ls, "levels row")? {
+                row.push(num(&l, "level")? as usize);
+            }
+            levels.push(row);
+        }
+        let mut times = vec![];
+        for ts in arr(field("times")?, "times")? {
+            let mut row = vec![];
+            for t in arr(&ts, "times row")? {
+                row.push(num(&t, "time")?);
+            }
+            times.push(row);
+        }
+        let mut ems = vec![];
+        for e in arr(field("ems")?, "ems")? {
+            let cdf_j = e
+                .get("cdf")
+                .ok_or_else(|| anyhow!("em missing cdf"))?;
+            let vals_j = e
+                .get("vals")
+                .ok_or_else(|| anyhow!("em missing vals"))?;
+            let mut cdf = vec![];
+            for v in arr(cdf_j, "em cdf")? {
+                cdf.push(num(&v, "cdf entry")? as f32);
+            }
+            let mut vals = vec![];
+            for v in arr(vals_j, "em vals")? {
+                vals.push(num(&v, "vals entry")? as f32);
+            }
+            if cdf.len() != N_LEVELS * N_LEVELS || vals.len() != N_LEVELS {
+                return Err(anyhow!(
+                    "error-model shape {}/{} (want {}/{})",
+                    cdf.len(),
+                    vals.len(),
+                    N_LEVELS * N_LEVELS,
+                    N_LEVELS
+                ));
+            }
+            ems.push(ErrorModel { cdf, vals });
+        }
+        let accuracy = match field("accuracy")? {
+            Json::Null => None,
+            v => Some(num(v, "accuracy")?),
+        };
+        Ok(OperatingPoint {
+            spec,
+            c: num(field("c")?, "c")?,
+            grt: num(field("grt")?, "grt")?,
+            windows,
+            levels,
+            times,
+            ems,
+            accuracy,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::params::AnalogParams;
+    use crate::capmin::Fmac;
+    use crate::data::synth::Dataset;
+    use crate::session::solver::solve;
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let p = AnalogParams::paper_calibrated();
+        let fmacs =
+            vec![Fmac::gaussian(5, 2.0, 1e8), Fmac::gaussian(16, 2.0, 1e8)];
+        let spec =
+            OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 2)
+                .with_eval(7, 3);
+        let hw = solve(p, 42, 100, &fmacs, spec.k, spec.sigma, spec.phi);
+        let point = OperatingPoint::from_solve(spec, hw, Some(0.913));
+        let text = point.to_json().to_string();
+        let back = OperatingPoint::from_json(
+            &Json::parse(&text).map_err(anyhow::Error::msg).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(point, back);
+    }
+
+    #[test]
+    fn hardware_only_point_roundtrips_null_accuracy() {
+        let p = AnalogParams::paper_calibrated();
+        let fmacs = vec![Fmac::gaussian(16, 2.0, 1e8)];
+        let spec = OperatingPointSpec::new(Dataset::KmnistSyn, 16, 0.0, 0);
+        let hw = solve(p, 1, 50, &fmacs, spec.k, spec.sigma, spec.phi);
+        let point = OperatingPoint::from_solve(spec, hw, None);
+        let text = point.to_json().to_string();
+        let back = OperatingPoint::from_json(
+            &Json::parse(&text).map_err(anyhow::Error::msg).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.accuracy, None);
+        assert_eq!(point, back);
+    }
+}

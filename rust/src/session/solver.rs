@@ -1,0 +1,161 @@
+//! The pure hardware solve behind an operating-point query (DESIGN.md
+//! §3): CapMin windows -> shared capacitor -> spike-time sets ->
+//! (CapMin-V merging) -> Monte-Carlo error models.
+//!
+//! This is deliberately free of the runtime, the store and the session
+//! itself: it is pure CPU work on plain data, which is what lets
+//! `DesignSession::query_many` fan it out across threads (the MC stage
+//! dominates the fig8 / sigma-sweep wall time).
+
+use crate::analog::capacitor::{CapacitorModel, CapacitorSolver};
+use crate::analog::montecarlo::MonteCarlo;
+use crate::analog::neuron::SpikeTimeSet;
+use crate::analog::params::AnalogParams;
+use crate::analog::pmap::Pmap;
+use crate::bnn::ErrorModel;
+use crate::capmin::{capmin::select_window, capmin_v::capmin_v, Fmac};
+use crate::capmin::CapMinResult;
+use crate::util::rng::Rng;
+
+/// One solved hardware read-out configuration: shared capacitor plus
+/// per-matmul windows, spike-time sets and error models. The in-memory
+/// twin of [`super::OperatingPoint`] before accuracy evaluation;
+/// `Clone` lets the session reuse one solve across eval variants.
+#[derive(Clone)]
+pub struct HwSolve {
+    /// Shared membrane capacitance [F] (sized by the topmost window).
+    pub c: f64,
+    /// CapMin window per matmul.
+    pub windows: Vec<CapMinResult>,
+    /// Spike-time set per matmul (post CapMin-V merging when phi > 0).
+    pub sets: Vec<SpikeTimeSet>,
+    /// Error model per matmul (the eval artifacts' runtime input).
+    pub ems: Vec<ErrorModel>,
+}
+
+impl HwSolve {
+    /// Guaranteed response time of the slowest window (system latency).
+    pub fn grt(&self) -> f64 {
+        self.sets.iter().map(|s| s.grt()).fold(0.0f64, f64::max)
+    }
+
+    /// The peak (topmost) window — what drives the capacitor.
+    pub fn peak_window(&self) -> &CapMinResult {
+        self.windows
+            .iter()
+            .max_by_key(|w| w.q_hi)
+            .expect("at least one matmul")
+    }
+}
+
+/// Solve the full hardware read-out configuration for one model at
+/// CapMin parameter k: per-matmul windows, one shared capacitor, and the
+/// per-matmul error models the eval artifacts consume.
+///
+/// The IF-SNN has ONE membrane capacitor, but the spike-time decoder
+/// is digital and per layer: a matmul whose reduction length only
+/// reaches level 9 (grayscale first conv, beta = 9) keeps its own
+/// narrow window instead of being wiped out by the peak-centered
+/// global window. The capacitor is sized by the most demanding
+/// window (largest q_hi) — lower windows have wider time gaps and
+/// ride along for free. `phi > 0` applies CapMin-V merging to each
+/// window (clamped to its size). `sigma = 0` yields the
+/// deterministic Eq.-4 clipping maps.
+///
+/// `seed` and `mc_samples` come from the session's `ExperimentConfig`;
+/// the per-matmul MC streams derive deterministically from them, so the
+/// result is independent of which thread runs the solve.
+pub fn solve(
+    base: AnalogParams,
+    seed: u64,
+    mc_samples: usize,
+    per_fmac: &[Fmac],
+    k: usize,
+    sigma: f64,
+    phi: usize,
+) -> HwSolve {
+    let p = base.with_sigma(sigma);
+    let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+    let windows: Vec<_> = per_fmac
+        .iter()
+        .map(|f| select_window(f, k))
+        .collect();
+    let c = windows
+        .iter()
+        .map(|w| solver.size_for_window(w.q_lo, w.q_hi))
+        .fold(0.0f64, f64::max);
+    let mc = MonteCarlo::new(p).with_samples(mc_samples);
+    let mut sets = Vec::with_capacity(windows.len());
+    let mut ems = Vec::with_capacity(windows.len());
+    for (i, w) in windows.iter().enumerate() {
+        let base_set = SpikeTimeSet::new(&p, c, w.levels());
+        let levels = if phi > 0 {
+            let pmap: Pmap = mc.pmap(
+                &base_set,
+                &mut Rng::new(seed ^ 0x5107 ^ i as u64),
+            );
+            let res = capmin_v(pmap, phi.min(w.k - 1));
+            res.levels
+        } else {
+            w.levels()
+        };
+        let set = SpikeTimeSet::new(&p, c, levels);
+        let full = if sigma == 0.0 {
+            mc.clean_map(&set)
+        } else {
+            mc.full_map(
+                &set,
+                &mut Rng::new(seed ^ 0x4D43 ^ (i as u64) << 8),
+            )
+        };
+        ems.push(ErrorModel::from_full(&full));
+        sets.push(set);
+    }
+    HwSolve {
+        c,
+        windows,
+        sets,
+        ems,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_is_deterministic() {
+        let p = AnalogParams::paper_calibrated();
+        let fmacs =
+            vec![Fmac::gaussian(5, 2.0, 1e8), Fmac::gaussian(16, 2.0, 1e8)];
+        let a = solve(p, 42, 200, &fmacs, 14, 0.02, 0);
+        let b = solve(p, 42, 200, &fmacs, 14, 0.02, 0);
+        assert_eq!(a.c, b.c);
+        assert_eq!(a.windows, b.windows);
+        for (x, y) in a.ems.iter().zip(b.ems.iter()) {
+            assert_eq!(x.cdf, y.cdf);
+            assert_eq!(x.vals, y.vals);
+        }
+    }
+
+    #[test]
+    fn capacitor_sized_by_peak_window() {
+        let p = AnalogParams::paper_calibrated();
+        let fmacs =
+            vec![Fmac::gaussian(5, 2.0, 1e8), Fmac::gaussian(16, 2.0, 1e8)];
+        let hw = solve(p, 42, 100, &fmacs, 10, 0.0, 0);
+        let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+        let w = hw.peak_window();
+        assert_eq!(hw.c, solver.size_for_window(w.q_lo, w.q_hi));
+        assert!(hw.grt() > 0.0);
+    }
+
+    #[test]
+    fn phi_thins_the_readout() {
+        let p = AnalogParams::paper_calibrated();
+        let fmacs = vec![Fmac::gaussian(16, 2.0, 1e8)];
+        let hw = solve(p, 42, 200, &fmacs, 16, 0.02, 2);
+        assert_eq!(hw.windows[0].k, 16);
+        assert_eq!(hw.sets[0].levels.len(), 14);
+    }
+}

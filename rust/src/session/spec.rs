@@ -1,0 +1,228 @@
+//! Typed operating-point requests and their content-addressed cache
+//! keys (DESIGN.md §3).
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::data::synth::Dataset;
+use crate::util::json::{obj, Json};
+
+/// How (and whether) a queried operating point is accuracy-evaluated:
+/// `n_seeds` PRNG seeds starting at `seed` (the paper averages 3 runs
+/// for the variation curves), mean-reduced. `n_seeds = 1` is a single
+/// evaluation at `seed`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalSettings {
+    pub seed: u32,
+    pub n_seeds: usize,
+}
+
+/// One codesign query: "give me the hardware operating point of
+/// `dataset`'s model at CapMin parameter `k`, current variation
+/// `sigma`, and `phi` CapMin-V merges".
+///
+/// With `eval: None` the query is a pure hardware solve (windows,
+/// capacitor, spike times, error models) and never touches the PJRT
+/// runtime; with `eval: Some(..)` the resulting error models are pushed
+/// through the eval artifact and the point carries an accuracy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperatingPointSpec {
+    pub dataset: Dataset,
+    /// CapMin inclusion parameter (spike times kept), 1..=32.
+    pub k: usize,
+    /// Relative current variation sigma (0 = deterministic clipping).
+    pub sigma: f64,
+    /// CapMin-V merges applied per window (0 = plain CapMin).
+    pub phi: usize,
+    pub eval: Option<EvalSettings>,
+}
+
+impl OperatingPointSpec {
+    pub fn new(
+        dataset: Dataset,
+        k: usize,
+        sigma: f64,
+        phi: usize,
+    ) -> OperatingPointSpec {
+        OperatingPointSpec {
+            dataset,
+            k,
+            sigma,
+            phi,
+            eval: None,
+        }
+    }
+
+    /// Request accuracy evaluation over `n_seeds` seeds from `seed`.
+    pub fn with_eval(mut self, seed: u32, n_seeds: usize)
+        -> OperatingPointSpec {
+        self.eval = Some(EvalSettings { seed, n_seeds });
+        self
+    }
+
+    /// Canonical material for the *hardware* half of the query:
+    /// everything that can change the solve — the F_MACs (via the
+    /// training knobs), the MC scale, the base seed, and the spec's
+    /// hardware axes — but not the eval settings.
+    fn hw_material(&self, cfg: &ExperimentConfig) -> String {
+        format!(
+            "v1|{}|k{}|sigma{:e}|phi{}|steps{}|lr{:e}|lrh{}|tl{}|hl{}|\
+             mc{}|seed{}",
+            self.dataset.spec().name,
+            self.k,
+            self.sigma,
+            self.phi,
+            cfg.train_steps,
+            cfg.lr0,
+            cfg.lr_halve_every,
+            cfg.train_limit,
+            cfg.hist_limit,
+            cfg.mc_samples,
+            cfg.seed,
+        )
+    }
+
+    /// Key of the shared hardware solve: specs differing only in eval
+    /// settings reuse one Monte-Carlo solve through the session's
+    /// in-memory solve cache.
+    pub fn hw_cache_key(&self, cfg: &ExperimentConfig) -> String {
+        format!("{:016x}", fnv1a(self.hw_material(cfg).as_bytes()))
+    }
+
+    /// Content-addressed key of the full operating point: a 64-bit
+    /// FNV-1a over the hardware material plus every knob that can
+    /// change the accuracy (eval settings, eval scale, engine). Two
+    /// sessions with identical knobs share disk entries; any knob
+    /// change misses cleanly.
+    pub fn cache_key(&self, cfg: &ExperimentConfig) -> String {
+        let eval = match self.eval {
+            None => "none".to_string(),
+            Some(e) => format!("{}x{}", e.seed, e.n_seeds),
+        };
+        let material = format!(
+            "{}|eval{}|el{}|engine{}",
+            self.hw_material(cfg),
+            eval,
+            cfg.eval_limit,
+            cfg.engine,
+        );
+        format!("{:016x}", fnv1a(material.as_bytes()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let eval = match self.eval {
+            None => Json::Null,
+            Some(e) => obj(vec![
+                ("seed", Json::Num(e.seed as f64)),
+                ("n_seeds", Json::Num(e.n_seeds as f64)),
+            ]),
+        };
+        obj(vec![
+            ("dataset", Json::Str(self.dataset.spec().name.into())),
+            ("k", Json::Num(self.k as f64)),
+            ("sigma", Json::Num(self.sigma)),
+            ("phi", Json::Num(self.phi as f64)),
+            ("eval", eval),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<OperatingPointSpec> {
+        let field = |k: &str| {
+            j.get(k)
+                .ok_or_else(|| anyhow!("spec JSON missing `{k}`"))
+        };
+        let name = match field("dataset")? {
+            Json::Str(s) => s.as_str(),
+            other => return Err(anyhow!("bad dataset field {other:?}")),
+        };
+        let dataset = Dataset::from_name(name)
+            .ok_or_else(|| anyhow!("unknown dataset `{name}` in spec"))?;
+        let num = |k: &str| -> Result<f64> {
+            match field(k)? {
+                Json::Num(n) => Ok(*n),
+                other => Err(anyhow!("bad `{k}` field {other:?}")),
+            }
+        };
+        let eval = match field("eval")? {
+            Json::Null => None,
+            e => Some(EvalSettings {
+                seed: match e.get("seed") {
+                    Some(Json::Num(n)) => *n as u32,
+                    _ => return Err(anyhow!("bad eval.seed")),
+                },
+                n_seeds: match e.get("n_seeds") {
+                    Some(Json::Num(n)) => *n as usize,
+                    _ => return Err(anyhow!("bad eval.n_seeds")),
+                },
+            }),
+        };
+        Ok(OperatingPointSpec {
+            dataset,
+            k: num("k")? as usize,
+            sigma: num("sigma")?,
+            phi: num("phi")? as usize,
+            eval,
+        })
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let s = OperatingPointSpec::new(Dataset::CifarSyn, 14, 0.02, 2)
+            .with_eval(100, 3);
+        let j = s.to_json();
+        let back = OperatingPointSpec::from_json(&j).unwrap();
+        assert_eq!(s, back);
+        let hw = OperatingPointSpec::new(Dataset::FashionSyn, 16, 0.0, 0);
+        let back =
+            OperatingPointSpec::from_json(&hw.to_json()).unwrap();
+        assert_eq!(hw, back);
+    }
+
+    #[test]
+    fn cache_key_separates_specs_and_config() {
+        let cfg = ExperimentConfig::default();
+        let a = OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 0);
+        let b = OperatingPointSpec::new(Dataset::FashionSyn, 16, 0.02, 0);
+        assert_ne!(a.cache_key(&cfg), b.cache_key(&cfg));
+        assert_ne!(
+            a.cache_key(&cfg),
+            a.with_eval(1, 1).cache_key(&cfg)
+        );
+        let mut cfg2 = cfg.clone();
+        cfg2.mc_samples += 1;
+        assert_ne!(a.cache_key(&cfg), a.cache_key(&cfg2));
+        // stable across calls
+        assert_eq!(a.cache_key(&cfg), a.cache_key(&cfg));
+        assert_eq!(a.cache_key(&cfg).len(), 16);
+    }
+
+    #[test]
+    fn hw_key_ignores_eval_but_tracks_hardware_axes() {
+        let cfg = ExperimentConfig::default();
+        let a = OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 0);
+        // same hardware point regardless of eval settings
+        assert_eq!(
+            a.hw_cache_key(&cfg),
+            a.with_eval(100, 3).hw_cache_key(&cfg)
+        );
+        // but the full point key separates them
+        assert_ne!(a.cache_key(&cfg), a.with_eval(100, 3).cache_key(&cfg));
+        // hardware axes still miss cleanly
+        let b = OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.03, 0);
+        assert_ne!(a.hw_cache_key(&cfg), b.hw_cache_key(&cfg));
+    }
+}

@@ -8,12 +8,12 @@
 use capmin::bnn::{BitMatrix, ErrorModel, SubMacEngine};
 use capmin::coordinator::config::ExperimentConfig;
 use capmin::coordinator::evaluator::stack_error_models;
-use capmin::coordinator::pipeline::Pipeline;
 use capmin::data::synth::Dataset;
 use capmin::data::{Loader, Split};
 use capmin::runtime::{
     artifacts_dir, lit_f32, lit_u32_scalar, to_f32, Runtime,
 };
+use capmin::session::{DesignSession, OperatingPointSpec};
 use capmin::util::rng::Rng;
 
 fn runtime() -> Option<Runtime> {
@@ -193,10 +193,11 @@ fn identity_error_model_matches_clean_forward() {
     }
 }
 
-/// Full-pipeline smoke: train tiny model, fold, build hardware configs,
-/// and check the accuracy ordering the paper's Fig. 8 rests on.
+/// Full-pipeline smoke through the session API: train the tiny model,
+/// fold, query hardware operating points on its F_MACs, and check the
+/// accuracy ordering the paper's Fig. 8 rests on.
 #[test]
-fn pipeline_smoke_orderings() {
+fn session_smoke_orderings() {
     let Some(rt) = runtime() else { return };
     let mut cfg = ExperimentConfig::default();
     cfg.train_steps = 40;
@@ -209,10 +210,11 @@ fn pipeline_smoke_orderings() {
         .to_str()
         .unwrap()
         .to_string();
-    // use the tiny model by overriding the dataset->model binding via a
-    // direct trainer run on vgg3_tiny
-    let pipe = Pipeline::new(&rt, cfg).unwrap();
-    // patch: train vgg3_tiny through the Trainer directly
+    let run_dir = cfg.run_dir.clone();
+    let _ = std::fs::remove_dir_all(&run_dir);
+    // train vgg3_tiny through the Trainer directly (the dataset binds
+    // to the full vgg3; the tiny twin keeps this test fast), then
+    // inject its F_MACs into the session
     let trainer = capmin::coordinator::trainer::Trainer::new(&rt);
     let spec = Dataset::FashionSyn.spec();
     let mi = rt.manifest.model("vgg3_tiny").clone();
@@ -237,12 +239,26 @@ fn pipeline_smoke_orderings() {
     let total = hres.sum.total();
     assert!(total > 0);
 
-    let ev = capmin::coordinator::evaluator::Evaluator::new(&rt, "eval");
-    let hw32 = pipe.hw_config(&hres.per_matmul, 32, 0.0, 0);
+    let session = DesignSession::builder()
+        .config(cfg)
+        .runtime(rt)
+        .build()
+        .unwrap();
+    session.put_fmac(
+        Dataset::FashionSyn,
+        hres.per_matmul.clone(),
+        hres.sum.clone(),
+    );
+    let ev = session.evaluator().unwrap();
+    let hw32 = session
+        .query(&OperatingPointSpec::new(Dataset::FashionSyn, 32, 0.0, 0))
+        .unwrap();
     let a32 = ev
         .accuracy("vgg3_tiny", &folded, spec.clone(), &hw32.ems, 64, 1)
         .unwrap();
-    let hw6 = pipe.hw_config(&hres.per_matmul, 6, 0.0, 0);
+    let hw6 = session
+        .query(&OperatingPointSpec::new(Dataset::FashionSyn, 6, 0.0, 0))
+        .unwrap();
     let a6 = ev
         .accuracy("vgg3_tiny", &folded, spec.clone(), &hw6.ems, 64, 1)
         .unwrap();
@@ -250,4 +266,5 @@ fn pipeline_smoke_orderings() {
     assert!(a32 >= a6 - 1e-9, "more levels can't hurt: {a32} vs {a6}");
     // capacitor ordering
     assert!(hw6.c < hw32.c, "smaller k -> smaller capacitor");
+    let _ = std::fs::remove_dir_all(&run_dir);
 }

@@ -13,6 +13,11 @@ use capmin::bnn::{BitMatrix, ErrorModel, SubMacEngine};
 use capmin::capmin::capmin::select_window;
 use capmin::capmin::capmin_v::capmin_v;
 use capmin::capmin::Fmac;
+use capmin::data::synth::Dataset;
+use capmin::session::point::OperatingPoint;
+use capmin::session::solver::solve;
+use capmin::session::OperatingPointSpec;
+use capmin::util::json::Json;
 use capmin::util::rng::Rng;
 
 /// Mini property-test driver: `cases` randomized executions, seed
@@ -32,16 +37,10 @@ fn forall(name: &str, cases: usize, mut f: impl FnMut(&mut Rng)) {
 }
 
 fn random_fmac(rng: &mut Rng) -> Fmac {
-    // unimodal-ish histogram with a random peak and sharpness
+    // unimodal histogram with a random peak and sharpness
     let peak = 4 + rng.below(25) as usize;
     let sharp = 1.5 + 5.0 * rng.f64();
-    let mut f = Fmac::new();
-    for m in 0..33 {
-        let d = m as f64 - peak as f64;
-        f.counts[m] =
-            (1e9 * (-d * d / (2.0 * sharp * sharp)).exp()) as u64;
-    }
-    f
+    Fmac::gaussian(peak, sharp, 1e9)
 }
 
 fn random_pmap(rng: &mut Rng, lo: usize, k: usize) -> Pmap {
@@ -275,6 +274,101 @@ fn prop_spike_decode_roundtrip_with_clipping() {
                 "level {m} window [{lo},{hi}]"
             );
         }
+    });
+}
+
+#[test]
+fn prop_window_capacitor_demand_monotone_in_k() {
+    // the CapMin guarantee behind Fig. 9: shrinking k never *raises*
+    // the capacitor demand — on the (unimodal) F_MACs the framework
+    // sees, the selected window's q_hi grows monotonically with k, and
+    // the shared capacitor is sized by q_hi alone
+    let p = AnalogParams::paper_calibrated();
+    let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+    forall("q_hi monotone in k", 200, |rng| {
+        let f = random_fmac(rng);
+        let mut prev_hi = 0usize;
+        let mut prev_c = 0.0f64;
+        for k in 1..=32 {
+            let w = select_window(&f, k);
+            assert!(
+                w.q_hi >= prev_hi,
+                "demand q_hi dropped going up to k={k}: {w:?}"
+            );
+            let c = solver.size_for_window(w.q_lo, w.q_hi);
+            assert!(
+                c >= prev_c,
+                "capacitor demand dropped going up to k={k}"
+            );
+            prev_hi = w.q_hi;
+            prev_c = c;
+        }
+    });
+}
+
+#[test]
+fn prop_fmac_merge_preserves_totals() {
+    forall("merge totals", 100, |rng| {
+        let a = random_fmac(rng);
+        let b = random_fmac(rng);
+        let (ta, tb) = (a.total(), b.total());
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.total(), ta + tb);
+        for lvl in 0..33 {
+            assert_eq!(m.counts[lvl], a.counts[lvl] + b.counts[lvl]);
+        }
+    });
+}
+
+#[test]
+fn prop_combine_normalized_preserves_normalization() {
+    forall("combine normalization", 100, |rng| {
+        let n = 2 + rng.below(4) as usize;
+        let fmacs: Vec<Fmac> =
+            (0..n).map(|_| random_fmac(rng)).collect();
+        let refs: Vec<&Fmac> = fmacs.iter().collect();
+        let comb = Fmac::combine_normalized(&refs);
+        // each benchmark contributes exactly unit mass
+        let total: f64 = comb.iter().sum();
+        assert!(
+            (total - n as f64).abs() < 1e-9,
+            "combined mass {total} != {n}"
+        );
+        assert!(comb.iter().all(|&v| v >= 0.0));
+        // and each pmf itself sums to one
+        for f in &fmacs {
+            let s: f64 = f.pmf().iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_operating_point_json_roundtrips() {
+    let p = AnalogParams::paper_calibrated();
+    forall("point json roundtrip", 25, |rng| {
+        let n_mat = 1 + rng.below(3) as usize;
+        let fmacs: Vec<Fmac> =
+            (0..n_mat).map(|_| random_fmac(rng)).collect();
+        let k = 4 + rng.below(28) as usize;
+        let sigma = if rng.below(2) == 0 { 0.0 } else { 0.03 };
+        let phi = rng.below(3) as usize;
+        let mut spec =
+            OperatingPointSpec::new(Dataset::SvhnSyn, k, sigma, phi);
+        if rng.below(2) == 0 {
+            spec = spec.with_eval(rng.below(1000) as u32, 3);
+        }
+        let hw = solve(p, 7, 100, &fmacs, k, sigma, phi);
+        let accuracy =
+            if spec.eval.is_some() { Some(rng.f64()) } else { None };
+        let point = OperatingPoint::from_solve(spec, hw, accuracy);
+        let text = point.to_json().to_string();
+        let back = OperatingPoint::from_json(
+            &Json::parse(&text).expect("written JSON parses"),
+        )
+        .expect("written JSON loads");
+        assert_eq!(point, back, "round-trip must be exact");
     });
 }
 

@@ -1,0 +1,163 @@
+//! `DesignSession` memoization and batch-query semantics, fully
+//! offline: hardware-only queries (`eval: None`) on injected F_MAC
+//! statistics never touch the PJRT runtime, so these run without
+//! `make artifacts`.
+
+use capmin::capmin::Fmac;
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::data::synth::Dataset;
+use capmin::session::{DesignSession, OperatingPointSpec};
+
+fn synthetic_fmacs(n_matmuls: usize) -> (Vec<Fmac>, Fmac) {
+    let mut per = vec![];
+    let mut sum = Fmac::new();
+    for m in 0..n_matmuls {
+        let f = Fmac::gaussian(if m == 0 { 5 } else { 16 }, 2.0, 1e8);
+        sum.merge(&f);
+        per.push(f);
+    }
+    (per, sum)
+}
+
+fn session_in(tag: &str) -> (DesignSession, String) {
+    let dir = std::env::temp_dir()
+        .join(format!(
+            "capmin_session_test_{tag}_{}",
+            std::process::id()
+        ))
+        .to_str()
+        .unwrap()
+        .to_string();
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = ExperimentConfig::default();
+    cfg.mc_samples = 200;
+    cfg.run_dir = dir.clone();
+    let session = DesignSession::builder().config(cfg).build().unwrap();
+    let (per, sum) = synthetic_fmacs(2);
+    session.put_fmac(Dataset::FashionSyn, per, sum);
+    (session, dir)
+}
+
+#[test]
+fn repeat_query_hits_memory_with_no_second_solve() {
+    let (session, dir) = session_in("memo");
+    let spec =
+        OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 0);
+    let a = session.query(&spec).unwrap();
+    let s1 = session.stats();
+    assert_eq!((s1.queries, s1.solves, s1.mem_hits), (1, 1, 0));
+
+    let b = session.query(&spec).unwrap();
+    let s2 = session.stats();
+    assert_eq!(s2.queries, 2);
+    assert_eq!(s2.solves, 1, "no second MC run for the same spec");
+    assert_eq!(s2.mem_hits, 1);
+    assert_eq!(*a, *b, "memoized point is identical");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fresh_session_replays_from_disk() {
+    let (session, dir) = session_in("disk");
+    let spec =
+        OperatingPointSpec::new(Dataset::FashionSyn, 16, 0.02, 2);
+    let a = session.query(&spec).unwrap();
+    assert!(
+        session
+            .store()
+            .path("points")
+            .join(format!("{}.json", spec.cache_key(session.config())))
+            .exists(),
+        "point persisted under runs/points/"
+    );
+
+    // second session over the same run dir: no fmacs injected, no
+    // runtime — the disk cache alone must answer
+    let mut cfg = session.config().clone();
+    cfg.run_dir = dir.clone();
+    let replay = DesignSession::builder().config(cfg).build().unwrap();
+    let b = replay.query(&spec).unwrap();
+    let s = replay.stats();
+    assert_eq!((s.disk_hits, s.solves), (1, 0));
+    assert_eq!(*a, *b, "disk round-trip is exact");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn query_many_matches_sequential_query_exactly() {
+    let ks = [32usize, 24, 16, 14, 10, 6];
+    let mk_specs = || -> Vec<OperatingPointSpec> {
+        ks.iter()
+            .flat_map(|&k| {
+                [
+                    OperatingPointSpec::new(
+                        Dataset::FashionSyn,
+                        k,
+                        0.0,
+                        0,
+                    ),
+                    OperatingPointSpec::new(
+                        Dataset::FashionSyn,
+                        k,
+                        0.03,
+                        0,
+                    ),
+                ]
+            })
+            .collect()
+    };
+
+    let (seq, dir_a) = session_in("seq");
+    let sequential: Vec<_> = mk_specs()
+        .iter()
+        .map(|s| seq.query(s).unwrap())
+        .collect();
+
+    let (par, dir_b) = session_in("par");
+    let batched = par.query_many(&mk_specs()).unwrap();
+
+    assert_eq!(sequential.len(), batched.len());
+    for (a, b) in sequential.iter().zip(batched.iter()) {
+        assert_eq!(**a, **b, "thread scheduling must not change answers");
+    }
+    let s = par.stats();
+    assert_eq!(s.queries, batched.len() as u64);
+    assert_eq!(s.solves, batched.len() as u64);
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+#[test]
+fn query_many_dedupes_and_replays() {
+    let (session, dir) = session_in("dedup");
+    let spec =
+        OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 0);
+    let points =
+        session.query_many(&[spec, spec, spec]).unwrap();
+    let s = session.stats();
+    assert_eq!(s.queries, 3);
+    assert_eq!(s.solves, 1, "duplicate specs share one solve");
+    assert_eq!(*points[0], *points[1]);
+    assert_eq!(*points[1], *points[2]);
+
+    // a second batch is all memory hits
+    session.query_many(&[spec, spec]).unwrap();
+    let s = session.stats();
+    assert_eq!(s.solves, 1);
+    assert_eq!(s.mem_hits, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn distinct_specs_are_distinct_points() {
+    let (session, dir) = session_in("distinct");
+    let a = session
+        .query(&OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.0, 0))
+        .unwrap();
+    let b = session
+        .query(&OperatingPointSpec::new(Dataset::FashionSyn, 10, 0.0, 0))
+        .unwrap();
+    assert!(b.c < a.c, "smaller k -> smaller capacitor");
+    assert_eq!(session.stats().solves, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
