@@ -1,19 +1,22 @@
-//! End-to-end validation driver (EXPERIMENTS.md §End-to-end): proves all
-//! three layers compose on a real workload.
+//! End-to-end validation driver (EXPERIMENTS.md §End-to-end): proves
+//! the layers compose on a real workload, on whatever inference
+//! backend the build and machine provide (DESIGN.md §9).
 //!
 //!   cargo run --release --example end_to_end [-- --steps 300]
+//!   cargo run --release --example end_to_end -- --backend native
 //!
-//! Trains the full vgg3 BNN on the fashion_syn benchmark through the AOT
-//! train-step artifact (L2 fwd/bwd + Adam, Rust loop), logs the loss
-//! curve, folds to hardware tensors, extracts F_MAC, queries the CapMin
-//! k-sweep operating points with variation and CapMin-V from one
-//! `DesignSession`, evaluates them through BOTH eval engines (jnp
-//! oracle and the L1 Pallas kernel), and prints the paper-shaped
-//! summary.
+//! On an `xla` build with artifacts this trains the full vgg3 BNN on
+//! the fashion_syn benchmark through the AOT train-step artifact (L2
+//! fwd/bwd + Adam, Rust loop), logs the loss curve, folds to hardware
+//! tensors; on a native-only build it starts from cached trained
+//! weights (or the flagged untrained fallback). Either way it extracts
+//! F_MAC, queries the CapMin k-sweep operating points with variation
+//! and CapMin-V from one `DesignSession`, evaluates them through the
+//! resolved backend, and prints the paper-shaped summary.
 
 use anyhow::Result;
+use capmin::backend::InferenceBackend;
 use capmin::coordinator::config::ExperimentConfig;
-use capmin::coordinator::evaluator::Evaluator;
 use capmin::data::synth::Dataset;
 use capmin::session::{DesignSession, OperatingPointSpec};
 use capmin::util::cli::Args;
@@ -31,8 +34,15 @@ fn main() -> Result<()> {
     let spec = ds.spec();
 
     let t0 = std::time::Instant::now();
-    // 1-2. train + fold (cached if a previous run exists)
+    // 1-2. train + fold (cached if a previous run exists; untrained
+    // fallback on native-only builds with a cold store)
     let folded = session.folded(ds)?;
+    println!(
+        "folded model: {} tensors via {} backend ({} threads)",
+        folded.len(),
+        session.backend_name(),
+        session.threads()
+    );
     // loss curve from the run store
     if let Ok(ts) = session.store().load_tensors(&format!(
         "{}_losses.capt",
@@ -56,12 +66,13 @@ fn main() -> Result<()> {
         sum.dynamic_range()
     );
 
-    // 4. k-sweep through BOTH engines at three operating points —
-    // hardware-only queries here; the engines are driven explicitly
-    // below because the Pallas interpret path needs a smaller limit
+    // 4. k-sweep at three operating points through the resolved
+    // backend — hardware-only queries, then explicit accuracy calls so
+    // the same error models are reused across rows
     let sigma = session.config().sigma_rel;
+    let backend = session.backend()?;
     let mut table = Table::new(&[
-        "k", "C (physics)", "engine", "clean", "+variation", "CapMin-V",
+        "k", "C (physics)", "backend", "clean", "+variation", "CapMin-V",
     ]);
     for &k in &[32usize, 14, 8] {
         let hw_clean =
@@ -76,46 +87,41 @@ fn main() -> Result<()> {
         } else {
             None
         };
-        for engine in ["eval", "evalp"] {
-            // Pallas interpret mode is slow: run it on the smaller point
-            if engine == "evalp" && k != 14 {
-                continue;
-            }
-            let limit = if engine == "evalp" {
-                session.config().eval_limit.min(32)
-            } else {
-                session.config().eval_limit
-            };
-            let ev = Evaluator::new(session.runtime()?, engine);
-            let a_clean = ev.accuracy(
-                spec.model, folded.as_slice(), spec.clone(),
-                &hw_clean.ems, limit, 1)?;
-            let a_var = ev.accuracy(
-                spec.model, folded.as_slice(), spec.clone(),
-                &hw_var.ems, limit, 100)?;
-            let a_v = match &hw_v {
-                Some(hw) => format!(
-                    "{:.1}%",
-                    100.0 * ev.accuracy(
-                        spec.model, folded.as_slice(), spec.clone(),
-                        &hw.ems, limit, 200)?
-                ),
-                None => "-".into(),
-            };
-            table.row(vec![
-                k.to_string(),
-                si(hw_clean.c, "F"),
-                engine.into(),
-                format!("{:.1}%", 100.0 * a_clean),
-                format!("{:.1}%", 100.0 * a_var),
-                a_v,
-            ]);
-        }
+        let limit = session.config().eval_limit;
+        let a_clean = backend.accuracy(
+            spec.model, &folded, spec.clone(), &hw_clean.ems, limit, 1,
+        )?;
+        let a_var = backend.accuracy(
+            spec.model, &folded, spec.clone(), &hw_var.ems, limit, 100,
+        )?;
+        let a_v = match &hw_v {
+            Some(hw) => format!(
+                "{:.1}%",
+                100.0
+                    * backend.accuracy(
+                        spec.model,
+                        &folded,
+                        spec.clone(),
+                        &hw.ems,
+                        limit,
+                        200
+                    )?
+            ),
+            None => "-".into(),
+        };
+        table.row(vec![
+            k.to_string(),
+            si(hw_clean.c, "F"),
+            backend.name().into(),
+            format!("{:.1}%", 100.0 * a_clean),
+            format!("{:.1}%", 100.0 * a_var),
+            a_v,
+        ]);
     }
     println!("{}", table.render());
     println!(
-        "end-to-end OK in {:.1?} (engines agree bit-exactly by \
-         construction; see cargo test --test integration)",
+        "end-to-end OK in {:.1?} (backends agree bit-exactly by \
+         construction; see cargo test --test backend)",
         t0.elapsed()
     );
     Ok(())

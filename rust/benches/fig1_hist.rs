@@ -1,19 +1,38 @@
 //! Bench: F_MAC extraction throughput (Fig. 1 pipeline) — the AOT hist
 //! artifact vs the Rust native engine, plus the data generator.
-//! Requires `make artifacts`.
+//! Requires `make artifacts` and a build with the `xla` feature (the
+//! native-path F_MAC numbers live in benches/native_matmul.rs).
 
+#[cfg(feature = "xla")]
 #[path = "bench_harness/mod.rs"]
 mod bench_harness;
 
+#[cfg(feature = "xla")]
 use bench_harness::{bench, header, report};
+#[cfg(feature = "xla")]
 use capmin::bnn::{BitMatrix, SubMacEngine};
+#[cfg(feature = "xla")]
 use capmin::coordinator::histogrammer::Histogrammer;
+#[cfg(feature = "xla")]
 use capmin::coordinator::trainer::Trainer;
+#[cfg(feature = "xla")]
 use capmin::data::synth::Dataset;
+#[cfg(feature = "xla")]
 use capmin::data::{Loader, Split};
+#[cfg(feature = "xla")]
 use capmin::runtime::{artifacts_dir, lit_u32, Runtime};
+#[cfg(feature = "xla")]
 use capmin::util::rng::Rng;
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    eprintln!(
+        "fig1_hist benches the AOT hist artifact; rebuild with \
+         --features xla (native-path numbers: native_matmul bench)"
+    );
+}
+
+#[cfg(feature = "xla")]
 fn main() {
     if !artifacts_dir().join("manifest.json").exists() {
         eprintln!("skipping fig1_hist bench: run `make artifacts`");

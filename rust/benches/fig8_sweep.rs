@@ -10,14 +10,20 @@ mod bench_harness;
 
 use bench_harness::{bench, header, report};
 use capmin::analog::params::AnalogParams;
+#[cfg(feature = "xla")]
 use capmin::bnn::ErrorModel;
+#[cfg(feature = "xla")]
 use capmin::coordinator::evaluator::{stack_error_models, Evaluator};
+#[cfg(feature = "xla")]
 use capmin::coordinator::trainer::Trainer;
+#[cfg(feature = "xla")]
 use capmin::data::synth::Dataset;
+#[cfg(feature = "xla")]
 use capmin::runtime::{
     artifacts_dir, lit_f32, lit_u32, lit_u32_scalar, Runtime,
 };
 use capmin::session::solver::solve;
+#[cfg(feature = "xla")]
 use capmin::util::rng::Rng;
 
 /// Synthetic per-matmul F_MACs shaped like a trained vgg3_tiny.
@@ -40,18 +46,30 @@ fn main() {
 
     header("operating-point solve (per k point of Fig. 8)");
     let r = bench("CapMin solve (clean)", 2, 50, || {
-        std::hint::black_box(solve(p, seed, mc, &fmacs, 14, 0.0, 0));
+        std::hint::black_box(solve(p, seed, mc, 1, &fmacs, 14, 0.0, 0));
     });
     report(&r, 1.0, "solve");
     let r = bench("CapMin solve (variation MC)", 2, 20, || {
-        std::hint::black_box(solve(p, seed, mc, &fmacs, 14, 0.02, 0));
+        std::hint::black_box(solve(p, seed, mc, 1, &fmacs, 14, 0.02, 0));
     });
     report(&r, 1.0, "solve");
     let r = bench("CapMin-V solve (phi=2)", 2, 20, || {
-        std::hint::black_box(solve(p, seed, mc, &fmacs, 16, 0.02, 2));
+        std::hint::black_box(solve(p, seed, mc, 1, &fmacs, 16, 0.02, 2));
     });
     report(&r, 1.0, "solve");
 
+    eval_section();
+}
+
+#[cfg(not(feature = "xla"))]
+fn eval_section() {
+    eprintln!(
+        "skipping fig8_sweep eval benches: built without the xla feature"
+    );
+}
+
+#[cfg(feature = "xla")]
+fn eval_section() {
     if !artifacts_dir().join("manifest.json").exists() {
         eprintln!(
             "skipping fig8_sweep eval benches: run `make artifacts`"

@@ -1,0 +1,124 @@
+//! Bench: the native backend's matmul kernels — the naive scalar
+//! `SubMacEngine` loops vs the cache-blocked tiles vs the thread-pooled
+//! tiles (DESIGN.md §9) — plus a whole-model logits pass. Runs fully
+//! offline (no artifacts, no xla feature); the recorded speedups are
+//! the perf-trajectory evidence for the native inference path
+//! (EXPERIMENTS.md §Perf).
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, header, report, BenchResult};
+use capmin::backend::arch::model_meta;
+use capmin::backend::native::{init_folded, NativeBackend};
+use capmin::backend::{kernels, InferenceBackend};
+use capmin::bnn::{BitMatrix, ErrorModel, SubMacEngine};
+use capmin::util::pool::ScopedPool;
+use capmin::util::rng::Rng;
+
+fn rand_pm(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.pm1(0.5)).collect()
+}
+
+fn speedup(base: &BenchResult, fast: &BenchResult, what: &str) {
+    println!(
+        "    -> {:.2}x speedup over {what}",
+        base.mean_s / fast.mean_s
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let pool = ScopedPool::new(0);
+    println!("worker threads: {}", pool.threads());
+
+    // vgg3 conv2-like shape: O=32, K=288 (9 groups), D = 14*14*16
+    let (o, k, d) = (32usize, 288usize, 3136usize);
+    let w = rand_pm(&mut rng, o * k);
+    let x = rand_pm(&mut rng, d * k);
+    let macs = (o * k * d) as f64;
+    let eng = SubMacEngine::new(o, k, &w, k);
+    let xb = BitMatrix::pack(d, k, &x, false);
+
+    header("exact matmul (O=32, K=288, D=3136)");
+    let naive = bench("scalar loop (naive baseline)", 1, 10, || {
+        std::hint::black_box(eng.matmul_exact(&xb));
+    });
+    report(&naive, macs, "MAC");
+    let tiled = bench("tiled (cache-blocked)", 1, 10, || {
+        std::hint::black_box(kernels::matmul_exact_tiled(&eng, &xb));
+    });
+    report(&tiled, macs, "MAC");
+    speedup(&naive, &tiled, "naive");
+    let threaded = bench("tiled + thread pool", 1, 10, || {
+        std::hint::black_box(kernels::matmul_exact(&pool, &eng, &xb));
+    });
+    report(&threaded, macs, "MAC");
+    speedup(&naive, &threaded, "naive");
+
+    header("error-model matmul (same shape, stochastic decode)");
+    let em = {
+        // band-stochastic model so the decode path is non-trivial
+        let mut full = vec![vec![0.0f64; 33]; 33];
+        for (m, row) in full.iter_mut().enumerate() {
+            for dlt in -1i64..=1 {
+                let j = (m as i64 + dlt).clamp(0, 32) as usize;
+                row[j] += 1.0 / 3.0;
+            }
+        }
+        ErrorModel::from_full(&full)
+    };
+    let naive_e = bench("scalar loop (naive baseline)", 1, 5, || {
+        std::hint::black_box(eng.matmul_error(&xb, &em, 7, 0));
+    });
+    report(&naive_e, macs, "MAC");
+    let tiled_e = bench("tiled (cache-blocked)", 1, 5, || {
+        std::hint::black_box(kernels::matmul_error_tiled(
+            &eng, &xb, &em, 7, 0,
+        ));
+    });
+    report(&tiled_e, macs, "MAC");
+    speedup(&naive_e, &tiled_e, "naive");
+    let threaded_e = bench("tiled + thread pool", 1, 5, || {
+        std::hint::black_box(kernels::matmul_error(
+            &pool, &eng, &xb, &em, 7, 0,
+        ));
+    });
+    report(&threaded_e, macs, "MAC");
+    speedup(&naive_e, &threaded_e, "naive");
+
+    header("F_MAC histogram");
+    let naive_h = bench("scalar loop", 1, 10, || {
+        std::hint::black_box(eng.histogram(&xb));
+    });
+    report(&naive_h, macs, "MAC");
+    let pooled_h = bench("thread pool", 1, 10, || {
+        std::hint::black_box(kernels::histogram(&pool, &eng, &xb));
+    });
+    report(&pooled_h, macs, "MAC");
+    speedup(&naive_h, &pooled_h, "scalar");
+
+    header("whole-model logits (vgg3, eval batch, native backend)");
+    let meta = model_meta("vgg3").unwrap();
+    let folded = init_folded("vgg3").unwrap();
+    let be = NativeBackend::new(0);
+    let px: usize = meta.in_shape.iter().product();
+    let eb = meta.eval_batch;
+    let xs = rand_pm(&mut rng, eb * px);
+    let ems: Vec<ErrorModel> =
+        (0..meta.n_matmuls()).map(|_| ErrorModel::identity()).collect();
+    let r = bench("forward pass (error mode)", 1, 5, || {
+        std::hint::black_box(
+            be.logits("vgg3", &folded, &xs, eb, &ems, 7).unwrap(),
+        );
+    });
+    report(&r, eb as f64, "sample");
+    let be1 = NativeBackend::new(1);
+    let r1 = bench("forward pass (1 thread)", 1, 5, || {
+        std::hint::black_box(
+            be1.logits("vgg3", &folded, &xs, eb, &ems, 7).unwrap(),
+        );
+    });
+    report(&r1, eb as f64, "sample");
+    speedup(&r1, &r, "single thread");
+}

@@ -12,11 +12,16 @@ use super::params::AnalogParams;
 use super::pmap::Pmap;
 use super::rc;
 use crate::capmin::N_LEVELS;
+use crate::util::pool::ScopedPool;
 use crate::util::rng::Rng;
 
 pub struct MonteCarlo {
     pub params: AnalogParams,
     pub n_samples: usize,
+    /// Level-sweep fan-out (sequential by default). Every level draws
+    /// from its own `rng.split` stream, so any thread count produces
+    /// bit-identical maps.
+    pool: ScopedPool,
 }
 
 impl MonteCarlo {
@@ -24,11 +29,23 @@ impl MonteCarlo {
         MonteCarlo {
             params,
             n_samples: 1000,
+            pool: ScopedPool::sequential(),
         }
     }
 
     pub fn with_samples(mut self, n: usize) -> MonteCarlo {
         self.n_samples = n;
+        self
+    }
+
+    /// Fan the per-level sampling loops of `pmap`/`full_map` out over
+    /// `threads` workers (0 = all cores).
+    pub fn with_threads(mut self, threads: usize) -> MonteCarlo {
+        self.pool = if threads == 1 {
+            ScopedPool::sequential()
+        } else {
+            ScopedPool::new(threads)
+        };
         self
     }
 
@@ -54,19 +71,29 @@ impl MonteCarlo {
     }
 
     /// k x k P_map over the represented levels (paper Eq. 6).
+    ///
+    /// Each level samples an independent `rng.split` child stream (the
+    /// parent state is never advanced), so fanning the level loop over
+    /// the pool is bit-identical to the sequential sweep. Decoded
+    /// levels map to row slots through a precomputed level->index
+    /// table instead of an O(k) scan per sample.
     pub fn pmap(&self, set: &SpikeTimeSet, rng: &mut Rng) -> Pmap {
         let k = set.levels.len();
-        let mut counts = vec![vec![0u64; k]; k];
-        let index_of = |lvl: usize| {
-            set.levels.iter().position(|&l| l == lvl).unwrap()
-        };
-        for (i, &m) in set.levels.iter().enumerate() {
-            let mut r = rng.split(m as u64 + 1);
+        let mut index_of = [usize::MAX; N_LEVELS];
+        for (i, &l) in set.levels.iter().enumerate() {
+            index_of[l] = i;
+        }
+        let parent: &Rng = rng;
+        let counts: Vec<Vec<u64>> = self.pool.map(k, |i| {
+            let m = set.levels[i];
+            let mut row = vec![0u64; k];
+            let mut r = parent.split(m as u64 + 1);
             for _ in 0..self.n_samples {
                 let d = self.sample_decode(set, m, &mut r);
-                counts[i][index_of(d)] += 1;
+                row[index_of[d]] += 1;
             }
-        }
+            row
+        });
         let p = counts
             .iter()
             .map(|row| {
@@ -84,18 +111,19 @@ impl MonteCarlo {
     /// Full 33x33 level-transition matrix: every physical level 0..=32 is
     /// read out through `set` (clipping of out-of-window levels and
     /// variation effects in one matrix — the runtime input of the eval
-    /// artifacts).
+    /// engines). Level rows fan out over the pool like `pmap`.
     pub fn full_map(&self, set: &SpikeTimeSet, rng: &mut Rng)
         -> Vec<Vec<f64>> {
-        let mut full = vec![vec![0.0; N_LEVELS]; N_LEVELS];
-        for (m, row) in full.iter_mut().enumerate() {
-            let mut r = rng.split(1000 + m as u64);
+        let parent: &Rng = rng;
+        self.pool.map(N_LEVELS, |m| {
+            let mut row = vec![0.0; N_LEVELS];
+            let mut r = parent.split(1000 + m as u64);
             for _ in 0..self.n_samples {
                 let d = self.sample_decode(set, m, &mut r);
                 row[d] += 1.0 / self.n_samples as f64;
             }
-        }
-        full
+            row
+        })
     }
 
     /// Deterministic (sigma = 0) full map: pure CapMin clipping.
@@ -201,6 +229,20 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn parallel_maps_bit_identical_to_sequential() {
+        let (mc_seq, set) = setup(0.03, (9, 24));
+        let mc_par = MonteCarlo::new(mc_seq.params)
+            .with_samples(mc_seq.n_samples)
+            .with_threads(4);
+        let a = mc_seq.pmap(&set, &mut Rng::new(21));
+        let b = mc_par.pmap(&set, &mut Rng::new(21));
+        assert_eq!(a.p, b.p, "pmap must not depend on thread count");
+        let fa = mc_seq.full_map(&set, &mut Rng::new(22));
+        let fb = mc_par.full_map(&set, &mut Rng::new(22));
+        assert_eq!(fa, fb, "full_map must not depend on thread count");
     }
 
     #[test]

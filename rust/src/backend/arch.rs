@@ -1,0 +1,385 @@
+//! Native model registry — the Rust twin of `python/compile/arch.py` +
+//! `configs.py` (paper Table II at the CPU-budget widths).
+//!
+//! The AOT manifest records the same information for artifact wiring,
+//! but the manifest only exists after `make artifacts`; this registry
+//! lets the native backend derive every shape (folded tensor layout,
+//! batch sizes, matmul count) without Python, XLA or artifacts. The
+//! values are pinned to the default (non-`--full`) AOT configs — the
+//! integration suite cross-checks them against the manifest when it is
+//! present.
+
+use anyhow::{anyhow, Result};
+
+use crate::capmin::ARRAY_SIZE;
+
+/// One op of an architecture spec (`python/compile/arch.py` docstring).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArchOp {
+    /// Binarized conv, SAME padding with -1: (out_channels, stride,
+    /// kernel size).
+    Conv(usize, usize, usize),
+    /// Max pool k x k, stride k.
+    MaxPool(usize),
+    /// Batch norm — a digital affine after export folding.
+    Bn,
+    /// Binarize activations to +-1.
+    Sign,
+    /// ResNet skip-connection block: (out_channels, stride). Expands to
+    /// conv3/bn/sign + conv3/bn + projection conv1/bn + merge + sign,
+    /// consuming three matmuls (see `python/compile/nn.py`).
+    Scb(usize, usize),
+    Flatten,
+    /// Binarized fully connected: out features.
+    Fc(usize),
+    /// Final binarized FC with f32 bias: n_classes.
+    Out(usize),
+}
+
+/// Static per-model metadata (the manifest's `ModelInfo`, natively).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: &'static str,
+    pub in_shape: [usize; 3],
+    pub n_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub hist_batch: usize,
+    pub spec: Vec<ArchOp>,
+}
+
+fn vgg3(width: f64, fc_width: f64) -> Vec<ArchOp> {
+    let c = ((64.0 * width) as usize).max(8);
+    let f = ((2048.0 * fc_width) as usize).max(16);
+    vec![
+        ArchOp::Conv(c, 1, 3),
+        ArchOp::MaxPool(2),
+        ArchOp::Bn,
+        ArchOp::Sign,
+        ArchOp::Conv(c, 1, 3),
+        ArchOp::MaxPool(2),
+        ArchOp::Bn,
+        ArchOp::Sign,
+        ArchOp::Flatten,
+        ArchOp::Fc(f),
+        ArchOp::Bn,
+        ArchOp::Sign,
+        ArchOp::Out(10),
+    ]
+}
+
+fn vgg7(width: f64, fc_width: f64) -> Vec<ArchOp> {
+    let c1 = ((128.0 * width) as usize).max(8);
+    let c2 = ((256.0 * width) as usize).max(8);
+    let c3 = ((512.0 * width) as usize).max(8);
+    let f = ((1024.0 * fc_width) as usize).max(16);
+    vec![
+        ArchOp::Conv(c1, 1, 3),
+        ArchOp::Bn,
+        ArchOp::Sign,
+        ArchOp::Conv(c1, 1, 3),
+        ArchOp::MaxPool(2),
+        ArchOp::Bn,
+        ArchOp::Sign,
+        ArchOp::Conv(c2, 1, 3),
+        ArchOp::Bn,
+        ArchOp::Sign,
+        ArchOp::Conv(c2, 1, 3),
+        ArchOp::MaxPool(2),
+        ArchOp::Bn,
+        ArchOp::Sign,
+        ArchOp::Conv(c3, 1, 3),
+        ArchOp::Bn,
+        ArchOp::Sign,
+        ArchOp::Conv(c3, 1, 3),
+        ArchOp::MaxPool(2),
+        ArchOp::Bn,
+        ArchOp::Sign,
+        ArchOp::Flatten,
+        ArchOp::Fc(f),
+        ArchOp::Bn,
+        ArchOp::Sign,
+        ArchOp::Out(10),
+    ]
+}
+
+fn resnet18(width: f64) -> Vec<ArchOp> {
+    let b = ((64.0 * width) as usize).max(8);
+    vec![
+        ArchOp::Conv(b, 1, 3),
+        ArchOp::Bn,
+        ArchOp::Sign,
+        ArchOp::Scb(b, 1),
+        ArchOp::Scb(2 * b, 2),
+        ArchOp::Scb(4 * b, 2),
+        ArchOp::MaxPool(2),
+        ArchOp::Scb(8 * b, 1),
+        ArchOp::MaxPool(4),
+        ArchOp::Flatten,
+        ArchOp::Out(10),
+    ]
+}
+
+/// The model registry at the default CPU-budget widths
+/// (`python/compile/configs.py::model_configs(full=False)`).
+pub fn model_meta(name: &str) -> Result<ModelMeta> {
+    let mm = match name {
+        "vgg3" => ModelMeta {
+            name: "vgg3",
+            in_shape: [1, 28, 28],
+            n_classes: 10,
+            train_batch: 64,
+            eval_batch: 16,
+            hist_batch: 32,
+            spec: vgg3(0.5, 0.25),
+        },
+        "vgg7" => ModelMeta {
+            name: "vgg7",
+            in_shape: [3, 32, 32],
+            n_classes: 10,
+            train_batch: 32,
+            eval_batch: 8,
+            hist_batch: 16,
+            spec: vgg7(0.25, 0.25),
+        },
+        "resnet18" => ModelMeta {
+            name: "resnet18",
+            in_shape: [3, 64, 64],
+            n_classes: 10,
+            train_batch: 16,
+            eval_batch: 8,
+            hist_batch: 8,
+            spec: resnet18(0.25),
+        },
+        "vgg3_tiny" => ModelMeta {
+            name: "vgg3_tiny",
+            in_shape: [1, 28, 28],
+            n_classes: 10,
+            train_batch: 16,
+            eval_batch: 8,
+            hist_batch: 8,
+            spec: vgg3(0.125, 32.0 / 2048.0),
+        },
+        other => {
+            return Err(anyhow!(
+                "unknown model `{other}` (native registry: vgg3, vgg7, \
+                 resnet18, vgg3_tiny)"
+            ))
+        }
+    };
+    Ok(mm)
+}
+
+pub fn model_names() -> [&'static str; 4] {
+    ["vgg3", "vgg7", "resnet18", "vgg3_tiny"]
+}
+
+impl ModelMeta {
+    pub fn n_matmuls(&self) -> usize {
+        self.spec
+            .iter()
+            .map(|op| match op {
+                ArchOp::Conv(..) | ArchOp::Fc(_) | ArchOp::Out(_) => 1,
+                ArchOp::Scb(..) => 3,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// One-line architecture description (Table II regeneration;
+    /// mirrors `arch.py::describe`).
+    pub fn describe(&self) -> String {
+        let mut rows = vec![];
+        for op in &self.spec {
+            match *op {
+                ArchOp::Conv(c, s, _) => rows.push(if s != 1 {
+                    format!("C{c}/s{s}")
+                } else {
+                    format!("C{c}")
+                }),
+                ArchOp::MaxPool(k) => rows.push(format!("MP{k}")),
+                ArchOp::Scb(c, s) => rows.push(if s != 1 {
+                    format!("SCB{c}/s{s}")
+                } else {
+                    format!("SCB{c}")
+                }),
+                ArchOp::Fc(f) => rows.push(format!("FC{f}")),
+                ArchOp::Out(n) => rows.push(format!("FC{n}")),
+                _ => {}
+            }
+        }
+        rows.join(" -> ")
+    }
+
+    /// Shapes of every folded hardware tensor in `export_folded` order:
+    /// per matmul a padded +-1 weight `wb{i}` [O, Kp] (plus the true
+    /// pre-padding reduction length), per BN a scale/bias pair, and the
+    /// final f32 out bias.
+    pub fn folded_signature(&self) -> Vec<FoldedSig> {
+        let mut out = vec![];
+        let [mut c, mut h, mut w] = self.in_shape;
+        let mut flat = 0usize;
+        let mut mat = 0usize;
+        let mut bni = 0usize;
+        let mut last_bn_ch = c;
+        let mut emit_w = |out: &mut Vec<FoldedSig>, o: usize, k: usize| {
+            out.push(FoldedSig::Weight {
+                name: format!("wb{mat}"),
+                o,
+                k,
+                kp: k.div_ceil(ARRAY_SIZE) * ARRAY_SIZE,
+            });
+            mat += 1;
+        };
+        let mut emit_bn = |out: &mut Vec<FoldedSig>, ch: usize| {
+            out.push(FoldedSig::Affine {
+                scale: format!("scale{bni}"),
+                bias: format!("bias{bni}"),
+                ch,
+            });
+            bni += 1;
+        };
+        for op in &self.spec {
+            match *op {
+                ArchOp::Conv(oc, s, k) => {
+                    emit_w(&mut out, oc, c * k * k);
+                    c = oc;
+                    h = h.div_ceil(s);
+                    w = w.div_ceil(s);
+                    last_bn_ch = c;
+                }
+                ArchOp::MaxPool(k) => {
+                    h /= k;
+                    w /= k;
+                }
+                ArchOp::Bn => emit_bn(&mut out, last_bn_ch),
+                ArchOp::Sign => {}
+                ArchOp::Scb(oc, s) => {
+                    emit_w(&mut out, oc, c * 9);
+                    emit_bn(&mut out, oc);
+                    emit_w(&mut out, oc, oc * 9);
+                    emit_bn(&mut out, oc);
+                    emit_w(&mut out, oc, c);
+                    emit_bn(&mut out, oc);
+                    c = oc;
+                    h = h.div_ceil(s);
+                    w = w.div_ceil(s);
+                    last_bn_ch = c;
+                }
+                ArchOp::Flatten => {
+                    flat = c * h * w;
+                    last_bn_ch = flat;
+                }
+                ArchOp::Fc(f) => {
+                    emit_w(&mut out, f, flat);
+                    flat = f;
+                    last_bn_ch = flat;
+                }
+                ArchOp::Out(n) => {
+                    emit_w(&mut out, n, flat);
+                    out.push(FoldedSig::OutBias {
+                        name: "out.b".into(),
+                        n,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Total binarized weight cells (pre-padding) across all matmuls.
+    pub fn n_weight_bits(&self) -> usize {
+        self.folded_signature()
+            .iter()
+            .map(|s| match s {
+                FoldedSig::Weight { o, k, .. } => o * k,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// One folded tensor the export stage emits, with its shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FoldedSig {
+    /// +-1 weight matrix [o, kp] (kp = k padded to the a=32 groups).
+    Weight {
+        name: String,
+        o: usize,
+        k: usize,
+        kp: usize,
+    },
+    /// Folded batch-norm affine (scale/bias, `ch` each).
+    Affine {
+        scale: String,
+        bias: String,
+        ch: usize,
+    },
+    /// Final f32 logit bias [n].
+    OutBias { name: String, n: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_aot_configs() {
+        let m = model_meta("vgg3").unwrap();
+        assert_eq!(m.n_matmuls(), 4);
+        assert_eq!(m.describe(), "C32 -> MP2 -> C32 -> MP2 -> FC512 -> FC10");
+        let m = model_meta("vgg7").unwrap();
+        assert_eq!(m.n_matmuls(), 8);
+        let m = model_meta("resnet18").unwrap();
+        assert_eq!(m.n_matmuls(), 14);
+        let m = model_meta("vgg3_tiny").unwrap();
+        assert_eq!(m.n_matmuls(), 4);
+        assert!(model_meta("nope").is_err());
+    }
+
+    #[test]
+    fn vgg3_folded_signature_shapes() {
+        let m = model_meta("vgg3").unwrap();
+        let sig = m.folded_signature();
+        // wb0 [32, 9->32], bn, wb1 [32, 288], bn, wb2 [512, 1568], bn,
+        // wb3 [10, 512], out.b [10]
+        match &sig[0] {
+            FoldedSig::Weight { o, k, kp, .. } => {
+                assert_eq!((*o, *k, *kp), (32, 9, 32));
+            }
+            other => panic!("wb0 expected, got {other:?}"),
+        }
+        match &sig[4] {
+            FoldedSig::Weight { o, k, kp, .. } => {
+                assert_eq!((*o, *k, *kp), (512, 1568, 1568));
+            }
+            other => panic!("wb2 expected, got {other:?}"),
+        }
+        match sig.last().unwrap() {
+            FoldedSig::OutBias { n, .. } => assert_eq!(*n, 10),
+            other => panic!("out.b expected, got {other:?}"),
+        }
+        assert_eq!(
+            sig.iter()
+                .filter(|s| matches!(s, FoldedSig::Weight { .. }))
+                .count(),
+            m.n_matmuls()
+        );
+    }
+
+    #[test]
+    fn resnet_signature_walks_strides_and_pools() {
+        let m = model_meta("resnet18").unwrap();
+        let sig = m.folded_signature();
+        // final out matmul consumes 8b * 2 * 2 = 512 features (b = 16)
+        let last_w = sig
+            .iter()
+            .rev()
+            .find_map(|s| match s {
+                FoldedSig::Weight { o, k, .. } => Some((*o, *k)),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(last_w, (10, 128 * 2 * 2));
+    }
+}

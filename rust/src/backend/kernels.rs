@@ -1,0 +1,314 @@
+//! Tiled, cache-blocked sub-MAC matmul kernels over the bit-packed
+//! operands, fanned out over the shared [`ScopedPool`].
+//!
+//! Semantics are *identical* to the scalar [`SubMacEngine`] loops (and
+//! therefore to the AOT kernels): every output element is
+//! `2 * sum_g decode(level_g, u(o,g,d)) - beta` with the counter-based
+//! PRNG indexed by the logical `(o*G + g)*D + d` position — independent
+//! per element, so both the d-blocked tiling and the o-block threading
+//! are bit-exact at any tile size or thread count (pinned by
+//! `tests/backend.rs`).
+//!
+//! Tiling (idiom from the rten/gemm microkernels referenced in
+//! SNIPPETS.md, scaled to bit-packed operands): the inner loops walk a
+//! block of `TILE_D` activation rows for each weight row, so the packed
+//! x-rows of a block stay resident in L1 across the whole o-sweep
+//! instead of streaming the full x matrix once per output row.
+
+use crate::bnn::bitpack::{group_level, BitMatrix};
+use crate::bnn::hashrng::hash01;
+use crate::bnn::{ErrorModel, SubMacEngine};
+use crate::capmin::N_LEVELS;
+use crate::util::pool::ScopedPool;
+
+/// Activation rows held hot per tile: 128 rows x <=49 words = <=25 KiB,
+/// inside L1/L2 on every testbed core.
+pub const TILE_D: usize = 128;
+
+/// Exact +-1 matmul, cache-blocked (single thread). Bit-identical to
+/// [`SubMacEngine::matmul_exact`].
+pub fn matmul_exact_tiled(eng: &SubMacEngine, x: &BitMatrix) -> Vec<f32> {
+    let (o, d) = (eng.w.rows, x.rows);
+    let mut out = vec![0.0f32; o * d];
+    exact_block(eng, x, 0, o, &mut out);
+    out
+}
+
+/// Exact +-1 matmul, tiled and fanned over `pool` in contiguous
+/// o-blocks. Bit-identical to the scalar loop at any thread count.
+pub fn matmul_exact(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+) -> Vec<f32> {
+    let (o, d) = (eng.w.rows, x.rows);
+    let blocks = o_blocks(o, pool.threads());
+    if blocks.len() <= 1 {
+        return matmul_exact_tiled(eng, x);
+    }
+    let parts = pool.map(blocks.len(), |bi| {
+        let (o0, o1) = blocks[bi];
+        let mut part = vec![0.0f32; (o1 - o0) * d];
+        exact_block(eng, x, o0, o1, &mut part);
+        part
+    });
+    parts.concat()
+}
+
+fn exact_block(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    o0: usize,
+    o1: usize,
+    out: &mut [f32],
+) {
+    let (d, g) = (x.rows, eng.n_groups());
+    debug_assert_eq!(x.words_per_row, g);
+    for d0 in (0..d).step_by(TILE_D) {
+        let d1 = (d0 + TILE_D).min(d);
+        for oi in o0..o1 {
+            let wr = eng.w.row(oi);
+            let row = &mut out[(oi - o0) * d..(oi - o0 + 1) * d];
+            for di in d0..d1 {
+                let xr = x.row(di);
+                let mut level_sum = 0u32;
+                for gi in 0..g {
+                    level_sum += group_level(wr[gi], xr[gi]);
+                }
+                row[di] =
+                    (2 * level_sum as i64 - eng.beta as i64) as f32;
+            }
+        }
+    }
+}
+
+/// Error-model matmul, cache-blocked (single thread). Bit-identical to
+/// [`SubMacEngine::matmul_error`].
+pub fn matmul_error_tiled(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    em: &ErrorModel,
+    seed: u32,
+    salt: u32,
+) -> Vec<f32> {
+    let (o, d) = (eng.w.rows, x.rows);
+    let mut out = vec![0.0f32; o * d];
+    error_block(eng, x, em, seed, salt, 0, o, &mut out);
+    out
+}
+
+/// Error-model matmul fanned over `pool` in contiguous o-blocks. The
+/// PRNG is indexed by the logical element position, so this is
+/// bit-identical to the scalar loop at any thread count.
+pub fn matmul_error(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    em: &ErrorModel,
+    seed: u32,
+    salt: u32,
+) -> Vec<f32> {
+    let (o, d) = (eng.w.rows, x.rows);
+    let blocks = o_blocks(o, pool.threads());
+    if blocks.len() <= 1 {
+        return matmul_error_tiled(eng, x, em, seed, salt);
+    }
+    let parts = pool.map(blocks.len(), |bi| {
+        let (o0, o1) = blocks[bi];
+        let mut part = vec![0.0f32; (o1 - o0) * d];
+        error_block(eng, x, em, seed, salt, o0, o1, &mut part);
+        part
+    });
+    parts.concat()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn error_block(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    em: &ErrorModel,
+    seed: u32,
+    salt: u32,
+    o0: usize,
+    o1: usize,
+    out: &mut [f32],
+) {
+    let (d, g) = (x.rows, eng.n_groups());
+    debug_assert_eq!(x.words_per_row, g);
+    for d0 in (0..d).step_by(TILE_D) {
+        let d1 = (d0 + TILE_D).min(d);
+        for oi in o0..o1 {
+            let wr = eng.w.row(oi);
+            let row = &mut out[(oi - o0) * d..(oi - o0 + 1) * d];
+            for di in d0..d1 {
+                let xr = x.row(di);
+                let mut acc = 0.0f32;
+                for gi in 0..g {
+                    let level = group_level(wr[gi], xr[gi]) as usize;
+                    // logical index (o*G + g)*D + d — the kernels' layout
+                    let lin = salt.wrapping_add(
+                        ((oi as u32) * (g as u32))
+                            .wrapping_add(gi as u32)
+                            .wrapping_mul(d as u32)
+                            .wrapping_add(di as u32),
+                    );
+                    acc += 2.0 * em.decode(level, hash01(seed, lin));
+                }
+                row[di] = acc - eng.beta as f32;
+            }
+        }
+    }
+}
+
+/// F_MAC level histogram of one matmul, fanned over `pool` (per-block
+/// histograms merge by addition, so the fan-out is exact).
+pub fn histogram(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+) -> [u64; N_LEVELS] {
+    let (o, d, g) = (eng.w.rows, x.rows, eng.n_groups());
+    let blocks = o_blocks(o, pool.threads());
+    let parts = pool.map(blocks.len(), |bi| {
+        let (o0, o1) = blocks[bi];
+        let mut hist = [0u64; N_LEVELS];
+        for oi in o0..o1 {
+            let wr = eng.w.row(oi);
+            for di in 0..d {
+                let xr = x.row(di);
+                for gi in 0..g {
+                    hist[group_level(wr[gi], xr[gi]) as usize] += 1;
+                }
+            }
+        }
+        hist
+    });
+    let mut hist = [0u64; N_LEVELS];
+    for part in parts {
+        for (a, b) in hist.iter_mut().zip(part.iter()) {
+            *a += b;
+        }
+    }
+    hist
+}
+
+/// Contiguous output-row blocks, one per worker (so the per-block
+/// results concatenate into the row-major output with no interleaving).
+fn o_blocks(o: usize, workers: usize) -> Vec<(usize, usize)> {
+    let n = workers.min(o).max(1);
+    let base = o / n;
+    let extra = o % n;
+    let mut blocks = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < extra);
+        blocks.push((start, start + len));
+        start += len;
+    }
+    blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_engine(
+        rng: &mut Rng,
+        o: usize,
+        k: usize,
+        d: usize,
+    ) -> (SubMacEngine, BitMatrix) {
+        let w: Vec<f32> = (0..o * k).map(|_| rng.pm1(0.5)).collect();
+        let x: Vec<f32> = (0..d * k).map(|_| rng.pm1(0.5)).collect();
+        (
+            SubMacEngine::new(o, k, &w, k),
+            BitMatrix::pack(d, k, &x, false),
+        )
+    }
+
+    fn rand_em(rng: &mut Rng) -> ErrorModel {
+        let mut full = vec![vec![0.0f64; N_LEVELS]; N_LEVELS];
+        for (m, row) in full.iter_mut().enumerate() {
+            let mut tot = 0.0;
+            for dlt in -2i64..=2 {
+                let j = (m as i64 + dlt).clamp(0, 32) as usize;
+                let w = rng.f64() + 0.05;
+                row[j] += w;
+                tot += w;
+            }
+            row.iter_mut().for_each(|v| *v /= tot);
+        }
+        ErrorModel::from_full(&full)
+    }
+
+    #[test]
+    fn tiled_exact_matches_scalar() {
+        let mut rng = Rng::new(31);
+        for (o, k, d) in [(5, 64, 300), (17, 96, 131), (1, 32, 1)] {
+            let (eng, xb) = rand_engine(&mut rng, o, k, d);
+            assert_eq!(matmul_exact_tiled(&eng, &xb), eng.matmul_exact(&xb));
+        }
+    }
+
+    #[test]
+    fn threaded_exact_matches_scalar_at_every_pool_size() {
+        let mut rng = Rng::new(32);
+        let (eng, xb) = rand_engine(&mut rng, 13, 64, 257);
+        let want = eng.matmul_exact(&xb);
+        for threads in [1usize, 2, 3, 8, 32] {
+            let pool = ScopedPool::new(threads);
+            assert_eq!(
+                matmul_exact(&pool, &eng, &xb),
+                want,
+                "threads {threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_and_threaded_error_match_scalar_bitwise() {
+        let mut rng = Rng::new(33);
+        let (eng, xb) = rand_engine(&mut rng, 9, 96, 200);
+        let em = rand_em(&mut rng);
+        for (seed, salt) in [(0u32, 0u32), (7, 0x9E3779B1), (0xDEAD, 42)] {
+            let want = eng.matmul_error(&xb, &em, seed, salt);
+            assert_eq!(
+                matmul_error_tiled(&eng, &xb, &em, seed, salt),
+                want
+            );
+            for threads in [2usize, 5] {
+                let pool = ScopedPool::new(threads);
+                assert_eq!(
+                    matmul_error(&pool, &eng, &xb, &em, seed, salt),
+                    want,
+                    "seed {seed} salt {salt} threads {threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_matches_engine() {
+        let mut rng = Rng::new(34);
+        let (eng, xb) = rand_engine(&mut rng, 6, 96, 77);
+        let want = eng.histogram(&xb);
+        for threads in [1usize, 3] {
+            let pool = ScopedPool::new(threads);
+            assert_eq!(histogram(&pool, &eng, &xb), want);
+        }
+    }
+
+    #[test]
+    fn o_blocks_cover_and_are_contiguous() {
+        for (o, w) in [(10, 3), (3, 8), (1, 1), (64, 64)] {
+            let blocks = o_blocks(o, w);
+            assert_eq!(blocks[0].0, 0);
+            assert_eq!(blocks.last().unwrap().1, o);
+            for win in blocks.windows(2) {
+                assert_eq!(win[0].1, win[1].0);
+                assert!(win[0].1 > win[0].0);
+            }
+        }
+    }
+}

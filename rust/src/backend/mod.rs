@@ -1,0 +1,253 @@
+//! Backend abstraction layer (DESIGN.md §9): one trait for "evaluate a
+//! folded BNN under per-matmul error models, and collect its F_MAC
+//! histograms", with two interchangeable engines behind it:
+//!
+//! * [`native::NativeBackend`] — the whole multi-layer forward pass on
+//!   host (bit-pack -> grouped sub-MAC -> counter-PRNG error decode ->
+//!   folded affine -> argmax) on tiled, thread-pooled kernels. No XLA,
+//!   no artifacts, no Python anywhere.
+//! * `xla_backend::XlaBackend` (behind the `xla` cargo feature) — the
+//!   original path through the AOT eval/hist artifacts and the PJRT
+//!   runtime.
+//!
+//! Both consume the same inputs (the model's name in the native
+//! registry, the folded tensors in export order, per-matmul
+//! [`ErrorModel`]s, a PRNG seed) and share one batching + per-batch
+//! seed schedule, so their logits agree bit-for-bit — the native path
+//! is a drop-in replacement, not an approximation
+//! (`tests/backend.rs`).
+
+pub mod arch;
+pub mod kernels;
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod xla_backend;
+
+use anyhow::{anyhow, Result};
+
+use crate::bnn::ErrorModel;
+use crate::capmin::Fmac;
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::store::NamedTensor;
+use crate::data::synth::DatasetSpec;
+use crate::data::{Loader, Split};
+use crate::util::stats::argmax;
+
+/// Requested backend (`--backend`); `Auto` resolves per machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Auto,
+    Native,
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => Err(anyhow!(
+                "bad --backend `{other}`: expected native, xla or auto"
+            )),
+        }
+    }
+
+    /// Resolve `auto` for this build and machine: XLA when the crate
+    /// was built with the `xla` feature *and* compiled artifacts are
+    /// present, native otherwise. Explicit choices pass through
+    /// unchanged (an explicit `xla` on a native-only build errors at
+    /// backend construction, not here — keys still need a name).
+    pub fn resolve(cfg: &ExperimentConfig) -> &'static str {
+        match BackendKind::parse(&cfg.backend) {
+            Ok(BackendKind::Native) => "native",
+            Ok(BackendKind::Xla) => "xla",
+            _ => {
+                if cfg!(feature = "xla")
+                    && crate::runtime::artifacts_dir()
+                        .join("manifest.json")
+                        .exists()
+                {
+                    "xla"
+                } else {
+                    "native"
+                }
+            }
+        }
+    }
+}
+
+/// F_MAC extraction result (per-matmul + summed histograms plus the
+/// clean accuracy measured on the same forward passes).
+pub struct FmacResult {
+    pub per_matmul: Vec<Fmac>,
+    pub sum: Fmac,
+    pub accuracy: f64,
+    pub n_samples: usize,
+}
+
+/// Evaluate a folded BNN over a data split under per-matmul error
+/// models, and collect F_MAC histograms — the two operations every
+/// figure driver needs.
+///
+/// Contract shared by all implementations (so results are
+/// backend-independent bit-for-bit):
+/// * `folded` is the export-ordered tensor list (`wb{i}` padded +-1
+///   weights, `scale{i}`/`bias{i}` affines, `out.b`);
+/// * matmul `i` uses PRNG salt `i * 0x9E3779B1` over logical element
+///   indices `(o*G + g)*D + d` with the shared murmur3 `hash01`;
+/// * accuracy runs the test split through batches of the model's
+///   `eval_batch`, seeding batch `bi` with
+///   `seed + bi * 0x9E37` (wrapping) and a loader seeded `0xE7A1`.
+///
+/// Deliberately not `Send`/`Sync`: the session facade drives one
+/// backend sequentially (the PJRT client is single-threaded); the
+/// *native* backend parallelizes internally through its pool.
+pub trait InferenceBackend {
+    fn name(&self) -> &'static str;
+
+    /// Logits [batch, n_classes] of one input batch.
+    fn logits(
+        &self,
+        model: &str,
+        folded: &[NamedTensor],
+        x: &[f32],
+        batch: usize,
+        ems: &[ErrorModel],
+        seed: u32,
+    ) -> Result<Vec<f32>>;
+
+    /// Accuracy on `spec`'s test split over `limit` samples. The
+    /// default implementation drives [`InferenceBackend::logits`]
+    /// through the shared batch/seed schedule.
+    fn accuracy(
+        &self,
+        model: &str,
+        folded: &[NamedTensor],
+        spec: DatasetSpec,
+        ems: &[ErrorModel],
+        limit: usize,
+        seed: u32,
+    ) -> Result<f64> {
+        let meta = arch::model_meta(model)?;
+        let eb = meta.eval_batch;
+        let mut loader = Loader::new(spec, Split::Test, eb, limit, 0xE7A1);
+        let n_batches = (limit / eb).max(1);
+        let (mut correct, mut total) = (0usize, 0usize);
+        for bi in 0..n_batches {
+            let batch = loader.next_batch();
+            // per-batch seed: decorrelates batches within one run
+            let logits = self.logits(
+                model,
+                folded,
+                &batch.x,
+                eb,
+                ems,
+                seed.wrapping_add(bi as u32 * 0x9E37),
+            )?;
+            for (i, &label) in batch.labels.iter().enumerate() {
+                let row =
+                    &logits[i * meta.n_classes..(i + 1) * meta.n_classes];
+                if argmax(row) == label {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Mean accuracy over `n_seeds` PRNG seeds (paper: average of 3
+    /// runs for the variation curves).
+    #[allow(clippy::too_many_arguments)]
+    fn accuracy_multi_seed(
+        &self,
+        model: &str,
+        folded: &[NamedTensor],
+        spec: DatasetSpec,
+        ems: &[ErrorModel],
+        limit: usize,
+        n_seeds: usize,
+        base_seed: u32,
+    ) -> Result<f64> {
+        let mut acc = 0.0;
+        for s in 0..n_seeds {
+            acc += self.accuracy(
+                model,
+                folded,
+                spec.clone(),
+                ems,
+                limit,
+                base_seed.wrapping_add(s as u32 * 7919),
+            )?;
+        }
+        Ok(acc / n_seeds as f64)
+    }
+
+    /// F_MAC histograms over `limit` training samples (clean forward,
+    /// histograms over the dummy-biased packed operands).
+    fn fmac(
+        &self,
+        model: &str,
+        folded: &[NamedTensor],
+        spec: DatasetSpec,
+        limit: usize,
+        seed: u64,
+    ) -> Result<FmacResult>;
+}
+
+pub use native::NativeBackend;
+#[cfg(feature = "xla")]
+pub use xla_backend::XlaBackend;
+
+/// Content hash of a folded tensor list (FNV-1a over tensor names and
+/// f32 bit patterns) — keys both backends' prepared-model caches, so
+/// re-exported weights invalidate cleanly.
+pub(crate) fn fold_hash(folded: &[NamedTensor]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for t in folded {
+        for b in t.name.as_bytes() {
+            eat(*b);
+        }
+        for &v in &t.data {
+            for b in v.to_bits().to_le_bytes() {
+                eat(b);
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn explicit_kinds_resolve_to_themselves() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = "native".into();
+        assert_eq!(BackendKind::resolve(&cfg), "native");
+        cfg.backend = "xla".into();
+        assert_eq!(BackendKind::resolve(&cfg), "xla");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn auto_resolves_native_without_the_xla_feature() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = "auto".into();
+        assert_eq!(BackendKind::resolve(&cfg), "native");
+    }
+}

@@ -1,0 +1,739 @@
+//! `NativeBackend` — the complete hardware-mode BNN forward pass on
+//! host, no XLA anywhere: bit-pack -> grouped sub-MAC -> counter-PRNG
+//! error-model decode -> folded batchnorm affine -> sign -> argmax.
+//!
+//! This is the Rust twin of `python/compile/nn.py::forward_eval` with
+//! `engine='jnp'|'pallas'`: same im2col patch layout, same dummy-cell
+//! biasing of partial tail groups (`centered_pad`), same per-matmul
+//! PRNG salt stride, same batching and per-batch seed schedule — so
+//! given the same folded tensors, error models and seed the logits are
+//! bit-identical to the AOT eval artifacts (pinned by
+//! `tests/backend.rs` when artifacts are present). The matmuls run on
+//! the tiled, cache-blocked kernels of [`super::kernels`], fanned out
+//! over the shared [`ScopedPool`].
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::arch::{self, ArchOp, FoldedSig, ModelMeta};
+use super::kernels;
+use super::{fold_hash, FmacResult, InferenceBackend};
+use crate::bnn::engine::centered_pad;
+use crate::bnn::{BitMatrix, ErrorModel, SubMacEngine};
+use crate::capmin::Fmac;
+use crate::coordinator::store::NamedTensor;
+use crate::data::synth::DatasetSpec;
+use crate::data::{Loader, Split};
+use crate::util::pool::ScopedPool;
+use crate::util::stats::argmax;
+
+/// Per-matmul PRNG stream decorrelation (`nn.py::_SALT_STRIDE`).
+const SALT_STRIDE: u32 = 0x9E37_79B1;
+
+/// A folded model prepared for native execution: weights bit-packed
+/// once (stationary), affines and biases unpacked, shapes validated
+/// against the registry's folded signature.
+pub struct NativePlan {
+    pub meta: ModelMeta,
+    /// One packed engine per matmul, in consumption order; `beta` is
+    /// the dummy-biased effective reduction length.
+    engines: Vec<SubMacEngine>,
+    /// Conducting dummy rows per matmul (`centered_pad` p_on).
+    pads: Vec<usize>,
+    /// Folded BN affines (scale, bias) in consumption order.
+    affines: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Final f32 logit bias.
+    out_bias: Vec<f32>,
+}
+
+impl NativePlan {
+    pub fn build(model: &str, folded: &[NamedTensor]) -> Result<NativePlan> {
+        let meta = arch::model_meta(model)?;
+        let sig = meta.folded_signature();
+        let want: usize = sig
+            .iter()
+            .map(|s| match s {
+                FoldedSig::Affine { .. } => 2,
+                _ => 1,
+            })
+            .sum();
+        ensure!(
+            folded.len() == want,
+            "{model}: expected {want} folded tensors, got {}",
+            folded.len()
+        );
+        let mut engines = vec![];
+        let mut pads = vec![];
+        let mut affines = vec![];
+        let mut out_bias = vec![];
+        let mut it = folded.iter();
+        for s in &sig {
+            match s {
+                FoldedSig::Weight { name, o, k, kp } => {
+                    let t = it.next().expect("arity checked");
+                    ensure!(
+                        t.shape == vec![*o, *kp],
+                        "{model}/{name}: weight shape {:?}, want [{o}, \
+                         {kp}]",
+                        t.shape
+                    );
+                    let (p_on, beta_eff) = centered_pad(*k);
+                    engines.push(SubMacEngine::new(
+                        *o, *kp, &t.data, beta_eff,
+                    ));
+                    pads.push(p_on);
+                }
+                FoldedSig::Affine { scale, ch, .. } => {
+                    let ts = it.next().expect("arity checked");
+                    let tb = it.next().expect("arity checked");
+                    ensure!(
+                        ts.data.len() == *ch && tb.data.len() == *ch,
+                        "{model}/{scale}: affine length {}/{}, want {ch}",
+                        ts.data.len(),
+                        tb.data.len()
+                    );
+                    affines.push((ts.data.clone(), tb.data.clone()));
+                }
+                FoldedSig::OutBias { n, .. } => {
+                    let t = it.next().expect("arity checked");
+                    ensure!(
+                        t.data.len() == *n,
+                        "{model}/out.b: length {}, want {n}",
+                        t.data.len()
+                    );
+                    out_bias = t.data.clone();
+                }
+            }
+        }
+        Ok(NativePlan {
+            meta,
+            engines,
+            pads,
+            affines,
+            out_bias,
+        })
+    }
+
+    pub fn n_matmuls(&self) -> usize {
+        self.engines.len()
+    }
+}
+
+/// NCHW activation block.
+struct Act {
+    data: Vec<f32>,
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+}
+
+/// Flattened [b, cols] activation block.
+struct Flat {
+    data: Vec<f32>,
+    b: usize,
+    cols: usize,
+}
+
+enum Tensor {
+    Nchw(Act),
+    Flat(Flat),
+}
+
+enum Mode<'a> {
+    /// Ideal circuit (plain +-1 matmul) — the hist artifact's engine.
+    Exact,
+    /// Grouped sub-MAC through per-matmul error models.
+    Error { ems: &'a [ErrorModel], seed: u32 },
+}
+
+/// One forward execution: walks the arch ops consuming engines and
+/// affines in order, exactly like `forward_eval` walks the folded list.
+struct Exec<'p, 'm> {
+    plan: &'p NativePlan,
+    pool: &'p ScopedPool,
+    mode: Mode<'m>,
+    /// F_MAC accumulation (over the dummy-biased packed operands, like
+    /// the hist artifact).
+    hist: Option<&'m mut Vec<Fmac>>,
+    eng_i: usize,
+    aff_i: usize,
+}
+
+impl Exec<'_, '_> {
+    fn matmul(&mut self, x_rows: &[f32], d: usize) -> Vec<f32> {
+        let i = self.eng_i;
+        self.eng_i += 1;
+        let eng = &self.plan.engines[i];
+        debug_assert_eq!(x_rows.len(), d * eng.w.cols);
+        let xb = BitMatrix::pack(d, eng.w.cols, x_rows, false);
+        if let Some(hists) = self.hist.as_deref_mut() {
+            let part = kernels::histogram(self.pool, eng, &xb);
+            for (a, b) in hists[i].counts.iter_mut().zip(part.iter()) {
+                *a += b;
+            }
+        }
+        match self.mode {
+            Mode::Exact => kernels::matmul_exact(self.pool, eng, &xb),
+            Mode::Error { ems, seed } => kernels::matmul_error(
+                self.pool,
+                eng,
+                &xb,
+                &ems[i],
+                seed,
+                (i as u32).wrapping_mul(SALT_STRIDE),
+            ),
+        }
+    }
+
+    /// im2col rows for the upcoming matmul: SAME padding with -1 (the
+    /// binary "off"), feature order (channel, kr, kc) matching the OIHW
+    /// weight reshape, then `p_on` conducting dummy columns and
+    /// non-conducting -1 columns up to the group-padded width.
+    fn conv(&mut self, a: &Act, ksize: usize, stride: usize) -> Act {
+        let eng = &self.plan.engines[self.eng_i];
+        let p_on = self.plan.pads[self.eng_i];
+        let kp = eng.w.cols;
+        let k_true = a.c * ksize * ksize;
+        let (b, c, h, w) = (a.b, a.c, a.h, a.w);
+        let oh = h.div_ceil(stride);
+        let ow = w.div_ceil(stride);
+        let ph = ((oh - 1) * stride + ksize).saturating_sub(h);
+        let pw = ((ow - 1) * stride + ksize).saturating_sub(w);
+        let (pad_top, pad_left) = (ph / 2, pw / 2);
+        let d = b * oh * ow;
+        let mut rows = vec![-1.0f32; d * kp];
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let base = ((bi * oh + oy) * ow + ox) * kp;
+                    let row = &mut rows[base..base + kp];
+                    for ci in 0..c {
+                        let plane = &a.data
+                            [(bi * c + ci) * h * w..(bi * c + ci + 1) * h * w];
+                        for kr in 0..ksize {
+                            let ry =
+                                oy * stride + kr;
+                            if ry < pad_top || ry >= pad_top + h {
+                                continue; // stays -1 (pad)
+                            }
+                            let y = ry - pad_top;
+                            for kc in 0..ksize {
+                                let rx = ox * stride + kc;
+                                if rx < pad_left || rx >= pad_left + w {
+                                    continue;
+                                }
+                                let x = rx - pad_left;
+                                row[ci * ksize * ksize + kr * ksize + kc] =
+                                    plane[y * w + x];
+                            }
+                        }
+                    }
+                    for v in row[k_true..k_true + p_on].iter_mut() {
+                        *v = 1.0; // conducting dummy cells
+                    }
+                }
+            }
+        }
+        let o = eng.w.rows;
+        let out = self.matmul(&rows, d);
+        // [O, D] o-major -> NCHW
+        let mut y = vec![0.0f32; b * o * oh * ow];
+        for oi in 0..o {
+            for bi in 0..b {
+                let src = &out
+                    [oi * d + bi * oh * ow..oi * d + (bi + 1) * oh * ow];
+                let dst_base = (bi * o + oi) * oh * ow;
+                y[dst_base..dst_base + oh * ow].copy_from_slice(src);
+            }
+        }
+        Act {
+            data: y,
+            b,
+            c: o,
+            h: oh,
+            w: ow,
+        }
+    }
+
+    fn fc(&mut self, f: &Flat) -> Flat {
+        let eng = &self.plan.engines[self.eng_i];
+        let p_on = self.plan.pads[self.eng_i];
+        let kp = eng.w.cols;
+        let k_true = f.cols;
+        let (b, o) = (f.b, eng.w.rows);
+        let mut rows = vec![-1.0f32; b * kp];
+        for bi in 0..b {
+            let row = &mut rows[bi * kp..(bi + 1) * kp];
+            row[..k_true]
+                .copy_from_slice(&f.data[bi * k_true..(bi + 1) * k_true]);
+            for v in row[k_true..k_true + p_on].iter_mut() {
+                *v = 1.0;
+            }
+        }
+        let out = self.matmul(&rows, b); // [O, B] o-major
+        let mut y = vec![0.0f32; b * o];
+        for oi in 0..o {
+            for bi in 0..b {
+                y[bi * o + oi] = out[oi * b + bi];
+            }
+        }
+        Flat {
+            data: y,
+            b,
+            cols: o,
+        }
+    }
+
+    fn affine_nchw(&mut self, a: &mut Act) {
+        let (scale, bias) = &self.plan.affines[self.aff_i];
+        self.aff_i += 1;
+        debug_assert_eq!(scale.len(), a.c);
+        for bi in 0..a.b {
+            for ci in 0..a.c {
+                let (s, t) = (scale[ci], bias[ci]);
+                let base = (bi * a.c + ci) * a.h * a.w;
+                for v in a.data[base..base + a.h * a.w].iter_mut() {
+                    *v = *v * s + t;
+                }
+            }
+        }
+    }
+
+    fn affine_flat(&mut self, f: &mut Flat) {
+        let (scale, bias) = &self.plan.affines[self.aff_i];
+        self.aff_i += 1;
+        debug_assert_eq!(scale.len(), f.cols);
+        for bi in 0..f.b {
+            let row = &mut f.data[bi * f.cols..(bi + 1) * f.cols];
+            for (v, (s, t)) in
+                row.iter_mut().zip(scale.iter().zip(bias.iter()))
+            {
+                *v = *v * s + t;
+            }
+        }
+    }
+
+    fn run(&mut self, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        let [c, h, w] = self.plan.meta.in_shape;
+        ensure!(
+            x.len() == b * c * h * w,
+            "input length {} != batch {b} x {:?}",
+            x.len(),
+            self.plan.meta.in_shape
+        );
+        let mut t = Tensor::Nchw(Act {
+            data: x.to_vec(),
+            b,
+            c,
+            h,
+            w,
+        });
+        let spec = self.plan.meta.spec.clone();
+        for op in &spec {
+            t = match (op, t) {
+                (ArchOp::Conv(_, s, k), Tensor::Nchw(a)) => {
+                    Tensor::Nchw(self.conv(&a, *k, *s))
+                }
+                (ArchOp::MaxPool(k), Tensor::Nchw(a)) => {
+                    Tensor::Nchw(maxpool(&a, *k))
+                }
+                (ArchOp::Bn, Tensor::Nchw(mut a)) => {
+                    self.affine_nchw(&mut a);
+                    Tensor::Nchw(a)
+                }
+                (ArchOp::Bn, Tensor::Flat(mut f)) => {
+                    self.affine_flat(&mut f);
+                    Tensor::Flat(f)
+                }
+                (ArchOp::Sign, Tensor::Nchw(mut a)) => {
+                    hard_sign(&mut a.data);
+                    Tensor::Nchw(a)
+                }
+                (ArchOp::Sign, Tensor::Flat(mut f)) => {
+                    hard_sign(&mut f.data);
+                    Tensor::Flat(f)
+                }
+                (ArchOp::Scb(_, s), Tensor::Nchw(a)) => {
+                    // y = sign(affine(conv3(h, s)))
+                    let mut y = self.conv(&a, 3, *s);
+                    self.affine_nchw(&mut y);
+                    hard_sign(&mut y.data);
+                    // z = affine(conv3(y, 1))
+                    let mut z = self.conv(&y, 3, 1);
+                    self.affine_nchw(&mut z);
+                    // sc = affine(conv1(h, s))
+                    let mut sc = self.conv(&a, 1, *s);
+                    self.affine_nchw(&mut sc);
+                    // h = sign(z + sc)
+                    for (zv, sv) in z.data.iter_mut().zip(sc.data.iter())
+                    {
+                        *zv += sv;
+                    }
+                    hard_sign(&mut z.data);
+                    Tensor::Nchw(z)
+                }
+                (ArchOp::Flatten, Tensor::Nchw(a)) => Tensor::Flat(Flat {
+                    cols: a.c * a.h * a.w,
+                    b: a.b,
+                    data: a.data,
+                }),
+                (ArchOp::Fc(_), Tensor::Flat(f)) => {
+                    Tensor::Flat(self.fc(&f))
+                }
+                (ArchOp::Out(_), Tensor::Flat(f)) => {
+                    let mut y = self.fc(&f);
+                    for bi in 0..y.b {
+                        let row =
+                            &mut y.data[bi * y.cols..(bi + 1) * y.cols];
+                        for (v, ob) in
+                            row.iter_mut().zip(self.plan.out_bias.iter())
+                        {
+                            *v += ob;
+                        }
+                    }
+                    Tensor::Flat(y)
+                }
+                (op, _) => {
+                    return Err(anyhow!(
+                        "op {op:?} applied to a mismatched tensor form"
+                    ))
+                }
+            };
+        }
+        match t {
+            Tensor::Flat(f) => {
+                ensure!(f.cols == self.plan.meta.n_classes);
+                Ok(f.data)
+            }
+            Tensor::Nchw(_) => {
+                Err(anyhow!("forward ended on an unflattened tensor"))
+            }
+        }
+    }
+}
+
+fn hard_sign(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+    }
+}
+
+fn maxpool(a: &Act, k: usize) -> Act {
+    let (oh, ow) = (a.h / k, a.w / k);
+    let mut out = vec![f32::NEG_INFINITY; a.b * a.c * oh * ow];
+    for bi in 0..a.b {
+        for ci in 0..a.c {
+            let plane =
+                &a.data[(bi * a.c + ci) * a.h * a.w..][..a.h * a.w];
+            let dst = &mut out[(bi * a.c + ci) * oh * ow..][..oh * ow];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            m = m
+                                .max(plane[(oy * k + dy) * a.w
+                                    + ox * k
+                                    + dx]);
+                        }
+                    }
+                    dst[oy * ow + ox] = m;
+                }
+            }
+        }
+    }
+    Act {
+        data: out,
+        b: a.b,
+        c: a.c,
+        h: oh,
+        w: ow,
+    }
+}
+
+/// The XLA-free inference backend.
+pub struct NativeBackend {
+    pool: ScopedPool,
+    /// Packed plans keyed by (model, folded-content hash): weights are
+    /// stationary, so a sweep of error models packs each model once.
+    plans: Mutex<HashMap<(String, u64), Arc<NativePlan>>>,
+}
+
+impl NativeBackend {
+    /// `threads = 0` uses all available parallelism.
+    pub fn new(threads: usize) -> NativeBackend {
+        NativeBackend {
+            pool: ScopedPool::new(threads),
+            plans: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    fn plan(
+        &self,
+        model: &str,
+        folded: &[NamedTensor],
+    ) -> Result<Arc<NativePlan>> {
+        let key = (model.to_string(), fold_hash(folded));
+        if let Some(p) = self.plans.lock().unwrap().get(&key) {
+            return Ok(p.clone());
+        }
+        let plan = Arc::new(NativePlan::build(model, folded)?);
+        self.plans.lock().unwrap().insert(key, plan.clone());
+        Ok(plan)
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn logits(
+        &self,
+        model: &str,
+        folded: &[NamedTensor],
+        x: &[f32],
+        batch: usize,
+        ems: &[ErrorModel],
+        seed: u32,
+    ) -> Result<Vec<f32>> {
+        let plan = self.plan(model, folded)?;
+        ensure!(
+            ems.len() == plan.n_matmuls(),
+            "{model}: need {} error models, got {}",
+            plan.n_matmuls(),
+            ems.len()
+        );
+        Exec {
+            plan: &plan,
+            pool: &self.pool,
+            mode: Mode::Error { ems, seed },
+            hist: None,
+            eng_i: 0,
+            aff_i: 0,
+        }
+        .run(x, batch)
+    }
+
+    /// Same batch/seed schedule as the trait default, but resolves the
+    /// prepared plan (one content hash over the folded tensors) once
+    /// per pass instead of once per batch.
+    fn accuracy(
+        &self,
+        model: &str,
+        folded: &[NamedTensor],
+        spec: DatasetSpec,
+        ems: &[ErrorModel],
+        limit: usize,
+        seed: u32,
+    ) -> Result<f64> {
+        let plan = self.plan(model, folded)?;
+        ensure!(
+            ems.len() == plan.n_matmuls(),
+            "{model}: need {} error models, got {}",
+            plan.n_matmuls(),
+            ems.len()
+        );
+        let eb = plan.meta.eval_batch;
+        let n_classes = plan.meta.n_classes;
+        let mut loader = Loader::new(spec, Split::Test, eb, limit, 0xE7A1);
+        let n_batches = (limit / eb).max(1);
+        let (mut correct, mut total) = (0usize, 0usize);
+        for bi in 0..n_batches {
+            let batch = loader.next_batch();
+            let logits = Exec {
+                plan: &plan,
+                pool: &self.pool,
+                mode: Mode::Error {
+                    ems,
+                    // per-batch seed: decorrelates batches within one run
+                    seed: seed.wrapping_add(bi as u32 * 0x9E37),
+                },
+                hist: None,
+                eng_i: 0,
+                aff_i: 0,
+            }
+            .run(&batch.x, eb)?;
+            for (i, &label) in batch.labels.iter().enumerate() {
+                if argmax(&logits[i * n_classes..(i + 1) * n_classes])
+                    == label
+                {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    fn fmac(
+        &self,
+        model: &str,
+        folded: &[NamedTensor],
+        spec: DatasetSpec,
+        limit: usize,
+        seed: u64,
+    ) -> Result<FmacResult> {
+        let plan = self.plan(model, folded)?;
+        let hb = plan.meta.hist_batch;
+        let n_classes = plan.meta.n_classes;
+        let mut loader =
+            Loader::new(spec, Split::Train, hb, limit, seed);
+        let n_batches = (limit / hb).max(1);
+        let mut per = vec![Fmac::new(); plan.n_matmuls()];
+        let (mut correct, mut total) = (0usize, 0usize);
+        for _ in 0..n_batches {
+            let batch = loader.next_batch();
+            let logits = Exec {
+                plan: &plan,
+                pool: &self.pool,
+                mode: Mode::Exact,
+                hist: Some(&mut per),
+                eng_i: 0,
+                aff_i: 0,
+            }
+            .run(&batch.x, hb)?;
+            for (i, &label) in batch.labels.iter().enumerate() {
+                if argmax(&logits[i * n_classes..(i + 1) * n_classes])
+                    == label
+                {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        let mut sum = Fmac::new();
+        for f in &per {
+            sum.merge(f);
+        }
+        Ok(FmacResult {
+            per_matmul: per,
+            sum,
+            accuracy: correct as f64 / total.max(1) as f64,
+            n_samples: total,
+        })
+    }
+}
+
+/// Deterministic, *untrained* folded tensors for `model`: random +-1
+/// weights (group pads +1), identity affines, zero logit bias. The
+/// native fallback when neither a cached trained model nor the XLA
+/// trainer is available — experiments still run end-to-end, but the
+/// session flags the accuracy as untrained (near-chance) and keeps the
+/// tensors out of the run store so they can never masquerade as a
+/// trained model.
+pub fn init_folded(model: &str) -> Result<Vec<NamedTensor>> {
+    use crate::util::rng::Rng;
+    let meta = arch::model_meta(model)?;
+    let mut seed = 0xcbf2_9ce4_8422_2325u64;
+    for b in model.as_bytes() {
+        seed ^= *b as u64;
+        seed = seed.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut rng = Rng::new(seed);
+    let mut out = vec![];
+    for s in meta.folded_signature() {
+        match s {
+            FoldedSig::Weight { name, o, k, kp } => {
+                let mut data = vec![1.0f32; o * kp];
+                for oi in 0..o {
+                    for ki in 0..k {
+                        data[oi * kp + ki] = rng.pm1(0.5);
+                    }
+                }
+                out.push(NamedTensor {
+                    name,
+                    shape: vec![o, kp],
+                    data,
+                });
+            }
+            FoldedSig::Affine { scale, bias, ch } => {
+                out.push(NamedTensor {
+                    name: scale,
+                    shape: vec![ch],
+                    data: vec![1.0; ch],
+                });
+                out.push(NamedTensor {
+                    name: bias,
+                    shape: vec![ch],
+                    data: vec![0.0; ch],
+                });
+            }
+            FoldedSig::OutBias { name, n } => {
+                out.push(NamedTensor {
+                    name,
+                    shape: vec![n],
+                    data: vec![0.0; n],
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_folded_matches_signature() {
+        for model in arch::model_names() {
+            let folded = init_folded(model).unwrap();
+            let plan = NativePlan::build(model, &folded).unwrap();
+            assert_eq!(
+                plan.n_matmuls(),
+                arch::model_meta(model).unwrap().n_matmuls()
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_logits_deterministic_and_finite() {
+        let folded = init_folded("vgg3_tiny").unwrap();
+        let be = NativeBackend::new(2);
+        let meta = arch::model_meta("vgg3_tiny").unwrap();
+        let px: usize = meta.in_shape.iter().product();
+        let b = 3usize;
+        let mut rng = crate::util::rng::Rng::new(12);
+        let x: Vec<f32> = (0..b * px).map(|_| rng.pm1(0.5)).collect();
+        let ems: Vec<ErrorModel> = (0..meta.n_matmuls())
+            .map(|_| ErrorModel::identity())
+            .collect();
+        let a = be.logits("vgg3_tiny", &folded, &x, b, &ems, 7).unwrap();
+        let bl = be.logits("vgg3_tiny", &folded, &x, b, &ems, 7).unwrap();
+        assert_eq!(a, bl);
+        assert_eq!(a.len(), b * meta.n_classes);
+        assert!(a.iter().all(|v| v.is_finite()));
+        // logits vary across samples (the net is not constant)
+        assert_ne!(
+            &a[..meta.n_classes],
+            &a[meta.n_classes..2 * meta.n_classes]
+        );
+    }
+
+    #[test]
+    fn identity_error_model_is_integer_logits_plus_bias() {
+        // with identity decode every matmul is the exact +-1 dot, so
+        // pre-bias logits are integers
+        let folded = init_folded("vgg3_tiny").unwrap();
+        let be = NativeBackend::new(1);
+        let meta = arch::model_meta("vgg3_tiny").unwrap();
+        let px: usize = meta.in_shape.iter().product();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let x: Vec<f32> = (0..px).map(|_| rng.pm1(0.5)).collect();
+        let ems: Vec<ErrorModel> = (0..meta.n_matmuls())
+            .map(|_| ErrorModel::identity())
+            .collect();
+        let l = be.logits("vgg3_tiny", &folded, &x, 1, &ems, 0).unwrap();
+        for v in &l {
+            assert_eq!(v.fract(), 0.0, "{v}");
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! `XlaBackend` — the original artifact path behind the
+//! [`InferenceBackend`] trait: folded tensors become PJRT literals and
+//! run through the AOT `eval`/`evalp` and `hist` executables
+//! (`coordinator::evaluator` / `coordinator::histogrammer`).
+//!
+//! Only compiled with the `xla` cargo feature; selection happens in
+//! `DesignSession` (`--backend xla` or `auto` with artifacts present).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use super::{fold_hash, FmacResult, InferenceBackend};
+use crate::bnn::ErrorModel;
+use crate::coordinator::evaluator::{stack_error_models, Evaluator};
+use crate::coordinator::histogrammer::Histogrammer;
+use crate::coordinator::store::NamedTensor;
+use crate::data::synth::DatasetSpec;
+use crate::runtime::{lit_f32, lit_u32_scalar, to_f32, Runtime};
+
+pub struct XlaBackend {
+    rt: Arc<Runtime>,
+    /// "eval" (jnp engine) or "evalp" (Pallas kernel engine).
+    engine: String,
+    /// Folded literals per (model, content hash): marshalled once per
+    /// model, reused across the whole sweep.
+    lits: Mutex<HashMap<(String, u64), Arc<Vec<xla::Literal>>>>,
+}
+
+impl XlaBackend {
+    pub fn new(rt: Arc<Runtime>, engine: &str) -> XlaBackend {
+        XlaBackend {
+            rt,
+            engine: engine.to_string(),
+            lits: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    fn literals(
+        &self,
+        model: &str,
+        folded: &[NamedTensor],
+    ) -> Result<Arc<Vec<xla::Literal>>> {
+        let key = (model.to_string(), fold_hash(folded));
+        if let Some(l) = self.lits.lock().unwrap().get(&key) {
+            return Ok(l.clone());
+        }
+        let lits: Vec<xla::Literal> = folded
+            .iter()
+            .map(|t| lit_f32(&t.shape, &t.data))
+            .collect::<Result<_>>()?;
+        let lits = Arc::new(lits);
+        self.lits.lock().unwrap().insert(key, lits.clone());
+        Ok(lits)
+    }
+}
+
+impl InferenceBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn logits(
+        &self,
+        model: &str,
+        folded: &[NamedTensor],
+        x: &[f32],
+        batch: usize,
+        ems: &[ErrorModel],
+        seed: u32,
+    ) -> Result<Vec<f32>> {
+        use crate::capmin::N_LEVELS;
+        let mi = self.rt.manifest.model(model);
+        ensure!(
+            ems.len() == mi.n_matmuls,
+            "{model}: need {} error models, got {}",
+            mi.n_matmuls,
+            ems.len()
+        );
+        let lits = self.literals(model, folded)?;
+        let exe = self.rt.load(model, &self.engine)?;
+        let x_shape = [&[batch], mi.in_shape.as_slice()].concat();
+        let (cdf_v, vals_v) = stack_error_models(ems);
+        let x_l = lit_f32(&x_shape, x)?;
+        let cdf = lit_f32(&[mi.n_matmuls, N_LEVELS, N_LEVELS], &cdf_v)?;
+        let vals = lit_f32(&[mi.n_matmuls, N_LEVELS], &vals_v)?;
+        let seed_l = lit_u32_scalar(seed);
+        let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+        inputs.push(&x_l);
+        inputs.push(&cdf);
+        inputs.push(&vals);
+        inputs.push(&seed_l);
+        let outs = exe.run_borrowed(&inputs)?;
+        to_f32(&outs[0])
+    }
+
+    /// Delegates to the proven [`Evaluator`] loop (same batch + seed
+    /// schedule as the trait's default — one compiled executable and
+    /// one cdf/vals marshalling per call instead of per batch).
+    fn accuracy(
+        &self,
+        model: &str,
+        folded: &[NamedTensor],
+        spec: DatasetSpec,
+        ems: &[ErrorModel],
+        limit: usize,
+        seed: u32,
+    ) -> Result<f64> {
+        let lits = self.literals(model, folded)?;
+        Evaluator::new(&self.rt, &self.engine)
+            .accuracy(model, &lits, spec, ems, limit, seed)
+    }
+
+    fn fmac(
+        &self,
+        model: &str,
+        folded: &[NamedTensor],
+        spec: DatasetSpec,
+        limit: usize,
+        seed: u64,
+    ) -> Result<FmacResult> {
+        let lits = self.literals(model, folded)?;
+        let res = Histogrammer::new(&self.rt)
+            .extract_dataset(model, &lits, spec, limit, seed)?;
+        Ok(FmacResult {
+            per_matmul: res.per_matmul,
+            sum: res.sum,
+            accuracy: res.accuracy,
+            n_samples: res.n_samples,
+        })
+    }
+}

@@ -29,7 +29,16 @@ pub struct ExperimentConfig {
     /// Seeds for variation runs (paper: average of 3).
     pub n_seeds: usize,
     /// Evaluation engine artifact: "eval" (jnp) or "evalp" (Pallas).
+    /// Only meaningful on the XLA backend.
     pub engine: String,
+    /// Inference backend: "native" (host sub-MAC engine, no XLA),
+    /// "xla" (AOT artifacts through PJRT), or "auto" (xla when the
+    /// build and machine have it, else native) — DESIGN.md §9.
+    pub backend: String,
+    /// Worker threads for solve batches, MC level sweeps and native
+    /// kernels (0 = all cores). Never changes results — recorded in
+    /// point metadata, not cache keys.
+    pub threads: usize,
     /// Directory for cached runs (trained weights, F_MACs, results).
     pub run_dir: String,
     /// Persist operating points to `<run_dir>/points/` (DESIGN.md §7);
@@ -53,6 +62,8 @@ impl Default for ExperimentConfig {
             ks: vec![32, 28, 24, 20, 18, 16, 14, 12, 10, 8, 6, 5],
             n_seeds: 3,
             engine: "eval".to_string(),
+            backend: "auto".to_string(),
+            threads: 0,
             run_dir: "runs".to_string(),
             point_cache: true,
             seed: 42,
@@ -91,6 +102,10 @@ impl ExperimentConfig {
         c.mc_samples = args.usize_or("mc-samples", c.mc_samples);
         c.n_seeds = args.usize_or("seeds", c.n_seeds);
         c.engine = args.str_or("engine", &c.engine);
+        c.backend = args.str_or("backend", &c.backend);
+        // validate early so a typo fails before any work happens
+        crate::backend::BackendKind::parse(&c.backend)?;
+        c.threads = args.usize_or("threads", c.threads);
         c.run_dir = args.str_or("run-dir", &c.run_dir);
         c.point_cache = !args.flag("no-point-cache");
         c.seed = args.usize_or("seed", c.seed as usize) as u64;
@@ -152,6 +167,24 @@ mod tests {
         assert!(c.train_steps <= 30);
         assert!(c.eval_limit <= 64);
         assert_eq!(c.n_seeds, 1);
+    }
+
+    #[test]
+    fn backend_and_threads_flags() {
+        let c = ExperimentConfig::from_args(&parse(&["x"])).unwrap();
+        assert_eq!(c.backend, "auto");
+        assert_eq!(c.threads, 0);
+        let c = ExperimentConfig::from_args(&parse(&[
+            "x", "--backend", "native", "--threads", "3",
+        ]))
+        .unwrap();
+        assert_eq!(c.backend, "native");
+        assert_eq!(c.threads, 3);
+        let e = ExperimentConfig::from_args(&parse(&[
+            "x", "--backend", "tpu",
+        ]))
+        .unwrap_err();
+        assert!(e.to_string().contains("tpu"), "{e}");
     }
 
     #[test]

@@ -1,12 +1,19 @@
 //! L3 coordinator: training, F_MAC extraction and evaluation over the
 //! PJRT runtime (DESIGN.md §2). External consumers drive these stages
 //! through [`crate::session::DesignSession`]; the stage-graph `Pipeline`
-//! is crate-internal.
+//! is crate-internal. The XLA-bound stages (trainer, histogrammer,
+//! evaluator, pipeline) sit behind the `xla` cargo feature — on
+//! native-only builds the session evaluates and histograms through
+//! [`crate::backend::NativeBackend`] instead.
 
 pub mod config;
+#[cfg(feature = "xla")]
 pub mod evaluator;
+#[cfg(feature = "xla")]
 pub mod histogrammer;
+#[cfg(feature = "xla")]
 pub(crate) mod pipeline;
 pub mod report;
 pub mod store;
+#[cfg(feature = "xla")]
 pub mod trainer;

@@ -1,24 +1,24 @@
-//! Training / F_MAC stage graph with run caching — a crate-internal
-//! implementation detail of [`crate::session`] (DESIGN.md §2).
+//! Training stage graph with run caching — a crate-internal
+//! implementation detail of [`crate::session`] (DESIGN.md §2), only
+//! compiled with the `xla` feature (training needs the AOT train-step
+//! artifact; everything downstream of the folded tensors is
+//! backend-agnostic).
 //!
-//! Stage graph: train -> export(fold) -> F_MAC. Trained weights and
-//! histograms cache in `runs/` so sessions compose without retraining.
-//! The hardware solve (CapMin window -> capacitor sizing -> Monte-Carlo
-//! P_map -> CapMin-V -> error models) lives in
-//! `crate::session::solver`; accuracy evaluation in
-//! `crate::coordinator::evaluator`. External consumers go through
-//! `DesignSession` — this type is not part of the public API.
+//! Stage graph: train -> export(fold). Trained weights cache in
+//! `runs/` so sessions compose without retraining. The hardware solve
+//! lives in `crate::session::solver`; accuracy evaluation and F_MAC
+//! extraction go through the [`crate::backend::InferenceBackend`] the
+//! session selected. External consumers go through `DesignSession` —
+//! this type is not part of the public API.
 
 use anyhow::Result;
 
 use super::config::ExperimentConfig;
-use super::histogrammer::Histogrammer;
 use super::store::{NamedTensor, Store};
 use super::trainer::Trainer;
-use crate::capmin::Fmac;
 use crate::data::synth::Dataset;
 use crate::data::{Loader, Split};
-use crate::runtime::{lit_f32, to_f32, Runtime};
+use crate::runtime::{to_f32, Runtime};
 
 pub struct Pipeline<'rt> {
     pub rt: &'rt Runtime,
@@ -32,25 +32,15 @@ impl<'rt> Pipeline<'rt> {
         Ok(Pipeline { rt, cfg, store })
     }
 
-    pub(crate) fn folded_cache_name(ds: Dataset) -> String {
-        format!("{}_folded.capt", ds.spec().name)
-    }
-
-    pub(crate) fn fmac_cache_name(ds: Dataset) -> String {
-        format!("{}_fmac.capt", ds.spec().name)
-    }
-
-    /// Trained + folded hardware tensors for `ds` (cached).
-    pub fn ensure_folded(&self, ds: Dataset) -> Result<Vec<xla::Literal>> {
+    /// Trained + folded hardware tensors for `ds` (cached in the run
+    /// store as host tensors — the session hands them to whichever
+    /// backend evaluates them).
+    pub fn ensure_folded(&self, ds: Dataset) -> Result<Vec<NamedTensor>> {
         let spec = ds.spec();
         let mi = self.rt.manifest.model(spec.model).clone();
-        let cache = Self::folded_cache_name(ds);
+        let cache = crate::session::folded_cache_name(ds);
         if self.store.exists(&cache) {
-            let ts = self.store.load_tensors(&cache)?;
-            return ts
-                .iter()
-                .map(|t| lit_f32(&t.shape, &t.data))
-                .collect::<Result<Vec<_>>>();
+            return self.store.load_tensors(&cache);
         }
         eprintln!(
             "[pipeline] training {} on {} ({} steps)...",
@@ -89,7 +79,7 @@ impl<'rt> Pipeline<'rt> {
             trained.losses.last().unwrap_or(&f32::NAN)
         );
         let folded = trainer.export(&trained)?;
-        // persist loss curve + folded tensors
+        // persist loss curve + folded tensors (host form)
         let mut ts = Vec::with_capacity(folded.len());
         for (lit, sig) in folded.iter().zip(
             mi.artifacts["export"].outputs.iter(),
@@ -109,32 +99,6 @@ impl<'rt> Pipeline<'rt> {
                 data: trained.losses.clone(),
             }],
         )?;
-        Ok(folded)
-    }
-
-    /// F_MAC histograms for `ds` (cached). Also reports clean accuracy.
-    pub fn ensure_fmac(&self, ds: Dataset) -> Result<(Vec<Fmac>, Fmac)> {
-        let cache = Self::fmac_cache_name(ds);
-        if self.store.exists(&cache) {
-            return self.store.load_fmac(&cache);
-        }
-        let spec = ds.spec();
-        let folded = self.ensure_folded(ds)?;
-        eprintln!("[pipeline] extracting F_MAC for {}...", spec.name);
-        let hist = Histogrammer::new(self.rt);
-        let res = hist.extract_dataset(
-            &spec.model.to_string(),
-            &folded,
-            spec.clone(),
-            self.cfg.hist_limit,
-            self.cfg.seed ^ 0x48_31u64,
-        )?;
-        eprintln!(
-            "[pipeline] {}: F_MAC over {} samples, clean train-acc {:.3}",
-            spec.name, res.n_samples, res.accuracy
-        );
-        self.store
-            .save_fmac(&cache, &res.per_matmul, &res.sum)?;
-        Ok((res.per_matmul, res.sum))
+        Ok(ts)
     }
 }

@@ -9,6 +9,7 @@
 use anyhow::Result;
 
 use crate::analog::capacitor::{CapacitorModel, CapacitorSolver};
+use crate::backend::InferenceBackend;
 use crate::analog::montecarlo::MonteCarlo;
 use crate::analog::neuron::SpikeTimeSet;
 use crate::bnn::ErrorModel;
@@ -49,7 +50,7 @@ pub fn hw_config_global(
 pub fn run(session: &DesignSession,
            datasets: &[crate::data::synth::Dataset]) -> Result<()> {
     let cfg = session.config();
-    let ev = session.evaluator()?;
+    let backend = session.backend()?;
     println!("== Ablation (a): per-matmul windows vs one global window ==");
     let mut t = Table::new(&[
         "dataset", "k", "per-matmul (ours)", "global (paper literal)",
@@ -58,16 +59,17 @@ pub fn run(session: &DesignSession,
         let spec = ds.spec();
         let folded = session.folded(ds)?;
         let (_, sum) = session.fmac(ds)?;
-        let mi = session.runtime()?.manifest.model(spec.model).clone();
+        let n_matmuls =
+            crate::backend::arch::model_meta(spec.model)?.n_matmuls();
         for k in [16usize, 14, 10] {
             let ours = session.query(
                 &OperatingPointSpec::new(ds, k, 0.0, 0).with_eval(1, 1),
             )?;
             let a_ours = ours.accuracy.expect("eval requested");
             let glob =
-                hw_config_global(session, &sum, mi.n_matmuls, k, 0.0);
-            let a_glob = ev.accuracy(
-                spec.model, folded.as_slice(), spec.clone(), &glob,
+                hw_config_global(session, &sum, n_matmuls, k, 0.0);
+            let a_glob = backend.accuracy(
+                spec.model, &folded, spec.clone(), &glob,
                 cfg.eval_limit, 1)?;
             t.row(vec![
                 spec.name.into(),

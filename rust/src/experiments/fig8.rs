@@ -25,8 +25,11 @@ pub fn run(session: &DesignSession,
         session.ensure_trained(ds)?;
         println!(
             "\n== Fig. 8 [{}]: accuracy over k (sigma_rel = {}, {} \
-             test samples, engine = {}) ==",
-            spec.name, cfg.sigma_rel, cfg.eval_limit, cfg.engine
+             test samples, backend = {}) ==",
+            spec.name,
+            cfg.sigma_rel,
+            cfg.eval_limit,
+            session.backend_name()
         );
         // one spec per curve point, k-major so the result walk below
         // stays aligned

@@ -1,4 +1,5 @@
-//! Tables I & II regeneration from the data registry and the manifest.
+//! Tables I & II regeneration from the data registry and the native
+//! model registry (`backend::arch`) — no manifest or artifacts needed.
 
 use anyhow::Result;
 
@@ -27,29 +28,62 @@ pub fn table1(_session: &DesignSession) -> Result<()> {
 }
 
 pub fn table2(session: &DesignSession) -> Result<()> {
-    println!("== Table II: BNN architectures (from the AOT manifest) ==");
-    let manifest = &session.runtime()?.manifest;
+    // prefer the AOT manifest when available: it records the widths
+    // the artifacts were actually built at (--full or CPU-budget)
+    #[cfg(feature = "xla")]
+    if crate::runtime::artifacts_dir().join("manifest.json").exists() {
+        println!(
+            "== Table II: BNN architectures (from the AOT manifest) =="
+        );
+        let manifest = &session.runtime()?.manifest;
+        let mut t = Table::new(&[
+            "model", "architecture", "params", "matmuls", "MHL margin",
+        ]);
+        for (name, m) in &manifest.models {
+            if name == "vgg3_tiny" {
+                continue; // test-only twin
+            }
+            t.row(vec![
+                name.clone(),
+                m.description.clone(),
+                m.n_params.to_string(),
+                m.n_matmuls.to_string(),
+                format!("{}", m.mhl_b),
+            ]);
+        }
+        println!("{}", t.render());
+        if !manifest.full {
+            println!(
+                "(CPU-budget widths; `make artifacts` with --full \
+                 restores the paper's exact channel plan — DESIGN.md §6)"
+            );
+        }
+        return Ok(());
+    }
+    let _ = &session;
+    println!(
+        "== Table II: BNN architectures (native registry, DESIGN.md \
+         §9) =="
+    );
     let mut t = Table::new(&[
-        "model", "architecture", "params", "matmuls", "MHL margin",
+        "model", "architecture", "binary weights", "matmuls",
     ]);
-    for (name, m) in &manifest.models {
+    for name in crate::backend::arch::model_names() {
         if name == "vgg3_tiny" {
             continue; // test-only twin
         }
+        let m = crate::backend::arch::model_meta(name)?;
         t.row(vec![
-            name.clone(),
-            m.description.clone(),
-            m.n_params.to_string(),
-            m.n_matmuls.to_string(),
-            format!("{}", m.mhl_b),
+            name.to_string(),
+            m.describe(),
+            m.n_weight_bits().to_string(),
+            m.n_matmuls().to_string(),
         ]);
     }
     println!("{}", t.render());
-    if !manifest.full {
-        println!(
-            "(CPU-budget widths; `make artifacts` with --full restores \
-             the paper's exact channel plan — DESIGN.md §6)"
-        );
-    }
+    println!(
+        "(CPU-budget widths; `make artifacts` with --full restores \
+         the paper's exact channel plan — DESIGN.md §6)"
+    );
     Ok(())
 }

@@ -8,8 +8,11 @@
 //!  * L2: JAX BNN graphs, AOT-lowered once to `artifacts/*.hlo.txt`.
 //!  * L1: the Pallas sub-MAC kernel inside those graphs.
 //!
-//! Python never runs on the request path: the `capmin` binary loads HLO
-//! text via PJRT and drives everything from Rust.
+//! Python never runs on the request path: the `capmin` binary drives
+//! everything from Rust, through one of two interchangeable inference
+//! backends (DESIGN.md §9) — the XLA-free [`backend::NativeBackend`]
+//! (default on machines without the vendored bridge) or the PJRT
+//! artifact path behind the `xla` cargo feature.
 //!
 //! The public entry point is [`session::DesignSession`] (DESIGN.md §3):
 //! a typed, memoized operating-point service. Experiment drivers, the
@@ -18,6 +21,7 @@
 //! F_MAC stage graph behind it is crate-internal.
 
 pub mod analog;
+pub mod backend;
 pub mod bnn;
 pub mod capmin;
 pub mod coordinator;

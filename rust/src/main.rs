@@ -1,11 +1,14 @@
 //! `capmin` — L3 coordinator CLI over the `DesignSession` query service.
 //!
-//! Python ran once (`make artifacts`); everything below executes from
-//! Rust against the compiled PJRT artifacts, routed through one
-//! memoizing [`DesignSession`] (DESIGN.md §3).
+//! Everything executes from Rust through one memoizing
+//! [`DesignSession`] (DESIGN.md §3), on whichever inference backend
+//! `--backend` resolves to (DESIGN.md §9): the XLA-free native sub-MAC
+//! engine, or — on builds with the `xla` feature and `make artifacts`
+//! run — the compiled PJRT artifacts.
 
 use anyhow::Result;
 
+use capmin::backend::InferenceBackend;
 use capmin::coordinator::config::ExperimentConfig;
 use capmin::experiments;
 use capmin::session::{DesignSession, OperatingPointSpec};
@@ -42,10 +45,12 @@ session commands:
   point           answer one codesign query and print the operating
                   point (--k N --phi N --no-eval; sigma from --sigma);
                   the JSON lands in <run-dir>/points/<key>.json
-  train           train a model on a dataset (cached in runs/)
+  train           train a model on a dataset (cached in runs/; needs
+                  the xla build — native builds fall back to a flagged
+                  untrained init)
   hist            extract F_MAC for a dataset
-  verify          cross-check rust engine determinism + artifact wiring
-  info            manifest / runtime info
+  verify          cross-check engine determinism + backend wiring
+  info            backend / model registry / runtime info
 
 common options:
   --dataset <name|all>     (fashion_syn kmnist_syn svhn_syn cifar_syn
@@ -55,7 +60,16 @@ common options:
   --steps N --lr F --train-limit N --eval-limit N --hist-limit N
   --sigma F --mc-samples N --seeds N --ks 32,28,...
   --k N --phi N --no-eval  (point command)
+  --backend native|xla|auto  inference backend (DESIGN.md §9): native =
+                           host sub-MAC engine, no XLA required; xla =
+                           AOT artifacts via PJRT (needs the xla cargo
+                           feature + make artifacts); auto (default)
+                           picks xla when available, else native
+  --threads N              worker threads for solves, Monte-Carlo and
+                           native kernels (0 = all cores; results are
+                           bit-identical at any setting)
   --engine eval|evalp      jnp engine or Pallas-kernel engine artifact
+                           (xla backend only)
   --run-dir DIR            cache directory (default runs/)
   --no-point-cache         keep operating points in memory only
 
@@ -75,22 +89,57 @@ fn main() -> Result<()> {
 
     match args.cmd.as_str() {
         "info" => {
-            let rt = session.runtime()?;
             println!(
-                "platform: {} ({} devices)",
-                rt.client.platform_name(),
-                rt.client.device_count()
+                "backend: {} (requested `{}`) | {} worker threads",
+                session.backend_name(),
+                session.config().backend,
+                session.threads()
             );
-            println!("artifacts: {}", rt.dir.display());
-            for (name, m) in &rt.manifest.models {
+            println!("native model registry:");
+            for name in capmin::backend::arch::model_names() {
+                let m = capmin::backend::arch::model_meta(name)?;
                 println!(
-                    "  {name}: {} | in {:?} | {} artifacts | {} params",
-                    m.description,
+                    "  {name}: {} | in {:?} | {} matmuls | {} binary \
+                     weights",
+                    m.describe(),
                     m.in_shape,
-                    m.artifacts.len(),
-                    m.n_params
+                    m.n_matmuls(),
+                    m.n_weight_bits()
                 );
             }
+            #[cfg(feature = "xla")]
+            if capmin::runtime::artifacts_dir()
+                .join("manifest.json")
+                .exists()
+            {
+                let rt = session.runtime()?;
+                println!(
+                    "platform: {} ({} devices)",
+                    rt.client.platform_name(),
+                    rt.client.device_count()
+                );
+                println!("artifacts: {}", rt.dir.display());
+                for (name, m) in &rt.manifest.models {
+                    println!(
+                        "  {name}: {} | in {:?} | {} artifacts | {} \
+                         params",
+                        m.description,
+                        m.in_shape,
+                        m.artifacts.len(),
+                        m.n_params
+                    );
+                }
+            } else {
+                println!(
+                    "artifacts: none (native backend; `make artifacts` \
+                     + the xla feature enable the PJRT path)"
+                );
+            }
+            #[cfg(not(feature = "xla"))]
+            println!(
+                "built without the `xla` feature: PJRT runtime \
+                 unavailable, native backend only"
+            );
         }
         "table1" => experiments::tables::table1(&session)?,
         "table2" => experiments::tables::table2(&session)?,
@@ -192,29 +241,27 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// Sanity pass over the full pipeline wiring: trains (or loads) the tiny
-/// model's dataset, folds, queries an operating point and checks the
-/// Rust bit-packed engine is deterministic on the folded weights. The
-/// bit-exact rust-vs-artifact comparison lives in tests/integration.rs.
+/// Sanity pass over the full wiring on whatever backend the session
+/// resolved: loads (or falls back for) the folded model, queries an
+/// operating point, and checks both the bit-packed engine and the
+/// backend's whole-model logits are deterministic. The bit-exact
+/// cross-backend comparisons live in tests/backend.rs (and
+/// tests/integration.rs for the artifact path).
 fn verify(session: &DesignSession) -> Result<()> {
     use capmin::bnn::{BitMatrix, SubMacEngine};
-    use capmin::runtime::to_f32;
 
-    let rt = session.runtime()?;
     let ds = capmin::data::synth::Dataset::FashionSyn;
-    let model = rt.manifest.datasets["fashion_syn"].model.clone();
-    let mi = rt.manifest.model(&model);
+    let spec = ds.spec();
     println!(
-        "verify: {} via {} artifact",
-        model,
-        session.config().engine
+        "verify: {} via {} backend",
+        spec.model,
+        session.backend_name()
     );
 
     let folded = session.folded(ds)?;
-    let sig = &mi.artifacts["export"].outputs[0];
-    anyhow::ensure!(sig.name == "wb0");
-    let wb = to_f32(&folded[0])?;
-    let (o, kp) = (sig.shape[0], sig.shape[1]);
+    anyhow::ensure!(folded[0].name == "wb0");
+    let (o, kp) = (folded[0].shape[0], folded[0].shape[1]);
+    let wb = &folded[0].data;
     let beta = 9; // first conv of a 1-channel 3x3 model
     let d = 37;
     let mut rng = capmin::util::rng::Rng::new(99);
@@ -224,17 +271,35 @@ fn verify(session: &DesignSession) -> Result<()> {
         session.query(&OperatingPointSpec::new(ds, 14, 0.03, 0))?;
     let em = point.ems[0].clone();
 
-    let eng = SubMacEngine::new(o, kp, &wb, beta);
+    let eng = SubMacEngine::new(o, kp, wb, beta);
     let xb = BitMatrix::pack(d, kp, &x_rows, false);
     let a = eng.matmul_error(&xb, &em, 7, 0);
     let b = eng.matmul_error(&xb, &em, 7, 0);
     anyhow::ensure!(a == b, "engine must be deterministic");
     println!(
-        "verify OK: {} outputs, range [{}, {}]",
+        "engine OK: {} outputs, range [{}, {}]",
         a.len(),
         a.iter().cloned().fold(f32::INFINITY, f32::min),
         a.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
     );
-    println!("(bit-exact rust-vs-artifact check: cargo test)");
+
+    // whole-model logits through the session's backend, twice (the
+    // xla eval artifact is compiled for the model's eval batch)
+    let be = session.backend()?;
+    let px: usize = spec.pixels();
+    let batch = capmin::backend::arch::model_meta(spec.model)?.eval_batch;
+    let x: Vec<f32> = (0..batch * px).map(|_| rng.pm1(0.5)).collect();
+    let la = be.logits(spec.model, &folded, &x, batch, &point.ems, 7)?;
+    let lb = be.logits(spec.model, &folded, &x, batch, &point.ems, 7)?;
+    anyhow::ensure!(la == lb, "backend logits must be deterministic");
+    anyhow::ensure!(la.iter().all(|v| v.is_finite()));
+    println!(
+        "backend OK: {} logits over a batch of {batch} ({} backend, {} \
+         threads)",
+        la.len(),
+        be.name(),
+        session.threads()
+    );
+    println!("(bit-exact cross-backend checks: cargo test)");
     Ok(())
 }

@@ -4,14 +4,26 @@
 //! HLO *text* is the interchange format — jax >= 0.5 serialized protos
 //! carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids (see aot.py docstring).
+//!
+//! Everything touching the PJRT bridge sits behind the `xla` cargo
+//! feature (DESIGN.md §9); the manifest view and the artifacts-dir
+//! probe stay available so backend resolution (`--backend auto`) works
+//! on native-only builds.
 
 pub mod manifest;
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "xla")]
+use std::path::Path;
+use std::path::PathBuf;
+#[cfg(feature = "xla")]
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::{anyhow, Context};
+#[cfg(feature = "xla")]
+use anyhow::Result;
 
 pub use manifest::{ArtifactSig, DType, Manifest, ModelInfo, TensorSig};
 
@@ -22,12 +34,14 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
+#[cfg(feature = "xla")]
 /// A compiled artifact with its manifest signature.
 pub struct Executable {
     pub sig: ArtifactSig,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "xla")]
 impl Executable {
     /// Execute with host literals; returns the decomposed output tuple.
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
@@ -62,6 +76,7 @@ impl Executable {
     }
 }
 
+#[cfg(feature = "xla")]
 /// The runtime: one CPU PJRT client + a compile cache keyed by artifact
 /// path (compilation happens once per process per artifact).
 pub struct Runtime {
@@ -71,6 +86,7 @@ pub struct Runtime {
     cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
 }
 
+#[cfg(feature = "xla")]
 impl Runtime {
     pub fn new() -> Result<Runtime> {
         Runtime::with_dir(&artifacts_dir())
@@ -125,6 +141,7 @@ impl Runtime {
 // Literal helpers.
 // ----------------------------------------------------------------------
 
+#[cfg(feature = "xla")]
 /// f32 literal with shape.
 pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
     debug_assert_eq!(
@@ -136,36 +153,43 @@ pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
     Ok(xla::Literal::vec1(data).reshape(&dims)?)
 }
 
+#[cfg(feature = "xla")]
 /// Zero-filled f32 literal (Adam state init).
 pub fn lit_zeros(shape: &[usize]) -> Result<xla::Literal> {
     lit_f32(shape, &vec![0.0; shape.iter().product::<usize>().max(1)])
 }
 
+#[cfg(feature = "xla")]
 /// Scalar literals.
 pub fn lit_f32_scalar(v: f32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
 
+#[cfg(feature = "xla")]
 pub fn lit_u32_scalar(v: u32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
 
+#[cfg(feature = "xla")]
 /// u32 vector literal (PRNG keys).
 pub fn lit_u32(shape: &[usize], data: &[u32]) -> Result<xla::Literal> {
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     Ok(xla::Literal::vec1(data).reshape(&dims)?)
 }
 
+#[cfg(feature = "xla")]
 /// Extract an f32 literal to a host vector.
 pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }
 
+#[cfg(feature = "xla")]
 /// Scalar f32 extraction.
 pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
     Ok(lit.get_first_element::<f32>()?)
 }
 
+#[cfg(feature = "xla")]
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -80,6 +80,18 @@ impl PointCache {
             .insert(key.to_string(), point);
         Ok(())
     }
+
+    /// Insert into memory only, regardless of the persist setting —
+    /// points evaluated on the untrained fallback model must never
+    /// reach `runs/points/` (their key doesn't encode model content,
+    /// so a later session with real trained weights would replay the
+    /// near-chance accuracy as if trained).
+    pub fn put_memory(&self, key: &str, point: Arc<OperatingPoint>) {
+        self.mem
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), point);
+    }
 }
 
 #[cfg(test)]
@@ -96,12 +108,21 @@ mod tests {
             AnalogParams::paper_calibrated(),
             1,
             50,
+            1,
             &[Fmac::gaussian(16, 2.0, 1e8)],
             k,
             0.0,
             0,
         );
-        (spec, Arc::new(OperatingPoint::from_solve(spec, hw, None)))
+        (
+            spec,
+            Arc::new(OperatingPoint::from_solve(
+                spec,
+                hw,
+                None,
+                Default::default(),
+            )),
+        )
     }
 
     fn tmp_dir(tag: &str) -> PathBuf {

@@ -4,9 +4,10 @@
 //! The paper's core deliverable is a *codesign query*: given a model's
 //! F_MAC statistics and a (k, sigma, phi) choice, produce a hardware
 //! operating point — window, capacitor size, spike-time set, error
-//! model, accuracy. A session owns the PJRT [`Runtime`] (lazily
-//! initialized: hardware-only queries never load artifacts), the run
-//! [`Store`] and the [`ExperimentConfig`], and answers typed
+//! model, accuracy. A session owns the run [`Store`], the
+//! [`ExperimentConfig`] and one lazily-constructed
+//! [`InferenceBackend`] (native sub-MAC engine or, behind the `xla`
+//! feature, the PJRT artifact path — DESIGN.md §9), and answers typed
 //! [`OperatingPointSpec`] requests with memoized [`OperatingPoint`]s:
 //!
 //! ```no_run
@@ -28,8 +29,8 @@
 //! Repeated (spec -> point) queries hit an in-memory map, then the
 //! on-disk `runs/points/` cache, before any Monte-Carlo work reruns;
 //! [`DesignSession::query_many`] additionally fans independent solves
-//! out across threads. The old `Pipeline` stage graph survives as a
-//! crate-internal implementation detail of this module.
+//! out across the shared [`ScopedPool`]. The old `Pipeline` stage
+//! graph survives as a crate-internal, `xla`-gated training detail.
 
 pub mod cache;
 pub mod point;
@@ -38,24 +39,33 @@ pub mod spec;
 
 use std::cell::{Cell, OnceCell};
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::analog::params::AnalogParams;
+use crate::backend::{BackendKind, InferenceBackend, NativeBackend};
 use crate::capmin::Fmac;
 use crate::coordinator::config::ExperimentConfig;
-use crate::coordinator::evaluator::Evaluator;
-use crate::coordinator::pipeline::Pipeline;
-use crate::coordinator::store::Store;
+use crate::coordinator::store::{NamedTensor, Store};
 use crate::data::synth::Dataset;
+#[cfg(feature = "xla")]
 use crate::runtime::Runtime;
+use crate::util::pool::ScopedPool;
 
 use cache::PointCache;
-pub use point::OperatingPoint;
+pub use point::{OperatingPoint, PointMeta};
 use solver::HwSolve;
 pub use spec::{EvalSettings, OperatingPointSpec};
+
+/// Run-store cache names for per-dataset stage results.
+pub(crate) fn folded_cache_name(ds: Dataset) -> String {
+    format!("{}_folded.capt", ds.spec().name)
+}
+
+pub(crate) fn fmac_cache_name(ds: Dataset) -> String {
+    format!("{}_fmac.capt", ds.spec().name)
+}
 
 /// Monotone counters exposing the session's cache behaviour: tests
 /// assert memoization through them (`solves` must not grow on a repeat
@@ -70,7 +80,7 @@ pub struct SessionStats {
     pub disk_hits: u64,
     /// Hardware solves actually executed (window + capacitor + MC).
     pub solves: u64,
-    /// Accuracy evaluations actually executed (PJRT eval artifact).
+    /// Accuracy evaluations actually executed (inference backend).
     pub evals: u64,
 }
 
@@ -83,22 +93,33 @@ impl SessionStats {
 pub struct DesignSession {
     cfg: ExperimentConfig,
     store: Store,
-    /// Lazily constructed: a session serving cached points (or
-    /// hardware-only queries on injected F_MACs) never compiles
-    /// artifacts.
-    rt: OnceCell<Runtime>,
+    /// Lazily constructed PJRT runtime (`xla` feature): a session
+    /// serving cached points, native-backend traffic, or hardware-only
+    /// queries never compiles artifacts.
+    #[cfg(feature = "xla")]
+    rt: OnceCell<Arc<Runtime>>,
+    /// Lazily constructed inference backend (`--backend`): pure
+    /// hardware queries never build one.
+    backend: OnceCell<Box<dyn InferenceBackend>>,
     points: PointCache,
     /// Hardware solves keyed without the eval settings: querying the
     /// same (dataset, k, sigma, phi) with and without accuracy
     /// evaluation shares one Monte-Carlo solve.
     hw_solves: Mutex<HashMap<String, HwSolve>>,
     fmacs: Mutex<HashMap<Dataset, (Vec<Fmac>, Fmac)>>,
-    folded: Mutex<HashMap<Dataset, Arc<Vec<xla::Literal>>>>,
+    /// Folded hardware tensors per dataset, in host (backend-agnostic)
+    /// form.
+    folded: Mutex<HashMap<Dataset, Arc<Vec<NamedTensor>>>>,
+    /// Datasets served by the deterministic *untrained* fallback
+    /// (native-only build, cold store): their F_MACs and accuracies
+    /// are flagged and never persisted as if trained.
+    untrained: Mutex<HashSet<Dataset>>,
     stats: Cell<SessionStats>,
 }
 
 pub struct DesignSessionBuilder {
     cfg: ExperimentConfig,
+    #[cfg(feature = "xla")]
     runtime: Option<Runtime>,
 }
 
@@ -117,27 +138,37 @@ impl DesignSessionBuilder {
 
     /// Supply a pre-built runtime (benches that also drive the trainer
     /// directly share one PJRT client with the session).
+    #[cfg(feature = "xla")]
     pub fn runtime(mut self, rt: Runtime) -> Self {
         self.runtime = Some(rt);
         self
     }
 
     pub fn build(self) -> Result<DesignSession> {
+        // library users can set cfg.backend directly, bypassing the
+        // CLI validation — reject typos here rather than silently
+        // resolving them as `auto`
+        BackendKind::parse(&self.cfg.backend)?;
         let store = Store::new(&self.cfg.run_dir)?;
         let points =
             PointCache::new(store.path("points"), self.cfg.point_cache);
+        #[cfg(feature = "xla")]
         let rt = OnceCell::new();
+        #[cfg(feature = "xla")]
         if let Some(r) = self.runtime {
-            let _ = rt.set(r);
+            let _ = rt.set(Arc::new(r));
         }
         Ok(DesignSession {
             cfg: self.cfg,
             store,
+            #[cfg(feature = "xla")]
             rt,
+            backend: OnceCell::new(),
             points,
             hw_solves: Mutex::new(HashMap::new()),
             fmacs: Mutex::new(HashMap::new()),
             folded: Mutex::new(HashMap::new()),
+            untrained: Mutex::new(HashSet::new()),
             stats: Cell::new(SessionStats::default()),
         })
     }
@@ -147,6 +178,7 @@ impl DesignSession {
     pub fn builder() -> DesignSessionBuilder {
         DesignSessionBuilder {
             cfg: ExperimentConfig::default(),
+            #[cfg(feature = "xla")]
             runtime: None,
         }
     }
@@ -173,23 +205,87 @@ impl DesignSession {
         self.stats.get()
     }
 
-    /// The PJRT runtime, constructed on first use.
+    /// The backend this session's config resolves to ("native" or
+    /// "xla") — recorded in cache keys and point metadata. Cheap: no
+    /// backend is constructed.
+    pub fn backend_name(&self) -> &'static str {
+        BackendKind::resolve(&self.cfg)
+    }
+
+    /// Worker threads the session fans out over (`--threads`, 0 =
+    /// all cores) — solve batches, MC level sweeps and native kernels.
+    pub fn threads(&self) -> usize {
+        ScopedPool::new(self.cfg.threads).threads()
+    }
+
+    /// The inference backend, constructed on first use.
+    pub fn backend(&self) -> Result<&dyn InferenceBackend> {
+        if self.backend.get().is_none() {
+            let b: Box<dyn InferenceBackend> = match self.backend_name()
+            {
+                "xla" => self.xla_backend()?,
+                _ => Box::new(NativeBackend::new(self.cfg.threads)),
+            };
+            // single-threaded session facade: set cannot race
+            let _ = self.backend.set(b);
+        }
+        Ok(self.backend.get().expect("backend just initialized").as_ref())
+    }
+
+    #[cfg(feature = "xla")]
+    fn xla_backend(&self) -> Result<Box<dyn InferenceBackend>> {
+        Ok(Box::new(crate::backend::XlaBackend::new(
+            self.runtime_arc()?.clone(),
+            &self.cfg.engine,
+        )))
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn xla_backend(&self) -> Result<Box<dyn InferenceBackend>> {
+        anyhow::bail!(
+            "--backend xla needs a build with the `xla` cargo feature \
+             (vendored PJRT bridge; DESIGN.md §9) — use --backend \
+             native or rebuild with --features xla"
+        )
+    }
+
+    /// The PJRT runtime, constructed on first use (`xla` builds only).
+    #[cfg(feature = "xla")]
     pub fn runtime(&self) -> Result<&Runtime> {
+        Ok(self.runtime_arc()?.as_ref())
+    }
+
+    #[cfg(feature = "xla")]
+    fn runtime_arc(&self) -> Result<&Arc<Runtime>> {
         if self.rt.get().is_none() {
             let rt = Runtime::new()?;
-            // single-threaded session: set cannot race
-            let _ = self.rt.set(rt);
+            // single-threaded session facade: set cannot race
+            let _ = self.rt.set(Arc::new(rt));
         }
         Ok(self.rt.get().expect("runtime just initialized"))
     }
 
-    /// Hardware-mode accuracy evaluator on the session's engine.
-    pub fn evaluator(&self) -> Result<Evaluator<'_>> {
-        Ok(Evaluator::new(self.runtime()?, &self.cfg.engine))
+    /// Hardware-mode accuracy evaluator on the session's engine
+    /// (legacy direct access; new code goes through
+    /// [`DesignSession::backend`]).
+    #[cfg(feature = "xla")]
+    pub fn evaluator(
+        &self,
+    ) -> Result<crate::coordinator::evaluator::Evaluator<'_>> {
+        Ok(crate::coordinator::evaluator::Evaluator::new(
+            self.runtime()?,
+            &self.cfg.engine,
+        ))
     }
 
-    fn pipeline(&self) -> Result<Pipeline<'_>> {
-        Pipeline::new(self.runtime()?, self.cfg.clone())
+    #[cfg(feature = "xla")]
+    fn pipeline(
+        &self,
+    ) -> Result<crate::coordinator::pipeline::Pipeline<'_>> {
+        crate::coordinator::pipeline::Pipeline::new(
+            self.runtime()?,
+            self.cfg.clone(),
+        )
     }
 
     /// Train (or load) `ds`'s model so later queries only pay for the
@@ -198,28 +294,87 @@ impl DesignSession {
         self.folded(ds).map(|_| ())
     }
 
-    /// Trained + folded hardware tensors for `ds` (memory-, then
-    /// disk-cached; trains on a cold store).
-    pub fn folded(&self, ds: Dataset) -> Result<Arc<Vec<xla::Literal>>> {
+    /// Trained + folded hardware tensors for `ds` in host form
+    /// (memory-, then disk-cached; trains through the XLA pipeline on
+    /// a cold store when available, otherwise falls back to a
+    /// deterministic untrained init so native-only machines still run
+    /// end-to-end).
+    pub fn folded(&self, ds: Dataset) -> Result<Arc<Vec<NamedTensor>>> {
         if let Some(f) = self.folded.lock().unwrap().get(&ds) {
             return Ok(f.clone());
         }
-        let lits = Arc::new(self.pipeline()?.ensure_folded(ds)?);
-        self.folded.lock().unwrap().insert(ds, lits.clone());
-        Ok(lits)
+        let (ts, untrained) = self.obtain_folded(ds)?;
+        if untrained {
+            self.untrained.lock().unwrap().insert(ds);
+        }
+        let ts = Arc::new(ts);
+        self.folded.lock().unwrap().insert(ds, ts.clone());
+        Ok(ts)
+    }
+
+    fn obtain_folded(&self, ds: Dataset)
+        -> Result<(Vec<NamedTensor>, bool)> {
+        let cache = folded_cache_name(ds);
+        if self.store.exists(&cache) {
+            return Ok((self.store.load_tensors(&cache)?, false));
+        }
+        #[cfg(feature = "xla")]
+        if crate::runtime::artifacts_dir().join("manifest.json").exists()
+        {
+            return Ok((self.pipeline()?.ensure_folded(ds)?, false));
+        }
+        let spec = ds.spec();
+        eprintln!(
+            "[session] {}: no cached trained weights and no XLA \
+             trainer on this build; using a deterministic untrained \
+             init for {} (accuracies will be near-chance, tensors stay \
+             out of the run store)",
+            spec.name, spec.model
+        );
+        Ok((crate::backend::native::init_folded(spec.model)?, true))
+    }
+
+    /// True when `ds` is being served by the untrained fallback.
+    pub fn is_untrained(&self, ds: Dataset) -> bool {
+        self.untrained.lock().unwrap().contains(&ds)
     }
 
     /// F_MAC histograms for `ds`: (per-matmul, sum). Served from memory
-    /// or the run store without touching the runtime when possible.
+    /// or the run store when possible, otherwise extracted through the
+    /// session's backend.
     pub fn fmac(&self, ds: Dataset) -> Result<(Vec<Fmac>, Fmac)> {
         if let Some(f) = self.fmacs.lock().unwrap().get(&ds) {
             return Ok(f.clone());
         }
-        let cache = Pipeline::fmac_cache_name(ds);
+        let cache = fmac_cache_name(ds);
         let res = if self.store.exists(&cache) {
             self.store.load_fmac(&cache)?
         } else {
-            self.pipeline()?.ensure_fmac(ds)?
+            let spec = ds.spec();
+            let folded = self.folded(ds)?;
+            let be = self.backend()?;
+            eprintln!(
+                "[session] extracting F_MAC for {} ({} backend)...",
+                spec.name,
+                be.name()
+            );
+            let r = be.fmac(
+                spec.model,
+                &folded,
+                spec.clone(),
+                self.cfg.hist_limit,
+                self.cfg.seed ^ 0x48_31u64,
+            )?;
+            eprintln!(
+                "[session] {}: F_MAC over {} samples, clean train-acc \
+                 {:.3}",
+                spec.name, r.n_samples, r.accuracy
+            );
+            let pair = (r.per_matmul, r.sum);
+            if !self.is_untrained(ds) {
+                self.store.save_fmac(&cache, &pair.0, &pair.1)?;
+            }
+            pair
         };
         self.fmacs.lock().unwrap().insert(ds, res.clone());
         Ok(res)
@@ -256,6 +411,7 @@ impl DesignSession {
             self.params(),
             self.cfg.seed,
             self.cfg.mc_samples,
+            self.cfg.threads,
             &per_fmac,
             spec.k,
             spec.sigma,
@@ -267,11 +423,11 @@ impl DesignSession {
     }
 
     /// Answer a batch of independent queries, solving cache misses in
-    /// parallel with scoped threads (the MC/pmap stage is embarrassingly
-    /// parallel and dominates sweep wall time). Results match
-    /// sequential [`DesignSession::query`] calls exactly: every solve
-    /// seeds its PRNG streams from (config seed, matmul index) only, so
-    /// thread scheduling cannot change an answer.
+    /// parallel on the shared [`ScopedPool`] (the MC/pmap stage is
+    /// embarrassingly parallel and dominates sweep wall time). Results
+    /// match sequential [`DesignSession::query`] calls exactly: every
+    /// solve seeds its PRNG streams from (config seed, matmul index)
+    /// only, so thread scheduling cannot change an answer.
     pub fn query_many(&self, specs: &[OperatingPointSpec])
         -> Result<Vec<Arc<OperatingPoint>>> {
         self.bump(|s| s.queries += specs.len() as u64);
@@ -309,7 +465,8 @@ impl DesignSession {
                 continue;
             }
             // F_MAC extraction (and any training) happens here,
-            // sequentially: the runtime is not thread-safe, the solve is.
+            // sequentially: the backend facade is not Sync-shared, the
+            // solve is pure.
             let (per_fmac, _) = self.fmac(spec.dataset)?;
             queued.insert(hkeys[i].clone());
             jobs.push(Job {
@@ -324,45 +481,37 @@ impl DesignSession {
             });
         }
 
-        let solved: Mutex<Vec<(String, HwSolve)>> =
-            Mutex::new(Vec::with_capacity(jobs.len()));
         if !jobs.is_empty() {
-            let n_workers = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-                .min(jobs.len());
-            let next = AtomicUsize::new(0);
-            std::thread::scope(|scope| {
-                for _ in 0..n_workers {
-                    // handles are joined by the scope itself
-                    let _ = scope.spawn(|| loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= jobs.len() {
-                            break;
-                        }
-                        let j = &jobs[i];
-                        let hw = solver::solve(
-                            j.base,
-                            j.seed,
-                            j.mc_samples,
-                            &j.per_fmac,
-                            j.k,
-                            j.sigma,
-                            j.phi,
-                        );
-                        solved.lock().unwrap().push((j.hkey.clone(), hw));
-                    });
-                }
-            });
+            // split the workers between the job fan-out and each
+            // job's MC level sweep: small batches on many-core hosts
+            // still use every core, without oversubscribing (results
+            // are bit-identical at any split)
+            let pool = ScopedPool::new(self.cfg.threads);
+            let per_job = (pool.threads() / jobs.len()).max(1);
+            let solved: Vec<(String, HwSolve)> =
+                pool.map(jobs.len(), |i| {
+                    let j = &jobs[i];
+                    let hw = solver::solve(
+                        j.base,
+                        j.seed,
+                        j.mc_samples,
+                        per_job,
+                        &j.per_fmac,
+                        j.k,
+                        j.sigma,
+                        j.phi,
+                    );
+                    (j.hkey.clone(), hw)
+                });
             self.bump(|s| s.solves += jobs.len() as u64);
             let mut hw_solves = self.hw_solves.lock().unwrap();
-            for (hkey, hw) in solved.into_inner().unwrap() {
+            for (hkey, hw) in solved {
                 hw_solves.insert(hkey, hw);
             }
         }
 
         // finish in request order (accuracy evaluation is sequential:
-        // one PJRT client); duplicates of an already-finished key are
+        // one backend); duplicates of an already-finished key are
         // served from memory
         for (i, spec) in specs.iter().enumerate() {
             if out[i].is_some() {
@@ -410,11 +559,11 @@ impl DesignSession {
             Some(e) => {
                 let ds = spec.dataset.spec();
                 let folded = self.folded(spec.dataset)?;
-                let ev = self.evaluator()?;
+                let be = self.backend()?;
                 self.bump(|s| s.evals += 1);
-                Some(ev.accuracy_multi_seed(
+                Some(be.accuracy_multi_seed(
                     ds.model,
-                    folded.as_slice(),
+                    &folded,
                     ds.clone(),
                     &hw.ems,
                     self.cfg.eval_limit,
@@ -423,9 +572,21 @@ impl DesignSession {
                 )?)
             }
         };
-        let point =
-            Arc::new(OperatingPoint::from_solve(*spec, hw, accuracy));
-        self.points.put(key, point.clone())?;
+        let meta = PointMeta {
+            backend: self.backend_name().to_string(),
+            threads: self.threads(),
+        };
+        let point = Arc::new(OperatingPoint::from_solve(
+            *spec, hw, accuracy, meta,
+        ));
+        if self.is_untrained(spec.dataset) {
+            // untrained-fallback results memoize for this session only
+            // — never onto disk, where a later session with trained
+            // weights would replay them under the same key
+            self.points.put_memory(key, point.clone());
+        } else {
+            self.points.put(key, point.clone())?;
+        }
         Ok(point)
     }
 

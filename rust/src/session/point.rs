@@ -10,6 +10,21 @@ use crate::bnn::ErrorModel;
 use crate::capmin::{CapMinResult, N_LEVELS};
 use crate::util::json::{obj, Json};
 
+/// Provenance of an evaluated point: which inference backend produced
+/// the accuracy and how many worker threads the session fanned out
+/// over. Metadata only — thread count never changes a result (kernels
+/// are bit-identical at any fan-out) and is deliberately *not* part of
+/// the cache key, so cached operating points replay reproducibly
+/// across machines while still recording where they came from.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PointMeta {
+    /// Resolved backend name ("native" or "xla"; empty for points
+    /// written before the backend layer existed).
+    pub backend: String,
+    /// Session worker threads at solve/eval time (0 = unrecorded).
+    pub threads: usize,
+}
+
 /// One hardware operating point: the answer to an
 /// [`OperatingPointSpec`] query.
 #[derive(Clone, Debug, PartialEq)]
@@ -30,6 +45,8 @@ pub struct OperatingPoint {
     /// Mean test accuracy under the error models (None for hardware-only
     /// queries, `spec.eval = None`).
     pub accuracy: Option<f64>,
+    /// Backend/threads provenance (DESIGN.md §9).
+    pub meta: PointMeta,
 }
 
 impl OperatingPoint {
@@ -37,6 +54,7 @@ impl OperatingPoint {
         spec: OperatingPointSpec,
         hw: HwSolve,
         accuracy: Option<f64>,
+        meta: PointMeta,
     ) -> OperatingPoint {
         OperatingPoint {
             spec,
@@ -47,6 +65,7 @@ impl OperatingPoint {
             windows: hw.windows,
             ems: hw.ems,
             accuracy,
+            meta,
         }
     }
 
@@ -132,6 +151,13 @@ impl OperatingPoint {
                     Some(a) => Json::Num(a),
                     None => Json::Null,
                 },
+            ),
+            (
+                "meta",
+                obj(vec![
+                    ("backend", Json::Str(self.meta.backend.clone())),
+                    ("threads", Json::Num(self.meta.threads as f64)),
+                ]),
             ),
         ])
     }
@@ -226,6 +252,21 @@ impl OperatingPoint {
             Json::Null => None,
             v => Some(num(v, "accuracy")?),
         };
+        // absent in points written before the backend layer (PR 1 era):
+        // default provenance, still a valid point
+        let meta = match j.get("meta") {
+            Some(m) => PointMeta {
+                backend: match m.get("backend") {
+                    Some(Json::Str(s)) => s.clone(),
+                    _ => String::new(),
+                },
+                threads: match m.get("threads") {
+                    Some(Json::Num(n)) => *n as usize,
+                    _ => 0,
+                },
+            },
+            None => PointMeta::default(),
+        };
         Ok(OperatingPoint {
             spec,
             c: num(field("c")?, "c")?,
@@ -235,6 +276,7 @@ impl OperatingPoint {
             times,
             ems,
             accuracy,
+            meta,
         })
     }
 }
@@ -255,14 +297,22 @@ mod tests {
         let spec =
             OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 2)
                 .with_eval(7, 3);
-        let hw = solve(p, 42, 100, &fmacs, spec.k, spec.sigma, spec.phi);
-        let point = OperatingPoint::from_solve(spec, hw, Some(0.913));
+        let hw =
+            solve(p, 42, 100, 1, &fmacs, spec.k, spec.sigma, spec.phi);
+        let meta = PointMeta {
+            backend: "native".into(),
+            threads: 8,
+        };
+        let point =
+            OperatingPoint::from_solve(spec, hw, Some(0.913), meta);
         let text = point.to_json().to_string();
         let back = OperatingPoint::from_json(
             &Json::parse(&text).map_err(anyhow::Error::msg).unwrap(),
         )
         .unwrap();
         assert_eq!(point, back);
+        assert_eq!(back.meta.backend, "native");
+        assert_eq!(back.meta.threads, 8);
     }
 
     #[test]
@@ -270,8 +320,13 @@ mod tests {
         let p = AnalogParams::paper_calibrated();
         let fmacs = vec![Fmac::gaussian(16, 2.0, 1e8)];
         let spec = OperatingPointSpec::new(Dataset::KmnistSyn, 16, 0.0, 0);
-        let hw = solve(p, 1, 50, &fmacs, spec.k, spec.sigma, spec.phi);
-        let point = OperatingPoint::from_solve(spec, hw, None);
+        let hw = solve(p, 1, 50, 1, &fmacs, spec.k, spec.sigma, spec.phi);
+        let point = OperatingPoint::from_solve(
+            spec,
+            hw,
+            None,
+            PointMeta::default(),
+        );
         let text = point.to_json().to_string();
         let back = OperatingPoint::from_json(
             &Json::parse(&text).map_err(anyhow::Error::msg).unwrap(),
@@ -279,5 +334,32 @@ mod tests {
         .unwrap();
         assert_eq!(back.accuracy, None);
         assert_eq!(point, back);
+    }
+
+    #[test]
+    fn pre_backend_points_parse_with_default_meta() {
+        // a PR-1-era point JSON has no `meta` field
+        let p = AnalogParams::paper_calibrated();
+        let fmacs = vec![Fmac::gaussian(16, 2.0, 1e8)];
+        let spec = OperatingPointSpec::new(Dataset::KmnistSyn, 10, 0.0, 0);
+        let hw = solve(p, 1, 50, 1, &fmacs, spec.k, spec.sigma, spec.phi);
+        let point = OperatingPoint::from_solve(
+            spec,
+            hw,
+            None,
+            PointMeta::default(),
+        );
+        let text = point.to_json().to_string();
+        // strip the meta field to emulate the old format
+        let legacy = text.replace(
+            ",\"meta\":{\"backend\":\"\",\"threads\":0}",
+            "",
+        );
+        assert_ne!(legacy, text, "meta field expected in JSON form");
+        let back = OperatingPoint::from_json(
+            &Json::parse(&legacy).map_err(anyhow::Error::msg).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.meta, PointMeta::default());
     }
 }

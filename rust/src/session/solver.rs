@@ -62,13 +62,17 @@ impl HwSolve {
 /// window (clamped to its size). `sigma = 0` yields the
 /// deterministic Eq.-4 clipping maps.
 ///
-/// `seed` and `mc_samples` come from the session's `ExperimentConfig`;
-/// the per-matmul MC streams derive deterministically from them, so the
-/// result is independent of which thread runs the solve.
+/// `seed`, `mc_samples` and `threads` come from the session's
+/// `ExperimentConfig`; the per-matmul MC streams derive
+/// deterministically from (seed, matmul index) alone, so the result is
+/// independent of which thread runs the solve *and* of `threads` (the
+/// Monte-Carlo level fan-out — pass 1 when the caller already
+/// parallelizes across solves).
 pub fn solve(
     base: AnalogParams,
     seed: u64,
     mc_samples: usize,
+    threads: usize,
     per_fmac: &[Fmac],
     k: usize,
     sigma: f64,
@@ -84,7 +88,9 @@ pub fn solve(
         .iter()
         .map(|w| solver.size_for_window(w.q_lo, w.q_hi))
         .fold(0.0f64, f64::max);
-    let mc = MonteCarlo::new(p).with_samples(mc_samples);
+    let mc = MonteCarlo::new(p)
+        .with_samples(mc_samples)
+        .with_threads(threads);
     let mut sets = Vec::with_capacity(windows.len());
     let mut ems = Vec::with_capacity(windows.len());
     for (i, w) in windows.iter().enumerate() {
@@ -124,12 +130,12 @@ mod tests {
     use super::*;
 
     #[test]
-    fn solve_is_deterministic() {
+    fn solve_is_deterministic_across_thread_counts() {
         let p = AnalogParams::paper_calibrated();
         let fmacs =
             vec![Fmac::gaussian(5, 2.0, 1e8), Fmac::gaussian(16, 2.0, 1e8)];
-        let a = solve(p, 42, 200, &fmacs, 14, 0.02, 0);
-        let b = solve(p, 42, 200, &fmacs, 14, 0.02, 0);
+        let a = solve(p, 42, 200, 1, &fmacs, 14, 0.02, 0);
+        let b = solve(p, 42, 200, 2, &fmacs, 14, 0.02, 0);
         assert_eq!(a.c, b.c);
         assert_eq!(a.windows, b.windows);
         for (x, y) in a.ems.iter().zip(b.ems.iter()) {
@@ -143,7 +149,7 @@ mod tests {
         let p = AnalogParams::paper_calibrated();
         let fmacs =
             vec![Fmac::gaussian(5, 2.0, 1e8), Fmac::gaussian(16, 2.0, 1e8)];
-        let hw = solve(p, 42, 100, &fmacs, 10, 0.0, 0);
+        let hw = solve(p, 42, 100, 1, &fmacs, 10, 0.0, 0);
         let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
         let w = hw.peak_window();
         assert_eq!(hw.c, solver.size_for_window(w.q_lo, w.q_hi));
@@ -154,7 +160,7 @@ mod tests {
     fn phi_thins_the_readout() {
         let p = AnalogParams::paper_calibrated();
         let fmacs = vec![Fmac::gaussian(16, 2.0, 1e8)];
-        let hw = solve(p, 42, 200, &fmacs, 16, 0.02, 2);
+        let hw = solve(p, 42, 200, 1, &fmacs, 16, 0.02, 2);
         assert_eq!(hw.windows[0].k, 16);
         assert_eq!(hw.sets[0].levels.len(), 14);
     }

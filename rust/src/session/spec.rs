@@ -91,20 +91,25 @@ impl OperatingPointSpec {
 
     /// Content-addressed key of the full operating point: a 64-bit
     /// FNV-1a over the hardware material plus every knob that can
-    /// change the accuracy (eval settings, eval scale, engine). Two
-    /// sessions with identical knobs share disk entries; any knob
-    /// change misses cleanly.
+    /// change the accuracy (eval settings, eval scale, engine, and the
+    /// *resolved* inference backend — `auto` hashes as whatever it
+    /// picks on this build/machine). Two sessions with identical knobs
+    /// share disk entries; any knob change misses cleanly. The worker
+    /// thread count is deliberately absent: results are bit-identical
+    /// at any thread count, so it is recorded as point *metadata*
+    /// instead (DESIGN.md §9).
     pub fn cache_key(&self, cfg: &ExperimentConfig) -> String {
         let eval = match self.eval {
             None => "none".to_string(),
             Some(e) => format!("{}x{}", e.seed, e.n_seeds),
         };
         let material = format!(
-            "{}|eval{}|el{}|engine{}",
+            "{}|eval{}|el{}|engine{}|be{}",
             self.hw_material(cfg),
             eval,
             cfg.eval_limit,
             cfg.engine,
+            crate::backend::BackendKind::resolve(cfg),
         );
         format!("{:016x}", fnv1a(material.as_bytes()))
     }
@@ -208,6 +213,22 @@ mod tests {
         // stable across calls
         assert_eq!(a.cache_key(&cfg), a.cache_key(&cfg));
         assert_eq!(a.cache_key(&cfg).len(), 16);
+    }
+
+    #[test]
+    fn cache_key_tracks_the_resolved_backend_not_threads() {
+        let a = OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 0);
+        let mut native = ExperimentConfig::default();
+        native.backend = "native".into();
+        let mut xla = native.clone();
+        xla.backend = "xla".into();
+        assert_ne!(a.cache_key(&native), a.cache_key(&xla));
+        // thread count never shifts a key (results are bit-identical)
+        let mut threaded = native.clone();
+        threaded.threads = 7;
+        assert_eq!(a.cache_key(&native), a.cache_key(&threaded));
+        // hardware half ignores the backend entirely
+        assert_eq!(a.hw_cache_key(&native), a.hw_cache_key(&xla));
     }
 
     #[test]

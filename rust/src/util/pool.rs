@@ -1,0 +1,146 @@
+//! Hand-rolled scoped thread pool (no rayon offline; DESIGN.md §8).
+//!
+//! One shared fan-out primitive for every data-parallel stage in the
+//! crate: the native backend's tiled matmul kernels, the Monte-Carlo
+//! level sweep, and `DesignSession::query_many`'s solve batch. A pool
+//! is just a worker count — `std::thread::scope` supplies the actual
+//! threads per call, so borrowing from the caller's stack is safe and
+//! nothing outlives the call.
+//!
+//! Contract: work items are indexed 0..n and must be independent;
+//! `map` returns results in index order regardless of scheduling, so a
+//! caller whose per-item computation is deterministic gets bit-identical
+//! output at every thread count (the backend-equivalence tests pin
+//! this).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+#[derive(Clone, Debug)]
+pub struct ScopedPool {
+    threads: usize,
+}
+
+impl ScopedPool {
+    /// `threads = 0` means "all available parallelism".
+    pub fn new(threads: usize) -> ScopedPool {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            threads
+        };
+        ScopedPool { threads }
+    }
+
+    /// A pool that runs everything inline on the caller's thread.
+    pub fn sequential() -> ScopedPool {
+        ScopedPool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, work-stealing over an atomic
+    /// counter. Runs inline when the pool is sequential or `n <= 1`.
+    pub fn for_each<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.threads == 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let workers = self.threads.min(n);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                // handles are joined by the scope itself
+                let _ = scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                });
+            }
+        });
+    }
+
+    /// Map `f` over `0..n`, returning results in index order.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.threads == 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let results: Mutex<Vec<(usize, T)>> =
+            Mutex::new(Vec::with_capacity(n));
+        self.for_each(n, |i| {
+            let r = f(i);
+            results.lock().unwrap().push((i, r));
+        });
+        let mut out = results.into_inner().unwrap();
+        out.sort_by_key(|&(i, _)| i);
+        out.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn map_preserves_index_order() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = ScopedPool::new(threads);
+            let out = pool.map(100, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn for_each_visits_every_index_once() {
+        let pool = ScopedPool::new(4);
+        let sum = AtomicU64::new(0);
+        pool.for_each(1000, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn zero_threads_means_available_parallelism() {
+        let pool = ScopedPool::new(0);
+        assert!(pool.threads() >= 1);
+        assert!(pool.map(3, |i| i).len() == 3);
+    }
+
+    #[test]
+    fn empty_and_single_item_run_inline() {
+        let pool = ScopedPool::new(8);
+        assert!(pool.map(0, |i| i).is_empty());
+        assert_eq!(pool.map(1, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        // deterministic per-item work -> bit-identical output
+        let reference: Vec<u64> = (0..64u64)
+            .map(|i| i.wrapping_mul(0x9E3779B97F4A7C15))
+            .collect();
+        for threads in [1usize, 2, 3, 8] {
+            let pool = ScopedPool::new(threads);
+            let got =
+                pool.map(64, |i| (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            assert_eq!(got, reference, "threads {threads}");
+        }
+    }
+}

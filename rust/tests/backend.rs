@@ -1,0 +1,350 @@
+//! Backend-layer integration tests, fully offline: the native
+//! inference path must be a bit-exact drop-in for the scalar engine
+//! (and, when artifacts are present on an `xla` build, for the AOT
+//! eval artifacts — see the gated module at the bottom).
+
+use capmin::backend::arch::{model_meta, model_names};
+use capmin::backend::native::{init_folded, NativeBackend};
+use capmin::backend::{kernels, InferenceBackend};
+use capmin::bnn::{BitMatrix, ErrorModel, SubMacEngine};
+use capmin::capmin::Fmac;
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::data::synth::Dataset;
+use capmin::session::{DesignSession, OperatingPointSpec};
+use capmin::util::pool::ScopedPool;
+use capmin::util::rng::Rng;
+
+fn rand_pm(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.pm1(0.5)).collect()
+}
+
+fn random_error_model(rng: &mut Rng) -> ErrorModel {
+    let mut full = vec![vec![0.0f64; 33]; 33];
+    for (m, row) in full.iter_mut().enumerate() {
+        let mut tot = 0.0;
+        for d in -2i64..=2 {
+            let j = (m as i64 + d).clamp(0, 32) as usize;
+            let w = rng.f64() + 0.05;
+            row[j] += w;
+            tot += w;
+        }
+        row.iter_mut().for_each(|v| *v /= tot);
+    }
+    ErrorModel::from_full(&full)
+}
+
+/// Property test: tiled and thread-pooled kernels are bit-identical to
+/// the scalar `SubMacEngine` matmul+decode across random shapes,
+/// ragged reduction lengths, error models and seeds.
+#[test]
+fn native_kernels_bit_identical_to_submac_engine() {
+    let mut rng = Rng::new(0xBE);
+    for trial in 0..25 {
+        let o = 1 + rng.below(24) as usize;
+        let k = 32 * (1 + rng.below(6) as usize);
+        let d = 1 + rng.below(300) as usize;
+        let w = rand_pm(&mut rng, o * k);
+        let x = rand_pm(&mut rng, d * k);
+        // ragged beta: engine subtracts fewer cells than packed width
+        let beta = k - rng.below(20) as usize;
+        let eng = SubMacEngine::new(o, k, &w, beta);
+        let xb = BitMatrix::pack(d, k, &x, false);
+        let em = random_error_model(&mut rng);
+        let seed = rng.next_u32();
+        let salt = rng.next_u32();
+        let want = eng.matmul_error(&xb, &em, seed, salt);
+        assert_eq!(
+            kernels::matmul_error_tiled(&eng, &xb, &em, seed, salt),
+            want,
+            "tiled mismatch at trial {trial}"
+        );
+        let threads = 1 + rng.below(7) as usize;
+        let pool = ScopedPool::new(threads);
+        assert_eq!(
+            kernels::matmul_error(&pool, &eng, &xb, &em, seed, salt),
+            want,
+            "threaded mismatch at trial {trial} ({threads} threads)"
+        );
+        assert_eq!(
+            kernels::matmul_exact(&pool, &eng, &xb),
+            eng.matmul_exact(&xb),
+            "exact mismatch at trial {trial}"
+        );
+    }
+}
+
+/// Whole-model logits are independent of the kernel fan-out.
+#[test]
+fn native_logits_independent_of_thread_count() {
+    for model in ["vgg3_tiny", "vgg3"] {
+        let folded = init_folded(model).unwrap();
+        let meta = model_meta(model).unwrap();
+        let px: usize = meta.in_shape.iter().product();
+        let b = 2usize;
+        let mut rng = Rng::new(7);
+        let x = rand_pm(&mut rng, b * px);
+        let ems: Vec<ErrorModel> = (0..meta.n_matmuls())
+            .map(|_| random_error_model(&mut rng))
+            .collect();
+        let reference = NativeBackend::new(1)
+            .logits(model, &folded, &x, b, &ems, 99)
+            .unwrap();
+        for threads in [2usize, 5] {
+            let got = NativeBackend::new(threads)
+                .logits(model, &folded, &x, b, &ems, 99)
+                .unwrap();
+            assert_eq!(got, reference, "{model} at {threads} threads");
+        }
+    }
+}
+
+/// Every registry model runs a forward pass (shape walk, folded
+/// signature and op dispatch all agree) — including the resnet18 skip
+/// blocks.
+#[test]
+fn every_model_forward_passes() {
+    for model in model_names() {
+        let folded = init_folded(model).unwrap();
+        let meta = model_meta(model).unwrap();
+        let px: usize = meta.in_shape.iter().product();
+        let mut rng = Rng::new(3);
+        let x = rand_pm(&mut rng, px);
+        let ems: Vec<ErrorModel> = (0..meta.n_matmuls())
+            .map(|_| ErrorModel::identity())
+            .collect();
+        let logits = NativeBackend::new(2)
+            .logits(model, &folded, &x, 1, &ems, 0)
+            .unwrap();
+        assert_eq!(logits.len(), meta.n_classes, "{model}");
+        assert!(logits.iter().all(|v| v.is_finite()), "{model}");
+    }
+}
+
+/// Native F_MAC extraction: deterministic, correctly shaped, and the
+/// per-matmul histograms sum to the expected group count per sample.
+#[test]
+fn native_fmac_is_deterministic_and_consistent() {
+    let model = "vgg3_tiny";
+    let folded = init_folded(model).unwrap();
+    let spec = Dataset::FashionSyn.spec();
+    let be = NativeBackend::new(2);
+    let a = be.fmac(model, &folded, spec.clone(), 16, 9).unwrap();
+    let b = be.fmac(model, &folded, spec.clone(), 16, 9).unwrap();
+    let meta = model_meta(model).unwrap();
+    assert_eq!(a.per_matmul.len(), meta.n_matmuls());
+    assert_eq!(a.per_matmul, b.per_matmul);
+    assert_eq!(a.accuracy, b.accuracy);
+    assert!(a.sum.total() > 0);
+    let merged: Fmac = {
+        let mut f = Fmac::new();
+        for m in &a.per_matmul {
+            f.merge(m);
+        }
+        f
+    };
+    assert_eq!(merged, a.sum);
+    assert!((0.0..=1.0).contains(&a.accuracy));
+    assert_eq!(a.n_samples, 16);
+}
+
+fn offline_native_session(tag: &str) -> Option<(DesignSession, String)> {
+    // skip when an xla build could reach real artifacts: these tests
+    // exercise the no-XLA path (training there would be slow and
+    // redundant with tests/integration.rs)
+    if cfg!(feature = "xla")
+        && capmin::runtime::artifacts_dir()
+            .join("manifest.json")
+            .exists()
+    {
+        return None;
+    }
+    let dir = std::env::temp_dir()
+        .join(format!(
+            "capmin_backend_test_{tag}_{}",
+            std::process::id()
+        ))
+        .to_str()
+        .unwrap()
+        .to_string();
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = "native".into();
+    cfg.mc_samples = 100;
+    cfg.hist_limit = 32;
+    cfg.eval_limit = 16;
+    cfg.run_dir = dir.clone();
+    let session = DesignSession::builder().config(cfg).build().unwrap();
+    Some((session, dir))
+}
+
+/// The full codesign query — F_MAC extraction, hardware solve and
+/// accuracy evaluation — runs end-to-end on the native backend with no
+/// artifacts, no training and no XLA, and records its provenance.
+#[test]
+fn session_answers_evaluated_queries_natively() {
+    let Some((session, dir)) = offline_native_session("e2e") else {
+        eprintln!("skipping: artifacts present, covered by integration");
+        return;
+    };
+    let ds = Dataset::FashionSyn;
+    let spec = OperatingPointSpec::new(ds, 14, 0.02, 0).with_eval(1, 1);
+    let point = session.query(&spec).unwrap();
+    let acc = point.accuracy.expect("eval requested");
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(point.c > 0.0);
+    assert_eq!(point.meta.backend, "native");
+    assert_eq!(point.meta.threads, session.threads());
+    assert!(
+        session.is_untrained(ds),
+        "cold store without XLA must flag the untrained fallback"
+    );
+    // the untrained fallback must never pollute the run store caches —
+    // neither the folded/F_MAC stage files nor the on-disk point cache
+    // (its key doesn't encode model content, so trained runs would
+    // replay the near-chance accuracy)
+    assert!(!session
+        .store()
+        .path(&format!("{}_folded.capt", ds.spec().name))
+        .exists());
+    assert!(!session
+        .store()
+        .path(&format!("{}_fmac.capt", ds.spec().name))
+        .exists());
+    assert!(!session
+        .store()
+        .path("points")
+        .join(format!("{}.json", spec.cache_key(session.config())))
+        .exists());
+    // but the operating point itself memoizes in memory and replays
+    let replay = session.query(&spec).unwrap();
+    assert_eq!(*replay, *point);
+    assert_eq!(session.stats().evals, 1, "replay served from memory");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Batched and sequential native queries agree exactly (thread
+/// scheduling cannot change an answer), including evaluated points.
+#[test]
+fn native_query_many_matches_sequential() {
+    let Some((seq, dir_a)) = offline_native_session("seq") else {
+        return;
+    };
+    let Some((par, dir_b)) = offline_native_session("par") else {
+        return;
+    };
+    let specs: Vec<OperatingPointSpec> = [32usize, 14, 8]
+        .iter()
+        .map(|&k| {
+            OperatingPointSpec::new(Dataset::FashionSyn, k, 0.02, 0)
+                .with_eval(1, 1)
+        })
+        .collect();
+    let a: Vec<_> = specs.iter().map(|s| seq.query(s).unwrap()).collect();
+    let b = par.query_many(&specs).unwrap();
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(**x, **y);
+    }
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+/// Bit-exact cross-backend checks against the AOT artifacts (the
+/// native path is a drop-in for the eval artifact, not an
+/// approximation). Requires `make artifacts` + `--features xla`.
+#[cfg(feature = "xla")]
+mod xla_equivalence {
+    use super::*;
+    use capmin::backend::XlaBackend;
+    use capmin::coordinator::store::NamedTensor;
+    use capmin::runtime::{artifacts_dir, lit_u32, to_f32, Runtime};
+    use std::sync::Arc;
+
+    fn runtime() -> Option<Arc<Runtime>> {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping xla equivalence: run `make artifacts`");
+            return None;
+        }
+        Some(Arc::new(Runtime::new().unwrap()))
+    }
+
+    /// init + export vgg3_tiny through the artifacts, then compare
+    /// whole-model logits: native backend vs both eval engines,
+    /// bit for bit, under stochastic error models.
+    #[test]
+    fn native_logits_match_eval_artifacts_bit_exact() {
+        let Some(rt) = runtime() else { return };
+        let model = "vgg3_tiny";
+        let mi = rt.manifest.model(model).clone();
+        let init = rt.load(model, "init").unwrap();
+        let export = rt.load(model, "export").unwrap();
+        let key = lit_u32(&[2], &[1, 2]).unwrap();
+        let ps = init.run(&[key]).unwrap();
+        let folded_lits = export.run(&ps).unwrap();
+        let folded: Vec<NamedTensor> = folded_lits
+            .iter()
+            .zip(mi.artifacts["export"].outputs.iter())
+            .map(|(lit, sig)| NamedTensor {
+                name: sig.name.clone(),
+                shape: sig.shape.clone(),
+                data: to_f32(lit).unwrap(),
+            })
+            .collect();
+
+        let mut rng = Rng::new(6);
+        let eb = mi.eval_batch;
+        let px: usize = mi.in_shape.iter().product();
+        let x = rand_pm(&mut rng, eb * px);
+        let ems: Vec<ErrorModel> = (0..mi.n_matmuls)
+            .map(|_| random_error_model(&mut rng))
+            .collect();
+
+        let native = NativeBackend::new(3);
+        for seed in [0u32, 99, 0xDEAD_BEEF] {
+            let a = native
+                .logits(model, &folded, &x, eb, &ems, seed)
+                .unwrap();
+            for engine in ["eval", "evalp"] {
+                let xla_be = XlaBackend::new(rt.clone(), engine);
+                let b = xla_be
+                    .logits(model, &folded, &x, eb, &ems, seed)
+                    .unwrap();
+                assert_eq!(
+                    a, b,
+                    "native vs {engine} logits diverge at seed {seed}"
+                );
+            }
+        }
+    }
+
+    /// F_MAC histograms and clean accuracy agree between the native
+    /// path and the hist artifact.
+    #[test]
+    fn native_fmac_matches_hist_artifact() {
+        let Some(rt) = runtime() else { return };
+        let model = "vgg3_tiny";
+        let mi = rt.manifest.model(model).clone();
+        let init = rt.load(model, "init").unwrap();
+        let export = rt.load(model, "export").unwrap();
+        let ps = init.run(&[lit_u32(&[2], &[3, 4]).unwrap()]).unwrap();
+        let folded_lits = export.run(&ps).unwrap();
+        let folded: Vec<NamedTensor> = folded_lits
+            .iter()
+            .zip(mi.artifacts["export"].outputs.iter())
+            .map(|(lit, sig)| NamedTensor {
+                name: sig.name.clone(),
+                shape: sig.shape.clone(),
+                data: to_f32(lit).unwrap(),
+            })
+            .collect();
+        let spec = Dataset::FashionSyn.spec();
+        let native = NativeBackend::new(2)
+            .fmac(model, &folded, spec.clone(), 32, 11)
+            .unwrap();
+        let xla = XlaBackend::new(rt.clone(), "eval")
+            .fmac(model, &folded, spec, 32, 11)
+            .unwrap();
+        assert_eq!(native.per_matmul, xla.per_matmul);
+        assert_eq!(native.sum, xla.sum);
+        assert_eq!(native.accuracy, xla.accuracy);
+    }
+}

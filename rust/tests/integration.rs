@@ -3,7 +3,11 @@
 //! The strongest signal in the repo: the Rust bit-packed engine, the jnp
 //! oracle artifact and the Pallas-kernel artifact must agree
 //! *bit-for-bit*, including in stochastic error-injection mode (shared
-//! counter-based PRNG over logical indices). Requires `make artifacts`.
+//! counter-based PRNG over logical indices). Requires `make artifacts`
+//! and a build with the `xla` feature (the offline twin of this suite
+//! is tests/backend.rs).
+
+#![cfg(feature = "xla")]
 
 use capmin::bnn::{BitMatrix, ErrorModel, SubMacEngine};
 use capmin::coordinator::config::ExperimentConfig;

@@ -1,0 +1,7 @@
+// Stub crate: only compiled when the `xla` feature of `capmin` is
+// enabled without the real bridge vendored in place of this directory.
+compile_error!(
+    "the `xla` feature needs the real PJRT bridge: replace vendor/xla-rs \
+     with a symlink to /opt/xla-example/xla-rs (`make vendor`; see \
+     DESIGN.md §8)"
+);
