@@ -1,16 +1,24 @@
 //! Bench: the `DesignSession` query service — sequential `query` loop
 //! vs the thread-parallel `query_many` over a fig8-shaped k-sweep, and
-//! warm-cache replay from memory and from `runs/points/`. Runs entirely
-//! offline (hardware-only queries on injected F_MAC statistics; no
-//! artifacts needed).
+//! warm-cache replay from memory and from `runs/points/`; plus a
+//! hardware-only mini-suite through the plan engine. Runs entirely
+//! offline (no artifacts needed) and writes a `BENCH_suite.json`
+//! summary next to the Cargo manifest so the perf trajectory is
+//! comparable across PRs.
 
 use std::time::Instant;
 
 use capmin::capmin::Fmac;
 use capmin::coordinator::config::ExperimentConfig;
 use capmin::data::synth::Dataset;
+use capmin::plan;
+use capmin::plan::planner::{Planner, SuiteOptions};
 use capmin::session::{DesignSession, OperatingPointSpec};
+use capmin::util::json::{obj, Json};
 
+// Same fixture as tests/common/mod.rs (bench targets can't share the
+// tests/ module tree); the matmul count is arbitrary here because
+// every query is hardware-only — no error-model/model alignment.
 fn synthetic_fmacs(n_matmuls: usize) -> (Vec<Fmac>, Fmac) {
     let mut per = vec![];
     let mut sum = Fmac::new();
@@ -87,9 +95,10 @@ fn main() {
     // warm replay from the in-memory map
     let t0 = Instant::now();
     par.query_many(&specs).unwrap();
+    let t_mem = t0.elapsed();
     println!(
         "replay (memory cache) : {:>8.3} ms",
-        t0.elapsed().as_secs_f64() * 1e3
+        t_mem.as_secs_f64() * 1e3
     );
 
     // warm replay from runs/points/ only (fresh session, same run dir)
@@ -100,9 +109,10 @@ fn main() {
     disk.put_fmac(Dataset::FashionSyn, per, sum);
     let t0 = Instant::now();
     disk.query_many(&specs).unwrap();
+    let t_disk = t0.elapsed();
     println!(
         "replay (disk cache)   : {:>8.3} ms",
-        t0.elapsed().as_secs_f64() * 1e3
+        t_disk.as_secs_f64() * 1e3
     );
     let s = disk.stats();
     assert_eq!(s.disk_hits, specs.len() as u64, "all served from disk");
@@ -112,4 +122,62 @@ fn main() {
         s.queries, s.disk_hits, s.solves
     );
     cleanup(&par);
+
+    // hardware-only mini-suite through the plan engine: wall time and
+    // dedup stats of the declarative path (table1 + fig5 + fig9 avoid
+    // accuracy evaluation, so this runs anywhere)
+    let suite = fresh_session("suite", true);
+    let mut planner = Planner::new(&suite);
+    for name in ["table1", "fig5", "fig9"] {
+        planner
+            .add(plan::build(name, &[Dataset::FashionSyn]).unwrap());
+    }
+    let t0 = Instant::now();
+    let outcome = planner
+        .run_suite(&SuiteOptions {
+            suite_id: Some("bench".into()),
+            ..Default::default()
+        })
+        .unwrap();
+    let t_suite = t0.elapsed();
+    let ss = suite.stats();
+    println!(
+        "mini-suite ({} plans) : {:>8.1} ms  ({} queries, {} solves)",
+        outcome.completed.len(),
+        t_suite.as_secs_f64() * 1e3,
+        ss.queries,
+        ss.solves
+    );
+    cleanup(&suite);
+
+    // perf-trajectory summary for CI (rust/BENCH_suite.json)
+    let ms = |d: std::time::Duration| Json::Num(d.as_secs_f64() * 1e3);
+    let summary = obj(vec![
+        ("bench", Json::Str("session_query".into())),
+        ("specs", Json::Num(specs.len() as f64)),
+        (
+            "threads",
+            Json::Num(
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1) as f64,
+            ),
+        ),
+        ("sequential_ms", ms(t_seq)),
+        ("query_many_ms", ms(t_par)),
+        (
+            "speedup",
+            Json::Num(
+                t_seq.as_secs_f64() / t_par.as_secs_f64().max(1e-9),
+            ),
+        ),
+        ("replay_memory_ms", ms(t_mem)),
+        ("replay_disk_ms", ms(t_disk)),
+        ("suite_ms", ms(t_suite)),
+        ("suite_plans", Json::Num(outcome.completed.len() as f64)),
+        ("suite_queries", Json::Num(ss.queries as f64)),
+        ("suite_solves", Json::Num(ss.solves as f64)),
+    ]);
+    std::fs::write("BENCH_suite.json", summary.to_string()).unwrap();
+    println!("wrote BENCH_suite.json");
 }

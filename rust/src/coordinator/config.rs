@@ -101,7 +101,10 @@ impl ExperimentConfig {
         c.sigma_rel = args.f64_or("sigma", c.sigma_rel);
         c.mc_samples = args.usize_or("mc-samples", c.mc_samples);
         c.n_seeds = args.usize_or("seeds", c.n_seeds);
-        c.engine = args.str_or("engine", &c.engine);
+        if let Some(engine) = args.choice("engine", &["eval", "evalp"])?
+        {
+            c.engine = engine;
+        }
         c.backend = args.str_or("backend", &c.backend);
         // validate early so a typo fails before any work happens
         crate::backend::BackendKind::parse(&c.backend)?;

@@ -1,5 +1,11 @@
-//! Experiment result reporting: paper-style tables on stdout + JSON
-//! series into `runs/results_*.json` (EXPERIMENTS.md references these).
+//! Low-level result persistence: JSON series into
+//! `runs/results_*.json` (EXPERIMENTS.md references these), plus the
+//! `pct`/`ratio` formatting helpers the plan reductions share.
+//!
+//! Since the plan engine (DESIGN.md §10) this is the storage backend
+//! of the unified reporter — `plan::report::persist_series` writes
+//! every `Section::Series` through [`Report::save_series`], so the
+//! file format (and its consumers) survived the refactor unchanged.
 
 use anyhow::Result;
 

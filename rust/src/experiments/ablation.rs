@@ -5,20 +5,35 @@
 //! (b) CapMin-V merge criterion — min-diagonal (Alg. 1) vs merging from
 //!     the fast end unconditionally (the naive order its analysis
 //!     suggests).
+//!
+//! The plan declares the per-matmul ("ours") evaluation points — the
+//! half that overlaps other plans' sweeps and benefits from suite
+//! dedup; the ablated global-window variants are session-external by
+//! construction (they bypass the operating-point space) and run inside
+//! the reduction.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::analog::capacitor::{CapacitorModel, CapacitorSolver};
-use crate::backend::InferenceBackend;
 use crate::analog::montecarlo::MonteCarlo;
 use crate::analog::neuron::SpikeTimeSet;
+use crate::backend::InferenceBackend;
 use crate::bnn::ErrorModel;
 use crate::capmin::capmin::select_window;
 use crate::capmin::Fmac;
+use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::report::pct;
-use crate::session::{DesignSession, OperatingPointSpec};
+use crate::data::synth::Dataset;
+use crate::plan::report::Report;
+use crate::plan::ExperimentPlan;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
 use crate::util::rng::Rng;
 use crate::util::table::Table;
+
+/// k values both ablation tables sweep.
+const ABLATION_KS: [usize; 3] = [16, 14, 10];
 
 /// Global-window variant of the session's operating-point solve (the
 /// ablated design): every matmul reads out through the window selected
@@ -47,81 +62,141 @@ pub fn hw_config_global(
     vec![em; n_mat]
 }
 
-pub fn run(session: &DesignSession,
-           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
-    let cfg = session.config();
-    let backend = session.backend()?;
-    println!("== Ablation (a): per-matmul windows vs one global window ==");
-    let mut t = Table::new(&[
-        "dataset", "k", "per-matmul (ours)", "global (paper literal)",
-    ]);
-    for &ds in datasets {
-        let spec = ds.spec();
-        let folded = session.folded(ds)?;
-        let (_, sum) = session.fmac(ds)?;
-        let n_matmuls =
-            crate::backend::arch::model_meta(spec.model)?.n_matmuls();
-        for k in [16usize, 14, 10] {
-            let ours = session.query(
-                &OperatingPointSpec::new(ds, k, 0.0, 0).with_eval(1, 1),
-            )?;
-            let a_ours = ours.accuracy.expect("eval requested");
-            let glob =
-                hw_config_global(session, &sum, n_matmuls, k, 0.0);
-            let a_glob = backend.accuracy(
-                spec.model, &folded, spec.clone(), &glob,
-                cfg.eval_limit, 1)?;
+pub struct AblationPlan {
+    pub datasets: Vec<Dataset>,
+}
+
+impl ExperimentPlan for AblationPlan {
+    fn name(&self) -> &'static str {
+        "ablation"
+    }
+
+    fn scope(&self) -> String {
+        crate::plan::dataset_scope(&self.datasets)
+    }
+
+    fn title(&self) -> String {
+        "Ablation: window placement & CapMin-V merge criterion".into()
+    }
+
+    fn specs(&self, _cfg: &ExperimentConfig) -> Vec<OperatingPointSpec> {
+        let mut specs = vec![];
+        for &ds in &self.datasets {
+            for k in ABLATION_KS {
+                specs.push(
+                    OperatingPointSpec::new(ds, k, 0.0, 0)
+                        .with_eval(1, 1),
+                );
+            }
+        }
+        specs
+    }
+
+    fn reduce(
+        &self,
+        session: &DesignSession,
+        points: &[Arc<OperatingPoint>],
+    ) -> Result<Report> {
+        let cfg = session.config();
+        let backend = session.backend()?;
+        let mut rep = Report::new(self.name(), &self.title());
+
+        rep.heading(
+            "Ablation (a): per-matmul windows vs one global window",
+        );
+        let mut t = Table::new(&[
+            "dataset", "k", "per-matmul (ours)",
+            "global (paper literal)",
+        ]);
+        let mut it = points.iter();
+        for &ds in &self.datasets {
+            let spec = ds.spec();
+            let folded = session.folded(ds)?;
+            let (_, sum) = session.fmac(ds)?;
+            let n_matmuls =
+                crate::backend::arch::model_meta(spec.model)?
+                    .n_matmuls();
+            for k in ABLATION_KS {
+                let ours = it.next().expect("one point per (ds, k)");
+                let a_ours = ours.accuracy.expect("eval requested");
+                let glob =
+                    hw_config_global(session, &sum, n_matmuls, k, 0.0);
+                let a_glob = backend.accuracy(
+                    spec.model,
+                    &folded,
+                    spec.clone(),
+                    &glob,
+                    cfg.eval_limit,
+                    1,
+                )?;
+                t.row(vec![
+                    spec.name.into(),
+                    k.to_string(),
+                    pct(a_ours),
+                    pct(a_glob),
+                ]);
+            }
+        }
+        rep.table("", t);
+        rep.text(
+            "(dummy-cell biasing centers all groups on the peak, so \
+             the global window only loses where per-layer supports \
+             still differ — see DESIGN.md §6b)",
+        );
+
+        rep.heading("Ablation (b): CapMin-V merge criterion");
+        let mut t = Table::new(&[
+            "phi", "min-diag merge (Alg. 1)", "fast-end merge (naive)",
+        ]);
+        let p = session.params();
+        let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+        let (lo, hi) = (9usize, 24usize);
+        let c = solver.size_for_window(lo, hi);
+        let set = SpikeTimeSet::new(&p, c, (lo..=hi).collect());
+        let mc = MonteCarlo::new(p).with_samples(cfg.mc_samples);
+        // the baseline P_map is phi-independent: extract it once and
+        // clone per merge depth
+        let pm = mc.pmap(&set, &mut Rng::new(11));
+        for phi in [2usize, 4, 6] {
+            // Alg. 1
+            let alg1 =
+                crate::capmin::capmin_v::capmin_v(pm.clone(), phi);
+            let set1 = SpikeTimeSet::new(&p, c, alg1.levels.clone());
+            let d1 = mc
+                .pmap(&set1, &mut Rng::new(12))
+                .diag()
+                .iter()
+                .cloned()
+                .fold(f64::INFINITY, f64::min);
+            // naive: drop the phi fastest levels
+            let naive: Vec<usize> = (lo..=hi - phi).collect();
+            let set2 = SpikeTimeSet::new(&p, c, naive);
+            let d2 = mc
+                .pmap(&set2, &mut Rng::new(12))
+                .diag()
+                .iter()
+                .cloned()
+                .fold(f64::INFINITY, f64::min);
             t.row(vec![
-                spec.name.into(),
-                k.to_string(),
-                pct(a_ours),
-                pct(a_glob),
+                phi.to_string(),
+                format!("{d1:.3}"),
+                format!("{d2:.3}"),
             ]);
         }
+        rep.table("", t);
+        Ok(rep)
     }
-    println!("{}", t.render());
-    println!(
-        "(dummy-cell biasing centers all groups on the peak, so the \
-         global window only loses where per-layer supports still differ \
-         — see DESIGN.md §6b)"
-    );
+}
 
-    println!("\n== Ablation (b): CapMin-V merge criterion ==");
-    let mut t = Table::new(&[
-        "phi", "min-diag merge (Alg. 1)", "fast-end merge (naive)",
-    ]);
-    let p = session.params();
-    let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
-    let (lo, hi) = (9usize, 24usize);
-    let c = solver.size_for_window(lo, hi);
-    let set = SpikeTimeSet::new(&p, c, (lo..=hi).collect());
-    let mc = MonteCarlo::new(p).with_samples(cfg.mc_samples);
-    for phi in [2usize, 4, 6] {
-        // Alg. 1
-        let pm = mc.pmap(&set, &mut Rng::new(11));
-        let alg1 = crate::capmin::capmin_v::capmin_v(pm, phi);
-        let set1 = SpikeTimeSet::new(&p, c, alg1.levels.clone());
-        let d1 = mc
-            .pmap(&set1, &mut Rng::new(12))
-            .diag()
-            .iter()
-            .cloned()
-            .fold(f64::INFINITY, f64::min);
-        // naive: drop the phi fastest levels
-        let naive: Vec<usize> = (lo..=hi - phi).collect();
-        let set2 = SpikeTimeSet::new(&p, c, naive);
-        let d2 = mc
-            .pmap(&set2, &mut Rng::new(12))
-            .diag()
-            .iter()
-            .cloned()
-            .fold(f64::INFINITY, f64::min);
-        t.row(vec![
-            phi.to_string(),
-            format!("{d1:.3}"),
-            format!("{d2:.3}"),
-        ]);
-    }
-    println!("{}", t.render());
-    Ok(())
+pub fn run(
+    session: &DesignSession,
+    datasets: &[Dataset],
+) -> Result<()> {
+    crate::plan::planner::run_one(
+        session,
+        &AblationPlan {
+            datasets: datasets.to_vec(),
+        },
+        &[],
+    )
 }

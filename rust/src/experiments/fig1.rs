@@ -1,51 +1,101 @@
 //! Fig. 1 — absolute frequencies of MAC level occurrences (summed over
-//! layers) on the training sets, per benchmark.
+//! layers) on the training sets, per benchmark. A plan with an empty
+//! grid: the F_MAC histograms come straight from the session's
+//! memoized extraction, not from operating-point queries.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::report::Report;
-use crate::session::DesignSession;
+use crate::coordinator::config::ExperimentConfig;
+use crate::data::synth::Dataset;
+use crate::plan::report::Report;
+use crate::plan::ExperimentPlan;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
-pub fn run(session: &DesignSession,
-           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
-    println!("== Fig. 1: F_MAC histograms (summed over layers) ==");
-    for &ds in datasets {
-        let spec = ds.spec();
-        let (_per, sum) = session.fmac(ds)?;
-        let mut t = Table::new(&["level", "count", "log10", "bar"]);
-        let max = *sum.counts.iter().max().unwrap() as f64;
-        for (m, &c) in sum.counts.iter().enumerate() {
-            let l10 = if c > 0 { (c as f64).log10() } else { 0.0 };
-            let bar_len = if max > 1.0 && c > 0 {
-                (40.0 * (c as f64).ln() / max.ln()).round() as usize
-            } else {
-                0
-            };
-            t.row(vec![
-                m.to_string(),
-                c.to_string(),
-                format!("{l10:.2}"),
-                "#".repeat(bar_len),
-            ]);
-        }
-        println!("\n-- {} (paper: {}) --", spec.name, spec.paper_name);
-        println!("{}", t.render());
-        println!(
-            "dynamic range (max/min nonzero): {:.1e}  | paper observes \
-             1e5..1e7 between peak and tails",
-            sum.dynamic_range()
-        );
-        let rep = Report::new(session.store());
-        rep.save_series(
-            &format!("fig1_{}", spec.name),
-            vec![("dataset", Json::Str(spec.name.into()))],
-            vec![(
-                "counts",
-                sum.counts.iter().map(|&c| c as f64).collect(),
-            )],
-        )?;
+pub struct Fig1Plan {
+    pub datasets: Vec<Dataset>,
+}
+
+impl ExperimentPlan for Fig1Plan {
+    fn name(&self) -> &'static str {
+        "fig1"
     }
-    Ok(())
+
+    fn scope(&self) -> String {
+        crate::plan::dataset_scope(&self.datasets)
+    }
+
+    fn title(&self) -> String {
+        "Fig. 1: F_MAC histograms (summed over layers)".into()
+    }
+
+    fn specs(&self, _cfg: &ExperimentConfig) -> Vec<OperatingPointSpec> {
+        vec![]
+    }
+
+    fn reduce(
+        &self,
+        session: &DesignSession,
+        _points: &[Arc<OperatingPoint>],
+    ) -> Result<Report> {
+        let mut rep = Report::new(self.name(), &self.title());
+        for &ds in &self.datasets {
+            let spec = ds.spec();
+            let (_per, sum) = session.fmac(ds)?;
+            let mut t = Table::new(&["level", "count", "log10", "bar"]);
+            let max = *sum.counts.iter().max().unwrap() as f64;
+            for (m, &c) in sum.counts.iter().enumerate() {
+                let l10 = if c > 0 { (c as f64).log10() } else { 0.0 };
+                let bar_len = if max > 1.0 && c > 0 {
+                    (40.0 * (c as f64).ln() / max.ln()).round() as usize
+                } else {
+                    0
+                };
+                t.row(vec![
+                    m.to_string(),
+                    c.to_string(),
+                    format!("{l10:.2}"),
+                    "#".repeat(bar_len),
+                ]);
+            }
+            rep.heading(format!(
+                "{} (paper: {})",
+                spec.name, spec.paper_name
+            ));
+            rep.table("", t);
+            rep.text(format!(
+                "dynamic range (max/min nonzero): {:.1e}  | paper \
+                 observes 1e5..1e7 between peak and tails",
+                sum.dynamic_range()
+            ));
+            rep.series(
+                &format!("fig1_{}", spec.name),
+                vec![(
+                    "dataset".into(),
+                    Json::Str(spec.name.into()),
+                )],
+                vec![(
+                    "counts".into(),
+                    sum.counts.iter().map(|&c| c as f64).collect(),
+                )],
+            );
+        }
+        Ok(rep)
+    }
+}
+
+pub fn run(
+    session: &DesignSession,
+    datasets: &[Dataset],
+) -> Result<()> {
+    crate::plan::planner::run_one(
+        session,
+        &Fig1Plan {
+            datasets: datasets.to_vec(),
+        },
+        &[],
+    )
 }

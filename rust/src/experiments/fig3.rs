@@ -1,52 +1,94 @@
 //! Fig. 3 — capacitor voltage over time for different initial currents,
-//! with clock-quantized spike times.
+//! with clock-quantized spike times. Pure analog-substrate work: the
+//! plan declares an empty grid and reduces straight from the session's
+//! calibrated parameters.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::analog::{clock, rc};
-use crate::coordinator::report::Report;
-use crate::session::DesignSession;
+use crate::coordinator::config::ExperimentConfig;
+use crate::plan::report::Report;
+use crate::plan::ExperimentPlan;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
 use crate::util::json::Json;
 use crate::util::table::{si, Table};
 
-pub fn run(session: &DesignSession) -> Result<()> {
-    let p = session.params();
-    let c = crate::analog::params::PAPER_BASELINE_C;
-    println!("== Fig. 3: V(t) for different I_init (C = {}) ==",
-             si(c, "F"));
-    let levels = [32usize, 24, 16, 8, 4, 1];
-    let mut t = Table::new(&[
-        "level M", "I_init", "ideal t_fire", "clock slot", "quantized",
-    ]);
-    for &m in &levels {
-        let i = rc::level_current(&p, m);
-        let tf = rc::level_spike_time(&p, c, m);
-        t.row(vec![
-            m.to_string(),
-            si(i, "A"),
-            si(tf, "s"),
-            clock::slot(&p, tf).to_string(),
-            si(clock::quantize(&p, tf), "s"),
-        ]);
-    }
-    println!("{}", t.render());
+pub struct Fig3Plan;
 
-    // curve data for the highest/lowest current (plotting series)
-    let rep = Report::new(session.store());
-    for &m in &[32usize, 8, 1] {
-        let i = rc::level_current(&p, m);
-        let t_end = 2.0 * rc::level_spike_time(&p, c, m.max(1));
-        let curve = rc::charging_curve(&p, c, i, t_end.min(2e-6), 200);
-        rep.save_series(
-            &format!("fig3_level{m}"),
-            vec![("level", Json::Num(m as f64))],
-            vec![
-                ("t", curve.iter().map(|&(t, _)| t).collect()),
-                ("v", curve.iter().map(|&(_, v)| v).collect()),
-            ],
-        )?;
+impl ExperimentPlan for Fig3Plan {
+    fn name(&self) -> &'static str {
+        "fig3"
     }
-    println!("(series saved to runs/results_fig3_level*.json; Vth = {} V)",
-             p.vth);
-    Ok(())
+
+    fn title(&self) -> String {
+        format!(
+            "Fig. 3: V(t) for different I_init (C = {})",
+            si(crate::analog::params::PAPER_BASELINE_C, "F")
+        )
+    }
+
+    fn specs(&self, _cfg: &ExperimentConfig) -> Vec<OperatingPointSpec> {
+        vec![]
+    }
+
+    fn reduce(
+        &self,
+        session: &DesignSession,
+        _points: &[Arc<OperatingPoint>],
+    ) -> Result<Report> {
+        let p = session.params();
+        let c = crate::analog::params::PAPER_BASELINE_C;
+        let mut rep = Report::new(self.name(), &self.title());
+        let levels = [32usize, 24, 16, 8, 4, 1];
+        let mut t = Table::new(&[
+            "level M", "I_init", "ideal t_fire", "clock slot",
+            "quantized",
+        ]);
+        for &m in &levels {
+            let i = rc::level_current(&p, m);
+            let tf = rc::level_spike_time(&p, c, m);
+            t.row(vec![
+                m.to_string(),
+                si(i, "A"),
+                si(tf, "s"),
+                clock::slot(&p, tf).to_string(),
+                si(clock::quantize(&p, tf), "s"),
+            ]);
+        }
+        rep.table("", t);
+
+        // curve data for the highest/lowest current (plotting series)
+        for &m in &[32usize, 8, 1] {
+            let i = rc::level_current(&p, m);
+            let t_end = 2.0 * rc::level_spike_time(&p, c, m.max(1));
+            let curve =
+                rc::charging_curve(&p, c, i, t_end.min(2e-6), 200);
+            rep.series(
+                &format!("fig3_level{m}"),
+                vec![("level".into(), Json::Num(m as f64))],
+                vec![
+                    (
+                        "t".into(),
+                        curve.iter().map(|&(t, _)| t).collect(),
+                    ),
+                    (
+                        "v".into(),
+                        curve.iter().map(|&(_, v)| v).collect(),
+                    ),
+                ],
+            );
+        }
+        rep.text(format!(
+            "(series saved to runs/results_fig3_level*.json; Vth = {} \
+             V)",
+            p.vth
+        ));
+        Ok(rep)
+    }
+}
+
+pub fn run(session: &DesignSession) -> Result<()> {
+    crate::plan::planner::run_one(session, &Fig3Plan, &[])
 }

@@ -1,41 +1,87 @@
 //! Fig. 5 — role of the inclusion parameter k: window borders over the
-//! (combined) F_MAC histogram.
+//! (combined) F_MAC histogram. Empty grid: windows are re-selected on
+//! the combined histogram, not on per-matmul operating points.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::capmin::capmin::select_window_pmf;
 use crate::capmin::Fmac;
-use crate::session::DesignSession;
+use crate::coordinator::config::ExperimentConfig;
+use crate::data::synth::Dataset;
+use crate::plan::report::Report;
+use crate::plan::ExperimentPlan;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
 use crate::util::table::Table;
 
-pub fn run(session: &DesignSession,
-           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
-    // the paper normalizes and sums F_MAC across benchmarks (Sec. IV-B)
-    let mut fmacs = vec![];
-    for &ds in datasets {
-        fmacs.push(session.fmac(ds)?.1);
-    }
-    let refs: Vec<&Fmac> = fmacs.iter().collect();
-    let combined = Fmac::combine_normalized(&refs);
+pub struct Fig5Plan {
+    pub datasets: Vec<Dataset>,
+}
 
-    println!("== Fig. 5: CapMin borders over the combined histogram ==");
-    let mut t = Table::new(&[
-        "k", "q_first", "q_last", "coverage", "clipped mass",
-    ]);
-    for k in [32, 24, 16, 14, 12, 8, 5] {
-        let w = select_window_pmf(&combined, k);
-        t.row(vec![
-            k.to_string(),
-            w.q_lo.to_string(),
-            w.q_hi.to_string(),
-            format!("{:.5}", w.coverage),
-            format!("{:.2e}", 1.0 - w.coverage),
-        ]);
+impl ExperimentPlan for Fig5Plan {
+    fn name(&self) -> &'static str {
+        "fig5"
     }
-    println!("{}", t.render());
-    println!(
-        "(all levels inside the borders get a unique spike time; mass \
-         outside is clipped per Eq. 4)"
-    );
-    Ok(())
+
+    fn scope(&self) -> String {
+        crate::plan::dataset_scope(&self.datasets)
+    }
+
+    fn title(&self) -> String {
+        "Fig. 5: CapMin borders over the combined histogram".into()
+    }
+
+    fn specs(&self, _cfg: &ExperimentConfig) -> Vec<OperatingPointSpec> {
+        vec![]
+    }
+
+    fn reduce(
+        &self,
+        session: &DesignSession,
+        _points: &[Arc<OperatingPoint>],
+    ) -> Result<Report> {
+        // the paper normalizes and sums F_MAC across benchmarks
+        // (Sec. IV-B)
+        let mut fmacs = vec![];
+        for &ds in &self.datasets {
+            fmacs.push(session.fmac(ds)?.1);
+        }
+        let refs: Vec<&Fmac> = fmacs.iter().collect();
+        let combined = Fmac::combine_normalized(&refs);
+
+        let mut rep = Report::new(self.name(), &self.title());
+        let mut t = Table::new(&[
+            "k", "q_first", "q_last", "coverage", "clipped mass",
+        ]);
+        for k in [32, 24, 16, 14, 12, 8, 5] {
+            let w = select_window_pmf(&combined, k);
+            t.row(vec![
+                k.to_string(),
+                w.q_lo.to_string(),
+                w.q_hi.to_string(),
+                format!("{:.5}", w.coverage),
+                format!("{:.2e}", 1.0 - w.coverage),
+            ]);
+        }
+        rep.table("", t);
+        rep.text(
+            "(all levels inside the borders get a unique spike time; \
+             mass outside is clipped per Eq. 4)",
+        );
+        Ok(rep)
+    }
+}
+
+pub fn run(
+    session: &DesignSession,
+    datasets: &[Dataset],
+) -> Result<()> {
+    crate::plan::planner::run_one(
+        session,
+        &Fig5Plan {
+            datasets: datasets.to_vec(),
+        },
+        &[],
+    )
 }

@@ -1,67 +1,99 @@
 //! Fig. 6 — effect of current variation on capacitor charging: variation
 //! intervals E_i vs decision intervals B_i, and the tolerance ratio
-//! r_i = |B_i| / |E_i| (the monotonicity CapMin-V exploits).
+//! r_i = |B_i| / |E_i| (the monotonicity CapMin-V exploits). Pure
+//! analog-substrate work on the baseline spike-time set; empty grid.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::analog::montecarlo::MonteCarlo;
 use crate::analog::neuron::SpikeTimeSet;
-use crate::session::DesignSession;
+use crate::coordinator::config::ExperimentConfig;
+use crate::plan::report::Report;
+use crate::plan::ExperimentPlan;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
 use crate::util::table::{si, Table};
 
-pub fn run(session: &DesignSession) -> Result<()> {
-    let p = session.params();
-    let solver = crate::analog::capacitor::CapacitorSolver::new(
-        p,
-        crate::analog::capacitor::CapacitorModel::Physics,
-    );
-    let (lo, hi) = (1usize, 32usize);
-    let c = solver.size_for_window(lo, hi);
-    let set = SpikeTimeSet::new(&p, c, (lo..=hi).collect());
-    let mc = MonteCarlo::new(p);
-    println!(
-        "== Fig. 6: variation (3-sigma, sigma_rel = {}) vs decision \
-         intervals, baseline set ==",
-        p.sigma_rel
-    );
-    let mut t = Table::new(&[
-        "level", "t_fire", "|E_i| (3s)", "|B_i|", "r = |B|/|E|",
-        "overlap?",
-    ]);
-    for (idx, &m) in set.levels.iter().enumerate() {
-        let (e_lo, e_hi) = mc.variation_interval(&set, m);
-        let e_len = e_hi - e_lo;
-        let b_len = set.bucket_len(idx);
-        let r = b_len / e_len;
-        // striped-area check: does the 3-sigma interval cross a boundary?
-        let overlaps = if idx > 0 && idx < set.levels.len() - 1 {
-            e_hi > set.boundaries[idx - 1] || e_lo < set.boundaries[idx]
-        } else {
-            false
-        };
-        if m % 4 == 0 || m <= 2 || m >= 31 {
-            t.row(vec![
-                m.to_string(),
-                si(set.times[idx], "s"),
-                si(e_len, "s"),
-                if b_len.is_finite() {
-                    si(b_len, "s")
-                } else {
-                    "open".into()
-                },
-                if r.is_finite() {
-                    format!("{r:.2}")
-                } else {
-                    "inf".into()
-                },
-                if overlaps { "YES".into() } else { "no".into() },
-            ]);
-        }
+pub struct Fig6Plan;
+
+impl ExperimentPlan for Fig6Plan {
+    fn name(&self) -> &'static str {
+        "fig6"
     }
-    println!("{}", t.render());
-    println!(
-        "(r grows toward slow spike times: slower levels tolerate more \
-         variation — the basis of CapMin-V's merge order)"
-    );
-    Ok(())
+
+    fn title(&self) -> String {
+        "Fig. 6: variation vs decision intervals, baseline set".into()
+    }
+
+    fn specs(&self, _cfg: &ExperimentConfig) -> Vec<OperatingPointSpec> {
+        vec![]
+    }
+
+    fn reduce(
+        &self,
+        session: &DesignSession,
+        _points: &[Arc<OperatingPoint>],
+    ) -> Result<Report> {
+        let p = session.params();
+        let solver = crate::analog::capacitor::CapacitorSolver::new(
+            p,
+            crate::analog::capacitor::CapacitorModel::Physics,
+        );
+        let (lo, hi) = (1usize, 32usize);
+        let c = solver.size_for_window(lo, hi);
+        let set = SpikeTimeSet::new(&p, c, (lo..=hi).collect());
+        let mc = MonteCarlo::new(p);
+        let mut rep = Report::new(self.name(), &self.title());
+        rep.text(format!(
+            "(3-sigma variation intervals at sigma_rel = {})",
+            p.sigma_rel
+        ));
+        let mut t = Table::new(&[
+            "level", "t_fire", "|E_i| (3s)", "|B_i|", "r = |B|/|E|",
+            "overlap?",
+        ]);
+        for (idx, &m) in set.levels.iter().enumerate() {
+            let (e_lo, e_hi) = mc.variation_interval(&set, m);
+            let e_len = e_hi - e_lo;
+            let b_len = set.bucket_len(idx);
+            let r = b_len / e_len;
+            // striped-area check: does the 3-sigma interval cross a
+            // boundary?
+            let overlaps = if idx > 0 && idx < set.levels.len() - 1 {
+                e_hi > set.boundaries[idx - 1]
+                    || e_lo < set.boundaries[idx]
+            } else {
+                false
+            };
+            if m % 4 == 0 || m <= 2 || m >= 31 {
+                t.row(vec![
+                    m.to_string(),
+                    si(set.times[idx], "s"),
+                    si(e_len, "s"),
+                    if b_len.is_finite() {
+                        si(b_len, "s")
+                    } else {
+                        "open".into()
+                    },
+                    if r.is_finite() {
+                        format!("{r:.2}")
+                    } else {
+                        "inf".into()
+                    },
+                    if overlaps { "YES".into() } else { "no".into() },
+                ]);
+            }
+        }
+        rep.table("", t);
+        rep.text(
+            "(r grows toward slow spike times: slower levels tolerate \
+             more variation — the basis of CapMin-V's merge order)",
+        );
+        Ok(rep)
+    }
+}
+
+pub fn run(session: &DesignSession) -> Result<()> {
+    crate::plan::planner::run_one(session, &Fig6Plan, &[])
 }

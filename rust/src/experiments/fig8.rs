@@ -3,37 +3,37 @@
 //!   stars:     CapMin under current variation (mean of n_seeds runs)
 //!   triangles: CapMin-V (merges from the k=16 set) under variation
 //!
-//! The whole sweep is one `query_many` batch: the session solves the
-//! cache-missing operating points in parallel (the MC stage dominates)
-//! and replays repeated invocations from `runs/points/`.
+//! As a plan, the whole sweep is *declared*: [`sweep_specs`] is the
+//! grid (k-major per dataset), the planner resolves it — deduplicated
+//! against every other plan in the suite (headline declares the same
+//! grid and rides along for free) — and [`Fig8Plan::reduce`] is a pure
+//! walk from points to tables and plot series.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::report::{pct, Report};
-use crate::session::{DesignSession, OperatingPointSpec};
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::report::pct;
+use crate::data::synth::Dataset;
+use crate::plan::report::Report;
+use crate::plan::ExperimentPlan;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
 pub const CAPMINV_K_START: usize = 16; // paper Sec. IV-C
 
-pub fn run(session: &DesignSession,
-           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
-    let cfg = session.config();
+/// The Fig. 8 grid for one dataset list: per dataset, per k — a clean
+/// point, a variation point, and (below the CapMin-V start) a merged
+/// point. Shared verbatim by the headline plan, so under `suite` the
+/// two plans' specs collapse to one solve each.
+pub fn sweep_specs(
+    cfg: &ExperimentConfig,
+    datasets: &[Dataset],
+) -> Vec<OperatingPointSpec> {
+    let mut specs = vec![];
     for &ds in datasets {
-        let spec = ds.spec();
-        // train/extract up front so the sweep below is pure query traffic
-        session.ensure_trained(ds)?;
-        println!(
-            "\n== Fig. 8 [{}]: accuracy over k (sigma_rel = {}, {} \
-             test samples, backend = {}) ==",
-            spec.name,
-            cfg.sigma_rel,
-            cfg.eval_limit,
-            session.backend_name()
-        );
-        // one spec per curve point, k-major so the result walk below
-        // stays aligned
-        let mut specs = vec![];
         for &k in &cfg.ks {
             // circles: clipping only
             specs.push(
@@ -44,7 +44,8 @@ pub fn run(session: &DesignSession,
                 OperatingPointSpec::new(ds, k, cfg.sigma_rel, 0)
                     .with_eval(100, cfg.n_seeds),
             );
-            // triangles: CapMin-V from k=16 merged down to k spike times
+            // triangles: CapMin-V from k=16 merged down to k spike
+            // times
             if k < CAPMINV_K_START {
                 specs.push(
                     OperatingPointSpec::new(
@@ -57,58 +58,149 @@ pub fn run(session: &DesignSession,
                 );
             }
         }
-        let points = session.query_many(&specs)?;
-
-        let mut t = Table::new(&[
-            "k", "window", "CapMin clean", "CapMin +var", "CapMin-V +var",
-        ]);
-        let mut ks = vec![];
-        let mut clean = vec![];
-        let mut var = vec![];
-        let mut capv: Vec<f64> = vec![];
-        let mut it = points.iter();
-        for &k in &cfg.ks {
-            let p_clean = it.next().expect("clean point per k");
-            let p_var = it.next().expect("variation point per k");
-            let a_clean = p_clean.accuracy.expect("eval requested");
-            let a_var = p_var.accuracy.expect("eval requested");
-            let a_capv = if k < CAPMINV_K_START {
-                let p_v = it.next().expect("capmin-v point below k=16");
-                Some(p_v.accuracy.expect("eval requested"))
-            } else {
-                None
-            };
-            let w = p_clean.peak_window();
-            t.row(vec![
-                k.to_string(),
-                format!("[{},{}]", w.q_lo, w.q_hi),
-                pct(a_clean),
-                pct(a_var),
-                a_capv.map(pct).unwrap_or_else(|| "-".into()),
-            ]);
-            ks.push(k as f64);
-            clean.push(a_clean);
-            var.push(a_var);
-            capv.push(a_capv.unwrap_or(f64::NAN));
-        }
-        println!("{}", t.render());
-        let rep = Report::new(session.store());
-        rep.save_series(
-            &format!("fig8_{}", spec.name),
-            vec![
-                ("dataset", Json::Str(spec.name.into())),
-                ("sigma_rel", Json::Num(cfg.sigma_rel)),
-                ("eval_limit", Json::Num(cfg.eval_limit as f64)),
-            ],
-            vec![
-                ("k", ks),
-                ("capmin_clean", clean),
-                ("capmin_var", var),
-                ("capminv_var", capv),
-            ],
-        )?;
     }
-    Ok(())
+    specs
+}
+
+/// One dataset's decoded sweep: aligned k / accuracy arrays.
+pub struct SweepCurves {
+    pub ks: Vec<f64>,
+    pub clean: Vec<f64>,
+    pub var: Vec<f64>,
+    /// NaN above the CapMin-V start.
+    pub capv: Vec<f64>,
+    /// Peak window per k, rendered `[lo,hi]`.
+    pub windows: Vec<String>,
+}
+
+/// Walk one dataset's block of resolved points (in [`sweep_specs`]
+/// order) back into curves.
+pub fn decode_sweep<'a>(
+    cfg: &ExperimentConfig,
+    points: &mut impl Iterator<Item = &'a Arc<OperatingPoint>>,
+) -> SweepCurves {
+    let mut c = SweepCurves {
+        ks: vec![],
+        clean: vec![],
+        var: vec![],
+        capv: vec![],
+        windows: vec![],
+    };
+    for &k in &cfg.ks {
+        let p_clean = points.next().expect("clean point per k");
+        let p_var = points.next().expect("variation point per k");
+        let a_clean = p_clean.accuracy.expect("eval requested");
+        let a_var = p_var.accuracy.expect("eval requested");
+        let a_capv = if k < CAPMINV_K_START {
+            let p_v = points.next().expect("capmin-v point below k=16");
+            p_v.accuracy.expect("eval requested")
+        } else {
+            f64::NAN
+        };
+        let w = p_clean.peak_window();
+        c.ks.push(k as f64);
+        c.clean.push(a_clean);
+        c.var.push(a_var);
+        c.capv.push(a_capv);
+        c.windows.push(format!("[{},{}]", w.q_lo, w.q_hi));
+    }
+    c
+}
+
+pub struct Fig8Plan {
+    pub datasets: Vec<Dataset>,
+}
+
+impl ExperimentPlan for Fig8Plan {
+    fn name(&self) -> &'static str {
+        "fig8"
+    }
+
+    fn scope(&self) -> String {
+        crate::plan::dataset_scope(&self.datasets)
+    }
+
+    fn title(&self) -> String {
+        "Fig. 8: accuracy over k (CapMin / +variation / CapMin-V)"
+            .into()
+    }
+
+    fn specs(&self, cfg: &ExperimentConfig) -> Vec<OperatingPointSpec> {
+        sweep_specs(cfg, &self.datasets)
+    }
+
+    fn reduce(
+        &self,
+        session: &DesignSession,
+        points: &[Arc<OperatingPoint>],
+    ) -> Result<Report> {
+        let cfg = session.config();
+        let mut rep = Report::new(self.name(), &self.title());
+        let mut it = points.iter();
+        for &ds in &self.datasets {
+            let spec = ds.spec();
+            rep.heading(format!(
+                "{} (sigma_rel = {}, {} test samples, backend = {})",
+                spec.name,
+                cfg.sigma_rel,
+                cfg.eval_limit,
+                session.backend_name()
+            ));
+            let curves = decode_sweep(cfg, &mut it);
+            let mut t = Table::new(&[
+                "k", "window", "CapMin clean", "CapMin +var",
+                "CapMin-V +var",
+            ]);
+            for (i, &k) in curves.ks.iter().enumerate() {
+                t.row(vec![
+                    (k as usize).to_string(),
+                    curves.windows[i].clone(),
+                    pct(curves.clean[i]),
+                    pct(curves.var[i]),
+                    if curves.capv[i].is_nan() {
+                        "-".into()
+                    } else {
+                        pct(curves.capv[i])
+                    },
+                ]);
+            }
+            rep.table("", t);
+            rep.series(
+                &format!("fig8_{}", spec.name),
+                vec![
+                    (
+                        "dataset".into(),
+                        Json::Str(spec.name.into()),
+                    ),
+                    ("sigma_rel".into(), Json::Num(cfg.sigma_rel)),
+                    (
+                        "eval_limit".into(),
+                        Json::Num(cfg.eval_limit as f64),
+                    ),
+                ],
+                vec![
+                    ("k".into(), curves.ks),
+                    ("capmin_clean".into(), curves.clean),
+                    ("capmin_var".into(), curves.var),
+                    ("capminv_var".into(), curves.capv),
+                ],
+            );
+        }
+        Ok(rep)
+    }
+}
+
+pub fn run(
+    session: &DesignSession,
+    datasets: &[Dataset],
+) -> Result<()> {
+    crate::plan::planner::run_one(
+        session,
+        &Fig8Plan {
+            datasets: datasets.to_vec(),
+        },
+        &[],
+    )
 }
 
 /// Smallest k whose clean accuracy stays within `tol` of the k=32 clean
@@ -131,7 +223,7 @@ pub fn choose_k(ks: &[usize], clean: &[f64], tol: f64) -> usize {
 
 #[cfg(test)]
 mod tests {
-    use super::choose_k;
+    use super::*;
 
     #[test]
     fn choose_k_respects_tolerance() {
@@ -140,5 +232,19 @@ mod tests {
         assert_eq!(choose_k(&ks, &clean, 0.01), 14);
         assert_eq!(choose_k(&ks, &clean, 0.06), 10);
         assert_eq!(choose_k(&ks, &clean, 0.0005), 24);
+    }
+
+    #[test]
+    fn sweep_grid_shape() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.ks = vec![32, 16, 14, 10];
+        let specs =
+            sweep_specs(&cfg, &[Dataset::FashionSyn, Dataset::CifarSyn]);
+        // per dataset: 4 clean + 4 var + 2 capmin-v (k = 14, 10)
+        assert_eq!(specs.len(), 2 * (4 + 4 + 2));
+        // k-major: first three entries belong to k = 32, 32, 16...
+        assert_eq!(specs[0].k, 32);
+        assert!(specs[0].eval.is_some());
+        assert_eq!(specs[1].sigma, cfg.sigma_rel);
     }
 }

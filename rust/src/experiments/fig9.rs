@@ -5,15 +5,26 @@
 //! Reported under both capacitor models (physics-mode prediction and the
 //! paper-calibrated fit; DESIGN.md §4): the *shape* — CapMin wins big,
 //! CapMin-V costs a small premium over CapMin — holds in both.
+//!
+//! The plan declares exactly two hardware-only specs (the CapMin and
+//! CapMin-V operating points of the representative model); the baseline
+//! row is closed-form substrate math in the reduction.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::analog::capacitor::{paper_fit, CapacitorModel, CapacitorSolver};
+use crate::analog::capacitor::{
+    paper_fit, CapacitorModel, CapacitorSolver,
+};
 use crate::analog::cost::cost;
 use crate::analog::neuron::SpikeTimeSet;
+use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::report::ratio;
 use crate::data::synth::Dataset;
-use crate::session::{DesignSession, OperatingPointSpec};
+use crate::plan::report::Report;
+use crate::plan::ExperimentPlan;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
 use crate::util::table::{si, Table};
 
 pub struct Fig9Row {
@@ -25,8 +36,20 @@ pub struct Fig9Row {
     pub energy: f64,
 }
 
-pub fn compute(session: &DesignSession, ds: Dataset, k_capmin: usize)
-    -> Result<Vec<Fig9Row>> {
+/// The CapMin k this figure reports — the paper's 1% operating point
+/// is fixed at 14 regardless of the configured sweep (Fig. 9 is the
+/// paper's headline comparison, not a function of `--ks`).
+const K_CAPMIN: usize = 14;
+
+/// Build the three comparison rows from the two resolved operating
+/// points (CapMin at `k`, CapMin-V from k=16) plus closed-form
+/// baseline math.
+pub fn rows_from_points(
+    session: &DesignSession,
+    k: usize,
+    hw_min: &OperatingPoint,
+    hw_v: &OperatingPoint,
+) -> Vec<Fig9Row> {
     let p = session.params();
     let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
 
@@ -35,31 +58,17 @@ pub fn compute(session: &DesignSession, ds: Dataset, k_capmin: usize)
     let set_base = SpikeTimeSet::new(&p, c_base, (1..=32).collect());
     let cost_base = cost(&p, &set_base);
 
-    // CapMin at k_capmin: capacitor sized by the peak per-matmul window
-    let hw_min = session
-        .query(&OperatingPointSpec::new(ds, k_capmin, 0.0, 0))?;
+    // CapMin at k: capacitor sized by the peak per-matmul window
     let w = hw_min.peak_window().clone();
     let c_min = hw_min.c;
     let set_min = SpikeTimeSet::new(&p, c_min, w.levels());
     let cost_min = cost(&p, &set_min);
 
-    // CapMin-V: k=16 capacitor, phi merges down to k_capmin spike times
-    let phi = super::fig8::CAPMINV_K_START - k_capmin;
-    let hw_v = session.query(&OperatingPointSpec::new(
-        ds,
-        super::fig8::CAPMINV_K_START,
-        session.config().sigma_rel,
-        phi,
-    ))?;
+    // CapMin-V: k=16 capacitor, phi merges down to k spike times
+    let phi = super::fig8::CAPMINV_K_START - k;
     let c16 = hw_v.c;
-    let cost_v = crate::analog::cost::CircuitCost {
-        c: c16,
-        energy: 0.5 * c16 * p.vth * p.vth,
-        grt: hw_v.grt,
-        area: c16 / crate::analog::cost::CAP_DENSITY,
-    };
 
-    Ok(vec![
+    vec![
         Fig9Row {
             name: "baseline (SoA [3])".into(),
             k: 32,
@@ -69,65 +78,117 @@ pub fn compute(session: &DesignSession, ds: Dataset, k_capmin: usize)
             energy: cost_base.energy,
         },
         Fig9Row {
-            name: format!("CapMin (k={k_capmin})"),
-            k: k_capmin,
+            name: format!("CapMin (k={k})"),
+            k,
             c_physics: c_min,
-            c_paperfit: paper_fit(k_capmin),
+            c_paperfit: paper_fit(k),
             grt: cost_min.grt,
             energy: cost_min.energy,
         },
         Fig9Row {
-            name: format!(
-                "CapMin-V (k16 cap, phi={phi})"
-            ),
-            k: k_capmin,
+            name: format!("CapMin-V (k16 cap, phi={phi})"),
+            k,
             c_physics: c16,
             c_paperfit: paper_fit(super::fig8::CAPMINV_K_START),
-            grt: cost_v.grt,
+            grt: hw_v.grt,
             energy: 0.5 * c16 * p.vth * p.vth,
         },
-    ])
+    ]
 }
 
-pub fn run(session: &DesignSession,
-           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
-    // the capacitor story is driven by the peak window, which Fig. 1
-    // shows is identical across benchmarks — one representative model's
-    // per-matmul histograms suffice (the paper's combined-F_MAC move)
-    let cfg = session.config();
-    let k = cfg.ks.iter().copied().find(|&k| k == 14).unwrap_or(14);
-    let rows = compute(session, datasets[0], k)?;
-    println!("\n== Fig. 9: capacitor size & latency at 1% accuracy cost ==");
-    let mut t = Table::new(&[
-        "config", "k", "C (physics)", "C (paper-fit)", "GRT", "E/submac",
-    ]);
-    for r in &rows {
-        t.row(vec![
-            r.name.clone(),
-            r.k.to_string(),
-            si(r.c_physics, "F"),
-            si(r.c_paperfit, "F"),
-            si(r.grt, "s"),
-            si(r.energy, "J"),
-        ]);
+pub struct Fig9Plan {
+    pub datasets: Vec<Dataset>,
+}
+
+impl ExperimentPlan for Fig9Plan {
+    fn name(&self) -> &'static str {
+        "fig9"
     }
-    println!("{}", t.render());
-    let base = &rows[0];
-    let cm = &rows[1];
-    let cv = &rows[2];
-    println!(
-        "capacitor reduction  : physics {} | paper-fit {}  (paper: 14.08x)",
-        ratio(base.c_physics / cm.c_physics),
-        ratio(base.c_paperfit / cm.c_paperfit),
-    );
-    println!(
-        "latency (GRT) gain   : physics {}            (paper: ~14x)",
-        ratio(base.grt / cm.grt),
-    );
-    println!(
-        "CapMin-V premium     : physics {} | paper-fit {} (paper: +28%)",
-        ratio(cv.c_physics / cm.c_physics),
-        ratio(cv.c_paperfit / cm.c_paperfit),
-    );
-    Ok(())
+
+    fn scope(&self) -> String {
+        crate::plan::dataset_scope(&self.datasets)
+    }
+
+    fn title(&self) -> String {
+        "Fig. 9: capacitor size & latency at 1% accuracy cost".into()
+    }
+
+    fn specs(&self, cfg: &ExperimentConfig) -> Vec<OperatingPointSpec> {
+        // the capacitor story is driven by the peak window, which
+        // Fig. 1 shows is identical across benchmarks — one
+        // representative model's per-matmul histograms suffice (the
+        // paper's combined-F_MAC move)
+        let ds = self.datasets[0];
+        vec![
+            OperatingPointSpec::new(ds, K_CAPMIN, 0.0, 0),
+            OperatingPointSpec::new(
+                ds,
+                super::fig8::CAPMINV_K_START,
+                cfg.sigma_rel,
+                super::fig8::CAPMINV_K_START - K_CAPMIN,
+            ),
+        ]
+    }
+
+    fn reduce(
+        &self,
+        session: &DesignSession,
+        points: &[Arc<OperatingPoint>],
+    ) -> Result<Report> {
+        let rows = rows_from_points(
+            session,
+            K_CAPMIN,
+            &points[0],
+            &points[1],
+        );
+        let mut rep = Report::new(self.name(), &self.title());
+        let mut t = Table::new(&[
+            "config", "k", "C (physics)", "C (paper-fit)", "GRT",
+            "E/submac",
+        ]);
+        for r in &rows {
+            t.row(vec![
+                r.name.clone(),
+                r.k.to_string(),
+                si(r.c_physics, "F"),
+                si(r.c_paperfit, "F"),
+                si(r.grt, "s"),
+                si(r.energy, "J"),
+            ]);
+        }
+        rep.table("", t);
+        let base = &rows[0];
+        let cm = &rows[1];
+        let cv = &rows[2];
+        rep.text(format!(
+            "capacitor reduction  : physics {} | paper-fit {}  \
+             (paper: 14.08x)",
+            ratio(base.c_physics / cm.c_physics),
+            ratio(base.c_paperfit / cm.c_paperfit),
+        ));
+        rep.text(format!(
+            "latency (GRT) gain   : physics {}            (paper: ~14x)",
+            ratio(base.grt / cm.grt),
+        ));
+        rep.text(format!(
+            "CapMin-V premium     : physics {} | paper-fit {} (paper: \
+             +28%)",
+            ratio(cv.c_physics / cm.c_physics),
+            ratio(cv.c_paperfit / cm.c_paperfit),
+        ));
+        Ok(rep)
+    }
+}
+
+pub fn run(
+    session: &DesignSession,
+    datasets: &[Dataset],
+) -> Result<()> {
+    crate::plan::planner::run_one(
+        session,
+        &Fig9Plan {
+            datasets: datasets.to_vec(),
+        },
+        &[],
+    )
 }

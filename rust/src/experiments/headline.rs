@@ -1,86 +1,107 @@
 //! Headline claims check: 14x capacitor reduction at <= 1% accuracy cost;
 //! CapMin-V variation tolerance for a small capacitor premium.
+//!
+//! The plan declares the *same* sweep grid as Fig. 8 (via
+//! [`super::fig8::sweep_specs`]) and summarizes straight from the
+//! resolved points — under `suite` the planner's cross-plan dedup
+//! collapses the two grids to one solve, and standalone `headline`
+//! replays whatever the operating-point cache already holds instead of
+//! requiring a prior `fig8` run.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::analog::capacitor::paper_fit;
+use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::report::{pct, ratio};
-use crate::session::DesignSession;
-use crate::util::json::Json;
+use crate::data::synth::Dataset;
+use crate::plan::report::Report;
+use crate::plan::ExperimentPlan;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
 use crate::util::table::si;
 
-pub fn run(session: &DesignSession,
-           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
-    println!("== Headline reproduction summary ==");
-    // capacitor story is dataset-independent
-    let c32 = paper_fit(32);
-    let c14 = paper_fit(14);
-    let c16 = paper_fit(16);
-    println!(
-        "paper-fit model : C(32) = {}  C(14) = {}  -> {}",
-        si(c32, "F"),
-        si(c14, "F"),
-        ratio(c32 / c14)
-    );
-    println!(
-        "CapMin-V premium: C(16)/C(14) = {} (paper: +28%)",
-        ratio(c16 / c14)
-    );
+pub struct HeadlinePlan {
+    pub datasets: Vec<Dataset>,
+}
 
-    // accuracy story: read the fig8 result series if present
-    for &ds in datasets {
-        let spec = ds.spec();
-        let path = session
-            .store()
-            .path(&format!("results_fig8_{}.json", spec.name));
-        if !path.exists() {
-            println!(
-                "{}: no fig8 results yet (run `capmin fig8`)",
-                spec.name
-            );
-            continue;
-        }
-        let j = Json::parse(&std::fs::read_to_string(path)?)
-            .map_err(anyhow::Error::msg)?;
-        let s = j.req("series");
-        let ks: Vec<f64> =
-            s.req("k").as_arr().iter().map(|v| v.as_f64()).collect();
-        let clean: Vec<f64> = s
-            .req("capmin_clean")
-            .as_arr()
-            .iter()
-            .map(|v| v.as_f64())
-            .collect();
-        let var: Vec<f64> = s
-            .req("capmin_var")
-            .as_arr()
-            .iter()
-            .map(|v| v.as_f64())
-            .collect();
-        let capv: Vec<f64> = s
-            .req("capminv_var")
-            .as_arr()
-            .iter()
-            .map(|v| v.as_f64())
-            .collect();
-        let ku: Vec<usize> = ks.iter().map(|&k| k as usize).collect();
-        let k_star =
-            super::fig8::choose_k(&ku, &clean, 0.01);
-        let at = |k: usize, xs: &[f64]| {
-            ku.iter()
-                .position(|&kk| kk == k)
-                .map(|i| xs[i])
-                .unwrap_or(f64::NAN)
-        };
-        println!(
-            "{}: clean@32 {} | clean@{k_star} {} (1% point) | \
-             +var@{k_star} {} | CapMin-V@{k_star} {}",
-            spec.name,
-            pct(at(32, &clean)),
-            pct(at(k_star, &clean)),
-            pct(at(k_star, &var)),
-            pct(at(k_star, &capv)),
-        );
+impl ExperimentPlan for HeadlinePlan {
+    fn name(&self) -> &'static str {
+        "headline"
     }
-    Ok(())
+
+    fn scope(&self) -> String {
+        crate::plan::dataset_scope(&self.datasets)
+    }
+
+    fn title(&self) -> String {
+        "Headline reproduction summary".into()
+    }
+
+    fn specs(&self, cfg: &ExperimentConfig) -> Vec<OperatingPointSpec> {
+        super::fig8::sweep_specs(cfg, &self.datasets)
+    }
+
+    fn reduce(
+        &self,
+        session: &DesignSession,
+        points: &[Arc<OperatingPoint>],
+    ) -> Result<Report> {
+        let cfg = session.config();
+        let mut rep = Report::new(self.name(), &self.title());
+
+        // capacitor story is dataset-independent
+        let c32 = paper_fit(32);
+        let c14 = paper_fit(14);
+        let c16 = paper_fit(16);
+        rep.text(format!(
+            "paper-fit model : C(32) = {}  C(14) = {}  -> {}",
+            si(c32, "F"),
+            si(c14, "F"),
+            ratio(c32 / c14)
+        ));
+        rep.text(format!(
+            "CapMin-V premium: C(16)/C(14) = {} (paper: +28%)",
+            ratio(c16 / c14)
+        ));
+
+        // accuracy story, per dataset, straight from the sweep points
+        let mut it = points.iter();
+        for &ds in &self.datasets {
+            let spec = ds.spec();
+            let curves = super::fig8::decode_sweep(cfg, &mut it);
+            let ku: Vec<usize> =
+                curves.ks.iter().map(|&k| k as usize).collect();
+            let k_star = super::fig8::choose_k(&ku, &curves.clean, 0.01);
+            let at = |k: usize, xs: &[f64]| {
+                ku.iter()
+                    .position(|&kk| kk == k)
+                    .map(|i| xs[i])
+                    .unwrap_or(f64::NAN)
+            };
+            rep.text(format!(
+                "{}: clean@32 {} | clean@{k_star} {} (1% point) | \
+                 +var@{k_star} {} | CapMin-V@{k_star} {}",
+                spec.name,
+                pct(at(32, &curves.clean)),
+                pct(at(k_star, &curves.clean)),
+                pct(at(k_star, &curves.var)),
+                pct(at(k_star, &curves.capv)),
+            ));
+        }
+        Ok(rep)
+    }
+}
+
+pub fn run(
+    session: &DesignSession,
+    datasets: &[Dataset],
+) -> Result<()> {
+    crate::plan::planner::run_one(
+        session,
+        &HeadlinePlan {
+            datasets: datasets.to_vec(),
+        },
+        &[],
+    )
 }

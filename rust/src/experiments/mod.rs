@@ -1,7 +1,11 @@
-//! Experiment drivers — one module per paper table/figure (DESIGN.md
-//! §5). Every driver takes a [`crate::session::DesignSession`] and goes
-//! through typed operating-point queries; none touches the stage graph
-//! directly.
+//! Experiment plan definitions — one module per paper table/figure
+//! (DESIGN.md §5/§10). Each module defines an
+//! [`crate::plan::ExperimentPlan`]: a declared operating-point grid
+//! plus a pure reduction to a typed report. The `run` functions are
+//! thin single-plan wrappers over
+//! [`crate::plan::planner::run_one`] for the per-figure CLI commands;
+//! `capmin suite` runs the whole registry through one deduplicated
+//! batch. None touches the stage graph directly.
 
 pub mod ablation;
 pub mod fig1;

@@ -2,64 +2,116 @@
 //! tolerance curve — accuracy vs sigma_rel at a fixed operating point,
 //! CapMin (k = 14) vs CapMin-V (k = 16 capacitor, phi = 2). Quantifies
 //! *how much* process variation each configuration absorbs, beyond the
-//! single-sigma snapshot of Fig. 8. One `query_many` batch per dataset:
-//! the per-sigma Monte-Carlo solves run in parallel.
+//! single-sigma snapshot of Fig. 8. The plan declares the whole
+//! (dataset x sigma) grid; the planner's one global batch solves the
+//! per-sigma Monte-Carlo maps in parallel.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::report::{pct, Report};
-use crate::session::{DesignSession, OperatingPointSpec};
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::report::pct;
+use crate::data::synth::Dataset;
+use crate::plan::report::Report;
+use crate::plan::ExperimentPlan;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
-pub fn run(session: &DesignSession,
-           datasets: &[crate::data::synth::Dataset]) -> Result<()> {
-    let cfg = session.config();
-    let sigmas = [0.0, 0.01, 0.02, 0.04, 0.06, 0.08];
-    for &ds in datasets {
-        let spec = ds.spec();
-        session.ensure_trained(ds)?;
-        println!(
-            "\n== sigma sweep [{}]: CapMin(k=14) vs CapMin-V(16, phi=2) ==",
-            spec.name
-        );
-        let mut specs = vec![];
-        for &sigma in &sigmas {
-            specs.push(
-                OperatingPointSpec::new(ds, 14, sigma, 0)
-                    .with_eval(300, cfg.n_seeds),
-            );
-            specs.push(
-                OperatingPointSpec::new(ds, 16, sigma, 2)
-                    .with_eval(400, cfg.n_seeds),
-            );
-        }
-        let points = session.query_many(&specs)?;
-        let mut t = Table::new(&["sigma_rel", "CapMin k=14", "CapMin-V"]);
-        let mut xs = vec![];
-        let mut a_cm = vec![];
-        let mut a_cv = vec![];
-        let mut it = points.iter();
-        for &sigma in &sigmas {
-            let a1 = it
-                .next()
-                .and_then(|p| p.accuracy)
-                .expect("eval requested");
-            let a2 = it
-                .next()
-                .and_then(|p| p.accuracy)
-                .expect("eval requested");
-            t.row(vec![format!("{sigma:.2}"), pct(a1), pct(a2)]);
-            xs.push(sigma);
-            a_cm.push(a1);
-            a_cv.push(a2);
-        }
-        println!("{}", t.render());
-        Report::new(session.store()).save_series(
-            &format!("sigma_sweep_{}", spec.name),
-            vec![("dataset", Json::Str(spec.name.into()))],
-            vec![("sigma", xs), ("capmin", a_cm), ("capminv", a_cv)],
-        )?;
+/// The swept sigma_rel values.
+pub const SIGMAS: [f64; 6] = [0.0, 0.01, 0.02, 0.04, 0.06, 0.08];
+
+pub struct SigmaSweepPlan {
+    pub datasets: Vec<Dataset>,
+}
+
+impl ExperimentPlan for SigmaSweepPlan {
+    fn name(&self) -> &'static str {
+        "sigma-sweep"
     }
-    Ok(())
+
+    fn scope(&self) -> String {
+        crate::plan::dataset_scope(&self.datasets)
+    }
+
+    fn title(&self) -> String {
+        "Sigma sweep: CapMin(k=14) vs CapMin-V(16, phi=2)".into()
+    }
+
+    fn specs(&self, cfg: &ExperimentConfig) -> Vec<OperatingPointSpec> {
+        let mut specs = vec![];
+        for &ds in &self.datasets {
+            for &sigma in &SIGMAS {
+                specs.push(
+                    OperatingPointSpec::new(ds, 14, sigma, 0)
+                        .with_eval(300, cfg.n_seeds),
+                );
+                specs.push(
+                    OperatingPointSpec::new(ds, 16, sigma, 2)
+                        .with_eval(400, cfg.n_seeds),
+                );
+            }
+        }
+        specs
+    }
+
+    fn reduce(
+        &self,
+        _session: &DesignSession,
+        points: &[Arc<OperatingPoint>],
+    ) -> Result<Report> {
+        let mut rep = Report::new(self.name(), &self.title());
+        let mut it = points.iter();
+        for &ds in &self.datasets {
+            let spec = ds.spec();
+            rep.heading(spec.name.to_string());
+            let mut t =
+                Table::new(&["sigma_rel", "CapMin k=14", "CapMin-V"]);
+            let mut xs = vec![];
+            let mut a_cm = vec![];
+            let mut a_cv = vec![];
+            for &sigma in &SIGMAS {
+                let a1 = it
+                    .next()
+                    .and_then(|p| p.accuracy)
+                    .expect("eval requested");
+                let a2 = it
+                    .next()
+                    .and_then(|p| p.accuracy)
+                    .expect("eval requested");
+                t.row(vec![format!("{sigma:.2}"), pct(a1), pct(a2)]);
+                xs.push(sigma);
+                a_cm.push(a1);
+                a_cv.push(a2);
+            }
+            rep.table("", t);
+            rep.series(
+                &format!("sigma_sweep_{}", spec.name),
+                vec![(
+                    "dataset".into(),
+                    Json::Str(spec.name.into()),
+                )],
+                vec![
+                    ("sigma".into(), xs),
+                    ("capmin".into(), a_cm),
+                    ("capminv".into(), a_cv),
+                ],
+            );
+        }
+        Ok(rep)
+    }
+}
+
+pub fn run(
+    session: &DesignSession,
+    datasets: &[Dataset],
+) -> Result<()> {
+    crate::plan::planner::run_one(
+        session,
+        &SigmaSweepPlan {
+            datasets: datasets.to_vec(),
+        },
+        &[],
+    )
 }

@@ -1,89 +1,145 @@
-//! Tables I & II regeneration from the data registry and the native
-//! model registry (`backend::arch`) — no manifest or artifacts needed.
+//! Tables I & II as experiment plans — regenerated from the data
+//! registry and the native model registry (`backend::arch`); no
+//! manifest or artifacts needed, so both declare an empty grid.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::coordinator::config::ExperimentConfig;
 use crate::data::synth::Dataset;
-use crate::session::DesignSession;
+use crate::plan::report::Report;
+use crate::plan::ExperimentPlan;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
 use crate::util::table::Table;
 
-pub fn table1(_session: &DesignSession) -> Result<()> {
-    println!("== Table I: datasets ==");
-    let mut t = Table::new(&[
-        "name", "stands in for", "#train", "#test", "dim", "#classes",
-    ]);
-    for ds in Dataset::all() {
-        let s = ds.spec();
-        t.row(vec![
-            s.name.into(),
-            s.paper_name.into(),
-            s.n_train.to_string(),
-            s.n_test.to_string(),
-            format!("({},{},{})", s.channels, s.height, s.width),
-            s.classes.to_string(),
-        ]);
+pub struct Table1Plan;
+
+impl ExperimentPlan for Table1Plan {
+    fn name(&self) -> &'static str {
+        "table1"
     }
-    println!("{}", t.render());
-    Ok(())
+
+    fn title(&self) -> String {
+        "Table I: datasets".into()
+    }
+
+    fn specs(&self, _cfg: &ExperimentConfig) -> Vec<OperatingPointSpec> {
+        vec![]
+    }
+
+    fn reduce(
+        &self,
+        _session: &DesignSession,
+        _points: &[Arc<OperatingPoint>],
+    ) -> Result<Report> {
+        let mut rep = Report::new(self.name(), &self.title());
+        let mut t = Table::new(&[
+            "name", "stands in for", "#train", "#test", "dim",
+            "#classes",
+        ]);
+        for ds in Dataset::all() {
+            let s = ds.spec();
+            t.row(vec![
+                s.name.into(),
+                s.paper_name.into(),
+                s.n_train.to_string(),
+                s.n_test.to_string(),
+                format!("({},{},{})", s.channels, s.height, s.width),
+                s.classes.to_string(),
+            ]);
+        }
+        rep.table("", t);
+        Ok(rep)
+    }
 }
 
-pub fn table2(session: &DesignSession) -> Result<()> {
-    // prefer the AOT manifest when available: it records the widths
-    // the artifacts were actually built at (--full or CPU-budget)
-    #[cfg(feature = "xla")]
-    if crate::runtime::artifacts_dir().join("manifest.json").exists() {
-        println!(
-            "== Table II: BNN architectures (from the AOT manifest) =="
-        );
-        let manifest = &session.runtime()?.manifest;
+pub struct Table2Plan;
+
+impl ExperimentPlan for Table2Plan {
+    fn name(&self) -> &'static str {
+        "table2"
+    }
+
+    fn title(&self) -> String {
+        "Table II: BNN architectures".into()
+    }
+
+    fn specs(&self, _cfg: &ExperimentConfig) -> Vec<OperatingPointSpec> {
+        vec![]
+    }
+
+    fn reduce(
+        &self,
+        session: &DesignSession,
+        _points: &[Arc<OperatingPoint>],
+    ) -> Result<Report> {
+        let mut rep = Report::new(self.name(), &self.title());
+        // prefer the AOT manifest when available: it records the widths
+        // the artifacts were actually built at (--full or CPU-budget)
+        #[cfg(feature = "xla")]
+        if crate::runtime::artifacts_dir()
+            .join("manifest.json")
+            .exists()
+        {
+            rep.text("(from the AOT manifest)");
+            let manifest = &session.runtime()?.manifest;
+            let mut t = Table::new(&[
+                "model", "architecture", "params", "matmuls",
+                "MHL margin",
+            ]);
+            for (name, m) in &manifest.models {
+                if name == "vgg3_tiny" {
+                    continue; // test-only twin
+                }
+                t.row(vec![
+                    name.clone(),
+                    m.description.clone(),
+                    m.n_params.to_string(),
+                    m.n_matmuls.to_string(),
+                    format!("{}", m.mhl_b),
+                ]);
+            }
+            rep.table("", t);
+            if !manifest.full {
+                rep.text(
+                    "(CPU-budget widths; `make artifacts` with --full \
+                     restores the paper's exact channel plan — \
+                     DESIGN.md §6)",
+                );
+            }
+            return Ok(rep);
+        }
+        let _ = &session;
+        rep.text("(native registry, DESIGN.md §9)");
         let mut t = Table::new(&[
-            "model", "architecture", "params", "matmuls", "MHL margin",
+            "model", "architecture", "binary weights", "matmuls",
         ]);
-        for (name, m) in &manifest.models {
+        for name in crate::backend::arch::model_names() {
             if name == "vgg3_tiny" {
                 continue; // test-only twin
             }
+            let m = crate::backend::arch::model_meta(name)?;
             t.row(vec![
-                name.clone(),
-                m.description.clone(),
-                m.n_params.to_string(),
-                m.n_matmuls.to_string(),
-                format!("{}", m.mhl_b),
+                name.to_string(),
+                m.describe(),
+                m.n_weight_bits().to_string(),
+                m.n_matmuls().to_string(),
             ]);
         }
-        println!("{}", t.render());
-        if !manifest.full {
-            println!(
-                "(CPU-budget widths; `make artifacts` with --full \
-                 restores the paper's exact channel plan — DESIGN.md §6)"
-            );
-        }
-        return Ok(());
+        rep.table("", t);
+        rep.text(
+            "(CPU-budget widths; `make artifacts` with --full restores \
+             the paper's exact channel plan — DESIGN.md §6)",
+        );
+        Ok(rep)
     }
-    let _ = &session;
-    println!(
-        "== Table II: BNN architectures (native registry, DESIGN.md \
-         §9) =="
-    );
-    let mut t = Table::new(&[
-        "model", "architecture", "binary weights", "matmuls",
-    ]);
-    for name in crate::backend::arch::model_names() {
-        if name == "vgg3_tiny" {
-            continue; // test-only twin
-        }
-        let m = crate::backend::arch::model_meta(name)?;
-        t.row(vec![
-            name.to_string(),
-            m.describe(),
-            m.n_weight_bits().to_string(),
-            m.n_matmuls().to_string(),
-        ]);
-    }
-    println!("{}", t.render());
-    println!(
-        "(CPU-budget widths; `make artifacts` with --full restores \
-         the paper's exact channel plan — DESIGN.md §6)"
-    );
-    Ok(())
+}
+
+pub fn table1(session: &DesignSession) -> Result<()> {
+    crate::plan::planner::run_one(session, &Table1Plan, &[])
+}
+
+pub fn table2(session: &DesignSession) -> Result<()> {
+    crate::plan::planner::run_one(session, &Table2Plan, &[])
 }

@@ -19,6 +19,13 @@
 //! CLI, benches and examples all issue
 //! [`session::OperatingPointSpec`] queries against it; the training /
 //! F_MAC stage graph behind it is crate-internal.
+//!
+//! Experiments themselves are declarative [`plan::ExperimentPlan`]s
+//! (DESIGN.md §10): each declares its operating-point grid and a pure
+//! reduction to a typed report; [`plan::planner::Planner`] dedupes
+//! the grids across every selected plan, solves the union in one
+//! `query_many` batch, and renders/emits/resumes through one
+//! reporter (`capmin suite`).
 
 pub mod analog;
 pub mod backend;
@@ -27,6 +34,7 @@ pub mod capmin;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod plan;
 pub mod runtime;
 pub mod session;
 pub mod util;

@@ -11,9 +11,27 @@ use anyhow::Result;
 use capmin::backend::InferenceBackend;
 use capmin::coordinator::config::ExperimentConfig;
 use capmin::experiments;
+use capmin::plan;
+use capmin::plan::planner::{Planner, SuiteOptions};
+use capmin::plan::report::{Emit, EMIT_CHOICES};
 use capmin::session::{DesignSession, OperatingPointSpec};
 use capmin::util::cli::Args;
 use capmin::util::table::si;
+
+/// Every `--key value` option any command understands; anything else
+/// errors with this list (util::cli::Args::reject_unknown).
+const KNOWN_OPTS: &[&str] = &[
+    "dataset", "steps", "lr", "lr-halve-every", "train-limit",
+    "eval-limit", "hist-limit", "sigma", "mc-samples", "seeds", "ks",
+    "k", "phi", "engine", "backend", "threads", "run-dir", "seed",
+    "emit", "plans", "suite-id",
+];
+
+/// Every bare `--flag`.
+const KNOWN_FLAGS: &[&str] = &[
+    "help", "quick", "paper-scale", "no-point-cache", "no-eval",
+    "no-resume",
+];
 
 const HELP: &str = "\
 capmin — CapMin / CapMin-V reproduction (CS.AR 2023)
@@ -26,20 +44,27 @@ memory, then from the runs/points/ JSON cache, and only then recompute
 (training, F_MAC extraction and Monte-Carlo maps are all cached in the
 run directory, so figure commands compose without retraining).
 
-experiment commands (paper artifacts):
+experiment commands (paper artifacts; each is a declared plan —
+DESIGN.md §10):
   table1          Table I  — datasets
   table2          Table II — BNN architectures
   fig1            F_MAC histograms per benchmark
   fig3            capacitor charging curves + quantized spike times
   fig5            CapMin window borders over the combined histogram
   fig6            variation vs decision intervals (r_i analysis)
-  fig8            accuracy over k (CapMin / +variation / CapMin-V);
-                  one parallel query_many batch per dataset
+  fig8            accuracy over k (CapMin / +variation / CapMin-V)
   fig9            capacitor size & latency comparison
-  headline        summary of the paper's headline claims
+  headline        summary of the paper's headline claims (shares the
+                  fig8 grid — free under suite, cached standalone)
   ablation        design-choice ablations (window placement, merge rule)
   sigma-sweep     variation-tolerance curve (CapMin vs CapMin-V)
-  all             tables + all figures in order
+  suite           run every plan above as ONE deduplicated batch: specs
+                  shared across figures solve once, progress streams
+                  per plan, and a killed run resumes from
+                  <run-dir>/suite/<id>/manifest.json
+                  (--plans fig8,table2,...  --emit json,csv,md
+                   --suite-id ID  --no-resume)
+  all             alias for suite (kept for muscle memory)
 
 session commands:
   point           answer one codesign query and print the operating
@@ -73,6 +98,25 @@ common options:
   --run-dir DIR            cache directory (default runs/)
   --no-point-cache         keep operating points in memory only
 
+suite options:
+  --plans a,b,c            subset of plans to run (default: all)
+  --emit json,csv,md       extra artifact formats: under
+                           <run-dir>/suite/<id>/ for `suite` (markdown
+                           is always written there; `suite --emit
+                           json` leaves <plan>.json next to
+                           manifest.json), under <run-dir>/reports/
+                           for single-figure commands
+  --suite-id ID            pin the suite directory (default: hash of
+                           plan set + config)
+  --no-resume              ignore an existing manifest and re-run
+                           every plan
+
+Unknown or misspelled options/flags, and bad --emit/--dataset/--plans
+values, are errors listing the valid set (a known option given to a
+command that doesn't consume it is still accepted); the suite prints
+aggregate session stats (hits, misses, hit rate) at exit so
+cross-plan dedup is observable.
+
 library use: see DESIGN.md §3 / examples/quickstart.rs —
 `DesignSession::builder().config(cfg).build()?.query(&spec)?`.
 ";
@@ -83,6 +127,15 @@ fn main() -> Result<()> {
         print!("{HELP}");
         return Ok(());
     }
+    // typo'd or misplaced options error with the valid set up front,
+    // instead of being silently ignored
+    args.reject_unknown(KNOWN_OPTS, KNOWN_FLAGS)?;
+    // --emit is validated here even for commands that don't consume it
+    let emit: Vec<Emit> = args
+        .choice_list("emit", EMIT_CHOICES)?
+        .iter()
+        .map(|s| Emit::from_name(s).expect("validated choice"))
+        .collect();
     let cfg = ExperimentConfig::from_args(&args)?;
     let session = DesignSession::builder().config(cfg).build()?;
     let datasets = experiments::selected_datasets(&args)?;
@@ -141,25 +194,40 @@ fn main() -> Result<()> {
                  unavailable, native backend only"
             );
         }
-        "table1" => experiments::tables::table1(&session)?,
-        "table2" => experiments::tables::table2(&session)?,
-        "fig1" => experiments::fig1::run(&session, &datasets)?,
-        "fig3" => experiments::fig3::run(&session)?,
-        "fig5" => experiments::fig5::run(&session, &datasets)?,
-        "fig6" => experiments::fig6::run(&session)?,
-        "fig8" => experiments::fig8::run(&session, &datasets)?,
-        "fig9" => experiments::fig9::run(&session, &datasets)?,
-        "headline" => experiments::headline::run(&session, &datasets)?,
-        "all" => {
-            experiments::tables::table1(&session)?;
-            experiments::tables::table2(&session)?;
-            experiments::fig1::run(&session, &datasets)?;
-            experiments::fig3::run(&session)?;
-            experiments::fig5::run(&session, &datasets)?;
-            experiments::fig6::run(&session)?;
-            experiments::fig8::run(&session, &datasets)?;
-            experiments::fig9::run(&session, &datasets)?;
-            experiments::headline::run(&session, &datasets)?;
+        // every single-figure command is a registry plan: one batch,
+        // markdown to stdout, --emit artifacts under
+        // <run-dir>/reports/
+        name if plan::PLAN_NAMES.contains(&name) => {
+            let p = plan::build(name, &datasets)?;
+            plan::planner::run_one(&session, p.as_ref(), &emit)?;
+        }
+        "suite" | "all" => {
+            if args.cmd == "all" {
+                println!(
+                    "(`all` now runs the declarative suite engine — \
+                     `capmin suite`, DESIGN.md §10)"
+                );
+            }
+            let names: Vec<String> = match args.get("plans") {
+                None => plan::PLAN_NAMES
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect(),
+                Some(list) => list
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .collect(),
+            };
+            let mut planner = Planner::new(&session);
+            for name in &names {
+                planner.add(plan::build(name, &datasets)?);
+            }
+            let opts = SuiteOptions {
+                emit,
+                suite_id: args.get("suite-id").map(|s| s.to_string()),
+                resume: !args.flag("no-resume"),
+            };
+            planner.run_suite(&opts)?;
         }
         "point" => {
             let cfg = session.config();
@@ -227,10 +295,6 @@ fn main() -> Result<()> {
                     sum.dynamic_range()
                 );
             }
-        }
-        "ablation" => experiments::ablation::run(&session, &datasets)?,
-        "sigma-sweep" => {
-            experiments::sigma_sweep::run(&session, &datasets)?
         }
         "verify" => verify(&session)?,
         other => {

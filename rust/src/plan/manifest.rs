@@ -1,0 +1,205 @@
+//! Suite run manifests (DESIGN.md §10): one
+//! `runs/suite/<id>/manifest.json` per suite invocation, recording the
+//! plan set, each plan's declared-spec hash and its completion state.
+//!
+//! Resume semantics: a rerun loads the manifest, and any plan whose
+//! entry is `done` with a matching spec hash (same grid, same config)
+//! is *restored* — its specs never reach the solver and its stored
+//! markdown artifact is re-printed. Plans whose spec hash changed (a
+//! config knob or grid edit) re-run from whatever the operating-point
+//! cache still answers. A manifest whose `config_key` disagrees with
+//! the session is ignored wholesale.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::{obj, Json};
+
+pub const MANIFEST_VERSION: f64 = 1.0;
+
+/// Per-plan completion record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanEntry {
+    /// Hash over the plan's sorted declared spec cache keys (empty
+    /// grid hashes too — it pins "this plan declared nothing").
+    pub spec_hash: String,
+    /// Declared specs at completion time (reporting only).
+    pub n_specs: usize,
+    /// True once the plan's report was rendered and emitted.
+    pub done: bool,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SuiteManifest {
+    pub suite_id: String,
+    /// Fingerprint of every config knob that can change a plan's
+    /// output; a mismatch invalidates the whole manifest.
+    pub config_key: String,
+    pub plans: BTreeMap<String, PlanEntry>,
+}
+
+impl SuiteManifest {
+    pub fn new(suite_id: &str, config_key: &str) -> SuiteManifest {
+        SuiteManifest {
+            suite_id: suite_id.to_string(),
+            config_key: config_key.to_string(),
+            plans: BTreeMap::new(),
+        }
+    }
+
+    /// True when `plan` completed under exactly this spec hash.
+    pub fn is_done(&self, plan: &str, spec_hash: &str) -> bool {
+        self.plans
+            .get(plan)
+            .map(|e| e.done && e.spec_hash == spec_hash)
+            .unwrap_or(false)
+    }
+
+    pub fn mark_done(
+        &mut self,
+        plan: &str,
+        spec_hash: &str,
+        n_specs: usize,
+    ) {
+        self.plans.insert(
+            plan.to_string(),
+            PlanEntry {
+                spec_hash: spec_hash.to_string(),
+                n_specs,
+                done: true,
+            },
+        );
+    }
+
+    /// Load from disk; `None` on missing, corrupt (including
+    /// wrong-typed fields), version-mismatched or foreign-config
+    /// manifests (all treated as "start fresh").
+    pub fn load(path: &Path, config_key: &str)
+        -> Option<SuiteManifest> {
+        let text = fs::read_to_string(path).ok()?;
+        let j = Json::parse(&text).ok()?;
+        let str_of = |v: &Json| -> Option<String> {
+            match v {
+                Json::Str(s) => Some(s.clone()),
+                _ => None,
+            }
+        };
+        let num_of = |v: &Json| -> Option<f64> {
+            match v {
+                Json::Num(n) => Some(*n),
+                _ => None,
+            }
+        };
+        if num_of(j.get("version")?)? != MANIFEST_VERSION {
+            return None;
+        }
+        let mut m = SuiteManifest::new(
+            &str_of(j.get("suite_id")?)?,
+            &str_of(j.get("config_key")?)?,
+        );
+        if m.config_key != config_key {
+            return None;
+        }
+        let plans = match j.get("plans")? {
+            Json::Obj(map) => map,
+            _ => return None,
+        };
+        for (name, e) in plans {
+            m.plans.insert(
+                name.clone(),
+                PlanEntry {
+                    spec_hash: str_of(e.get("spec_hash")?)?,
+                    n_specs: num_of(e.get("n_specs")?)? as usize,
+                    done: match e.get("done")? {
+                        Json::Bool(b) => *b,
+                        _ => return None,
+                    },
+                },
+            );
+        }
+        Some(m)
+    }
+
+    /// Write atomically (tmp + rename) so a kill mid-write never
+    /// leaves a truncated manifest behind.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let plans = Json::Obj(
+            self.plans
+                .iter()
+                .map(|(name, e)| {
+                    (
+                        name.clone(),
+                        obj(vec![
+                            (
+                                "spec_hash",
+                                Json::Str(e.spec_hash.clone()),
+                            ),
+                            ("n_specs", Json::Num(e.n_specs as f64)),
+                            ("done", Json::Bool(e.done)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let j = obj(vec![
+            ("version", Json::Num(MANIFEST_VERSION)),
+            ("suite_id", Json::Str(self.suite_id.clone())),
+            ("config_key", Json::Str(self.config_key.clone())),
+            ("plans", plans),
+        ]);
+        let tmp = path.with_extension("json.tmp");
+        fs::write(&tmp, j.to_string())?;
+        fs::rename(tmp, path)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "capmin_manifest_{tag}_{}",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn roundtrip_and_resume_checks() {
+        let dir = tmp("rt");
+        let _ = fs::remove_dir_all(&dir);
+        let path = dir.join("manifest.json");
+        let mut m = SuiteManifest::new("abc12345", "cfg1");
+        m.mark_done("fig8", "deadbeef00000000", 24);
+        m.save(&path).unwrap();
+
+        let back = SuiteManifest::load(&path, "cfg1").unwrap();
+        assert_eq!(back, m);
+        assert!(back.is_done("fig8", "deadbeef00000000"));
+        // spec-hash drift or unknown plans are not done
+        assert!(!back.is_done("fig8", "0000000000000000"));
+        assert!(!back.is_done("fig9", "deadbeef00000000"));
+        // a different config key invalidates the file
+        assert!(SuiteManifest::load(&path, "cfg2").is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_or_missing_is_fresh() {
+        let dir = tmp("bad");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        assert!(SuiteManifest::load(&path, "cfg").is_none());
+        fs::write(&path, "{truncated").unwrap();
+        assert!(SuiteManifest::load(&path, "cfg").is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,162 @@
+//! The declarative experiment-plan engine (DESIGN.md §10).
+//!
+//! Every paper table/figure is an [`ExperimentPlan`]: it *declares* an
+//! [`OperatingPointSpec`] grid and supplies a pure reduction from the
+//! resolved [`OperatingPoint`]s to a typed [`report::Report`]. The
+//! [`planner::Planner`] collects the selected plans, deduplicates
+//! identical specs across all of them, resolves the union through one
+//! [`DesignSession::query_many`] batch on the shared pool, and hands
+//! each plan its slice — so `capmin suite` issues each unique spec to
+//! the solver at most once per run, however many figures ask for it.
+//!
+//! ```text
+//!   plans ──declare──▶ specs ──dedup──▶ query_many ──▶ points
+//!     │                                                  │
+//!     └────────────────reduce◀──────slice per plan───────┘
+//!                        │
+//!                 Report ─▶ render (md stdout, --emit json|csv)
+//!                        └▶ runs/suite/<id>/manifest.json (resume)
+//! ```
+//!
+//! Plan definitions live next to the experiments they replace, in
+//! [`crate::experiments`]; this module owns the trait, the registry,
+//! the reporter and the manifest/resume machinery.
+
+pub mod manifest;
+pub mod planner;
+pub mod report;
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::data::synth::Dataset;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
+
+use self::report::Report;
+
+/// One experiment as the planner sees it: a name, a declared
+/// operating-point grid, and a reduction to a typed report.
+pub trait ExperimentPlan {
+    /// Stable name — CLI selector, manifest key and artifact stem.
+    fn name(&self) -> &'static str;
+
+    /// Human title for the report heading.
+    fn title(&self) -> String;
+
+    /// The operating-point grid this experiment needs. May be empty
+    /// (registry tables, pure-analog figures); must be deterministic
+    /// in `cfg` so resume hashes are stable.
+    fn specs(&self, cfg: &ExperimentConfig) -> Vec<OperatingPointSpec>;
+
+    /// Non-config input this plan's output depends on beyond its
+    /// declared grid — for dataset-driven plans, the dataset
+    /// selection ([`dataset_scope`]). Folded into the suite manifest
+    /// identity so an empty-grid plan (fig1, fig5) can never be
+    /// "restored" from a run over a different selection.
+    fn scope(&self) -> String {
+        String::new()
+    }
+
+    /// Reduce the resolved points (aligned 1:1 with [`Self::specs`]'s
+    /// order) to a report. May consult the session for non-grid data
+    /// (F_MAC histograms, registry metadata, ad-hoc backend runs) but
+    /// must not mutate it.
+    fn reduce(
+        &self,
+        session: &DesignSession,
+        points: &[Arc<OperatingPoint>],
+    ) -> Result<Report>;
+}
+
+/// Canonical scope string for dataset-driven plans (the
+/// [`ExperimentPlan::scope`] of every plan holding a dataset list).
+pub fn dataset_scope(datasets: &[Dataset]) -> String {
+    datasets
+        .iter()
+        .map(|d| d.spec().name)
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Registry order — the order `suite` (and the old `all`) runs in.
+pub const PLAN_NAMES: &[&str] = &[
+    "table1",
+    "table2",
+    "fig1",
+    "fig3",
+    "fig5",
+    "fig6",
+    "fig8",
+    "fig9",
+    "headline",
+    "ablation",
+    "sigma-sweep",
+];
+
+/// Build one plan by registry name over the selected datasets; errors
+/// list the valid names (the `--dataset` error style).
+pub fn build(name: &str, datasets: &[Dataset])
+    -> Result<Box<dyn ExperimentPlan>> {
+    use crate::experiments as ex;
+    let ds = datasets.to_vec();
+    Ok(match name {
+        "table1" => Box::new(ex::tables::Table1Plan),
+        "table2" => Box::new(ex::tables::Table2Plan),
+        "fig1" => Box::new(ex::fig1::Fig1Plan { datasets: ds }),
+        "fig3" => Box::new(ex::fig3::Fig3Plan),
+        "fig5" => Box::new(ex::fig5::Fig5Plan { datasets: ds }),
+        "fig6" => Box::new(ex::fig6::Fig6Plan),
+        "fig8" => Box::new(ex::fig8::Fig8Plan { datasets: ds }),
+        "fig9" => Box::new(ex::fig9::Fig9Plan { datasets: ds }),
+        "headline" => {
+            Box::new(ex::headline::HeadlinePlan { datasets: ds })
+        }
+        "ablation" => {
+            Box::new(ex::ablation::AblationPlan { datasets: ds })
+        }
+        "sigma-sweep" => {
+            Box::new(ex::sigma_sweep::SigmaSweepPlan { datasets: ds })
+        }
+        other => {
+            return Err(anyhow!(
+                "unknown plan `{other}` (valid choices: {})",
+                PLAN_NAMES.join(", ")
+            ))
+        }
+    })
+}
+
+/// Every plan in registry order.
+pub fn all_plans(datasets: &[Dataset])
+    -> Vec<Box<dyn ExperimentPlan>> {
+    PLAN_NAMES
+        .iter()
+        .map(|n| build(n, datasets).expect("registry names are valid"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_every_plan() {
+        let ds = vec![Dataset::FashionSyn];
+        for name in PLAN_NAMES {
+            let p = build(name, &ds).unwrap();
+            assert_eq!(p.name(), *name);
+        }
+        assert_eq!(all_plans(&ds).len(), PLAN_NAMES.len());
+    }
+
+    #[test]
+    fn unknown_plan_error_lists_choices() {
+        let e = build("fig99", &[Dataset::FashionSyn])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("fig99"), "{e}");
+        assert!(e.contains("sigma-sweep"), "{e}");
+    }
+}

@@ -1,0 +1,388 @@
+//! The suite planner (DESIGN.md §10): collect plans, deduplicate their
+//! declared specs globally, resolve the union through one
+//! `DesignSession::query_many` batch, then reduce/render/emit each
+//! plan in order — streaming progress and checkpointing a resume
+//! manifest after every completed plan.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::session::{
+    DesignSession, OperatingPoint, OperatingPointSpec, SessionStats,
+};
+use crate::util::hash::hex16;
+
+use super::manifest::SuiteManifest;
+use super::report::{self, Emit};
+use super::ExperimentPlan;
+
+/// Options of one `suite` invocation.
+pub struct SuiteOptions {
+    /// Extra artifact formats under the suite dir (markdown is always
+    /// written there; `--emit json|csv|md`).
+    pub emit: Vec<Emit>,
+    /// Override the derived suite id (`--suite-id`).
+    pub suite_id: Option<String>,
+    /// Load the manifest and skip completed plans (`--no-resume`
+    /// disables).
+    pub resume: bool,
+}
+
+impl Default for SuiteOptions {
+    fn default() -> SuiteOptions {
+        SuiteOptions {
+            emit: vec![],
+            suite_id: None,
+            resume: true,
+        }
+    }
+}
+
+/// What a suite run did — tests assert resume behaviour through this.
+pub struct SuiteOutcome {
+    pub suite_id: String,
+    /// `runs/suite/<id>/`.
+    pub dir: PathBuf,
+    /// Plans reduced and rendered in this invocation.
+    pub completed: Vec<String>,
+    /// Plans restored from the manifest without touching the solver.
+    pub restored: Vec<String>,
+}
+
+/// Fingerprint of every config knob that can change a plan's output
+/// (mirrors the spec cache-key material plus the sweep-shape knobs);
+/// a drift invalidates suite manifests wholesale. Dataset selection
+/// is *per plan* ([`ExperimentPlan::scope`], folded into each plan's
+/// spec hash) so growing the plan set or reusing a pinned suite id
+/// never invalidates unrelated completed plans.
+fn config_key(cfg: &ExperimentConfig) -> String {
+    let ks: Vec<String> =
+        cfg.ks.iter().map(|k| k.to_string()).collect();
+    hex16(
+        format!(
+            "v1|steps{}|lr{:e}|lrh{}|tl{}|el{}|hl{}|\
+             sigma{:e}|mc{}|ks{}|seeds{}|engine{}|be{}|seed{}",
+            cfg.train_steps,
+            cfg.lr0,
+            cfg.lr_halve_every,
+            cfg.train_limit,
+            cfg.eval_limit,
+            cfg.hist_limit,
+            cfg.sigma_rel,
+            cfg.mc_samples,
+            ks.join(","),
+            cfg.n_seeds,
+            cfg.engine,
+            crate::backend::BackendKind::resolve(cfg),
+            cfg.seed,
+        )
+        .as_bytes(),
+    )
+}
+
+/// Hash of a plan's declared grid (sorted full cache keys) plus its
+/// [`ExperimentPlan::scope`], so the manifest notices any config,
+/// grid *or dataset-selection* drift per plan — an empty-grid plan
+/// like fig1/fig5 hashes differently across `--dataset` selections
+/// even though its grid is always empty.
+fn spec_hash(
+    specs: &[OperatingPointSpec],
+    cfg: &ExperimentConfig,
+    scope: &str,
+) -> String {
+    let mut keys: Vec<String> =
+        specs.iter().map(|s| s.cache_key(cfg)).collect();
+    keys.sort();
+    hex16(format!("{}|scope:{scope}", keys.join("|")).as_bytes())
+}
+
+/// Run one plan directly (the single-figure CLI commands): resolve its
+/// grid in one batch, render markdown to stdout, persist its series,
+/// and — when `--emit` formats are requested — write the artifacts to
+/// `<run-dir>/reports/<plan>.<ext>` (the suite has its own per-run
+/// directory instead).
+pub fn run_one(
+    session: &DesignSession,
+    plan: &dyn ExperimentPlan,
+    emit: &[Emit],
+) -> Result<()> {
+    let specs = plan.specs(session.config());
+    let points = session.query_many(&specs)?;
+    let rep = plan.reduce(session, &points)?;
+    print!("{}", report::render_md(&rep));
+    report::persist_series(session.store(), &rep)?;
+    if !emit.is_empty() {
+        let dir = session.store().path("reports");
+        fs::create_dir_all(&dir)?;
+        for fmt in emit {
+            let path =
+                dir.join(format!("{}.{}", plan.name(), fmt.ext()));
+            fs::write(&path, rep.render(*fmt))?;
+            println!("[plan {}] wrote {}", plan.name(), path.display());
+        }
+    }
+    Ok(())
+}
+
+pub struct Planner<'s> {
+    session: &'s DesignSession,
+    plans: Vec<Box<dyn ExperimentPlan>>,
+}
+
+impl<'s> Planner<'s> {
+    pub fn new(session: &'s DesignSession) -> Planner<'s> {
+        Planner {
+            session,
+            plans: vec![],
+        }
+    }
+
+    pub fn add(&mut self, plan: Box<dyn ExperimentPlan>) -> &mut Self {
+        self.plans.push(plan);
+        self
+    }
+
+    pub fn n_plans(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Run every added plan as one deduplicated, resumable suite.
+    pub fn run_suite(&self, opts: &SuiteOptions)
+        -> Result<SuiteOutcome> {
+        let t0 = Instant::now();
+        let cfg = self.session.config();
+        let ckey = config_key(cfg);
+
+        // 1. declare: every plan's grid + its resume hash (grid keys
+        // + the plan's dataset scope)
+        let declared: Vec<Vec<OperatingPointSpec>> =
+            self.plans.iter().map(|p| p.specs(cfg)).collect();
+        let hashes: Vec<String> = self
+            .plans
+            .iter()
+            .zip(&declared)
+            .map(|(p, s)| spec_hash(s, cfg, &p.scope()))
+            .collect();
+
+        let suite_id = opts.suite_id.clone().unwrap_or_else(|| {
+            let names: Vec<&str> =
+                self.plans.iter().map(|p| p.name()).collect();
+            hex16(
+                format!(
+                    "{ckey}|{}|{}",
+                    names.join(","),
+                    hashes.join(",")
+                )
+                .as_bytes(),
+            )[..8]
+                .to_string()
+        });
+        let dir = self
+            .session
+            .store()
+            .path(&format!("suite/{suite_id}"));
+        fs::create_dir_all(&dir)?;
+        let mpath = dir.join("manifest.json");
+        let mut manifest = if opts.resume {
+            SuiteManifest::load(&mpath, &ckey)
+        } else {
+            None
+        }
+        .unwrap_or_else(|| SuiteManifest::new(&suite_id, &ckey));
+
+        let restored_flags: Vec<bool> = self
+            .plans
+            .iter()
+            .zip(&hashes)
+            .map(|(p, h)| manifest.is_done(p.name(), h))
+            .collect();
+
+        // 2. cross-plan dedup over the plans that still need solving
+        let mut union: Vec<OperatingPointSpec> = vec![];
+        let mut index_of: HashMap<String, usize> = HashMap::new();
+        let mut plan_indices: Vec<Vec<usize>> = vec![];
+        let mut shared_counts: Vec<usize> = vec![];
+        for (pi, specs) in declared.iter().enumerate() {
+            if restored_flags[pi] {
+                plan_indices.push(vec![]);
+                shared_counts.push(0);
+                continue;
+            }
+            let mut idxs = Vec::with_capacity(specs.len());
+            let mut shared = 0usize;
+            for s in specs {
+                let key = s.cache_key(cfg);
+                match index_of.get(&key) {
+                    Some(&i) => {
+                        shared += 1;
+                        idxs.push(i);
+                    }
+                    None => {
+                        union.push(*s);
+                        index_of.insert(key, union.len() - 1);
+                        idxs.push(union.len() - 1);
+                    }
+                }
+            }
+            plan_indices.push(idxs);
+            shared_counts.push(shared);
+        }
+
+        let total_declared: usize =
+            declared.iter().map(|s| s.len()).sum();
+        let n_restored =
+            restored_flags.iter().filter(|&&r| r).count();
+        println!(
+            "[suite {suite_id}] {} plans | {} specs declared | {} \
+             unique after cross-plan dedup | {} restored from manifest",
+            self.plans.len(),
+            total_declared,
+            union.len(),
+            n_restored,
+        );
+        for (pi, plan) in self.plans.iter().enumerate() {
+            if restored_flags[pi] {
+                println!(
+                    "[plan {}] restored ({} specs solved in an \
+                     earlier run)",
+                    plan.name(),
+                    manifest
+                        .plans
+                        .get(plan.name())
+                        .map(|e| e.n_specs)
+                        .unwrap_or(0),
+                );
+            } else {
+                println!(
+                    "[plan {}] {} specs ({} shared with earlier plans)",
+                    plan.name(),
+                    declared[pi].len(),
+                    shared_counts[pi],
+                );
+            }
+        }
+
+        // 3. one global solve for the whole suite
+        if !union.is_empty() {
+            println!(
+                "[suite {suite_id}] solving {} unique operating \
+                 points on {} threads...",
+                union.len(),
+                self.session.threads(),
+            );
+        }
+        let points = self.session.query_many(&union)?;
+
+        // 4. reduce, render, emit and checkpoint each plan in order
+        let mut completed = vec![];
+        let mut restored = vec![];
+        for (pi, plan) in self.plans.iter().enumerate() {
+            let md_path = dir.join(format!("{}.md", plan.name()));
+            if restored_flags[pi] {
+                match fs::read_to_string(&md_path) {
+                    Ok(text) => print!("{text}"),
+                    Err(_) => println!(
+                        "[plan {}] done in an earlier run (no stored \
+                         markdown to re-print)",
+                        plan.name(),
+                    ),
+                }
+                // a restored plan is not re-reduced, so a format
+                // requested only on this rerun can't be produced —
+                // say so instead of silently skipping it
+                for fmt in &opts.emit {
+                    if *fmt != Emit::Md
+                        && !dir
+                            .join(format!(
+                                "{}.{}",
+                                plan.name(),
+                                fmt.ext()
+                            ))
+                            .exists()
+                    {
+                        println!(
+                            "[plan {}] restored without a .{} \
+                             artifact — rerun with --no-resume to \
+                             emit it",
+                            plan.name(),
+                            fmt.ext(),
+                        );
+                    }
+                }
+                restored.push(plan.name().to_string());
+                continue;
+            }
+            let plan_points: Vec<Arc<OperatingPoint>> = plan_indices
+                [pi]
+                .iter()
+                .map(|&i| points[i].clone())
+                .collect();
+            let rep = plan.reduce(self.session, &plan_points)?;
+            let md = report::render_md(&rep);
+            print!("{md}");
+            fs::write(&md_path, &md)?;
+            for fmt in &opts.emit {
+                if *fmt == Emit::Md {
+                    continue; // always written above
+                }
+                fs::write(
+                    dir.join(format!(
+                        "{}.{}",
+                        plan.name(),
+                        fmt.ext()
+                    )),
+                    rep.render(*fmt),
+                )?;
+            }
+            report::persist_series(self.session.store(), &rep)?;
+            manifest.mark_done(
+                plan.name(),
+                &hashes[pi],
+                declared[pi].len(),
+            );
+            manifest.save(&mpath)?;
+            completed.push(plan.name().to_string());
+        }
+
+        // 5. aggregate session stats footer: makes the cross-plan
+        // dedup observable at exit
+        println!(
+            "{}",
+            stats_footer(
+                &self.session.stats(),
+                t0.elapsed().as_secs_f64(),
+            )
+        );
+        println!("[suite {suite_id}] artifacts: {}", dir.display());
+
+        Ok(SuiteOutcome {
+            suite_id,
+            dir,
+            completed,
+            restored,
+        })
+    }
+}
+
+/// The reporter footer `suite` / `all` print at exit.
+pub fn stats_footer(s: &SessionStats, wall_s: f64) -> String {
+    format!(
+        "\nsuite stats: {} queries | {} memory hits | {} disk hits | \
+         {} batch-deduped | {} solves | {} evals | hit rate {:.1}% | \
+         {:.1}s wall",
+        s.queries,
+        s.mem_hits,
+        s.disk_hits,
+        s.deduped,
+        s.solves,
+        s.evals,
+        100.0 * s.hit_rate(),
+        wall_s,
+    )
+}

@@ -1,0 +1,390 @@
+//! The unified reporter (DESIGN.md §10): every experiment plan reduces
+//! to one typed [`Report`] — headings, notes, tables and numeric
+//! series — and this module renders it once per output surface:
+//! markdown to stdout (and `<suite-dir>/<plan>.md`), plus optional
+//! `--emit json|csv` artifacts under the suite run directory. Numeric
+//! series are additionally persisted through
+//! [`crate::coordinator::report::Report::save_series`] so the
+//! pre-plan-engine `runs/results_*.json` consumers keep working.
+
+use anyhow::Result;
+
+use crate::util::json::{arr_f64, fmt_num, obj, Json};
+use crate::util::table::Table;
+
+/// Artifact formats of `--emit` (markdown is always written to the
+/// suite dir so resumed runs can re-print completed plans).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Emit {
+    Md,
+    Json,
+    Csv,
+}
+
+/// Valid `--emit` values, in the order the error message lists them.
+pub const EMIT_CHOICES: &[&str] = &["md", "json", "csv"];
+
+impl Emit {
+    pub fn from_name(name: &str) -> Option<Emit> {
+        match name {
+            "md" => Some(Emit::Md),
+            "json" => Some(Emit::Json),
+            "csv" => Some(Emit::Csv),
+            _ => None,
+        }
+    }
+
+    pub fn ext(&self) -> &'static str {
+        match self {
+            Emit::Md => "md",
+            Emit::Json => "json",
+            Emit::Csv => "csv",
+        }
+    }
+}
+
+/// One renderable block of a plan's report.
+pub enum Section {
+    /// A sub-heading (per-dataset block, ablation part, ...).
+    Heading(String),
+    /// Free-form note lines (the old drivers' trailing `println!`s).
+    Text(String),
+    /// A paper-style table; `title` may be empty.
+    Table { title: String, table: Table },
+    /// A named numeric series (figure plot data). Persisted as
+    /// `runs/results_<name>.json` exactly like the pre-plan drivers.
+    Series {
+        name: String,
+        meta: Vec<(String, Json)>,
+        columns: Vec<(String, Vec<f64>)>,
+    },
+}
+
+/// A plan's typed result: what `reduce` returns and every renderer
+/// consumes.
+pub struct Report {
+    /// Plan name (artifact file stem).
+    pub plan: String,
+    /// Human title (top-level markdown heading).
+    pub title: String,
+    pub sections: Vec<Section>,
+}
+
+impl Report {
+    pub fn new(plan: &str, title: &str) -> Report {
+        Report {
+            plan: plan.to_string(),
+            title: title.to_string(),
+            sections: vec![],
+        }
+    }
+
+    pub fn heading<S: Into<String>>(&mut self, s: S) -> &mut Self {
+        self.sections.push(Section::Heading(s.into()));
+        self
+    }
+
+    pub fn text<S: Into<String>>(&mut self, s: S) -> &mut Self {
+        self.sections.push(Section::Text(s.into()));
+        self
+    }
+
+    pub fn table(&mut self, title: &str, table: Table) -> &mut Self {
+        self.sections.push(Section::Table {
+            title: title.to_string(),
+            table,
+        });
+        self
+    }
+
+    pub fn series(
+        &mut self,
+        name: &str,
+        meta: Vec<(String, Json)>,
+        columns: Vec<(String, Vec<f64>)>,
+    ) -> &mut Self {
+        self.sections.push(Section::Series {
+            name: name.to_string(),
+            meta,
+            columns,
+        });
+        self
+    }
+
+    /// Render in `fmt` (the dispatch the planner and goldens use).
+    pub fn render(&self, fmt: Emit) -> String {
+        match fmt {
+            Emit::Md => render_md(self),
+            Emit::Json => render_json(self).to_string(),
+            Emit::Csv => render_csv(self),
+        }
+    }
+}
+
+/// `f64` CSV cell formatting: finite values via the JSON writer's
+/// shared [`fmt_num`] (so the two artifacts agree by construction);
+/// non-finite values print as Rust's `NaN`/`inf` (JSON has null
+/// instead).
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        fmt_num(v)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Markdown: the stdout surface (tables are pipe tables already).
+pub fn render_md(r: &Report) -> String {
+    let mut out = format!("\n## {}\n", r.title);
+    for s in &r.sections {
+        match s {
+            Section::Heading(h) => {
+                out.push_str(&format!("\n### {h}\n"));
+            }
+            Section::Text(t) => {
+                out.push_str(t);
+                out.push('\n');
+            }
+            Section::Table { title, table } => {
+                if !title.is_empty() {
+                    out.push_str(&format!("\n**{title}**\n"));
+                }
+                out.push('\n');
+                out.push_str(&table.render());
+            }
+            Section::Series { name, columns, .. } => {
+                let cols: Vec<&str> = columns
+                    .iter()
+                    .map(|(k, _)| k.as_str())
+                    .collect();
+                out.push_str(&format!(
+                    "*(series `{name}`: {} — saved as \
+                     results_{name}.json)*\n",
+                    cols.join(", ")
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// JSON: one object per report, sections as a typed array.
+pub fn render_json(r: &Report) -> Json {
+    let sections: Vec<Json> = r
+        .sections
+        .iter()
+        .map(|s| match s {
+            Section::Heading(h) => obj(vec![
+                ("type", Json::Str("heading".into())),
+                ("text", Json::Str(h.clone())),
+            ]),
+            Section::Text(t) => obj(vec![
+                ("type", Json::Str("text".into())),
+                ("text", Json::Str(t.clone())),
+            ]),
+            Section::Table { title, table } => {
+                let headers = Json::Arr(
+                    table
+                        .headers()
+                        .iter()
+                        .map(|h| Json::Str(h.clone()))
+                        .collect(),
+                );
+                let rows = Json::Arr(
+                    table
+                        .rows()
+                        .iter()
+                        .map(|row| {
+                            Json::Arr(
+                                row.iter()
+                                    .map(|c| Json::Str(c.clone()))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                );
+                obj(vec![
+                    ("type", Json::Str("table".into())),
+                    ("title", Json::Str(title.clone())),
+                    ("headers", headers),
+                    ("rows", rows),
+                ])
+            }
+            Section::Series {
+                name,
+                meta,
+                columns,
+            } => {
+                let meta_j = Json::Obj(
+                    meta.iter()
+                        .map(|(k, v)| (k.clone(), v.clone()))
+                        .collect(),
+                );
+                let cols_j = Json::Obj(
+                    columns
+                        .iter()
+                        .map(|(k, v)| (k.clone(), arr_f64(v)))
+                        .collect(),
+                );
+                obj(vec![
+                    ("type", Json::Str("series".into())),
+                    ("name", Json::Str(name.clone())),
+                    ("meta", meta_j),
+                    ("columns", cols_j),
+                ])
+            }
+        })
+        .collect();
+    obj(vec![
+        ("plan", Json::Str(r.plan.clone())),
+        ("title", Json::Str(r.title.clone())),
+        ("sections", Json::Arr(sections)),
+    ])
+}
+
+/// CSV: tables and series as sections separated by `#` comment lines
+/// (headings become comments, free text is dropped).
+pub fn render_csv(r: &Report) -> String {
+    let mut out = format!("# plan: {}\n# {}\n", r.plan, r.title);
+    for s in &r.sections {
+        match s {
+            Section::Heading(h) => {
+                out.push_str(&format!("# {h}\n"));
+            }
+            Section::Text(_) => {}
+            Section::Table { title, table } => {
+                if !title.is_empty() {
+                    out.push_str(&format!("# table: {title}\n"));
+                }
+                out.push_str(&table.to_csv());
+            }
+            Section::Series { name, columns, .. } => {
+                out.push_str(&format!("# series: {name}\n"));
+                let mut t = Table::new(
+                    &columns
+                        .iter()
+                        .map(|(k, _)| k.as_str())
+                        .collect::<Vec<_>>(),
+                );
+                let n = columns
+                    .iter()
+                    .map(|(_, v)| v.len())
+                    .max()
+                    .unwrap_or(0);
+                for i in 0..n {
+                    t.row(
+                        columns
+                            .iter()
+                            .map(|(_, v)| {
+                                v.get(i)
+                                    .map(|&x| fmt_f64(x))
+                                    .unwrap_or_default()
+                            })
+                            .collect(),
+                    );
+                }
+                out.push_str(&t.to_csv());
+            }
+        }
+    }
+    out
+}
+
+/// Persist every series section into the run store as
+/// `results_<name>.json` (backwards-compatible with the pre-plan
+/// drivers' output files).
+pub fn persist_series(
+    store: &crate::coordinator::store::Store,
+    report: &Report,
+) -> Result<()> {
+    let rep = crate::coordinator::report::Report::new(store);
+    for s in &report.sections {
+        if let Section::Series {
+            name,
+            meta,
+            columns,
+        } = s
+        {
+            rep.save_series(
+                name,
+                meta.iter()
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect(),
+                columns
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect(),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        let mut r = Report::new("fig0", "Fig. 0: sample");
+        r.heading("block one");
+        r.text("a note");
+        let mut t = Table::new(&["k", "C"]);
+        t.row(vec!["32".into(), "135.2 pF".into()]);
+        r.table("caps", t);
+        r.series(
+            "fig0_x",
+            vec![("dataset".into(), Json::Str("x".into()))],
+            vec![
+                ("k".into(), vec![32.0, 16.0]),
+                ("acc".into(), vec![0.5, f64::NAN]),
+            ],
+        );
+        r
+    }
+
+    #[test]
+    fn markdown_carries_every_section() {
+        let md = render_md(&sample());
+        assert!(md.contains("## Fig. 0: sample"), "{md}");
+        assert!(md.contains("### block one"), "{md}");
+        assert!(md.contains("a note"), "{md}");
+        assert!(md.contains("| k  | C        |"), "{md}");
+        assert!(md.contains("series `fig0_x`"), "{md}");
+    }
+
+    #[test]
+    fn json_is_parseable_and_typed() {
+        let j = render_json(&sample());
+        let re = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(re.req("plan").as_str(), "fig0");
+        let sections = re.req("sections").as_arr();
+        assert_eq!(sections.len(), 4);
+        assert_eq!(sections[2].req("type").as_str(), "table");
+        assert_eq!(
+            sections[2].req("headers").as_arr()[0].as_str(),
+            "k"
+        );
+        // NaN series entries survive as null -> NaN
+        assert!(sections[3].req("columns").req("acc").as_arr()[1]
+            .as_f64()
+            .is_nan());
+    }
+
+    #[test]
+    fn csv_zips_series_columns() {
+        let csv = render_csv(&sample());
+        assert!(csv.contains("# plan: fig0"), "{csv}");
+        assert!(csv.contains("# series: fig0_x"), "{csv}");
+        assert!(csv.contains("k,acc\n32,0.5\n16,NaN\n"), "{csv}");
+        assert!(csv.contains("k,C\n32,135.2 pF\n"), "{csv}");
+        // free text stays out of CSV
+        assert!(!csv.contains("a note"), "{csv}");
+    }
+
+    #[test]
+    fn emit_parsing() {
+        assert_eq!(Emit::from_name("json"), Some(Emit::Json));
+        assert_eq!(Emit::from_name("yaml"), None);
+        assert_eq!(Emit::Csv.ext(), "csv");
+    }
+}

@@ -82,11 +82,25 @@ pub struct SessionStats {
     pub solves: u64,
     /// Accuracy evaluations actually executed (inference backend).
     pub evals: u64,
+    /// Batch entries answered by an identical spec *within the same*
+    /// `query_many` call (solved once, fanned back out) — the
+    /// intra-batch dedup the plan engine's cross-experiment sweeps
+    /// lean on.
+    pub deduped: u64,
 }
 
 impl SessionStats {
     pub fn hits(&self) -> u64 {
         self.mem_hits + self.disk_hits
+    }
+
+    /// Fraction of queries answered without any solve or eval work
+    /// (memory + disk + intra-batch dedup); 0 when nothing was asked.
+    pub fn hit_rate(&self) -> f64 {
+        if self.queries == 0 {
+            return 0.0;
+        }
+        (self.hits() + self.deduped) as f64 / self.queries as f64
     }
 }
 
@@ -428,6 +442,11 @@ impl DesignSession {
     /// match sequential [`DesignSession::query`] calls exactly: every
     /// solve seeds its PRNG streams from (config seed, matmul index)
     /// only, so thread scheduling cannot change an answer.
+    ///
+    /// Identical specs within one batch are deduplicated up front: the
+    /// first occurrence is solved (and evaluated) once, later
+    /// occurrences fan its result back out and count as
+    /// [`SessionStats::deduped`].
     pub fn query_many(&self, specs: &[OperatingPointSpec])
         -> Result<Vec<Arc<OperatingPoint>>> {
         self.bump(|s| s.queries += specs.len() as u64);
@@ -438,6 +457,27 @@ impl DesignSession {
             .zip(&keys)
             .map(|(s, k)| self.lookup(k, s))
             .collect();
+
+        // intra-batch dedup: among the misses, the first entry with a
+        // given full cache key is the representative; duplicates take
+        // its finished point at the end
+        let mut rep_of: HashMap<&str, usize> = HashMap::new();
+        let mut dup_of: Vec<Option<usize>> = vec![None; specs.len()];
+        for i in 0..specs.len() {
+            if out[i].is_some() {
+                continue;
+            }
+            match rep_of.get(keys[i].as_str()) {
+                Some(&rep) => dup_of[i] = Some(rep),
+                None => {
+                    rep_of.insert(keys[i].as_str(), i);
+                }
+            }
+        }
+        let dups = dup_of.iter().filter(|d| d.is_some()).count() as u64;
+        if dups > 0 {
+            self.bump(|s| s.deduped += dups);
+        }
 
         // one solve job per distinct *hardware* key among the misses
         // (eval variants of the same point share it)
@@ -459,6 +499,7 @@ impl DesignSession {
         let mut queued: HashSet<String> = HashSet::new();
         for (i, spec) in specs.iter().enumerate() {
             if out[i].is_some()
+                || dup_of[i].is_some()
                 || queued.contains(&hkeys[i])
                 || self.hw_solves.lock().unwrap().contains_key(&hkeys[i])
             {
@@ -510,11 +551,11 @@ impl DesignSession {
             }
         }
 
-        // finish in request order (accuracy evaluation is sequential:
-        // one backend); duplicates of an already-finished key are
-        // served from memory
+        // finish representatives in request order (accuracy evaluation
+        // is sequential: one backend), then fan results out to the
+        // intra-batch duplicates
         for (i, spec) in specs.iter().enumerate() {
-            if out[i].is_some() {
+            if out[i].is_some() || dup_of[i].is_some() {
                 continue;
             }
             if let Some(p) = self.points.get_memory(&keys[i]) {
@@ -529,6 +570,12 @@ impl DesignSession {
                 .cloned()
                 .expect("a solve was queued for every miss");
             out[i] = Some(self.finish(spec, &keys[i], hw)?);
+        }
+        for i in 0..specs.len() {
+            if let Some(rep) = dup_of[i] {
+                let p = out[rep].clone().expect("representative done");
+                out[i] = Some(p);
+            }
         }
         Ok(out.into_iter().map(|p| p.expect("filled above")).collect())
     }

@@ -5,6 +5,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::config::ExperimentConfig;
 use crate::data::synth::Dataset;
+use crate::util::hash::hex16;
 use crate::util::json::{obj, Json};
 
 /// How (and whether) a queried operating point is accuracy-evaluated:
@@ -86,7 +87,7 @@ impl OperatingPointSpec {
     /// settings reuse one Monte-Carlo solve through the session's
     /// in-memory solve cache.
     pub fn hw_cache_key(&self, cfg: &ExperimentConfig) -> String {
-        format!("{:016x}", fnv1a(self.hw_material(cfg).as_bytes()))
+        hex16(self.hw_material(cfg).as_bytes())
     }
 
     /// Content-addressed key of the full operating point: a 64-bit
@@ -111,7 +112,7 @@ impl OperatingPointSpec {
             cfg.engine,
             crate::backend::BackendKind::resolve(cfg),
         );
-        format!("{:016x}", fnv1a(material.as_bytes()))
+        hex16(material.as_bytes())
     }
 
     pub fn to_json(&self) -> Json {
@@ -169,15 +170,6 @@ impl OperatingPointSpec {
             eval,
         })
     }
-}
-
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
 }
 
 #[cfg(test)]

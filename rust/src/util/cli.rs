@@ -1,8 +1,15 @@
 //! Tiny CLI argument helper (no clap offline; DESIGN.md §8).
 //!
-//! `Args::parse` splits `--key value` / `--flag` pairs after a subcommand.
+//! `Args::parse` splits `--key value` / `--flag` pairs after a
+//! subcommand. Parsing never fails; validation is a separate pass —
+//! [`Args::choice`] / [`Args::choice_list`] check enumerated option
+//! values and [`Args::reject_unknown`] turns typo'd or misplaced
+//! options into errors listing the valid set (the `--dataset` error
+//! style), instead of silently ignoring them.
 
 use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
 
 #[derive(Debug, Clone)]
 pub struct Args {
@@ -59,6 +66,80 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// An option constrained to an enumerated set: `Ok(None)` when
+    /// absent, an error naming the valid choices on a bad value.
+    pub fn choice(&self, key: &str, valid: &[&str])
+        -> Result<Option<String>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) if valid.contains(&v) => Ok(Some(v.to_string())),
+            Some(v) => Err(anyhow!(
+                "unknown --{key} `{v}` (valid choices: {})",
+                valid.join(", ")
+            )),
+        }
+    }
+
+    /// A comma-separated list option over an enumerated set (e.g.
+    /// `--emit json,csv`); empty when absent, every entry validated.
+    pub fn choice_list(&self, key: &str, valid: &[&str])
+        -> Result<Vec<String>> {
+        let Some(raw) = self.get(key) else {
+            return Ok(vec![]);
+        };
+        let mut out = vec![];
+        for entry in raw.split(',') {
+            let entry = entry.trim();
+            if !valid.contains(&entry) {
+                return Err(anyhow!(
+                    "unknown --{key} entry `{entry}` (valid choices: \
+                     {})",
+                    valid.join(", ")
+                ));
+            }
+            out.push(entry.to_string());
+        }
+        Ok(out)
+    }
+
+    /// Reject anything the caller did not declare: unknown `--opt
+    /// value` pairs, unknown `--flag`s, and stray positional arguments
+    /// all error with the valid set, in the same style as the
+    /// `--dataset` error. A declared flag that accidentally captured a
+    /// value (`--quick foo`) gets its own message.
+    pub fn reject_unknown(&self, opts: &[&str], flags: &[&str])
+        -> Result<()> {
+        for (k, v) in &self.opts {
+            if opts.contains(&k.as_str()) {
+                continue;
+            }
+            if flags.contains(&k.as_str()) {
+                return Err(anyhow!(
+                    "flag `--{k}` takes no value (got `{v}`)"
+                ));
+            }
+            return Err(anyhow!(
+                "unknown option `--{k}` (valid options: --{})",
+                opts.join(", --")
+            ));
+        }
+        for f in &self.flags {
+            if flags.contains(&f.as_str()) {
+                continue;
+            }
+            if opts.contains(&f.as_str()) {
+                return Err(anyhow!(
+                    "option `--{f}` needs a value"
+                ));
+            }
+            return Err(anyhow!(
+                "unknown flag or argument `{f}` (valid flags: --{})",
+                flags.join(", --")
+            ));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -84,5 +165,72 @@ mod tests {
     fn empty_is_help() {
         let a = parse(&[]);
         assert_eq!(a.cmd, "help");
+    }
+
+    #[test]
+    fn choice_validates_against_the_set() {
+        let a = parse(&["suite", "--emit", "json"]);
+        assert_eq!(
+            a.choice("emit", &["md", "json", "csv"]).unwrap(),
+            Some("json".into())
+        );
+        assert_eq!(a.choice("backend", &["native"]).unwrap(), None);
+        let e = parse(&["suite", "--emit", "yaml"])
+            .choice("emit", &["md", "json", "csv"])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("yaml"), "{e}");
+        assert!(e.contains("md, json, csv"), "{e}");
+    }
+
+    #[test]
+    fn choice_list_splits_and_validates() {
+        let a = parse(&["suite", "--emit", "json,csv"]);
+        assert_eq!(
+            a.choice_list("emit", &["md", "json", "csv"]).unwrap(),
+            vec!["json".to_string(), "csv".to_string()]
+        );
+        assert!(parse(&["suite"])
+            .choice_list("emit", &["md"])
+            .unwrap()
+            .is_empty());
+        let e = parse(&["suite", "--emit", "json,tsv"])
+            .choice_list("emit", &["md", "json", "csv"])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("tsv"), "{e}");
+    }
+
+    #[test]
+    fn reject_unknown_names_the_valid_set() {
+        let a = parse(&["fig8", "--dataset", "cifar_syn", "--quick"]);
+        a.reject_unknown(&["dataset"], &["quick"]).unwrap();
+
+        let e = parse(&["fig8", "--emitt", "json"])
+            .reject_unknown(&["emit"], &[])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("emitt"), "{e}");
+        assert!(e.contains("--emit"), "{e}");
+
+        let e = parse(&["fig8", "bogus"])
+            .reject_unknown(&[], &["quick"])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("bogus"), "{e}");
+
+        // a flag that swallowed a positional is called out as such
+        let e = parse(&["suite", "--quick", "fig8"])
+            .reject_unknown(&["dataset"], &["quick"])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("takes no value"), "{e}");
+
+        // an option used bare is called out as needing a value
+        let e = parse(&["suite", "--dataset"])
+            .reject_unknown(&["dataset"], &["quick"])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("needs a value"), "{e}");
     }
 }

@@ -1,0 +1,37 @@
+//! Tiny content-addressing hash (FNV-1a; no std `Hasher` because its
+//! output is not guaranteed stable across Rust versions, and these
+//! hashes name files on disk — DESIGN.md §7/§10).
+//!
+//! Shared by the session's spec cache keys and the plan engine's suite
+//! manifests, so a spec hashes identically whichever layer asks.
+
+/// 64-bit FNV-1a over raw bytes.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The canonical 16-hex-digit rendering used for cache keys and
+/// manifest spec hashes.
+pub fn hex16(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_known_vector() {
+        // FNV-1a test vector: empty input is the offset basis
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        // and the rendering is fixed-width lowercase hex
+        assert_eq!(hex16(b"").len(), 16);
+        assert_eq!(hex16(b"a"), hex16(b"a"));
+        assert_ne!(hex16(b"a"), hex16(b"b"));
+    }
+}

@@ -100,10 +100,8 @@ impl Json {
                 if !n.is_finite() {
                     // JSON has no NaN/inf; emit null (readers map to NaN)
                     out.push_str("null");
-                } else if n.fract() == 0.0 && n.abs() < 1e15 {
-                    let _ = write!(out, "{}", *n as i64);
                 } else {
-                    let _ = write!(out, "{n}");
+                    out.push_str(&fmt_num(*n));
                 }
             }
             Json::Str(s) => {
@@ -147,6 +145,19 @@ impl Json {
             }
         }
     }
+}
+
+/// Canonical finite-number rendering shared by the JSON writer and
+/// the plan reporter's CSV cells: integral values print without a
+/// fraction so the two artifact formats always agree.
+pub fn fmt_num(n: f64) -> String {
+    let mut out = String::new();
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+    out
 }
 
 /// Convenience constructors for report writing.

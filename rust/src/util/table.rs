@@ -19,6 +19,46 @@ impl Table {
         self
     }
 
+    /// Column headers, for structured (JSON/CSV) re-rendering by the
+    /// plan reporter.
+    pub fn headers(&self) -> &[String] {
+        &self.headers
+    }
+
+    /// Data rows in insertion order.
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// RFC-4180-style CSV: header row then data rows; cells containing
+    /// a comma, quote or newline are quoted with `""` escapes.
+    pub fn to_csv(&self) -> String {
+        let esc = |cell: &str| -> String {
+            if cell.contains(',')
+                || cell.contains('"')
+                || cell.contains('\n')
+            {
+                format!("\"{}\"", cell.replace('"', "\"\""))
+            } else {
+                cell.to_string()
+            }
+        };
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .map(|c| esc(c))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut widths: Vec<usize> =
@@ -107,5 +147,18 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_only_when_needed() {
+        let mut t = Table::new(&["name", "note"]);
+        t.row(vec!["plain".into(), "a,b".into()]);
+        t.row(vec!["q\"q".into(), "fine".into()]);
+        assert_eq!(
+            t.to_csv(),
+            "name,note\nplain,\"a,b\"\n\"q\"\"q\",fine\n"
+        );
+        assert_eq!(t.headers(), &["name".to_string(), "note".into()]);
+        assert_eq!(t.rows().len(), 2);
     }
 }

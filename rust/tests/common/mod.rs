@@ -1,0 +1,51 @@
+//! Shared scaffolding for the offline integration tests (not a test
+//! target itself — `tests/*/` directories are skipped by cargo).
+
+#![allow(dead_code)] // each test crate uses a subset
+
+use capmin::capmin::Fmac;
+use capmin::data::synth::Dataset;
+use capmin::session::DesignSession;
+
+/// Skip guard: on an `xla` build with real artifacts present, the
+/// session's `folded()` would train through the pipeline (slow, and
+/// covered by tests/integration.rs) — the offline tests exercise the
+/// no-XLA path only.
+pub fn artifacts_present() -> bool {
+    cfg!(feature = "xla")
+        && capmin::runtime::artifacts_dir()
+            .join("manifest.json")
+            .exists()
+}
+
+/// The standard synthetic F_MAC fixture: a narrow first-matmul
+/// histogram (grayscale conv, peak 5) and wide later ones (peak 16).
+pub fn synthetic_fmacs(n_matmuls: usize) -> (Vec<Fmac>, Fmac) {
+    let mut per = vec![];
+    let mut sum = Fmac::new();
+    for m in 0..n_matmuls {
+        let f = Fmac::gaussian(if m == 0 { 5 } else { 16 }, 2.0, 1e8);
+        sum.merge(&f);
+        per.push(f);
+    }
+    (per, sum)
+}
+
+/// Inject the fixture for `ds` with the matmul count of its real
+/// model, so evaluated queries (error model per matmul) line up.
+pub fn inject_fmacs(session: &DesignSession, ds: Dataset) {
+    let n_mat = capmin::backend::arch::model_meta(ds.spec().model)
+        .unwrap()
+        .n_matmuls();
+    let (per, sum) = synthetic_fmacs(n_mat);
+    session.put_fmac(ds, per, sum);
+}
+
+/// Per-process temp dir for a test tag.
+pub fn tmp_dir(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("capmin_{tag}_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}

@@ -1,0 +1,148 @@
+//! Golden-file tests for the unified reporter (DESIGN.md §10): the
+//! markdown/CSV/JSON renderings of two representative plans — table2
+//! (registry-driven) and fig8 (solver + eval driven, offline on
+//! injected F_MACs and the deterministic untrained fallback) — are
+//! pinned byte-for-byte under `tests/golden/`, so formatting refactors
+//! can't silently change artifacts.
+//!
+//! Bless protocol (this testbed has no network and goldens are
+//! machine-independent by the backend's bit-identical contract): a
+//! missing golden is written on first run, `UPDATE_GOLDEN=1` rewrites
+//! it deliberately, and any later drift fails with a diff pointer. On
+//! top of the byte comparison, every case asserts structure that must
+//! hold even on a blessing run, and fig8 renders twice from two fresh
+//! sessions to prove the bytes are reproducible at all.
+
+use std::fs;
+use std::path::PathBuf;
+
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::data::synth::Dataset;
+use capmin::experiments::fig8::Fig8Plan;
+use capmin::experiments::tables::Table2Plan;
+use capmin::plan::report::Emit;
+use capmin::plan::ExperimentPlan;
+use capmin::session::DesignSession;
+use capmin::util::json::Json;
+
+mod common;
+use common::{artifacts_present, inject_fmacs, tmp_dir};
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(name)
+}
+
+/// Compare against (or bless) `tests/golden/<name>`.
+fn check_golden(name: &str, content: &str) {
+    let path = golden_path(name);
+    let bless = std::env::var("UPDATE_GOLDEN").is_ok();
+    if bless || !path.exists() {
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(&path, content).unwrap();
+        eprintln!("blessed golden {name}");
+        return;
+    }
+    let want = fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        want, content,
+        "golden drift in {name}: rerun with UPDATE_GOLDEN=1 if the \
+         change is intentional"
+    );
+}
+
+#[test]
+fn table2_report_matches_golden() {
+    if artifacts_present() {
+        // the manifest-backed table differs per artifact build
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    let dir = tmp_dir("golden_table2");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = "native".into();
+    cfg.run_dir = dir.clone();
+    let session = DesignSession::builder().config(cfg).build().unwrap();
+    let rep = Table2Plan.reduce(&session, &[]).unwrap();
+
+    let md = rep.render(Emit::Md);
+    let json = rep.render(Emit::Json);
+    let csv = rep.render(Emit::Csv);
+    // structure first: holds even when blessing
+    assert!(md.contains("## Table II: BNN architectures"), "{md}");
+    assert!(md.contains("vgg3"), "{md}");
+    assert!(!md.contains("vgg3_tiny"), "test twin excluded: {md}");
+    let j = Json::parse(&json).unwrap();
+    assert_eq!(j.req("plan").as_str(), "table2");
+    assert!(csv.starts_with("# plan: table2\n"), "{csv}");
+
+    check_golden("table2.md", &md);
+    check_golden("table2.json", &json);
+    check_golden("table2.csv", &csv);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn fig8_session(dir: &str) -> DesignSession {
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = "native".into();
+    cfg.mc_samples = 50;
+    cfg.eval_limit = 8;
+    cfg.hist_limit = 8;
+    cfg.n_seeds = 1;
+    cfg.ks = vec![16, 14];
+    cfg.point_cache = false;
+    cfg.run_dir = dir.to_string();
+    let session = DesignSession::builder().config(cfg).build().unwrap();
+    inject_fmacs(&session, Dataset::FashionSyn);
+    session
+}
+
+fn fig8_render(dir: &str) -> (String, String, String) {
+    let session = fig8_session(dir);
+    let plan = Fig8Plan {
+        datasets: vec![Dataset::FashionSyn],
+    };
+    let specs = plan.specs(session.config());
+    let points = session.query_many(&specs).unwrap();
+    let rep = plan.reduce(&session, &points).unwrap();
+    (
+        rep.render(Emit::Md),
+        rep.render(Emit::Json),
+        rep.render(Emit::Csv),
+    )
+}
+
+#[test]
+fn fig8_report_matches_golden() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    let dir_a = tmp_dir("golden_fig8a");
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let (md, json, csv) = fig8_render(&dir_a);
+
+    // structure first
+    assert!(md.contains("### fashion_syn"), "{md}");
+    assert!(md.contains("CapMin-V +var"), "{md}");
+    let j = Json::parse(&json).unwrap();
+    assert_eq!(j.req("plan").as_str(), "fig8");
+    assert!(csv.contains("# series: fig8_fashion_syn"), "{csv}");
+
+    // reproducibility: a second fresh session renders the same bytes
+    // (this is what makes a byte-level golden meaningful at all)
+    let dir_b = tmp_dir("golden_fig8b");
+    let _ = std::fs::remove_dir_all(&dir_b);
+    let (md2, json2, csv2) = fig8_render(&dir_b);
+    assert_eq!(md, md2, "fig8 markdown must be deterministic");
+    assert_eq!(json, json2);
+    assert_eq!(csv, csv2);
+
+    check_golden("fig8.md", &md);
+    check_golden("fig8.json", &json);
+    check_golden("fig8.csv", &csv);
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}

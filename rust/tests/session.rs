@@ -3,21 +3,12 @@
 //! statistics never touch the PJRT runtime, so these run without
 //! `make artifacts`.
 
-use capmin::capmin::Fmac;
 use capmin::coordinator::config::ExperimentConfig;
 use capmin::data::synth::Dataset;
 use capmin::session::{DesignSession, OperatingPointSpec};
 
-fn synthetic_fmacs(n_matmuls: usize) -> (Vec<Fmac>, Fmac) {
-    let mut per = vec![];
-    let mut sum = Fmac::new();
-    for m in 0..n_matmuls {
-        let f = Fmac::gaussian(if m == 0 { 5 } else { 16 }, 2.0, 1e8);
-        sum.merge(&f);
-        per.push(f);
-    }
-    (per, sum)
-}
+mod common;
+use common::{artifacts_present, inject_fmacs, synthetic_fmacs};
 
 fn session_in(tag: &str) -> (DesignSession, String) {
     let dir = std::env::temp_dir()
@@ -137,14 +128,60 @@ fn query_many_dedupes_and_replays() {
     let s = session.stats();
     assert_eq!(s.queries, 3);
     assert_eq!(s.solves, 1, "duplicate specs share one solve");
+    assert_eq!(
+        s.deduped, 2,
+        "the two batch duplicates are fanned out, not re-solved"
+    );
     assert_eq!(*points[0], *points[1]);
     assert_eq!(*points[1], *points[2]);
 
-    // a second batch is all memory hits
+    // a second batch is all memory hits (no further dedup needed)
     session.query_many(&[spec, spec]).unwrap();
     let s = session.stats();
     assert_eq!(s.solves, 1);
     assert_eq!(s.mem_hits, 2);
+    assert_eq!(s.deduped, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn query_many_dedupes_eval_variants_onto_one_solve() {
+    // same hardware point under different eval settings: one MC solve,
+    // distinct full-key entries (eval runs on the native untrained
+    // fallback at smoke scale — accuracy values are irrelevant here).
+    // Skip when an xla build could reach real artifacts: folded()
+    // would train there (covered by tests/integration.rs).
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    let dir = std::env::temp_dir()
+        .join(format!(
+            "capmin_session_test_evalvariants_{}",
+            std::process::id()
+        ))
+        .to_str()
+        .unwrap()
+        .to_string();
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = "native".into();
+    cfg.mc_samples = 100;
+    cfg.eval_limit = 8;
+    cfg.run_dir = dir.clone();
+    let session = DesignSession::builder().config(cfg).build().unwrap();
+    inject_fmacs(&session, Dataset::FashionSyn);
+
+    let hw = OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 0);
+    let batch = [hw, hw.with_eval(1, 1), hw.with_eval(100, 1)];
+    let points = session.query_many(&batch).unwrap();
+    let s = session.stats();
+    assert_eq!(s.queries, 3);
+    assert_eq!(s.solves, 1, "eval variants share the hardware solve");
+    assert_eq!(s.deduped, 0, "distinct full keys are not duplicates");
+    assert_eq!(s.evals, 2, "only the eval-carrying specs evaluate");
+    assert_eq!(points[0].c, points[1].c);
+    assert_eq!(points[1].c, points[2].c);
     let _ = std::fs::remove_dir_all(&dir);
 }
 

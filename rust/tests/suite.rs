@@ -1,0 +1,259 @@
+//! Plan-engine integration tests (offline, native backend): the
+//! acceptance gates of DESIGN.md §10 —
+//!  * `suite` over all experiments issues each unique
+//!    `OperatingPointSpec` to the solver at most once per run
+//!    (asserted through `SessionStats`), and
+//!  * a rerun resumes from `runs/suite/<id>/manifest.json` without
+//!    re-solving completed plans.
+
+use std::collections::HashSet;
+
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::data::synth::Dataset;
+use capmin::plan;
+use capmin::plan::planner::{Planner, SuiteOptions};
+use capmin::session::DesignSession;
+
+mod common;
+use common::{artifacts_present, inject_fmacs, tmp_dir};
+
+fn tiny_cfg(dir: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = "native".into();
+    cfg.mc_samples = 60;
+    cfg.eval_limit = 8;
+    cfg.hist_limit = 8;
+    cfg.n_seeds = 1;
+    // 32 anchors headline's choose_k; 14/16 anchor fig9 and CapMin-V
+    cfg.ks = vec![32, 16, 14, 10];
+    cfg.run_dir = dir.to_string();
+    cfg
+}
+
+fn fresh_session(cfg: ExperimentConfig) -> DesignSession {
+    let session = DesignSession::builder().config(cfg).build().unwrap();
+    inject_fmacs(&session, Dataset::FashionSyn);
+    session
+}
+
+#[test]
+fn suite_issues_each_unique_spec_at_most_once() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    let dir = tmp_dir("suite_dedup");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = tiny_cfg(&dir);
+    let datasets = [Dataset::FashionSyn];
+
+    // expected counts straight from the declared grids
+    let plans = plan::all_plans(&datasets);
+    let mut declared = 0usize;
+    let mut uniq: HashSet<String> = HashSet::new();
+    let mut uniq_hw: HashSet<String> = HashSet::new();
+    for p in &plans {
+        for s in p.specs(&cfg) {
+            declared += 1;
+            uniq.insert(s.cache_key(&cfg));
+            uniq_hw.insert(s.hw_cache_key(&cfg));
+        }
+    }
+    assert!(
+        declared > uniq.len(),
+        "suite grids must overlap (fig8 and headline share theirs)"
+    );
+
+    let session = fresh_session(cfg);
+    let mut planner = Planner::new(&session);
+    for p in plan::all_plans(&datasets) {
+        planner.add(p);
+    }
+    let outcome = planner.run_suite(&SuiteOptions::default()).unwrap();
+    assert_eq!(outcome.completed.len(), plan::PLAN_NAMES.len());
+    assert!(outcome.restored.is_empty());
+
+    let s = session.stats();
+    assert_eq!(
+        s.queries as usize,
+        uniq.len(),
+        "the planner queries exactly the deduplicated union"
+    );
+    assert_eq!(
+        s.solves as usize,
+        uniq_hw.len(),
+        "each unique hardware point solves exactly once per run"
+    );
+    assert_eq!(
+        s.deduped, 0,
+        "cross-plan dedup happens before the batch reaches the session"
+    );
+
+    // manifest + markdown artifacts landed under runs/suite/<id>/
+    assert!(outcome.dir.join("manifest.json").exists());
+    for name in plan::PLAN_NAMES {
+        assert!(
+            outcome.dir.join(format!("{name}.md")).exists(),
+            "missing {name}.md"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn suite_resumes_from_manifest_without_resolving() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    let dir = tmp_dir("suite_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    let sid = Some("resume-test".to_string());
+    let ds = [Dataset::FashionSyn];
+
+    // run 1: two plans (hardware-only grids) complete and checkpoint
+    {
+        let session = fresh_session(tiny_cfg(&dir));
+        let mut planner = Planner::new(&session);
+        planner.add(plan::build("table2", &ds).unwrap());
+        planner.add(plan::build("fig9", &ds).unwrap());
+        let outcome = planner
+            .run_suite(&SuiteOptions {
+                suite_id: sid.clone(),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(outcome.completed, vec!["table2", "fig9"]);
+        assert!(outcome.restored.is_empty());
+        assert!(session.stats().solves > 0);
+    }
+
+    // run 2 (a "rerun after kill", plus one new plan): the completed
+    // plans are restored from the manifest — their specs never reach
+    // the solver — and only the new plan runs
+    {
+        let session = fresh_session(tiny_cfg(&dir));
+        let mut planner = Planner::new(&session);
+        planner.add(plan::build("table2", &ds).unwrap());
+        planner.add(plan::build("fig9", &ds).unwrap());
+        planner.add(plan::build("fig5", &ds).unwrap());
+        let outcome = planner
+            .run_suite(&SuiteOptions {
+                suite_id: sid.clone(),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(outcome.restored, vec!["table2", "fig9"]);
+        assert_eq!(outcome.completed, vec!["fig5"]);
+        let s = session.stats();
+        assert_eq!(
+            (s.queries, s.solves),
+            (0, 0),
+            "restored plans are skipped entirely (fig5 declares an \
+             empty grid)"
+        );
+    }
+
+    // run 2b: same pinned suite id, different dataset selection —
+    // fig5 declares an empty grid but is dataset-scoped, so the
+    // fashion_syn completion must NOT be restored for cifar_syn
+    {
+        let session = fresh_session(tiny_cfg(&dir));
+        inject_fmacs(&session, Dataset::CifarSyn);
+        let mut planner = Planner::new(&session);
+        planner
+            .add(plan::build("fig5", &[Dataset::CifarSyn]).unwrap());
+        let outcome = planner
+            .run_suite(&SuiteOptions {
+                suite_id: sid.clone(),
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(
+            outcome.restored.is_empty(),
+            "a different --dataset selection must not restore fig5"
+        );
+        assert_eq!(outcome.completed, vec!["fig5"]);
+    }
+
+    // run 3: --no-resume re-runs every plan, but the operating-point
+    // cache still answers — resume saves the queries, the cache saves
+    // the solves
+    {
+        let session = fresh_session(tiny_cfg(&dir));
+        let mut planner = Planner::new(&session);
+        planner.add(plan::build("fig9", &ds).unwrap());
+        let outcome = planner
+            .run_suite(&SuiteOptions {
+                suite_id: sid.clone(),
+                resume: false,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(outcome.completed, vec!["fig9"]);
+        let s = session.stats();
+        assert_eq!(s.queries, 2, "fig9 declares two specs");
+        assert_eq!(s.solves, 0, "both replay from runs/points/");
+        assert_eq!(s.disk_hits, 2);
+    }
+
+    // run 4: a config drift (different MC scale) invalidates the
+    // manifest wholesale — nothing is restored
+    {
+        let mut cfg = tiny_cfg(&dir);
+        cfg.mc_samples = 61;
+        let session = fresh_session(cfg);
+        let mut planner = Planner::new(&session);
+        planner.add(plan::build("fig9", &ds).unwrap());
+        let outcome = planner
+            .run_suite(&SuiteOptions {
+                suite_id: sid.clone(),
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(outcome.restored.is_empty());
+        assert_eq!(outcome.completed, vec!["fig9"]);
+        assert_eq!(
+            session.stats().solves,
+            2,
+            "changed config keys miss the point cache and re-solve"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn suite_emits_requested_artifacts() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    let dir = tmp_dir("suite_emit");
+    let _ = std::fs::remove_dir_all(&dir);
+    let session = fresh_session(tiny_cfg(&dir));
+    let mut planner = Planner::new(&session);
+    planner.add(plan::build("table1", &[Dataset::FashionSyn]).unwrap());
+    let outcome = planner
+        .run_suite(&SuiteOptions {
+            emit: vec![
+                capmin::plan::report::Emit::Json,
+                capmin::plan::report::Emit::Csv,
+            ],
+            suite_id: Some("emit-test".into()),
+            ..Default::default()
+        })
+        .unwrap();
+    for ext in ["md", "json", "csv"] {
+        assert!(
+            outcome.dir.join(format!("table1.{ext}")).exists(),
+            "missing table1.{ext}"
+        );
+    }
+    // the JSON artifact parses and is typed
+    let text = std::fs::read_to_string(outcome.dir.join("table1.json"))
+        .unwrap();
+    let j = capmin::util::json::Json::parse(&text).unwrap();
+    assert_eq!(j.req("plan").as_str(), "table1");
+    assert!(!j.req("sections").as_arr().is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
