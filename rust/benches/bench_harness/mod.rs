@@ -4,8 +4,22 @@
 //! throughput. Wall-clock on a single core; variance on this testbed is
 //! low, so the simple estimator is adequate for before/after comparisons
 //! (EXPERIMENTS.md §Perf).
+//!
+//! Every bench binary also records its results through [`Emitter`],
+//! which writes one uniform `BENCH_<name>.json` next to the Cargo
+//! manifest — records of `(name, iters, median_ns,
+//! speedup_vs_baseline, git_sha)` — so the perf trajectory is
+//! machine-comparable across PRs and CI uploads the files as
+//! artifacts. `BENCH_FAST=1` shrinks iteration counts for CI smoke
+//! runs ([`scaled`]).
+
+// included per bench binary via #[path]; not every binary uses every
+// helper
+#![allow(dead_code)]
 
 use std::time::Instant;
+
+use capmin::util::json::{obj, Json};
 
 pub struct BenchResult {
     pub name: String,
@@ -13,6 +27,12 @@ pub struct BenchResult {
     pub mean_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        self.p50_s * 1e9
+    }
 }
 
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
@@ -52,4 +72,102 @@ pub fn report(r: &BenchResult, unit_per_iter: f64, unit: &str) {
 
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// CI smoke mode: `BENCH_FAST=1` shrinks iteration counts so every
+/// bench still runs end-to-end (and still emits its JSON) in seconds.
+pub fn fast_mode() -> bool {
+    std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Iteration count scaled for the mode: full `iters` normally, a
+/// quarter (min 2) under `BENCH_FAST=1`.
+pub fn scaled(iters: usize) -> usize {
+    if fast_mode() {
+        (iters / 4).max(2)
+    } else {
+        iters
+    }
+}
+
+/// Short git commit of the working tree ("unknown" outside a checkout
+/// — records stay comparable either way).
+pub fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Uniform `BENCH_<name>.json` writer: every bench binary funnels its
+/// results through one schema so the perf trajectory is diffable.
+pub struct Emitter {
+    bench: String,
+    sha: String,
+    records: Vec<Json>,
+}
+
+impl Emitter {
+    pub fn new(bench: &str) -> Emitter {
+        Emitter {
+            bench: bench.to_string(),
+            sha: git_sha(),
+            records: vec![],
+        }
+    }
+
+    /// Record a timed result; `baseline` (when given) yields
+    /// `speedup_vs_baseline = baseline_median / this_median`.
+    pub fn add(&mut self, r: &BenchResult, baseline: Option<&BenchResult>) {
+        let speedup = baseline.map(|b| b.p50_s / r.p50_s);
+        self.push(&r.name, r.iters, r.median_ns(), speedup);
+    }
+
+    /// Record a raw measurement (one-shot wall times that don't go
+    /// through [`bench`], e.g. whole-suite runs).
+    pub fn push(
+        &mut self,
+        name: &str,
+        iters: usize,
+        median_ns: f64,
+        speedup_vs_baseline: Option<f64>,
+    ) {
+        self.records.push(obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("iters", Json::Num(iters as f64)),
+            ("median_ns", Json::Num(median_ns)),
+            (
+                "speedup_vs_baseline",
+                match speedup_vs_baseline {
+                    Some(s) => Json::Num(s),
+                    None => Json::Null,
+                },
+            ),
+            ("git_sha", Json::Str(self.sha.clone())),
+        ]));
+    }
+
+    /// Write `BENCH_<bench>.json` into the working directory (the
+    /// crate root under `cargo bench`).
+    pub fn write(&self) {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let json = obj(vec![
+            ("bench", Json::Str(self.bench.clone())),
+            ("git_sha", Json::Str(self.sha.clone())),
+            ("threads", Json::Num(threads as f64)),
+            ("fast_mode", Json::Bool(fast_mode())),
+            ("results", Json::Arr(self.records.clone())),
+        ]);
+        let path = format!("BENCH_{}.json", self.bench);
+        std::fs::write(&path, json.to_string())
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path} ({} records)", self.records.len());
+    }
 }

@@ -5,7 +5,7 @@
 #[path = "bench_harness/mod.rs"]
 mod bench_harness;
 
-use bench_harness::{bench, header, report};
+use bench_harness::{bench, header, report, scaled, Emitter};
 use capmin::bnn::{BitMatrix, ErrorModel, SubMacEngine};
 use capmin::util::rng::Rng;
 
@@ -15,6 +15,7 @@ fn rand_pm(rng: &mut Rng, n: usize) -> Vec<f32> {
 
 fn main() {
     let mut rng = Rng::new(42);
+    let mut emit = Emitter::new("engine");
     // vgg3 conv2-like shape: O=32, K=288->288 (9 groups), D = 14*14*16
     let (o, k, d) = (32usize, 288usize, 3136usize);
     let w = rand_pm(&mut rng, o * k);
@@ -24,7 +25,7 @@ fn main() {
     header("sub-MAC engine (O=32, K=288, D=3136; 2.9 GMAC/iter)");
 
     // naive dense baseline
-    let r = bench("dense f32 matmul (naive)", 1, 5, || {
+    let dense = bench("dense f32 matmul (naive)", 1, scaled(5), || {
         let mut acc = 0.0f32;
         for oi in 0..o {
             for di in 0..d {
@@ -37,39 +38,44 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
-    report(&r, macs, "MAC");
+    report(&dense, macs, "MAC");
+    emit.add(&dense, None);
 
     let eng = SubMacEngine::new(o, k, &w, k);
     let xb = BitMatrix::pack(d, k, &x, false);
-    let r = bench("bit-packed XNOR-popcount (exact)", 1, 10, || {
+    let r = bench("bit-packed XNOR-popcount (exact)", 1, scaled(10), || {
         std::hint::black_box(eng.matmul_exact(&xb));
     });
     report(&r, macs, "MAC");
+    emit.add(&r, Some(&dense));
 
     let em = ErrorModel::identity();
-    let r = bench("bit-packed + error injection", 1, 5, || {
+    let r = bench("bit-packed + error injection", 1, scaled(5), || {
         std::hint::black_box(eng.matmul_error(&xb, &em, 7, 0));
     });
     report(&r, macs, "MAC");
+    emit.add(&r, None);
 
-    let r = bench("F_MAC histogram extraction", 1, 10, || {
+    let r = bench("F_MAC histogram extraction", 1, scaled(10), || {
         std::hint::black_box(eng.histogram(&xb));
     });
     report(&r, macs, "MAC");
+    emit.add(&r, None);
 
     header("CDF decode (33-entry row): linear scan vs binary search");
     let mut us: Vec<(usize, f32)> = (0..1_000_000)
         .map(|_| (rng.below(33) as usize, rng.f32()))
         .collect();
-    let r = bench("decode_linear (before)", 1, 10, || {
+    let lin = bench("decode_linear (before)", 1, scaled(10), || {
         let mut acc = 0.0f32;
         for &(l, u) in &us {
             acc += em.decode_linear(l, u);
         }
         std::hint::black_box(acc);
     });
-    report(&r, us.len() as f64, "decode");
-    let r = bench("decode partition_point (after)", 1, 10, || {
+    report(&lin, us.len() as f64, "decode");
+    emit.add(&lin, None);
+    let r = bench("decode partition_point (after)", 1, scaled(10), || {
         let mut acc = 0.0f32;
         for &(l, u) in &us {
             acc += em.decode(l, u);
@@ -77,11 +83,15 @@ fn main() {
         std::hint::black_box(acc);
     });
     report(&r, us.len() as f64, "decode");
+    emit.add(&r, Some(&lin));
     us.clear();
 
     header("bit packing");
-    let r = bench("pack activations (D=3136, K=288)", 1, 20, || {
+    let r = bench("pack activations (D=3136, K=288)", 1, scaled(20), || {
         std::hint::black_box(BitMatrix::pack(d, k, &x, false));
     });
     report(&r, (d * k) as f64, "elem");
+    emit.add(&r, None);
+
+    emit.write();
 }

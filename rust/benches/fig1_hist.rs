@@ -8,7 +8,7 @@
 mod bench_harness;
 
 #[cfg(feature = "xla")]
-use bench_harness::{bench, header, report};
+use bench_harness::{bench, header, report, scaled, Emitter};
 #[cfg(feature = "xla")]
 use capmin::bnn::{BitMatrix, SubMacEngine};
 #[cfg(feature = "xla")]
@@ -42,12 +42,14 @@ fn main() {
     let model = "vgg3_tiny";
     let mi = rt.manifest.model(model).clone();
     let spec = Dataset::FashionSyn.spec();
+    let mut emit = Emitter::new("fig1_hist");
 
     header("data generator");
-    let r = bench("synthesize 28x28 sample", 100, 2000, || {
+    let r = bench("synthesize 28x28 sample", 100, scaled(2000), || {
         std::hint::black_box(spec.sample(Split::Train, 123));
     });
     report(&r, 1.0, "sample");
+    emit.add(&r, None);
 
     // fresh (untrained) weights suffice for throughput numbers
     let init = rt.load(model, "init").unwrap();
@@ -73,12 +75,14 @@ fn main() {
         1,
     );
     let hb = mi.hist_batch;
-    let r = bench("F_MAC extraction per batch (AOT path)", 1, 10, || {
+    let aot = bench("F_MAC extraction per batch (AOT path)", 1,
+                    scaled(10), || {
         std::hint::black_box(
             hist.extract(model, &folded, &mut loader, hb).unwrap(),
         );
     });
-    report(&r, hb as f64, "sample");
+    report(&aot, hb as f64, "sample");
+    emit.add(&aot, None);
 
     header("rust native engine histogram (same sub-MAC count)");
     // conv1-equivalent workload: O=8, K=32, D = 28*28*hb
@@ -89,8 +93,11 @@ fn main() {
     let x: Vec<f32> = (0..d * k).map(|_| rng.pm1(0.5)).collect();
     let eng = SubMacEngine::new(o, k, &w, 9);
     let xb = BitMatrix::pack(d, k, &x, false);
-    let r = bench("conv1-shaped histogram (native)", 1, 10, || {
+    let r = bench("conv1-shaped histogram (native)", 1, scaled(10), || {
         std::hint::black_box(eng.histogram(&xb));
     });
     report(&r, hb as f64, "sample");
+    emit.add(&r, Some(&aot));
+
+    emit.write();
 }

@@ -8,7 +8,7 @@
 #[path = "bench_harness/mod.rs"]
 mod bench_harness;
 
-use bench_harness::{bench, header, report};
+use bench_harness::{bench, header, report, scaled, Emitter};
 use capmin::analog::params::AnalogParams;
 #[cfg(feature = "xla")]
 use capmin::bnn::ErrorModel;
@@ -43,21 +43,39 @@ fn main() {
     let p = AnalogParams::paper_calibrated();
     let fmacs = synthetic_fmacs(3);
     let (seed, mc) = (42u64, 1000usize);
+    let mut emit = Emitter::new("fig8_sweep");
 
     header("operating-point solve (per k point of Fig. 8)");
-    let r = bench("CapMin solve (clean)", 2, 50, || {
+    let r = bench("CapMin solve (clean)", 2, scaled(50), || {
         std::hint::black_box(solve(p, seed, mc, 1, &fmacs, 14, 0.0, 0));
     });
     report(&r, 1.0, "solve");
-    let r = bench("CapMin solve (variation MC)", 2, 20, || {
+    emit.add(&r, None);
+    let var1 = bench("CapMin solve (variation MC, 1 thread)", 2,
+                     scaled(20), || {
         std::hint::black_box(solve(p, seed, mc, 1, &fmacs, 14, 0.02, 0));
     });
-    report(&r, 1.0, "solve");
-    let r = bench("CapMin-V solve (phi=2)", 2, 20, || {
+    report(&var1, 1.0, "solve");
+    emit.add(&var1, None);
+    let varp = bench("CapMin solve (variation MC, chunked pool)", 2,
+                     scaled(20), || {
+        std::hint::black_box(solve(p, seed, mc, 0, &fmacs, 14, 0.02, 0));
+    });
+    report(&varp, 1.0, "solve");
+    emit.add(&varp, Some(&var1));
+    let r = bench("CapMin-V solve (phi=2)", 2, scaled(20), || {
         std::hint::black_box(solve(p, seed, mc, 1, &fmacs, 16, 0.02, 2));
     });
     report(&r, 1.0, "solve");
+    emit.add(&r, None);
+    let r = bench("CapMin-V solve (phi=2, chunked pool)", 2, scaled(20),
+                  || {
+        std::hint::black_box(solve(p, seed, mc, 0, &fmacs, 16, 0.02, 2));
+    });
+    report(&r, 1.0, "solve");
+    emit.add(&r, None);
 
+    emit.write();
     eval_section();
 }
 

@@ -5,7 +5,7 @@
 #[path = "bench_harness/mod.rs"]
 mod bench_harness;
 
-use bench_harness::{bench, header, report};
+use bench_harness::{bench, header, report, scaled, Emitter};
 use capmin::analog::capacitor::{
     paper_fit, CapacitorModel, CapacitorSolver,
 };
@@ -17,10 +17,11 @@ use capmin::util::rng::Rng;
 fn main() {
     let p = AnalogParams::paper_calibrated().with_sigma(0.02);
     let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+    let mut emit = Emitter::new("fig9_capacitor");
 
     header("capacitor sizing (Fig. 9 substrate)");
-    let r = bench("closed-form sizing, full k-sweep (28 pts)", 10, 100,
-                  || {
+    let r = bench("closed-form sizing, full k-sweep (28 pts)", 10,
+                  scaled(100), || {
         for k in 5..=32 {
             std::hint::black_box(
                 solver.size_for_window(17 - k.min(16) / 2, 16 + k / 2),
@@ -28,28 +29,50 @@ fn main() {
         }
     });
     report(&r, 28.0, "sizing");
+    emit.add(&r, None);
 
-    let r = bench("binary-search sizing, window [10,23]", 2, 20, || {
+    let r = bench("binary-search sizing, window [10,23]", 2, scaled(20),
+                  || {
         std::hint::black_box(
             solver.solve_binary_search(&(10..=23).collect::<Vec<_>>()),
         );
     });
     report(&r, 1.0, "sizing");
+    emit.add(&r, None);
 
     header("Monte-Carlo P_map (1000 samples/level, paper Sec. IV-C)");
     let c = solver.size_for_window(10, 23);
     let set = SpikeTimeSet::new(&p, c, (10..=23).collect());
-    let mc = MonteCarlo::new(p);
+    let seq = MonteCarlo::new(p);
     let mut rng = Rng::new(7);
-    let r = bench("14x14 P_map extraction", 2, 20, || {
+    let pm_seq = bench("14x14 P_map extraction (1 thread)", 2,
+                       scaled(20), || {
+        std::hint::black_box(seq.pmap(&set, &mut rng));
+    });
+    report(&pm_seq, 14.0 * 1000.0, "sample");
+    emit.add(&pm_seq, None);
+
+    let mc = MonteCarlo::new(p).with_threads(0);
+    let pm_par = bench("14x14 P_map extraction (chunked pool)", 2,
+                       scaled(20), || {
         std::hint::black_box(mc.pmap(&set, &mut rng));
     });
-    report(&r, 14.0 * 1000.0, "sample");
+    report(&pm_par, 14.0 * 1000.0, "sample");
+    emit.add(&pm_par, Some(&pm_seq));
 
-    let r = bench("full 33x33 transition map", 2, 20, || {
+    let fm_seq = bench("full 33x33 transition map (1 thread)", 2,
+                       scaled(20), || {
+        std::hint::black_box(seq.full_map(&set, &mut rng));
+    });
+    report(&fm_seq, 33.0 * 1000.0, "sample");
+    emit.add(&fm_seq, None);
+
+    let fm_par = bench("full 33x33 transition map (chunked pool)", 2,
+                       scaled(20), || {
         std::hint::black_box(mc.full_map(&set, &mut rng));
     });
-    report(&r, 33.0 * 1000.0, "sample");
+    report(&fm_par, 33.0 * 1000.0, "sample");
+    emit.add(&fm_par, Some(&fm_seq));
 
     // Fig. 9 numbers (physics + paper-fit), so `cargo bench` regenerates
     // the table's substance even without trained models
@@ -75,4 +98,6 @@ fn main() {
         paper_fit(32) / paper_fit(14),
         paper_fit(16) / paper_fit(14)
     );
+
+    emit.write();
 }

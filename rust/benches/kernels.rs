@@ -1,0 +1,273 @@
+//! Bench: the width-dispatched popcount sub-MAC microkernels
+//! (DESIGN.md §11) — the perf-trajectory headline for the native
+//! backend. Measures, on the fig8-sized engine (the vgg3 conv2 shape
+//! the accuracy sweeps hammer: O=32, K=288, D=3136):
+//!
+//! * the naive scalar `SubMacEngine::matmul_exact` baseline vs the
+//!   u64 word-popcount kernel at the scalar and detected SIMD tiers
+//!   (single thread — the acceptance gate is >= 4x for the SIMD
+//!   tier) and on the full pool;
+//! * fused matmul+histogram vs the separate two-pass data flow;
+//! * the error-model matmul across tiers;
+//! * F_MAC extraction end-to-end on the no-XLA cifar_syn smoke
+//!   (NativeBackend, untrained vgg7): the pre-rework configuration
+//!   (scalar tier, separate histogram) vs the shipped one (SIMD tier,
+//!   fused) — the >= 2x end-to-end gate.
+//!
+//! Fully offline; `BENCH_FAST=1` shrinks iteration counts. Results
+//! land in `BENCH_kernels.json` (uniform schema, see bench_harness).
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, header, report, scaled, Emitter};
+use capmin::backend::kernels::{self, KernelKind};
+use capmin::backend::native::{init_folded, NativeBackend};
+use capmin::backend::InferenceBackend;
+use capmin::bnn::{BitMatrix, ErrorModel, SubMacEngine};
+use capmin::data::synth::Dataset;
+use capmin::util::pool::ScopedPool;
+use capmin::util::rng::Rng;
+
+fn rand_pm(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.pm1(0.5)).collect()
+}
+
+fn speedup_line(base: &bench_harness::BenchResult,
+                fast: &bench_harness::BenchResult, what: &str) {
+    println!(
+        "    -> {:.2}x speedup over {what}",
+        base.p50_s / fast.p50_s
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let mut emit = Emitter::new("kernels");
+    let simd = KernelKind::detect();
+    let pool = ScopedPool::new(0);
+    let seq = ScopedPool::sequential();
+    println!(
+        "detected kernel tier: {} | {} worker threads",
+        simd.name(),
+        pool.threads()
+    );
+
+    // fig8-sized engine: vgg3 conv2 — O=32, K=288 (9 groups), D=14*14*16
+    let (o, k, d) = (32usize, 288usize, 3136usize);
+    let w = rand_pm(&mut rng, o * k);
+    let x = rand_pm(&mut rng, d * k);
+    let macs = (o * k * d) as f64;
+    let eng = SubMacEngine::new(o, k, &w, k);
+    let xb = BitMatrix::pack(d, k, &x, false);
+
+    header("exact matmul (fig8-sized engine: O=32, K=288, D=3136)");
+    let naive = bench(
+        "exact scalar-engine baseline",
+        1,
+        scaled(10),
+        || {
+            std::hint::black_box(eng.matmul_exact(&xb));
+        },
+    );
+    report(&naive, macs, "MAC");
+    emit.add(&naive, None);
+
+    let word_scalar = bench(
+        "exact word-popcount scalar (1 thread)",
+        1,
+        scaled(10),
+        || {
+            std::hint::black_box(kernels::matmul_exact(
+                &seq,
+                &eng,
+                &xb,
+                KernelKind::Scalar,
+            ));
+        },
+    );
+    report(&word_scalar, macs, "MAC");
+    speedup_line(&naive, &word_scalar, "scalar engine");
+    emit.add(&word_scalar, Some(&naive));
+
+    let word_simd = bench(
+        "exact word-popcount simd (1 thread)",
+        1,
+        scaled(10),
+        || {
+            std::hint::black_box(kernels::matmul_exact(
+                &seq, &eng, &xb, simd,
+            ));
+        },
+    );
+    report(&word_simd, macs, "MAC");
+    speedup_line(&naive, &word_simd, "scalar engine");
+    emit.add(&word_simd, Some(&naive));
+
+    let word_pool = bench(
+        "exact word-popcount simd (pool)",
+        1,
+        scaled(10),
+        || {
+            std::hint::black_box(kernels::matmul_exact(
+                &pool, &eng, &xb, simd,
+            ));
+        },
+    );
+    report(&word_pool, macs, "MAC");
+    speedup_line(&naive, &word_pool, "scalar engine");
+    emit.add(&word_pool, Some(&naive));
+
+    header("fused F_MAC histogram (same engine)");
+    let separate = bench(
+        "separate matmul+hist (simd, 1 thread)",
+        1,
+        scaled(10),
+        || {
+            std::hint::black_box(kernels::histogram(
+                &seq, &eng, &xb, simd,
+            ));
+            std::hint::black_box(kernels::matmul_exact(
+                &seq, &eng, &xb, simd,
+            ));
+        },
+    );
+    report(&separate, macs, "MAC");
+    emit.add(&separate, None);
+    let fused = bench(
+        "fused matmul+hist (simd, 1 thread)",
+        1,
+        scaled(10),
+        || {
+            std::hint::black_box(kernels::matmul_exact_fused(
+                &seq, &eng, &xb, simd,
+            ));
+        },
+    );
+    report(&fused, macs, "MAC");
+    speedup_line(&separate, &fused, "separate passes");
+    emit.add(&fused, Some(&separate));
+
+    header("error-model matmul (same engine, stochastic decode)");
+    let em = {
+        // band-stochastic model so the decode path is non-trivial
+        let mut full = vec![vec![0.0f64; 33]; 33];
+        for (m, row) in full.iter_mut().enumerate() {
+            for dlt in -1i64..=1 {
+                let j = (m as i64 + dlt).clamp(0, 32) as usize;
+                row[j] += 1.0 / 3.0;
+            }
+        }
+        ErrorModel::from_full(&full)
+    };
+    let naive_e = bench(
+        "error scalar-engine baseline",
+        1,
+        scaled(5),
+        || {
+            std::hint::black_box(eng.matmul_error(&xb, &em, 7, 0));
+        },
+    );
+    report(&naive_e, macs, "MAC");
+    emit.add(&naive_e, None);
+    let err_simd = bench(
+        "error word-kernel simd (1 thread)",
+        1,
+        scaled(5),
+        || {
+            std::hint::black_box(kernels::matmul_error(
+                &seq, &eng, &xb, &em, 7, 0, simd,
+            ));
+        },
+    );
+    report(&err_simd, macs, "MAC");
+    speedup_line(&naive_e, &err_simd, "scalar engine");
+    emit.add(&err_simd, Some(&naive_e));
+    let err_pool = bench(
+        "error word-kernel simd (pool)",
+        1,
+        scaled(5),
+        || {
+            std::hint::black_box(kernels::matmul_error(
+                &pool, &eng, &xb, &em, 7, 0, simd,
+            ));
+        },
+    );
+    report(&err_pool, macs, "MAC");
+    speedup_line(&naive_e, &err_pool, "scalar engine");
+    emit.add(&err_pool, Some(&naive_e));
+
+    header("F_MAC end-to-end (no-XLA cifar_syn smoke, untrained vgg7)");
+    let spec = Dataset::CifarSyn.spec();
+    let folded = init_folded(spec.model).unwrap();
+    let limit = if bench_harness::fast_mode() { 8 } else { 16 };
+    let before =
+        NativeBackend::with_options(0, KernelKind::Scalar, false);
+    let fmac_before = bench(
+        "fmac end-to-end baseline (scalar, separate)",
+        1,
+        scaled(3),
+        || {
+            std::hint::black_box(
+                before
+                    .fmac(spec.model, &folded, spec.clone(), limit, 9)
+                    .unwrap(),
+            );
+        },
+    );
+    report(&fmac_before, limit as f64, "sample");
+    emit.add(&fmac_before, None);
+    let after = NativeBackend::with_options(0, simd, true);
+    let fmac_after = bench(
+        "fmac end-to-end (simd, fused)",
+        1,
+        scaled(3),
+        || {
+            std::hint::black_box(
+                after
+                    .fmac(spec.model, &folded, spec.clone(), limit, 9)
+                    .unwrap(),
+            );
+        },
+    );
+    report(&fmac_after, limit as f64, "sample");
+    speedup_line(&fmac_before, &fmac_after, "pre-rework fmac");
+    emit.add(&fmac_after, Some(&fmac_before));
+
+    // cross-check while we're here: the two configurations must agree
+    let a = before
+        .fmac(spec.model, &folded, spec.clone(), limit, 9)
+        .unwrap();
+    let b = after
+        .fmac(spec.model, &folded, spec.clone(), limit, 9)
+        .unwrap();
+    assert_eq!(a.per_matmul, b.per_matmul, "fused/unfused F_MAC drift");
+    assert_eq!(a.accuracy, b.accuracy, "fused/unfused accuracy drift");
+
+    // trajectory gates (DESIGN.md §11) — reported, not asserted:
+    // fast-mode/loaded-machine medians are too noisy to hard-fail on
+    header("trajectory gates");
+    let gate = |name: &str, got: f64, want: f64| {
+        println!(
+            "  {} {name}: {got:.2}x (gate {want}x)",
+            if got >= want { "PASS" } else { "MISS" }
+        );
+    };
+    gate(
+        "exact simd 1-thread vs scalar engine",
+        naive.p50_s / word_simd.p50_s,
+        4.0,
+    );
+    gate(
+        "fused vs separate matmul+hist",
+        separate.p50_s / fused.p50_s,
+        1.0,
+    );
+    gate(
+        "fmac end-to-end (simd fused vs scalar separate)",
+        fmac_before.p50_s / fmac_after.p50_s,
+        2.0,
+    );
+
+    emit.write();
+}

@@ -1,17 +1,18 @@
-//! Bench: the native backend's matmul kernels — the naive scalar
-//! `SubMacEngine` loops vs the cache-blocked tiles vs the thread-pooled
-//! tiles (DESIGN.md §9) — plus a whole-model logits pass. Runs fully
-//! offline (no artifacts, no xla feature); the recorded speedups are
-//! the perf-trajectory evidence for the native inference path
-//! (EXPERIMENTS.md §Perf).
+//! Bench: the native backend's matmul layers — the naive scalar
+//! `SubMacEngine` loops vs the word-popcount kernels (scalar tier vs
+//! detected SIMD tier vs thread pool, DESIGN.md §11) — plus a
+//! whole-model logits pass. Runs fully offline (no artifacts, no xla
+//! feature); results land in `BENCH_native_matmul.json` (kernel-level
+//! detail lives in benches/kernels.rs, the trajectory headline).
 
 #[path = "bench_harness/mod.rs"]
 mod bench_harness;
 
-use bench_harness::{bench, header, report, BenchResult};
+use bench_harness::{bench, header, report, scaled, BenchResult, Emitter};
 use capmin::backend::arch::model_meta;
+use capmin::backend::kernels::{self, KernelKind};
 use capmin::backend::native::{init_folded, NativeBackend};
-use capmin::backend::{kernels, InferenceBackend};
+use capmin::backend::InferenceBackend;
 use capmin::bnn::{BitMatrix, ErrorModel, SubMacEngine};
 use capmin::util::pool::ScopedPool;
 use capmin::util::rng::Rng;
@@ -23,14 +24,21 @@ fn rand_pm(rng: &mut Rng, n: usize) -> Vec<f32> {
 fn speedup(base: &BenchResult, fast: &BenchResult, what: &str) {
     println!(
         "    -> {:.2}x speedup over {what}",
-        base.mean_s / fast.mean_s
+        base.p50_s / fast.p50_s
     );
 }
 
 fn main() {
     let mut rng = Rng::new(42);
+    let mut emit = Emitter::new("native_matmul");
     let pool = ScopedPool::new(0);
-    println!("worker threads: {}", pool.threads());
+    let seq = ScopedPool::sequential();
+    let simd = KernelKind::detect();
+    println!(
+        "worker threads: {} | kernel tier: {}",
+        pool.threads(),
+        simd.name()
+    );
 
     // vgg3 conv2-like shape: O=32, K=288 (9 groups), D = 14*14*16
     let (o, k, d) = (32usize, 288usize, 3136usize);
@@ -41,20 +49,25 @@ fn main() {
     let xb = BitMatrix::pack(d, k, &x, false);
 
     header("exact matmul (O=32, K=288, D=3136)");
-    let naive = bench("scalar loop (naive baseline)", 1, 10, || {
+    let naive = bench("scalar loop (naive baseline)", 1, scaled(10), || {
         std::hint::black_box(eng.matmul_exact(&xb));
     });
     report(&naive, macs, "MAC");
-    let tiled = bench("tiled (cache-blocked)", 1, 10, || {
-        std::hint::black_box(kernels::matmul_exact_tiled(&eng, &xb));
+    emit.add(&naive, None);
+    let word = bench("word-popcount (1 thread)", 1, scaled(10), || {
+        std::hint::black_box(kernels::matmul_exact(&seq, &eng, &xb, simd));
     });
-    report(&tiled, macs, "MAC");
-    speedup(&naive, &tiled, "naive");
-    let threaded = bench("tiled + thread pool", 1, 10, || {
-        std::hint::black_box(kernels::matmul_exact(&pool, &eng, &xb));
+    report(&word, macs, "MAC");
+    speedup(&naive, &word, "naive");
+    emit.add(&word, Some(&naive));
+    let threaded = bench("word-popcount + thread pool", 1, scaled(10), || {
+        std::hint::black_box(kernels::matmul_exact(
+            &pool, &eng, &xb, simd,
+        ));
     });
     report(&threaded, macs, "MAC");
     speedup(&naive, &threaded, "naive");
+    emit.add(&threaded, Some(&naive));
 
     header("error-model matmul (same shape, stochastic decode)");
     let em = {
@@ -68,35 +81,45 @@ fn main() {
         }
         ErrorModel::from_full(&full)
     };
-    let naive_e = bench("scalar loop (naive baseline)", 1, 5, || {
-        std::hint::black_box(eng.matmul_error(&xb, &em, 7, 0));
-    });
+    let naive_e =
+        bench("error scalar loop (naive baseline)", 1, scaled(5), || {
+            std::hint::black_box(eng.matmul_error(&xb, &em, 7, 0));
+        });
     report(&naive_e, macs, "MAC");
-    let tiled_e = bench("tiled (cache-blocked)", 1, 5, || {
-        std::hint::black_box(kernels::matmul_error_tiled(
-            &eng, &xb, &em, 7, 0,
-        ));
-    });
-    report(&tiled_e, macs, "MAC");
-    speedup(&naive_e, &tiled_e, "naive");
-    let threaded_e = bench("tiled + thread pool", 1, 5, || {
+    emit.add(&naive_e, None);
+    let word_e = bench("error word kernel (1 thread)", 1, scaled(5), || {
         std::hint::black_box(kernels::matmul_error(
-            &pool, &eng, &xb, &em, 7, 0,
+            &seq, &eng, &xb, &em, 7, 0, simd,
         ));
     });
+    report(&word_e, macs, "MAC");
+    speedup(&naive_e, &word_e, "naive");
+    emit.add(&word_e, Some(&naive_e));
+    let threaded_e =
+        bench("error word kernel + thread pool", 1, scaled(5), || {
+            std::hint::black_box(kernels::matmul_error(
+                &pool, &eng, &xb, &em, 7, 0, simd,
+            ));
+        });
     report(&threaded_e, macs, "MAC");
     speedup(&naive_e, &threaded_e, "naive");
+    emit.add(&threaded_e, Some(&naive_e));
 
     header("F_MAC histogram");
-    let naive_h = bench("scalar loop", 1, 10, || {
+    let naive_h = bench("hist scalar loop", 1, scaled(10), || {
         std::hint::black_box(eng.histogram(&xb));
     });
     report(&naive_h, macs, "MAC");
-    let pooled_h = bench("thread pool", 1, 10, || {
-        std::hint::black_box(kernels::histogram(&pool, &eng, &xb));
-    });
+    emit.add(&naive_h, None);
+    let pooled_h =
+        bench("hist word kernel + thread pool", 1, scaled(10), || {
+            std::hint::black_box(kernels::histogram(
+                &pool, &eng, &xb, simd,
+            ));
+        });
     report(&pooled_h, macs, "MAC");
     speedup(&naive_h, &pooled_h, "scalar");
+    emit.add(&pooled_h, Some(&naive_h));
 
     header("whole-model logits (vgg3, eval batch, native backend)");
     let meta = model_meta("vgg3").unwrap();
@@ -107,18 +130,22 @@ fn main() {
     let xs = rand_pm(&mut rng, eb * px);
     let ems: Vec<ErrorModel> =
         (0..meta.n_matmuls()).map(|_| ErrorModel::identity()).collect();
-    let r = bench("forward pass (error mode)", 1, 5, || {
+    let r = bench("forward pass (error mode)", 1, scaled(5), || {
         std::hint::black_box(
             be.logits("vgg3", &folded, &xs, eb, &ems, 7).unwrap(),
         );
     });
     report(&r, eb as f64, "sample");
+    emit.add(&r, None);
     let be1 = NativeBackend::new(1);
-    let r1 = bench("forward pass (1 thread)", 1, 5, || {
+    let r1 = bench("forward pass (1 thread)", 1, scaled(5), || {
         std::hint::black_box(
             be1.logits("vgg3", &folded, &xs, eb, &ems, 7).unwrap(),
         );
     });
     report(&r1, eb as f64, "sample");
     speedup(&r1, &r, "single thread");
+    emit.add(&r1, None);
+
+    emit.write();
 }

@@ -2,19 +2,23 @@
 //! vs the thread-parallel `query_many` over a fig8-shaped k-sweep, and
 //! warm-cache replay from memory and from `runs/points/`; plus a
 //! hardware-only mini-suite through the plan engine. Runs entirely
-//! offline (no artifacts needed) and writes a `BENCH_suite.json`
-//! summary next to the Cargo manifest so the perf trajectory is
-//! comparable across PRs.
+//! offline (no artifacts needed) and writes a
+//! `BENCH_session_query.json` summary (uniform bench_harness schema)
+//! next to the Cargo manifest so the perf trajectory is comparable
+//! across PRs.
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
 
 use std::time::Instant;
 
+use bench_harness::Emitter;
 use capmin::capmin::Fmac;
 use capmin::coordinator::config::ExperimentConfig;
 use capmin::data::synth::Dataset;
 use capmin::plan;
 use capmin::plan::planner::{Planner, SuiteOptions};
 use capmin::session::{DesignSession, OperatingPointSpec};
-use capmin::util::json::{obj, Json};
 
 // Same fixture as tests/common/mod.rs (bench targets can't share the
 // tests/ module tree); the matmul count is arbitrary here because
@@ -150,34 +154,44 @@ fn main() {
     );
     cleanup(&suite);
 
-    // perf-trajectory summary for CI (rust/BENCH_suite.json)
-    let ms = |d: std::time::Duration| Json::Num(d.as_secs_f64() * 1e3);
-    let summary = obj(vec![
-        ("bench", Json::Str("session_query".into())),
-        ("specs", Json::Num(specs.len() as f64)),
-        (
-            "threads",
-            Json::Num(
-                std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(1) as f64,
-            ),
+    // perf-trajectory summary for CI (rust/BENCH_session_query.json):
+    // one-shot wall times recorded through the shared harness schema
+    let ns = |d: std::time::Duration| d.as_secs_f64() * 1e9;
+    let mut emit = Emitter::new("session_query");
+    emit.push(
+        &format!("sequential query loop ({} specs)", specs.len()),
+        1,
+        ns(t_seq),
+        None,
+    );
+    emit.push(
+        "query_many (parallel)",
+        1,
+        ns(t_par),
+        Some(t_seq.as_secs_f64() / t_par.as_secs_f64().max(1e-9)),
+    );
+    emit.push(
+        "replay (memory cache)",
+        1,
+        ns(t_mem),
+        Some(t_seq.as_secs_f64() / t_mem.as_secs_f64().max(1e-9)),
+    );
+    emit.push(
+        "replay (disk cache)",
+        1,
+        ns(t_disk),
+        Some(t_seq.as_secs_f64() / t_disk.as_secs_f64().max(1e-9)),
+    );
+    emit.push(
+        &format!(
+            "mini-suite ({} plans, {} queries, {} solves)",
+            outcome.completed.len(),
+            ss.queries,
+            ss.solves
         ),
-        ("sequential_ms", ms(t_seq)),
-        ("query_many_ms", ms(t_par)),
-        (
-            "speedup",
-            Json::Num(
-                t_seq.as_secs_f64() / t_par.as_secs_f64().max(1e-9),
-            ),
-        ),
-        ("replay_memory_ms", ms(t_mem)),
-        ("replay_disk_ms", ms(t_disk)),
-        ("suite_ms", ms(t_suite)),
-        ("suite_plans", Json::Num(outcome.completed.len() as f64)),
-        ("suite_queries", Json::Num(ss.queries as f64)),
-        ("suite_solves", Json::Num(ss.solves as f64)),
-    ]);
-    std::fs::write("BENCH_suite.json", summary.to_string()).unwrap();
-    println!("wrote BENCH_suite.json");
+        1,
+        ns(t_suite),
+        None,
+    );
+    emit.write();
 }

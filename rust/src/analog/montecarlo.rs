@@ -15,11 +15,21 @@ use crate::capmin::N_LEVELS;
 use crate::util::pool::ScopedPool;
 use crate::util::rng::Rng;
 
+/// Samples per independently-seeded draw chunk: the unit of work the
+/// level sweep fans out over. Each (level, chunk) pair draws from its
+/// own deterministic `rng.split` sub-stream, so the fan-out geometry
+/// depends only on `n_samples` — never on the thread count — and the
+/// default 1000-sample sweep exposes `4 x k` work items instead of
+/// `k`, enough to saturate the pool even for narrow windows (the
+/// CapMin-V phi sweep's common case).
+pub const MC_CHUNK: usize = 250;
+
 pub struct MonteCarlo {
     pub params: AnalogParams,
     pub n_samples: usize,
-    /// Level-sweep fan-out (sequential by default). Every level draws
-    /// from its own `rng.split` stream, so any thread count produces
+    /// Level-sweep fan-out (sequential by default). Work items are
+    /// (level, chunk-of-[`MC_CHUNK`]-draws) pairs on decorrelated
+    /// `rng.split` sub-streams, so any thread count produces
     /// bit-identical maps.
     pool: ScopedPool,
 }
@@ -38,8 +48,10 @@ impl MonteCarlo {
         self
     }
 
-    /// Fan the per-level sampling loops of `pmap`/`full_map` out over
-    /// `threads` workers (0 = all cores).
+    /// Fan the chunked sampling loops of `pmap`/`full_map` out over
+    /// `threads` workers (0 = all cores). The work grid is
+    /// (levels x sample chunks), so even narrow windows keep every
+    /// worker busy; results are bit-identical at any setting.
     pub fn with_threads(mut self, threads: usize) -> MonteCarlo {
         self.pool = if threads == 1 {
             ScopedPool::sequential()
@@ -70,13 +82,27 @@ impl MonteCarlo {
         set.decode(t)
     }
 
+    /// The (chunk index -> sample range) schedule: fixed-size
+    /// [`MC_CHUNK`] spans, so it is a pure function of `n_samples`.
+    fn chunks(&self) -> usize {
+        self.n_samples.div_ceil(MC_CHUNK).max(1)
+    }
+
+    /// Sample counts of chunk `c`.
+    fn chunk_span(&self, c: usize) -> usize {
+        let lo = c * MC_CHUNK;
+        let hi = ((c + 1) * MC_CHUNK).min(self.n_samples);
+        hi.saturating_sub(lo)
+    }
+
     /// k x k P_map over the represented levels (paper Eq. 6).
     ///
-    /// Each level samples an independent `rng.split` child stream (the
-    /// parent state is never advanced), so fanning the level loop over
-    /// the pool is bit-identical to the sequential sweep. Decoded
-    /// levels map to row slots through a precomputed level->index
-    /// table instead of an O(k) scan per sample.
+    /// Each (level, chunk) work item samples an independent
+    /// `rng.split(level).split(chunk)` stream (the parent state is
+    /// never advanced), so fanning the chunked loop over the pool is
+    /// bit-identical to the sequential sweep at any thread count.
+    /// Decoded levels map to row slots through a precomputed
+    /// level->index table instead of an O(k) scan per sample.
     pub fn pmap(&self, set: &SpikeTimeSet, rng: &mut Rng) -> Pmap {
         let k = set.levels.len();
         let mut index_of = [usize::MAX; N_LEVELS];
@@ -84,16 +110,26 @@ impl MonteCarlo {
             index_of[l] = i;
         }
         let parent: &Rng = rng;
-        let counts: Vec<Vec<u64>> = self.pool.map(k, |i| {
+        let nc = self.chunks();
+        let parts: Vec<Vec<u64>> = self.pool.map(k * nc, |j| {
+            let (i, chunk) = (j / nc, j % nc);
             let m = set.levels[i];
             let mut row = vec![0u64; k];
-            let mut r = parent.split(m as u64 + 1);
-            for _ in 0..self.n_samples {
+            let mut r = parent.split(m as u64 + 1).split(chunk as u64);
+            for _ in 0..self.chunk_span(chunk) {
                 let d = self.sample_decode(set, m, &mut r);
                 row[index_of[d]] += 1;
             }
             row
         });
+        // merge chunk partials per level, in chunk order (exact: u64)
+        let mut counts = vec![vec![0u64; k]; k];
+        for (j, part) in parts.iter().enumerate() {
+            let row = &mut counts[j / nc];
+            for (a, b) in row.iter_mut().zip(part.iter()) {
+                *a += b;
+            }
+        }
         let p = counts
             .iter()
             .map(|row| {
@@ -111,19 +147,36 @@ impl MonteCarlo {
     /// Full 33x33 level-transition matrix: every physical level 0..=32 is
     /// read out through `set` (clipping of out-of-window levels and
     /// variation effects in one matrix — the runtime input of the eval
-    /// engines). Level rows fan out over the pool like `pmap`.
+    /// engines). (Level, chunk) items fan out over the pool like
+    /// `pmap`; counts merge exactly before one normalization.
     pub fn full_map(&self, set: &SpikeTimeSet, rng: &mut Rng)
         -> Vec<Vec<f64>> {
         let parent: &Rng = rng;
-        self.pool.map(N_LEVELS, |m| {
-            let mut row = vec![0.0; N_LEVELS];
-            let mut r = parent.split(1000 + m as u64);
-            for _ in 0..self.n_samples {
-                let d = self.sample_decode(set, m, &mut r);
-                row[d] += 1.0 / self.n_samples as f64;
+        let nc = self.chunks();
+        let parts: Vec<Vec<u64>> = self.pool.map(N_LEVELS * nc, |j| {
+            let (m, chunk) = (j / nc, j % nc);
+            let mut row = vec![0u64; N_LEVELS];
+            let mut r = parent.split(1000 + m as u64).split(chunk as u64);
+            for _ in 0..self.chunk_span(chunk) {
+                row[self.sample_decode(set, m, &mut r)] += 1;
             }
             row
-        })
+        });
+        let mut counts = vec![vec![0u64; N_LEVELS]; N_LEVELS];
+        for (j, part) in parts.iter().enumerate() {
+            let row = &mut counts[j / nc];
+            for (a, b) in row.iter_mut().zip(part.iter()) {
+                *a += b;
+            }
+        }
+        counts
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|&c| c as f64 / self.n_samples as f64)
+                    .collect()
+            })
+            .collect()
     }
 
     /// Deterministic (sigma = 0) full map: pure CapMin clipping.
@@ -228,6 +281,23 @@ mod tests {
                     full[mi][mj]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn ragged_sample_counts_cover_every_draw() {
+        // n_samples not a multiple of MC_CHUNK: the tail chunk is
+        // short, rows still sum to exactly n/n = 1
+        let (mc, set) = setup(0.03, (10, 23));
+        let mc = mc.with_samples(333);
+        let pm = mc.pmap(&set, &mut Rng::new(5));
+        for s in pm.row_sums() {
+            assert!((s - 1.0).abs() < 1e-12, "{s}");
+        }
+        let full = mc.full_map(&set, &mut Rng::new(6));
+        for row in &full {
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "{s}");
         }
     }
 

@@ -1,188 +1,510 @@
-//! Tiled, cache-blocked sub-MAC matmul kernels over the bit-packed
-//! operands, fanned out over the shared [`ScopedPool`].
+//! Width-dispatched popcount sub-MAC microkernels (DESIGN.md §11).
 //!
 //! Semantics are *identical* to the scalar [`SubMacEngine`] loops (and
 //! therefore to the AOT kernels): every output element is
 //! `2 * sum_g decode(level_g, u(o,g,d)) - beta` with the counter-based
-//! PRNG indexed by the logical `(o*G + g)*D + d` position — independent
-//! per element, so both the d-blocked tiling and the o-block threading
-//! are bit-exact at any tile size or thread count (pinned by
-//! `tests/backend.rs`).
+//! PRNG indexed by the logical `(o*G + g)*D + d` position. All math on
+//! the hot path is integer (XOR + popcount over the packed u64 words,
+//! pad and phantom bits vanish by the non-conducting convention), so
+//! every kernel tier, tile size and thread count is bit-exact —
+//! pinned by the in-file tests and `tests/backend.rs`.
 //!
-//! Tiling (idiom from the rten/gemm microkernels referenced in
-//! SNIPPETS.md, scaled to bit-packed operands): the inner loops walk a
-//! block of `TILE_D` activation rows for each weight row, so the packed
-//! x-rows of a block stay resident in L1 across the whole o-sweep
-//! instead of streaming the full x matrix once per output row.
+//! Three layers, modeled on the runtime-dispatch architecture of the
+//! `gemm` crates referenced in SNIPPETS.md:
+//!
+//! * **Tier dispatch** ([`KernelKind`]): one generic, `inline(always)`
+//!   kernel body instantiated per CPU tier — `scalar` (portable),
+//!   `avx2` (x86_64, runtime-detected AVX2 + hardware POPCNT; long
+//!   rows additionally run a vpshufb nibble-LUT popcount), `neon`
+//!   (aarch64, `cnt`-lowered popcounts under the neon target
+//!   feature). `--kernel scalar|auto` selects; the resolved tier is
+//!   recorded in point-cache meta.
+//! * **Blocking** ([`work_blocks`]): the (o x d) output grid splits
+//!   into contiguous, non-empty rectangles — o-blocks while `o >=
+//!   workers`, per-row d-splits otherwise, so small-o matmuls (early
+//!   convs) no longer idle most of the pool. Within a block, d-tiles
+//!   of [`TILE_D`] x-rows stay resident in L1 across the o-sweep.
+//! * **Fusion** ([`matmul_exact_fused_into`]): the clean F_MAC pass
+//!   computes outputs *and* per-group level histograms in one walk
+//!   over the operands instead of two.
 
-use crate::bnn::bitpack::{group_level, BitMatrix};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::bnn::bitpack::BitMatrix;
 use crate::bnn::hashrng::hash01;
 use crate::bnn::{ErrorModel, SubMacEngine};
 use crate::capmin::N_LEVELS;
 use crate::util::pool::ScopedPool;
 
-/// Activation rows held hot per tile: 128 rows x <=49 words = <=25 KiB,
-/// inside L1/L2 on every testbed core.
+/// Activation rows held hot per tile: 128 rows of packed words is a
+/// few tens of KiB for every registry shape — inside L2 and usually
+/// L1 on the testbed cores.
 pub const TILE_D: usize = 128;
 
-/// Exact +-1 matmul, cache-blocked (single thread). Bit-identical to
-/// [`SubMacEngine::matmul_exact`].
-pub fn matmul_exact_tiled(eng: &SubMacEngine, x: &BitMatrix) -> Vec<f32> {
-    let (o, d) = (eng.w.rows, x.rows);
-    let mut out = vec![0.0f32; o * d];
-    exact_block(eng, x, 0, o, &mut out);
+/// A resolved kernel tier. `Scalar` is the portable fallback; the SIMD
+/// tiers are only ever constructed when the running CPU supports them
+/// (runtime detection), so executing them is safe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable u64 XOR+popcount (compiler-lowered `count_ones`).
+    Scalar,
+    /// x86_64 AVX2 + hardware POPCNT (runtime-detected).
+    Avx2,
+    /// aarch64 NEON `cnt`-lowered popcounts (runtime-detected).
+    Neon,
+}
+
+impl KernelKind {
+    /// CLI values `--kernel` accepts. `auto` resolves per machine;
+    /// naming a SIMD tier explicitly errors unless detected.
+    pub const CHOICES: &'static [&'static str] =
+        &["auto", "scalar", "avx2", "neon"];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
+        }
+    }
+
+    /// The best tier the running CPU supports.
+    pub fn detect() -> KernelKind {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("popcnt")
+            {
+                return KernelKind::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return KernelKind::Neon;
+            }
+        }
+        KernelKind::Scalar
+    }
+
+    /// Resolve a `--kernel` request against the running CPU. `auto`
+    /// picks the detected tier; `scalar` forces the portable kernel
+    /// (cold-path measurements, bit-equality cross-checks); an
+    /// explicit SIMD name is accepted only when the CPU has it.
+    pub fn resolve(requested: &str) -> Result<KernelKind> {
+        match requested {
+            "auto" => Ok(KernelKind::detect()),
+            "scalar" => Ok(KernelKind::Scalar),
+            "avx2" | "neon" => {
+                let detected = KernelKind::detect();
+                if detected.name() == requested {
+                    Ok(detected)
+                } else {
+                    Err(anyhow!(
+                        "--kernel {requested} is not supported on this \
+                         CPU (detected tier: {}); use --kernel auto or \
+                         scalar",
+                        detected.name()
+                    ))
+                }
+            }
+            other => Err(anyhow!(
+                "bad --kernel `{other}`: expected one of auto, scalar, \
+                 avx2, neon"
+            )),
+        }
+    }
+}
+
+/// One rectangular work item of the row-major (o x d) output grid:
+/// rows `o0..o1`, columns `d0..d1`. [`work_blocks`] only emits shapes
+/// whose output elements are contiguous in the row-major buffer
+/// (full-width o-blocks, or single-row d-spans).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Block {
+    pub o0: usize,
+    pub o1: usize,
+    pub d0: usize,
+    pub d1: usize,
+}
+
+impl Block {
+    pub fn len(&self) -> usize {
+        (self.o1 - self.o0) * (self.d1 - self.d0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Split `start..end` into `n <= end - start` contiguous, non-empty
+/// ranges.
+fn ranges(start: usize, end: usize, n: usize) -> Vec<(usize, usize)> {
+    let len = end - start;
+    let n = n.min(len).max(1);
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut at = start;
+    for i in 0..n {
+        let step = base + usize::from(i < extra);
+        out.push((at, at + step));
+        at += step;
+    }
     out
 }
 
-/// Exact +-1 matmul, tiled and fanned over `pool` in contiguous
-/// o-blocks. Bit-identical to the scalar loop at any thread count.
+/// Contiguous, non-empty work blocks covering the (o x d) grid in
+/// row-major memory order. While `o >= workers` the split is by output
+/// rows (one concat-free slice per worker); when `o < workers` —
+/// early convs have o as low as 8 while d is in the thousands — each
+/// row additionally splits its d-span so no pool worker idles. Every
+/// block is non-empty; the list holds at most `workers` items in the
+/// o-split arm and at most `o * ceil(workers/o)` (< workers + o) in
+/// the d-split arm — extra blocks just queue on the pool.
+pub fn work_blocks(o: usize, d: usize, workers: usize) -> Vec<Block> {
+    if o == 0 || d == 0 {
+        return vec![];
+    }
+    let w = workers.max(1);
+    let mut blocks = vec![];
+    if w <= o {
+        for (o0, o1) in ranges(0, o, w) {
+            blocks.push(Block { o0, o1, d0: 0, d1: d });
+        }
+    } else {
+        let per_row = w.div_ceil(o).min(d).max(1);
+        for oi in 0..o {
+            for (d0, d1) in ranges(0, d, per_row) {
+                blocks.push(Block { o0: oi, o1: oi + 1, d0, d1 });
+            }
+        }
+    }
+    blocks
+}
+
+/// Split a row-major [o x d] output buffer into one contiguous slice
+/// per block (blocks tile the buffer in memory order).
+fn split_out<'a>(
+    out: &'a mut [f32],
+    blocks: &[Block],
+) -> Vec<&'a mut [f32]> {
+    let mut slices = Vec::with_capacity(blocks.len());
+    let mut rest: &mut [f32] = out;
+    for b in blocks {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(b.len());
+        slices.push(head);
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty());
+    slices
+}
+
+/// Run `f(block, block_out)` over every block, fanned over the pool,
+/// returning the per-block results in block order. Blocks are
+/// disjoint, so any schedule writes each element exactly once —
+/// bit-identical at every thread count.
+fn run_blocks<R, F>(
+    pool: &ScopedPool,
+    blocks: &[Block],
+    out: &mut [f32],
+    f: F,
+) -> Vec<R>
+where
+    R: Send,
+    F: Fn(&Block, &mut [f32]) -> R + Sync,
+{
+    if blocks.len() <= 1 || pool.threads() == 1 {
+        return blocks
+            .iter()
+            .zip(split_out(out, blocks))
+            .map(|(b, s)| f(b, s))
+            .collect();
+    }
+    let slices: Vec<Mutex<&mut [f32]>> = split_out(out, blocks)
+        .into_iter()
+        .map(Mutex::new)
+        .collect();
+    pool.map(blocks.len(), |i| {
+        let mut s = slices[i].lock().unwrap();
+        f(&blocks[i], &mut **s)
+    })
+}
+
+// ---------------------------------------------------------------- exact
+
+/// The one exact tiling loop, parameterized by the row-dot primitive:
+/// u64-word XOR+popcount accumulation, d-tiled so a tile of packed
+/// x-rows stays L1-resident across the o-sweep. Instantiated per tier
+/// (the `target_feature` wrappers below) so the popcounts lower to
+/// the best instruction the tier has — the blocking logic itself
+/// exists exactly once.
+#[inline(always)]
+fn exact_block_with<D: Fn(&[u64], &[u64]) -> u32>(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    b: &Block,
+    out: &mut [f32],
+    dot: D,
+) {
+    let bw = b.d1 - b.d0;
+    let beta = eng.beta as i64;
+    for t0 in (b.d0..b.d1).step_by(TILE_D) {
+        let t1 = (t0 + TILE_D).min(b.d1);
+        for oi in b.o0..b.o1 {
+            let wr = eng.w.row64(oi);
+            let row = &mut out[(oi - b.o0) * bw..(oi - b.o0 + 1) * bw];
+            for di in t0..t1 {
+                let sum = dot(wr, x.row64(di));
+                row[di - b.d0] = (2 * sum as i64 - beta) as f32;
+            }
+        }
+    }
+}
+
+/// Portable row dot: one XOR+NOT+popcount per u64 storage word.
+#[inline(always)]
+fn xnor_popcount_words(w: &[u64], x: &[u64]) -> u32 {
+    let mut sum = 0u32;
+    for (a, c) in w.iter().zip(x.iter()) {
+        sum += (!(a ^ c)).count_ones();
+    }
+    sum
+}
+
+#[inline(always)]
+fn exact_block_body(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    b: &Block,
+    out: &mut [f32],
+) {
+    exact_block_with(eng, x, b, out, xnor_popcount_words);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,popcnt")]
+unsafe fn exact_block_avx2(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    b: &Block,
+    out: &mut [f32],
+) {
+    // rows of >= 8 u64 words (K >= 512) amortize the vpshufb LUT
+    // popcount; shorter rows run the popcnt-instruction loop that
+    // `count_ones` lowers to under this target_feature
+    if x.words64_per_row >= 8 {
+        exact_block_with(eng, x, b, out, |w, xr| {
+            // safety: same target features as the enclosing fn
+            unsafe { xnor_popcount_avx2(w, xr) }
+        });
+    } else {
+        exact_block_body(eng, x, b, out);
+    }
+}
+
+/// Mula's AVX2 nibble-LUT popcount over `!(w ^ x)`, 4 u64 words per
+/// step, `_mm256_sad_epu8` folding byte counts into 4 u64 lanes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,popcnt")]
+unsafe fn xnor_popcount_avx2(w: &[u64], x: &[u64]) -> u32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(w.len(), x.len());
+    let n = w.len();
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1,
+        2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let ones = _mm256_set1_epi8(-1);
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let a = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+        let c = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+        // XNOR: !(a ^ c) == (a ^ c) ^ ~0
+        let v = _mm256_xor_si256(_mm256_xor_si256(a, c), ones);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi =
+            _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+        let cnt = _mm256_add_epi8(
+            _mm256_shuffle_epi8(lut, lo),
+            _mm256_shuffle_epi8(lut, hi),
+        );
+        acc = _mm256_add_epi64(
+            acc,
+            _mm256_sad_epu8(cnt, _mm256_setzero_si256()),
+        );
+        i += 4;
+    }
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut sum =
+        (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32;
+    while i < n {
+        sum += (!(w[i] ^ x[i])).count_ones();
+        i += 1;
+    }
+    sum
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn exact_block_neon(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    b: &Block,
+    out: &mut [f32],
+) {
+    // under the neon target feature `count_ones` lowers to cnt + addv
+    exact_block_body(eng, x, b, out);
+}
+
+fn exact_block(
+    kind: KernelKind,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    b: &Block,
+    out: &mut [f32],
+) {
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        // safety: Avx2 is only constructed after runtime detection
+        KernelKind::Avx2 => unsafe { exact_block_avx2(eng, x, b, out) },
+        #[cfg(target_arch = "aarch64")]
+        // safety: Neon is only constructed after runtime detection
+        KernelKind::Neon => unsafe { exact_block_neon(eng, x, b, out) },
+        _ => exact_block_body(eng, x, b, out),
+    }
+}
+
+/// Exact +-1 matmul into a caller-provided [o x d] buffer (the native
+/// backend's scratch arena) — no steady-state allocation.
+pub fn matmul_exact_into(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    kind: KernelKind,
+    out: &mut [f32],
+) {
+    let (o, d) = (eng.w.rows, x.rows);
+    assert_eq!(x.words_per_row, eng.n_groups());
+    assert_eq!(out.len(), o * d);
+    let blocks = work_blocks(o, d, pool.threads());
+    run_blocks(pool, &blocks, out, |b, s| exact_block(kind, eng, x, b, s));
+}
+
+/// Exact +-1 matmul: out [o x d] row-major. Bit-identical to
+/// [`SubMacEngine::matmul_exact`] at every tier and thread count.
 pub fn matmul_exact(
     pool: &ScopedPool,
     eng: &SubMacEngine,
     x: &BitMatrix,
+    kind: KernelKind,
 ) -> Vec<f32> {
-    let (o, d) = (eng.w.rows, x.rows);
-    let blocks = o_blocks(o, pool.threads());
-    if blocks.len() <= 1 {
-        return matmul_exact_tiled(eng, x);
-    }
-    let parts = pool.map(blocks.len(), |bi| {
-        let (o0, o1) = blocks[bi];
-        let mut part = vec![0.0f32; (o1 - o0) * d];
-        exact_block(eng, x, o0, o1, &mut part);
-        part
-    });
-    parts.concat()
-}
-
-fn exact_block(
-    eng: &SubMacEngine,
-    x: &BitMatrix,
-    o0: usize,
-    o1: usize,
-    out: &mut [f32],
-) {
-    let (d, g) = (x.rows, eng.n_groups());
-    debug_assert_eq!(x.words_per_row, g);
-    for d0 in (0..d).step_by(TILE_D) {
-        let d1 = (d0 + TILE_D).min(d);
-        for oi in o0..o1 {
-            let wr = eng.w.row(oi);
-            let row = &mut out[(oi - o0) * d..(oi - o0 + 1) * d];
-            for di in d0..d1 {
-                let xr = x.row(di);
-                let mut level_sum = 0u32;
-                for gi in 0..g {
-                    level_sum += group_level(wr[gi], xr[gi]);
-                }
-                row[di] =
-                    (2 * level_sum as i64 - eng.beta as i64) as f32;
-            }
-        }
-    }
-}
-
-/// Error-model matmul, cache-blocked (single thread). Bit-identical to
-/// [`SubMacEngine::matmul_error`].
-pub fn matmul_error_tiled(
-    eng: &SubMacEngine,
-    x: &BitMatrix,
-    em: &ErrorModel,
-    seed: u32,
-    salt: u32,
-) -> Vec<f32> {
-    let (o, d) = (eng.w.rows, x.rows);
-    let mut out = vec![0.0f32; o * d];
-    error_block(eng, x, em, seed, salt, 0, o, &mut out);
+    let mut out = vec![0.0f32; eng.w.rows * x.rows];
+    matmul_exact_into(pool, eng, x, kind, &mut out);
     out
 }
 
-/// Error-model matmul fanned over `pool` in contiguous o-blocks. The
-/// PRNG is indexed by the logical element position, so this is
-/// bit-identical to the scalar loop at any thread count.
-pub fn matmul_error(
-    pool: &ScopedPool,
-    eng: &SubMacEngine,
-    x: &BitMatrix,
-    em: &ErrorModel,
-    seed: u32,
-    salt: u32,
-) -> Vec<f32> {
-    let (o, d) = (eng.w.rows, x.rows);
-    let blocks = o_blocks(o, pool.threads());
-    if blocks.len() <= 1 {
-        return matmul_error_tiled(eng, x, em, seed, salt);
-    }
-    let parts = pool.map(blocks.len(), |bi| {
-        let (o0, o1) = blocks[bi];
-        let mut part = vec![0.0f32; (o1 - o0) * d];
-        error_block(eng, x, em, seed, salt, o0, o1, &mut part);
-        part
-    });
-    parts.concat()
-}
+// ----------------------------------------------------------- histogram
 
-#[allow(clippy::too_many_arguments)]
-fn error_block(
-    eng: &SubMacEngine,
-    x: &BitMatrix,
-    em: &ErrorModel,
-    seed: u32,
-    salt: u32,
-    o0: usize,
-    o1: usize,
-    out: &mut [f32],
-) {
-    let (d, g) = (x.rows, eng.n_groups());
-    debug_assert_eq!(x.words_per_row, g);
-    for d0 in (0..d).step_by(TILE_D) {
-        let d1 = (d0 + TILE_D).min(d);
-        for oi in o0..o1 {
-            let wr = eng.w.row(oi);
-            let row = &mut out[(oi - o0) * d..(oi - o0 + 1) * d];
-            for di in d0..d1 {
-                let xr = x.row(di);
-                let mut acc = 0.0f32;
-                for gi in 0..g {
-                    let level = group_level(wr[gi], xr[gi]) as usize;
-                    // logical index (o*G + g)*D + d — the kernels' layout
-                    let lin = salt.wrapping_add(
-                        ((oi as u32) * (g as u32))
-                            .wrapping_add(gi as u32)
-                            .wrapping_mul(d as u32)
-                            .wrapping_add(di as u32),
-                    );
-                    acc += 2.0 * em.decode(level, hash01(seed, lin));
-                }
-                row[di] = acc - eng.beta as f32;
-            }
+/// Per-element group walk shared by the histogram and fused kernels:
+/// calls `tally(level)` for each *real* group (the phantom high half
+/// of an odd trailing word is skipped) and returns the u64-word level
+/// sum (phantom contributes 0 by the pad convention, so the sum equals
+/// the real groups' sum exactly).
+#[inline(always)]
+fn walk_groups<F: FnMut(u32)>(
+    wr: &[u64],
+    xr: &[u64],
+    g: usize,
+    mut tally: F,
+) -> u32 {
+    let mut sum = 0u32;
+    let mut gi = 0usize;
+    for (a, c) in wr.iter().zip(xr.iter()) {
+        let y = !(a ^ c);
+        let lo = (y as u32).count_ones();
+        sum += lo;
+        tally(lo);
+        gi += 1;
+        if gi < g {
+            let hi = ((y >> 32) as u32).count_ones();
+            sum += hi;
+            tally(hi);
+            gi += 1;
+        } else {
+            // phantom half: popcount 0 by construction
+            debug_assert_eq!((y >> 32).count_ones(), 0);
         }
     }
+    sum
 }
 
-/// F_MAC level histogram of one matmul, fanned over `pool` (per-block
-/// histograms merge by addition, so the fan-out is exact).
-pub fn histogram(
-    pool: &ScopedPool,
+#[inline(always)]
+fn hist_block_body(
     eng: &SubMacEngine,
     x: &BitMatrix,
+    b: &Block,
 ) -> [u64; N_LEVELS] {
-    let (o, d, g) = (eng.w.rows, x.rows, eng.n_groups());
-    let blocks = o_blocks(o, pool.threads());
-    let parts = pool.map(blocks.len(), |bi| {
-        let (o0, o1) = blocks[bi];
-        let mut hist = [0u64; N_LEVELS];
-        for oi in o0..o1 {
-            let wr = eng.w.row(oi);
-            for di in 0..d {
-                let xr = x.row(di);
-                for gi in 0..g {
-                    hist[group_level(wr[gi], xr[gi]) as usize] += 1;
-                }
+    let g = eng.n_groups();
+    let mut hist = [0u64; N_LEVELS];
+    for t0 in (b.d0..b.d1).step_by(TILE_D) {
+        let t1 = (t0 + TILE_D).min(b.d1);
+        for oi in b.o0..b.o1 {
+            let wr = eng.w.row64(oi);
+            for di in t0..t1 {
+                walk_groups(wr, x.row64(di), g, |level| {
+                    hist[level as usize] += 1;
+                });
             }
         }
-        hist
-    });
+    }
+    hist
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+unsafe fn hist_block_popcnt(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    b: &Block,
+) -> [u64; N_LEVELS] {
+    hist_block_body(eng, x, b)
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn hist_block_neon(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    b: &Block,
+) -> [u64; N_LEVELS] {
+    hist_block_body(eng, x, b)
+}
+
+fn hist_block(
+    kind: KernelKind,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    b: &Block,
+) -> [u64; N_LEVELS] {
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        // safety: Avx2 is only constructed after runtime detection
+        KernelKind::Avx2 => unsafe { hist_block_popcnt(eng, x, b) },
+        #[cfg(target_arch = "aarch64")]
+        // safety: Neon is only constructed after runtime detection
+        KernelKind::Neon => unsafe { hist_block_neon(eng, x, b) },
+        _ => hist_block_body(eng, x, b),
+    }
+}
+
+fn merge_hists(parts: Vec<[u64; N_LEVELS]>) -> [u64; N_LEVELS] {
     let mut hist = [0u64; N_LEVELS];
     for part in parts {
         for (a, b) in hist.iter_mut().zip(part.iter()) {
@@ -192,20 +514,259 @@ pub fn histogram(
     hist
 }
 
-/// Contiguous output-row blocks, one per worker (so the per-block
-/// results concatenate into the row-major output with no interleaving).
-fn o_blocks(o: usize, workers: usize) -> Vec<(usize, usize)> {
-    let n = workers.min(o).max(1);
-    let base = o / n;
-    let extra = o % n;
-    let mut blocks = Vec::with_capacity(n);
-    let mut start = 0;
-    for i in 0..n {
-        let len = base + usize::from(i < extra);
-        blocks.push((start, start + len));
-        start += len;
+/// F_MAC level histogram of one matmul, fanned over `pool` (per-block
+/// histograms merge by addition, so the fan-out is exact).
+/// Bit-identical to [`SubMacEngine::histogram`].
+pub fn histogram(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    kind: KernelKind,
+) -> [u64; N_LEVELS] {
+    let (o, d) = (eng.w.rows, x.rows);
+    let blocks = work_blocks(o, d, pool.threads());
+    merge_hists(
+        pool.map(blocks.len(), |i| hist_block(kind, eng, x, &blocks[i])),
+    )
+}
+
+// --------------------------------------------------------------- fused
+
+#[inline(always)]
+fn fused_block_body(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    b: &Block,
+    out: &mut [f32],
+) -> [u64; N_LEVELS] {
+    let g = eng.n_groups();
+    let bw = b.d1 - b.d0;
+    let beta = eng.beta as i64;
+    let mut hist = [0u64; N_LEVELS];
+    for t0 in (b.d0..b.d1).step_by(TILE_D) {
+        let t1 = (t0 + TILE_D).min(b.d1);
+        for oi in b.o0..b.o1 {
+            let wr = eng.w.row64(oi);
+            let row = &mut out[(oi - b.o0) * bw..(oi - b.o0 + 1) * bw];
+            for di in t0..t1 {
+                let sum = walk_groups(wr, x.row64(di), g, |level| {
+                    hist[level as usize] += 1;
+                });
+                row[di - b.d0] = (2 * sum as i64 - beta) as f32;
+            }
+        }
     }
-    blocks
+    hist
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+unsafe fn fused_block_popcnt(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    b: &Block,
+    out: &mut [f32],
+) -> [u64; N_LEVELS] {
+    fused_block_body(eng, x, b, out)
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn fused_block_neon(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    b: &Block,
+    out: &mut [f32],
+) -> [u64; N_LEVELS] {
+    fused_block_body(eng, x, b, out)
+}
+
+fn fused_block(
+    kind: KernelKind,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    b: &Block,
+    out: &mut [f32],
+) -> [u64; N_LEVELS] {
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        // safety: Avx2 is only constructed after runtime detection
+        KernelKind::Avx2 => unsafe { fused_block_popcnt(eng, x, b, out) },
+        #[cfg(target_arch = "aarch64")]
+        // safety: Neon is only constructed after runtime detection
+        KernelKind::Neon => unsafe { fused_block_neon(eng, x, b, out) },
+        _ => fused_block_body(eng, x, b, out),
+    }
+}
+
+/// Exact matmul *and* F_MAC histogram in one pass over the operands —
+/// the clean F_MAC extraction walks memory once instead of twice. The
+/// outputs are bit-identical to [`matmul_exact_into`] +
+/// [`histogram`] run separately, at every tier and thread count.
+pub fn matmul_exact_fused_into(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    kind: KernelKind,
+    out: &mut [f32],
+) -> [u64; N_LEVELS] {
+    let (o, d) = (eng.w.rows, x.rows);
+    assert_eq!(x.words_per_row, eng.n_groups());
+    assert_eq!(out.len(), o * d);
+    let blocks = work_blocks(o, d, pool.threads());
+    merge_hists(run_blocks(pool, &blocks, out, |b, s| {
+        fused_block(kind, eng, x, b, s)
+    }))
+}
+
+/// Allocating convenience wrapper over [`matmul_exact_fused_into`].
+pub fn matmul_exact_fused(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    kind: KernelKind,
+) -> (Vec<f32>, [u64; N_LEVELS]) {
+    let mut out = vec![0.0f32; eng.w.rows * x.rows];
+    let hist = matmul_exact_fused_into(pool, eng, x, kind, &mut out);
+    (out, hist)
+}
+
+// --------------------------------------------------------------- error
+
+#[inline(always)]
+fn error_block_body(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    em: &ErrorModel,
+    seed: u32,
+    salt: u32,
+    b: &Block,
+    out: &mut [f32],
+) {
+    let g = eng.n_groups();
+    let bw = b.d1 - b.d0;
+    let d = x.rows;
+    for t0 in (b.d0..b.d1).step_by(TILE_D) {
+        let t1 = (t0 + TILE_D).min(b.d1);
+        for oi in b.o0..b.o1 {
+            let wr = eng.w.row64(oi);
+            let row = &mut out[(oi - b.o0) * bw..(oi - b.o0 + 1) * bw];
+            for di in t0..t1 {
+                let mut acc = 0.0f32;
+                let mut gi = 0u32;
+                // walk_groups yields real-group levels in gi order —
+                // the same shared walk (and phantom-half skip) as the
+                // histogram and fused kernels
+                walk_groups(wr, x.row64(di), g, |level| {
+                    // logical index (o*G + g)*D + d — kernel layout
+                    let lin = salt.wrapping_add(
+                        ((oi as u32) * (g as u32))
+                            .wrapping_add(gi)
+                            .wrapping_mul(d as u32)
+                            .wrapping_add(di as u32),
+                    );
+                    acc += 2.0
+                        * em.decode(level as usize, hash01(seed, lin));
+                    gi += 1;
+                });
+                row[di - b.d0] = acc - eng.beta as f32;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn error_block_popcnt(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    em: &ErrorModel,
+    seed: u32,
+    salt: u32,
+    b: &Block,
+    out: &mut [f32],
+) {
+    error_block_body(eng, x, em, seed, salt, b, out)
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn error_block_neon(
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    em: &ErrorModel,
+    seed: u32,
+    salt: u32,
+    b: &Block,
+    out: &mut [f32],
+) {
+    error_block_body(eng, x, em, seed, salt, b, out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn error_block(
+    kind: KernelKind,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    em: &ErrorModel,
+    seed: u32,
+    salt: u32,
+    b: &Block,
+    out: &mut [f32],
+) {
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        // safety: Avx2 is only constructed after runtime detection
+        KernelKind::Avx2 => unsafe {
+            error_block_popcnt(eng, x, em, seed, salt, b, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // safety: Neon is only constructed after runtime detection
+        KernelKind::Neon => unsafe {
+            error_block_neon(eng, x, em, seed, salt, b, out)
+        },
+        _ => error_block_body(eng, x, em, seed, salt, b, out),
+    }
+}
+
+/// Error-model matmul into a caller-provided buffer. The PRNG is
+/// indexed by the logical element position, so this is bit-identical
+/// to [`SubMacEngine::matmul_error`] at every tier and thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_error_into(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    em: &ErrorModel,
+    seed: u32,
+    salt: u32,
+    kind: KernelKind,
+    out: &mut [f32],
+) {
+    let (o, d) = (eng.w.rows, x.rows);
+    assert_eq!(x.words_per_row, eng.n_groups());
+    assert_eq!(out.len(), o * d);
+    let blocks = work_blocks(o, d, pool.threads());
+    run_blocks(pool, &blocks, out, |b, s| {
+        error_block(kind, eng, x, em, seed, salt, b, s)
+    });
+}
+
+/// Error-model matmul (allocating wrapper).
+pub fn matmul_error(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    em: &ErrorModel,
+    seed: u32,
+    salt: u32,
+    kind: KernelKind,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; eng.w.rows * x.rows];
+    matmul_error_into(pool, eng, x, em, seed, salt, kind, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -242,12 +803,36 @@ mod tests {
         ErrorModel::from_full(&full)
     }
 
+    /// Every tier the running CPU can execute (scalar always; the
+    /// detected SIMD tier when there is one).
+    fn tiers() -> Vec<KernelKind> {
+        let mut ts = vec![KernelKind::Scalar];
+        let det = KernelKind::detect();
+        if det != KernelKind::Scalar {
+            ts.push(det);
+        }
+        ts
+    }
+
     #[test]
-    fn tiled_exact_matches_scalar() {
+    fn exact_matches_scalar_engine_across_tiers() {
         let mut rng = Rng::new(31);
-        for (o, k, d) in [(5, 64, 300), (17, 96, 131), (1, 32, 1)] {
+        // includes odd group counts (ragged u64 rows) and long rows
+        // that exercise the AVX2 LUT path (k = 640 -> 10 u64 words)
+        for (o, k, d) in
+            [(5, 64, 300), (17, 96, 131), (1, 32, 1), (3, 640, 70)]
+        {
             let (eng, xb) = rand_engine(&mut rng, o, k, d);
-            assert_eq!(matmul_exact_tiled(&eng, &xb), eng.matmul_exact(&xb));
+            let want = eng.matmul_exact(&xb);
+            for kind in tiers() {
+                let pool = ScopedPool::sequential();
+                assert_eq!(
+                    matmul_exact(&pool, &eng, &xb, kind),
+                    want,
+                    "{} o={o} k={k} d={d}",
+                    kind.name()
+                );
+            }
         }
     }
 
@@ -256,34 +841,58 @@ mod tests {
         let mut rng = Rng::new(32);
         let (eng, xb) = rand_engine(&mut rng, 13, 64, 257);
         let want = eng.matmul_exact(&xb);
-        for threads in [1usize, 2, 3, 8, 32] {
-            let pool = ScopedPool::new(threads);
-            assert_eq!(
-                matmul_exact(&pool, &eng, &xb),
-                want,
-                "threads {threads}"
-            );
+        for kind in tiers() {
+            for threads in [1usize, 2, 3, 8, 32] {
+                let pool = ScopedPool::new(threads);
+                assert_eq!(
+                    matmul_exact(&pool, &eng, &xb, kind),
+                    want,
+                    "{} threads {threads}",
+                    kind.name()
+                );
+            }
         }
     }
 
     #[test]
-    fn tiled_and_threaded_error_match_scalar_bitwise() {
+    fn small_o_splits_d_and_stays_exact() {
+        // o < workers: the d-split path must still be bit-identical
+        let mut rng = Rng::new(35);
+        let (eng, xb) = rand_engine(&mut rng, 2, 96, 533);
+        let want = eng.matmul_exact(&xb);
+        for threads in [8usize, 16] {
+            let pool = ScopedPool::new(threads);
+            for kind in tiers() {
+                assert_eq!(
+                    matmul_exact(&pool, &eng, &xb, kind),
+                    want,
+                    "{} threads {threads}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_error_matches_scalar_bitwise() {
         let mut rng = Rng::new(33);
         let (eng, xb) = rand_engine(&mut rng, 9, 96, 200);
         let em = rand_em(&mut rng);
-        for (seed, salt) in [(0u32, 0u32), (7, 0x9E3779B1), (0xDEAD, 42)] {
+        for (seed, salt) in [(0u32, 0u32), (7, 0x9E3779B1), (0xDEAD, 42)]
+        {
             let want = eng.matmul_error(&xb, &em, seed, salt);
-            assert_eq!(
-                matmul_error_tiled(&eng, &xb, &em, seed, salt),
-                want
-            );
-            for threads in [2usize, 5] {
-                let pool = ScopedPool::new(threads);
-                assert_eq!(
-                    matmul_error(&pool, &eng, &xb, &em, seed, salt),
-                    want,
-                    "seed {seed} salt {salt} threads {threads}"
-                );
+            for kind in tiers() {
+                for threads in [1usize, 2, 5, 16] {
+                    let pool = ScopedPool::new(threads);
+                    assert_eq!(
+                        matmul_error(
+                            &pool, &eng, &xb, &em, seed, salt, kind
+                        ),
+                        want,
+                        "{} seed {seed} salt {salt} threads {threads}",
+                        kind.name()
+                    );
+                }
             }
         }
     }
@@ -293,21 +902,99 @@ mod tests {
         let mut rng = Rng::new(34);
         let (eng, xb) = rand_engine(&mut rng, 6, 96, 77);
         let want = eng.histogram(&xb);
-        for threads in [1usize, 3] {
-            let pool = ScopedPool::new(threads);
-            assert_eq!(histogram(&pool, &eng, &xb), want);
+        for kind in tiers() {
+            for threads in [1usize, 3, 9] {
+                let pool = ScopedPool::new(threads);
+                assert_eq!(
+                    histogram(&pool, &eng, &xb, kind),
+                    want,
+                    "{} threads {threads}",
+                    kind.name()
+                );
+            }
         }
     }
 
     #[test]
-    fn o_blocks_cover_and_are_contiguous() {
-        for (o, w) in [(10, 3), (3, 8), (1, 1), (64, 64)] {
-            let blocks = o_blocks(o, w);
-            assert_eq!(blocks[0].0, 0);
-            assert_eq!(blocks.last().unwrap().1, o);
-            for win in blocks.windows(2) {
-                assert_eq!(win[0].1, win[1].0);
-                assert!(win[0].1 > win[0].0);
+    fn fused_matches_separate_paths() {
+        let mut rng = Rng::new(36);
+        for (o, k, d) in [(6, 96, 77), (2, 160, 210), (11, 32, 40)] {
+            let (eng, xb) = rand_engine(&mut rng, o, k, d);
+            let want_out = eng.matmul_exact(&xb);
+            let want_hist = eng.histogram(&xb);
+            for kind in tiers() {
+                for threads in [1usize, 2, 7] {
+                    let pool = ScopedPool::new(threads);
+                    let (out, hist) =
+                        matmul_exact_fused(&pool, &eng, &xb, kind);
+                    assert_eq!(
+                        out,
+                        want_out,
+                        "{} o={o} threads {threads}",
+                        kind.name()
+                    );
+                    assert_eq!(
+                        hist,
+                        want_hist,
+                        "{} o={o} threads {threads}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn work_blocks_cover_grid_without_empties() {
+        for (o, d, w) in [
+            (10, 50, 3),
+            (3, 1000, 8),
+            (1, 1, 1),
+            (64, 64, 64),
+            (2, 7, 16),
+            (1, 3, 64),
+            (5, 4, 0),
+        ] {
+            let blocks = work_blocks(o, d, w);
+            let mut covered = 0usize;
+            for b in &blocks {
+                assert!(!b.is_empty(), "empty block in {o}x{d}/{w}");
+                covered += b.len();
+            }
+            assert_eq!(covered, o * d, "coverage {o}x{d}/{w}");
+            // memory order: each block starts where the previous ended
+            let mut at = 0usize;
+            for b in &blocks {
+                assert_eq!(b.o0 * d + b.d0, at, "order {o}x{d}/{w}");
+                at += b.len();
+            }
+            // o < workers engages the d-split so no worker idles
+            if o < w && d >= w.div_ceil(o) {
+                assert!(
+                    blocks.len() >= w.min(o * d),
+                    "{o}x{d}/{w}: only {} blocks",
+                    blocks.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_kind_resolves() {
+        assert_eq!(
+            KernelKind::resolve("scalar").unwrap(),
+            KernelKind::Scalar
+        );
+        let auto = KernelKind::resolve("auto").unwrap();
+        assert_eq!(auto, KernelKind::detect());
+        assert!(KernelKind::resolve("tpu").is_err());
+        // explicit SIMD names resolve exactly when detected
+        for simd in ["avx2", "neon"] {
+            match KernelKind::resolve(simd) {
+                Ok(k) => assert_eq!(k.name(), simd),
+                Err(e) => {
+                    assert!(e.to_string().contains(simd), "{e}")
+                }
             }
         }
     }

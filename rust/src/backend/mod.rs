@@ -4,8 +4,10 @@
 //!
 //! * [`native::NativeBackend`] — the whole multi-layer forward pass on
 //!   host (bit-pack -> grouped sub-MAC -> counter-PRNG error decode ->
-//!   folded affine -> argmax) on tiled, thread-pooled kernels. No XLA,
-//!   no artifacts, no Python anywhere.
+//!   folded affine -> argmax) on width-dispatched popcount
+//!   microkernels (`kernels::KernelKind`: runtime-detected
+//!   AVX2/NEON with a portable scalar fallback), thread-pooled and
+//!   arena-backed. No XLA, no artifacts, no Python anywhere.
 //! * `xla_backend::XlaBackend` (behind the `xla` cargo feature) — the
 //!   original path through the AOT eval/hist artifacts and the PJRT
 //!   runtime.

@@ -9,16 +9,20 @@
 //! given the same folded tensors, error models and seed the logits are
 //! bit-identical to the AOT eval artifacts (pinned by
 //! `tests/backend.rs` when artifacts are present). The matmuls run on
-//! the tiled, cache-blocked kernels of [`super::kernels`], fanned out
-//! over the shared [`ScopedPool`].
+//! the width-dispatched popcount microkernels of [`super::kernels`]
+//! (tier per [`KernelKind`], fanned over the shared [`ScopedPool`]),
+//! and every per-batch scratch buffer — im2col rows, packed
+//! activations, matmul outputs, activation tensors — comes from the
+//! plan's reusable [`Arena`], so the steady state of an accuracy or
+//! F_MAC sweep allocates nothing.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{anyhow, ensure, Result};
 
 use super::arch::{self, ArchOp, FoldedSig, ModelMeta};
-use super::kernels;
+use super::kernels::{self, KernelKind};
 use super::{fold_hash, FmacResult, InferenceBackend};
 use crate::bnn::engine::centered_pad;
 use crate::bnn::{BitMatrix, ErrorModel, SubMacEngine};
@@ -32,9 +36,68 @@ use crate::util::stats::argmax;
 /// Per-matmul PRNG stream decorrelation (`nn.py::_SALT_STRIDE`).
 const SALT_STRIDE: u32 = 0x9E37_79B1;
 
+/// Reusable scratch buffers for the forward pass (DESIGN.md §11).
+///
+/// Plain freelists of f32/u64 vectors: `take` pops (or allocates) and
+/// resizes with a fill value, `put` returns capacity for the next
+/// layer or batch. Lifetime rule: a buffer is either *inside* exactly
+/// one live tensor/matrix or *in* the arena — every `take` in the
+/// exec path has a matching `put` when its tensor is consumed, except
+/// the final logits buffer, which escapes to the caller (the arena
+/// simply re-grows by one buffer on the next pass).
+#[derive(Default)]
+pub struct Arena {
+    f32s: Vec<Vec<f32>>,
+    u64s: Vec<Vec<u64>>,
+}
+
+impl Arena {
+    /// A recycled buffer of `len` entries, every entry set to `fill`.
+    /// Call sites that fully overwrite the buffer (matmul outputs,
+    /// transposes) still pay this one memset — a small, safe constant
+    /// next to the O(words) kernel work per element.
+    fn take_f32(&mut self, len: usize, fill: f32) -> Vec<f32> {
+        let mut v = self.f32s.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, fill);
+        v
+    }
+
+    /// A recycled buffer initialized as a copy of `src` (no
+    /// intermediate fill pass).
+    fn take_f32_from(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut v = self.f32s.pop().unwrap_or_default();
+        v.clear();
+        v.extend_from_slice(src);
+        v
+    }
+
+    fn put_f32(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.f32s.push(v);
+        }
+    }
+
+    fn take_u64(&mut self) -> Vec<u64> {
+        self.u64s.pop().unwrap_or_default()
+    }
+
+    fn put_u64(&mut self, v: Vec<u64>) {
+        if v.capacity() > 0 {
+            self.u64s.push(v);
+        }
+    }
+
+    /// Buffers currently parked in the arena (tests pin reuse).
+    pub fn parked(&self) -> usize {
+        self.f32s.len() + self.u64s.len()
+    }
+}
+
 /// A folded model prepared for native execution: weights bit-packed
 /// once (stationary), affines and biases unpacked, shapes validated
-/// against the registry's folded signature.
+/// against the registry's folded signature, plus the reusable scratch
+/// arena shared by every pass over this plan.
 pub struct NativePlan {
     pub meta: ModelMeta,
     /// One packed engine per matmul, in consumption order; `beta` is
@@ -46,6 +109,11 @@ pub struct NativePlan {
     affines: Vec<(Vec<f32>, Vec<f32>)>,
     /// Final f32 logit bias.
     out_bias: Vec<f32>,
+    /// Scratch freelists, shared across layers and batches. The
+    /// backend facade is single-threaded (the trait is deliberately
+    /// not Sync), so the lock is uncontended — it only makes the
+    /// shared `Arc<NativePlan>` own its scratch safely.
+    scratch: Mutex<Arena>,
 }
 
 impl NativePlan {
@@ -113,11 +181,16 @@ impl NativePlan {
             pads,
             affines,
             out_bias,
+            scratch: Mutex::new(Arena::default()),
         })
     }
 
     pub fn n_matmuls(&self) -> usize {
         self.engines.len()
+    }
+
+    fn scratch(&self) -> MutexGuard<'_, Arena> {
+        self.scratch.lock().unwrap()
     }
 }
 
@@ -154,38 +227,89 @@ enum Mode<'a> {
 struct Exec<'p, 'm> {
     plan: &'p NativePlan,
     pool: &'p ScopedPool,
+    kind: KernelKind,
+    /// When false, the clean-histogram pass runs matmul and histogram
+    /// as two separate walks (the pre-fusion data flow, kept for the
+    /// before/after bench and as a cross-check).
+    fused: bool,
     mode: Mode<'m>,
     /// F_MAC accumulation (over the dummy-biased packed operands, like
     /// the hist artifact).
     hist: Option<&'m mut Vec<Fmac>>,
+    scratch: &'m mut Arena,
     eng_i: usize,
     aff_i: usize,
 }
 
 impl Exec<'_, '_> {
+    /// One sub-MAC matmul: pack `x_rows` (arena-recycled storage),
+    /// collect F_MAC if requested (fused with the exact matmul on the
+    /// clean pass), and return the [o x d] output — an arena buffer.
     fn matmul(&mut self, x_rows: &[f32], d: usize) -> Vec<f32> {
         let i = self.eng_i;
         self.eng_i += 1;
         let eng = &self.plan.engines[i];
         debug_assert_eq!(x_rows.len(), d * eng.w.cols);
-        let xb = BitMatrix::pack(d, eng.w.cols, x_rows, false);
-        if let Some(hists) = self.hist.as_deref_mut() {
-            let part = kernels::histogram(self.pool, eng, &xb);
-            for (a, b) in hists[i].counts.iter_mut().zip(part.iter()) {
-                *a += b;
+        let xb = BitMatrix::pack_with(
+            self.scratch.take_u64(),
+            d,
+            eng.w.cols,
+            x_rows,
+            false,
+        );
+        let mut out = self.scratch.take_f32(eng.w.rows * d, 0.0);
+        match self.mode {
+            Mode::Exact => match self.hist.as_deref_mut() {
+                Some(hists) if self.fused => {
+                    let part = kernels::matmul_exact_fused_into(
+                        self.pool, eng, &xb, self.kind, &mut out,
+                    );
+                    for (a, b) in
+                        hists[i].counts.iter_mut().zip(part.iter())
+                    {
+                        *a += b;
+                    }
+                }
+                Some(hists) => {
+                    let part =
+                        kernels::histogram(self.pool, eng, &xb, self.kind);
+                    for (a, b) in
+                        hists[i].counts.iter_mut().zip(part.iter())
+                    {
+                        *a += b;
+                    }
+                    kernels::matmul_exact_into(
+                        self.pool, eng, &xb, self.kind, &mut out,
+                    );
+                }
+                None => kernels::matmul_exact_into(
+                    self.pool, eng, &xb, self.kind, &mut out,
+                ),
+            },
+            Mode::Error { ems, seed } => {
+                if let Some(hists) = self.hist.as_deref_mut() {
+                    let part =
+                        kernels::histogram(self.pool, eng, &xb, self.kind);
+                    for (a, b) in
+                        hists[i].counts.iter_mut().zip(part.iter())
+                    {
+                        *a += b;
+                    }
+                }
+                kernels::matmul_error_into(
+                    self.pool,
+                    eng,
+                    &xb,
+                    &ems[i],
+                    seed,
+                    (i as u32).wrapping_mul(SALT_STRIDE),
+                    self.kind,
+                    &mut out,
+                );
             }
         }
-        match self.mode {
-            Mode::Exact => kernels::matmul_exact(self.pool, eng, &xb),
-            Mode::Error { ems, seed } => kernels::matmul_error(
-                self.pool,
-                eng,
-                &xb,
-                &ems[i],
-                seed,
-                (i as u32).wrapping_mul(SALT_STRIDE),
-            ),
-        }
+        self.scratch.put_u64(xb.into_data());
+        out
     }
 
     /// im2col rows for the upcoming matmul: SAME padding with -1 (the
@@ -204,7 +328,7 @@ impl Exec<'_, '_> {
         let pw = ((ow - 1) * stride + ksize).saturating_sub(w);
         let (pad_top, pad_left) = (ph / 2, pw / 2);
         let d = b * oh * ow;
-        let mut rows = vec![-1.0f32; d * kp];
+        let mut rows = self.scratch.take_f32(d * kp, -1.0);
         for bi in 0..b {
             for oy in 0..oh {
                 for ox in 0..ow {
@@ -239,8 +363,9 @@ impl Exec<'_, '_> {
         }
         let o = eng.w.rows;
         let out = self.matmul(&rows, d);
+        self.scratch.put_f32(rows);
         // [O, D] o-major -> NCHW
-        let mut y = vec![0.0f32; b * o * oh * ow];
+        let mut y = self.scratch.take_f32(b * o * oh * ow, 0.0);
         for oi in 0..o {
             for bi in 0..b {
                 let src = &out
@@ -249,6 +374,7 @@ impl Exec<'_, '_> {
                 y[dst_base..dst_base + oh * ow].copy_from_slice(src);
             }
         }
+        self.scratch.put_f32(out);
         Act {
             data: y,
             b,
@@ -264,7 +390,7 @@ impl Exec<'_, '_> {
         let kp = eng.w.cols;
         let k_true = f.cols;
         let (b, o) = (f.b, eng.w.rows);
-        let mut rows = vec![-1.0f32; b * kp];
+        let mut rows = self.scratch.take_f32(b * kp, -1.0);
         for bi in 0..b {
             let row = &mut rows[bi * kp..(bi + 1) * kp];
             row[..k_true]
@@ -274,12 +400,14 @@ impl Exec<'_, '_> {
             }
         }
         let out = self.matmul(&rows, b); // [O, B] o-major
-        let mut y = vec![0.0f32; b * o];
+        self.scratch.put_f32(rows);
+        let mut y = self.scratch.take_f32(b * o, 0.0);
         for oi in 0..o {
             for bi in 0..b {
                 y[bi * o + oi] = out[oi * b + bi];
             }
         }
+        self.scratch.put_f32(out);
         Flat {
             data: y,
             b,
@@ -316,6 +444,42 @@ impl Exec<'_, '_> {
         }
     }
 
+    fn maxpool(&mut self, a: &Act, k: usize) -> Act {
+        let (oh, ow) = (a.h / k, a.w / k);
+        let mut out = self
+            .scratch
+            .take_f32(a.b * a.c * oh * ow, f32::NEG_INFINITY);
+        for bi in 0..a.b {
+            for ci in 0..a.c {
+                let plane =
+                    &a.data[(bi * a.c + ci) * a.h * a.w..][..a.h * a.w];
+                let dst =
+                    &mut out[(bi * a.c + ci) * oh * ow..][..oh * ow];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut m = f32::NEG_INFINITY;
+                        for dy in 0..k {
+                            for dx in 0..k {
+                                m = m
+                                    .max(plane[(oy * k + dy) * a.w
+                                        + ox * k
+                                        + dx]);
+                            }
+                        }
+                        dst[oy * ow + ox] = m;
+                    }
+                }
+            }
+        }
+        Act {
+            data: out,
+            b: a.b,
+            c: a.c,
+            h: oh,
+            w: ow,
+        }
+    }
+
     fn run(&mut self, x: &[f32], b: usize) -> Result<Vec<f32>> {
         let [c, h, w] = self.plan.meta.in_shape;
         ensure!(
@@ -324,8 +488,9 @@ impl Exec<'_, '_> {
             x.len(),
             self.plan.meta.in_shape
         );
+        let input = self.scratch.take_f32_from(x);
         let mut t = Tensor::Nchw(Act {
-            data: x.to_vec(),
+            data: input,
             b,
             c,
             h,
@@ -335,10 +500,14 @@ impl Exec<'_, '_> {
         for op in &spec {
             t = match (op, t) {
                 (ArchOp::Conv(_, s, k), Tensor::Nchw(a)) => {
-                    Tensor::Nchw(self.conv(&a, *k, *s))
+                    let y = self.conv(&a, *k, *s);
+                    self.scratch.put_f32(a.data);
+                    Tensor::Nchw(y)
                 }
                 (ArchOp::MaxPool(k), Tensor::Nchw(a)) => {
-                    Tensor::Nchw(maxpool(&a, *k))
+                    let y = self.maxpool(&a, *k);
+                    self.scratch.put_f32(a.data);
+                    Tensor::Nchw(y)
                 }
                 (ArchOp::Bn, Tensor::Nchw(mut a)) => {
                     self.affine_nchw(&mut a);
@@ -363,15 +532,18 @@ impl Exec<'_, '_> {
                     hard_sign(&mut y.data);
                     // z = affine(conv3(y, 1))
                     let mut z = self.conv(&y, 3, 1);
+                    self.scratch.put_f32(y.data);
                     self.affine_nchw(&mut z);
                     // sc = affine(conv1(h, s))
                     let mut sc = self.conv(&a, 1, *s);
+                    self.scratch.put_f32(a.data);
                     self.affine_nchw(&mut sc);
                     // h = sign(z + sc)
                     for (zv, sv) in z.data.iter_mut().zip(sc.data.iter())
                     {
                         *zv += sv;
                     }
+                    self.scratch.put_f32(sc.data);
                     hard_sign(&mut z.data);
                     Tensor::Nchw(z)
                 }
@@ -381,10 +553,13 @@ impl Exec<'_, '_> {
                     data: a.data,
                 }),
                 (ArchOp::Fc(_), Tensor::Flat(f)) => {
-                    Tensor::Flat(self.fc(&f))
+                    let y = self.fc(&f);
+                    self.scratch.put_f32(f.data);
+                    Tensor::Flat(y)
                 }
                 (ArchOp::Out(_), Tensor::Flat(f)) => {
                     let mut y = self.fc(&f);
+                    self.scratch.put_f32(f.data);
                     for bi in 0..y.b {
                         let row =
                             &mut y.data[bi * y.cols..(bi + 1) * y.cols];
@@ -421,58 +596,47 @@ fn hard_sign(xs: &mut [f32]) {
     }
 }
 
-fn maxpool(a: &Act, k: usize) -> Act {
-    let (oh, ow) = (a.h / k, a.w / k);
-    let mut out = vec![f32::NEG_INFINITY; a.b * a.c * oh * ow];
-    for bi in 0..a.b {
-        for ci in 0..a.c {
-            let plane =
-                &a.data[(bi * a.c + ci) * a.h * a.w..][..a.h * a.w];
-            let dst = &mut out[(bi * a.c + ci) * oh * ow..][..oh * ow];
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut m = f32::NEG_INFINITY;
-                    for dy in 0..k {
-                        for dx in 0..k {
-                            m = m
-                                .max(plane[(oy * k + dy) * a.w
-                                    + ox * k
-                                    + dx]);
-                        }
-                    }
-                    dst[oy * ow + ox] = m;
-                }
-            }
-        }
-    }
-    Act {
-        data: out,
-        b: a.b,
-        c: a.c,
-        h: oh,
-        w: ow,
-    }
-}
-
 /// The XLA-free inference backend.
 pub struct NativeBackend {
     pool: ScopedPool,
+    /// Resolved microkernel tier (`--kernel`, DESIGN.md §11).
+    kind: KernelKind,
+    /// Fuse the clean-pass F_MAC histogram into the matmul walk
+    /// (disabled only by the before/after bench).
+    fused: bool,
     /// Packed plans keyed by (model, folded-content hash): weights are
     /// stationary, so a sweep of error models packs each model once.
     plans: Mutex<HashMap<(String, u64), Arc<NativePlan>>>,
 }
 
 impl NativeBackend {
-    /// `threads = 0` uses all available parallelism.
+    /// `threads = 0` uses all available parallelism; the kernel tier
+    /// is auto-detected.
     pub fn new(threads: usize) -> NativeBackend {
+        NativeBackend::with_options(threads, KernelKind::detect(), true)
+    }
+
+    /// Full control over the execution knobs (session plumbing and the
+    /// kernels bench).
+    pub fn with_options(
+        threads: usize,
+        kind: KernelKind,
+        fused: bool,
+    ) -> NativeBackend {
         NativeBackend {
             pool: ScopedPool::new(threads),
+            kind,
+            fused,
             plans: Mutex::new(HashMap::new()),
         }
     }
 
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    pub fn kernel(&self) -> KernelKind {
+        self.kind
     }
 
     fn plan(
@@ -511,11 +675,15 @@ impl InferenceBackend for NativeBackend {
             plan.n_matmuls(),
             ems.len()
         );
+        let mut scratch = plan.scratch();
         Exec {
             plan: &plan,
             pool: &self.pool,
+            kind: self.kind,
+            fused: self.fused,
             mode: Mode::Error { ems, seed },
             hist: None,
+            scratch: &mut *scratch,
             eng_i: 0,
             aff_i: 0,
         }
@@ -524,7 +692,8 @@ impl InferenceBackend for NativeBackend {
 
     /// Same batch/seed schedule as the trait default, but resolves the
     /// prepared plan (one content hash over the folded tensors) once
-    /// per pass instead of once per batch.
+    /// per pass instead of once per batch, and reuses one scratch
+    /// arena across all batches.
     fn accuracy(
         &self,
         model: &str,
@@ -546,17 +715,21 @@ impl InferenceBackend for NativeBackend {
         let mut loader = Loader::new(spec, Split::Test, eb, limit, 0xE7A1);
         let n_batches = (limit / eb).max(1);
         let (mut correct, mut total) = (0usize, 0usize);
+        let mut scratch = plan.scratch();
         for bi in 0..n_batches {
             let batch = loader.next_batch();
             let logits = Exec {
                 plan: &plan,
                 pool: &self.pool,
+                kind: self.kind,
+                fused: self.fused,
                 mode: Mode::Error {
                     ems,
                     // per-batch seed: decorrelates batches within one run
                     seed: seed.wrapping_add(bi as u32 * 0x9E37),
                 },
                 hist: None,
+                scratch: &mut *scratch,
                 eng_i: 0,
                 aff_i: 0,
             }
@@ -569,6 +742,8 @@ impl InferenceBackend for NativeBackend {
                 }
                 total += 1;
             }
+            // the logits buffer came from the arena — hand it back
+            scratch.put_f32(logits);
         }
         Ok(correct as f64 / total.max(1) as f64)
     }
@@ -589,13 +764,17 @@ impl InferenceBackend for NativeBackend {
         let n_batches = (limit / hb).max(1);
         let mut per = vec![Fmac::new(); plan.n_matmuls()];
         let (mut correct, mut total) = (0usize, 0usize);
+        let mut scratch = plan.scratch();
         for _ in 0..n_batches {
             let batch = loader.next_batch();
             let logits = Exec {
                 plan: &plan,
                 pool: &self.pool,
+                kind: self.kind,
+                fused: self.fused,
                 mode: Mode::Exact,
                 hist: Some(&mut per),
+                scratch: &mut *scratch,
                 eng_i: 0,
                 aff_i: 0,
             }
@@ -608,6 +787,7 @@ impl InferenceBackend for NativeBackend {
                 }
                 total += 1;
             }
+            scratch.put_f32(logits);
         }
         let mut sum = Fmac::new();
         for f in &per {
@@ -735,5 +915,44 @@ mod tests {
         for v in &l {
             assert_eq!(v.fract(), 0.0, "{v}");
         }
+    }
+
+    #[test]
+    fn logits_identical_across_kernel_tiers_and_fusion() {
+        let folded = init_folded("vgg3_tiny").unwrap();
+        let meta = arch::model_meta("vgg3_tiny").unwrap();
+        let px: usize = meta.in_shape.iter().product();
+        let mut rng = crate::util::rng::Rng::new(21);
+        let x: Vec<f32> = (0..2 * px).map(|_| rng.pm1(0.5)).collect();
+        let ems: Vec<ErrorModel> = (0..meta.n_matmuls())
+            .map(|_| ErrorModel::identity())
+            .collect();
+        let want = NativeBackend::with_options(1, KernelKind::Scalar, true)
+            .logits("vgg3_tiny", &folded, &x, 2, &ems, 3)
+            .unwrap();
+        for kind in [KernelKind::Scalar, KernelKind::detect()] {
+            for fused in [true, false] {
+                let be = NativeBackend::with_options(2, kind, fused);
+                let got = be
+                    .logits("vgg3_tiny", &folded, &x, 2, &ems, 3)
+                    .unwrap();
+                assert_eq!(got, want, "{} fused={fused}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn arena_buffers_are_reused_across_passes() {
+        let folded = init_folded("vgg3_tiny").unwrap();
+        let be = NativeBackend::new(1);
+        let spec = crate::data::synth::Dataset::FashionSyn.spec();
+        let a = be.fmac("vgg3_tiny", &folded, spec.clone(), 16, 9).unwrap();
+        let plan = be.plan("vgg3_tiny", &folded).unwrap();
+        let parked = plan.scratch().parked();
+        assert!(parked > 0, "arena empty after a pass");
+        // a second pass must not grow the freelists (steady state)
+        let b = be.fmac("vgg3_tiny", &folded, spec, 16, 9).unwrap();
+        assert_eq!(a.per_matmul, b.per_matmul);
+        assert_eq!(plan.scratch().parked(), parked, "arena grew");
     }
 }

@@ -1,20 +1,33 @@
-//! Bit-packed +-1 matrices: one u32 word per a=32 sub-MAC group.
+//! Bit-packed +-1 matrices: u64 storage words, one u32 half-word per
+//! a=32 sub-MAC group.
 //!
-//! Bit = 1 encodes +1. The XNOR-popcount level of a group is then
-//! `popcount(!(w ^ x))` — but padding must contribute 0, so pad bits are
-//! set to w=1, x=0, and the level is computed as
-//! `popcount(!(w ^ x) & mask)` with `mask` covering... no mask needed:
-//! w_pad=1 ^ x_pad=0 = 1, negated = 0, so pads vanish for free — exactly
-//! the (w=+1, x=-1) non-conducting convention of the kernels.
+//! Bit = 1 encodes +1. The XNOR-popcount level of a group is
+//! `popcount(!(w ^ x))` over its 32 bits — pad bits are set to w=1,
+//! x=0, so `!(w ^ x)` is 0 there and pads vanish for free (the
+//! (w=+1, x=-1) non-conducting convention of the kernels).
+//!
+//! Storage is u64 words (`words64_per_row = ceil(groups/2)`), so the
+//! word-level popcount microkernels in `backend::kernels` accumulate
+//! two groups per XOR+popcount:
+//! `sum_g popcount(!(w_g ^ x_g)) == sum_w popcount(!(w64 ^ x64))`
+//! exactly, because the *phantom* high half of an odd trailing word
+//! follows the same pad convention and contributes 0. Per-group levels
+//! (error decode, F_MAC histograms) read the u32 halves back out —
+//! hoist a [`BitMatrix::row64`] slice and index it with [`row_group`]
+//! (or use [`BitMatrix::group`] for one-off reads).
 
 /// Row-major bit-packed matrix: `rows x cols` logical +-1 entries,
-/// `words_per_row = ceil(cols/32)` u32 words per row.
+/// `words_per_row = ceil(cols/32)` sub-MAC groups per row, stored as
+/// `words64_per_row = ceil(words_per_row/2)` u64 words per row.
 #[derive(Clone, Debug)]
 pub struct BitMatrix {
     pub rows: usize,
     pub cols: usize,
+    /// Semantic width: u32 sub-MAC groups per row (`ceil(cols/32)`).
     pub words_per_row: usize,
-    pub data: Vec<u32>,
+    /// Storage width: u64 words per row (`ceil(words_per_row/2)`).
+    pub words64_per_row: usize,
+    pub data: Vec<u64>,
     /// Fill value for pad bits (true = +1). Weights pad with +1,
     /// activations with -1 (bit 0), per the non-conducting convention.
     pub pad_one: bool,
@@ -24,23 +37,40 @@ impl BitMatrix {
     /// Pack a +-1 f32 matrix (row-major `rows x cols`).
     pub fn pack(rows: usize, cols: usize, vals: &[f32], pad_one: bool)
         -> BitMatrix {
+        BitMatrix::pack_with(Vec::new(), rows, cols, vals, pad_one)
+    }
+
+    /// Pack into a recycled storage buffer (the native backend's
+    /// scratch arena lends these across matmuls — DESIGN.md §11);
+    /// `buf` is cleared and resized, its capacity reused.
+    pub fn pack_with(
+        mut buf: Vec<u64>,
+        rows: usize,
+        cols: usize,
+        vals: &[f32],
+        pad_one: bool,
+    ) -> BitMatrix {
         assert_eq!(vals.len(), rows * cols);
         let wpr = cols.div_ceil(32);
-        let mut data = vec![0u32; rows * wpr];
+        let wpr64 = wpr.div_ceil(2);
+        buf.clear();
+        buf.resize(rows * wpr64, 0u64);
         for r in 0..rows {
+            let row = &mut buf[r * wpr64..(r + 1) * wpr64];
             for c in 0..cols {
                 let v = vals[r * cols + c];
                 debug_assert!(v == 1.0 || v == -1.0, "not binary: {v}");
                 if v > 0.0 {
-                    data[r * wpr + c / 32] |= 1 << (c % 32);
+                    row[c / 64] |= 1u64 << (c % 64);
                 }
             }
             if pad_one {
-                // set pad bits of the last word to 1 (+1)
-                let used = cols % 32;
+                // set every bit from `cols` to the end of the storage
+                // row to 1 (+1): partial-group padding and the phantom
+                // high half of an odd trailing word alike
+                let used = cols % 64;
                 if used != 0 {
-                    let pad_mask = !0u32 << used;
-                    data[r * wpr + wpr - 1] |= pad_mask;
+                    row[cols / 64] |= !0u64 << used;
                 }
             }
         }
@@ -48,25 +78,49 @@ impl BitMatrix {
             rows,
             cols,
             words_per_row: wpr,
-            data,
+            words64_per_row: wpr64,
+            data: buf,
             pad_one,
         }
     }
 
+    /// Hand the storage buffer back (to a scratch arena) once the
+    /// matrix is consumed.
+    pub fn into_data(self) -> Vec<u64> {
+        self.data
+    }
+
+    /// One row as u64 storage words.
     #[inline]
-    pub fn row(&self, r: usize) -> &[u32] {
-        &self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
+    pub fn row64(&self, r: usize) -> &[u64] {
+        &self.data
+            [r * self.words64_per_row..(r + 1) * self.words64_per_row]
+    }
+
+    /// The 32-bit sub-MAC group `gi` of row `r`.
+    #[inline]
+    pub fn group(&self, r: usize, gi: usize) -> u32 {
+        debug_assert!(gi < self.words_per_row);
+        row_group(self.row64(r), gi)
     }
 
     /// Logical +-1 value at (r, c).
     pub fn get(&self, r: usize, c: usize) -> f32 {
-        let w = self.data[r * self.words_per_row + c / 32];
-        if (w >> (c % 32)) & 1 == 1 {
+        let w = self.data[r * self.words64_per_row + c / 64];
+        if (w >> (c % 64)) & 1 == 1 {
             1.0
         } else {
             -1.0
         }
     }
+}
+
+/// The 32-bit sub-MAC group `gi` of a packed row's u64 storage words
+/// (hoist the [`BitMatrix::row64`] slice outside inner loops and read
+/// groups through this).
+#[inline]
+pub fn row_group(row64: &[u64], gi: usize) -> u32 {
+    (row64[gi / 2] >> (32 * (gi & 1))) as u32
 }
 
 /// XNOR-popcount level of one 32-cell group: `popcount(!(w ^ x))`.
@@ -93,6 +147,7 @@ mod tests {
             }
         }
         assert_eq!(m.words_per_row, 2);
+        assert_eq!(m.words64_per_row, 1);
     }
 
     #[test]
@@ -110,10 +165,50 @@ mod tests {
         // 5 valid cells, all matching (+1/+1): level must be 5
         let w = BitMatrix::pack(1, 5, &[1.0; 5], true);
         let x = BitMatrix::pack(1, 5, &[1.0; 5], false);
-        assert_eq!(group_level(w.row(0)[0], x.row(0)[0]), 5);
+        assert_eq!(group_level(w.group(0, 0), x.group(0, 0)), 5);
+        assert_eq!((!(w.row64(0)[0] ^ x.row64(0)[0])).count_ones(), 5);
         // 5 valid cells, all mismatching: level 0
         let x2 = BitMatrix::pack(1, 5, &[-1.0; 5], false);
-        assert_eq!(group_level(w.row(0)[0], x2.row(0)[0]), 0);
+        assert_eq!(group_level(w.group(0, 0), x2.group(0, 0)), 0);
+    }
+
+    #[test]
+    fn word_sum_equals_group_sum_on_odd_group_counts() {
+        // 3 groups (96 cols) -> 2 storage words with a phantom high
+        // half; the phantom must contribute 0 to the word-level sum
+        for cols in [33usize, 65, 96, 100, 129] {
+            let wv: Vec<f32> = (0..cols)
+                .map(|i| if (i * 7) % 3 == 0 { 1.0 } else { -1.0 })
+                .collect();
+            let xv: Vec<f32> = (0..cols)
+                .map(|i| if (i * 5) % 4 < 2 { 1.0 } else { -1.0 })
+                .collect();
+            let w = BitMatrix::pack(1, cols, &wv, true);
+            let x = BitMatrix::pack(1, cols, &xv, false);
+            let by_group: u32 = (0..w.words_per_row)
+                .map(|g| group_level(w.group(0, g), x.group(0, g)))
+                .sum();
+            let by_word: u32 = w
+                .row64(0)
+                .iter()
+                .zip(x.row64(0))
+                .map(|(a, b)| (!(a ^ b)).count_ones())
+                .sum();
+            assert_eq!(by_group, by_word, "cols {cols}");
+        }
+    }
+
+    #[test]
+    fn pack_with_reuses_capacity() {
+        let vals = vec![1.0f32; 4 * 64];
+        let a = BitMatrix::pack(4, 64, &vals, false);
+        let buf = a.into_data();
+        let cap = buf.capacity();
+        let b = BitMatrix::pack_with(buf, 4, 64, &vals, false);
+        assert!(b.data.capacity() >= cap.min(4));
+        for c in 0..64 {
+            assert_eq!(b.get(2, c), 1.0);
+        }
     }
 
     #[test]
@@ -130,7 +225,7 @@ mod tests {
         let x = BitMatrix::pack(1, cols, &xv, false);
         let mut level_sum = 0i64;
         for g in 0..w.words_per_row {
-            level_sum += group_level(w.row(0)[g], x.row(0)[g]) as i64;
+            level_sum += group_level(w.group(0, g), x.group(0, g)) as i64;
         }
         let dot: f32 = wv.iter().zip(&xv).map(|(a, b)| a * b).sum();
         assert_eq!(2 * level_sum - cols as i64, dot as i64);

@@ -8,7 +8,7 @@
 //! artifacts bit-for-bit, (b) serve as the host-engine baseline the
 //! paper replaces, and (c) run large sweeps at native speed.
 
-use super::bitpack::{group_level, BitMatrix};
+use super::bitpack::{group_level, row_group, BitMatrix};
 use super::hashrng::hash01;
 use crate::capmin::N_LEVELS;
 
@@ -98,12 +98,13 @@ impl SubMacEngine {
         assert_eq!(x.words_per_row, g);
         let mut out = vec![0.0f32; o * d];
         for oi in 0..o {
-            let wr = self.w.row(oi);
+            let wr = self.w.row64(oi);
             for di in 0..d {
-                let xr = x.row(di);
+                let xr = x.row64(di);
                 let mut level_sum = 0u32;
                 for gi in 0..g {
-                    level_sum += group_level(wr[gi], xr[gi]);
+                    level_sum +=
+                        group_level(row_group(wr, gi), row_group(xr, gi));
                 }
                 out[oi * d + di] =
                     (2 * level_sum as i64 - self.beta as i64) as f32;
@@ -125,12 +126,14 @@ impl SubMacEngine {
         assert_eq!(x.words_per_row, g);
         let mut out = vec![0.0f32; o * d];
         for oi in 0..o {
-            let wr = self.w.row(oi);
+            let wr = self.w.row64(oi);
             for di in 0..d {
-                let xr = x.row(di);
+                let xr = x.row64(di);
                 let mut acc = 0.0f32;
                 for gi in 0..g {
-                    let level = group_level(wr[gi], xr[gi]) as usize;
+                    let level =
+                        group_level(row_group(wr, gi), row_group(xr, gi))
+                            as usize;
                     // logical index (o*G + g)*D + d — the kernels' layout
                     let lin = salt.wrapping_add(
                         ((oi as u32) * (g as u32))
@@ -152,11 +155,12 @@ impl SubMacEngine {
         let (o, d, g) = (self.w.rows, x.rows, self.n_groups());
         let mut hist = [0u64; N_LEVELS];
         for oi in 0..o {
-            let wr = self.w.row(oi);
+            let wr = self.w.row64(oi);
             for di in 0..d {
-                let xr = x.row(di);
+                let xr = x.row64(di);
                 for gi in 0..g {
-                    hist[group_level(wr[gi], xr[gi]) as usize] += 1;
+                    hist[group_level(row_group(wr, gi), row_group(xr, gi))
+                        as usize] += 1;
                 }
             }
         }

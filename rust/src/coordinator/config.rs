@@ -36,9 +36,17 @@ pub struct ExperimentConfig {
     /// build and machine have it, else native) — DESIGN.md §9.
     pub backend: String,
     /// Worker threads for solve batches, MC level sweeps and native
-    /// kernels (0 = all cores). Never changes results — recorded in
-    /// point metadata, not cache keys.
+    /// kernels (0 = all cores, resolved through
+    /// `std::thread::available_parallelism`). Never changes results —
+    /// the *resolved* count is recorded in point metadata, not cache
+    /// keys.
     pub threads: usize,
+    /// Native microkernel tier: "auto" (runtime CPU detection),
+    /// "scalar" (portable fallback), or an explicit SIMD tier
+    /// ("avx2"/"neon", accepted only when detected) — DESIGN.md §11.
+    /// Never changes results (kernels are bit-identical); the resolved
+    /// tier is recorded in point metadata, not cache keys.
+    pub kernel: String,
     /// Directory for cached runs (trained weights, F_MACs, results).
     pub run_dir: String,
     /// Persist operating points to `<run_dir>/points/` (DESIGN.md §7);
@@ -64,6 +72,7 @@ impl Default for ExperimentConfig {
             engine: "eval".to_string(),
             backend: "auto".to_string(),
             threads: 0,
+            kernel: "auto".to_string(),
             run_dir: "runs".to_string(),
             point_cache: true,
             seed: 42,
@@ -109,6 +118,11 @@ impl ExperimentConfig {
         // validate early so a typo fails before any work happens
         crate::backend::BackendKind::parse(&c.backend)?;
         c.threads = args.usize_or("threads", c.threads);
+        if let Some(kernel) =
+            args.choice("kernel", crate::backend::kernels::KernelKind::CHOICES)?
+        {
+            c.kernel = kernel;
+        }
         c.run_dir = args.str_or("run-dir", &c.run_dir);
         c.point_cache = !args.flag("no-point-cache");
         c.seed = args.usize_or("seed", c.seed as usize) as u64;
@@ -188,6 +202,22 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(e.to_string().contains("tpu"), "{e}");
+    }
+
+    #[test]
+    fn kernel_flag_validates_choices() {
+        let c = ExperimentConfig::from_args(&parse(&["x"])).unwrap();
+        assert_eq!(c.kernel, "auto");
+        let c = ExperimentConfig::from_args(&parse(&[
+            "x", "--kernel", "scalar",
+        ]))
+        .unwrap();
+        assert_eq!(c.kernel, "scalar");
+        let e = ExperimentConfig::from_args(&parse(&[
+            "x", "--kernel", "sse9",
+        ]))
+        .unwrap_err();
+        assert!(e.to_string().contains("sse9"), "{e}");
     }
 
     #[test]

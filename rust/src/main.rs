@@ -23,8 +23,8 @@ use capmin::util::table::si;
 const KNOWN_OPTS: &[&str] = &[
     "dataset", "steps", "lr", "lr-halve-every", "train-limit",
     "eval-limit", "hist-limit", "sigma", "mc-samples", "seeds", "ks",
-    "k", "phi", "engine", "backend", "threads", "run-dir", "seed",
-    "emit", "plans", "suite-id",
+    "k", "phi", "engine", "backend", "threads", "kernel", "run-dir",
+    "seed", "emit", "plans", "suite-id",
 ];
 
 /// Every bare `--flag`.
@@ -91,8 +91,18 @@ common options:
                            feature + make artifacts); auto (default)
                            picks xla when available, else native
   --threads N              worker threads for solves, Monte-Carlo and
-                           native kernels (0 = all cores; results are
-                           bit-identical at any setting)
+                           native kernels (0 = all cores via
+                           available_parallelism; results are
+                           bit-identical at any setting; the resolved
+                           count is recorded in point meta)
+  --kernel scalar|auto     native sub-MAC microkernel tier (DESIGN.md
+                           §11): auto (default) runtime-detects the
+                           CPU (AVX2+POPCNT on x86_64, NEON on
+                           aarch64), scalar forces the portable
+                           kernel; results are bit-identical either
+                           way and the resolved tier lands in point
+                           meta (explicit avx2/neon accepted when the
+                           CPU has them)
   --engine eval|evalp      jnp engine or Pallas-kernel engine artifact
                            (xla backend only)
   --run-dir DIR            cache directory (default runs/)
@@ -147,6 +157,16 @@ fn main() -> Result<()> {
                 session.backend_name(),
                 session.config().backend,
                 session.threads()
+            );
+            println!(
+                "native kernel tier: {} (requested `{}`, detected {})",
+                if session.kernel_name().is_empty() {
+                    "-"
+                } else {
+                    session.kernel_name()
+                },
+                session.config().kernel,
+                capmin::backend::kernels::KernelKind::detect().name()
             );
             println!("native model registry:");
             for name in capmin::backend::arch::model_names() {

@@ -65,8 +65,11 @@ fn config_key(cfg: &ExperimentConfig) -> String {
     let ks: Vec<String> =
         cfg.ks.iter().map(|k| k.to_string()).collect();
     hex16(
+        // v2: Monte-Carlo chunked-draw schedule (analog::montecarlo)
+        // changed every sigma>0 solve — pre-chunking manifests must
+        // not restore
         format!(
-            "v1|steps{}|lr{:e}|lrh{}|tl{}|el{}|hl{}|\
+            "v2|steps{}|lr{:e}|lrh{}|tl{}|el{}|hl{}|\
              sigma{:e}|mc{}|ks{}|seeds{}|engine{}|be{}|seed{}",
             cfg.train_steps,
             cfg.lr0,

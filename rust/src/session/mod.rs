@@ -44,6 +44,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::analog::params::AnalogParams;
+use crate::backend::kernels::KernelKind;
 use crate::backend::{BackendKind, InferenceBackend, NativeBackend};
 use crate::capmin::Fmac;
 use crate::coordinator::config::ExperimentConfig;
@@ -159,10 +160,11 @@ impl DesignSessionBuilder {
     }
 
     pub fn build(self) -> Result<DesignSession> {
-        // library users can set cfg.backend directly, bypassing the
-        // CLI validation — reject typos here rather than silently
-        // resolving them as `auto`
+        // library users can set cfg.backend / cfg.kernel directly,
+        // bypassing the CLI validation — reject typos (and SIMD tiers
+        // this CPU lacks) here rather than deep inside a query
         BackendKind::parse(&self.cfg.backend)?;
+        KernelKind::resolve(&self.cfg.kernel)?;
         let store = Store::new(&self.cfg.run_dir)?;
         let points =
             PointCache::new(store.path("points"), self.cfg.point_cache);
@@ -227,9 +229,25 @@ impl DesignSession {
     }
 
     /// Worker threads the session fans out over (`--threads`, 0 =
-    /// all cores) — solve batches, MC level sweeps and native kernels.
+    /// all cores via `std::thread::available_parallelism`) — solve
+    /// batches, MC sample sweeps and native kernels. Always the
+    /// *resolved* count (never 0), which is what point metadata
+    /// records.
     pub fn threads(&self) -> usize {
         ScopedPool::new(self.cfg.threads).threads()
+    }
+
+    /// The native microkernel tier this session's config resolves to
+    /// ("scalar"/"avx2"/"neon"; empty when the backend is xla —
+    /// kernel dispatch is a native-path concept). Recorded in point
+    /// metadata, never in cache keys (DESIGN.md §11).
+    pub fn kernel_name(&self) -> &'static str {
+        if self.backend_name() != "native" {
+            return "";
+        }
+        KernelKind::resolve(&self.cfg.kernel)
+            .expect("kernel validated at session build")
+            .name()
     }
 
     /// The inference backend, constructed on first use.
@@ -238,7 +256,11 @@ impl DesignSession {
             let b: Box<dyn InferenceBackend> = match self.backend_name()
             {
                 "xla" => self.xla_backend()?,
-                _ => Box::new(NativeBackend::new(self.cfg.threads)),
+                _ => Box::new(NativeBackend::with_options(
+                    self.cfg.threads,
+                    KernelKind::resolve(&self.cfg.kernel)?,
+                    true,
+                )),
             };
             // single-threaded session facade: set cannot race
             let _ = self.backend.set(b);
@@ -621,6 +643,7 @@ impl DesignSession {
         };
         let meta = PointMeta {
             backend: self.backend_name().to_string(),
+            kernel: self.kernel_name().to_string(),
             threads: self.threads(),
         };
         let point = Arc::new(OperatingPoint::from_solve(

@@ -11,17 +11,25 @@ use crate::capmin::{CapMinResult, N_LEVELS};
 use crate::util::json::{obj, Json};
 
 /// Provenance of an evaluated point: which inference backend produced
-/// the accuracy and how many worker threads the session fanned out
-/// over. Metadata only — thread count never changes a result (kernels
-/// are bit-identical at any fan-out) and is deliberately *not* part of
-/// the cache key, so cached operating points replay reproducibly
-/// across machines while still recording where they came from.
+/// the accuracy, which native microkernel tier it dispatched to, and
+/// how many worker threads the session fanned out over. Metadata only
+/// — neither the thread count nor the kernel tier ever changes a
+/// result (kernels are bit-identical at any fan-out and tier), so
+/// both are deliberately *not* part of the cache key: cached
+/// operating points replay reproducibly across machines while still
+/// recording where they came from.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct PointMeta {
     /// Resolved backend name ("native" or "xla"; empty for points
     /// written before the backend layer existed).
     pub backend: String,
-    /// Session worker threads at solve/eval time (0 = unrecorded).
+    /// Resolved native kernel tier ("scalar"/"avx2"/"neon";
+    /// empty for xla points and points written before kernel
+    /// dispatch existed) — DESIGN.md §11.
+    pub kernel: String,
+    /// Session worker threads at solve/eval time, *resolved* (0 =
+    /// unrecorded; `--threads 0` records the machine's available
+    /// parallelism, never a literal 0).
     pub threads: usize,
 }
 
@@ -156,6 +164,7 @@ impl OperatingPoint {
                 "meta",
                 obj(vec![
                     ("backend", Json::Str(self.meta.backend.clone())),
+                    ("kernel", Json::Str(self.meta.kernel.clone())),
                     ("threads", Json::Num(self.meta.threads as f64)),
                 ]),
             ),
@@ -260,6 +269,11 @@ impl OperatingPoint {
                     Some(Json::Str(s)) => s.clone(),
                     _ => String::new(),
                 },
+                // absent in pre-dispatch points: default provenance
+                kernel: match m.get("kernel") {
+                    Some(Json::Str(s)) => s.clone(),
+                    _ => String::new(),
+                },
                 threads: match m.get("threads") {
                     Some(Json::Num(n)) => *n as usize,
                     _ => 0,
@@ -301,6 +315,7 @@ mod tests {
             solve(p, 42, 100, 1, &fmacs, spec.k, spec.sigma, spec.phi);
         let meta = PointMeta {
             backend: "native".into(),
+            kernel: "avx2".into(),
             threads: 8,
         };
         let point =
@@ -312,6 +327,7 @@ mod tests {
         .unwrap();
         assert_eq!(point, back);
         assert_eq!(back.meta.backend, "native");
+        assert_eq!(back.meta.kernel, "avx2");
         assert_eq!(back.meta.threads, 8);
     }
 
@@ -352,7 +368,7 @@ mod tests {
         let text = point.to_json().to_string();
         // strip the meta field to emulate the old format
         let legacy = text.replace(
-            ",\"meta\":{\"backend\":\"\",\"threads\":0}",
+            ",\"meta\":{\"backend\":\"\",\"kernel\":\"\",\"threads\":0}",
             "",
         );
         assert_ne!(legacy, text, "meta field expected in JSON form");

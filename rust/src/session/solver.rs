@@ -64,10 +64,11 @@ impl HwSolve {
 ///
 /// `seed`, `mc_samples` and `threads` come from the session's
 /// `ExperimentConfig`; the per-matmul MC streams derive
-/// deterministically from (seed, matmul index) alone, so the result is
-/// independent of which thread runs the solve *and* of `threads` (the
-/// Monte-Carlo level fan-out — pass 1 when the caller already
-/// parallelizes across solves).
+/// deterministically from (seed, matmul index, sample chunk) alone,
+/// so the result is independent of which thread runs the solve *and*
+/// of `threads` (the Monte-Carlo fan-out over (level, chunk) work
+/// items — pass 1 when the caller already parallelizes across
+/// solves).
 pub fn solve(
     base: AnalogParams,
     seed: u64,

@@ -64,10 +64,14 @@ impl OperatingPointSpec {
     /// Canonical material for the *hardware* half of the query:
     /// everything that can change the solve — the F_MACs (via the
     /// training knobs), the MC scale, the base seed, and the spec's
-    /// hardware axes — but not the eval settings.
+    /// hardware axes — but not the eval settings. The `v2` prefix is
+    /// the Monte-Carlo draw-schedule version: v2 chunks each level's
+    /// samples into independently-seeded `MC_CHUNK`-draw streams
+    /// (`analog::montecarlo`), so v1 points (whole-level streams) can
+    /// never replay as v2 answers.
     fn hw_material(&self, cfg: &ExperimentConfig) -> String {
         format!(
-            "v1|{}|k{}|sigma{:e}|phi{}|steps{}|lr{:e}|lrh{}|tl{}|hl{}|\
+            "v2|{}|k{}|sigma{:e}|phi{}|steps{}|lr{:e}|lrh{}|tl{}|hl{}|\
              mc{}|seed{}",
             self.dataset.spec().name,
             self.k,
@@ -215,10 +219,14 @@ mod tests {
         let mut xla = native.clone();
         xla.backend = "xla".into();
         assert_ne!(a.cache_key(&native), a.cache_key(&xla));
-        // thread count never shifts a key (results are bit-identical)
+        // neither thread count nor kernel tier ever shifts a key
+        // (results are bit-identical at any fan-out and tier)
         let mut threaded = native.clone();
         threaded.threads = 7;
         assert_eq!(a.cache_key(&native), a.cache_key(&threaded));
+        let mut scalar = native.clone();
+        scalar.kernel = "scalar".into();
+        assert_eq!(a.cache_key(&native), a.cache_key(&scalar));
         // hardware half ignores the backend entirely
         assert_eq!(a.hw_cache_key(&native), a.hw_cache_key(&xla));
     }

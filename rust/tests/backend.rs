@@ -4,8 +4,9 @@
 //! eval artifacts — see the gated module at the bottom).
 
 use capmin::backend::arch::{model_meta, model_names};
+use capmin::backend::kernels::{self, KernelKind};
 use capmin::backend::native::{init_folded, NativeBackend};
-use capmin::backend::{kernels, InferenceBackend};
+use capmin::backend::InferenceBackend;
 use capmin::bnn::{BitMatrix, ErrorModel, SubMacEngine};
 use capmin::capmin::Fmac;
 use capmin::coordinator::config::ExperimentConfig;
@@ -13,6 +14,9 @@ use capmin::data::synth::Dataset;
 use capmin::session::{DesignSession, OperatingPointSpec};
 use capmin::util::pool::ScopedPool;
 use capmin::util::rng::Rng;
+
+mod common;
+use common::kernel_tiers as tiers;
 
 fn rand_pm(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.pm1(0.5)).collect()
@@ -33,15 +37,19 @@ fn random_error_model(rng: &mut Rng) -> ErrorModel {
     ErrorModel::from_full(&full)
 }
 
-/// Property test: tiled and thread-pooled kernels are bit-identical to
+/// Property test (satellite: kernel-dispatch bit-equality): every
+/// kernel tier, single-thread and thread-pooled, is bit-identical to
 /// the scalar `SubMacEngine` matmul+decode across random shapes,
-/// ragged reduction lengths, error models and seeds.
+/// ragged reduction lengths (packed widths that are and are not
+/// multiples of 64), error models and seeds — scalar == SIMD ==
+/// threaded.
 #[test]
 fn native_kernels_bit_identical_to_submac_engine() {
     let mut rng = Rng::new(0xBE);
     for trial in 0..25 {
         let o = 1 + rng.below(24) as usize;
-        let k = 32 * (1 + rng.below(6) as usize);
+        // 1..=8 groups of 32: odd counts exercise the phantom u64 half
+        let k = 32 * (1 + rng.below(8) as usize);
         let d = 1 + rng.below(300) as usize;
         let w = rand_pm(&mut rng, o * k);
         let x = rand_pm(&mut rng, d * k);
@@ -52,24 +60,92 @@ fn native_kernels_bit_identical_to_submac_engine() {
         let em = random_error_model(&mut rng);
         let seed = rng.next_u32();
         let salt = rng.next_u32();
-        let want = eng.matmul_error(&xb, &em, seed, salt);
-        assert_eq!(
-            kernels::matmul_error_tiled(&eng, &xb, &em, seed, salt),
-            want,
-            "tiled mismatch at trial {trial}"
-        );
+        let want_err = eng.matmul_error(&xb, &em, seed, salt);
+        let want_exact = eng.matmul_exact(&xb);
+        let want_hist = eng.histogram(&xb);
         let threads = 1 + rng.below(7) as usize;
         let pool = ScopedPool::new(threads);
-        assert_eq!(
-            kernels::matmul_error(&pool, &eng, &xb, &em, seed, salt),
-            want,
-            "threaded mismatch at trial {trial} ({threads} threads)"
-        );
-        assert_eq!(
-            kernels::matmul_exact(&pool, &eng, &xb),
-            eng.matmul_exact(&xb),
-            "exact mismatch at trial {trial}"
-        );
+        let seq = ScopedPool::sequential();
+        for kind in tiers() {
+            assert_eq!(
+                kernels::matmul_error(
+                    &seq, &eng, &xb, &em, seed, salt, kind
+                ),
+                want_err,
+                "{} error mismatch at trial {trial}",
+                kind.name()
+            );
+            assert_eq!(
+                kernels::matmul_error(
+                    &pool, &eng, &xb, &em, seed, salt, kind
+                ),
+                want_err,
+                "{} threaded error mismatch at trial {trial} \
+                 ({threads} threads)",
+                kind.name()
+            );
+            assert_eq!(
+                kernels::matmul_exact(&pool, &eng, &xb, kind),
+                want_exact,
+                "{} exact mismatch at trial {trial}",
+                kind.name()
+            );
+            let (out, hist) =
+                kernels::matmul_exact_fused(&pool, &eng, &xb, kind);
+            assert_eq!(
+                out,
+                want_exact,
+                "{} fused out mismatch at trial {trial}",
+                kind.name()
+            );
+            assert_eq!(
+                hist,
+                want_hist,
+                "{} fused hist mismatch at trial {trial}",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// The fused matmul+histogram path reproduces
+/// `SubMacEngine::histogram` exactly on a smoke input, at every pool
+/// size and tier (the CI no-XLA job runs this by name).
+#[test]
+fn fused_histogram_matches_engine() {
+    let mut rng = Rng::new(0xF0);
+    let (o, k, d) = (8usize, 160usize, 97usize);
+    let w = rand_pm(&mut rng, o * k);
+    let x = rand_pm(&mut rng, d * k);
+    let eng = SubMacEngine::new(o, k, &w, k - 7);
+    let xb = BitMatrix::pack(d, k, &x, false);
+    let want_hist = eng.histogram(&xb);
+    let want_out = eng.matmul_exact(&xb);
+    for kind in tiers() {
+        for threads in [1usize, 2, 3, 8, 32] {
+            let pool = ScopedPool::new(threads);
+            let (out, hist) =
+                kernels::matmul_exact_fused(&pool, &eng, &xb, kind);
+            assert_eq!(
+                hist,
+                want_hist,
+                "{} hist at {threads} threads",
+                kind.name()
+            );
+            assert_eq!(
+                out,
+                want_out,
+                "{} out at {threads} threads",
+                kind.name()
+            );
+            // and the separate histogram kernel agrees too
+            assert_eq!(
+                kernels::histogram(&pool, &eng, &xb, kind),
+                want_hist,
+                "{} separate hist at {threads} threads",
+                kind.name()
+            );
+        }
     }
 }
 
@@ -117,6 +193,35 @@ fn every_model_forward_passes() {
             .unwrap();
         assert_eq!(logits.len(), meta.n_classes, "{model}");
         assert!(logits.iter().all(|v| v.is_finite()), "{model}");
+    }
+}
+
+/// Whole-model F_MAC extraction agrees between the fused single-pass
+/// data flow and the pre-fusion two-pass one, across tiers and
+/// thread counts.
+#[test]
+fn fused_fmac_matches_unfused_end_to_end() {
+    let model = "vgg3_tiny";
+    let folded = init_folded(model).unwrap();
+    let spec = Dataset::FashionSyn.spec();
+    let want = NativeBackend::with_options(1, KernelKind::Scalar, false)
+        .fmac(model, &folded, spec.clone(), 16, 9)
+        .unwrap();
+    for kind in tiers() {
+        for (threads, fused) in [(1usize, true), (3, true), (3, false)]
+        {
+            let be = NativeBackend::with_options(threads, kind, fused);
+            let got =
+                be.fmac(model, &folded, spec.clone(), 16, 9).unwrap();
+            assert_eq!(
+                got.per_matmul,
+                want.per_matmul,
+                "{} threads={threads} fused={fused}",
+                kind.name()
+            );
+            assert_eq!(got.sum, want.sum);
+            assert_eq!(got.accuracy, want.accuracy);
+        }
     }
 }
 
@@ -193,7 +298,13 @@ fn session_answers_evaluated_queries_natively() {
     assert!((0.0..=1.0).contains(&acc));
     assert!(point.c > 0.0);
     assert_eq!(point.meta.backend, "native");
+    // `--threads` unset (0) resolves through available_parallelism:
+    // the recorded count is the resolved one, never a literal 0
     assert_eq!(point.meta.threads, session.threads());
+    assert!(point.meta.threads >= 1, "unresolved thread count in meta");
+    // the resolved kernel tier is recorded alongside it
+    assert_eq!(point.meta.kernel, KernelKind::detect().name());
+    assert_eq!(session.kernel_name(), KernelKind::detect().name());
     assert!(
         session.is_untrained(ds),
         "cold store without XLA must flag the untrained fallback"

@@ -7,6 +7,18 @@ use capmin::capmin::Fmac;
 use capmin::data::synth::Dataset;
 use capmin::session::DesignSession;
 
+/// The kernel tiers the running CPU can execute: always scalar, plus
+/// the detected SIMD tier when there is one (bit-equality sweeps run
+/// every entry).
+pub fn kernel_tiers() -> Vec<capmin::backend::kernels::KernelKind> {
+    use capmin::backend::kernels::KernelKind;
+    let mut ts = vec![KernelKind::Scalar];
+    if KernelKind::detect() != KernelKind::Scalar {
+        ts.push(KernelKind::detect());
+    }
+    ts
+}
+
 /// Skip guard: on an `xla` build with real artifacts present, the
 /// session's `folded()` would train through the pipeline (slow, and
 /// covered by tests/integration.rs) — the offline tests exercise the

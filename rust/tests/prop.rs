@@ -20,6 +20,8 @@ use capmin::session::OperatingPointSpec;
 use capmin::util::json::Json;
 use capmin::util::rng::Rng;
 
+mod common;
+
 /// Mini property-test driver: `cases` randomized executions, seed
 /// reported on failure.
 fn forall(name: &str, cases: usize, mut f: impl FnMut(&mut Rng)) {
@@ -214,6 +216,69 @@ fn prop_engine_exact_equals_dense_dot() {
                 }
                 assert_eq!(got[oi * d + di], dot, "({oi},{di})");
             }
+        }
+    });
+}
+
+/// Satellite property: packed-vs-unpacked sub-MAC equality across
+/// ragged widths — true reduction lengths whose packed width is *not*
+/// a multiple of 64 (odd group counts leave a phantom u64 half), with
+/// k in 1..=8 groups — through every kernel tier and a random pool
+/// size, against the unpacked dense dot product.
+#[test]
+fn prop_packed_kernels_equal_unpacked_dense_across_ragged_widths() {
+    use capmin::backend::kernels;
+    use capmin::util::pool::ScopedPool;
+    forall("packed kernels == dense (ragged)", 40, |rng| {
+        let o = 1 + rng.below(10) as usize;
+        // 1..=8 groups: the odd counts give packed widths that are
+        // not multiples of 64 (phantom u64 half)
+        let groups = 1 + rng.below(8) as usize;
+        let kp = groups * 32;
+        // ragged true length within the last group
+        let k = kp - rng.below(31) as usize;
+        let d = 1 + rng.below(40) as usize;
+        let mut w = vec![1.0f32; o * kp];
+        let mut x = vec![-1.0f32; d * kp];
+        for oi in 0..o {
+            for ki in 0..k {
+                w[oi * kp + ki] = rng.pm1(0.5);
+            }
+        }
+        for di in 0..d {
+            for ki in 0..k {
+                x[di * kp + ki] = rng.pm1(0.5);
+            }
+        }
+        let eng = SubMacEngine::new(o, kp, &w, k);
+        let xb = BitMatrix::pack(d, kp, &x, false);
+        let mut dense = vec![0.0f32; o * d];
+        for oi in 0..o {
+            for di in 0..d {
+                let mut dot = 0.0f32;
+                for ki in 0..k {
+                    dot += w[oi * kp + ki] * x[di * kp + ki];
+                }
+                dense[oi * d + di] = dot;
+            }
+        }
+        let pool = ScopedPool::new(1 + rng.below(8) as usize);
+        for kind in common::kernel_tiers() {
+            assert_eq!(
+                kernels::matmul_exact(&pool, &eng, &xb, kind),
+                dense,
+                "{} o={o} k={k} kp={kp} d={d}",
+                kind.name()
+            );
+            let (out, hist) =
+                kernels::matmul_exact_fused(&pool, &eng, &xb, kind);
+            assert_eq!(out, dense, "fused {}", kind.name());
+            assert_eq!(
+                hist.iter().sum::<u64>(),
+                (o * d * groups) as u64,
+                "fused hist total {}",
+                kind.name()
+            );
         }
     });
 }
