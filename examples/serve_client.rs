@@ -1,0 +1,111 @@
+//! Quickstart for `capmin serve` (DESIGN.md §12): drive a serving
+//! process over its newline-delimited JSON protocol — an operating
+//! point, a micro-batched inference, server stats, then a graceful
+//! shutdown.
+//!
+//!   # self-contained (spawns an in-process server on a free port):
+//!   cargo run --release --example serve_client
+//!
+//!   # against a running `capmin serve`:
+//!   capmin serve --addr 127.0.0.1:7878 --dataset fashion_syn --quick &
+//!   cargo run --release --example serve_client -- 127.0.0.1:7878
+//!
+//! With an address argument the example also sends the shutdown (so a
+//! CI smoke can start a server, run this, and wait for a clean exit).
+
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use anyhow::Result;
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::data::synth::Dataset;
+use capmin::serve::{server, Client, ServeOptions};
+use capmin::util::table::si;
+
+fn main() -> Result<()> {
+    // either connect to the given server, or spawn one of our own
+    let external: Option<SocketAddr> = match std::env::args().nth(1) {
+        Some(a) => Some(
+            a.parse()
+                .map_err(|e| anyhow::anyhow!("bad addr `{a}`: {e}"))?,
+        ),
+        None => None,
+    };
+    let mut own = None;
+    let addr = match external {
+        Some(a) => a,
+        None => {
+            let mut cfg = ExperimentConfig::default();
+            cfg.backend = "native".into();
+            cfg.mc_samples = 200;
+            cfg.hist_limit = 64;
+            cfg.run_dir = std::env::temp_dir()
+                .join("capmin_serve_example")
+                .to_str()
+                .unwrap()
+                .into();
+            let opts =
+                ServeOptions::new("127.0.0.1:0".parse().unwrap());
+            let srv = server::spawn(cfg, opts)?;
+            let addr = srv.addr();
+            println!("spawned an in-process server on {addr}");
+            own = Some(srv);
+            addr
+        }
+    };
+
+    let mut client =
+        Client::connect_retry(addr, Duration::from_secs(60))?;
+
+    // 1. a codesign query — answered from the warm session's caches
+    //    after the first hit
+    let ds = Dataset::FashionSyn.spec();
+    let p = client.point(ds.name, 14, 0.02, 0, false)?;
+    println!(
+        "point {}@k=14: C = {}, GRT = {}, window [{}, {}]",
+        ds.name,
+        si(p.req("c").as_f64(), "F"),
+        si(p.req("grt").as_f64(), "s"),
+        p.req("window").req("q_lo").as_usize(),
+        p.req("window").req("q_hi").as_usize(),
+    );
+
+    // 2. inference at that operating point: two +-1 samples; had other
+    //    clients hit the server right now, the batcher would coalesce
+    //    us with them — without changing a bit of this reply
+    let mut rng = capmin::util::rng::Rng::new(7);
+    let xs: Vec<Vec<f32>> = (0..2)
+        .map(|_| (0..ds.pixels()).map(|_| rng.pm1(0.5)).collect())
+        .collect();
+    let reply = client.infer(ds.name, 14, 0.02, 0, 1, &xs)?;
+    let classes: Vec<usize> = reply
+        .req("classes")
+        .as_arr()
+        .iter()
+        .map(|c| c.as_usize())
+        .collect();
+    println!("infer: {} samples -> classes {:?}", xs.len(), classes);
+
+    // 3. server stats: counters, micro-batch and latency histograms,
+    //    and the (startup-fixed) thread crews
+    let st = client.stats()?;
+    let stats = st.req("stats");
+    println!(
+        "stats: {} infers over {} micro-batches | workers {} | \
+         solve crew {} | infer crew {}",
+        stats.req("requests").req("infer").as_usize(),
+        stats.req("infer").req("micro_batches").as_usize(),
+        stats.req("server").req("workers").as_usize(),
+        stats.req("server").req("session_pool_workers").as_usize(),
+        stats.req("server").req("infer_pool_workers").as_usize(),
+    );
+
+    // 4. graceful shutdown: the server drains in-flight work first
+    client.shutdown()?;
+    println!("shutdown acknowledged (drain started)");
+    if let Some(srv) = own {
+        srv.join()?;
+        println!("in-process server drained and exited cleanly");
+    }
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! Loadgen bench for `capmin serve` (DESIGN.md §12): real TCP clients
+//! hammering an in-process server with single-sample `Infer` requests
+//! on the cifar_syn smoke model, once with micro-batching disabled
+//! (`max_batch = 1`) and once enabled (`max_batch = 8`), plus a
+//! warm-cache `Point` record. Reports throughput and p50/p99 latency
+//! per configuration and writes `BENCH_serve.json` (uniform
+//! bench_harness schema; `speedup_vs_baseline` on the batched row is
+//! the throughput ratio over the unbatched server — the acceptance
+//! gate's number).
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use bench_harness::Emitter;
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::data::synth::Dataset;
+use capmin::serve::{server, Client, ServeOptions};
+
+const DS: &str = "cifar_syn";
+const K: usize = 14;
+const SIGMA: f64 = 0.02;
+const CLIENTS: usize = 8;
+
+fn serve_cfg(tag: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = "native".into();
+    // identical resources for both configurations (and enough
+    // connection workers for every storm client): only --max-batch
+    // differs between the b1 and b8 runs
+    cfg.threads = CLIENTS;
+    cfg.mc_samples = 200;
+    cfg.hist_limit = if bench_harness::fast_mode() { 16 } else { 64 };
+    cfg.run_dir = std::env::temp_dir()
+        .join(format!(
+            "capmin_serve_bench_{tag}_{}",
+            std::process::id()
+        ))
+        .to_str()
+        .unwrap()
+        .into();
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    cfg
+}
+
+fn samples(seed: u64, n: usize) -> Vec<Vec<f32>> {
+    let px = Dataset::CifarSyn.spec().pixels();
+    let mut rng = capmin::util::rng::Rng::new(seed);
+    (0..n)
+        .map(|_| (0..px).map(|_| rng.pm1(0.5)).collect())
+        .collect()
+}
+
+struct LoadResult {
+    /// Requests per second over the whole storm.
+    throughput: f64,
+    p50: Duration,
+    p99: Duration,
+    requests: usize,
+}
+
+/// `CLIENTS` concurrent connections, `per_client` single-sample
+/// infers each, against a fresh server with the given batch policy.
+fn storm(max_batch: usize, per_client: usize) -> LoadResult {
+    let tag = format!("b{max_batch}");
+    let cfg = serve_cfg(&tag);
+    let run_dir = cfg.run_dir.clone();
+    let mut opts =
+        ServeOptions::new("127.0.0.1:0".parse::<SocketAddr>().unwrap());
+    opts.max_batch = max_batch;
+    opts.max_wait_ms = 2;
+    let srv = server::spawn(cfg, opts).unwrap();
+    let addr = srv.addr();
+
+    // pay the one-time warmup (fmac + solve + pack) outside the
+    // measured window, then release the connection so every worker
+    // slot belongs to the storm
+    let mut warm = Client::connect(addr).unwrap();
+    warm.infer_logits(DS, K, SIGMA, 0, 1, &samples(1, 1))
+        .unwrap();
+    drop(warm);
+
+    let t0 = Instant::now();
+    let mut latencies: Vec<Duration> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|ci| {
+                s.spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    let xs = samples(100 + ci as u64, 1);
+                    let mut lats = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let q0 = Instant::now();
+                        c.infer_logits(DS, K, SIGMA, 0, 1, &xs)
+                            .unwrap();
+                        lats.push(q0.elapsed());
+                    }
+                    lats
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect()
+    });
+    let wall = t0.elapsed();
+    let mut fin = Client::connect(addr).unwrap();
+    fin.shutdown().unwrap();
+    srv.join().unwrap();
+    let _ = std::fs::remove_dir_all(&run_dir);
+
+    latencies.sort();
+    let n = latencies.len();
+    LoadResult {
+        throughput: n as f64 / wall.as_secs_f64(),
+        p50: latencies[n / 2],
+        p99: latencies[((n as f64 * 0.99) as usize).min(n - 1)],
+        requests: n,
+    }
+}
+
+fn report(name: &str, r: &LoadResult) {
+    println!(
+        "{name:<26} {:>8.1} req/s  p50 {:>8.2} ms  p99 {:>8.2} ms  \
+         ({} requests, {CLIENTS} clients)",
+        r.throughput,
+        r.p50.as_secs_f64() * 1e3,
+        r.p99.as_secs_f64() * 1e3,
+        r.requests
+    );
+}
+
+fn main() {
+    let per_client = bench_harness::scaled(24);
+    let mut emitter = Emitter::new("serve");
+    bench_harness::header("capmin serve loadgen (cifar_syn, native)");
+
+    let b1 = storm(1, per_client);
+    report("infer max-batch=1", &b1);
+    emitter.push(
+        "serve_infer_b1_p50_latency",
+        b1.requests,
+        b1.p50.as_nanos() as f64,
+        None,
+    );
+    emitter.push("serve_infer_b1_throughput_rps", b1.requests,
+        // record throughput as its period so the schema stays
+        // time-shaped: median_ns = ns per request at the observed rate
+        1e9 / b1.throughput, None);
+
+    let b8 = storm(8, per_client);
+    report("infer max-batch=8", &b8);
+    emitter.push(
+        "serve_infer_b8_p50_latency",
+        b8.requests,
+        b8.p50.as_nanos() as f64,
+        None,
+    );
+    emitter.push(
+        "serve_infer_b8_throughput_rps",
+        b8.requests,
+        1e9 / b8.throughput,
+        // the acceptance number: batched throughput over unbatched
+        Some(b8.throughput / b1.throughput),
+    );
+    println!(
+        "batched throughput = {:.2}x the max-batch=1 configuration",
+        b8.throughput / b1.throughput
+    );
+
+    // warm Point queries: the memoized solve path end-to-end over TCP
+    {
+        let cfg = serve_cfg("point");
+        let run_dir = cfg.run_dir.clone();
+        let opts = ServeOptions::new(
+            "127.0.0.1:0".parse::<SocketAddr>().unwrap(),
+        );
+        let srv = server::spawn(cfg, opts).unwrap();
+        let mut c = Client::connect(srv.addr()).unwrap();
+        c.point(DS, K, SIGMA, 0, false).unwrap(); // solve once
+        let iters = bench_harness::scaled(200);
+        let r = bench_harness::bench("point (warm cache)", 3, iters, || {
+            c.point(DS, K, SIGMA, 0, false).unwrap();
+        });
+        bench_harness::report(&r, 1.0, "req");
+        emitter.add(&r, None);
+        c.shutdown().unwrap();
+        srv.join().unwrap();
+        let _ = std::fs::remove_dir_all(&run_dir);
+    }
+
+    emitter.write();
+}

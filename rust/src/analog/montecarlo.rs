@@ -61,6 +61,14 @@ impl MonteCarlo {
         self
     }
 
+    /// Fan over a caller-supplied pool instead of constructing one —
+    /// a long-running session shares one persistent crew across every
+    /// solve (DESIGN.md §12). Results are bit-identical either way.
+    pub fn with_pool(mut self, pool: ScopedPool) -> MonteCarlo {
+        self.pool = pool;
+        self
+    }
+
     /// One varied read-out of level `m` through `set`: sample the current,
     /// fire, quantize, decode.
     pub fn sample_decode(

@@ -17,7 +17,7 @@
 //! F_MAC sweep allocates nothing.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, ensure, Result};
 
@@ -109,11 +109,13 @@ pub struct NativePlan {
     affines: Vec<(Vec<f32>, Vec<f32>)>,
     /// Final f32 logit bias.
     out_bias: Vec<f32>,
-    /// Scratch freelists, shared across layers and batches. The
-    /// backend facade is single-threaded (the trait is deliberately
-    /// not Sync), so the lock is uncontended — it only makes the
-    /// shared `Arc<NativePlan>` own its scratch safely.
-    scratch: Mutex<Arena>,
+    /// Freelist of scratch arenas, shared across layers, batches and
+    /// requests. Sequential passes recycle one arena; the serve
+    /// batcher's per-request fan ([`NativeBackend::forward_many`])
+    /// checks out one arena per concurrent request and parks them all
+    /// back here, so the steady state of a serving process allocates
+    /// nothing between micro-batches.
+    arenas: Mutex<Vec<Arena>>,
 }
 
 impl NativePlan {
@@ -181,7 +183,7 @@ impl NativePlan {
             pads,
             affines,
             out_bias,
-            scratch: Mutex::new(Arena::default()),
+            arenas: Mutex::new(vec![]),
         })
     }
 
@@ -189,8 +191,22 @@ impl NativePlan {
         self.engines.len()
     }
 
-    fn scratch(&self) -> MutexGuard<'_, Arena> {
-        self.scratch.lock().unwrap()
+    /// Check a scratch arena out of the plan's freelist (allocating an
+    /// empty one only when every arena is in use by a concurrent
+    /// request).
+    fn take_arena(&self) -> Arena {
+        self.arenas.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Park an arena back for the next pass or request.
+    fn put_arena(&self, a: Arena) {
+        self.arenas.lock().unwrap().push(a);
+    }
+
+    /// Buffers currently parked across all of the plan's arenas
+    /// (tests pin steady-state reuse).
+    pub fn parked(&self) -> usize {
+        self.arenas.lock().unwrap().iter().map(Arena::parked).sum()
     }
 }
 
@@ -623,12 +639,28 @@ impl NativeBackend {
         kind: KernelKind,
         fused: bool,
     ) -> NativeBackend {
+        NativeBackend::with_pool(ScopedPool::new(threads), kind, fused)
+    }
+
+    /// Run on a caller-supplied pool — a server passes
+    /// [`ScopedPool::persistent`] so kernel workers are spawned once
+    /// at startup and reused by every request (DESIGN.md §12).
+    pub fn with_pool(
+        pool: ScopedPool,
+        kind: KernelKind,
+        fused: bool,
+    ) -> NativeBackend {
         NativeBackend {
-            pool: ScopedPool::new(threads),
+            pool,
             kind,
             fused,
             plans: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// The backend's worker pool (shared with its kernels).
+    pub fn pool(&self) -> &ScopedPool {
+        &self.pool
     }
 
     pub fn threads(&self) -> usize {
@@ -652,6 +684,85 @@ impl NativeBackend {
         self.plans.lock().unwrap().insert(key, plan.clone());
         Ok(plan)
     }
+
+    /// One forward pass exactly as [`InferenceBackend::logits`] would
+    /// run it, on the given kernel pool, with the scratch arena checked
+    /// out of (and parked back into) the plan's freelist.
+    fn forward_one(
+        &self,
+        r: &ForwardReq,
+        pool: &ScopedPool,
+    ) -> Result<Vec<f32>> {
+        let plan = self.plan(r.model, r.folded)?;
+        ensure!(
+            r.ems.len() == plan.n_matmuls(),
+            "{}: need {} error models, got {}",
+            r.model,
+            plan.n_matmuls(),
+            r.ems.len()
+        );
+        let mut scratch = plan.take_arena();
+        let out = Exec {
+            plan: &plan,
+            pool,
+            kind: self.kind,
+            fused: self.fused,
+            mode: Mode::Error {
+                ems: r.ems,
+                seed: r.seed,
+            },
+            hist: None,
+            scratch: &mut scratch,
+            eng_i: 0,
+            aff_i: 0,
+        }
+        .run(r.x, r.batch);
+        plan.put_arena(scratch);
+        out
+    }
+
+    /// Execute a micro-batch of independent forward requests in one
+    /// backend entry (the serve batcher's hot path, DESIGN.md §12).
+    ///
+    /// Every request runs exactly as it would alone — its own batch,
+    /// seed and error models through the same `Exec` walk — so a reply
+    /// is bit-identical whether or not the request was coalesced with
+    /// others. What batching buys is *where* the work runs: a lone
+    /// request gets the whole pool for its kernels (intra-op), while
+    /// two or more requests fan out across the pool workers
+    /// (one sequential forward each, every stage parallel — not just
+    /// the matmuls), which is what scales server throughput. Plans
+    /// are resolved once up front and scratch arenas are recycled
+    /// across requests via each plan's freelist.
+    pub fn forward_many(
+        &self,
+        reqs: &[ForwardReq],
+    ) -> Vec<Result<Vec<f32>>> {
+        if reqs.len() <= 1 {
+            return reqs
+                .iter()
+                .map(|r| self.forward_one(r, &self.pool))
+                .collect();
+        }
+        // pack each distinct model once, on the caller's thread,
+        // before fanning out
+        for r in reqs {
+            let _ = self.plan(r.model, r.folded);
+        }
+        let seq = ScopedPool::sequential();
+        self.pool
+            .map(reqs.len(), |i| self.forward_one(&reqs[i], &seq))
+    }
+}
+
+/// One request of a [`NativeBackend::forward_many`] micro-batch.
+pub struct ForwardReq<'a> {
+    pub model: &'a str,
+    pub folded: &'a [NamedTensor],
+    pub ems: &'a [ErrorModel],
+    pub seed: u32,
+    pub x: &'a [f32],
+    pub batch: usize,
 }
 
 impl InferenceBackend for NativeBackend {
@@ -668,26 +779,17 @@ impl InferenceBackend for NativeBackend {
         ems: &[ErrorModel],
         seed: u32,
     ) -> Result<Vec<f32>> {
-        let plan = self.plan(model, folded)?;
-        ensure!(
-            ems.len() == plan.n_matmuls(),
-            "{model}: need {} error models, got {}",
-            plan.n_matmuls(),
-            ems.len()
-        );
-        let mut scratch = plan.scratch();
-        Exec {
-            plan: &plan,
-            pool: &self.pool,
-            kind: self.kind,
-            fused: self.fused,
-            mode: Mode::Error { ems, seed },
-            hist: None,
-            scratch: &mut *scratch,
-            eng_i: 0,
-            aff_i: 0,
-        }
-        .run(x, batch)
+        self.forward_one(
+            &ForwardReq {
+                model,
+                folded,
+                ems,
+                seed,
+                x,
+                batch,
+            },
+            &self.pool,
+        )
     }
 
     /// Same batch/seed schedule as the trait default, but resolves the
@@ -715,7 +817,7 @@ impl InferenceBackend for NativeBackend {
         let mut loader = Loader::new(spec, Split::Test, eb, limit, 0xE7A1);
         let n_batches = (limit / eb).max(1);
         let (mut correct, mut total) = (0usize, 0usize);
-        let mut scratch = plan.scratch();
+        let mut scratch = plan.take_arena();
         for bi in 0..n_batches {
             let batch = loader.next_batch();
             let logits = Exec {
@@ -729,7 +831,7 @@ impl InferenceBackend for NativeBackend {
                     seed: seed.wrapping_add(bi as u32 * 0x9E37),
                 },
                 hist: None,
-                scratch: &mut *scratch,
+                scratch: &mut scratch,
                 eng_i: 0,
                 aff_i: 0,
             }
@@ -745,6 +847,7 @@ impl InferenceBackend for NativeBackend {
             // the logits buffer came from the arena — hand it back
             scratch.put_f32(logits);
         }
+        plan.put_arena(scratch);
         Ok(correct as f64 / total.max(1) as f64)
     }
 
@@ -764,7 +867,7 @@ impl InferenceBackend for NativeBackend {
         let n_batches = (limit / hb).max(1);
         let mut per = vec![Fmac::new(); plan.n_matmuls()];
         let (mut correct, mut total) = (0usize, 0usize);
-        let mut scratch = plan.scratch();
+        let mut scratch = plan.take_arena();
         for _ in 0..n_batches {
             let batch = loader.next_batch();
             let logits = Exec {
@@ -774,7 +877,7 @@ impl InferenceBackend for NativeBackend {
                 fused: self.fused,
                 mode: Mode::Exact,
                 hist: Some(&mut per),
-                scratch: &mut *scratch,
+                scratch: &mut scratch,
                 eng_i: 0,
                 aff_i: 0,
             }
@@ -789,6 +892,7 @@ impl InferenceBackend for NativeBackend {
             }
             scratch.put_f32(logits);
         }
+        plan.put_arena(scratch);
         let mut sum = Fmac::new();
         for f in &per {
             sum.merge(f);
@@ -948,11 +1052,118 @@ mod tests {
         let spec = crate::data::synth::Dataset::FashionSyn.spec();
         let a = be.fmac("vgg3_tiny", &folded, spec.clone(), 16, 9).unwrap();
         let plan = be.plan("vgg3_tiny", &folded).unwrap();
-        let parked = plan.scratch().parked();
+        let parked = plan.parked();
         assert!(parked > 0, "arena empty after a pass");
         // a second pass must not grow the freelists (steady state)
         let b = be.fmac("vgg3_tiny", &folded, spec, 16, 9).unwrap();
         assert_eq!(a.per_matmul, b.per_matmul);
-        assert_eq!(plan.scratch().parked(), parked, "arena grew");
+        assert_eq!(plan.parked(), parked, "arena grew");
+    }
+
+    #[test]
+    fn forward_many_is_bit_identical_to_solo_requests() {
+        let folded = init_folded("vgg3_tiny").unwrap();
+        let meta = arch::model_meta("vgg3_tiny").unwrap();
+        let px: usize = meta.in_shape.iter().product();
+        let ems: Vec<ErrorModel> = (0..meta.n_matmuls())
+            .map(|_| ErrorModel::identity())
+            .collect();
+        let mut rng = crate::util::rng::Rng::new(33);
+        // six requests with distinct inputs, seeds and batch sizes
+        let xs: Vec<(Vec<f32>, u32, usize)> = (0..6)
+            .map(|i| {
+                let b = 1 + (i % 3);
+                let x: Vec<f32> =
+                    (0..b * px).map(|_| rng.pm1(0.5)).collect();
+                (x, 7 + i as u32, b)
+            })
+            .collect();
+        let be = NativeBackend::new(3);
+        // solo replies via the ordinary logits path
+        let solo: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|(x, seed, b)| {
+                be.logits("vgg3_tiny", &folded, x, *b, &ems, *seed)
+                    .unwrap()
+            })
+            .collect();
+        let reqs: Vec<ForwardReq> = xs
+            .iter()
+            .map(|(x, seed, b)| ForwardReq {
+                model: "vgg3_tiny",
+                folded: &folded,
+                ems: &ems,
+                seed: *seed,
+                x,
+                batch: *b,
+            })
+            .collect();
+        let batched = be.forward_many(&reqs);
+        for (i, (got, want)) in
+            batched.iter().zip(solo.iter()).enumerate()
+        {
+            assert_eq!(
+                got.as_ref().unwrap(),
+                want,
+                "request {i} changed under micro-batching"
+            );
+        }
+        // later micro-batches recycle the parked arenas: the freelist
+        // never outgrows the worker count, however batches schedule
+        let plan = be.plan("vgg3_tiny", &folded).unwrap();
+        assert!(plan.parked() > 0);
+        for _ in 0..4 {
+            let again = be.forward_many(&reqs);
+            for (got, want) in again.iter().zip(solo.iter()) {
+                assert_eq!(got.as_ref().unwrap(), want);
+            }
+            let arenas = be
+                .plans
+                .lock()
+                .unwrap()
+                .values()
+                .map(|p| p.arenas.lock().unwrap().len())
+                .sum::<usize>();
+            assert!(
+                arenas <= be.pool.threads(),
+                "arena freelist outgrew the worker count: {arenas}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_many_reports_per_request_errors() {
+        let folded = init_folded("vgg3_tiny").unwrap();
+        let meta = arch::model_meta("vgg3_tiny").unwrap();
+        let px: usize = meta.in_shape.iter().product();
+        let ems: Vec<ErrorModel> = (0..meta.n_matmuls())
+            .map(|_| ErrorModel::identity())
+            .collect();
+        let good: Vec<f32> = vec![1.0; px];
+        let bad_ems: Vec<ErrorModel> = vec![ErrorModel::identity()];
+        let reqs = vec![
+            ForwardReq {
+                model: "vgg3_tiny",
+                folded: &folded,
+                ems: &ems,
+                seed: 1,
+                x: &good,
+                batch: 1,
+            },
+            // wrong error-model arity: this request fails, the other
+            // still answers
+            ForwardReq {
+                model: "vgg3_tiny",
+                folded: &folded,
+                ems: &bad_ems,
+                seed: 1,
+                x: &good,
+                batch: 1,
+            },
+        ];
+        let be = NativeBackend::new(2);
+        let out = be.forward_many(&reqs);
+        assert!(out[0].is_ok());
+        assert!(out[1].is_err());
     }
 }

@@ -26,6 +26,12 @@
 //! the grids across every selected plan, solves the union in one
 //! `query_many` batch, and renders/emits/resumes through one
 //! reporter (`capmin suite`).
+//!
+//! For long-running, multi-client use, [`serve`] (DESIGN.md §12)
+//! keeps one warm session — point cache, folded models, packed
+//! weights, scratch arenas — behind a newline-delimited-JSON TCP
+//! protocol (`capmin serve`), micro-batching concurrent inference
+//! requests with replies bit-identical to solo execution.
 
 pub mod analog;
 pub mod backend;
@@ -36,5 +42,6 @@ pub mod data;
 pub mod experiments;
 pub mod plan;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod util;

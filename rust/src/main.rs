@@ -24,7 +24,8 @@ const KNOWN_OPTS: &[&str] = &[
     "dataset", "steps", "lr", "lr-halve-every", "train-limit",
     "eval-limit", "hist-limit", "sigma", "mc-samples", "seeds", "ks",
     "k", "phi", "engine", "backend", "threads", "kernel", "run-dir",
-    "seed", "emit", "plans", "suite-id",
+    "seed", "emit", "plans", "suite-id", "addr", "max-batch",
+    "max-wait-ms",
 ];
 
 /// Every bare `--flag`.
@@ -70,6 +71,16 @@ session commands:
   point           answer one codesign query and print the operating
                   point (--k N --phi N --no-eval; sigma from --sigma);
                   the JSON lands in <run-dir>/points/<key>.json
+  serve           long-running operating-point + inference server
+                  (DESIGN.md §12): one warm DesignSession (point
+                  cache, folded models, packed weights) behind a
+                  newline-delimited JSON TCP protocol; concurrent
+                  infer requests are micro-batched with replies
+                  bit-identical to solo execution, and all worker
+                  threads/pools are spawned once at startup
+                  (--addr HOST:PORT  --max-batch N  --max-wait-ms N;
+                   --dataset pre-warms; shut down with a {"type":
+                   "shutdown"} request — in-flight work drains first)
   train           train a model on a dataset (cached in runs/; needs
                   the xla build — native builds fall back to a flagged
                   untrained init)
@@ -107,6 +118,15 @@ common options:
                            (xla backend only)
   --run-dir DIR            cache directory (default runs/)
   --no-point-cache         keep operating points in memory only
+
+serve options:
+  --addr HOST:PORT         bind address (default 127.0.0.1:7878;
+                           port 0 picks a free port and prints it)
+  --max-batch N            most infer requests coalesced into one
+                           native forward entry (default 8; 1 = no
+                           batching)
+  --max-wait-ms N          longest a ready infer request waits for
+                           company (default 2)
 
 suite options:
   --plans a,b,c            subset of plans to run (default: all)
@@ -299,6 +319,39 @@ fn main() -> Result<()> {
                  hits | {} solves | {} evals",
                 s.queries, s.mem_hits, s.disk_hits, s.solves, s.evals
             );
+        }
+        "serve" => {
+            anyhow::ensure!(
+                session.backend_name() == "native",
+                "capmin serve runs on the native backend (the PJRT \
+                 client is single-process; drop --backend xla)"
+            );
+            let addr = args.addr("addr", "127.0.0.1:7878")?;
+            let max_batch = args.usize_or("max-batch", 8);
+            anyhow::ensure!(
+                max_batch >= 1,
+                "bad --max-batch `{max_batch}`: need at least 1"
+            );
+            let mut opts = capmin::serve::ServeOptions::new(addr);
+            opts.max_batch = max_batch;
+            opts.max_wait_ms =
+                args.usize_or("max-wait-ms", 2) as u64;
+            // pre-warm only what was asked for; everything else warms
+            // lazily on first request
+            if args.get("dataset").is_some() {
+                opts.warm = datasets.clone();
+            }
+            let cfg = session.config().clone();
+            drop(session); // the server owns its own warm session
+            println!(
+                "capmin serve: binding {addr} (max-batch \
+                 {max_batch}, max-wait {} ms, native backend) — \
+                 send {{\"v\":1,\"id\":1,\"type\":\"shutdown\"}} to \
+                 drain and exit",
+                opts.max_wait_ms
+            );
+            capmin::serve::server::run(cfg, opts)?;
+            println!("capmin serve: drained and stopped");
         }
         "train" => {
             for ds in datasets {

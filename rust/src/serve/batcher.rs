@@ -1,0 +1,254 @@
+//! The micro-batching queue (DESIGN.md §12): one thread owning the
+//! serving [`NativeBackend`], coalescing concurrent `Infer` jobs into
+//! a single [`NativeBackend::forward_many`] entry.
+//!
+//! Timing: the batcher blocks until a first job arrives, then keeps
+//! collecting until it holds `max_batch` jobs or `max_wait` has
+//! elapsed since the first one — the classic latency/throughput knob
+//! pair (`--max-batch` / `--max-wait-ms`). Each job is executed
+//! exactly as it would be alone (its own batch, seed and error
+//! models), so replies are **bit-identical** to sequential execution —
+//! coalescing only changes where the work runs, never what it
+//! computes (`tests/serve.rs` pins this). With `max_batch = 1` the
+//! batcher degenerates to a plain serial executor whose lone request
+//! gets the whole kernel pool.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::backend::native::{ForwardReq, NativeBackend};
+use crate::bnn::ErrorModel;
+use crate::coordinator::store::NamedTensor;
+
+use super::metrics::Metrics;
+
+/// One queued inference job: everything the forward needs, resolved
+/// by the worker (via the session thread) before enqueueing, so the
+/// batcher itself never blocks on solves or model folding.
+pub struct InferJob {
+    pub model: &'static str,
+    pub n_classes: usize,
+    pub folded: Arc<Vec<NamedTensor>>,
+    pub ems: Arc<Vec<ErrorModel>>,
+    pub seed: u32,
+    /// Row-major samples, `batch * pixels` values.
+    pub x: Vec<f32>,
+    pub batch: usize,
+    /// Where the connection worker waits for the result.
+    pub reply: Sender<Result<InferDone, String>>,
+    /// Enqueue time, for the end-to-end latency histogram.
+    pub t0: Instant,
+}
+
+/// A finished job: flat logits plus the row width to slice them with.
+pub struct InferDone {
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub n_classes: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Most requests coalesced into one `forward_many` entry.
+    pub max_batch: usize,
+    /// Longest a ready job waits for company.
+    pub max_wait: Duration,
+}
+
+/// The batcher thread body: runs until every job sender is dropped
+/// (server drain), finishing all queued jobs first — shutdown never
+/// abandons an accepted request.
+pub fn run(
+    rx: Receiver<InferJob>,
+    backend: NativeBackend,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+) {
+    let max_batch = policy.max_batch.max(1);
+    loop {
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // all senders gone and queue empty
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + policy.max_wait;
+        while jobs.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        execute(&backend, &metrics, jobs);
+    }
+}
+
+/// Run one micro-batch and fan the results back to the waiting
+/// workers.
+fn execute(
+    backend: &NativeBackend,
+    metrics: &Metrics,
+    jobs: Vec<InferJob>,
+) {
+    let reqs: Vec<ForwardReq<'_>> = jobs
+        .iter()
+        .map(|j| ForwardReq {
+            model: j.model,
+            folded: &j.folded,
+            ems: &j.ems,
+            seed: j.seed,
+            x: &j.x,
+            batch: j.batch,
+        })
+        .collect();
+    let outs = backend.forward_many(&reqs);
+    metrics.record_batch(
+        jobs.len(),
+        jobs.iter().map(|j| j.batch).sum(),
+    );
+    for (job, out) in jobs.into_iter().zip(outs) {
+        let reply = out
+            .map(|logits| InferDone {
+                logits,
+                batch: job.batch,
+                n_classes: job.n_classes,
+            })
+            .map_err(|e| e.to_string());
+        metrics
+            .infer_latency_us
+            .record(job.t0.elapsed().as_micros() as u64);
+        // a worker that gave up (connection died) just drops the
+        // receiver; the send error is not the batcher's problem
+        let _ = job.reply.send(reply);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::arch;
+    use crate::backend::native::init_folded;
+    use std::sync::mpsc;
+
+    fn mk_job(
+        folded: &Arc<Vec<NamedTensor>>,
+        ems: &Arc<Vec<ErrorModel>>,
+        seed: u32,
+        px: usize,
+    ) -> (InferJob, mpsc::Receiver<Result<InferDone, String>>) {
+        let (tx, rx) = mpsc::channel();
+        let mut rng = crate::util::rng::Rng::new(seed as u64 + 77);
+        let x: Vec<f32> = (0..px).map(|_| rng.pm1(0.5)).collect();
+        (
+            InferJob {
+                model: "vgg3_tiny",
+                n_classes: arch::model_meta("vgg3_tiny")
+                    .unwrap()
+                    .n_classes,
+                folded: folded.clone(),
+                ems: ems.clone(),
+                seed,
+                x,
+                batch: 1,
+                reply: tx,
+                t0: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batcher_coalesces_and_replies_bit_identically() {
+        let meta = arch::model_meta("vgg3_tiny").unwrap();
+        let folded = Arc::new(init_folded("vgg3_tiny").unwrap());
+        let ems = Arc::new(
+            (0..meta.n_matmuls())
+                .map(|_| ErrorModel::identity())
+                .collect::<Vec<_>>(),
+        );
+        let px: usize = meta.in_shape.iter().product();
+
+        // reference: each job alone through a max_batch=1 batcher
+        let solo_backend = NativeBackend::new(2);
+        let mut solo = vec![];
+        for seed in 0..5u32 {
+            let (job, rx) = mk_job(&folded, &ems, seed, px);
+            execute(
+                &solo_backend,
+                &Metrics::new(),
+                vec![job],
+            );
+            solo.push(rx.recv().unwrap().unwrap().logits);
+        }
+
+        // the same five jobs coalesced through a running batcher
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel();
+        let policy = BatchPolicy {
+            max_batch: 5,
+            max_wait: Duration::from_millis(2000),
+        };
+        let m2 = metrics.clone();
+        let h = std::thread::spawn(move || {
+            run(rx, NativeBackend::new(2), policy, m2)
+        });
+        let replies: Vec<_> = (0..5u32)
+            .map(|seed| {
+                let (job, reply_rx) = mk_job(&folded, &ems, seed, px);
+                tx.send(job).unwrap();
+                reply_rx
+            })
+            .collect();
+        for (seed, reply_rx) in replies.into_iter().enumerate() {
+            let got = reply_rx.recv().unwrap().unwrap();
+            assert_eq!(
+                got.logits, solo[seed],
+                "seed {seed} changed under micro-batching"
+            );
+            assert_eq!(got.n_classes, meta.n_classes);
+        }
+        drop(tx); // drain: batcher exits once the queue is empty
+        h.join().unwrap();
+        // all five landed in micro-batches; with a 2 s window at least
+        // one batch held two or more
+        assert!(metrics.max_batch() >= 2, "nothing coalesced");
+    }
+
+    #[test]
+    fn batcher_drains_queued_jobs_on_disconnect() {
+        let meta = arch::model_meta("vgg3_tiny").unwrap();
+        let folded = Arc::new(init_folded("vgg3_tiny").unwrap());
+        let ems = Arc::new(
+            (0..meta.n_matmuls())
+                .map(|_| ErrorModel::identity())
+                .collect::<Vec<_>>(),
+        );
+        let px: usize = meta.in_shape.iter().product();
+        let (tx, rx) = mpsc::channel();
+        let mut reply_rxs = vec![];
+        for seed in 0..4u32 {
+            let (job, reply_rx) = mk_job(&folded, &ems, seed, px);
+            tx.send(job).unwrap();
+            reply_rxs.push(reply_rx);
+        }
+        // every sender is gone *before* the batcher starts: it must
+        // still answer all queued jobs, then exit
+        drop(tx);
+        let policy = BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(5),
+        };
+        let h = std::thread::spawn(move || {
+            run(rx, NativeBackend::new(1), policy, Arc::new(Metrics::new()))
+        });
+        for reply_rx in reply_rxs {
+            assert!(reply_rx.recv().unwrap().is_ok());
+        }
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,204 @@
+//! Blocking line-protocol client for `capmin serve` (DESIGN.md §12):
+//! one request per call, replies matched by construction (the protocol
+//! answers in order per connection). Shared by the loopback tests, the
+//! loadgen bench and `examples/serve_client.rs` — and small enough to
+//! be the reference for writing one in any other language.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+use super::protocol::PROTOCOL_VERSION;
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            next_id: 1,
+        })
+    }
+
+    /// Retry `connect` until `timeout` elapses — for drivers that
+    /// race a just-spawned server (the CI smoke does).
+    pub fn connect_retry(
+        addr: SocketAddr,
+        timeout: Duration,
+    ) -> Result<Client> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match Client::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) if Instant::now() >= deadline => {
+                    return Err(e.context("server never came up"))
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+
+    fn fresh_id(&mut self) -> f64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id as f64
+    }
+
+    /// Send one raw line and read one reply line (tests use this to
+    /// probe malformed input; the reply may be an `ok: false` error).
+    pub fn send_raw(&mut self, line: &str) -> Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply)?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        Json::parse(&reply)
+            .map_err(|e| anyhow!("bad reply line: {e} in {reply:?}"))
+    }
+
+    /// Send a typed request object (v and id filled in), returning the
+    /// reply after checking `ok` and the echoed id.
+    fn request(
+        &mut self,
+        ty: &str,
+        mut fields: Vec<(&str, Json)>,
+    ) -> Result<Json> {
+        let id = self.fresh_id();
+        let mut all = vec![
+            ("v", Json::Num(PROTOCOL_VERSION as f64)),
+            ("id", Json::Num(id)),
+            ("type", Json::Str(ty.to_string())),
+        ];
+        all.append(&mut fields);
+        let reply = self.send_raw(&obj(all).to_string())?;
+        match reply.get("ok") {
+            Some(Json::Bool(true)) => {}
+            _ => bail!(
+                "server error: {}",
+                reply
+                    .get("error")
+                    .map(|e| e.as_str().to_string())
+                    .unwrap_or_else(|| reply.to_string())
+            ),
+        }
+        let echoed = reply
+            .get("id")
+            .map(|j| j.as_f64())
+            .unwrap_or(f64::NAN);
+        if echoed != id {
+            bail!("reply id {echoed} does not match request id {id}");
+        }
+        Ok(reply)
+    }
+
+    /// Solve (or replay) an operating point.
+    pub fn point(
+        &mut self,
+        dataset: &str,
+        k: usize,
+        sigma: f64,
+        phi: usize,
+        eval: bool,
+    ) -> Result<Json> {
+        self.request(
+            "point",
+            vec![
+                ("dataset", Json::Str(dataset.to_string())),
+                ("k", Json::Num(k as f64)),
+                ("sigma", Json::Num(sigma)),
+                ("phi", Json::Num(phi as f64)),
+                ("eval", Json::Bool(eval)),
+            ],
+        )
+    }
+
+    /// Native inference on `samples` (each `pixels` +-1 values) at the
+    /// operating point (k, sigma, phi); returns the full reply.
+    #[allow(clippy::too_many_arguments)]
+    pub fn infer(
+        &mut self,
+        dataset: &str,
+        k: usize,
+        sigma: f64,
+        phi: usize,
+        seed: u32,
+        samples: &[Vec<f32>],
+    ) -> Result<Json> {
+        let rows = Json::Arr(
+            samples
+                .iter()
+                .map(|row| {
+                    Json::Arr(
+                        row.iter()
+                            .map(|&v| Json::Num(v as f64))
+                            .collect(),
+                    )
+                })
+                .collect(),
+        );
+        self.request(
+            "infer",
+            vec![
+                ("dataset", Json::Str(dataset.to_string())),
+                ("k", Json::Num(k as f64)),
+                ("sigma", Json::Num(sigma)),
+                ("phi", Json::Num(phi as f64)),
+                ("seed", Json::Num(seed as f64)),
+                ("x", rows),
+            ],
+        )
+    }
+
+    /// [`Client::infer`], unpacked into per-sample logits rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn infer_logits(
+        &mut self,
+        dataset: &str,
+        k: usize,
+        sigma: f64,
+        phi: usize,
+        seed: u32,
+        samples: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let reply =
+            self.infer(dataset, k, sigma, phi, seed, samples)?;
+        let rows = match reply.get("logits") {
+            Some(Json::Arr(rows)) => rows,
+            other => bail!("reply missing logits: {other:?}"),
+        };
+        Ok(rows
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .iter()
+                    .map(|v| v.as_f64() as f32)
+                    .collect()
+            })
+            .collect())
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.request("stats", vec![])
+    }
+
+    /// Ask the server to drain and exit; the reply confirms the drain
+    /// started.
+    pub fn shutdown(&mut self) -> Result<Json> {
+        self.request("shutdown", vec![])
+    }
+}

@@ -1,0 +1,288 @@
+//! Serve-side observability: request counters, micro-batch sizes and
+//! latency histograms, all lock-free atomics so the request path never
+//! serializes on a metrics mutex (DESIGN.md §12). Served to clients
+//! through the `Stats` request.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+/// Request kinds tracked by the counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Point,
+    Infer,
+    Stats,
+    Shutdown,
+}
+
+const KINDS: [(&str, Kind); 4] = [
+    ("point", Kind::Point),
+    ("infer", Kind::Infer),
+    ("stats", Kind::Stats),
+    ("shutdown", Kind::Shutdown),
+];
+
+/// Power-of-two bucketed histogram: bucket `i` counts values in
+/// `(2^(i-1), 2^i]` (bucket 0 counts zeros and ones). Quantiles
+/// report the chosen bucket's upper bound `2^i` — coarse by design,
+/// cheap to record, and honest about being an envelope (a p99 of
+/// `4096` means "under 4.1 ms", not "exactly 4.096 ms").
+pub struct Hist {
+    buckets: Vec<AtomicU64>,
+}
+
+impl Hist {
+    pub fn new(n_buckets: usize) -> Hist {
+        Hist {
+            buckets: (0..n_buckets).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Ceil-log2 bucket index: the smallest `i` with `v <= 2^i`
+    /// (clamped into the last bucket).
+    fn bucket_of(&self, v: u64) -> usize {
+        let b = (64 - v.saturating_sub(1).leading_zeros()) as usize;
+        b.min(self.buckets.len() - 1)
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[self.bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Upper bound of the bucket holding the q-quantile (0 when
+    /// empty).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        1u64 << (self.buckets.len() - 1)
+    }
+
+    /// Raw bucket counts (trailing zero buckets trimmed).
+    pub fn to_json(&self) -> Json {
+        let mut counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        while counts.len() > 1 && counts.last() == Some(&0) {
+            counts.pop();
+        }
+        Json::Arr(counts.into_iter().map(|c| Json::Num(c as f64)).collect())
+    }
+}
+
+/// All serve counters; one instance shared by every thread via `Arc`.
+pub struct Metrics {
+    start: Instant,
+    requests: [AtomicU64; 4],
+    /// Requests answered with `ok: false` (parse errors included).
+    errors: AtomicU64,
+    /// Samples that went through the batcher.
+    infer_samples: AtomicU64,
+    /// `forward_many` entries executed.
+    micro_batches: AtomicU64,
+    /// Infer requests that shared their micro-batch with at least one
+    /// other request — the coalescing the batcher exists for.
+    batched_requests: AtomicU64,
+    /// Largest micro-batch observed, in requests.
+    max_batch: AtomicU64,
+    /// Micro-batch size in requests.
+    pub batch_hist: Hist,
+    /// Point latency, microseconds (queue + solve + reply).
+    pub point_latency_us: Hist,
+    /// Infer latency, microseconds (queue + batch wait + forward).
+    pub infer_latency_us: Hist,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            start: Instant::now(),
+            requests: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+            errors: AtomicU64::new(0),
+            infer_samples: AtomicU64::new(0),
+            micro_batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            max_batch: AtomicU64::new(0),
+            batch_hist: Hist::new(12),
+            point_latency_us: Hist::new(28),
+            infer_latency_us: Hist::new(28),
+        }
+    }
+
+    pub fn inc(&self, kind: Kind) {
+        self.requests[kind as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self, kind: Kind) -> u64 {
+        self.requests[kind as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Record one executed micro-batch of `reqs` requests covering
+    /// `samples` samples.
+    pub fn record_batch(&self, reqs: usize, samples: usize) {
+        self.micro_batches.fetch_add(1, Ordering::Relaxed);
+        self.infer_samples
+            .fetch_add(samples as u64, Ordering::Relaxed);
+        self.batch_hist.record(reqs as u64);
+        if reqs > 1 {
+            self.batched_requests
+                .fetch_add(reqs as u64, Ordering::Relaxed);
+        }
+        self.max_batch.fetch_max(reqs as u64, Ordering::Relaxed);
+    }
+
+    pub fn max_batch(&self) -> u64 {
+        self.max_batch.load(Ordering::Relaxed)
+    }
+
+    pub fn batched_requests(&self) -> u64 {
+        self.batched_requests.load(Ordering::Relaxed)
+    }
+
+    /// The `Stats` payload (merged with the server's static info by
+    /// the worker).
+    pub fn to_json(&self) -> Json {
+        let lat = |h: &Hist| {
+            obj(vec![
+                ("count", Json::Num(h.count() as f64)),
+                ("p50_us_le", Json::Num(h.quantile(0.5) as f64)),
+                ("p99_us_le", Json::Num(h.quantile(0.99) as f64)),
+            ])
+        };
+        obj(vec![
+            (
+                "uptime_s",
+                Json::Num(self.start.elapsed().as_secs_f64()),
+            ),
+            (
+                "requests",
+                obj(KINDS
+                    .iter()
+                    .map(|&(name, kind)| {
+                        (name, Json::Num(self.count(kind) as f64))
+                    })
+                    .collect()),
+            ),
+            ("errors", Json::Num(self.errors() as f64)),
+            (
+                "infer",
+                obj(vec![
+                    (
+                        "samples",
+                        Json::Num(
+                            self.infer_samples.load(Ordering::Relaxed)
+                                as f64,
+                        ),
+                    ),
+                    (
+                        "micro_batches",
+                        Json::Num(
+                            self.micro_batches.load(Ordering::Relaxed)
+                                as f64,
+                        ),
+                    ),
+                    (
+                        "batched_requests",
+                        Json::Num(self.batched_requests() as f64),
+                    ),
+                    (
+                        "max_batch_requests",
+                        Json::Num(self.max_batch() as f64),
+                    ),
+                    ("batch_hist", self.batch_hist.to_json()),
+                ]),
+            ),
+            (
+                "latency",
+                obj(vec![
+                    ("point", lat(&self.point_latency_us)),
+                    ("infer", lat(&self.infer_latency_us)),
+                ]),
+            ),
+        ])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_buckets_and_quantiles_envelope() {
+        let h = Hist::new(12);
+        for v in [1u64, 1, 1, 2, 3, 900] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        // p50 of {1,1,1,2,3,900}: 3rd value = 1 -> bucket upper 1
+        assert_eq!(h.quantile(0.5), 1);
+        // the outlier lands in [512,1024) -> upper bound 1024
+        assert_eq!(h.quantile(1.0), 1024);
+        assert_eq!(h.quantile(0.99), 1024);
+        // zero treated as the smallest bucket, values beyond the last
+        // bucket clamp into it
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 8);
+    }
+
+    #[test]
+    fn counters_and_batches_add_up() {
+        let m = Metrics::new();
+        m.inc(Kind::Point);
+        m.inc(Kind::Infer);
+        m.inc(Kind::Infer);
+        m.inc_error();
+        m.record_batch(1, 4);
+        m.record_batch(2, 2);
+        assert_eq!(m.count(Kind::Infer), 2);
+        assert_eq!(m.count(Kind::Point), 1);
+        assert_eq!(m.count(Kind::Shutdown), 0);
+        assert_eq!(m.errors(), 1);
+        assert_eq!(m.max_batch(), 2);
+        assert_eq!(m.batched_requests(), 2);
+        let j = m.to_json();
+        assert_eq!(
+            j.req("requests").req("infer").as_f64(),
+            2.0
+        );
+        assert_eq!(j.req("infer").req("samples").as_f64(), 6.0);
+        assert_eq!(j.req("infer").req("micro_batches").as_f64(), 2.0);
+    }
+}

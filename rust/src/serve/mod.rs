@@ -1,0 +1,48 @@
+//! `capmin serve` — a long-running, multi-client operating-point +
+//! inference server (DESIGN.md §12).
+//!
+//! Every other entry point in this crate pays the full warmup bill —
+//! model folding, bit-packing, point-cache priming — once per process
+//! and then exits. The serve subsystem keeps all of that hot behind a
+//! TCP socket speaking newline-delimited JSON (the same hand-rolled
+//! [`crate::util::json`] the run store uses; no HTTP stack offline —
+//! DESIGN.md §8):
+//!
+//! * [`protocol`] — typed, versioned request/response forms
+//!   (`Point`, `Infer`, `Stats`, `Shutdown`) with structured error
+//!   replies;
+//! * [`server`] — the accept loop, a fixed crew of connection workers
+//!   spawned once at startup, a session thread owning the one warm
+//!   [`crate::session::DesignSession`], and graceful drain on
+//!   shutdown;
+//! * [`batcher`] — the micro-batching queue that coalesces concurrent
+//!   `Infer` requests into one
+//!   [`crate::backend::NativeBackend::forward_many`] entry, replies
+//!   bit-identical to solo execution;
+//! * [`metrics`] — request counters plus batch-size and latency
+//!   histograms, served through `Stats`;
+//! * [`client`] — the blocking line-protocol client the loopback
+//!   tests, the loadgen bench and `examples/serve_client.rs` share.
+//!
+//! Thread model (all spawned once, at startup — no thread or pool
+//! construction on the request path):
+//!
+//! ```text
+//!  accept loop ── conn queue ──> worker 0..W  (socket IO, parse)
+//!                                  │      │
+//!                    Point/Prepare │      │ Infer jobs
+//!                                  v      v
+//!                          session thread  batcher thread
+//!                          (DesignSession, (NativeBackend,
+//!                           persistent      persistent kernel
+//!                           solve pool)     pool, micro-batches)
+//! ```
+
+pub mod batcher;
+pub mod client;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use client::Client;
+pub use server::{ServeOptions, Server};

@@ -1,0 +1,489 @@
+//! The serve wire protocol: one JSON object per line, both directions
+//! (DESIGN.md §12).
+//!
+//! Every request carries `"v": 1` (the protocol version — anything
+//! else is rejected with a structured error so old clients fail loud,
+//! not weird), a client-chosen numeric `"id"` echoed on the reply, and
+//! a `"type"`. Replies carry `"ok": true` plus type-specific fields,
+//! or `"ok": false` with a human-readable `"error"` (and the request
+//! id when one could be parsed). Requests are validated here — axis
+//! ranges, dataset names, sample shapes — so the compute threads only
+//! ever see well-formed work.
+
+use crate::data::synth::Dataset;
+use crate::session::OperatingPoint;
+use crate::util::json::{obj, Json};
+
+/// Wire protocol version; bump on any incompatible change.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Upper bound on samples per `Infer` request: keeps a single request
+/// from monopolizing the batcher (batch *across* requests instead).
+pub const MAX_INFER_SAMPLES: usize = 64;
+
+/// An operating-point solve request: the serve twin of
+/// `capmin point`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PointReq {
+    pub id: f64,
+    pub dataset: Dataset,
+    pub k: usize,
+    pub sigma: f64,
+    pub phi: usize,
+    /// Accuracy-evaluate the point (one seed) instead of a pure
+    /// hardware solve.
+    pub eval: bool,
+}
+
+/// A native-backend inference request: `n` samples of
+/// `dataset.spec().pixels()` +-1 values each, evaluated at the
+/// operating point (k, sigma, phi) under `seed`. The whole request is
+/// one forward batch, so its reply is a pure function of the request
+/// alone — micro-batching with other clients cannot change it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferReq {
+    pub id: f64,
+    pub dataset: Dataset,
+    pub k: usize,
+    pub sigma: f64,
+    pub phi: usize,
+    pub seed: u32,
+    /// Row-major samples, `n * pixels` values.
+    pub x: Vec<f32>,
+    pub n: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Point(PointReq),
+    Infer(InferReq),
+    Stats { id: f64 },
+    Shutdown { id: f64 },
+}
+
+/// A parse/validation failure: the id to echo (when one was readable)
+/// and the message for the structured error reply.
+pub type ParseError = (Option<f64>, String);
+
+impl Request {
+    /// Parse and validate one request line.
+    pub fn parse(line: &str) -> Result<Request, ParseError> {
+        let j = Json::parse(line.trim())
+            .map_err(|e| (None, format!("bad JSON: {e}")))?;
+        // pull the id first so even version errors can echo it
+        let id = match j.get("id") {
+            Some(Json::Num(n)) => Some(*n),
+            Some(other) => {
+                return Err((
+                    None,
+                    format!("bad `id`: expected a number, got {other:?}"),
+                ))
+            }
+            None => None,
+        };
+        let fail = |msg: String| (id, msg);
+        match j.get("v") {
+            Some(Json::Num(n)) if *n == PROTOCOL_VERSION as f64 => {}
+            Some(Json::Num(n)) => {
+                return Err(fail(format!(
+                    "unsupported protocol version {n} (this server \
+                     speaks v{PROTOCOL_VERSION})"
+                )))
+            }
+            _ => {
+                return Err(fail(format!(
+                    "missing `v`: requests must declare the protocol \
+                     version (this server speaks v{PROTOCOL_VERSION})"
+                )))
+            }
+        }
+        let id = id.ok_or_else(|| {
+            (None, "missing `id`: replies echo it".to_string())
+        })?;
+        let ty = match j.get("type") {
+            Some(Json::Str(s)) => s.clone(),
+            _ => return Err(fail("missing `type`".into())),
+        };
+        match ty.as_str() {
+            "stats" => Ok(Request::Stats { id }),
+            "shutdown" => Ok(Request::Shutdown { id }),
+            "point" | "infer" => {
+                let dataset = match j.get("dataset") {
+                    Some(Json::Str(s)) => {
+                        Dataset::from_name(s).ok_or_else(|| {
+                            fail(format!(
+                                "unknown dataset `{s}` (valid: {})",
+                                Dataset::all()
+                                    .iter()
+                                    .map(|d| d.spec().name)
+                                    .collect::<Vec<_>>()
+                                    .join(", ")
+                            ))
+                        })?
+                    }
+                    _ => return Err(fail("missing `dataset`".into())),
+                };
+                let num_or = |key: &str, default: f64| match j.get(key) {
+                    Some(Json::Num(n)) => Ok(*n),
+                    None => Ok(default),
+                    Some(other) => Err(fail(format!(
+                        "bad `{key}`: expected a number, got {other:?}"
+                    ))),
+                };
+                // integer axes reject fractions instead of silently
+                // truncating (14.7 must not serve as 14)
+                let int_or = |key: &str, default: usize| match j
+                    .get(key)
+                {
+                    Some(Json::Num(n))
+                        if n.fract() == 0.0 && *n >= 0.0 =>
+                    {
+                        Ok(*n as usize)
+                    }
+                    None => Ok(default),
+                    Some(other) => Err(fail(format!(
+                        "bad `{key}`: expected a non-negative \
+                         integer, got {other:?}"
+                    ))),
+                };
+                let k = match j.get("k") {
+                    Some(Json::Num(n)) if n.fract() == 0.0 => {
+                        *n as usize
+                    }
+                    Some(other) => {
+                        return Err(fail(format!(
+                            "bad `k`: expected an integer, got \
+                             {other:?}"
+                        )))
+                    }
+                    None => return Err(fail("missing `k`".into())),
+                };
+                if !(1..=32).contains(&k) {
+                    return Err(fail(format!(
+                        "bad `k` {k}: CapMin k must be in 1..=32"
+                    )));
+                }
+                let sigma = num_or("sigma", 0.0)?;
+                if sigma.is_nan() || sigma < 0.0 || sigma > 1.0 {
+                    return Err(fail(format!(
+                        "bad `sigma` {sigma}: expected 0.0..=1.0"
+                    )));
+                }
+                let phi = int_or("phi", 0)?;
+                if phi >= k {
+                    return Err(fail(format!(
+                        "bad `phi` {phi}: CapMin-V merges must leave at \
+                         least one spike time (phi < k)"
+                    )));
+                }
+                if ty == "point" {
+                    let eval = match j.get("eval") {
+                        Some(Json::Bool(b)) => *b,
+                        None => false,
+                        Some(other) => {
+                            return Err(fail(format!(
+                                "bad `eval`: expected a bool, got \
+                                 {other:?}"
+                            )))
+                        }
+                    };
+                    return Ok(Request::Point(PointReq {
+                        id,
+                        dataset,
+                        k,
+                        sigma,
+                        phi,
+                        eval,
+                    }));
+                }
+                let seed = int_or("seed", 1)? as u32;
+                let pixels = dataset.spec().pixels();
+                let rows = match j.get("x") {
+                    Some(Json::Arr(rows)) if !rows.is_empty() => rows,
+                    Some(Json::Arr(_)) => {
+                        return Err(fail(
+                            "bad `x`: need at least one sample".into(),
+                        ))
+                    }
+                    _ => {
+                        return Err(fail(
+                            "missing `x`: array of sample rows".into(),
+                        ))
+                    }
+                };
+                if rows.len() > MAX_INFER_SAMPLES {
+                    return Err(fail(format!(
+                        "too many samples: {} (limit \
+                         {MAX_INFER_SAMPLES} per request — split, the \
+                         batcher coalesces)",
+                        rows.len()
+                    )));
+                }
+                let mut x = Vec::with_capacity(rows.len() * pixels);
+                for (ri, row) in rows.iter().enumerate() {
+                    let vals = match row {
+                        Json::Arr(v) => v,
+                        _ => {
+                            return Err(fail(format!(
+                                "bad `x[{ri}]`: expected an array of \
+                                 numbers"
+                            )))
+                        }
+                    };
+                    if vals.len() != pixels {
+                        return Err(fail(format!(
+                            "bad `x[{ri}]`: {} values, {} needs {pixels} \
+                             per sample",
+                            vals.len(),
+                            dataset.spec().name
+                        )));
+                    }
+                    for v in vals {
+                        match v {
+                            Json::Num(n) => x.push(*n as f32),
+                            other => {
+                                return Err(fail(format!(
+                                    "bad `x[{ri}]` entry: {other:?}"
+                                )))
+                            }
+                        }
+                    }
+                }
+                Ok(Request::Infer(InferReq {
+                    id,
+                    dataset,
+                    k,
+                    sigma,
+                    phi,
+                    seed,
+                    n: rows.len(),
+                    x,
+                }))
+            }
+            other => Err(fail(format!(
+                "unknown request type `{other}` (valid: point, infer, \
+                 stats, shutdown)"
+            ))),
+        }
+    }
+}
+
+fn reply_head(id: f64, ty: &str) -> Vec<(&'static str, Json)> {
+    vec![
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+        ("id", Json::Num(id)),
+        ("ok", Json::Bool(true)),
+        ("type", Json::Str(ty.to_string())),
+    ]
+}
+
+/// Reply to a `Point` request: the operating point's headline numbers
+/// plus its cache key (clients can find the full JSON under
+/// `<run-dir>/points/<key>.json`).
+pub fn point_response(id: f64, key: &str, p: &OperatingPoint) -> Json {
+    let w = p.peak_window();
+    let mut fields = reply_head(id, "point");
+    fields.extend([
+        ("key", Json::Str(key.to_string())),
+        ("dataset", Json::Str(p.spec.dataset.spec().name.into())),
+        ("k", Json::Num(p.spec.k as f64)),
+        ("sigma", Json::Num(p.spec.sigma)),
+        ("phi", Json::Num(p.spec.phi as f64)),
+        ("c", Json::Num(p.c)),
+        ("grt", Json::Num(p.grt)),
+        (
+            "window",
+            obj(vec![
+                ("q_lo", Json::Num(w.q_lo as f64)),
+                ("q_hi", Json::Num(w.q_hi as f64)),
+                ("coverage", Json::Num(w.coverage)),
+            ]),
+        ),
+        (
+            "accuracy",
+            match p.accuracy {
+                Some(a) => Json::Num(a),
+                None => Json::Null,
+            },
+        ),
+    ]);
+    obj(fields)
+}
+
+/// Reply to an `Infer` request: per-sample logits rows and argmax
+/// classes.
+pub fn infer_response(
+    id: f64,
+    logits: &[f32],
+    n: usize,
+    n_classes: usize,
+) -> Json {
+    let mut rows = Vec::with_capacity(n);
+    let mut classes = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = &logits[i * n_classes..(i + 1) * n_classes];
+        rows.push(Json::Arr(
+            row.iter().map(|&v| Json::Num(v as f64)).collect(),
+        ));
+        classes
+            .push(Json::Num(crate::util::stats::argmax(row) as f64));
+    }
+    let mut fields = reply_head(id, "infer");
+    fields.extend([
+        ("classes", Json::Arr(classes)),
+        ("logits", Json::Arr(rows)),
+    ]);
+    obj(fields)
+}
+
+/// Reply to a `Stats` request; `stats` comes from
+/// [`super::metrics::Metrics::to_json`] merged with the server's
+/// static info.
+pub fn stats_response(id: f64, stats: Json) -> Json {
+    let mut fields = reply_head(id, "stats");
+    fields.push(("stats", stats));
+    obj(fields)
+}
+
+/// Reply to a `Shutdown` request, sent before the drain begins.
+pub fn shutdown_response(id: f64) -> Json {
+    let mut fields = reply_head(id, "shutdown");
+    fields.push(("draining", Json::Bool(true)));
+    obj(fields)
+}
+
+/// A structured error reply; `id` when the request's id was readable.
+pub fn error_response(id: Option<f64>, error: &str) -> Json {
+    obj(vec![
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+        (
+            "id",
+            match id {
+                Some(i) => Json::Num(i),
+                None => Json::Null,
+            },
+        ),
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(error.to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_point_and_infer() {
+        let r = Request::parse(
+            r#"{"v":1,"id":3,"type":"point","dataset":"fashion_syn",
+                "k":14,"sigma":0.02,"phi":2,"eval":true}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Point(p) => {
+                assert_eq!(p.dataset, Dataset::FashionSyn);
+                assert_eq!((p.k, p.phi), (14, 2));
+                assert!(p.eval);
+                assert_eq!(p.id, 3.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        let px = Dataset::FashionSyn.spec().pixels();
+        let row: Vec<String> =
+            (0..px).map(|i| if i % 2 == 0 { "1" } else { "-1" }.into())
+                .collect();
+        let line = format!(
+            r#"{{"v":1,"id":4,"type":"infer","dataset":"fashion_syn",
+                "k":14,"seed":9,"x":[[{}]]}}"#,
+            row.join(",")
+        );
+        match Request::parse(&line).unwrap() {
+            Request::Infer(q) => {
+                assert_eq!(q.n, 1);
+                assert_eq!(q.x.len(), px);
+                assert_eq!(q.seed, 9);
+                assert_eq!(q.sigma, 0.0); // default
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_and_type_are_enforced() {
+        let e = Request::parse(r#"{"id":1,"type":"stats"}"#).unwrap_err();
+        assert_eq!(e.0, Some(1.0));
+        assert!(e.1.contains("version"), "{}", e.1);
+        let e = Request::parse(r#"{"v":2,"id":1,"type":"stats"}"#)
+            .unwrap_err();
+        assert!(e.1.contains("unsupported"), "{}", e.1);
+        let e = Request::parse(r#"{"v":1,"id":1,"type":"frobnicate"}"#)
+            .unwrap_err();
+        assert!(e.1.contains("frobnicate"), "{}", e.1);
+        let e = Request::parse("not json at all").unwrap_err();
+        assert_eq!(e.0, None);
+        assert!(e.1.contains("bad JSON"), "{}", e.1);
+    }
+
+    #[test]
+    fn axis_validation_matches_the_cli_rules() {
+        let e = Request::parse(
+            r#"{"v":1,"id":1,"type":"point","dataset":"fashion_syn",
+                "k":40}"#,
+        )
+        .unwrap_err();
+        assert!(e.1.contains("1..=32"), "{}", e.1);
+        let e = Request::parse(
+            r#"{"v":1,"id":1,"type":"point","dataset":"fashion_syn",
+                "k":4,"phi":4}"#,
+        )
+        .unwrap_err();
+        assert!(e.1.contains("phi < k"), "{}", e.1);
+        let e = Request::parse(
+            r#"{"v":1,"id":1,"type":"point","dataset":"nope","k":4}"#,
+        )
+        .unwrap_err();
+        assert!(e.1.contains("unknown dataset"), "{}", e.1);
+        // fractional axes are rejected, never truncated
+        let e = Request::parse(
+            r#"{"v":1,"id":1,"type":"point","dataset":"fashion_syn","k":14.7}"#,
+        )
+        .unwrap_err();
+        assert!(e.1.contains("integer"), "{}", e.1);
+        let e = Request::parse(
+            r#"{"v":1,"id":1,"type":"point","dataset":"fashion_syn","k":14,"phi":1.5}"#,
+        )
+        .unwrap_err();
+        assert!(e.1.contains("integer"), "{}", e.1);
+    }
+
+    #[test]
+    fn infer_sample_shape_is_validated() {
+        let e = Request::parse(
+            r#"{"v":1,"id":1,"type":"infer","dataset":"fashion_syn",
+                "k":14,"x":[[1,-1]]}"#,
+        )
+        .unwrap_err();
+        assert!(e.1.contains("per sample"), "{}", e.1);
+        let e = Request::parse(
+            r#"{"v":1,"id":1,"type":"infer","dataset":"fashion_syn",
+                "k":14,"x":[]}"#,
+        )
+        .unwrap_err();
+        assert!(e.1.contains("at least one"), "{}", e.1);
+    }
+
+    #[test]
+    fn responses_are_single_lines_with_echoed_ids() {
+        let j = error_response(Some(7.0), "boom");
+        let s = j.to_string();
+        assert!(!s.contains('\n'));
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.req("id").as_f64(), 7.0);
+        assert!(!back.req("ok").as_bool());
+        assert_eq!(back.req("error").as_str(), "boom");
+        let s = shutdown_response(9.0).to_string();
+        let back = Json::parse(&s).unwrap();
+        assert!(back.req("ok").as_bool());
+        assert_eq!(back.req("type").as_str(), "shutdown");
+    }
+}

@@ -1,0 +1,629 @@
+//! The serve runtime (DESIGN.md §12): accept loop, a fixed crew of
+//! connection workers, the session thread owning the one warm
+//! [`DesignSession`], and the batcher thread owning the serving
+//! [`NativeBackend`] — every thread and pool spawned once at startup,
+//! nothing constructed per request.
+//!
+//! Lifetimes / shutdown (the drain order is the design):
+//!
+//! 1. a `Shutdown` request flips the flag and pokes the accept loop
+//!    awake; the requesting connection is answered, then closed;
+//! 2. the accept loop stops and drops the connection queue — workers
+//!    finish their current connections (in-flight requests complete
+//!    and reply) and exit;
+//! 3. with every worker gone, the batcher's job senders are gone: it
+//!    finishes the queued micro-batches and exits; likewise the
+//!    session thread;
+//! 4. `run`/`Server::join` returns only after every thread is joined,
+//!    so a clean exit means a clean drain.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::backend::arch;
+use crate::backend::kernels::KernelKind;
+use crate::backend::native::NativeBackend;
+use crate::bnn::ErrorModel;
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::store::NamedTensor;
+use crate::data::synth::Dataset;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
+use crate::util::json::{obj, Json};
+use crate::util::pool::ScopedPool;
+
+use super::batcher::{self, BatchPolicy, InferJob};
+use super::metrics::{Kind, Metrics};
+use super::protocol::{self, Request};
+
+/// How often a blocked connection read wakes up to check the shutdown
+/// flag.
+const READ_POLL: Duration = Duration::from_millis(50);
+
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    pub addr: SocketAddr,
+    /// Most `Infer` requests coalesced into one backend entry.
+    pub max_batch: usize,
+    /// Longest a ready request waits for company (milliseconds).
+    pub max_wait_ms: u64,
+    /// Datasets to pre-warm (fold + F_MAC) before serving traffic.
+    pub warm: Vec<Dataset>,
+}
+
+impl ServeOptions {
+    pub fn new(addr: SocketAddr) -> ServeOptions {
+        ServeOptions {
+            addr,
+            max_batch: 8,
+            max_wait_ms: 2,
+            warm: vec![],
+        }
+    }
+}
+
+/// Static facts fixed at startup, reported by `Stats` so clients can
+/// pin that nothing is re-spawned per request.
+struct ServerInfo {
+    addr: SocketAddr,
+    backend: &'static str,
+    workers: usize,
+    /// Persistent kernel-pool crews: (session solve pool, batcher
+    /// inference pool). Stable for the server's life.
+    session_pool_workers: usize,
+    infer_pool_workers: usize,
+    max_batch: usize,
+    max_wait_ms: u64,
+}
+
+impl ServerInfo {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("backend", Json::Str(self.backend.to_string())),
+            ("workers", Json::Num(self.workers as f64)),
+            (
+                "session_pool_workers",
+                Json::Num(self.session_pool_workers as f64),
+            ),
+            (
+                "infer_pool_workers",
+                Json::Num(self.infer_pool_workers as f64),
+            ),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("max_wait_ms", Json::Num(self.max_wait_ms as f64)),
+        ])
+    }
+}
+
+/// Everything a prepared `Infer` needs, resolved once per
+/// (dataset, k, sigma, phi) by the session thread and cached there.
+#[derive(Clone)]
+struct Prepared {
+    model: &'static str,
+    pixels: usize,
+    n_classes: usize,
+    folded: Arc<Vec<NamedTensor>>,
+    ems: Arc<Vec<ErrorModel>>,
+}
+
+enum SessionMsg {
+    Point {
+        spec: OperatingPointSpec,
+        reply: Sender<Result<(String, Arc<OperatingPoint>), String>>,
+    },
+    Prepare {
+        ds: Dataset,
+        k: usize,
+        sigma: f64,
+        phi: usize,
+        reply: Sender<Result<Prepared, String>>,
+    },
+}
+
+/// A running server handle (`spawn`); `join` blocks until drain.
+pub struct Server {
+    addr: SocketAddr,
+    handle: JoinHandle<Result<()>>,
+}
+
+impl Server {
+    /// The actually bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn join(self) -> Result<()> {
+        self.handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("server thread panicked"))?
+    }
+}
+
+/// Bind and serve on a background thread (tests, benches, examples).
+pub fn spawn(
+    cfg: ExperimentConfig,
+    opts: ServeOptions,
+) -> Result<Server> {
+    let listener = TcpListener::bind(opts.addr)
+        .with_context(|| format!("binding {}", opts.addr))?;
+    let addr = listener.local_addr()?;
+    let handle =
+        std::thread::spawn(move || run_bound(listener, cfg, opts));
+    Ok(Server { addr, handle })
+}
+
+/// Bind and serve on the calling thread (the CLI entry); returns after
+/// a clean `Shutdown` drain.
+pub fn run(cfg: ExperimentConfig, opts: ServeOptions) -> Result<()> {
+    let listener = TcpListener::bind(opts.addr)
+        .with_context(|| format!("binding {}", opts.addr))?;
+    println!(
+        "capmin serve: listening on {}",
+        listener.local_addr()?
+    );
+    run_bound(listener, cfg, opts)
+}
+
+fn run_bound(
+    listener: TcpListener,
+    cfg: ExperimentConfig,
+    opts: ServeOptions,
+) -> Result<()> {
+    let addr = listener.local_addr()?;
+    let threads = ScopedPool::new(cfg.threads).threads();
+    // enough connection workers that a full micro-batch of
+    // single-request clients can be in flight at once (workers block
+    // on their request's reply; they are IO threads, not compute)
+    let workers = threads.max(opts.max_batch).clamp(2, 64);
+    let metrics = Arc::new(Metrics::new());
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    // both kernel crews are spawned here, once, and only referenced
+    // afterwards (ScopedPool::spawned_workers stays constant)
+    let session_pool = ScopedPool::persistent(cfg.threads);
+    let infer_pool = ScopedPool::persistent(cfg.threads);
+    let info = Arc::new(ServerInfo {
+        addr,
+        backend: "native",
+        workers,
+        session_pool_workers: session_pool.spawned_workers(),
+        infer_pool_workers: infer_pool.spawned_workers(),
+        max_batch: opts.max_batch.max(1),
+        max_wait_ms: opts.max_wait_ms,
+    });
+
+    // session thread: owns the one warm DesignSession
+    let (session_tx, session_rx) = mpsc::channel::<SessionMsg>();
+    let session_handle = {
+        let cfg = cfg.clone();
+        let warm = opts.warm.clone();
+        std::thread::spawn(move || {
+            session_thread(cfg, warm, session_pool, session_rx)
+        })
+    };
+
+    // batcher thread: owns the serving NativeBackend
+    let (infer_tx, infer_rx) = mpsc::channel::<InferJob>();
+    let batcher_handle = {
+        let kind = KernelKind::resolve(&cfg.kernel)
+            .unwrap_or_else(|_| KernelKind::detect());
+        let backend = NativeBackend::with_pool(infer_pool, kind, true);
+        let policy = BatchPolicy {
+            max_batch: opts.max_batch.max(1),
+            max_wait: Duration::from_millis(opts.max_wait_ms),
+        };
+        let metrics = metrics.clone();
+        std::thread::spawn(move || {
+            batcher::run(infer_rx, backend, policy, metrics)
+        })
+    };
+
+    // connection workers: the fixed crew, spawned once. `admitted`
+    // counts connections handed to the crew and not yet finished, so
+    // the accept loop can refuse (with a structured error, not silent
+    // starvation) instead of queueing behind long-lived connections.
+    let admitted = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+    let worker_handles: Vec<JoinHandle<()>> = (0..workers)
+        .map(|_| {
+            let conn_rx = conn_rx.clone();
+            let session_tx = session_tx.clone();
+            let infer_tx = infer_tx.clone();
+            let metrics = metrics.clone();
+            let shutdown = shutdown.clone();
+            let info = info.clone();
+            let admitted = admitted.clone();
+            std::thread::spawn(move || {
+                worker_loop(
+                    &conn_rx, &session_tx, &infer_tx, &metrics,
+                    &shutdown, &info, &admitted,
+                )
+            })
+        })
+        .collect();
+    // workers hold the only long-lived clones: when they exit, the
+    // compute threads see their queues close and drain out
+    drop(session_tx);
+    drop(infer_tx);
+
+    // accept loop (this thread)
+    for conn in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break; // the waking connection is dropped unserved
+        }
+        match conn {
+            Ok(mut stream) => {
+                // every worker busy AND a full extra batch already
+                // queued: refuse loudly rather than park the client
+                // behind connections that may never close
+                if admitted.load(Ordering::SeqCst) >= 2 * workers {
+                    metrics.inc_error();
+                    let mut s = protocol::error_response(
+                        None,
+                        &format!(
+                            "server at connection capacity ({workers} \
+                             workers busy, {workers} queued) — retry"
+                        ),
+                    )
+                    .to_string();
+                    s.push('\n');
+                    let _ = stream.write_all(s.as_bytes());
+                    continue; // stream drops closed
+                }
+                admitted.fetch_add(1, Ordering::SeqCst);
+                // a send can only fail after every worker exited,
+                // which only happens on shutdown
+                if conn_tx.send(stream).is_err() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => continue,
+        }
+    }
+    drop(conn_tx);
+    for h in worker_handles {
+        let _ = h.join();
+    }
+    let _ = batcher_handle.join();
+    let _ = session_handle.join();
+    Ok(())
+}
+
+/// The session thread: builds the `DesignSession` (on its own thread —
+/// the session facade is deliberately single-threaded), pre-warms the
+/// requested datasets, then serves Point/Prepare messages until every
+/// worker is gone.
+fn session_thread(
+    cfg: ExperimentConfig,
+    warm: Vec<Dataset>,
+    pool: ScopedPool,
+    rx: Receiver<SessionMsg>,
+) {
+    let session = match DesignSession::builder()
+        .config(cfg)
+        .pool(pool)
+        .build()
+    {
+        Ok(s) => s,
+        Err(e) => {
+            // a session that cannot build answers every request with
+            // the build error instead of hanging clients
+            let msg = format!("session unavailable: {e}");
+            for m in rx {
+                match m {
+                    SessionMsg::Point { reply, .. } => {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                    SessionMsg::Prepare { reply, .. } => {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+            return;
+        }
+    };
+    for ds in warm {
+        // failures surface per request; warmup is best-effort priming
+        if let Err(e) = session.fmac(ds) {
+            eprintln!(
+                "[serve] warmup {} failed: {e}",
+                ds.spec().name
+            );
+        }
+    }
+    // (dataset, k, sigma bits, phi) -> prepared infer inputs
+    let mut prepared: HashMap<(Dataset, usize, u64, usize), Prepared> =
+        HashMap::new();
+    for m in rx {
+        match m {
+            SessionMsg::Point { spec, reply } => {
+                let r = session
+                    .query(&spec)
+                    .map(|p| {
+                        (spec.cache_key(session.config()), p)
+                    })
+                    .map_err(|e| e.to_string());
+                let _ = reply.send(r);
+            }
+            SessionMsg::Prepare {
+                ds,
+                k,
+                sigma,
+                phi,
+                reply,
+            } => {
+                let key = (ds, k, sigma.to_bits(), phi);
+                if let Some(p) = prepared.get(&key) {
+                    let _ = reply.send(Ok(p.clone()));
+                    continue;
+                }
+                let r = (|| -> Result<Prepared> {
+                    let spec =
+                        OperatingPointSpec::new(ds, k, sigma, phi);
+                    let point = session.query(&spec)?;
+                    let folded = session.folded(ds)?;
+                    let dspec = ds.spec();
+                    let meta = arch::model_meta(dspec.model)?;
+                    Ok(Prepared {
+                        model: dspec.model,
+                        pixels: dspec.pixels(),
+                        n_classes: meta.n_classes,
+                        folded,
+                        ems: Arc::new(point.ems.clone()),
+                    })
+                })();
+                match r {
+                    Ok(p) => {
+                        prepared.insert(key, p.clone());
+                        let _ = reply.send(Ok(p));
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Err(e.to_string()));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    conn_rx: &Mutex<Receiver<TcpStream>>,
+    session_tx: &Sender<SessionMsg>,
+    infer_tx: &Sender<InferJob>,
+    metrics: &Metrics,
+    shutdown: &AtomicBool,
+    info: &ServerInfo,
+    admitted: &std::sync::atomic::AtomicUsize,
+) {
+    loop {
+        // one worker blocks in recv holding the lock; the rest queue
+        // on the mutex — either way a new connection wakes exactly one
+        let conn = { conn_rx.lock().unwrap().recv() };
+        let Ok(stream) = conn else { return };
+        let _ = handle_conn(
+            stream, session_tx, infer_tx, metrics, shutdown, info,
+        );
+        admitted.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Serve one connection until EOF, a `Shutdown`, an IO error, or the
+/// drain flag. Any number of requests per connection, answered in
+/// order.
+fn handle_conn(
+    stream: TcpStream,
+    session_tx: &Sender<SessionMsg>,
+    infer_tx: &Sender<InferJob>,
+    metrics: &Metrics,
+    shutdown: &AtomicBool,
+    info: &ServerInfo,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(READ_POLL))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(()); // in-flight work already replied
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(_) => {
+                let keep_going = process_line(
+                    &line, &mut writer, session_tx, infer_tx, metrics,
+                    shutdown, info,
+                )?;
+                line.clear();
+                if !keep_going {
+                    return Ok(());
+                }
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                // poll tick; a partial line stays buffered in `line`
+                continue;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn write_line(
+    writer: &mut TcpStream,
+    json: Json,
+) -> std::io::Result<()> {
+    let mut s = json.to_string();
+    s.push('\n');
+    writer.write_all(s.as_bytes())?;
+    writer.flush()
+}
+
+/// Handle one request line; `Ok(false)` closes the connection (after
+/// a `Shutdown`).
+#[allow(clippy::too_many_arguments)]
+fn process_line(
+    line: &str,
+    writer: &mut TcpStream,
+    session_tx: &Sender<SessionMsg>,
+    infer_tx: &Sender<InferJob>,
+    metrics: &Metrics,
+    shutdown: &AtomicBool,
+    info: &ServerInfo,
+) -> std::io::Result<bool> {
+    if line.trim().is_empty() {
+        return Ok(true); // blank keep-alives are free
+    }
+    let t0 = Instant::now();
+    let req = match Request::parse(line) {
+        Ok(r) => r,
+        Err((id, msg)) => {
+            metrics.inc_error();
+            write_line(writer, protocol::error_response(id, &msg))?;
+            return Ok(true);
+        }
+    };
+    match req {
+        Request::Stats { id } => {
+            metrics.inc(Kind::Stats);
+            let mut stats = match metrics.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("metrics emit an object"),
+            };
+            stats.insert("server".into(), info.to_json());
+            write_line(
+                writer,
+                protocol::stats_response(id, Json::Obj(stats)),
+            )?;
+            Ok(true)
+        }
+        Request::Shutdown { id } => {
+            metrics.inc(Kind::Shutdown);
+            write_line(writer, protocol::shutdown_response(id))?;
+            shutdown.store(true, Ordering::SeqCst);
+            // poke the accept loop out of `incoming()`; a wildcard
+            // bind address is not connectable everywhere, so aim the
+            // poke at loopback on the bound port
+            let mut poke = info.addr;
+            if poke.ip().is_unspecified() {
+                poke.set_ip(match poke {
+                    SocketAddr::V4(_) => std::net::IpAddr::V4(
+                        std::net::Ipv4Addr::LOCALHOST,
+                    ),
+                    SocketAddr::V6(_) => std::net::IpAddr::V6(
+                        std::net::Ipv6Addr::LOCALHOST,
+                    ),
+                });
+            }
+            let _ = TcpStream::connect(poke);
+            Ok(false)
+        }
+        Request::Point(p) => {
+            metrics.inc(Kind::Point);
+            let mut spec = OperatingPointSpec::new(
+                p.dataset, p.k, p.sigma, p.phi,
+            );
+            if p.eval {
+                spec = spec.with_eval(1, 1);
+            }
+            let (tx, rx) = mpsc::channel();
+            let sent = session_tx
+                .send(SessionMsg::Point { spec, reply: tx })
+                .is_ok();
+            let reply = if sent {
+                rx.recv().unwrap_or_else(|_| {
+                    Err("session thread gone".into())
+                })
+            } else {
+                Err("server draining".into())
+            };
+            let out = match reply {
+                Ok((key, point)) => {
+                    protocol::point_response(p.id, &key, &point)
+                }
+                Err(e) => {
+                    metrics.inc_error();
+                    protocol::error_response(Some(p.id), &e)
+                }
+            };
+            metrics
+                .point_latency_us
+                .record(t0.elapsed().as_micros() as u64);
+            write_line(writer, out)?;
+            Ok(true)
+        }
+        Request::Infer(q) => {
+            metrics.inc(Kind::Infer);
+            let id = q.id;
+            let out = run_infer(q, session_tx, infer_tx, t0);
+            let out = match out {
+                Ok(done) => protocol::infer_response(
+                    id,
+                    &done.logits,
+                    done.batch,
+                    done.n_classes,
+                ),
+                Err(e) => {
+                    metrics.inc_error();
+                    protocol::error_response(Some(id), &e)
+                }
+            };
+            write_line(writer, out)?;
+            Ok(true)
+        }
+    }
+}
+
+/// Resolve the operating point (cached in the session thread), then
+/// queue the forward on the batcher and wait for the fan-back. Takes
+/// the request by value so the sample buffer moves straight into the
+/// job — no copies on the hot path.
+fn run_infer(
+    q: protocol::InferReq,
+    session_tx: &Sender<SessionMsg>,
+    infer_tx: &Sender<InferJob>,
+    t0: Instant,
+) -> Result<batcher::InferDone, String> {
+    let (ptx, prx) = mpsc::channel();
+    session_tx
+        .send(SessionMsg::Prepare {
+            ds: q.dataset,
+            k: q.k,
+            sigma: q.sigma,
+            phi: q.phi,
+            reply: ptx,
+        })
+        .map_err(|_| "server draining".to_string())?;
+    let prep = prx
+        .recv()
+        .map_err(|_| "session thread gone".to_string())??;
+    debug_assert_eq!(q.x.len(), q.n * prep.pixels);
+    let (rtx, rrx) = mpsc::channel();
+    infer_tx
+        .send(InferJob {
+            model: prep.model,
+            n_classes: prep.n_classes,
+            folded: prep.folded,
+            ems: prep.ems,
+            seed: q.seed,
+            x: q.x,
+            batch: q.n,
+            reply: rtx,
+            t0,
+        })
+        .map_err(|_| "server draining".to_string())?;
+    rrx.recv().map_err(|_| "batcher gone".to_string())?
+}

@@ -9,6 +9,7 @@
 use std::collections::HashMap;
 use std::fs;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
@@ -65,12 +66,24 @@ impl PointCache {
         Some(point)
     }
 
-    /// Insert into memory and (atomically) onto disk.
+    /// Insert into memory and atomically onto disk: the JSON is
+    /// written to a tmp file *unique to this writer* (pid + a process
+    /// counter), then renamed over `<key>.json`. Rename is atomic on
+    /// POSIX, so a concurrently-serving process (or a second CLI run
+    /// over the same run dir) can never read a torn point file — and
+    /// because the tmp name is unique, two racing writers of the same
+    /// key can't rename each other's half-written tmp either; last
+    /// rename wins with both files complete.
     pub fn put(&self, key: &str, point: Arc<OperatingPoint>)
         -> Result<()> {
         if self.persist {
             fs::create_dir_all(&self.dir)?;
-            let tmp = self.dir.join(format!("{key}.json.tmp"));
+            static SEQ: AtomicU64 = AtomicU64::new(0);
+            let tmp = self.dir.join(format!(
+                "{key}.{}.{}.tmp",
+                std::process::id(),
+                SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
             fs::write(&tmp, point.to_json().to_string())?;
             fs::rename(tmp, self.path(key))?;
         }
@@ -161,6 +174,41 @@ mod tests {
         fs::write(cache.path("bad"), "{not json").unwrap();
         let (spec, _) = test_point(14);
         assert!(cache.get_disk("bad", &spec).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn racing_writers_never_tear_a_point_file_or_leave_tmps() {
+        let dir = tmp_dir("race");
+        let _ = fs::remove_dir_all(&dir);
+        let cache = PointCache::new(dir.clone(), true);
+        let (spec, point) = test_point(14);
+        // many threads hammering the same key: every interleaving must
+        // leave a complete, parseable file (unique tmp names mean no
+        // writer can rename another's half-written file)
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let cache = &cache;
+                let point = point.clone();
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        cache.put("hot", point.clone()).unwrap();
+                    }
+                });
+            }
+        });
+        let cold = PointCache::new(dir.clone(), true);
+        let hit = cold.get_disk("hot", &spec).expect("parseable file");
+        assert_eq!(*hit, *point);
+        // no tmp litter once the writers are done
+        let tmps: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.path().extension().map(|x| x == "tmp").unwrap_or(false)
+            })
+            .collect();
+        assert!(tmps.is_empty(), "{tmps:?}");
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -129,11 +129,19 @@ pub struct DesignSession {
     /// (native-only build, cold store): their F_MACs and accuracies
     /// are flagged and never persisted as if trained.
     untrained: Mutex<HashSet<Dataset>>,
+    /// The worker pool every solve, MC sweep and native kernel fans
+    /// over. Scoped by default (threads per call); a long-running
+    /// server installs a persistent crew via
+    /// [`DesignSessionBuilder::pool`] so no threads are constructed
+    /// per request (DESIGN.md §12). Results are bit-identical either
+    /// way.
+    pool: ScopedPool,
     stats: Cell<SessionStats>,
 }
 
 pub struct DesignSessionBuilder {
     cfg: ExperimentConfig,
+    pool: Option<ScopedPool>,
     #[cfg(feature = "xla")]
     runtime: Option<Runtime>,
 }
@@ -148,6 +156,16 @@ impl DesignSessionBuilder {
     /// the config.
     pub fn run_dir(mut self, dir: &str) -> Self {
         self.cfg.run_dir = dir.to_string();
+        self
+    }
+
+    /// Supply the worker pool the session fans out over instead of
+    /// the default scoped one — `capmin serve` passes
+    /// [`ScopedPool::persistent`] so solve/eval worker threads are
+    /// spawned once at startup and reused across requests. The pool's
+    /// thread count takes precedence over `cfg.threads`.
+    pub fn pool(mut self, pool: ScopedPool) -> Self {
+        self.pool = Some(pool);
         self
     }
 
@@ -174,6 +192,9 @@ impl DesignSessionBuilder {
         if let Some(r) = self.runtime {
             let _ = rt.set(Arc::new(r));
         }
+        let pool = self
+            .pool
+            .unwrap_or_else(|| ScopedPool::new(self.cfg.threads));
         Ok(DesignSession {
             cfg: self.cfg,
             store,
@@ -185,6 +206,7 @@ impl DesignSessionBuilder {
             fmacs: Mutex::new(HashMap::new()),
             folded: Mutex::new(HashMap::new()),
             untrained: Mutex::new(HashSet::new()),
+            pool,
             stats: Cell::new(SessionStats::default()),
         })
     }
@@ -194,6 +216,7 @@ impl DesignSession {
     pub fn builder() -> DesignSessionBuilder {
         DesignSessionBuilder {
             cfg: ExperimentConfig::default(),
+            pool: None,
             #[cfg(feature = "xla")]
             runtime: None,
         }
@@ -234,7 +257,15 @@ impl DesignSession {
     /// *resolved* count (never 0), which is what point metadata
     /// records.
     pub fn threads(&self) -> usize {
-        ScopedPool::new(self.cfg.threads).threads()
+        self.pool.threads()
+    }
+
+    /// The session's worker pool (persistent when the builder
+    /// installed one — `ScopedPool::spawned_workers` is then stable
+    /// for the session's life, which `capmin serve` reports in
+    /// `Stats`).
+    pub fn pool(&self) -> &ScopedPool {
+        &self.pool
     }
 
     /// The native microkernel tier this session's config resolves to
@@ -256,8 +287,8 @@ impl DesignSession {
             let b: Box<dyn InferenceBackend> = match self.backend_name()
             {
                 "xla" => self.xla_backend()?,
-                _ => Box::new(NativeBackend::with_options(
-                    self.cfg.threads,
+                _ => Box::new(NativeBackend::with_pool(
+                    self.pool.clone(),
                     KernelKind::resolve(&self.cfg.kernel)?,
                     true,
                 )),
@@ -443,11 +474,11 @@ impl DesignSession {
             return Ok(hw.clone());
         }
         let (per_fmac, _) = self.fmac(spec.dataset)?;
-        let hw = solver::solve(
+        let hw = solver::solve_on(
+            &self.pool,
             self.params(),
             self.cfg.seed,
             self.cfg.mc_samples,
-            self.cfg.threads,
             &per_fmac,
             spec.k,
             spec.sigma,
@@ -548,8 +579,10 @@ impl DesignSession {
             // split the workers between the job fan-out and each
             // job's MC level sweep: small batches on many-core hosts
             // still use every core, without oversubscribing (results
-            // are bit-identical at any split)
-            let pool = ScopedPool::new(self.cfg.threads);
+            // are bit-identical at any split). The inner per-job
+            // pools stay scoped even when the session pool is
+            // persistent — a persistent crew must not re-enter itself
+            let pool = &self.pool;
             let per_job = (pool.threads() / jobs.len()).max(1);
             let solved: Vec<(String, HwSolve)> =
                 pool.map(jobs.len(), |i| {

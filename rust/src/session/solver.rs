@@ -69,11 +69,34 @@ impl HwSolve {
 /// of `threads` (the Monte-Carlo fan-out over (level, chunk) work
 /// items — pass 1 when the caller already parallelizes across
 /// solves).
+#[allow(clippy::too_many_arguments)]
 pub fn solve(
     base: AnalogParams,
     seed: u64,
     mc_samples: usize,
     threads: usize,
+    per_fmac: &[Fmac],
+    k: usize,
+    sigma: f64,
+    phi: usize,
+) -> HwSolve {
+    let pool = if threads == 1 {
+        crate::util::pool::ScopedPool::sequential()
+    } else {
+        crate::util::pool::ScopedPool::new(threads)
+    };
+    solve_on(&pool, base, seed, mc_samples, per_fmac, k, sigma, phi)
+}
+
+/// [`solve`] on a caller-supplied pool: a long-running session (or
+/// server) fans its Monte-Carlo stages over one persistent crew
+/// instead of constructing threads per solve (DESIGN.md §12).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_on(
+    pool: &crate::util::pool::ScopedPool,
+    base: AnalogParams,
+    seed: u64,
+    mc_samples: usize,
     per_fmac: &[Fmac],
     k: usize,
     sigma: f64,
@@ -91,7 +114,7 @@ pub fn solve(
         .fold(0.0f64, f64::max);
     let mc = MonteCarlo::new(p)
         .with_samples(mc_samples)
-        .with_threads(threads);
+        .with_pool(pool.clone());
     let mut sets = Vec::with_capacity(windows.len());
     let mut ems = Vec::with_capacity(windows.len());
     for (i, w) in windows.iter().enumerate() {

@@ -103,6 +103,24 @@ impl Args {
         Ok(out)
     }
 
+    /// A `host:port` socket-address option (e.g. `--addr
+    /// 127.0.0.1:7878`), resolved through the system resolver so
+    /// `localhost:0` works too; `default` when absent. Malformed
+    /// values error in the same style as the enumerated-choice
+    /// options.
+    pub fn addr(&self, key: &str, default: &str)
+        -> Result<std::net::SocketAddr> {
+        use std::net::ToSocketAddrs;
+        let raw = self.get(key).unwrap_or(default);
+        raw.to_socket_addrs()
+            .ok()
+            .and_then(|mut it| it.next())
+            .ok_or_else(|| anyhow!(
+                "bad --{key} `{raw}`: expected host:port (e.g. \
+                 127.0.0.1:7878; port 0 picks a free port)"
+            ))
+    }
+
     /// Reject anything the caller did not declare: unknown `--opt
     /// value` pairs, unknown `--flag`s, and stray positional arguments
     /// all error with the valid set, in the same style as the
@@ -199,6 +217,25 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("tsv"), "{e}");
+    }
+
+    #[test]
+    fn addr_parses_host_port_and_rejects_garbage() {
+        let a = parse(&["serve", "--addr", "127.0.0.1:7878"]);
+        let got = a.addr("addr", "127.0.0.1:0").unwrap();
+        assert_eq!(got.port(), 7878);
+        assert!(got.ip().is_loopback());
+        // absent -> default (port 0 = pick a free port)
+        let d = parse(&["serve"]).addr("addr", "127.0.0.1:0").unwrap();
+        assert_eq!(d.port(), 0);
+        for bad in ["7878", "127.0.0.1", "127.0.0.1:notaport"] {
+            let e = parse(&["serve", "--addr", bad])
+                .addr("addr", "127.0.0.1:0")
+                .unwrap_err()
+                .to_string();
+            assert!(e.contains(bad), "{e}");
+            assert!(e.contains("host:port"), "{e}");
+        }
     }
 
     #[test]

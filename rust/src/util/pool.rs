@@ -1,46 +1,100 @@
-//! Hand-rolled scoped thread pool (no rayon offline; DESIGN.md §8).
+//! Hand-rolled thread pools (no rayon offline; DESIGN.md §8).
 //!
 //! One shared fan-out primitive for every data-parallel stage in the
 //! crate: the native backend's tiled matmul kernels, the Monte-Carlo
-//! level sweep, and `DesignSession::query_many`'s solve batch. A pool
-//! is just a worker count — `std::thread::scope` supplies the actual
-//! threads per call, so borrowing from the caller's stack is safe and
-//! nothing outlives the call.
+//! level sweep, `DesignSession::query_many`'s solve batch, and the
+//! serve batcher's per-request fan (DESIGN.md §12). A [`ScopedPool`]
+//! comes in two flavours behind one API:
 //!
-//! Contract: work items are indexed 0..n and must be independent;
-//! `map` returns results in index order regardless of scheduling, so a
-//! caller whose per-item computation is deterministic gets bit-identical
-//! output at every thread count (the backend-equivalence tests pin
-//! this).
+//! * **scoped** (default): a pool is just a worker count —
+//!   `std::thread::scope` supplies the actual threads per call, so
+//!   borrowing from the caller's stack is safe and nothing outlives
+//!   the call. Right for one-shot CLI runs.
+//! * **persistent** ([`ScopedPool::persistent`]): a fixed crew of
+//!   long-lived workers spawned once and reused by every subsequent
+//!   `for_each`/`map` — no thread spawn/join on the request path,
+//!   which is what a long-running server needs. The worker count
+//!   never changes after construction ([`ScopedPool::spawned_workers`]
+//!   is stable for the life of the pool; `capmin serve` asserts this
+//!   through its `Stats` reply).
+//!
+//! Contract (both flavours): work items are indexed 0..n and must be
+//! independent; `map` returns results in index order regardless of
+//! scheduling, so a caller whose per-item computation is deterministic
+//! gets bit-identical output at every thread count and in either
+//! flavour (the backend-equivalence tests pin this).
+//!
+//! Re-entrancy: a persistent pool runs one fan-out at a time, and a
+//! closure running *on* a persistent worker must not submit to the
+//! same pool (the outer fan-out would never finish). Nesting a
+//! *scoped* pool inside persistent workers is fine — the serve
+//! batcher leans on exactly that (outer persistent fan over requests,
+//! inner sequential kernels).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct ScopedPool {
     threads: usize,
+    /// Long-lived workers (persistent flavour); `None` means
+    /// `std::thread::scope` per call.
+    engine: Option<Arc<PoolEngine>>,
+}
+
+impl fmt::Debug for ScopedPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ScopedPool")
+            .field("threads", &self.threads)
+            .field("persistent", &self.engine.is_some())
+            .finish()
+    }
 }
 
 impl ScopedPool {
     /// `threads = 0` means "all available parallelism".
     pub fn new(threads: usize) -> ScopedPool {
-        let threads = if threads == 0 {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        } else {
-            threads
-        };
-        ScopedPool { threads }
+        ScopedPool {
+            threads: resolve_threads(threads),
+            engine: None,
+        }
     }
 
     /// A pool that runs everything inline on the caller's thread.
     pub fn sequential() -> ScopedPool {
-        ScopedPool { threads: 1 }
+        ScopedPool {
+            threads: 1,
+            engine: None,
+        }
+    }
+
+    /// A pool whose workers are spawned once, here, and reused by
+    /// every later `for_each`/`map` (`threads = 0` = all cores).
+    /// Clones share the same workers; the last clone dropped joins
+    /// them.
+    pub fn persistent(threads: usize) -> ScopedPool {
+        let threads = resolve_threads(threads);
+        let engine = if threads > 1 {
+            Some(Arc::new(PoolEngine::spawn(threads)))
+        } else {
+            None // a one-worker pool runs inline either way
+        };
+        ScopedPool { threads, engine }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Workers this pool spawned at construction and holds for its
+    /// lifetime: the persistent crew size, or 0 for the scoped
+    /// flavour (whose threads live only inside a single call). A
+    /// server asserting "no threads are created per request" pins
+    /// this value across requests.
+    pub fn spawned_workers(&self) -> usize {
+        self.engine.as_ref().map(|e| e.workers).unwrap_or(0)
     }
 
     /// Run `f(i)` for every `i in 0..n`, work-stealing over an atomic
@@ -53,6 +107,10 @@ impl ScopedPool {
             for i in 0..n {
                 f(i);
             }
+            return;
+        }
+        if let Some(engine) = &self.engine {
+            engine.run(n, &f);
             return;
         }
         let next = AtomicUsize::new(0);
@@ -89,6 +147,191 @@ impl ScopedPool {
         let mut out = results.into_inner().unwrap();
         out.sort_by_key(|&(i, _)| i);
         out.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// One fan-out handed to the persistent workers.
+///
+/// `f` is a type-erased borrow of the submitter's closure with its
+/// lifetime transmuted away. Safety rests on two invariants, both
+/// enforced by [`PoolEngine::run`]:
+/// * `f` is only dereferenced for claimed indices `i < n`, and
+/// * `run` does not return until `completed == n` — i.e. every
+///   dereference has finished — so the borrow outlives all use.
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    completed: AtomicUsize,
+    n: usize,
+    /// Set when any index's closure panicked; the submitter re-raises
+    /// after the job drains, matching the scoped flavour (where
+    /// `std::thread::scope` propagates worker panics to the caller).
+    panicked: AtomicBool,
+}
+
+// The raw closure pointer is only sent to workers that observe the
+// invariants above; the closure itself is Sync by bound.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct EngineState {
+    job: Option<Arc<Job>>,
+    /// Bumped per submitted job so a worker never re-runs a job it has
+    /// already drained (its claim loop ended on `next >= n`).
+    generation: u64,
+    shutdown: bool,
+}
+
+struct EngineShared {
+    state: Mutex<EngineState>,
+    /// Workers wait here for a new generation (or shutdown).
+    work: Condvar,
+    /// The submitter waits here for `completed == n`.
+    done: Condvar,
+}
+
+/// The long-lived crew behind a persistent [`ScopedPool`]: `workers`
+/// threads spawned exactly once, parked on a condvar between
+/// fan-outs.
+struct PoolEngine {
+    workers: usize,
+    shared: Arc<EngineShared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl PoolEngine {
+    fn spawn(workers: usize) -> PoolEngine {
+        let shared = Arc::new(EngineShared {
+            state: Mutex::new(EngineState {
+                job: None,
+                generation: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        PoolEngine {
+            workers,
+            shared,
+            handles: Mutex::new(handles),
+        }
+    }
+
+    /// Execute `f(0..n)` on the crew, blocking until every index has
+    /// run. One job at a time: a second submitter queues behind the
+    /// first (in this crate submitters are already serialized — the
+    /// guard just makes the engine safe on its own terms).
+    fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        // erase the borrow's lifetime; see `Job` for why this is sound
+        let f: *const (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                &'static (dyn Fn(usize) + Sync),
+            >(f)
+        };
+        let job = Arc::new(Job {
+            f,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            n,
+            panicked: AtomicBool::new(false),
+        });
+        let mut st = self.shared.state.lock().unwrap();
+        while st.job.is_some() {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = Some(job.clone());
+        st.generation += 1;
+        self.shared.work.notify_all();
+        while job.completed.load(Ordering::Acquire) < n {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        // wake any queued submitter (and nudge idle workers back to
+        // their wait loop for the next generation)
+        self.shared.done.notify_all();
+        drop(st);
+        if job.panicked.load(Ordering::Acquire) {
+            // the workers survived (they catch the unwind so the crew
+            // never shrinks silently); the submitter re-raises, like a
+            // scoped pool would on join
+            panic!("a closure panicked on a persistent pool worker");
+        }
+    }
+}
+
+impl Drop for PoolEngine {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &EngineShared) {
+    let mut seen = 0u64;
+    loop {
+        // park until a generation this worker hasn't drained appears
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen {
+                    if let Some(j) = &st.job {
+                        seen = st.generation;
+                        break j.clone();
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.n {
+                break;
+            }
+            // i < n: in-bounds claim, the submitter is still inside
+            // `run` (completed < n), so the closure borrow is alive.
+            // A panicking closure must still count as completed or the
+            // submitter waits forever — catch it, flag the job, and
+            // let the submitter re-raise.
+            let r = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| (unsafe { &*job.f })(i)),
+            );
+            if r.is_err() {
+                job.panicked.store(true, Ordering::Release);
+            }
+            if job.completed.fetch_add(1, Ordering::Release) + 1 == job.n
+            {
+                // last index done: wake the submitter. Taking the lock
+                // orders this notify after the submitter's wait.
+                let _guard = shared.state.lock().unwrap();
+                shared.done.notify_all();
+            }
+        }
     }
 }
 
@@ -142,5 +385,91 @@ mod tests {
                 pool.map(64, |i| (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
             assert_eq!(got, reference, "threads {threads}");
         }
+    }
+
+    #[test]
+    fn persistent_matches_scoped_bit_for_bit() {
+        let reference: Vec<u64> = (0..257u64)
+            .map(|i| i.wrapping_mul(0x9E3779B97F4A7C15))
+            .collect();
+        let pool = ScopedPool::persistent(3);
+        for _ in 0..20 {
+            let got = pool
+                .map(257, |i| (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            assert_eq!(got, reference);
+        }
+    }
+
+    #[test]
+    fn persistent_workers_are_spawned_once_and_stable() {
+        let pool = ScopedPool::persistent(4);
+        assert_eq!(pool.spawned_workers(), 4);
+        assert_eq!(pool.threads(), 4);
+        for round in 0..50 {
+            let sum = AtomicU64::new(0);
+            pool.for_each(100, |i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+            // the crew never grows or shrinks across requests
+            assert_eq!(pool.spawned_workers(), 4, "round {round}");
+        }
+        // scoped pools hold no long-lived workers at all
+        assert_eq!(ScopedPool::new(4).spawned_workers(), 0);
+        assert_eq!(ScopedPool::sequential().spawned_workers(), 0);
+    }
+
+    #[test]
+    fn persistent_clones_share_one_crew() {
+        let a = ScopedPool::persistent(2);
+        let b = a.clone();
+        assert_eq!(a.spawned_workers(), 2);
+        assert_eq!(b.spawned_workers(), 2);
+        let out_a = a.map(32, |i| i + 1);
+        let out_b = b.map(32, |i| i + 1);
+        assert_eq!(out_a, out_b);
+        drop(a);
+        // surviving clone still works after the original is gone
+        assert_eq!(b.map(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn persistent_pool_propagates_panics_and_survives() {
+        let pool = ScopedPool::persistent(2);
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.for_each(8, |i| {
+                    if i == 3 {
+                        panic!("boom");
+                    }
+                });
+            }),
+        );
+        assert!(r.is_err(), "submitter must re-raise worker panics");
+        // the crew caught the unwind: same workers, next job fine
+        assert_eq!(pool.spawned_workers(), 2);
+        assert_eq!(pool.map(5, |i| i * 3), vec![0, 3, 6, 9, 12]);
+    }
+
+    #[test]
+    fn persistent_single_thread_runs_inline() {
+        let pool = ScopedPool::persistent(1);
+        assert_eq!(pool.spawned_workers(), 0);
+        assert_eq!(pool.map(4, |i| i * 2), vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn persistent_pool_can_nest_scoped_fanouts() {
+        // the serve batcher's shape: outer persistent fan over
+        // requests, inner scoped/sequential kernels per request
+        let outer = ScopedPool::persistent(3);
+        let got = outer.map(6, |i| {
+            let inner = ScopedPool::new(2);
+            inner.map(8, |j| (i * 8 + j) as u64).iter().sum::<u64>()
+        });
+        let want: Vec<u64> = (0..6)
+            .map(|i| (0..8).map(|j| (i * 8 + j) as u64).sum())
+            .collect();
+        assert_eq!(got, want);
     }
 }

@@ -1,0 +1,249 @@
+//! Loopback integration tests for `capmin serve` (DESIGN.md §12):
+//! spawn a real server on port 0, drive it with real TCP clients, and
+//! pin the subsystem's three contracts — micro-batched `Infer`
+//! replies are bit-identical to solo replies, worker/pool threads are
+//! spawned once and stay stable across requests, and `Shutdown`
+//! drains in-flight requests before the process lets go.
+//!
+//! Everything runs on the native backend's untrained fallback at
+//! smoke scale — no artifacts, no training, just like the other
+//! offline suites.
+
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::data::synth::Dataset;
+use capmin::serve::{client::Client, server, ServeOptions};
+use capmin::util::json::Json;
+
+mod common;
+use common::{artifacts_present, tmp_dir};
+
+const DS: &str = "fashion_syn";
+const K: usize = 14;
+const SIGMA: f64 = 0.02;
+
+fn serve_cfg(tag: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = "native".into();
+    cfg.threads = 2;
+    cfg.mc_samples = 100;
+    cfg.hist_limit = 32;
+    cfg.eval_limit = 16;
+    cfg.run_dir = tmp_dir(&format!("serve_{tag}"));
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    cfg
+}
+
+fn spawn_server(
+    tag: &str,
+    max_batch: usize,
+    max_wait_ms: u64,
+) -> (server::Server, SocketAddr, String) {
+    let cfg = serve_cfg(tag);
+    let run_dir = cfg.run_dir.clone();
+    let addr: SocketAddr = "127.0.0.1:0".parse().unwrap();
+    let mut opts = ServeOptions::new(addr);
+    opts.max_batch = max_batch;
+    opts.max_wait_ms = max_wait_ms;
+    let srv = server::spawn(cfg, opts).unwrap();
+    let addr = srv.addr();
+    (srv, addr, run_dir)
+}
+
+/// A deterministic +-1 sample batch for `fashion_syn`.
+fn samples(seed: u64, n: usize) -> Vec<Vec<f32>> {
+    let px = Dataset::FashionSyn.spec().pixels();
+    let mut rng = capmin::util::rng::Rng::new(seed);
+    (0..n)
+        .map(|_| (0..px).map(|_| rng.pm1(0.5)).collect())
+        .collect()
+}
+
+#[test]
+fn concurrent_clients_mix_point_infer_stats() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    let (srv, addr, run_dir) = spawn_server("mix", 4, 20);
+    // warm the operating point + model once, and take the solo
+    // baseline every concurrent infer must match bit-for-bit
+    let mut warm = Client::connect(addr).unwrap();
+    let xs = samples(11, 2);
+    let baseline = warm
+        .infer_logits(DS, K, SIGMA, 0, 7, &xs)
+        .unwrap();
+    let stats_before = warm.stats().unwrap();
+
+    std::thread::scope(|s| {
+        for ci in 0..6 {
+            let xs = xs.clone();
+            let baseline = baseline.clone();
+            s.spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                // every client mixes all three request kinds
+                let p = c.point(DS, K, SIGMA, 0, false).unwrap();
+                assert!(p.req("c").as_f64() > 0.0, "client {ci}");
+                assert_eq!(p.req("dataset").as_str(), DS);
+                let logits =
+                    c.infer_logits(DS, K, SIGMA, 0, 7, &xs).unwrap();
+                assert_eq!(
+                    logits, baseline,
+                    "client {ci}: batched infer changed the reply"
+                );
+                let st = c.stats().unwrap();
+                assert!(
+                    st.req("stats").req("uptime_s").as_f64() >= 0.0
+                );
+            });
+        }
+    });
+
+    let stats_after = warm.stats().unwrap();
+    // worker/pool threads are spawned once: every figure the server
+    // reports about its crews is identical before and after the storm
+    let crew = |j: &Json| -> (f64, f64, f64) {
+        let srv = j.req("stats").req("server");
+        (
+            srv.req("workers").as_f64(),
+            srv.req("session_pool_workers").as_f64(),
+            srv.req("infer_pool_workers").as_f64(),
+        )
+    };
+    assert_eq!(crew(&stats_before), crew(&stats_after));
+    // cfg.threads = 2 -> both persistent crews hold exactly 2 workers
+    assert_eq!(crew(&stats_after).1, 2.0);
+    assert_eq!(crew(&stats_after).2, 2.0);
+    let reqs = stats_after.req("stats").req("requests");
+    assert_eq!(reqs.req("point").as_f64(), 6.0);
+    assert_eq!(reqs.req("infer").as_f64(), 7.0); // warm + 6 clients
+    assert_eq!(stats_after.req("stats").req("errors").as_f64(), 0.0);
+
+    warm.shutdown().unwrap();
+    srv.join().unwrap();
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+#[test]
+fn batched_infer_is_bit_identical_to_solo_and_coalesces() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    // a generous wait window so concurrently-fired requests are
+    // certain to share a micro-batch
+    let (srv, addr, run_dir) = spawn_server("batch", 8, 800);
+    let mut warm = Client::connect(addr).unwrap();
+    let xs = samples(21, 1);
+    let baseline =
+        warm.infer_logits(DS, K, SIGMA, 0, 3, &xs).unwrap();
+
+    std::thread::scope(|s| {
+        for ci in 0..6 {
+            let xs = xs.clone();
+            let baseline = baseline.clone();
+            s.spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let got =
+                    c.infer_logits(DS, K, SIGMA, 0, 3, &xs).unwrap();
+                assert_eq!(got, baseline, "client {ci}");
+            });
+        }
+    });
+
+    let st = warm.stats().unwrap();
+    let infer = st.req("stats").req("infer");
+    assert_eq!(infer.req("samples").as_f64(), 7.0);
+    assert!(
+        infer.req("max_batch_requests").as_f64() >= 2.0,
+        "six concurrent requests inside an 800 ms window never \
+         coalesced: {}",
+        st.to_string()
+    );
+    assert!(infer.req("batched_requests").as_f64() >= 2.0);
+
+    warm.shutdown().unwrap();
+    srv.join().unwrap();
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    // long batch window: the in-flight infer is parked in the batcher
+    // when the shutdown lands, and must still be answered
+    let (srv, addr, run_dir) = spawn_server("drain", 4, 700);
+    let mut warm = Client::connect(addr).unwrap();
+    let xs = samples(31, 1);
+    let baseline =
+        warm.infer_logits(DS, K, SIGMA, 0, 9, &xs).unwrap();
+
+    let in_flight = {
+        let xs = xs.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            c.infer_logits(DS, K, SIGMA, 0, 9, &xs)
+        })
+    };
+    // let the in-flight request reach the batcher, then pull the plug
+    std::thread::sleep(Duration::from_millis(200));
+    warm.shutdown().unwrap();
+
+    let got = in_flight.join().unwrap().expect(
+        "in-flight infer must be answered through the drain",
+    );
+    assert_eq!(got, baseline);
+    srv.join().unwrap();
+    // the port is actually released
+    assert!(
+        Client::connect(addr).is_err(),
+        "server still accepting after drain"
+    );
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+#[test]
+fn protocol_errors_are_structured_and_survivable() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    let (srv, addr, run_dir) = spawn_server("proto", 2, 5);
+    let mut c = Client::connect(addr).unwrap();
+
+    let bad = c.send_raw("this is not json").unwrap();
+    assert!(!bad.req("ok").as_bool());
+    assert!(bad.req("error").as_str().contains("bad JSON"));
+
+    let vbad = c
+        .send_raw(r#"{"v":99,"id":5,"type":"stats"}"#)
+        .unwrap();
+    assert!(!vbad.req("ok").as_bool());
+    assert_eq!(vbad.req("id").as_f64(), 5.0);
+    assert!(vbad.req("error").as_str().contains("unsupported"));
+
+    let kbad = c
+        .send_raw(
+            concat!(
+                r#"{"v":1,"id":6,"type":"point","#,
+                r#""dataset":"fashion_syn","k":99}"#
+            ),
+        )
+        .unwrap();
+    assert!(!kbad.req("ok").as_bool());
+    assert!(kbad.req("error").as_str().contains("1..=32"));
+
+    // the connection survives all of that
+    let st = c.stats().unwrap();
+    assert!(st.req("ok").as_bool());
+    assert_eq!(st.req("stats").req("errors").as_f64(), 3.0);
+
+    c.shutdown().unwrap();
+    srv.join().unwrap();
+    let _ = std::fs::remove_dir_all(&run_dir);
+}

@@ -186,6 +186,57 @@ fn query_many_dedupes_eval_variants_onto_one_solve() {
 }
 
 #[test]
+fn point_cache_writes_are_atomic_under_concurrent_sessions() {
+    // two sessions over the SAME run dir (a serving process next to a
+    // CLI run) racing to persist the same spec: every interleaving
+    // must leave a complete `<key>.json` and zero `*.tmp` litter —
+    // the unique-tmp + rename discipline in PointCache::put
+    let dir = std::env::temp_dir()
+        .join(format!(
+            "capmin_session_test_atomic_{}",
+            std::process::id()
+        ))
+        .to_str()
+        .unwrap()
+        .to_string();
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 0);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let dir = dir.clone();
+            s.spawn(move || {
+                // sessions are built on their own threads (the facade
+                // is single-threaded by design)
+                let mut cfg = ExperimentConfig::default();
+                cfg.mc_samples = 200;
+                cfg.run_dir = dir;
+                let session =
+                    DesignSession::builder().config(cfg).build().unwrap();
+                let (per, sum) = synthetic_fmacs(2);
+                session.put_fmac(Dataset::FashionSyn, per, sum);
+                session.query(&spec).unwrap();
+            });
+        }
+    });
+    // a fresh session must replay the racy key cleanly from disk
+    let mut cfg = ExperimentConfig::default();
+    cfg.mc_samples = 200;
+    cfg.run_dir = dir.clone();
+    let replay = DesignSession::builder().config(cfg).build().unwrap();
+    replay.query(&spec).unwrap();
+    assert_eq!(replay.stats().disk_hits, 1, "torn or missing file");
+    let tmps: Vec<_> = std::fs::read_dir(replay.store().path("points"))
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            e.path().extension().map(|x| x == "tmp").unwrap_or(false)
+        })
+        .collect();
+    assert!(tmps.is_empty(), "tmp litter: {tmps:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn distinct_specs_are_distinct_points() {
     let (session, dir) = session_in("distinct");
     let a = session
