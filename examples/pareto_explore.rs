@@ -1,0 +1,105 @@
+//! Quickstart for the design-space explorer (DESIGN.md §13): sweep
+//! CapMin windows through a `capmin serve` process, price each one via
+//! the `cost` field every `point` reply now carries, and compute the
+//! accuracy-free hardware frontier client-side with
+//! `capmin::util::pareto`.
+//!
+//!   # self-contained (spawns an in-process server on a free port):
+//!   cargo run --release --example pareto_explore
+//!
+//!   # against a running `capmin serve`:
+//!   capmin serve --addr 127.0.0.1:7878 --dataset fashion_syn --quick &
+//!   cargo run --release --example pareto_explore -- 127.0.0.1:7878
+//!
+//! For the full accuracy/energy/area/latency frontiers (CapMin vs
+//! CapMin-V, deduplicated against the fig8 sweep), run the plan
+//! instead: `capmin suite --plans pareto --emit md`.
+
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use anyhow::Result;
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::data::synth::Dataset;
+use capmin::serve::{server, Client, ServeOptions};
+use capmin::util::pareto::non_dominated;
+use capmin::util::table::si;
+
+fn main() -> Result<()> {
+    // either connect to the given server, or spawn one of our own
+    let external: Option<SocketAddr> = match std::env::args().nth(1) {
+        Some(a) => Some(
+            a.parse()
+                .map_err(|e| anyhow::anyhow!("bad addr `{a}`: {e}"))?,
+        ),
+        None => None,
+    };
+    let mut own = None;
+    let addr = match external {
+        Some(a) => a,
+        None => {
+            let mut cfg = ExperimentConfig::default();
+            cfg.backend = "native".into();
+            cfg.mc_samples = 200;
+            cfg.hist_limit = 64;
+            cfg.run_dir = std::env::temp_dir()
+                .join("capmin_pareto_example")
+                .to_str()
+                .unwrap()
+                .into();
+            let opts =
+                ServeOptions::new("127.0.0.1:0".parse().unwrap());
+            let srv = server::spawn(cfg, opts)?;
+            let addr = srv.addr();
+            println!("spawned an in-process server on {addr}");
+            own = Some(srv);
+            addr
+        }
+    };
+
+    let mut client =
+        Client::connect_retry(addr, Duration::from_secs(60))?;
+
+    // 1. sweep k and collect each point's typed cost vector — the
+    //    server prices every reply from the shared cost model, so a
+    //    client never reimplements the formulas
+    let ds = Dataset::FashionSyn.spec();
+    let ks = [32usize, 24, 20, 16, 14, 12, 10];
+    let mut costs = Vec::new();
+    for &k in &ks {
+        let (_, cost) = client.point_cost(ds.name, k, 0.02, 0, false)?;
+        println!(
+            "k={k:>2}: C = {}  E/pass = {}  area = {}  latency = {}",
+            si(cost.c, "F"),
+            si(cost.energy, "J"),
+            si(cost.area, "m2"),
+            si(cost.latency, "s"),
+        );
+        costs.push((k, cost));
+    }
+
+    // 2. the hardware-only frontier (energy, area, latency — all
+    //    minimized). With accuracy excluded every objective improves
+    //    monotonically as k shrinks, so the smallest window should be
+    //    the lone survivor — a quick sanity check of the cost model.
+    let vals: Vec<Vec<f64>> = costs
+        .iter()
+        .map(|(_, cv)| vec![cv.energy, cv.area, cv.latency])
+        .collect();
+    let front = non_dominated(&vals);
+    let survivors: Vec<usize> =
+        front.iter().map(|&i| costs[i].0).collect();
+    println!(
+        "hardware-only frontier (energy/area/latency): k in {:?}",
+        survivors
+    );
+
+    // 3. graceful shutdown
+    client.shutdown()?;
+    println!("shutdown acknowledged (drain started)");
+    if let Some(srv) = own {
+        srv.join()?;
+        println!("in-process server drained and exited cleanly");
+    }
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Bench: the design-space explorer's engine (DESIGN.md §13) — the
+//! O(n log n) non-dominated sort vs a naive O(n^2) scan, hypervolume
+//! of the surviving front, and `CostVector::price` throughput.
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, header, report, scaled, Emitter};
+use capmin::analog::capacitor::{CapacitorModel, CapacitorSolver};
+use capmin::analog::cost::CostVector;
+use capmin::analog::neuron::SpikeTimeSet;
+use capmin::analog::params::AnalogParams;
+use capmin::util::pareto::{dominates, hypervolume, non_dominated};
+use capmin::util::rng::Rng;
+
+/// The textbook O(n^2) front — the baseline the sort-based scan is
+/// measured against.
+fn naive_front(vals: &[Vec<f64>]) -> Vec<usize> {
+    (0..vals.len())
+        .filter(|&i| {
+            !vals
+                .iter()
+                .enumerate()
+                .any(|(j, v)| j != i && dominates(v, &vals[i]))
+        })
+        .collect()
+}
+
+fn random_points(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.f64()).collect())
+        .collect()
+}
+
+fn main() {
+    let mut emit = Emitter::new("pareto");
+    let mut rng = Rng::new(0xF0_17);
+
+    header("non-dominated sort (2D, 4096 points)");
+    let pts2 = random_points(&mut rng, 4096, 2);
+    let naive2 = bench("naive O(n^2) front, 2D", 2, scaled(20), || {
+        std::hint::black_box(naive_front(&pts2));
+    });
+    report(&naive2, 4096.0, "point");
+    emit.add(&naive2, None);
+
+    let fast2 = bench("sort-scan front, 2D", 2, scaled(20), || {
+        std::hint::black_box(non_dominated(&pts2));
+    });
+    report(&fast2, 4096.0, "point");
+    emit.add(&fast2, Some(&naive2));
+
+    header("non-dominated sort (4D, 2048 points)");
+    let pts4 = random_points(&mut rng, 2048, 4);
+    let naive4 = bench("naive O(n^2) front, 4D", 2, scaled(20), || {
+        std::hint::black_box(naive_front(&pts4));
+    });
+    report(&naive4, 2048.0, "point");
+    emit.add(&naive4, None);
+
+    let fast4 = bench("sort-scan front, 4D", 2, scaled(20), || {
+        std::hint::black_box(non_dominated(&pts4));
+    });
+    report(&fast4, 2048.0, "point");
+    emit.add(&fast4, Some(&naive4));
+
+    // sanity: both algorithms agree before their timings are compared
+    assert_eq!(naive_front(&pts2), non_dominated(&pts2));
+    assert_eq!(naive_front(&pts4), non_dominated(&pts4));
+
+    header("hypervolume of the surviving 2D front");
+    let front2: Vec<Vec<f64>> = non_dominated(&pts2)
+        .into_iter()
+        .map(|i| pts2[i].clone())
+        .collect();
+    let r = bench(
+        &format!("2D hypervolume, {} front points", front2.len()),
+        2,
+        scaled(200),
+        || {
+            std::hint::black_box(hypervolume(&front2, &[1.0, 1.0]));
+        },
+    );
+    report(&r, front2.len() as f64, "point");
+    emit.add(&r, None);
+
+    header("CostVector::price (operating-point pricing)");
+    let p = AnalogParams::paper_calibrated();
+    let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+    let c = solver.size_for_window(10, 23);
+    // a realistic point: several matmul windows over the same cap
+    let times: Vec<Vec<f64>> = [(10, 23), (12, 17), (10, 23), (11, 20)]
+        .iter()
+        .map(|&(lo, hi)| {
+            SpikeTimeSet::new(&p, c, (lo..=hi).collect()).times
+        })
+        .collect();
+    let r = bench("price 4-window point x1000", 5, scaled(200), || {
+        for _ in 0..1000 {
+            std::hint::black_box(CostVector::price(&p, c, &times));
+        }
+    });
+    report(&r, 1000.0, "point");
+    emit.add(&r, None);
+
+    emit.write();
+}

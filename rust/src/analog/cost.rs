@@ -1,15 +1,34 @@
-//! Energy / latency / area accounting for the neuron circuit (Fig. 9).
+//! Hardware cost accounting for the neuron circuit: per-set circuit
+//! ratios (Fig. 9) and the full per-operating-point [`CostVector`]
+//! (DESIGN.md §13).
 //!
-//! Energy per MAC read-out is the capacitor charge energy E = 1/2 C Vth^2
-//! (the paper's own expression, Sec. IV-B); latency is the guaranteed
-//! response time (GRT, [3]); area is proportional to C (MIM-cap density).
+//! Energy per sub-MAC read-out is the capacitor charge energy
+//! E = 1/2 C Vth^2 (the paper's own expression, Sec. IV-B); latency is
+//! the guaranteed response time (GRT, [3]) rounded up to the read-out
+//! clock; area is MIM-cap area plus a VSA-style computing-array slice.
+//! The absolute constants are order-of-magnitude 14nm-class figures —
+//! every report compares operating points against each other, so only
+//! the *ratios* carry weight (same convention as the capacitor model's
+//! physics mode).
 
+use super::clock;
 use super::neuron::SpikeTimeSet;
 use super::params::AnalogParams;
+use crate::util::json::{obj, Json};
+use anyhow::{anyhow, Result};
 
 /// MIM capacitor density [F/m^2]; ~8 fF/µm^2 for a 14nm-class MIM stack.
 /// Only ratios are reported, so the constant cancels in comparisons.
 pub const CAP_DENSITY: f64 = 8e-3;
+
+/// Area of one computing-array cell [m^2] (~0.2 µm^2: a 14nm-class
+/// XNOR/match-line cell, the VSA vectorwise-accelerator datapoint).
+pub const CELL_AREA: f64 = 2e-13;
+
+/// Area of one read-out boundary slot [m^2] (~1 µm^2: the time
+/// reference register + comparator tap a represented spike time costs
+/// in the decoder). CapMin-V merges shrink exactly this term.
+pub const READOUT_AREA: f64 = 1e-12;
 
 #[derive(Clone, Copy, Debug)]
 pub struct CircuitCost {
@@ -23,20 +42,132 @@ pub struct CircuitCost {
     pub area: f64,
 }
 
+/// Energy of one sub-MAC read-out at capacitance `c` [J] — the
+/// paper's Sec. IV-B expression, shared by every consumer (fig9, the
+/// per-point [`CostVector`]) so the formula lives in exactly one
+/// place.
+pub fn readout_energy(p: &AnalogParams, c: f64) -> f64 {
+    0.5 * c * p.vth * p.vth
+}
+
 pub fn cost(p: &AnalogParams, set: &SpikeTimeSet) -> CircuitCost {
     CircuitCost {
         c: set.c,
-        energy: 0.5 * set.c * p.vth * p.vth,
+        energy: readout_energy(p, set.c),
         grt: set.grt(),
         area: set.c / CAP_DENSITY,
     }
 }
 
 impl CircuitCost {
-    /// Ratios vs a baseline cost (the paper reports everything as "x
-    /// smaller than the state of the art").
-    pub fn ratio_vs(&self, base: &CircuitCost) -> (f64, f64, f64) {
-        (base.c / self.c, base.energy / self.energy, base.grt / self.grt)
+    /// Ratios vs a baseline cost — (c, energy, grt, area), each as
+    /// `base/self` (the paper reports everything as "x smaller than
+    /// the state of the art").
+    pub fn ratio_vs(&self, base: &CircuitCost) -> (f64, f64, f64, f64) {
+        (
+            base.c / self.c,
+            base.energy / self.energy,
+            base.grt / self.grt,
+            base.area / self.area,
+        )
+    }
+}
+
+/// GRT of one read-out window from its quantized spike times
+/// (descending: `times[0]` is the slowest represented level) — the
+/// same rule as [`SpikeTimeSet::grt`], recomputable from a persisted
+/// operating point's `times` rows alone.
+pub fn window_grt(times: &[f64]) -> f64 {
+    assert!(!times.is_empty(), "a window represents >= 1 level");
+    if times.len() == 1 {
+        return times[0];
+    }
+    times[0] + 0.5 * (times[0] - times[1])
+}
+
+/// The multi-objective price of one whole operating point (DESIGN.md
+/// §13) — the design-space explorer's coordinates. Derived purely
+/// from the point's own persisted fields (C + per-matmul spike
+/// times), so it is *recomputed* wherever a point materializes and is
+/// never part of any cache key: old `runs/points/*.json` files stay
+/// valid and re-pricings never invalidate solves.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostVector {
+    /// Shared membrane capacitance [F].
+    pub c: f64,
+    /// Total represented spike times across all matmul windows.
+    pub spike_times: usize,
+    /// Read-out energy for one full network pass [J]: per-window
+    /// spike-time count x the capacitor charge energy 1/2 C Vth^2.
+    pub energy: f64,
+    /// Silicon area of the neuron slice [m^2]: MIM cap + computing
+    /// array cells + one decoder slot per represented spike time.
+    pub area: f64,
+    /// End-to-end latency [s]: the matmuls run sequentially, each
+    /// waiting out its own window's GRT rounded up to the read-out
+    /// clock (clock period x GRT slots).
+    pub latency: f64,
+}
+
+impl CostVector {
+    /// Price an operating point from its capacitance and per-matmul
+    /// quantized spike-time rows (each descending, slowest first).
+    pub fn price(
+        p: &AnalogParams,
+        c: f64,
+        times: &[Vec<f64>],
+    ) -> CostVector {
+        assert!(!times.is_empty(), "a point prices >= 1 matmul");
+        let spike_times: usize = times.iter().map(|t| t.len()).sum();
+        let energy = spike_times as f64 * readout_energy(p, c);
+        let area = c / CAP_DENSITY
+            + p.array_size as f64 * CELL_AREA
+            + spike_times as f64 * READOUT_AREA;
+        let t_clk = p.t_clk();
+        let latency: f64 = times
+            .iter()
+            .map(|t| clock::slot(p, window_grt(t)) as f64 * t_clk)
+            .sum();
+        CostVector {
+            c,
+            spike_times,
+            energy,
+            area,
+            latency,
+        }
+    }
+
+    /// Stable JSON form — embedded in point files and `serve` `Point`
+    /// replies (informational there: loaders recompute, see
+    /// [`crate::session::point::OperatingPoint::from_json`]).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("c", Json::Num(self.c)),
+            ("spike_times", Json::Num(self.spike_times as f64)),
+            ("energy", Json::Num(self.energy)),
+            ("area", Json::Num(self.area)),
+            ("latency", Json::Num(self.latency)),
+        ])
+    }
+
+    /// Parse the JSON form (for clients reading `serve` replies or
+    /// point files directly).
+    pub fn from_json(j: &Json) -> Result<CostVector> {
+        let num = |k: &str| -> Result<f64> {
+            match j.get(k) {
+                Some(Json::Num(n)) => Ok(*n),
+                other => {
+                    Err(anyhow!("cost vector missing `{k}`: {other:?}"))
+                }
+            }
+        };
+        Ok(CostVector {
+            c: num("c")?,
+            spike_times: num("spike_times")? as usize,
+            energy: num("energy")?,
+            area: num("area")?,
+            latency: num("latency")?,
+        })
     }
 }
 
@@ -55,8 +186,9 @@ mod tests {
         let s14 = SpikeTimeSet::new(&p, c14, (10..=23).collect());
         let b = cost(&p, &s32);
         let m = cost(&p, &s14);
-        let (rc_, re, _) = m.ratio_vs(&b);
+        let (rc_, re, _, ra) = m.ratio_vs(&b);
         assert!((rc_ - re).abs() < 1e-9, "energy ratio == cap ratio");
+        assert!((rc_ - ra).abs() < 1e-9, "area ratio == cap ratio");
         assert!(rc_ > 1.0);
     }
 
@@ -69,7 +201,56 @@ mod tests {
         let c14 = solver.size_for_window(10, 23);
         let b = cost(&p, &SpikeTimeSet::new(&p, c32, (1..=32).collect()));
         let m = cost(&p, &SpikeTimeSet::new(&p, c14, (10..=23).collect()));
-        let (_, _, rt) = m.ratio_vs(&b);
+        let (_, _, rt, _) = m.ratio_vs(&b);
         assert!(rt > 5.0, "latency ratio {rt}");
+    }
+
+    #[test]
+    fn window_grt_matches_spike_time_set() {
+        let p = AnalogParams::paper_calibrated();
+        let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+        for (lo, hi) in [(1, 32), (10, 23), (16, 16)] {
+            let c = solver.size_for_window(lo, hi);
+            let s = SpikeTimeSet::new(&p, c, (lo..=hi).collect());
+            assert_eq!(window_grt(&s.times), s.grt(), "[{lo},{hi}]");
+        }
+    }
+
+    #[test]
+    fn price_aggregates_per_window() {
+        let p = AnalogParams::paper_calibrated();
+        let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+        let c = solver.size_for_window(10, 23);
+        let narrow = SpikeTimeSet::new(&p, c, (12..=17).collect());
+        let wide = SpikeTimeSet::new(&p, c, (10..=23).collect());
+        let cv = CostVector::price(
+            &p,
+            c,
+            &[narrow.times.clone(), wide.times.clone()],
+        );
+        assert_eq!(cv.spike_times, 6 + 14);
+        assert!(
+            (cv.energy - 20.0 * readout_energy(&p, c)).abs() < 1e-24
+        );
+        // each window's latency is clock-aligned at or past its GRT
+        let lat_lower = narrow.grt() + wide.grt();
+        assert!(cv.latency >= lat_lower);
+        assert!(cv.latency <= lat_lower + 2.0 * p.t_clk());
+        // area: MIM cap dominates, both other terms present
+        assert!(cv.area > cv.c / CAP_DENSITY);
+    }
+
+    #[test]
+    fn cost_vector_json_roundtrip_exact() {
+        let p = AnalogParams::paper_calibrated();
+        let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+        let c = solver.size_for_window(8, 21);
+        let s = SpikeTimeSet::new(&p, c, (8..=21).collect());
+        let cv = CostVector::price(&p, c, &[s.times]);
+        let back = CostVector::from_json(
+            &Json::parse(&cv.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cv, back);
     }
 }

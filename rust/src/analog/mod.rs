@@ -20,6 +20,7 @@ pub mod pmap;
 pub mod rc;
 
 pub use capacitor::{CapacitorModel, CapacitorSolver};
+pub use cost::CostVector;
 pub use montecarlo::MonteCarlo;
 pub use neuron::SpikeTimeSet;
 pub use params::AnalogParams;

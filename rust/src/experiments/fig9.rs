@@ -17,7 +17,7 @@ use anyhow::Result;
 use crate::analog::capacitor::{
     paper_fit, CapacitorModel, CapacitorSolver,
 };
-use crate::analog::cost::cost;
+use crate::analog::cost::{cost, readout_energy};
 use crate::analog::neuron::SpikeTimeSet;
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::report::ratio;
@@ -91,7 +91,7 @@ pub fn rows_from_points(
             c_physics: c16,
             c_paperfit: paper_fit(super::fig8::CAPMINV_K_START),
             grt: hw_v.grt,
-            energy: 0.5 * c16 * p.vth * p.vth,
+            energy: readout_energy(&p, c16),
         },
     ]
 }

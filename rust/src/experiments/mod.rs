@@ -15,6 +15,7 @@ pub mod fig6;
 pub mod fig8;
 pub mod fig9;
 pub mod headline;
+pub mod pareto;
 pub mod sigma_sweep;
 pub mod tables;
 

@@ -1,0 +1,296 @@
+//! Design-space explorer — CapMin vs CapMin-V Pareto frontiers over
+//! accuracy / energy / area / latency (DESIGN.md §13).
+//!
+//! The grid is fig8's sweep *verbatim* ([`super::fig8::sweep_specs`]):
+//! under `suite` the pareto plan rides the same solves as fig8 and
+//! headline for free, and standalone it replays them from the point
+//! cache. The reduction prices every resolved point through its
+//! [`CostVector`] and extracts the non-dominated subset per dataset
+//! with [`crate::util::pareto`] — answering the query class the paper
+//! never asks: "what is the cheapest operating point above X%
+//! accuracy?"
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::report::pct;
+use crate::data::synth::Dataset;
+use crate::plan::report::Report;
+use crate::plan::ExperimentPlan;
+use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
+use crate::util::json::Json;
+use crate::util::pareto::{
+    hypervolume, minimized, non_dominated, Sense,
+};
+use crate::util::table::{si, Table};
+
+use super::fig8::CAPMINV_K_START;
+
+/// Objective directions of a priced point's report coordinates:
+/// (accuracy, energy, area, latency).
+pub const SENSES: [Sense; 4] = [
+    Sense::Maximize,
+    Sense::Minimize,
+    Sense::Minimize,
+    Sense::Minimize,
+];
+
+/// One candidate design in a dataset's frontier report.
+pub struct Candidate {
+    /// "capmin" (clipping + variation) or "capmin-v" (k=16 cap,
+    /// merged down under variation).
+    pub family: &'static str,
+    pub k: usize,
+    pub phi: usize,
+    pub point: Arc<OperatingPoint>,
+}
+
+impl Candidate {
+    /// Raw objective row in [`SENSES`] order.
+    pub fn objectives(&self) -> Vec<f64> {
+        let cv = &self.point.cost;
+        vec![
+            self.point.accuracy.expect("eval requested"),
+            cv.energy,
+            cv.area,
+            cv.latency,
+        ]
+    }
+}
+
+/// Walk one dataset's block of resolved fig8-grid points (clean /
+/// var / capmin-v per k) into frontier candidates: the two
+/// variation-realistic families the paper compares. Clean points are
+/// consumed (grid alignment) but not priced — a frontier without
+/// variation is not a hardware claim.
+pub fn candidates<'a>(
+    cfg: &ExperimentConfig,
+    points: &mut impl Iterator<Item = &'a Arc<OperatingPoint>>,
+) -> Vec<Candidate> {
+    let mut out = vec![];
+    for &k in &cfg.ks {
+        let _clean = points.next().expect("clean point per k");
+        let p_var = points.next().expect("variation point per k");
+        out.push(Candidate {
+            family: "capmin",
+            k,
+            phi: 0,
+            point: Arc::clone(p_var),
+        });
+        if k < CAPMINV_K_START {
+            let p_v = points.next().expect("capmin-v point below k=16");
+            out.push(Candidate {
+                family: "capmin-v",
+                k,
+                phi: CAPMINV_K_START - k,
+                point: Arc::clone(p_v),
+            });
+        }
+    }
+    out
+}
+
+/// Indices of the non-dominated candidates over all four objectives.
+pub fn frontier(cands: &[Candidate]) -> Vec<usize> {
+    let vals: Vec<Vec<f64>> = cands
+        .iter()
+        .map(|c| minimized(&c.objectives(), &SENSES))
+        .collect();
+    non_dominated(&vals)
+}
+
+/// Normalized accuracy-vs-energy hypervolume of one family's
+/// candidates: objectives (1 - accuracy, energy / e_max) against the
+/// reference (1, 1) + eps, so the indicator lives in [0, 1] and is
+/// comparable across families *within* one report (e_max is the
+/// dataset's worst energy).
+pub fn family_hypervolume(
+    cands: &[Candidate],
+    family: &str,
+    e_max: f64,
+) -> f64 {
+    let vals: Vec<Vec<f64>> = cands
+        .iter()
+        .filter(|c| c.family == family)
+        .map(|c| {
+            let o = c.objectives();
+            vec![1.0 - o[0], o[1] / e_max]
+        })
+        .collect();
+    hypervolume(&vals, &[1.0 + 1e-9, 1.0 + 1e-9])
+}
+
+pub struct ParetoPlan {
+    pub datasets: Vec<Dataset>,
+}
+
+impl ExperimentPlan for ParetoPlan {
+    fn name(&self) -> &'static str {
+        "pareto"
+    }
+
+    fn scope(&self) -> String {
+        crate::plan::dataset_scope(&self.datasets)
+    }
+
+    fn title(&self) -> String {
+        "Pareto: accuracy / energy / area / latency frontiers \
+         (CapMin vs CapMin-V)"
+            .into()
+    }
+
+    fn specs(&self, cfg: &ExperimentConfig) -> Vec<OperatingPointSpec> {
+        // fig8's grid verbatim: zero extra solves under suite
+        super::fig8::sweep_specs(cfg, &self.datasets)
+    }
+
+    fn reduce(
+        &self,
+        session: &DesignSession,
+        points: &[Arc<OperatingPoint>],
+    ) -> Result<Report> {
+        let cfg = session.config();
+        let mut rep = Report::new(self.name(), &self.title());
+        let mut it = points.iter();
+        for &ds in &self.datasets {
+            let spec = ds.spec();
+            rep.heading(format!(
+                "{} (sigma_rel = {}, {} test samples)",
+                spec.name, cfg.sigma_rel, cfg.eval_limit
+            ));
+            let cands = candidates(cfg, &mut it);
+            let front = frontier(&cands);
+            let on_front =
+                |i: usize| front.binary_search(&i).is_ok();
+
+            let mut t = Table::new(&[
+                "config", "k", "phi", "C", "spikes", "E/pass", "area",
+                "latency", "accuracy", "front",
+            ]);
+            for (i, c) in cands.iter().enumerate() {
+                let cv = &c.point.cost;
+                t.row(vec![
+                    c.family.into(),
+                    c.k.to_string(),
+                    c.phi.to_string(),
+                    si(cv.c, "F"),
+                    cv.spike_times.to_string(),
+                    si(cv.energy, "J"),
+                    si(cv.area, "m2"),
+                    si(cv.latency, "s"),
+                    pct(c.point.accuracy.expect("eval requested")),
+                    if on_front(i) { "*".into() } else { "".into() },
+                ]);
+            }
+            rep.table("", t);
+
+            let e_max = cands
+                .iter()
+                .map(|c| c.point.cost.energy)
+                .fold(0.0, f64::max);
+            rep.text(format!(
+                "frontier: {}/{} non-dominated | hypervolume \
+                 (accuracy x energy, normalized): capmin {:.4} | \
+                 capmin-v {:.4}",
+                front.len(),
+                cands.len(),
+                family_hypervolume(&cands, "capmin", e_max),
+                family_hypervolume(&cands, "capmin-v", e_max),
+            ));
+
+            // the explorer's headline query: cheapest energy within
+            // 1% of the best achievable accuracy on this dataset
+            let best_acc = cands
+                .iter()
+                .map(|c| c.point.accuracy.expect("eval requested"))
+                .fold(0.0, f64::max);
+            if let Some(c) = cands
+                .iter()
+                .filter(|c| {
+                    c.point.accuracy.expect("eval requested")
+                        >= best_acc - 0.01
+                })
+                .min_by(|a, b| {
+                    a.point
+                        .cost
+                        .energy
+                        .partial_cmp(&b.point.cost.energy)
+                        .unwrap()
+                })
+            {
+                rep.text(format!(
+                    "cheapest within 1% of best accuracy ({}): {} \
+                     k={} phi={} at {} per pass, {}",
+                    pct(best_acc),
+                    c.family,
+                    c.k,
+                    c.phi,
+                    si(c.point.cost.energy, "J"),
+                    pct(c.point.accuracy.expect("eval requested")),
+                ));
+            }
+
+            let col = |f: &dyn Fn(&Candidate) -> f64| -> Vec<f64> {
+                cands.iter().map(f).collect()
+            };
+            rep.series(
+                &format!("pareto_{}", spec.name),
+                vec![
+                    ("dataset".into(), Json::Str(spec.name.into())),
+                    ("sigma_rel".into(), Json::Num(cfg.sigma_rel)),
+                    (
+                        "objectives".into(),
+                        Json::Str(
+                            "accuracy max, energy/area/latency min"
+                                .into(),
+                        ),
+                    ),
+                ],
+                vec![
+                    ("k".into(), col(&|c| c.k as f64)),
+                    ("phi".into(), col(&|c| c.phi as f64)),
+                    (
+                        "family".into(),
+                        col(&|c| {
+                            if c.family == "capmin" { 0.0 } else { 1.0 }
+                        }),
+                    ),
+                    (
+                        "accuracy".into(),
+                        col(&|c| {
+                            c.point.accuracy.expect("eval requested")
+                        }),
+                    ),
+                    ("energy".into(), col(&|c| c.point.cost.energy)),
+                    ("area".into(), col(&|c| c.point.cost.area)),
+                    (
+                        "latency".into(),
+                        col(&|c| c.point.cost.latency),
+                    ),
+                    (
+                        "on_front".into(),
+                        (0..cands.len())
+                            .map(|i| if on_front(i) { 1.0 } else { 0.0 })
+                            .collect(),
+                    ),
+                ],
+            );
+        }
+        Ok(rep)
+    }
+}
+
+pub fn run(
+    session: &DesignSession,
+    datasets: &[Dataset],
+) -> Result<()> {
+    crate::plan::planner::run_one(
+        session,
+        &ParetoPlan {
+            datasets: datasets.to_vec(),
+        },
+        &[],
+    )
+}

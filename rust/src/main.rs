@@ -59,6 +59,10 @@ DESIGN.md §10):
                   fig8 grid — free under suite, cached standalone)
   ablation        design-choice ablations (window placement, merge rule)
   sigma-sweep     variation-tolerance curve (CapMin vs CapMin-V)
+  pareto          design-space explorer (DESIGN.md §13): prices the
+                  fig8 grid through the hardware cost model and emits
+                  the CapMin-vs-CapMin-V accuracy/energy/area/latency
+                  Pareto frontiers (shares fig8's solves under suite)
   suite           run every plan above as ONE deduplicated batch: specs
                   shared across figures solve once, progress streams
                   per plan, and a killed run resumes from

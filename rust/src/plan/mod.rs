@@ -93,6 +93,7 @@ pub const PLAN_NAMES: &[&str] = &[
     "headline",
     "ablation",
     "sigma-sweep",
+    "pareto",
 ];
 
 /// Build one plan by registry name over the selected datasets; errors
@@ -119,6 +120,7 @@ pub fn build(name: &str, datasets: &[Dataset])
         "sigma-sweep" => {
             Box::new(ex::sigma_sweep::SigmaSweepPlan { datasets: ds })
         }
+        "pareto" => Box::new(ex::pareto::ParetoPlan { datasets: ds }),
         other => {
             return Err(anyhow!(
                 "unknown plan `{other}` (valid choices: {})",

@@ -10,6 +10,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::analog::cost::CostVector;
 use crate::util::json::{obj, Json};
 
 use super::protocol::PROTOCOL_VERSION;
@@ -125,6 +126,28 @@ impl Client {
                 ("eval", Json::Bool(eval)),
             ],
         )
+    }
+
+    /// [`Client::point`], returning the reply plus its typed hardware
+    /// cost vector (DESIGN.md §13) — the design-space explorer's
+    /// client entry (see `examples/pareto_explore.rs`).
+    pub fn point_cost(
+        &mut self,
+        dataset: &str,
+        k: usize,
+        sigma: f64,
+        phi: usize,
+        eval: bool,
+    ) -> Result<(Json, CostVector)> {
+        let reply = self.point(dataset, k, sigma, phi, eval)?;
+        let cost_j = reply.get("cost").ok_or_else(|| {
+            anyhow!(
+                "reply has no `cost` field (server predates the \
+                 cost vector?)"
+            )
+        })?;
+        let cost = CostVector::from_json(cost_j)?;
+        Ok((reply, cost))
     }
 
     /// Native inference on `samples` (each `pixels` +-1 values) at the

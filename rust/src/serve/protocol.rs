@@ -279,7 +279,9 @@ fn reply_head(id: f64, ty: &str) -> Vec<(&'static str, Json)> {
 
 /// Reply to a `Point` request: the operating point's headline numbers
 /// plus its cache key (clients can find the full JSON under
-/// `<run-dir>/points/<key>.json`).
+/// `<run-dir>/points/<key>.json`) and its hardware cost vector
+/// (DESIGN.md §13) — an additive field, so pre-cost clients keep
+/// working untouched.
 pub fn point_response(id: f64, key: &str, p: &OperatingPoint) -> Json {
     let w = p.peak_window();
     let mut fields = reply_head(id, "point");
@@ -306,6 +308,7 @@ pub fn point_response(id: f64, key: &str, p: &OperatingPoint) -> Json {
                 None => Json::Null,
             },
         ),
+        ("cost", p.cost.to_json()),
     ]);
     obj(fields)
 }

@@ -6,6 +6,8 @@ use anyhow::{anyhow, Result};
 
 use super::solver::HwSolve;
 use super::spec::OperatingPointSpec;
+use crate::analog::cost::CostVector;
+use crate::analog::params::AnalogParams;
 use crate::bnn::ErrorModel;
 use crate::capmin::{CapMinResult, N_LEVELS};
 use crate::util::json::{obj, Json};
@@ -55,25 +57,43 @@ pub struct OperatingPoint {
     pub accuracy: Option<f64>,
     /// Backend/threads provenance (DESIGN.md §9).
     pub meta: PointMeta,
+    /// Multi-objective hardware price of the point (DESIGN.md §13).
+    /// A pure function of `c` + `times`, so like `meta` it is never
+    /// part of a cache key — and unlike `meta` it is *recomputed*
+    /// whenever a point is parsed, keeping every cached file priced
+    /// by the current model.
+    pub cost: CostVector,
 }
 
 impl OperatingPoint {
+    /// Price `c` + per-matmul spike times on the calibrated testbed
+    /// constants (sigma enters an operating point through accuracy,
+    /// never through the hardware price, so the pricing substrate is
+    /// spec-independent and deterministic on every load path).
+    fn price(c: f64, times: &[Vec<f64>]) -> CostVector {
+        CostVector::price(&AnalogParams::paper_calibrated(), c, times)
+    }
+
     pub fn from_solve(
         spec: OperatingPointSpec,
         hw: HwSolve,
         accuracy: Option<f64>,
         meta: PointMeta,
     ) -> OperatingPoint {
+        let times: Vec<Vec<f64>> =
+            hw.sets.iter().map(|s| s.times.clone()).collect();
+        let cost = OperatingPoint::price(hw.c, &times);
         OperatingPoint {
             spec,
             c: hw.c,
             grt: hw.grt(),
             levels: hw.sets.iter().map(|s| s.levels.clone()).collect(),
-            times: hw.sets.iter().map(|s| s.times.clone()).collect(),
+            times,
             windows: hw.windows,
             ems: hw.ems,
             accuracy,
             meta,
+            cost,
         }
     }
 
@@ -168,6 +188,9 @@ impl OperatingPoint {
                     ("threads", Json::Num(self.meta.threads as f64)),
                 ]),
             ),
+            // informational for external readers: `from_json`
+            // recomputes the price, it never parses this field
+            ("cost", self.cost.to_json()),
         ])
     }
 
@@ -281,9 +304,14 @@ impl OperatingPoint {
             },
             None => PointMeta::default(),
         };
+        let c = num(field("c")?, "c")?;
+        // recompute the price instead of trusting the file: cost-less
+        // pre-§13 point files stay valid, and every point carries the
+        // *current* pricing model's vector (it is metadata, never keyed)
+        let cost = OperatingPoint::price(c, &times);
         Ok(OperatingPoint {
             spec,
-            c: num(field("c")?, "c")?,
+            c,
             grt: num(field("grt")?, "grt")?,
             windows,
             levels,
@@ -291,6 +319,7 @@ impl OperatingPoint {
             ems,
             accuracy,
             meta,
+            cost,
         })
     }
 }
@@ -377,5 +406,33 @@ mod tests {
         )
         .unwrap();
         assert_eq!(back.meta, PointMeta::default());
+    }
+
+    #[test]
+    fn pre_cost_points_parse_and_are_repriced() {
+        // a pre-§13 point JSON has no `cost` field — the parser must
+        // reprice it from c + times rather than reject the file
+        let p = AnalogParams::paper_calibrated();
+        let fmacs =
+            vec![Fmac::gaussian(5, 2.0, 1e8), Fmac::gaussian(16, 2.0, 1e8)];
+        let spec = OperatingPointSpec::new(Dataset::CifarSyn, 12, 0.02, 2);
+        let hw = solve(p, 3, 50, 1, &fmacs, spec.k, spec.sigma, spec.phi);
+        let point = OperatingPoint::from_solve(
+            spec,
+            hw,
+            None,
+            PointMeta::default(),
+        );
+        let text = point.to_json().to_string();
+        // `cost` is the last field: strip it to emulate the old format
+        let at = text.find(",\"cost\":").expect("cost field in JSON");
+        let legacy = format!("{}}}", &text[..at]);
+        assert_ne!(legacy, text);
+        let back = OperatingPoint::from_json(
+            &Json::parse(&legacy).map_err(anyhow::Error::msg).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.cost, point.cost, "repriced on load");
+        assert_eq!(back, point);
     }
 }

@@ -8,6 +8,7 @@
 pub mod cli;
 pub mod hash;
 pub mod json;
+pub mod pareto;
 pub mod pool;
 pub mod rng;
 pub mod stats;

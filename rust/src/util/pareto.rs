@@ -1,0 +1,233 @@
+//! Pure multi-objective frontier engine (DESIGN.md §13).
+//!
+//! Works on plain objective rows in *minimization space* — callers
+//! negate maximizing objectives (see [`minimized`]) and may pick any
+//! subset/order of objectives; the engine never knows what the axes
+//! mean. Two operations: the non-dominated subset
+//! ([`non_dominated`]) and the dominated hypervolume
+//! ([`hypervolume`]), the scalar frontier-quality indicator the
+//! pareto bench tracks across PRs.
+
+/// Objective direction for [`minimized`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sense {
+    Minimize,
+    Maximize,
+}
+
+/// Map a row of raw objective values into minimization space
+/// (maximizing axes are negated).
+pub fn minimized(row: &[f64], senses: &[Sense]) -> Vec<f64> {
+    assert_eq!(row.len(), senses.len());
+    row.iter()
+        .zip(senses)
+        .map(|(&v, s)| match s {
+            Sense::Minimize => v,
+            Sense::Maximize => -v,
+        })
+        .collect()
+}
+
+/// Strict Pareto dominance in minimization space: `a` is no worse in
+/// every objective and strictly better in at least one. NaN never
+/// dominates and is never dominated.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strict = false;
+    for (&x, &y) in a.iter().zip(b) {
+        if !(x <= y) {
+            return false; // worse somewhere, or NaN involved
+        }
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Indices of the non-dominated subset of `vals` (minimization
+/// space), ascending. Duplicate rows are all kept (neither strictly
+/// dominates the other); rows containing NaN are dropped.
+///
+/// Algorithm: full-lexicographic sort, then a single forward scan —
+/// after the sort a later row can never dominate an earlier survivor
+/// (at its first differing coordinate it is strictly worse), so each
+/// row only needs checking against the survivors so far. With two
+/// objectives the survivor with the smallest second coordinate is
+/// always the last one, so one comparison suffices: O(n log n)
+/// total. In higher dimensions the scan checks the whole survivor
+/// list — O(n log n + n·f) for a frontier of size f.
+pub fn non_dominated(vals: &[Vec<f64>]) -> Vec<usize> {
+    if vals.is_empty() {
+        return vec![];
+    }
+    let d = vals[0].len();
+    assert!(d > 0, "need at least one objective");
+    assert!(
+        vals.iter().all(|v| v.len() == d),
+        "ragged objective rows"
+    );
+    let mut order: Vec<usize> = (0..vals.len())
+        .filter(|&i| vals[i].iter().all(|v| !v.is_nan()))
+        .collect();
+    order.sort_by(|&a, &b| {
+        for j in 0..d {
+            match vals[a][j].partial_cmp(&vals[b][j]).unwrap() {
+                std::cmp::Ordering::Equal => continue,
+                ord => return ord,
+            }
+        }
+        a.cmp(&b) // deterministic tiebreak for identical rows
+    });
+    let mut front: Vec<usize> = vec![];
+    for &i in &order {
+        let dominated = if d == 2 {
+            front
+                .last()
+                .is_some_and(|&f| dominates(&vals[f], &vals[i]))
+        } else {
+            front.iter().any(|&f| dominates(&vals[f], &vals[i]))
+        };
+        if !dominated {
+            front.push(i);
+        }
+    }
+    front.sort_unstable();
+    front
+}
+
+/// Hypervolume dominated by `vals` against reference point `r`
+/// (minimization space): the volume of the union of boxes
+/// `[v, r)`. Rows not strictly better than `r` in *every* objective
+/// contribute nothing (the standard convention — pick `r` strictly
+/// worse than the whole frontier). Exact, by recursive slicing along
+/// the first objective: O(n^2) per dimension, plenty for report-size
+/// frontiers.
+pub fn hypervolume(vals: &[Vec<f64>], r: &[f64]) -> f64 {
+    let pts: Vec<Vec<f64>> = vals
+        .iter()
+        .filter(|v| {
+            v.len() == r.len()
+                && v.iter().zip(r).all(|(&a, &b)| a < b)
+        })
+        .cloned()
+        .collect();
+    hv_slices(pts, r)
+}
+
+fn hv_slices(mut pts: Vec<Vec<f64>>, r: &[f64]) -> f64 {
+    if pts.is_empty() {
+        return 0.0;
+    }
+    if r.len() == 1 {
+        let best =
+            pts.iter().map(|p| p[0]).fold(f64::INFINITY, f64::min);
+        return r[0] - best;
+    }
+    pts.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+    // slab between x_i and the next distinct x (or r[0]) is covered by
+    // exactly the points seen so far, projected to the tail objectives
+    let mut total = 0.0;
+    for i in 0..pts.len() {
+        let x_hi = if i + 1 < pts.len() { pts[i + 1][0] } else { r[0] };
+        let width = x_hi - pts[i][0];
+        if width > 0.0 {
+            let proj: Vec<Vec<f64>> =
+                pts[..=i].iter().map(|p| p[1..].to_vec()).collect();
+            total += width * hv_slices(proj, &r[1..]);
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_is_strict() {
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(dominates(&[0.5, 2.0], &[1.0, 2.0]));
+        assert!(!dominates(&[1.0, 2.0], &[1.0, 2.0]), "equal");
+        assert!(!dominates(&[0.5, 3.0], &[1.0, 2.0]), "trade-off");
+        assert!(!dominates(&[f64::NAN, 1.0], &[1.0, 2.0]));
+        assert!(!dominates(&[0.0, 1.0], &[f64::NAN, 2.0]));
+    }
+
+    #[test]
+    fn front_of_known_2d_set() {
+        let vals = vec![
+            vec![1.0, 5.0], // front
+            vec![2.0, 3.0], // front
+            vec![3.0, 3.0], // dominated by [2,3]
+            vec![4.0, 1.0], // front
+            vec![4.0, 4.0], // dominated
+            vec![2.0, 3.0], // duplicate of a front row: kept
+        ];
+        assert_eq!(non_dominated(&vals), vec![0, 1, 3, 5]);
+    }
+
+    #[test]
+    fn front_in_higher_dimensions() {
+        let vals = vec![
+            vec![1.0, 9.0, 9.0],
+            vec![9.0, 1.0, 9.0],
+            vec![9.0, 9.0, 1.0],
+            vec![5.0, 5.0, 5.0],
+            vec![9.0, 9.0, 2.0], // dominated by [9,9,1]
+        ];
+        assert_eq!(non_dominated(&vals), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn nan_rows_are_dropped_single_objective_works() {
+        let vals =
+            vec![vec![2.0], vec![f64::NAN], vec![1.0], vec![3.0]];
+        assert_eq!(non_dominated(&vals), vec![2]);
+        assert!(non_dominated(&[]).is_empty());
+    }
+
+    #[test]
+    fn minimized_flips_maximizing_axes() {
+        let row = minimized(
+            &[0.9, 3.0],
+            &[Sense::Maximize, Sense::Minimize],
+        );
+        assert_eq!(row, vec![-0.9, 3.0]);
+    }
+
+    #[test]
+    fn hypervolume_of_rectangles() {
+        let r = [4.0, 4.0];
+        // one point: a single box
+        assert!(
+            (hypervolume(&[vec![1.0, 1.0]], &r) - 9.0).abs() < 1e-12
+        );
+        // staircase: union, not sum (overlap counted once)
+        let hv = hypervolume(&[vec![1.0, 2.0], vec![2.0, 1.0]], &r);
+        assert!((hv - (6.0 + 6.0 - 4.0)).abs() < 1e-12, "{hv}");
+        // a dominated point adds nothing
+        let hv2 = hypervolume(
+            &[vec![1.0, 2.0], vec![2.0, 1.0], vec![2.5, 2.5]],
+            &r,
+        );
+        assert!((hv2 - hv).abs() < 1e-12);
+        // points at or beyond the reference contribute nothing
+        assert_eq!(hypervolume(&[vec![4.0, 0.0]], &r), 0.0);
+    }
+
+    #[test]
+    fn hypervolume_3d_cube_union() {
+        let r = [2.0, 2.0, 2.0];
+        let hv = hypervolume(&[vec![0.0, 0.0, 0.0]], &r);
+        assert!((hv - 8.0).abs() < 1e-12);
+        // two overlapping boxes: 8 + 8 - overlap(1x2x2=4) = 12
+        let hv = hypervolume(
+            &[vec![0.0, 0.0, 0.0], vec![-2.0, 1.0, 1.0]],
+            &[2.0, 2.0, 2.0],
+        );
+        // box2 = [−2,2)x[1,2)x[1,2) vol 4*1*1=4; overlap with box1
+        // = [0,2)x[1,2)x[1,2) = 2 -> union 8 + 4 - 2 = 10
+        assert!((hv - 10.0).abs() < 1e-12, "{hv}");
+    }
+}

@@ -466,3 +466,94 @@ fn prop_mc_pmap_diag_improves_with_smaller_sigma() {
         );
     });
 }
+
+#[test]
+fn prop_cost_energy_and_area_monotone_in_c() {
+    use capmin::analog::cost::{cost, CostVector};
+    let p = AnalogParams::paper_calibrated();
+    let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+    forall("cost monotone in C", 150, |rng| {
+        let hi = 2 + rng.below(31) as usize;
+        let lo = 1 + rng.below(hi as u64 - 1) as usize;
+        let c1 = solver.size_for_window(lo, hi);
+        let c2 = c1 * (1.1 + rng.f64());
+        let s1 = SpikeTimeSet::new(&p, c1, (lo..=hi).collect());
+        let s2 = SpikeTimeSet::new(&p, c2, (lo..=hi).collect());
+        let cv1 = CostVector::price(&p, c1, &[s1.times.clone()]);
+        let cv2 = CostVector::price(&p, c2, &[s2.times.clone()]);
+        assert!(
+            cv2.energy > cv1.energy,
+            "energy monotone: [{lo},{hi}]"
+        );
+        assert!(cv2.area > cv1.area, "area monotone: [{lo},{hi}]");
+        // the per-set CircuitCost agrees on every ratio direction
+        let (rc, re, _, ra) = cost(&p, &s1).ratio_vs(&cost(&p, &s2));
+        assert!(rc >= 1.0 && re >= 1.0 && ra >= 1.0);
+    });
+}
+
+#[test]
+fn prop_frontier_subset_no_dominated_idempotent() {
+    use capmin::util::pareto::{dominates, non_dominated};
+    forall("pareto frontier", 300, |rng| {
+        let d = 1 + rng.below(4) as usize;
+        let n = 1 + rng.below(60) as usize;
+        // coarse values force ties and duplicates often
+        let vals: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                (0..d).map(|_| rng.below(6) as f64).collect()
+            })
+            .collect();
+        let front = non_dominated(&vals);
+
+        // a subset of its input, strictly ascending (no repeats)
+        assert!(!front.is_empty(), "finite inputs always have a front");
+        assert!(front.iter().all(|&i| i < n));
+        assert!(front.windows(2).all(|w| w[0] < w[1]));
+
+        // contains no dominated point
+        for &i in &front {
+            for &j in &front {
+                assert!(
+                    !dominates(&vals[i], &vals[j]),
+                    "front member {i} dominates front member {j}"
+                );
+            }
+        }
+        // and excludes only dominated points
+        for i in 0..n {
+            if !front.contains(&i) {
+                assert!(
+                    front.iter().any(|&f| dominates(&vals[f], &vals[i])),
+                    "excluded point {i} is not dominated"
+                );
+            }
+        }
+
+        // idempotent: the front of the front is the whole front
+        let front_vals: Vec<Vec<f64>> =
+            front.iter().map(|&i| vals[i].clone()).collect();
+        let again = non_dominated(&front_vals);
+        assert_eq!(again, (0..front.len()).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_cost_vector_json_roundtrip() {
+    use capmin::analog::cost::CostVector;
+    forall("cost vector json", 200, |rng| {
+        let cv = CostVector {
+            c: rng.f64() * 1e-10,
+            spike_times: rng.below(500) as usize,
+            energy: rng.f64() * 1e-12,
+            area: rng.f64() * 1e-8,
+            latency: rng.f64() * 1e-6,
+        };
+        let back = CostVector::from_json(
+            &Json::parse(&cv.to_json().to_string())
+                .expect("written JSON parses"),
+        )
+        .expect("written JSON loads");
+        assert_eq!(cv, back, "round-trip must be exact");
+    });
+}

@@ -208,6 +208,52 @@ fn shutdown_drains_in_flight_requests() {
 }
 
 #[test]
+fn point_replies_carry_the_cost_vector() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    let (srv, addr, run_dir) = spawn_server("cost", 2, 5);
+    let mut c = Client::connect(addr).unwrap();
+    let p = c.point(DS, K, SIGMA, 0, false).unwrap();
+    // the cost vector is an additive reply field (DESIGN.md §13):
+    // pre-cost clients keep parsing, new clients get the full price
+    let cost = p.req("cost");
+    assert!(cost.req("energy").as_f64() > 0.0);
+    assert!(cost.req("area").as_f64() > 0.0);
+    assert!(cost.req("latency").as_f64() > 0.0);
+    assert!(cost.req("spike_times").as_f64() >= 1.0);
+    assert_eq!(cost.req("c").as_f64(), p.req("c").as_f64());
+
+    // consistent with a direct DesignSession query at the same knobs
+    let cfg = serve_cfg("cost_direct");
+    let direct_dir = cfg.run_dir.clone();
+    let session = capmin::session::DesignSession::builder()
+        .config(cfg)
+        .build()
+        .unwrap();
+    let spec = capmin::session::OperatingPointSpec::new(
+        Dataset::FashionSyn,
+        K,
+        SIGMA,
+        0,
+    );
+    let direct = session.query(&spec).unwrap();
+    assert_eq!(cost.req("energy").as_f64(), direct.cost.energy);
+    assert_eq!(cost.req("area").as_f64(), direct.cost.area);
+    assert_eq!(cost.req("latency").as_f64(), direct.cost.latency);
+    assert_eq!(
+        cost.req("spike_times").as_f64() as usize,
+        direct.cost.spike_times
+    );
+
+    c.shutdown().unwrap();
+    srv.join().unwrap();
+    let _ = std::fs::remove_dir_all(&run_dir);
+    let _ = std::fs::remove_dir_all(&direct_dir);
+}
+
+#[test]
 fn protocol_errors_are_structured_and_survivable() {
     if artifacts_present() {
         eprintln!("skipping: artifacts present");

@@ -75,6 +75,39 @@ fn fresh_session_replays_from_disk() {
 }
 
 #[test]
+fn pre_cost_point_files_replay_and_are_repriced() {
+    // a pre-§13 cache file has no `cost` field; the loader must
+    // reprice it from c + times instead of rejecting the file
+    let (session, dir) = session_in("precost");
+    let spec =
+        OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 2);
+    let a = session.query(&spec).unwrap();
+    let path = session
+        .store()
+        .path("points")
+        .join(format!("{}.json", spec.cache_key(session.config())));
+    let text = std::fs::read_to_string(&path).unwrap();
+    let at = text.find(",\"cost\":").expect("cost field persisted");
+    let legacy = format!("{}}}", &text[..at]);
+    assert_ne!(legacy, text);
+    std::fs::write(&path, legacy).unwrap();
+
+    let mut cfg = session.config().clone();
+    cfg.run_dir = dir.clone();
+    let replay = DesignSession::builder().config(cfg).build().unwrap();
+    let b = replay.query(&spec).unwrap();
+    let s = replay.stats();
+    assert_eq!(
+        (s.disk_hits, s.solves),
+        (1, 0),
+        "old cost-less file still answers from disk"
+    );
+    assert_eq!(b.cost, a.cost, "repriced on load");
+    assert_eq!(*a, *b);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn query_many_matches_sequential_query_exactly() {
     let ks = [32usize, 24, 16, 14, 10, 6];
     let mk_specs = || -> Vec<OperatingPointSpec> {

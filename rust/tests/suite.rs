@@ -257,3 +257,62 @@ fn suite_emits_requested_artifacts() {
     assert!(!j.req("sections").as_arr().is_empty());
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn pareto_plan_reports_a_sound_frontier() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    use capmin::experiments::pareto::{
+        candidates, frontier, ParetoPlan, SENSES,
+    };
+    use capmin::plan::report::Emit;
+    use capmin::plan::ExperimentPlan;
+    use capmin::util::pareto::{dominates, minimized};
+
+    let dir = tmp_dir("suite_pareto");
+    let _ = std::fs::remove_dir_all(&dir);
+    let session = fresh_session(tiny_cfg(&dir));
+    let plan = ParetoPlan {
+        datasets: vec![Dataset::FashionSyn],
+    };
+    let points =
+        session.query_many(&plan.specs(session.config())).unwrap();
+
+    // the reported frontier is exactly the non-dominated subset
+    let mut it = points.iter();
+    let cands = candidates(session.config(), &mut it);
+    let front = frontier(&cands);
+    assert!(!front.is_empty() && front.len() <= cands.len());
+    let vals: Vec<Vec<f64>> = cands
+        .iter()
+        .map(|c| minimized(&c.objectives(), &SENSES))
+        .collect();
+    for &i in &front {
+        assert!(
+            !front.iter().any(|&j| dominates(&vals[j], &vals[i])),
+            "frontier member {i} is dominated"
+        );
+    }
+    for i in 0..cands.len() {
+        if !front.contains(&i) {
+            assert!(
+                front.iter().any(|&f| dominates(&vals[f], &vals[i])),
+                "excluded candidate {i} is not dominated"
+            );
+        }
+    }
+    // both families are priced candidates under tiny_cfg's ks
+    assert!(cands.iter().any(|c| c.family == "capmin"));
+    assert!(cands.iter().any(|c| c.family == "capmin-v"));
+
+    // the reduction renders all three emit formats with the series
+    let rep = plan.reduce(&session, &points).unwrap();
+    let json = rep.render(Emit::Json);
+    assert!(json.contains("pareto_fashion_syn"), "{json}");
+    assert!(json.contains("on_front"), "{json}");
+    assert!(!rep.render(Emit::Md).is_empty());
+    assert!(!rep.render(Emit::Csv).is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
