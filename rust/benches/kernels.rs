@@ -7,7 +7,13 @@
 //!   u64 word-popcount kernel at the scalar and detected SIMD tiers
 //!   (single thread — the acceptance gate is >= 4x for the SIMD
 //!   tier) and on the full pool;
-//! * fused matmul+histogram vs the separate two-pass data flow;
+//! * the register-blocked packed path (DESIGN.md §14) vs the word
+//!   path, single-thread and pooled, under the autotuned tile
+//!   (measured here, cached in `runs/autotune.json`) — the PR 7
+//!   acceptance gate is >= 2x over the word SIMD path — plus a
+//!   packing-overhead series (pack+compute vs derived compute-only);
+//! * fused matmul+histogram vs the separate two-pass data flow,
+//!   word and blocked;
 //! * the error-model matmul across tiers;
 //! * F_MAC extraction end-to-end on the no-XLA cifar_syn smoke
 //!   (NativeBackend, untrained vgg7): the pre-rework configuration
@@ -21,7 +27,10 @@
 mod bench_harness;
 
 use bench_harness::{bench, header, report, scaled, Emitter};
-use capmin::backend::kernels::{self, KernelKind};
+use capmin::backend::autotune;
+use capmin::backend::kernels::{
+    self, KernelKind, ResolvedTile, Tile, TileSpec,
+};
 use capmin::backend::native::{init_folded, NativeBackend};
 use capmin::backend::InferenceBackend;
 use capmin::bnn::{BitMatrix, ErrorModel, SubMacEngine};
@@ -118,6 +127,106 @@ fn main() {
     speedup_line(&naive, &word_pool, "scalar engine");
     emit.add(&word_pool, Some(&naive));
 
+    header("register-blocked packed matmul (same engine, DESIGN.md §14)");
+    let cache = std::path::Path::new("runs/autotune.json");
+    let tile = autotune::resolve(TileSpec::Auto, simd, cache);
+    println!(
+        "autotuned tile: {} (cache {})",
+        tile.name(),
+        cache.display()
+    );
+    let t = match tile {
+        ResolvedTile::Blocked(t) => t,
+        ResolvedTile::ScalarSafe => Tile::default_for(simd),
+    };
+    let mut scratch = kernels::PackScratch::default();
+    let mut blocked_out = vec![0.0f32; o * d];
+    let blocked_1t = bench(
+        "exact blocked packed simd (1 thread)",
+        1,
+        scaled(10),
+        || {
+            kernels::matmul_exact_tiled_into(
+                &seq,
+                &eng,
+                &xb,
+                simd,
+                tile,
+                &mut scratch,
+                &mut blocked_out,
+            );
+            std::hint::black_box(&blocked_out);
+        },
+    );
+    report(&blocked_1t, macs, "MAC");
+    speedup_line(&naive, &blocked_1t, "scalar engine");
+    speedup_line(&word_simd, &blocked_1t, "word simd");
+    // the CI-gated record: speedup_vs_baseline is vs the word SIMD
+    // path (the pre-rework fast path), not the naive engine
+    emit.add(&blocked_1t, Some(&word_simd));
+
+    // packing overhead: the blocked timings above repack A and B on
+    // every call; time the packing alone and derive compute-only
+    let pack_only = bench(
+        "blocked packing only (1 thread)",
+        1,
+        scaled(10),
+        || {
+            kernels::pack_a_block(&eng.w, 0, o, t.mr, &mut scratch.a);
+            kernels::pack_b_block(&xb, 0, d, t.nr, &mut scratch.b);
+            std::hint::black_box((&scratch.a, &scratch.b));
+        },
+    );
+    report(&pack_only, macs, "MAC");
+    println!(
+        "    -> packing is {:.1}% of pack+compute (derived \
+         compute-only p50 {:.3} ms)",
+        100.0 * pack_only.p50_s / blocked_1t.p50_s,
+        (blocked_1t.p50_s - pack_only.p50_s) * 1e3
+    );
+    emit.add(&pack_only, None);
+    emit.push(
+        "exact blocked compute-only (derived, 1 thread)",
+        blocked_1t.iters,
+        (blocked_1t.p50_s - pack_only.p50_s).max(0.0) * 1e9,
+        None,
+    );
+
+    let blocked_pool = bench(
+        "exact blocked packed simd (pool)",
+        1,
+        scaled(10),
+        || {
+            kernels::matmul_exact_tiled_into(
+                &pool,
+                &eng,
+                &xb,
+                simd,
+                tile,
+                &mut scratch,
+                &mut blocked_out,
+            );
+            std::hint::black_box(&blocked_out);
+        },
+    );
+    report(&blocked_pool, macs, "MAC");
+    speedup_line(&naive, &blocked_pool, "scalar engine");
+    emit.add(&blocked_pool, Some(&naive));
+
+    // bit-equality cross-check: the speedup only counts if the blocked
+    // path answers exactly like the word path and the naive engine
+    let want_exact = eng.matmul_exact(&xb);
+    assert_eq!(
+        kernels::matmul_exact(&seq, &eng, &xb, simd),
+        want_exact,
+        "word path drifted from the engine"
+    );
+    assert_eq!(
+        kernels::matmul_exact_tiled(&seq, &eng, &xb, simd, tile),
+        want_exact,
+        "blocked packed path drifted from the engine"
+    );
+
     header("fused F_MAC histogram (same engine)");
     let separate = bench(
         "separate matmul+hist (simd, 1 thread)",
@@ -147,6 +256,32 @@ fn main() {
     report(&fused, macs, "MAC");
     speedup_line(&separate, &fused, "separate passes");
     emit.add(&fused, Some(&separate));
+    let fused_blocked = bench(
+        "fused blocked matmul+hist (simd, 1 thread)",
+        1,
+        scaled(10),
+        || {
+            std::hint::black_box(kernels::matmul_exact_fused_tiled_into(
+                &seq,
+                &eng,
+                &xb,
+                simd,
+                tile,
+                &mut scratch,
+                &mut blocked_out,
+            ));
+        },
+    );
+    report(&fused_blocked, macs, "MAC");
+    speedup_line(&separate, &fused_blocked, "separate passes");
+    emit.add(&fused_blocked, Some(&separate));
+    // fused blocked must agree with the fused word path, bit for bit
+    let (word_out, word_hist) =
+        kernels::matmul_exact_fused(&seq, &eng, &xb, simd);
+    let (blk_out, blk_hist) =
+        kernels::matmul_exact_fused_tiled(&seq, &eng, &xb, simd, tile);
+    assert_eq!(blk_out, word_out, "fused blocked out drift");
+    assert_eq!(blk_hist, word_hist, "fused blocked hist drift");
 
     header("error-model matmul (same engine, stochastic decode)");
     let em = {
@@ -257,6 +392,11 @@ fn main() {
         "exact simd 1-thread vs scalar engine",
         naive.p50_s / word_simd.p50_s,
         4.0,
+    );
+    gate(
+        "exact blocked 1-thread vs word simd (PR 7)",
+        word_simd.p50_s / blocked_1t.p50_s,
+        2.0,
     );
     gate(
         "fused vs separate matmul+hist",

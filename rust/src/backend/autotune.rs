@@ -1,0 +1,378 @@
+//! Per-machine tile autotuning for the register-blocked bit-GEMM
+//! (DESIGN.md §14).
+//!
+//! The blocked kernels ship a few (MR, NR, K-chunk) instantiations;
+//! which one wins depends on the machine (register file, popcount
+//! throughput, L1 size), not the workload — the operands are always
+//! streamed packed words. So the choice is measured **once per
+//! machine** on a fig8-shaped synthetic engine and memoized in
+//! `runs/autotune.json`, keyed by `"<tier>|<cpu brand string>"` with
+//! schema + kernel version fields. The resolved tile is provenance:
+//! it is recorded in `PointMeta` next to the kernel tier and **never**
+//! enters spec cache keys (bit-identity makes every tile choice
+//! produce the same numbers).
+//!
+//! Cache-handling contract: any irregularity — missing file, corrupt
+//! JSON, version mismatch, out-of-range tile — silently re-tunes and
+//! rewrites. The cache can never panic the process, and
+//! `--tile scalar-safe` bypasses this module entirely.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::backend::kernels::{
+    self, KernelKind, PackScratch, ResolvedTile, Tile, TileSpec,
+};
+use crate::bnn::bitpack::BitMatrix;
+use crate::bnn::SubMacEngine;
+use crate::util::json::{obj, Json};
+use crate::util::pool::ScopedPool;
+
+/// Bumped whenever the blocked kernels change enough that a cached
+/// tile choice may no longer be the winner; mismatched entries are
+/// ignored and re-measured.
+pub const KERNEL_VERSION: u32 = 1;
+
+/// Schema version of `runs/autotune.json`.
+const CACHE_VERSION: u32 = 1;
+
+/// The CPU brand string (x86 cpuid leaves 0x80000002..4), or the
+/// architecture name where unavailable — cache entries follow the
+/// machine, not the binary.
+pub fn cpu_brand() -> String {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // safety: __cpuid is always executable on x86_64; leaf
+        // support is checked through the 0x8000_0000 max-leaf query
+        let max = unsafe { std::arch::x86_64::__cpuid(0x8000_0000) }.eax;
+        if max >= 0x8000_0004 {
+            let mut bytes = Vec::with_capacity(48);
+            for leaf in 0x8000_0002u32..=0x8000_0004 {
+                let r = unsafe { std::arch::x86_64::__cpuid(leaf) };
+                for reg in [r.eax, r.ebx, r.ecx, r.edx] {
+                    bytes.extend_from_slice(&reg.to_le_bytes());
+                }
+            }
+            let s = String::from_utf8_lossy(&bytes);
+            let s = s.trim_matches(char::from(0)).trim().to_string();
+            if !s.is_empty() {
+                return s;
+            }
+        }
+    }
+    std::env::consts::ARCH.to_string()
+}
+
+/// Cache key for one (tier, machine) pair. Versions are separate
+/// top-level fields so a kernel bump invalidates every entry at once.
+pub fn cache_key(kind: KernelKind) -> String {
+    format!("{}|{}", kind.name(), cpu_brand())
+}
+
+fn tile_json(t: Tile) -> Json {
+    obj(vec![
+        ("mr", Json::Num(t.mr as f64)),
+        ("nr", Json::Num(t.nr as f64)),
+        ("kb", Json::Num(t.kb as f64)),
+    ])
+}
+
+/// Pattern-matching (never-panicking) tile reader: anything that is
+/// not three integral in-range numbers is treated as absent.
+fn tile_from_json(v: &Json) -> Option<Tile> {
+    let num = |key: &str| match v.get(key) {
+        Some(Json::Num(n)) if *n >= 1.0 && n.fract() == 0.0 => {
+            Some(*n as usize)
+        }
+        _ => None,
+    };
+    let t = Tile::new(num("mr")?, num("nr")?, num("kb")?);
+    t.is_valid().then_some(t)
+}
+
+fn versions_match(root: &Json) -> bool {
+    let num_is = |key: &str, want: u32| {
+        matches!(root.get(key), Some(Json::Num(n)) if *n == want as f64)
+    };
+    num_is("version", CACHE_VERSION)
+        && num_is("kernel_version", KERNEL_VERSION)
+}
+
+/// Load the cached winner for `kind` from `path`. Any irregularity —
+/// missing file, unparseable JSON, wrong schema or kernel version,
+/// out-of-range tile — returns `None` and the caller re-tunes.
+pub fn load_cached(kind: KernelKind, path: &Path) -> Option<Tile> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let root = Json::parse(&text).ok()?;
+    if !versions_match(&root) {
+        return None;
+    }
+    tile_from_json(root.get("entries")?.get(&cache_key(kind))?)
+}
+
+/// Persist `tile` as the winner for `kind`, keeping any valid
+/// existing entries (other tiers, or other machines sharing the runs
+/// dir). Best-effort: an unwritable path just loses the memo.
+pub fn save_cached(kind: KernelKind, tile: Tile, path: &Path) {
+    let mut entries: BTreeMap<String, Json> = BTreeMap::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(root) = Json::parse(&text) {
+            if versions_match(&root) {
+                if let Some(Json::Obj(m)) = root.get("entries") {
+                    for (k, v) in m {
+                        if tile_from_json(v).is_some() {
+                            entries.insert(k.clone(), v.clone());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    entries.insert(cache_key(kind), tile_json(tile));
+    let root = obj(vec![
+        ("version", Json::Num(CACHE_VERSION as f64)),
+        ("kernel_version", Json::Num(KERNEL_VERSION as f64)),
+        ("entries", Json::Obj(entries)),
+    ]);
+    if let Some(parent) = path.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    let _ = std::fs::write(path, root.to_string());
+}
+
+/// Measure every candidate tile for `kind` on a fig8-shaped synthetic
+/// engine (o=32, K=288, serve-sized activation batch) and return the
+/// fastest — a few milliseconds, paid once per machine.
+pub fn measure_best(kind: KernelKind) -> Tile {
+    let (o, k, d) = (32usize, 288usize, 768usize);
+    // xorshift64*-style deterministic operands (no clock, no seed
+    // plumbing): the tuner must be reproducible on one machine
+    let mut state = 0x1234_5678_9abc_def0u64;
+    let mut pm = |n: usize| -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                if state & 1 == 1 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            })
+            .collect()
+    };
+    let w = pm(o * k);
+    let x = pm(d * k);
+    let eng = SubMacEngine::new(o, k, &w, k);
+    let xb = BitMatrix::pack(d, k, &x, false);
+    let pool = ScopedPool::sequential();
+    let mut scratch = PackScratch::default();
+    let mut out = vec![0.0f32; o * d];
+    let mut best: Option<(Tile, std::time::Duration)> = None;
+    for tile in Tile::candidates(kind) {
+        let rt = ResolvedTile::Blocked(tile);
+        // warm pass faults the scratch buffers + instruction cache
+        kernels::matmul_exact_tiled_into(
+            &pool,
+            &eng,
+            &xb,
+            kind,
+            rt,
+            &mut scratch,
+            &mut out,
+        );
+        let mut fastest = std::time::Duration::MAX;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            kernels::matmul_exact_tiled_into(
+                &pool,
+                &eng,
+                &xb,
+                kind,
+                rt,
+                &mut scratch,
+                &mut out,
+            );
+            fastest = fastest.min(t0.elapsed());
+        }
+        match best {
+            Some((_, b)) if b <= fastest => {}
+            _ => best = Some((tile, fastest)),
+        }
+    }
+    best.map(|(t, _)| t).unwrap_or_else(|| Tile::default_for(kind))
+}
+
+/// Load-or-measure-and-save, without the process-wide memo (tests
+/// drive this directly so every call re-reads the file).
+pub fn tuned_tile_uncached(kind: KernelKind, path: &Path) -> Tile {
+    if let Some(t) = load_cached(kind, path) {
+        return t;
+    }
+    let t = measure_best(kind);
+    save_cached(kind, t, path);
+    t
+}
+
+/// The autotuned tile for `kind`, memoized per (tier, machine, cache
+/// path) for the life of the process — one measurement per machine,
+/// then pure lookups.
+pub fn tuned_tile(kind: KernelKind, path: &Path) -> Tile {
+    static MEMO: OnceLock<Mutex<HashMap<String, Tile>>> = OnceLock::new();
+    let memo = MEMO.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = format!("{}|{}", cache_key(kind), path.display());
+    if let Some(t) = memo.lock().unwrap().get(&key) {
+        return *t;
+    }
+    let t = tuned_tile_uncached(kind, path);
+    memo.lock().unwrap().insert(key, t);
+    t
+}
+
+/// Resolve a parsed `--tile` request for this machine: `Auto` goes
+/// through the cache (measuring on first use), `ScalarSafe` bypasses
+/// the blocked path, fixed tiles pass straight through.
+pub fn resolve(
+    spec: TileSpec,
+    kind: KernelKind,
+    cache_path: &Path,
+) -> ResolvedTile {
+    match spec {
+        TileSpec::Auto => {
+            ResolvedTile::Blocked(tuned_tile(kind, cache_path))
+        }
+        TileSpec::ScalarSafe => ResolvedTile::ScalarSafe,
+        TileSpec::Fixed(t) => ResolvedTile::Blocked(t),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!(
+                "capmin_autotune_{tag}_{}",
+                std::process::id()
+            ))
+            .join("autotune.json")
+    }
+
+    #[test]
+    fn garbage_cache_recovers_by_retuning() {
+        let path = test_path("garbage");
+        if let Some(p) = path.parent() {
+            let _ = std::fs::create_dir_all(p);
+        }
+        std::fs::write(&path, "{not json at all").unwrap();
+        let kind = KernelKind::detect();
+        // corrupt cache is ignored, never a panic...
+        assert_eq!(load_cached(kind, &path), None);
+        // ...and the uncached resolver re-tunes straight through it
+        let t = tuned_tile_uncached(kind, &path);
+        assert!(t.is_valid());
+        // the re-tune rewrote the cache: a second load round-trips
+        assert_eq!(load_cached(kind, &path), Some(t));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn version_mismatch_invalidates() {
+        let path = test_path("version");
+        let kind = KernelKind::detect();
+        let tile = Tile::new(2, 4, 64);
+        save_cached(kind, tile, &path);
+        assert_eq!(load_cached(kind, &path), Some(tile));
+        // bump kernel_version in place -> stale entry ignored
+        let text = std::fs::read_to_string(&path).unwrap();
+        let bumped = text.replace(
+            &format!("\"kernel_version\":{KERNEL_VERSION}"),
+            &format!("\"kernel_version\":{}", KERNEL_VERSION + 1),
+        );
+        assert_ne!(text, bumped, "kernel_version field missing");
+        std::fs::write(&path, bumped).unwrap();
+        assert_eq!(load_cached(kind, &path), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cache_roundtrips_and_merges_entries() {
+        let path = test_path("merge");
+        let _ = std::fs::remove_file(&path);
+        let det = KernelKind::detect();
+        save_cached(KernelKind::Scalar, Tile::new(4, 8, 64), &path);
+        save_cached(det, Tile::new(2, 4, 16), &path);
+        assert_eq!(load_cached(det, &path), Some(Tile::new(2, 4, 16)));
+        if det != KernelKind::Scalar {
+            // the second save merged, not clobbered
+            assert_eq!(
+                load_cached(KernelKind::Scalar, &path),
+                Some(Tile::new(4, 8, 64))
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn out_of_range_cached_tile_is_rejected() {
+        let path = test_path("range");
+        let key = cache_key(KernelKind::Scalar);
+        // handcraft a current-version cache whose tile has MR = 3 —
+        // no such kernel instantiation exists
+        let root = obj(vec![
+            ("version", Json::Num(CACHE_VERSION as f64)),
+            ("kernel_version", Json::Num(KERNEL_VERSION as f64)),
+            (
+                "entries",
+                obj(vec![(
+                    key.as_str(),
+                    obj(vec![
+                        ("mr", Json::Num(3.0)),
+                        ("nr", Json::Num(4.0)),
+                        ("kb", Json::Num(64.0)),
+                    ]),
+                )]),
+            ),
+        ]);
+        if let Some(p) = path.parent() {
+            let _ = std::fs::create_dir_all(p);
+        }
+        std::fs::write(&path, root.to_string()).unwrap();
+        assert_eq!(load_cached(KernelKind::Scalar, &path), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resolve_maps_specs() {
+        let path = test_path("resolve");
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(
+            resolve(TileSpec::ScalarSafe, KernelKind::Scalar, &path),
+            ResolvedTile::ScalarSafe
+        );
+        let t = Tile::new(8, 4, 32);
+        assert_eq!(
+            resolve(TileSpec::Fixed(t), KernelKind::Scalar, &path),
+            ResolvedTile::Blocked(t)
+        );
+        // Auto measures (scalar candidates are cheap) and caches
+        match resolve(TileSpec::Auto, KernelKind::Scalar, &path) {
+            ResolvedTile::Blocked(t) => assert!(t.is_valid()),
+            ResolvedTile::ScalarSafe => panic!("auto must block"),
+        }
+        assert!(path.exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cpu_brand_is_stable_and_nonempty() {
+        let b = cpu_brand();
+        assert!(!b.is_empty());
+        assert_eq!(b, cpu_brand());
+        assert!(cache_key(KernelKind::Scalar).starts_with("scalar|"));
+    }
+}

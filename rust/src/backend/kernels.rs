@@ -9,14 +9,15 @@
 //! every kernel tier, tile size and thread count is bit-exact —
 //! pinned by the in-file tests and `tests/backend.rs`.
 //!
-//! Three layers, modeled on the runtime-dispatch architecture of the
+//! Four layers, modeled on the runtime-dispatch architecture of the
 //! `gemm` crates referenced in SNIPPETS.md:
 //!
 //! * **Tier dispatch** ([`KernelKind`]): one generic, `inline(always)`
 //!   kernel body instantiated per CPU tier — `scalar` (portable),
 //!   `avx2` (x86_64, runtime-detected AVX2 + hardware POPCNT; long
-//!   rows additionally run a vpshufb nibble-LUT popcount), `neon`
-//!   (aarch64, `cnt`-lowered popcounts under the neon target
+//!   rows additionally run a vpshufb nibble-LUT popcount), `avx512`
+//!   (x86_64, `VPOPCNTQ` vector popcounts under avx512vpopcntdq),
+//!   `neon` (aarch64, `cnt`-lowered popcounts under the neon target
 //!   feature). `--kernel scalar|auto` selects; the resolved tier is
 //!   recorded in point-cache meta.
 //! * **Blocking** ([`work_blocks`]): the (o x d) output grid splits
@@ -24,6 +25,15 @@
 //!   workers`, per-row d-splits otherwise, so small-o matmuls (early
 //!   convs) no longer idle most of the pool. Within a block, d-tiles
 //!   of [`TILE_D`] x-rows stay resident in L1 across the o-sweep.
+//! * **Register blocking** ([`matmul_exact_tiled_into`], DESIGN.md
+//!   §14): both operands repack into lane-interleaved panels
+//!   ([`pack_a_block`]/[`pack_b_block`]) and an MR x NR microkernel
+//!   holds the popcount accumulators for a whole output tile in
+//!   registers across the K sweep — one vector load fetches the next
+//!   K-word of NR activation rows at once. The (MR, NR, K-chunk)
+//!   [`Tile`] is autotuned per machine (`backend::autotune`) and
+//!   recorded in point meta; `--tile scalar-safe` falls back to the
+//!   per-word kernels.
 //! * **Fusion** ([`matmul_exact_fused_into`]): the clean F_MAC pass
 //!   computes outputs *and* per-group level histograms in one walk
 //!   over the operands instead of two.
@@ -52,68 +62,266 @@ pub enum KernelKind {
     Scalar,
     /// x86_64 AVX2 + hardware POPCNT (runtime-detected).
     Avx2,
+    /// x86_64 AVX-512 `VPOPCNTQ` (avx512vpopcntdq, runtime-detected).
+    Avx512,
     /// aarch64 NEON `cnt`-lowered popcounts (runtime-detected).
     Neon,
 }
 
 impl KernelKind {
     /// CLI values `--kernel` accepts. `auto` resolves per machine;
-    /// naming a SIMD tier explicitly errors unless detected.
+    /// naming a SIMD tier explicitly errors unless the CPU has it.
     pub const CHOICES: &'static [&'static str] =
-        &["auto", "scalar", "avx2", "neon"];
+        &["auto", "scalar", "avx2", "avx512", "neon"];
+
+    /// Every tier, best first — [`KernelKind::detect`]'s fallback
+    /// order (avx512 → avx2 → neon → scalar).
+    pub const TIERS: &'static [KernelKind] = &[
+        KernelKind::Avx512,
+        KernelKind::Avx2,
+        KernelKind::Neon,
+        KernelKind::Scalar,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             KernelKind::Scalar => "scalar",
             KernelKind::Avx2 => "avx2",
+            KernelKind::Avx512 => "avx512",
             KernelKind::Neon => "neon",
         }
     }
 
-    /// The best tier the running CPU supports.
+    /// Whether the running CPU can execute this tier. `Scalar` is
+    /// always supported; SIMD tiers check the exact feature set their
+    /// kernels need. `Avx512` additionally requires the AVX2 + POPCNT
+    /// features its non-8-lane tile fallbacks use, so a CPU with the
+    /// `VPOPCNTQ` extension but a partial stack cleanly falls back to
+    /// the next tier instead of faulting mid-kernel.
+    pub fn supported(self) -> bool {
+        match self {
+            KernelKind::Scalar => true,
+            KernelKind::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("popcnt")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            KernelKind::Avx512 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx512f")
+                        && std::arch::is_x86_feature_detected!(
+                            "avx512vpopcntdq"
+                        )
+                        && std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("popcnt")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            KernelKind::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// The best tier the running CPU supports: the first supported
+    /// entry of [`KernelKind::TIERS`], so partial AVX-512 support
+    /// (e.g. avx512f without avx512vpopcntdq) falls back to avx2,
+    /// then scalar.
     pub fn detect() -> KernelKind {
-        #[cfg(target_arch = "x86_64")]
-        {
-            if std::arch::is_x86_feature_detected!("avx2")
-                && std::arch::is_x86_feature_detected!("popcnt")
-            {
-                return KernelKind::Avx2;
-            }
-        }
-        #[cfg(target_arch = "aarch64")]
-        {
-            if std::arch::is_aarch64_feature_detected!("neon") {
-                return KernelKind::Neon;
-            }
-        }
-        KernelKind::Scalar
+        *KernelKind::TIERS
+            .iter()
+            .find(|t| t.supported())
+            .expect("scalar tier is always supported")
     }
 
     /// Resolve a `--kernel` request against the running CPU. `auto`
     /// picks the detected tier; `scalar` forces the portable kernel
     /// (cold-path measurements, bit-equality cross-checks); an
-    /// explicit SIMD name is accepted only when the CPU has it.
+    /// explicit SIMD name is accepted whenever the CPU supports it —
+    /// `--kernel avx2` still resolves on an AVX-512 machine (pinned
+    /// configs keep working across hardware upgrades) but errors on
+    /// CPUs without the feature.
     pub fn resolve(requested: &str) -> Result<KernelKind> {
-        match requested {
-            "auto" => Ok(KernelKind::detect()),
-            "scalar" => Ok(KernelKind::Scalar),
-            "avx2" | "neon" => {
-                let detected = KernelKind::detect();
-                if detected.name() == requested {
-                    Ok(detected)
-                } else {
-                    Err(anyhow!(
-                        "--kernel {requested} is not supported on this \
-                         CPU (detected tier: {}); use --kernel auto or \
-                         scalar",
-                        detected.name()
-                    ))
-                }
+        let kind = match requested {
+            "auto" => return Ok(KernelKind::detect()),
+            "scalar" => return Ok(KernelKind::Scalar),
+            "avx2" => KernelKind::Avx2,
+            "avx512" => KernelKind::Avx512,
+            "neon" => KernelKind::Neon,
+            other => {
+                return Err(anyhow!(
+                    "bad --kernel `{other}`: expected one of auto, \
+                     scalar, avx2, avx512, neon"
+                ))
             }
-            other => Err(anyhow!(
-                "bad --kernel `{other}`: expected one of auto, scalar, \
-                 avx2, neon"
-            )),
+        };
+        if kind.supported() {
+            Ok(kind)
+        } else {
+            Err(anyhow!(
+                "--kernel {requested} is not supported on this CPU \
+                 (detected tier: {}); use --kernel auto or scalar",
+                KernelKind::detect().name()
+            ))
+        }
+    }
+}
+
+/// A register-blocking tile for the packed bit-GEMM path (DESIGN.md
+/// §14): MR weight rows x NR activation rows per microkernel call,
+/// with the K dimension swept in `kb`-word chunks. MR and NR are
+/// limited to the const-generic instantiations the kernels compile
+/// ([`Tile::LANES`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    pub mr: usize,
+    pub nr: usize,
+    pub kb: usize,
+}
+
+impl Tile {
+    /// MR/NR values with a compiled microkernel instantiation.
+    pub const LANES: &'static [usize] = &[1, 2, 4, 8];
+
+    /// Default K-chunk: 64 u64 words (K = 4096 bits) per accumulate
+    /// chunk — wider than every registry shape, so chunking only
+    /// engages on oversized synthetic engines.
+    pub const DEFAULT_KB: usize = 64;
+
+    pub fn new(mr: usize, nr: usize, kb: usize) -> Tile {
+        Tile { mr, nr, kb }
+    }
+
+    /// `MRxNRkKB`, e.g. `4x8k64` — recorded in point meta and the
+    /// autotune cache.
+    pub fn name(&self) -> String {
+        format!("{}x{}k{}", self.mr, self.nr, self.kb)
+    }
+
+    /// Whether the blocked kernels ship an instantiation for this
+    /// tile.
+    pub fn is_valid(&self) -> bool {
+        Tile::LANES.contains(&self.mr)
+            && Tile::LANES.contains(&self.nr)
+            && self.kb >= 1
+    }
+
+    /// The shape used when no autotune measurement is available: NR
+    /// matched to the tier's vector popcount width (8 u64 lanes under
+    /// VPOPCNTQ, 4 elsewhere), MR = 4 output rows held in registers.
+    pub fn default_for(kind: KernelKind) -> Tile {
+        match kind {
+            KernelKind::Avx512 => Tile::new(4, 8, Tile::DEFAULT_KB),
+            _ => Tile::new(4, 4, Tile::DEFAULT_KB),
+        }
+    }
+
+    /// Autotune candidates per tier: NR pinned to the tier's vector
+    /// width, MR swept over the register-pressure trade-off, plus one
+    /// short-KB variant probing L1-resident K-chunks.
+    pub fn candidates(kind: KernelKind) -> Vec<Tile> {
+        match kind {
+            KernelKind::Avx512 => vec![
+                Tile::new(2, 8, 64),
+                Tile::new(4, 8, 64),
+                Tile::new(8, 8, 64),
+                Tile::new(4, 8, 16),
+            ],
+            KernelKind::Avx2 => vec![
+                Tile::new(2, 4, 64),
+                Tile::new(4, 4, 64),
+                Tile::new(8, 4, 64),
+                Tile::new(4, 4, 16),
+            ],
+            _ => vec![
+                Tile::new(2, 4, 64),
+                Tile::new(4, 4, 64),
+                Tile::new(4, 8, 64),
+                Tile::new(8, 4, 64),
+            ],
+        }
+    }
+}
+
+/// A parsed `--tile` request; resolved per machine by
+/// [`crate::backend::autotune::resolve`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileSpec {
+    /// Measure candidate tiles once per machine and cache the winner
+    /// in `runs/autotune.json`.
+    Auto,
+    /// Escape hatch (`--tile scalar-safe`): bypass the blocked path
+    /// and run the per-word kernels.
+    ScalarSafe,
+    /// A pinned `MRxNR[kKB]` tile.
+    Fixed(Tile),
+}
+
+impl TileSpec {
+    pub fn parse(s: &str) -> Result<TileSpec> {
+        match s {
+            "auto" => return Ok(TileSpec::Auto),
+            "scalar-safe" => return Ok(TileSpec::ScalarSafe),
+            _ => {}
+        }
+        let bad = || {
+            anyhow!(
+                "bad --tile `{s}`: expected auto, scalar-safe, or \
+                 MRxNR[kKB] with MR, NR in {{1, 2, 4, 8}} — e.g. 4x8 \
+                 or 4x8k32"
+            )
+        };
+        let (mr_s, rest) = s.split_once('x').ok_or_else(bad)?;
+        let (nr_s, kb_s) = match rest.split_once('k') {
+            Some((nr_s, kb_s)) => (nr_s, Some(kb_s)),
+            None => (rest, None),
+        };
+        let mr = mr_s.parse::<usize>().map_err(|_| bad())?;
+        let nr = nr_s.parse::<usize>().map_err(|_| bad())?;
+        let kb = match kb_s {
+            Some(kb_s) => kb_s.parse::<usize>().map_err(|_| bad())?,
+            None => Tile::DEFAULT_KB,
+        };
+        let tile = Tile::new(mr, nr, kb);
+        if !tile.is_valid() {
+            return Err(bad());
+        }
+        Ok(TileSpec::Fixed(tile))
+    }
+}
+
+/// A per-machine resolved tile choice. Recorded in `PointMeta` next
+/// to the kernel tier (provenance, never part of cache keys).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResolvedTile {
+    /// Run the per-word kernels (escape hatch + bench baseline).
+    ScalarSafe,
+    /// Run the register-blocked packed path with this tile.
+    Blocked(Tile),
+}
+
+impl ResolvedTile {
+    pub fn name(&self) -> String {
+        match self {
+            ResolvedTile::ScalarSafe => "scalar-safe".to_string(),
+            ResolvedTile::Blocked(t) => t.name(),
         }
     }
 }
@@ -372,8 +580,13 @@ fn exact_block(
 ) {
     match kind {
         #[cfg(target_arch = "x86_64")]
-        // safety: Avx2 is only constructed after runtime detection
-        KernelKind::Avx2 => unsafe { exact_block_avx2(eng, x, b, out) },
+        // safety: SIMD kinds pass runtime detection before
+        // construction; Avx512's `supported` includes avx2 + popcnt,
+        // so the per-word path shares the AVX2 kernel (the VPOPCNTQ
+        // win lives in the blocked path)
+        KernelKind::Avx2 | KernelKind::Avx512 => unsafe {
+            exact_block_avx2(eng, x, b, out)
+        },
         #[cfg(target_arch = "aarch64")]
         // safety: Neon is only constructed after runtime detection
         KernelKind::Neon => unsafe { exact_block_neon(eng, x, b, out) },
@@ -495,8 +708,11 @@ fn hist_block(
 ) -> [u64; N_LEVELS] {
     match kind {
         #[cfg(target_arch = "x86_64")]
-        // safety: Avx2 is only constructed after runtime detection
-        KernelKind::Avx2 => unsafe { hist_block_popcnt(eng, x, b) },
+        // safety: SIMD kinds pass runtime detection; Avx512 implies
+        // the popcnt feature this wrapper needs
+        KernelKind::Avx2 | KernelKind::Avx512 => unsafe {
+            hist_block_popcnt(eng, x, b)
+        },
         #[cfg(target_arch = "aarch64")]
         // safety: Neon is only constructed after runtime detection
         KernelKind::Neon => unsafe { hist_block_neon(eng, x, b) },
@@ -590,8 +806,11 @@ fn fused_block(
 ) -> [u64; N_LEVELS] {
     match kind {
         #[cfg(target_arch = "x86_64")]
-        // safety: Avx2 is only constructed after runtime detection
-        KernelKind::Avx2 => unsafe { fused_block_popcnt(eng, x, b, out) },
+        // safety: SIMD kinds pass runtime detection; Avx512 implies
+        // the popcnt feature this wrapper needs
+        KernelKind::Avx2 | KernelKind::Avx512 => unsafe {
+            fused_block_popcnt(eng, x, b, out)
+        },
         #[cfg(target_arch = "aarch64")]
         // safety: Neon is only constructed after runtime detection
         KernelKind::Neon => unsafe { fused_block_neon(eng, x, b, out) },
@@ -718,8 +937,9 @@ fn error_block(
 ) {
     match kind {
         #[cfg(target_arch = "x86_64")]
-        // safety: Avx2 is only constructed after runtime detection
-        KernelKind::Avx2 => unsafe {
+        // safety: SIMD kinds pass runtime detection; Avx512 implies
+        // the popcnt feature this wrapper needs
+        KernelKind::Avx2 | KernelKind::Avx512 => unsafe {
             error_block_popcnt(eng, x, em, seed, salt, b, out)
         },
         #[cfg(target_arch = "aarch64")]
@@ -769,6 +989,630 @@ pub fn matmul_error(
     out
 }
 
+// ------------------------------------------------- blocked packed path
+//
+// The register-blocked bit-GEMM (DESIGN.md §14). Both operands repack
+// into lane-interleaved panels, then MR x NR microkernels sweep the
+// panel grid holding the whole accumulator tile in registers across
+// K. The error-model and histogram-only paths stay on the per-word
+// dispatch above: they are PRNG-decode/tally-bound, so register
+// blocking buys them nothing.
+
+/// Reusable packing buffers for the blocked path. The native backend
+/// lends these from its scratch `Arena`, so steady-state packing
+/// allocates nothing.
+#[derive(Default)]
+pub struct PackScratch {
+    pub a: Vec<u64>,
+    pub b: Vec<u64>,
+}
+
+/// Pack weight rows `o0..o1` into MR-lane panels (see
+/// [`BitMatrix::pack_panels`]): the microkernel reads K-word `k` of
+/// its MR rows as one contiguous span.
+pub fn pack_a_block(
+    w: &BitMatrix,
+    o0: usize,
+    o1: usize,
+    mr: usize,
+    buf: &mut Vec<u64>,
+) {
+    w.pack_panels(o0, o1, mr, buf);
+}
+
+/// Pack activation rows `d0..d1` into NR-lane panels: one unaligned
+/// vector load fetches K-word `k` of all NR output columns at once.
+pub fn pack_b_block(
+    x: &BitMatrix,
+    d0: usize,
+    d1: usize,
+    nr: usize,
+    buf: &mut Vec<u64>,
+) {
+    x.pack_panels(d0, d1, nr, buf);
+}
+
+/// Raw output base shared across pool workers. Safety: the panel grid
+/// assigns every (o, d) output cell to exactly one panel block, so
+/// concurrent workers write disjoint elements and never alias.
+#[derive(Clone, Copy)]
+struct OutPtr(*mut f32);
+
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// Everything a blocked worker needs: packed operands, geometry, the
+/// resolved tile, and the shared output base.
+#[derive(Clone, Copy)]
+struct BlockedJob<'a> {
+    a: &'a [u64],
+    b: &'a [u64],
+    kw: usize,
+    o: usize,
+    d: usize,
+    beta: i64,
+    tile: Tile,
+    out: OutPtr,
+}
+
+/// Instantiate a blocked kernel for the tile's MR — the compiled lane
+/// counts mirror [`Tile::LANES`] (entry points assert validity).
+macro_rules! dispatch_mr {
+    ($f:ident, $tile:expr, $($args:expr),+ $(,)?) => {
+        match $tile.mr {
+            1 => $f::<1>($($args),+),
+            2 => $f::<2>($($args),+),
+            4 => $f::<4>($($args),+),
+            _ => $f::<8>($($args),+),
+        }
+    };
+}
+
+/// Portable MR x NR panel kernel: a fixed-width accumulator block
+/// (registers for the small tiles) swept across K in `kb`-word
+/// chunks. Pad lanes compute garbage counts that are simply never
+/// stored (`mr_real`/`nr_real` clamp the writeback).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+unsafe fn blocked_panel_scalar<const MR: usize>(
+    job: &BlockedJob,
+    ap: &[u64],
+    bp: &[u64],
+    o_base: usize,
+    d_base: usize,
+    mr_real: usize,
+    nr_real: usize,
+) {
+    let (kw, nr) = (job.kw, job.tile.nr);
+    let kb = job.tile.kb.max(1);
+    // nr <= 8 by Tile validation; the unused tail lanes are dead code
+    // after const-folding
+    let mut acc = [[0u32; 8]; MR];
+    let mut k0 = 0usize;
+    while k0 < kw {
+        let k1 = (k0 + kb).min(kw);
+        for k in k0..k1 {
+            let brow = &bp[k * nr..k * nr + nr];
+            for (m, accm) in acc.iter_mut().enumerate() {
+                let aw = ap[k * MR + m];
+                for (n, &bw) in brow.iter().enumerate() {
+                    accm[n] += (!(aw ^ bw)).count_ones();
+                }
+            }
+        }
+        k0 = k1;
+    }
+    for (m, accm) in acc.iter().take(mr_real).enumerate() {
+        for (n, &cnt) in accm.iter().take(nr_real).enumerate() {
+            *job.out.0.add((o_base + m) * job.d + d_base + n) =
+                (2 * cnt as i64 - job.beta) as f32;
+        }
+    }
+}
+
+/// AVX2 MR x 4 panel kernel: broadcast one weight word, XNOR against
+/// a 4-lane activation vector, Mula nibble-LUT popcount, and
+/// `_mm256_sad_epu8` into one u64-lane accumulator vector per output
+/// row — MR vectors live in registers across the whole K sweep.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+unsafe fn blocked_panel_avx2<const MR: usize>(
+    job: &BlockedJob,
+    ap: &[u64],
+    bp: &[u64],
+    o_base: usize,
+    d_base: usize,
+    mr_real: usize,
+    nr_real: usize,
+) {
+    use std::arch::x86_64::*;
+    let kw = job.kw;
+    let kb = job.tile.kb.max(1);
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1,
+        2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let ones = _mm256_set1_epi8(-1);
+    let zero = _mm256_setzero_si256();
+    let mut acc = [zero; MR];
+    let mut k0 = 0usize;
+    while k0 < kw {
+        let k1 = (k0 + kb).min(kw);
+        for k in k0..k1 {
+            let bv = _mm256_loadu_si256(
+                bp.as_ptr().add(k * 4) as *const __m256i
+            );
+            for (m, accm) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_epi64x(ap[k * MR + m] as i64);
+                // XNOR: !(a ^ b) == (a ^ b) ^ ~0
+                let v =
+                    _mm256_xor_si256(_mm256_xor_si256(av, bv), ones);
+                let lo = _mm256_and_si256(v, low_mask);
+                let hi = _mm256_and_si256(
+                    _mm256_srli_epi16::<4>(v),
+                    low_mask,
+                );
+                let cnt = _mm256_add_epi8(
+                    _mm256_shuffle_epi8(lut, lo),
+                    _mm256_shuffle_epi8(lut, hi),
+                );
+                *accm = _mm256_add_epi64(
+                    *accm,
+                    _mm256_sad_epu8(cnt, zero),
+                );
+            }
+        }
+        k0 = k1;
+    }
+    for m in 0..mr_real {
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc[m]);
+        for (n, &cnt) in lanes.iter().take(nr_real).enumerate() {
+            *job.out.0.add((o_base + m) * job.d + d_base + n) =
+                (2 * cnt as i64 - job.beta) as f32;
+        }
+    }
+}
+
+/// AVX-512 MR x 8 panel kernel: `VPOPCNTQ` counts all 8 u64 lanes of
+/// the XNOR word in a single instruction, accumulated into one
+/// 8-lane vector per output row.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+unsafe fn blocked_panel_avx512<const MR: usize>(
+    job: &BlockedJob,
+    ap: &[u64],
+    bp: &[u64],
+    o_base: usize,
+    d_base: usize,
+    mr_real: usize,
+    nr_real: usize,
+) {
+    use std::arch::x86_64::*;
+    let kw = job.kw;
+    let kb = job.tile.kb.max(1);
+    let ones = _mm512_set1_epi64(-1);
+    let mut acc = [_mm512_setzero_si512(); MR];
+    let mut k0 = 0usize;
+    while k0 < kw {
+        let k1 = (k0 + kb).min(kw);
+        for k in k0..k1 {
+            // unaligned 8-lane load of the packed B panel column
+            let bv = std::ptr::read_unaligned(
+                bp.as_ptr().add(k * 8) as *const __m512i
+            );
+            for (m, accm) in acc.iter_mut().enumerate() {
+                let av = _mm512_set1_epi64(ap[k * MR + m] as i64);
+                let y =
+                    _mm512_xor_si512(_mm512_xor_si512(av, bv), ones);
+                *accm =
+                    _mm512_add_epi64(*accm, _mm512_popcnt_epi64(y));
+            }
+        }
+        k0 = k1;
+    }
+    for m in 0..mr_real {
+        let lanes: [u64; 8] = std::mem::transmute(acc[m]);
+        for (n, &cnt) in lanes.iter().take(nr_real).enumerate() {
+            *job.out.0.add((o_base + m) * job.d + d_base + n) =
+                (2 * cnt as i64 - job.beta) as f32;
+        }
+    }
+}
+
+/// The scalar blocked sweep shared by the popcnt/neon/portable tier
+/// wrappers: the B panel stays resident across the po sweep, one
+/// [`blocked_panel_scalar`] call per MR x NR output tile.
+#[inline(always)]
+unsafe fn blocked_sweep_scalar_panels<const MR: usize>(
+    job: &BlockedJob,
+    pb: &Block,
+) {
+    let (kw, nr) = (job.kw, job.tile.nr);
+    for pd in pb.d0..pb.d1 {
+        let bp = &job.b[pd * kw * nr..(pd + 1) * kw * nr];
+        let d_base = pd * nr;
+        let nr_real = (job.d - d_base).min(nr);
+        for po in pb.o0..pb.o1 {
+            let ap = &job.a[po * kw * MR..(po + 1) * kw * MR];
+            let o_base = po * MR;
+            let mr_real = (job.o - o_base).min(MR);
+            blocked_panel_scalar::<MR>(
+                job, ap, bp, o_base, d_base, mr_real, nr_real,
+            );
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+unsafe fn blocked_exact_popcnt<const MR: usize>(
+    job: &BlockedJob,
+    pb: &Block,
+) {
+    blocked_sweep_scalar_panels::<MR>(job, pb)
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn blocked_exact_neon<const MR: usize>(
+    job: &BlockedJob,
+    pb: &Block,
+) {
+    blocked_sweep_scalar_panels::<MR>(job, pb)
+}
+
+unsafe fn blocked_exact_portable<const MR: usize>(
+    job: &BlockedJob,
+    pb: &Block,
+) {
+    blocked_sweep_scalar_panels::<MR>(job, pb)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,popcnt")]
+unsafe fn blocked_exact_avx2<const MR: usize>(
+    job: &BlockedJob,
+    pb: &Block,
+) {
+    let kw = job.kw;
+    for pd in pb.d0..pb.d1 {
+        let bp = &job.b[pd * kw * 4..(pd + 1) * kw * 4];
+        let d_base = pd * 4;
+        let nr_real = (job.d - d_base).min(4);
+        for po in pb.o0..pb.o1 {
+            let ap = &job.a[po * kw * MR..(po + 1) * kw * MR];
+            let o_base = po * MR;
+            let mr_real = (job.o - o_base).min(MR);
+            blocked_panel_avx2::<MR>(
+                job, ap, bp, o_base, d_base, mr_real, nr_real,
+            );
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vpopcntdq,avx2,popcnt")]
+unsafe fn blocked_exact_avx512<const MR: usize>(
+    job: &BlockedJob,
+    pb: &Block,
+) {
+    let kw = job.kw;
+    for pd in pb.d0..pb.d1 {
+        let bp = &job.b[pd * kw * 8..(pd + 1) * kw * 8];
+        let d_base = pd * 8;
+        let nr_real = (job.d - d_base).min(8);
+        for po in pb.o0..pb.o1 {
+            let ap = &job.a[po * kw * MR..(po + 1) * kw * MR];
+            let o_base = po * MR;
+            let mr_real = (job.o - o_base).min(MR);
+            blocked_panel_avx512::<MR>(
+                job, ap, bp, o_base, d_base, mr_real, nr_real,
+            );
+        }
+    }
+}
+
+/// Tier + tile dispatch for one panel-grid block.
+///
+/// # Safety
+/// Concurrent callers must hand workers disjoint panel blocks,
+/// `job.out` must stay valid for the whole fan-out, and SIMD kinds
+/// must have passed runtime detection. The vector kernels run only
+/// when NR matches their lane width; any other tile routes to the
+/// scalar-panel sweep under the tier's popcount feature.
+unsafe fn blocked_exact_block(
+    kind: KernelKind,
+    job: &BlockedJob,
+    pb: &Block,
+) {
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx512 => match job.tile.nr {
+            8 => dispatch_mr!(blocked_exact_avx512, job.tile, job, pb),
+            4 => dispatch_mr!(blocked_exact_avx2, job.tile, job, pb),
+            _ => dispatch_mr!(blocked_exact_popcnt, job.tile, job, pb),
+        },
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => match job.tile.nr {
+            4 => dispatch_mr!(blocked_exact_avx2, job.tile, job, pb),
+            _ => dispatch_mr!(blocked_exact_popcnt, job.tile, job, pb),
+        },
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => {
+            dispatch_mr!(blocked_exact_neon, job.tile, job, pb)
+        }
+        _ => dispatch_mr!(blocked_exact_portable, job.tile, job, pb),
+    }
+}
+
+/// Fused MR x NR panel: per *real* lane pair, walk the K words once,
+/// tallying the per-group level histogram inline (pad lanes and the
+/// phantom high half of an odd trailing word never reach the
+/// histogram — same convention as [`walk_groups`]).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+unsafe fn blocked_fused_panel<const MR: usize>(
+    job: &BlockedJob,
+    g: usize,
+    hist: &mut [u64; N_LEVELS],
+    ap: &[u64],
+    bp: &[u64],
+    o_base: usize,
+    d_base: usize,
+    mr_real: usize,
+    nr_real: usize,
+) {
+    let (kw, nr) = (job.kw, job.tile.nr);
+    for m in 0..mr_real {
+        for n in 0..nr_real {
+            let mut sum = 0u32;
+            for k in 0..kw {
+                let y = !(ap[k * MR + m] ^ bp[k * nr + n]);
+                let lo = (y as u32).count_ones();
+                sum += lo;
+                hist[lo as usize] += 1;
+                if 2 * k + 1 < g {
+                    let hi = ((y >> 32) as u32).count_ones();
+                    sum += hi;
+                    hist[hi as usize] += 1;
+                } else {
+                    // phantom half: popcount 0 by construction
+                    debug_assert_eq!((y >> 32).count_ones(), 0);
+                }
+            }
+            *job.out.0.add((o_base + m) * job.d + d_base + n) =
+                (2 * sum as i64 - job.beta) as f32;
+        }
+    }
+}
+
+/// The fused blocked sweep shared by the tier wrappers below.
+#[inline(always)]
+unsafe fn blocked_fused_sweep<const MR: usize>(
+    job: &BlockedJob,
+    g: usize,
+    pb: &Block,
+) -> [u64; N_LEVELS] {
+    let (kw, nr) = (job.kw, job.tile.nr);
+    let mut hist = [0u64; N_LEVELS];
+    for pd in pb.d0..pb.d1 {
+        let bp = &job.b[pd * kw * nr..(pd + 1) * kw * nr];
+        let d_base = pd * nr;
+        let nr_real = (job.d - d_base).min(nr);
+        for po in pb.o0..pb.o1 {
+            let ap = &job.a[po * kw * MR..(po + 1) * kw * MR];
+            let o_base = po * MR;
+            let mr_real = (job.o - o_base).min(MR);
+            blocked_fused_panel::<MR>(
+                job, g, &mut hist, ap, bp, o_base, d_base, mr_real,
+                nr_real,
+            );
+        }
+    }
+    hist
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+unsafe fn blocked_fused_popcnt<const MR: usize>(
+    job: &BlockedJob,
+    g: usize,
+    pb: &Block,
+) -> [u64; N_LEVELS] {
+    blocked_fused_sweep::<MR>(job, g, pb)
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn blocked_fused_neon<const MR: usize>(
+    job: &BlockedJob,
+    g: usize,
+    pb: &Block,
+) -> [u64; N_LEVELS] {
+    blocked_fused_sweep::<MR>(job, g, pb)
+}
+
+unsafe fn blocked_fused_portable<const MR: usize>(
+    job: &BlockedJob,
+    g: usize,
+    pb: &Block,
+) -> [u64; N_LEVELS] {
+    blocked_fused_sweep::<MR>(job, g, pb)
+}
+
+/// Tier + tile dispatch for one fused panel-grid block. The fused
+/// walk needs per-group (u32-half) granularity, so every tier runs
+/// the scalar-word panel under its popcount feature.
+///
+/// # Safety
+/// As [`blocked_exact_block`].
+unsafe fn blocked_fused_block(
+    kind: KernelKind,
+    job: &BlockedJob,
+    g: usize,
+    pb: &Block,
+) -> [u64; N_LEVELS] {
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 | KernelKind::Avx512 => {
+            dispatch_mr!(blocked_fused_popcnt, job.tile, job, g, pb)
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => {
+            dispatch_mr!(blocked_fused_neon, job.tile, job, g, pb)
+        }
+        _ => dispatch_mr!(blocked_fused_portable, job.tile, job, g, pb),
+    }
+}
+
+/// Register-blocked exact matmul (DESIGN.md §14): pack both operands
+/// into lane-interleaved panels held in `scratch`, then fan MR x NR
+/// register tiles over the panel grid. [`ResolvedTile::ScalarSafe`]
+/// routes to the per-word [`matmul_exact_into`] (escape hatch +
+/// baseline). Bit-identical to the word path and to
+/// [`SubMacEngine::matmul_exact`] at every tier, tile and thread
+/// count — the hot path is all-integer popcount math.
+pub fn matmul_exact_tiled_into(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    kind: KernelKind,
+    tile: ResolvedTile,
+    scratch: &mut PackScratch,
+    out: &mut [f32],
+) {
+    let t = match tile {
+        ResolvedTile::ScalarSafe => {
+            return matmul_exact_into(pool, eng, x, kind, out)
+        }
+        ResolvedTile::Blocked(t) => t,
+    };
+    assert!(t.is_valid(), "unsupported tile {}", t.name());
+    let (o, d) = (eng.w.rows, x.rows);
+    assert_eq!(x.words_per_row, eng.n_groups());
+    assert_eq!(out.len(), o * d);
+    if o == 0 || d == 0 {
+        return;
+    }
+    pack_a_block(&eng.w, 0, o, t.mr, &mut scratch.a);
+    pack_b_block(x, 0, d, t.nr, &mut scratch.b);
+    let job = BlockedJob {
+        a: &scratch.a,
+        b: &scratch.b,
+        kw: eng.w.words64_per_row,
+        o,
+        d,
+        beta: eng.beta as i64,
+        tile: t,
+        out: OutPtr(out.as_mut_ptr()),
+    };
+    let blocks =
+        work_blocks(o.div_ceil(t.mr), d.div_ceil(t.nr), pool.threads());
+    pool.for_each(blocks.len(), |i| {
+        // safety: panel blocks are disjoint (each output cell belongs
+        // to exactly one panel), `out` outlives the scoped fan-out,
+        // and SIMD kinds passed runtime detection
+        unsafe { blocked_exact_block(kind, &job, &blocks[i]) }
+    });
+}
+
+/// Allocating convenience wrapper over [`matmul_exact_tiled_into`].
+pub fn matmul_exact_tiled(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    kind: KernelKind,
+    tile: ResolvedTile,
+) -> Vec<f32> {
+    let mut scratch = PackScratch::default();
+    let mut out = vec![0.0f32; eng.w.rows * x.rows];
+    matmul_exact_tiled_into(
+        pool,
+        eng,
+        x,
+        kind,
+        tile,
+        &mut scratch,
+        &mut out,
+    );
+    out
+}
+
+/// Fused exact matmul + F_MAC histogram over the blocked path: one
+/// walk over the packed panels produces outputs *and* per-group level
+/// histograms (genuinely fused — the operands are read once).
+/// Bit-identical to [`matmul_exact_fused_into`] and the separate word
+/// paths at every tier, tile and thread count.
+pub fn matmul_exact_fused_tiled_into(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    kind: KernelKind,
+    tile: ResolvedTile,
+    scratch: &mut PackScratch,
+    out: &mut [f32],
+) -> [u64; N_LEVELS] {
+    let t = match tile {
+        ResolvedTile::ScalarSafe => {
+            return matmul_exact_fused_into(pool, eng, x, kind, out)
+        }
+        ResolvedTile::Blocked(t) => t,
+    };
+    assert!(t.is_valid(), "unsupported tile {}", t.name());
+    let (o, d) = (eng.w.rows, x.rows);
+    assert_eq!(x.words_per_row, eng.n_groups());
+    assert_eq!(out.len(), o * d);
+    if o == 0 || d == 0 {
+        return [0u64; N_LEVELS];
+    }
+    pack_a_block(&eng.w, 0, o, t.mr, &mut scratch.a);
+    pack_b_block(x, 0, d, t.nr, &mut scratch.b);
+    let g = eng.n_groups();
+    let job = BlockedJob {
+        a: &scratch.a,
+        b: &scratch.b,
+        kw: eng.w.words64_per_row,
+        o,
+        d,
+        beta: eng.beta as i64,
+        tile: t,
+        out: OutPtr(out.as_mut_ptr()),
+    };
+    let blocks =
+        work_blocks(o.div_ceil(t.mr), d.div_ceil(t.nr), pool.threads());
+    merge_hists(pool.map(blocks.len(), |i| {
+        // safety: as in `matmul_exact_tiled_into`
+        unsafe { blocked_fused_block(kind, &job, g, &blocks[i]) }
+    }))
+}
+
+/// Allocating convenience wrapper over
+/// [`matmul_exact_fused_tiled_into`].
+pub fn matmul_exact_fused_tiled(
+    pool: &ScopedPool,
+    eng: &SubMacEngine,
+    x: &BitMatrix,
+    kind: KernelKind,
+    tile: ResolvedTile,
+) -> (Vec<f32>, [u64; N_LEVELS]) {
+    let mut scratch = PackScratch::default();
+    let mut out = vec![0.0f32; eng.w.rows * x.rows];
+    let hist = matmul_exact_fused_tiled_into(
+        pool,
+        eng,
+        x,
+        kind,
+        tile,
+        &mut scratch,
+        &mut out,
+    );
+    (out, hist)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -803,15 +1647,15 @@ mod tests {
         ErrorModel::from_full(&full)
     }
 
-    /// Every tier the running CPU can execute (scalar always; the
-    /// detected SIMD tier when there is one).
+    /// Every tier the running CPU can execute, scalar first — on an
+    /// AVX-512 machine this sweeps scalar, avx2 *and* avx512.
     fn tiers() -> Vec<KernelKind> {
-        let mut ts = vec![KernelKind::Scalar];
-        let det = KernelKind::detect();
-        if det != KernelKind::Scalar {
-            ts.push(det);
-        }
-        ts
+        KernelKind::TIERS
+            .iter()
+            .rev()
+            .copied()
+            .filter(|t| t.supported())
+            .collect()
     }
 
     #[test]
@@ -987,15 +1831,231 @@ mod tests {
         );
         let auto = KernelKind::resolve("auto").unwrap();
         assert_eq!(auto, KernelKind::detect());
-        assert!(KernelKind::resolve("tpu").is_err());
-        // explicit SIMD names resolve exactly when detected
-        for simd in ["avx2", "neon"] {
+        // the unknown-name error enumerates every tier, avx512
+        // included
+        let e = KernelKind::resolve("tpu").unwrap_err().to_string();
+        for choice in KernelKind::CHOICES {
+            assert!(e.contains(choice), "{e} missing {choice}");
+        }
+        // explicit SIMD names resolve exactly when supported — on an
+        // AVX-512 machine `avx2` still resolves (clean fallback)
+        for simd in ["avx2", "avx512", "neon"] {
             match KernelKind::resolve(simd) {
-                Ok(k) => assert_eq!(k.name(), simd),
+                Ok(k) => {
+                    assert_eq!(k.name(), simd);
+                    assert!(k.supported());
+                }
                 Err(e) => {
                     assert!(e.to_string().contains(simd), "{e}")
                 }
             }
+        }
+    }
+
+    #[test]
+    fn detect_falls_back_in_tier_order() {
+        // detect() is the first supported entry of TIERS: everything
+        // ranked above the detected tier must be unsupported, and
+        // scalar is always the last resort
+        let det = KernelKind::detect();
+        assert!(det.supported());
+        for &t in KernelKind::TIERS {
+            if t == det {
+                break;
+            }
+            assert!(
+                !t.supported(),
+                "{} outranks detected {}",
+                t.name(),
+                det.name()
+            );
+        }
+        assert!(KernelKind::Scalar.supported());
+        assert_eq!(
+            *KernelKind::TIERS.last().unwrap(),
+            KernelKind::Scalar
+        );
+    }
+
+    #[test]
+    fn tile_spec_parses() {
+        assert_eq!(TileSpec::parse("auto").unwrap(), TileSpec::Auto);
+        assert_eq!(
+            TileSpec::parse("scalar-safe").unwrap(),
+            TileSpec::ScalarSafe
+        );
+        assert_eq!(
+            TileSpec::parse("4x8").unwrap(),
+            TileSpec::Fixed(Tile::new(4, 8, Tile::DEFAULT_KB))
+        );
+        assert_eq!(
+            TileSpec::parse("2x4k16").unwrap(),
+            TileSpec::Fixed(Tile::new(2, 4, 16))
+        );
+        for bad in
+            ["", "3x4", "4x3", "4x8k0", "mrxnr", "4x", "x8", "4x8x2"]
+        {
+            let e = TileSpec::parse(bad);
+            assert!(e.is_err(), "`{bad}` should not parse");
+            let msg = e.unwrap_err().to_string();
+            assert!(msg.contains("scalar-safe"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn tile_candidates_and_defaults_are_valid() {
+        for &kind in KernelKind::TIERS {
+            let def = Tile::default_for(kind);
+            assert!(def.is_valid());
+            let cands = Tile::candidates(kind);
+            assert!(
+                cands.contains(&def),
+                "{}: default {} not a candidate",
+                kind.name(),
+                def.name()
+            );
+            for t in cands {
+                assert!(t.is_valid(), "{}", t.name());
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_tiled_matches_word_and_engine() {
+        let mut rng = Rng::new(41);
+        // ragged everything: o < MR, d < NR, d not a multiple of 64,
+        // odd group counts
+        for (o, k, d) in [
+            (5, 64, 300),
+            (3, 96, 7),
+            (1, 32, 1),
+            (2, 160, 65),
+            (17, 224, 131),
+        ] {
+            let (eng, xb) = rand_engine(&mut rng, o, k, d);
+            let want = eng.matmul_exact(&xb);
+            for kind in tiers() {
+                for tile in Tile::candidates(kind) {
+                    for threads in [1usize, 3, 16] {
+                        let pool = ScopedPool::new(threads);
+                        let ctx = format!(
+                            "{} {} o={o} k={k} d={d} threads={threads}",
+                            kind.name(),
+                            tile.name()
+                        );
+                        let got = matmul_exact_tiled(
+                            &pool,
+                            &eng,
+                            &xb,
+                            kind,
+                            ResolvedTile::Blocked(tile),
+                        );
+                        assert_eq!(got, want, "blocked {ctx}");
+                        let word =
+                            matmul_exact(&pool, &eng, &xb, kind);
+                        assert_eq!(word, want, "word {ctx}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_tiled_matches_separate_paths() {
+        let mut rng = Rng::new(42);
+        for (o, k, d) in [(6, 96, 77), (2, 160, 210), (3, 32, 5)] {
+            let (eng, xb) = rand_engine(&mut rng, o, k, d);
+            let want_out = eng.matmul_exact(&xb);
+            let want_hist = eng.histogram(&xb);
+            for kind in tiers() {
+                for tile in
+                    [Tile::default_for(kind), Tile::new(8, 8, 16)]
+                {
+                    for threads in [1usize, 2, 7] {
+                        let pool = ScopedPool::new(threads);
+                        let (out, hist) = matmul_exact_fused_tiled(
+                            &pool,
+                            &eng,
+                            &xb,
+                            kind,
+                            ResolvedTile::Blocked(tile),
+                        );
+                        let ctx = format!(
+                            "{} {} o={o} threads={threads}",
+                            kind.name(),
+                            tile.name()
+                        );
+                        assert_eq!(out, want_out, "out {ctx}");
+                        assert_eq!(hist, want_hist, "hist {ctx}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_safe_tile_routes_to_word_path() {
+        let mut rng = Rng::new(43);
+        let (eng, xb) = rand_engine(&mut rng, 4, 96, 33);
+        let want = eng.matmul_exact(&xb);
+        let want_hist = eng.histogram(&xb);
+        let pool = ScopedPool::sequential();
+        for kind in tiers() {
+            assert_eq!(
+                matmul_exact_tiled(
+                    &pool,
+                    &eng,
+                    &xb,
+                    kind,
+                    ResolvedTile::ScalarSafe
+                ),
+                want,
+                "{}",
+                kind.name()
+            );
+            let (out, hist) = matmul_exact_fused_tiled(
+                &pool,
+                &eng,
+                &xb,
+                kind,
+                ResolvedTile::ScalarSafe,
+            );
+            assert_eq!(out, want, "{}", kind.name());
+            assert_eq!(hist, want_hist, "{}", kind.name());
+        }
+    }
+
+    /// Auto-skips on runners without the VPOPCNTQ extension (the CI
+    /// `cargo test avx512` step runs it everywhere; it only bites on
+    /// AVX-512 hardware).
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx512_blocked_matches_engine_when_detected() {
+        if !std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+            || !KernelKind::Avx512.supported()
+        {
+            eprintln!(
+                "skipping: avx512vpopcntdq not available on this CPU"
+            );
+            return;
+        }
+        let mut rng = Rng::new(47);
+        let (eng, xb) = rand_engine(&mut rng, 9, 288, 130);
+        let want = eng.matmul_exact(&xb);
+        let pool = ScopedPool::new(4);
+        for tile in Tile::candidates(KernelKind::Avx512) {
+            assert_eq!(
+                matmul_exact_tiled(
+                    &pool,
+                    &eng,
+                    &xb,
+                    KernelKind::Avx512,
+                    ResolvedTile::Blocked(tile),
+                ),
+                want,
+                "tile {}",
+                tile.name()
+            );
         }
     }
 }

@@ -20,6 +20,7 @@
 //! (`tests/backend.rs`).
 
 pub mod arch;
+pub mod autotune;
 pub mod kernels;
 pub mod native;
 #[cfg(feature = "xla")]

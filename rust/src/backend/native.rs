@@ -22,7 +22,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, ensure, Result};
 
 use super::arch::{self, ArchOp, FoldedSig, ModelMeta};
-use super::kernels::{self, KernelKind};
+use super::kernels::{self, KernelKind, ResolvedTile, Tile};
 use super::{fold_hash, FmacResult, InferenceBackend};
 use crate::bnn::engine::centered_pad;
 use crate::bnn::{BitMatrix, ErrorModel, SubMacEngine};
@@ -244,6 +244,9 @@ struct Exec<'p, 'm> {
     plan: &'p NativePlan,
     pool: &'p ScopedPool,
     kind: KernelKind,
+    /// Register-blocking tile for the exact matmuls (DESIGN.md §14);
+    /// `ScalarSafe` routes back to the per-word kernels.
+    tile: ResolvedTile,
     /// When false, the clean-histogram pass runs matmul and histogram
     /// as two separate walks (the pre-fusion data flow, kept for the
     /// before/after bench and as a cross-check).
@@ -275,33 +278,48 @@ impl Exec<'_, '_> {
         );
         let mut out = self.scratch.take_f32(eng.w.rows * d, 0.0);
         match self.mode {
-            Mode::Exact => match self.hist.as_deref_mut() {
-                Some(hists) if self.fused => {
-                    let part = kernels::matmul_exact_fused_into(
-                        self.pool, eng, &xb, self.kind, &mut out,
-                    );
-                    for (a, b) in
-                        hists[i].counts.iter_mut().zip(part.iter())
-                    {
-                        *a += b;
+            Mode::Exact => {
+                // the exact matmuls run register-blocked over packed
+                // panels; the panel buffers are arena-recycled like
+                // every other per-batch scratch
+                let mut ps = kernels::PackScratch {
+                    a: self.scratch.take_u64(),
+                    b: self.scratch.take_u64(),
+                };
+                match self.hist.as_deref_mut() {
+                    Some(hists) if self.fused => {
+                        let part = kernels::matmul_exact_fused_tiled_into(
+                            self.pool, eng, &xb, self.kind, self.tile,
+                            &mut ps, &mut out,
+                        );
+                        for (a, b) in
+                            hists[i].counts.iter_mut().zip(part.iter())
+                        {
+                            *a += b;
+                        }
                     }
-                }
-                Some(hists) => {
-                    let part =
-                        kernels::histogram(self.pool, eng, &xb, self.kind);
-                    for (a, b) in
-                        hists[i].counts.iter_mut().zip(part.iter())
-                    {
-                        *a += b;
+                    Some(hists) => {
+                        let part = kernels::histogram(
+                            self.pool, eng, &xb, self.kind,
+                        );
+                        for (a, b) in
+                            hists[i].counts.iter_mut().zip(part.iter())
+                        {
+                            *a += b;
+                        }
+                        kernels::matmul_exact_tiled_into(
+                            self.pool, eng, &xb, self.kind, self.tile,
+                            &mut ps, &mut out,
+                        );
                     }
-                    kernels::matmul_exact_into(
-                        self.pool, eng, &xb, self.kind, &mut out,
-                    );
+                    None => kernels::matmul_exact_tiled_into(
+                        self.pool, eng, &xb, self.kind, self.tile,
+                        &mut ps, &mut out,
+                    ),
                 }
-                None => kernels::matmul_exact_into(
-                    self.pool, eng, &xb, self.kind, &mut out,
-                ),
-            },
+                self.scratch.put_u64(ps.a);
+                self.scratch.put_u64(ps.b);
+            }
             Mode::Error { ems, seed } => {
                 if let Some(hists) = self.hist.as_deref_mut() {
                     let part =
@@ -617,6 +635,8 @@ pub struct NativeBackend {
     pool: ScopedPool,
     /// Resolved microkernel tier (`--kernel`, DESIGN.md §11).
     kind: KernelKind,
+    /// Resolved register-blocking tile (`--tile`, DESIGN.md §14).
+    tile: ResolvedTile,
     /// Fuse the clean-pass F_MAC histogram into the matmul walk
     /// (disabled only by the before/after bench).
     fused: bool,
@@ -653,9 +673,18 @@ impl NativeBackend {
         NativeBackend {
             pool,
             kind,
+            tile: ResolvedTile::Blocked(Tile::default_for(kind)),
             fused,
             plans: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Override the register-blocking tile (`--tile`): the session
+    /// passes the autotuned or explicitly requested choice here;
+    /// `ScalarSafe` is the escape hatch back to the per-word kernels.
+    pub fn with_tile(mut self, tile: ResolvedTile) -> NativeBackend {
+        self.tile = tile;
+        self
     }
 
     /// The backend's worker pool (shared with its kernels).
@@ -669,6 +698,11 @@ impl NativeBackend {
 
     pub fn kernel(&self) -> KernelKind {
         self.kind
+    }
+
+    /// The resolved register-blocking tile (recorded in point meta).
+    pub fn tile(&self) -> ResolvedTile {
+        self.tile
     }
 
     fn plan(
@@ -706,6 +740,7 @@ impl NativeBackend {
             plan: &plan,
             pool,
             kind: self.kind,
+            tile: self.tile,
             fused: self.fused,
             mode: Mode::Error {
                 ems: r.ems,
@@ -824,6 +859,7 @@ impl InferenceBackend for NativeBackend {
                 plan: &plan,
                 pool: &self.pool,
                 kind: self.kind,
+                tile: self.tile,
                 fused: self.fused,
                 mode: Mode::Error {
                     ems,
@@ -874,6 +910,7 @@ impl InferenceBackend for NativeBackend {
                 plan: &plan,
                 pool: &self.pool,
                 kind: self.kind,
+                tile: self.tile,
                 fused: self.fused,
                 mode: Mode::Exact,
                 hist: Some(&mut per),
@@ -1041,6 +1078,42 @@ mod tests {
                     .logits("vgg3_tiny", &folded, &x, 2, &ems, 3)
                     .unwrap();
                 assert_eq!(got, want, "{} fused={fused}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fmac_identical_across_tiles() {
+        // bit-identity is tile-independent: the exact (clean) pass
+        // runs register-blocked, and every tile shape — including the
+        // scalar-safe word-kernel escape hatch — must produce the
+        // same histograms and accuracy, fused and unfused
+        let folded = init_folded("vgg3_tiny").unwrap();
+        let spec = crate::data::synth::Dataset::FashionSyn.spec();
+        let want = NativeBackend::with_options(1, KernelKind::Scalar, true)
+            .with_tile(ResolvedTile::ScalarSafe)
+            .fmac("vgg3_tiny", &folded, spec.clone(), 16, 9)
+            .unwrap();
+        let kind = KernelKind::detect();
+        for tile in [
+            ResolvedTile::ScalarSafe,
+            ResolvedTile::Blocked(Tile::new(1, 1, 1)),
+            ResolvedTile::Blocked(Tile::new(2, 8, 16)),
+            ResolvedTile::Blocked(Tile::default_for(kind)),
+        ] {
+            for fused in [true, false] {
+                let be = NativeBackend::with_options(2, kind, fused)
+                    .with_tile(tile);
+                let got = be
+                    .fmac("vgg3_tiny", &folded, spec.clone(), 16, 9)
+                    .unwrap();
+                assert_eq!(
+                    got.per_matmul,
+                    want.per_matmul,
+                    "tile {} fused={fused}",
+                    tile.name()
+                );
+                assert_eq!(got.accuracy, want.accuracy);
             }
         }
     }

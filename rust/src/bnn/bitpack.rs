@@ -104,6 +104,46 @@ impl BitMatrix {
         row_group(self.row64(r), gi)
     }
 
+    /// Repack rows `r0..r1` into lane-interleaved panels for the
+    /// register-blocked kernels (DESIGN.md §14): `lanes` consecutive
+    /// rows form one panel, and within a panel storage word `k` of
+    /// every lane is contiguous —
+    /// `buf[(p * words64_per_row + k) * lanes + l]` holds word `k` of
+    /// row `r0 + p * lanes + l` — so a microkernel's K sweep walks one
+    /// contiguous span and a single vector load fetches word `k` of
+    /// all `lanes` rows at once. Lanes past `r1` in the last panel
+    /// stay zero (the kernels never store those lanes, so the value
+    /// is immaterial; zero keeps the buffer deterministic). `buf` is
+    /// cleared and resized, its capacity reused (scratch-arena
+    /// friendly).
+    pub fn pack_panels(
+        &self,
+        r0: usize,
+        r1: usize,
+        lanes: usize,
+        buf: &mut Vec<u64>,
+    ) {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        assert!(lanes >= 1);
+        let kw = self.words64_per_row;
+        let panels = (r1 - r0).div_ceil(lanes);
+        buf.clear();
+        buf.resize(panels * kw * lanes, 0u64);
+        for p in 0..panels {
+            let panel = &mut buf[p * kw * lanes..(p + 1) * kw * lanes];
+            for l in 0..lanes {
+                let r = r0 + p * lanes + l;
+                if r >= r1 {
+                    break; // tail lanes stay zero
+                }
+                let row = &self.data[r * kw..(r + 1) * kw];
+                for (k, &w) in row.iter().enumerate() {
+                    panel[k * lanes + l] = w;
+                }
+            }
+        }
+    }
+
     /// Logical +-1 value at (r, c).
     pub fn get(&self, r: usize, c: usize) -> f32 {
         let w = self.data[r * self.words64_per_row + c / 64];
@@ -209,6 +249,40 @@ mod tests {
         for c in 0..64 {
             assert_eq!(b.get(2, c), 1.0);
         }
+    }
+
+    #[test]
+    fn pack_panels_interleaves_and_zero_fills() {
+        // 5 rows x 100 cols (2 storage words), 4 lanes -> 2 panels,
+        // the second with 3 zero tail lanes
+        let vals: Vec<f32> = (0..5 * 100)
+            .map(|i| if (i * 11) % 7 < 3 { 1.0 } else { -1.0 })
+            .collect();
+        let m = BitMatrix::pack(5, 100, &vals, false);
+        let kw = m.words64_per_row;
+        let mut buf = Vec::new();
+        m.pack_panels(0, 5, 4, &mut buf);
+        assert_eq!(buf.len(), 2 * kw * 4);
+        for p in 0..2 {
+            let panel = &buf[p * kw * 4..(p + 1) * kw * 4];
+            for l in 0..4 {
+                let r = p * 4 + l;
+                for k in 0..kw {
+                    let want =
+                        if r < 5 { m.row64(r)[k] } else { 0u64 };
+                    assert_eq!(
+                        panel[k * 4 + l],
+                        want,
+                        "panel {p} lane {l} word {k}"
+                    );
+                }
+            }
+        }
+        // sub-ranges pack relative to r0, reusing the buffer
+        m.pack_panels(2, 5, 2, &mut buf);
+        assert_eq!(buf.len(), 2 * kw * 2);
+        assert_eq!(buf[0], m.row64(2)[0]);
+        assert_eq!(buf[1], m.row64(3)[0]);
     }
 
     #[test]

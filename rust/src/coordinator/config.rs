@@ -43,10 +43,18 @@ pub struct ExperimentConfig {
     pub threads: usize,
     /// Native microkernel tier: "auto" (runtime CPU detection),
     /// "scalar" (portable fallback), or an explicit SIMD tier
-    /// ("avx2"/"neon", accepted only when detected) — DESIGN.md §11.
-    /// Never changes results (kernels are bit-identical); the resolved
-    /// tier is recorded in point metadata, not cache keys.
+    /// ("avx2"/"avx512"/"neon", accepted only when detected) —
+    /// DESIGN.md §11. Never changes results (kernels are
+    /// bit-identical); the resolved tier is recorded in point
+    /// metadata, not cache keys.
     pub kernel: String,
+    /// Register-blocking tile for the exact matmuls: "auto"
+    /// (per-machine autotune, cached in `<run_dir>/autotune.json`),
+    /// an explicit "MRxNR[kKB]" (e.g. "4x8" or "4x8k32"), or
+    /// "scalar-safe" (bypass the blocked path entirely) — DESIGN.md
+    /// §14. Never changes results; the resolved tile is recorded in
+    /// point metadata, not cache keys.
+    pub tile: String,
     /// Directory for cached runs (trained weights, F_MACs, results).
     pub run_dir: String,
     /// Persist operating points to `<run_dir>/points/` (DESIGN.md §7);
@@ -73,6 +81,7 @@ impl Default for ExperimentConfig {
             backend: "auto".to_string(),
             threads: 0,
             kernel: "auto".to_string(),
+            tile: "auto".to_string(),
             run_dir: "runs".to_string(),
             point_cache: true,
             seed: 42,
@@ -122,6 +131,13 @@ impl ExperimentConfig {
             args.choice("kernel", crate::backend::kernels::KernelKind::CHOICES)?
         {
             c.kernel = kernel;
+        }
+        // validate the shape early (the session re-parses to resolve)
+        if let Some(tile) = args.validated("tile", |s| {
+            crate::backend::kernels::TileSpec::parse(s)
+                .map(|_| s.to_string())
+        })? {
+            c.tile = tile;
         }
         c.run_dir = args.str_or("run-dir", &c.run_dir);
         c.point_cache = !args.flag("no-point-cache");
@@ -218,6 +234,25 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(e.to_string().contains("sse9"), "{e}");
+    }
+
+    #[test]
+    fn tile_flag_validates_shape() {
+        let c = ExperimentConfig::from_args(&parse(&["x"])).unwrap();
+        assert_eq!(c.tile, "auto");
+        for good in ["auto", "scalar-safe", "4x8", "2x4k16"] {
+            let c = ExperimentConfig::from_args(&parse(&[
+                "x", "--tile", good,
+            ]))
+            .unwrap();
+            assert_eq!(c.tile, good);
+        }
+        let e = ExperimentConfig::from_args(&parse(&[
+            "x", "--tile", "3x5",
+        ]))
+        .unwrap_err();
+        assert!(e.to_string().contains("3x5"), "{e}");
+        assert!(e.to_string().contains("scalar-safe"), "{e}");
     }
 
     #[test]

@@ -23,8 +23,8 @@ use capmin::util::table::si;
 const KNOWN_OPTS: &[&str] = &[
     "dataset", "steps", "lr", "lr-halve-every", "train-limit",
     "eval-limit", "hist-limit", "sigma", "mc-samples", "seeds", "ks",
-    "k", "phi", "engine", "backend", "threads", "kernel", "run-dir",
-    "seed", "emit", "plans", "suite-id", "addr", "max-batch",
+    "k", "phi", "engine", "backend", "threads", "kernel", "tile",
+    "run-dir", "seed", "emit", "plans", "suite-id", "addr", "max-batch",
     "max-wait-ms",
 ];
 
@@ -112,12 +112,24 @@ common options:
                            count is recorded in point meta)
   --kernel scalar|auto     native sub-MAC microkernel tier (DESIGN.md
                            §11): auto (default) runtime-detects the
-                           CPU (AVX2+POPCNT on x86_64, NEON on
-                           aarch64), scalar forces the portable
-                           kernel; results are bit-identical either
-                           way and the resolved tier lands in point
-                           meta (explicit avx2/neon accepted when the
-                           CPU has them)
+                           CPU (AVX-512 VPOPCNTQ, then AVX2+POPCNT on
+                           x86_64, NEON on aarch64), scalar forces the
+                           portable kernel; results are bit-identical
+                           either way and the resolved tier lands in
+                           point meta (explicit avx2/avx512/neon
+                           accepted when the CPU has them)
+  --tile auto|MRxNR        register-blocking tile of the exact matmul
+                           microkernels (DESIGN.md §14): auto
+                           (default) benchmarks candidate tiles once
+                           per machine and caches the winner in
+                           <run-dir>/autotune.json; an explicit
+                           MRxNR[kKB] (e.g. 4x8 or 4x8k32) pins the
+                           tile; scalar-safe is the escape hatch that
+                           bypasses the blocked path entirely and runs
+                           the per-word kernels. Results are
+                           bit-identical for every choice; the
+                           resolved tile lands in point meta, never in
+                           cache keys
   --engine eval|evalp      jnp engine or Pallas-kernel engine artifact
                            (xla backend only)
   --run-dir DIR            cache directory (default runs/)
@@ -191,6 +203,14 @@ fn main() -> Result<()> {
                 },
                 session.config().kernel,
                 capmin::backend::kernels::KernelKind::detect().name()
+            );
+            let tile = session.tile_name();
+            println!(
+                "register-blocking tile: {} (requested `{}`; autotune \
+                 cache {})",
+                if tile.is_empty() { "-" } else { &tile },
+                session.config().tile,
+                session.store().path("autotune.json").display()
             );
             println!("native model registry:");
             for name in capmin::backend::arch::model_names() {

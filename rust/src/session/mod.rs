@@ -44,7 +44,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::analog::params::AnalogParams;
-use crate::backend::kernels::KernelKind;
+use crate::backend::autotune;
+use crate::backend::kernels::{KernelKind, ResolvedTile, TileSpec};
 use crate::backend::{BackendKind, InferenceBackend, NativeBackend};
 use crate::capmin::Fmac;
 use crate::coordinator::config::ExperimentConfig;
@@ -183,6 +184,7 @@ impl DesignSessionBuilder {
         // this CPU lacks) here rather than deep inside a query
         BackendKind::parse(&self.cfg.backend)?;
         KernelKind::resolve(&self.cfg.kernel)?;
+        TileSpec::parse(&self.cfg.tile)?;
         let store = Store::new(&self.cfg.run_dir)?;
         let points =
             PointCache::new(store.path("points"), self.cfg.point_cache);
@@ -281,17 +283,46 @@ impl DesignSession {
             .name()
     }
 
+    /// The register-blocking tile this session's config resolves to
+    /// (`"4x8k64"` / `"scalar-safe"`; empty when the backend is xla).
+    /// `--tile auto` autotunes per machine on first use, memoized in
+    /// `<run_dir>/autotune.json`. Recorded in point metadata, never in
+    /// cache keys (DESIGN.md §14).
+    pub fn tile_name(&self) -> String {
+        self.resolved_tile().map(|t| t.name()).unwrap_or_default()
+    }
+
+    fn resolved_tile(&self) -> Option<ResolvedTile> {
+        if self.backend_name() != "native" {
+            return None;
+        }
+        let spec = TileSpec::parse(&self.cfg.tile)
+            .expect("tile validated at session build");
+        let kind = KernelKind::resolve(&self.cfg.kernel)
+            .expect("kernel validated at session build");
+        Some(autotune::resolve(
+            spec,
+            kind,
+            &self.store.path("autotune.json"),
+        ))
+    }
+
     /// The inference backend, constructed on first use.
     pub fn backend(&self) -> Result<&dyn InferenceBackend> {
         if self.backend.get().is_none() {
             let b: Box<dyn InferenceBackend> = match self.backend_name()
             {
                 "xla" => self.xla_backend()?,
-                _ => Box::new(NativeBackend::with_pool(
-                    self.pool.clone(),
-                    KernelKind::resolve(&self.cfg.kernel)?,
-                    true,
-                )),
+                _ => Box::new(
+                    NativeBackend::with_pool(
+                        self.pool.clone(),
+                        KernelKind::resolve(&self.cfg.kernel)?,
+                        true,
+                    )
+                    .with_tile(self.resolved_tile().expect(
+                        "native backend implies a resolved tile",
+                    )),
+                ),
             };
             // single-threaded session facade: set cannot race
             let _ = self.backend.set(b);
@@ -678,6 +709,7 @@ impl DesignSession {
             backend: self.backend_name().to_string(),
             kernel: self.kernel_name().to_string(),
             threads: self.threads(),
+            tile: self.tile_name(),
         };
         let point = Arc::new(OperatingPoint::from_solve(
             *spec, hw, accuracy, meta,

@@ -33,6 +33,11 @@ pub struct PointMeta {
     /// unrecorded; `--threads 0` records the machine's available
     /// parallelism, never a literal 0).
     pub threads: usize,
+    /// Resolved register-blocking tile (`"4x8k64"`, `"scalar-safe"`;
+    /// empty for xla points and points written before the blocked
+    /// kernels existed) — DESIGN.md §14. Like `kernel`, provenance
+    /// only: every tile is bit-identical.
+    pub tile: String,
 }
 
 /// One hardware operating point: the answer to an
@@ -186,6 +191,7 @@ impl OperatingPoint {
                     ("backend", Json::Str(self.meta.backend.clone())),
                     ("kernel", Json::Str(self.meta.kernel.clone())),
                     ("threads", Json::Num(self.meta.threads as f64)),
+                    ("tile", Json::Str(self.meta.tile.clone())),
                 ]),
             ),
             // informational for external readers: `from_json`
@@ -301,6 +307,11 @@ impl OperatingPoint {
                     Some(Json::Num(n)) => *n as usize,
                     _ => 0,
                 },
+                // absent in pre-blocked-kernel points
+                tile: match m.get("tile") {
+                    Some(Json::Str(s)) => s.clone(),
+                    _ => String::new(),
+                },
             },
             None => PointMeta::default(),
         };
@@ -346,6 +357,7 @@ mod tests {
             backend: "native".into(),
             kernel: "avx2".into(),
             threads: 8,
+            tile: "4x8k64".into(),
         };
         let point =
             OperatingPoint::from_solve(spec, hw, Some(0.913), meta);
@@ -358,6 +370,7 @@ mod tests {
         assert_eq!(back.meta.backend, "native");
         assert_eq!(back.meta.kernel, "avx2");
         assert_eq!(back.meta.threads, 8);
+        assert_eq!(back.meta.tile, "4x8k64");
     }
 
     #[test]
@@ -397,7 +410,8 @@ mod tests {
         let text = point.to_json().to_string();
         // strip the meta field to emulate the old format
         let legacy = text.replace(
-            ",\"meta\":{\"backend\":\"\",\"kernel\":\"\",\"threads\":0}",
+            ",\"meta\":{\"backend\":\"\",\"kernel\":\"\",\"threads\":0,\
+             \"tile\":\"\"}",
             "",
         );
         assert_ne!(legacy, text, "meta field expected in JSON form");

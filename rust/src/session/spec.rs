@@ -227,6 +227,14 @@ mod tests {
         let mut scalar = native.clone();
         scalar.kernel = "scalar".into();
         assert_eq!(a.cache_key(&native), a.cache_key(&scalar));
+        // the register-blocking tile is provenance too, never a key
+        // (DESIGN.md §14)
+        let mut tiled = native.clone();
+        tiled.tile = "4x8k32".into();
+        assert_eq!(a.cache_key(&native), a.cache_key(&tiled));
+        let mut safe = native.clone();
+        safe.tile = "scalar-safe".into();
+        assert_eq!(a.cache_key(&native), a.cache_key(&safe));
         // hardware half ignores the backend entirely
         assert_eq!(a.hw_cache_key(&native), a.hw_cache_key(&xla));
     }

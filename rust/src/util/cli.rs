@@ -81,6 +81,18 @@ impl Args {
         }
     }
 
+    /// A free-form option validated through a caller-supplied parser
+    /// (e.g. `--tile 4x8k32`, whose value grammar is too open for
+    /// [`Args::choice`]): `Ok(None)` when absent, the parser's error
+    /// on a bad value.
+    pub fn validated<T>(
+        &self,
+        key: &str,
+        parse: impl FnOnce(&str) -> Result<T>,
+    ) -> Result<Option<T>> {
+        self.get(key).map(parse).transpose()
+    }
+
     /// A comma-separated list option over an enumerated set (e.g.
     /// `--emit json,csv`); empty when absent, every entry validated.
     pub fn choice_list(&self, key: &str, valid: &[&str])
@@ -217,6 +229,24 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("tsv"), "{e}");
+    }
+
+    #[test]
+    fn validated_applies_the_parser() {
+        let a = parse(&["fig8", "--tile", "4x8"]);
+        let got =
+            a.validated("tile", |s| Ok::<_, anyhow::Error>(s.len()));
+        assert_eq!(got.unwrap(), Some(3));
+        let absent = parse(&["fig8"])
+            .validated("tile", |_| Ok::<_, anyhow::Error>(0));
+        assert_eq!(absent.unwrap(), None);
+        let e = a
+            .validated("tile", |s| {
+                Err::<(), _>(anyhow!("bad tile `{s}`"))
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("4x8"), "{e}");
     }
 
     #[test]

@@ -305,6 +305,15 @@ fn session_answers_evaluated_queries_natively() {
     // the resolved kernel tier is recorded alongside it
     assert_eq!(point.meta.kernel, KernelKind::detect().name());
     assert_eq!(session.kernel_name(), KernelKind::detect().name());
+    // ... and so is the resolved register-blocking tile (DESIGN.md
+    // §14): non-empty provenance matching the session's resolution,
+    // with the `auto` measurement persisted in the run's autotune cache
+    assert!(!point.meta.tile.is_empty(), "tile missing from meta");
+    assert_eq!(point.meta.tile, session.tile_name());
+    assert!(
+        session.store().path("autotune.json").exists(),
+        "`--tile auto` must persist its measurement"
+    );
     assert!(
         session.is_untrained(ds),
         "cold store without XLA must flag the untrained fallback"

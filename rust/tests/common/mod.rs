@@ -7,16 +7,16 @@ use capmin::capmin::Fmac;
 use capmin::data::synth::Dataset;
 use capmin::session::DesignSession;
 
-/// The kernel tiers the running CPU can execute: always scalar, plus
-/// the detected SIMD tier when there is one (bit-equality sweeps run
-/// every entry).
+/// Every kernel tier the running CPU can execute — always scalar,
+/// plus each supported SIMD tier (on an AVX-512 machine that is
+/// avx512 *and* avx2; bit-equality sweeps run every entry).
 pub fn kernel_tiers() -> Vec<capmin::backend::kernels::KernelKind> {
     use capmin::backend::kernels::KernelKind;
-    let mut ts = vec![KernelKind::Scalar];
-    if KernelKind::detect() != KernelKind::Scalar {
-        ts.push(KernelKind::detect());
-    }
-    ts
+    KernelKind::TIERS
+        .iter()
+        .copied()
+        .filter(|t| t.supported())
+        .collect()
 }
 
 /// Skip guard: on an `xla` build with real artifacts present, the

@@ -283,6 +283,90 @@ fn prop_packed_kernels_equal_unpacked_dense_across_ragged_widths() {
     });
 }
 
+/// Satellite property (PR 7, DESIGN.md §14): the register-blocked
+/// packed path is bit-identical to the per-word kernels *and* the
+/// naive unpacked dense dot product across ragged shapes — packed
+/// widths that are not multiples of 64 (odd group counts), o smaller
+/// than MR, d smaller than NR — under random tiles, at every
+/// supported tier and a random thread count, fused and unfused.
+#[test]
+fn prop_blocked_tiled_equals_word_and_dense_across_ragged_shapes() {
+    use capmin::backend::kernels::{self, ResolvedTile, Tile};
+    use capmin::util::pool::ScopedPool;
+    forall("blocked == word == dense (ragged)", 40, |rng| {
+        let o = 1 + rng.below(10) as usize;
+        let groups = 1 + rng.below(8) as usize;
+        let kp = groups * 32;
+        let k = kp - rng.below(31) as usize;
+        let d = 1 + rng.below(40) as usize;
+        let mut w = vec![1.0f32; o * kp];
+        let mut x = vec![-1.0f32; d * kp];
+        for oi in 0..o {
+            for ki in 0..k {
+                w[oi * kp + ki] = rng.pm1(0.5);
+            }
+        }
+        for di in 0..d {
+            for ki in 0..k {
+                x[di * kp + ki] = rng.pm1(0.5);
+            }
+        }
+        let eng = SubMacEngine::new(o, kp, &w, k);
+        let xb = BitMatrix::pack(d, kp, &x, false);
+        let mut dense = vec![0.0f32; o * d];
+        for oi in 0..o {
+            for di in 0..d {
+                let mut dot = 0.0f32;
+                for ki in 0..k {
+                    dot += w[oi * kp + ki] * x[di * kp + ki];
+                }
+                dense[oi * d + di] = dot;
+            }
+        }
+        let lane = |rng: &mut Rng| {
+            Tile::LANES[rng.below(Tile::LANES.len() as u64) as usize]
+        };
+        let tile =
+            Tile::new(lane(rng), lane(rng), 1 + rng.below(8) as usize);
+        let blocked = ResolvedTile::Blocked(tile);
+        let pool = ScopedPool::new(1 + rng.below(8) as usize);
+        let shape = format!(
+            "tile {} o={o} k={k} kp={kp} d={d}",
+            tile.name()
+        );
+        for kind in common::kernel_tiers() {
+            let word = kernels::matmul_exact(&pool, &eng, &xb, kind);
+            assert_eq!(word, dense, "word {} {shape}", kind.name());
+            assert_eq!(
+                kernels::matmul_exact_tiled(
+                    &pool, &eng, &xb, kind, blocked
+                ),
+                dense,
+                "blocked {} {shape}",
+                kind.name()
+            );
+            let (wout, whist) =
+                kernels::matmul_exact_fused(&pool, &eng, &xb, kind);
+            let (bout, bhist) = kernels::matmul_exact_fused_tiled(
+                &pool, &eng, &xb, kind, blocked,
+            );
+            assert_eq!(wout, dense, "fused word {} {shape}", kind.name());
+            assert_eq!(
+                bout,
+                dense,
+                "fused blocked {} {shape}",
+                kind.name()
+            );
+            assert_eq!(
+                bhist,
+                whist,
+                "fused hist {} {shape}",
+                kind.name()
+            );
+        }
+    });
+}
+
 #[test]
 fn prop_error_model_decode_matches_row_distribution() {
     forall("decode ~ matrix row", 20, |rng| {
