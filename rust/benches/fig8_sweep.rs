@@ -22,6 +22,7 @@ use capmin::data::synth::Dataset;
 use capmin::runtime::{
     artifacts_dir, lit_f32, lit_u32, lit_u32_scalar, Runtime,
 };
+use capmin::analog::McSettings;
 use capmin::session::solver::solve;
 #[cfg(feature = "xla")]
 use capmin::util::rng::Rng;
@@ -42,7 +43,7 @@ fn synthetic_fmacs(n_matmuls: usize) -> Vec<capmin::capmin::Fmac> {
 fn main() {
     let p = AnalogParams::paper_calibrated();
     let fmacs = synthetic_fmacs(3);
-    let (seed, mc) = (42u64, 1000usize);
+    let (seed, mc) = (42u64, McSettings::paper(1000));
     let mut emit = Emitter::new("fig8_sweep");
 
     header("operating-point solve (per k point of Fig. 8)");

@@ -1,0 +1,142 @@
+//! Bench: the Monte-Carlo solve modes (DESIGN.md §15) — per-mode pmap
+//! wall time, the draws-at-equal-tolerance ratio the fast engine is
+//! built around, and an end-to-end cold operating-point solve
+//! fast-vs-paper. The `draw reduction (fast vs paper)` record carries
+//! the ratio in `speedup_vs_baseline`; CI gates on it staying >= 3
+//! (.github/workflows/ci.yml), so a regression in the stopping rule
+//! fails loudly rather than silently burning draws.
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, header, report, scaled, Emitter};
+use capmin::analog::capacitor::{CapacitorModel, CapacitorSolver};
+use capmin::analog::montecarlo::{McMode, McSettings, MonteCarlo};
+use capmin::analog::params::AnalogParams;
+use capmin::analog::pmap::tv_distance;
+use capmin::analog::SpikeTimeSet;
+use capmin::capmin::Fmac;
+use capmin::session::solver::solve;
+use capmin::util::rng::Rng;
+
+/// The fig8 sweep's common shape: a 14-level window at the paper's
+/// default sigma.
+const SIGMA: f64 = 0.02;
+const WINDOW: (usize, usize) = (10, 23);
+
+fn main() {
+    let p = AnalogParams::paper_calibrated().with_sigma(SIGMA);
+    let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
+    let c = solver.size_for_window(WINDOW.0, WINDOW.1);
+    let set =
+        SpikeTimeSet::new(&p, c, (WINDOW.0..=WINDOW.1).collect());
+    let mut emit = Emitter::new("mc");
+
+    header("P_map per mode (14-level window, sigma 0.02)");
+    let paper_mc = MonteCarlo::new(p);
+    let fast_mc = MonteCarlo::new(p).with_mode(McMode::Fast);
+    let analytic_mc = MonteCarlo::new(p).with_mode(McMode::Analytic);
+    let r_paper = bench("pmap paper (1000 draws/level)", 2,
+                        scaled(40), || {
+        std::hint::black_box(paper_mc.pmap(&set, &mut Rng::new(7)));
+    });
+    report(&r_paper, 1.0, "map");
+    emit.add(&r_paper, None);
+    let r_fast = bench("pmap fast (adaptive stratified)", 2,
+                       scaled(40), || {
+        std::hint::black_box(fast_mc.pmap(&set, &mut Rng::new(7)));
+    });
+    report(&r_fast, 1.0, "map");
+    emit.add(&r_fast, Some(&r_paper));
+    let r_oracle = bench("pmap analytic (closed form)", 2,
+                         scaled(200), || {
+        std::hint::black_box(analytic_mc.analytic_pmap(&set));
+    });
+    report(&r_oracle, 1.0, "map");
+    emit.add(&r_oracle, Some(&r_paper));
+
+    header("draws at equal tolerance");
+    // equal-accuracy certificate first: both sampled maps must sit
+    // within the declared per-row TV tolerance of the exact oracle,
+    // otherwise the draw ratio below is comparing different answers
+    let oracle = analytic_mc.analytic_pmap(&set);
+    let (paper_map, paper_draws) =
+        paper_mc.pmap_counted(&set, &mut Rng::new(7));
+    let (fast_map, fast_draws) =
+        fast_mc.pmap_counted(&set, &mut Rng::new(7));
+    for i in 0..set.levels.len() {
+        let tv_p = tv_distance(&paper_map.p[i], &oracle.p[i]);
+        let tv_f = tv_distance(&fast_map.p[i], &oracle.p[i]);
+        assert!(tv_p < 0.04, "paper row {i} off-oracle: TV {tv_p}");
+        assert!(tv_f < 0.02, "fast row {i} off-oracle: TV {tv_f}");
+    }
+    let ratio = paper_draws as f64 / fast_draws as f64;
+    println!(
+        "paper {paper_draws} draws, fast {fast_draws} draws -> \
+         {ratio:.2}x reduction (both within TV tolerance of the \
+         analytic oracle)"
+    );
+    // the CI gate reads this record: speedup_vs_baseline = draw ratio
+    emit.push(
+        "draw reduction (fast vs paper)",
+        1,
+        fast_draws as f64,
+        Some(ratio),
+    );
+
+    header("end-to-end cold operating-point solve (phi = 2)");
+    let fmacs = vec![
+        Fmac::gaussian(5, 2.0, 1e8),
+        Fmac::gaussian(16, 2.0, 1e8),
+        Fmac::gaussian(16, 2.0, 1e8),
+    ];
+    let solve_with = |mode| McSettings {
+        mode,
+        ..McSettings::paper(1000)
+    };
+    let r_solve_paper = bench("solve paper mode", 1, scaled(20), || {
+        std::hint::black_box(solve(
+            p,
+            42,
+            solve_with(McMode::Paper),
+            1,
+            &fmacs,
+            16,
+            SIGMA,
+            2,
+        ));
+    });
+    report(&r_solve_paper, 1.0, "solve");
+    emit.add(&r_solve_paper, None);
+    let r_solve_fast = bench("solve fast mode", 1, scaled(20), || {
+        std::hint::black_box(solve(
+            p,
+            42,
+            solve_with(McMode::Fast),
+            1,
+            &fmacs,
+            16,
+            SIGMA,
+            2,
+        ));
+    });
+    report(&r_solve_fast, 1.0, "solve");
+    emit.add(&r_solve_fast, Some(&r_solve_paper));
+    let r_solve_oracle =
+        bench("solve analytic mode", 1, scaled(20), || {
+            std::hint::black_box(solve(
+                p,
+                42,
+                solve_with(McMode::Analytic),
+                1,
+                &fmacs,
+                16,
+                SIGMA,
+                2,
+            ));
+        });
+    report(&r_solve_oracle, 1.0, "solve");
+    emit.add(&r_solve_oracle, Some(&r_solve_paper));
+
+    emit.write();
+}

@@ -21,7 +21,7 @@ pub mod rc;
 
 pub use capacitor::{CapacitorModel, CapacitorSolver};
 pub use cost::CostVector;
-pub use montecarlo::MonteCarlo;
+pub use montecarlo::{McMode, McSettings, MonteCarlo};
 pub use neuron::SpikeTimeSet;
 pub use params::AnalogParams;
-pub use pmap::Pmap;
+pub use pmap::{tv_distance, Pmap};

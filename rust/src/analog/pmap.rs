@@ -110,6 +110,17 @@ impl Pmap {
     }
 }
 
+/// Total-variation distance between two discrete distributions over the
+/// same support: `0.5 * sum_i |a_i - b_i|`. The statistical-equivalence
+/// metric of the Monte-Carlo mode pins (DESIGN.md §15): two P_map rows
+/// are "the same answer" when their TV distance is inside the solver
+/// tolerance, which is how the fast, paper and analytic modes are held
+/// together now that they are no longer bit-identical.
+pub fn tv_distance(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    0.5 * a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>()
+}
+
 /// Row-CDF (f32, 33x33 flattened row-major) + decoded level values, the
 /// exact runtime-input format of the AOT eval artifacts.
 pub fn to_cdf_inputs(full: &[Vec<f64>]) -> (Vec<f32>, Vec<f32>) {

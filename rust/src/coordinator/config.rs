@@ -22,8 +22,18 @@ pub struct ExperimentConfig {
     pub hist_limit: usize,
     /// Relative current variation sigma (paper's process variation).
     pub sigma_rel: f64,
-    /// Monte-Carlo samples per spike time (paper: 1000).
+    /// Monte-Carlo samples per spike time (paper: 1000). In `--mc
+    /// fast` this is the per-level draw budget cap.
     pub mc_samples: usize,
+    /// Monte-Carlo solve mode: "paper" (fixed-draw Sec. IV-C),
+    /// "fast" (stratified antithetic draws + Wilson early stopping),
+    /// or "analytic" (closed-form oracle, zero draws) — DESIGN.md
+    /// §15. Part of the hw cache key (modes agree statistically, not
+    /// bitwise).
+    pub mc_mode: String,
+    /// Fast-mode stopping tolerance: target per-bucket 95% Wilson
+    /// half-width (also folded into the hw key in fast mode).
+    pub mc_tol: f64,
     /// k values of the Fig. 8 sweep.
     pub ks: Vec<usize>,
     /// Seeds for variation runs (paper: average of 3).
@@ -75,6 +85,8 @@ impl Default for ExperimentConfig {
             hist_limit: 512,
             sigma_rel: 0.02,
             mc_samples: 1000,
+            mc_mode: "paper".to_string(),
+            mc_tol: crate::analog::montecarlo::MC_DEFAULT_TOL,
             ks: vec![32, 28, 24, 20, 18, 16, 14, 12, 10, 8, 6, 5],
             n_seeds: 3,
             engine: "eval".to_string(),
@@ -118,6 +130,18 @@ impl ExperimentConfig {
         c.hist_limit = args.usize_or("hist-limit", c.hist_limit);
         c.sigma_rel = args.f64_or("sigma", c.sigma_rel);
         c.mc_samples = args.usize_or("mc-samples", c.mc_samples);
+        if let Some(mode) =
+            args.choice("mc", crate::analog::montecarlo::McMode::CHOICES)?
+        {
+            c.mc_mode = mode;
+        }
+        c.mc_tol = args.f64_or("mc-tol", c.mc_tol);
+        ensure!(
+            c.mc_tol > 0.0 && c.mc_tol < 0.5,
+            "bad --mc-tol `{}`: expected a probability half-width in \
+             (0, 0.5)",
+            c.mc_tol
+        );
         c.n_seeds = args.usize_or("seeds", c.n_seeds);
         if let Some(engine) = args.choice("engine", &["eval", "evalp"])?
         {
@@ -165,6 +189,21 @@ impl ExperimentConfig {
             ensure!(!c.ks.is_empty(), "--ks must list at least one k");
         }
         Ok(c)
+    }
+
+    /// The Monte-Carlo knob bundle the solver consumes. Errors only on
+    /// an invalid `mc_mode` string (CLI paths validate at parse time;
+    /// this covers hand-built configs).
+    pub fn mc_settings(
+        &self,
+    ) -> Result<crate::analog::montecarlo::McSettings> {
+        Ok(crate::analog::montecarlo::McSettings {
+            mode: crate::analog::montecarlo::McMode::parse(
+                &self.mc_mode,
+            )?,
+            samples: self.mc_samples,
+            tol: self.mc_tol,
+        })
     }
 }
 
@@ -253,6 +292,34 @@ mod tests {
         .unwrap_err();
         assert!(e.to_string().contains("3x5"), "{e}");
         assert!(e.to_string().contains("scalar-safe"), "{e}");
+    }
+
+    #[test]
+    fn mc_flag_validates_choices_and_tol() {
+        use crate::analog::montecarlo::{McMode, MC_DEFAULT_TOL};
+        let c = ExperimentConfig::from_args(&parse(&["x"])).unwrap();
+        assert_eq!(c.mc_mode, "paper");
+        assert_eq!(c.mc_tol, MC_DEFAULT_TOL);
+        let s = c.mc_settings().unwrap();
+        assert_eq!(s.mode, McMode::Paper);
+        assert_eq!(s.samples, 1000);
+        let c = ExperimentConfig::from_args(&parse(&[
+            "x", "--mc", "fast", "--mc-tol", "0.02",
+        ]))
+        .unwrap();
+        assert_eq!(c.mc_mode, "fast");
+        assert_eq!(c.mc_tol, 0.02);
+        assert_eq!(c.mc_settings().unwrap().mode, McMode::Fast);
+        let e = ExperimentConfig::from_args(&parse(&[
+            "x", "--mc", "spice",
+        ]))
+        .unwrap_err();
+        assert!(e.to_string().contains("spice"), "{e}");
+        let e = ExperimentConfig::from_args(&parse(&[
+            "x", "--mc-tol", "0.7",
+        ]))
+        .unwrap_err();
+        assert!(e.to_string().contains("0.7"), "{e}");
     }
 
     #[test]

@@ -52,12 +52,11 @@ pub fn hw_config_global(
     let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
     let c = solver.size_for_window(w.q_lo, w.q_hi);
     let set = SpikeTimeSet::new(&p, c, w.levels());
-    let mc = MonteCarlo::new(p).with_samples(cfg.mc_samples);
-    let full = if sigma == 0.0 {
-        mc.clean_map(&set)
-    } else {
-        mc.full_map(&set, &mut Rng::new(cfg.seed ^ 0xAB1A))
-    };
+    let mc = MonteCarlo::new(p).with_settings(
+        cfg.mc_settings().expect("mc mode validated at session build"),
+    );
+    // sigma == 0 short-circuits inside full_map to the exact clean map
+    let full = mc.full_map(&set, &mut Rng::new(cfg.seed ^ 0xAB1A));
     let em = ErrorModel::from_full(&full);
     vec![em; n_mat]
 }
@@ -153,7 +152,7 @@ impl ExperimentPlan for AblationPlan {
         let (lo, hi) = (9usize, 24usize);
         let c = solver.size_for_window(lo, hi);
         let set = SpikeTimeSet::new(&p, c, (lo..=hi).collect());
-        let mc = MonteCarlo::new(p).with_samples(cfg.mc_samples);
+        let mc = MonteCarlo::new(p).with_settings(cfg.mc_settings()?);
         // the baseline P_map is phi-independent: extract it once and
         // clone per merge depth
         let pm = mc.pmap(&set, &mut Rng::new(11));

@@ -22,10 +22,10 @@ use capmin::util::table::si;
 /// errors with this list (util::cli::Args::reject_unknown).
 const KNOWN_OPTS: &[&str] = &[
     "dataset", "steps", "lr", "lr-halve-every", "train-limit",
-    "eval-limit", "hist-limit", "sigma", "mc-samples", "seeds", "ks",
-    "k", "phi", "engine", "backend", "threads", "kernel", "tile",
-    "run-dir", "seed", "emit", "plans", "suite-id", "addr", "max-batch",
-    "max-wait-ms",
+    "eval-limit", "hist-limit", "sigma", "mc-samples", "mc", "mc-tol",
+    "seeds", "ks", "k", "phi", "engine", "backend", "threads", "kernel",
+    "tile", "run-dir", "seed", "emit", "plans", "suite-id", "addr",
+    "max-batch", "max-wait-ms",
 ];
 
 /// Every bare `--flag`.
@@ -100,6 +100,21 @@ common options:
   --steps N --lr F --train-limit N --eval-limit N --hist-limit N
   --sigma F --mc-samples N --seeds N --ks 32,28,...
   --k N --phi N --no-eval  (point command)
+  --mc paper|fast|analytic Monte-Carlo solve mode (DESIGN.md §15):
+                           paper (default) draws --mc-samples i.i.d.
+                           samples per level (Sec. IV-C); fast uses
+                           stratified antithetic draws with per-level
+                           early stopping — typically >=3x fewer draws
+                           at equal map accuracy; analytic evaluates
+                           the closed-form normal-CDF oracle with zero
+                           draws. Modes agree statistically (TV
+                           distance under tolerance), not bitwise, so
+                           the mode is part of the point cache key;
+                           the mode + draws actually used land in
+                           point meta
+  --mc-tol F               fast-mode stopping tolerance: target 95%
+                           Wilson half-width per bucket probability
+                           (default 0.01; smaller = more draws)
   --backend native|xla|auto  inference backend (DESIGN.md §9): native =
                            host sub-MAC engine, no XLA required; xla =
                            AOT artifacts via PJRT (needs the xla cargo

@@ -64,13 +64,20 @@ pub struct SuiteOutcome {
 fn config_key(cfg: &ExperimentConfig) -> String {
     let ks: Vec<String> =
         cfg.ks.iter().map(|k| k.to_string()).collect();
+    // fast mode keys on its tolerance too; paper/analytic ignore it
+    let mode = if cfg.mc_mode == "fast" {
+        format!("fast@{:e}", cfg.mc_tol)
+    } else {
+        cfg.mc_mode.clone()
+    };
     hex16(
-        // v2: Monte-Carlo chunked-draw schedule (analog::montecarlo)
-        // changed every sigma>0 solve — pre-chunking manifests must
-        // not restore
+        // v3: Monte-Carlo solve *mode* became key material (the
+        // paper/fast/analytic engines agree statistically, not
+        // bitwise); v2 was the chunked-draw schedule change — neither
+        // era's manifests may restore across the boundary
         format!(
-            "v2|steps{}|lr{:e}|lrh{}|tl{}|el{}|hl{}|\
-             sigma{:e}|mc{}|ks{}|seeds{}|engine{}|be{}|seed{}",
+            "v3|steps{}|lr{:e}|lrh{}|tl{}|el{}|hl{}|\
+             sigma{:e}|mc{}|mode{}|ks{}|seeds{}|engine{}|be{}|seed{}",
             cfg.train_steps,
             cfg.lr0,
             cfg.lr_halve_every,
@@ -79,6 +86,7 @@ fn config_key(cfg: &ExperimentConfig) -> String {
             cfg.hist_limit,
             cfg.sigma_rel,
             cfg.mc_samples,
+            mode,
             ks.join(","),
             cfg.n_seeds,
             cfg.engine,

@@ -279,9 +279,9 @@ fn reply_head(id: f64, ty: &str) -> Vec<(&'static str, Json)> {
 
 /// Reply to a `Point` request: the operating point's headline numbers
 /// plus its cache key (clients can find the full JSON under
-/// `<run-dir>/points/<key>.json`) and its hardware cost vector
-/// (DESIGN.md §13) — an additive field, so pre-cost clients keep
-/// working untouched.
+/// `<run-dir>/points/<key>.json`), its hardware cost vector
+/// (DESIGN.md §13) and its Monte-Carlo provenance (DESIGN.md §15) —
+/// additive fields, so older clients keep working untouched.
 pub fn point_response(id: f64, key: &str, p: &OperatingPoint) -> Json {
     let w = p.peak_window();
     let mut fields = reply_head(id, "point");
@@ -309,6 +309,13 @@ pub fn point_response(id: f64, key: &str, p: &OperatingPoint) -> Json {
             },
         ),
         ("cost", p.cost.to_json()),
+        (
+            "mc",
+            obj(vec![
+                ("mode", Json::Str(p.meta.mc_mode.clone())),
+                ("draws", Json::Num(p.meta.mc_draws as f64)),
+            ]),
+        ),
     ]);
     obj(fields)
 }

@@ -120,7 +120,7 @@ mod tests {
         let hw = solve(
             AnalogParams::paper_calibrated(),
             1,
-            50,
+            crate::analog::montecarlo::McSettings::paper(50),
             1,
             &[Fmac::gaussian(16, 2.0, 1e8)],
             k,

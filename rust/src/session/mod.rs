@@ -185,6 +185,8 @@ impl DesignSessionBuilder {
         BackendKind::parse(&self.cfg.backend)?;
         KernelKind::resolve(&self.cfg.kernel)?;
         TileSpec::parse(&self.cfg.tile)?;
+        // also covers hand-built configs with a typo'd mc_mode
+        self.cfg.mc_settings()?;
         let store = Store::new(&self.cfg.run_dir)?;
         let points =
             PointCache::new(store.path("points"), self.cfg.point_cache);
@@ -509,7 +511,7 @@ impl DesignSession {
             &self.pool,
             self.params(),
             self.cfg.seed,
-            self.cfg.mc_samples,
+            self.cfg.mc_settings()?,
             &per_fmac,
             spec.k,
             spec.sigma,
@@ -573,12 +575,13 @@ impl DesignSession {
             hkey: String,
             base: AnalogParams,
             seed: u64,
-            mc_samples: usize,
+            mc: crate::analog::montecarlo::McSettings,
             per_fmac: Vec<Fmac>,
             k: usize,
             sigma: f64,
             phi: usize,
         }
+        let mc = self.cfg.mc_settings()?;
         let mut jobs: Vec<Job> = vec![];
         let mut queued: HashSet<String> = HashSet::new();
         for (i, spec) in specs.iter().enumerate() {
@@ -598,7 +601,7 @@ impl DesignSession {
                 hkey: hkeys[i].clone(),
                 base: self.params(),
                 seed: self.cfg.seed,
-                mc_samples: self.cfg.mc_samples,
+                mc,
                 per_fmac,
                 k: spec.k,
                 sigma: spec.sigma,
@@ -621,7 +624,7 @@ impl DesignSession {
                     let hw = solver::solve(
                         j.base,
                         j.seed,
-                        j.mc_samples,
+                        j.mc,
                         per_job,
                         &j.per_fmac,
                         j.k,
@@ -710,6 +713,8 @@ impl DesignSession {
             kernel: self.kernel_name().to_string(),
             threads: self.threads(),
             tile: self.tile_name(),
+            mc_mode: self.cfg.mc_mode.clone(),
+            mc_draws: hw.mc_draws,
         };
         let point = Arc::new(OperatingPoint::from_solve(
             *spec, hw, accuracy, meta,

@@ -38,6 +38,18 @@ pub struct PointMeta {
     /// kernels existed) — DESIGN.md §14. Like `kernel`, provenance
     /// only: every tile is bit-identical.
     pub tile: String,
+    /// Monte-Carlo solve mode that produced the error models
+    /// ("paper"/"fast"/"analytic"; empty for points written before
+    /// the mode knob existed) — DESIGN.md §15. Unlike the other meta
+    /// fields the mode *does* change results, but it is key material
+    /// through the spec's hw material (v3), not through meta; here it
+    /// is recorded for human readers of the point files.
+    pub mc_mode: String,
+    /// Normal draws the solve actually consumed (0 for analytic /
+    /// sigma = 0 solves and for points written before draw
+    /// accounting). Data-dependent under fast mode's early stopping —
+    /// which is exactly why it is provenance and never key material.
+    pub mc_draws: u64,
 }
 
 /// One hardware operating point: the answer to an
@@ -192,6 +204,8 @@ impl OperatingPoint {
                     ("kernel", Json::Str(self.meta.kernel.clone())),
                     ("threads", Json::Num(self.meta.threads as f64)),
                     ("tile", Json::Str(self.meta.tile.clone())),
+                    ("mc_mode", Json::Str(self.meta.mc_mode.clone())),
+                    ("mc_draws", Json::Num(self.meta.mc_draws as f64)),
                 ]),
             ),
             // informational for external readers: `from_json`
@@ -312,6 +326,15 @@ impl OperatingPoint {
                     Some(Json::Str(s)) => s.clone(),
                     _ => String::new(),
                 },
+                // absent in pre-mc-mode points
+                mc_mode: match m.get("mc_mode") {
+                    Some(Json::Str(s)) => s.clone(),
+                    _ => String::new(),
+                },
+                mc_draws: match m.get("mc_draws") {
+                    Some(Json::Num(n)) => *n as u64,
+                    _ => 0,
+                },
             },
             None => PointMeta::default(),
         };
@@ -340,6 +363,7 @@ mod tests {
     use super::*;
     use crate::analog::params::AnalogParams;
     use crate::capmin::Fmac;
+    use crate::analog::montecarlo::McSettings;
     use crate::data::synth::Dataset;
     use crate::session::solver::solve;
 
@@ -351,13 +375,25 @@ mod tests {
         let spec =
             OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 2)
                 .with_eval(7, 3);
-        let hw =
-            solve(p, 42, 100, 1, &fmacs, spec.k, spec.sigma, spec.phi);
+        let hw = solve(
+            p,
+            42,
+            McSettings::paper(100),
+            1,
+            &fmacs,
+            spec.k,
+            spec.sigma,
+            spec.phi,
+        );
+        let draws = hw.mc_draws;
+        assert!(draws > 0, "sigma > 0 paper solve consumes draws");
         let meta = PointMeta {
             backend: "native".into(),
             kernel: "avx2".into(),
             threads: 8,
             tile: "4x8k64".into(),
+            mc_mode: "paper".into(),
+            mc_draws: draws,
         };
         let point =
             OperatingPoint::from_solve(spec, hw, Some(0.913), meta);
@@ -371,6 +407,8 @@ mod tests {
         assert_eq!(back.meta.kernel, "avx2");
         assert_eq!(back.meta.threads, 8);
         assert_eq!(back.meta.tile, "4x8k64");
+        assert_eq!(back.meta.mc_mode, "paper");
+        assert_eq!(back.meta.mc_draws, draws);
     }
 
     #[test]
@@ -378,7 +416,16 @@ mod tests {
         let p = AnalogParams::paper_calibrated();
         let fmacs = vec![Fmac::gaussian(16, 2.0, 1e8)];
         let spec = OperatingPointSpec::new(Dataset::KmnistSyn, 16, 0.0, 0);
-        let hw = solve(p, 1, 50, 1, &fmacs, spec.k, spec.sigma, spec.phi);
+        let hw = solve(
+            p,
+            1,
+            McSettings::paper(50),
+            1,
+            &fmacs,
+            spec.k,
+            spec.sigma,
+            spec.phi,
+        );
         let point = OperatingPoint::from_solve(
             spec,
             hw,
@@ -400,7 +447,16 @@ mod tests {
         let p = AnalogParams::paper_calibrated();
         let fmacs = vec![Fmac::gaussian(16, 2.0, 1e8)];
         let spec = OperatingPointSpec::new(Dataset::KmnistSyn, 10, 0.0, 0);
-        let hw = solve(p, 1, 50, 1, &fmacs, spec.k, spec.sigma, spec.phi);
+        let hw = solve(
+            p,
+            1,
+            McSettings::paper(50),
+            1,
+            &fmacs,
+            spec.k,
+            spec.sigma,
+            spec.phi,
+        );
         let point = OperatingPoint::from_solve(
             spec,
             hw,
@@ -411,7 +467,7 @@ mod tests {
         // strip the meta field to emulate the old format
         let legacy = text.replace(
             ",\"meta\":{\"backend\":\"\",\"kernel\":\"\",\"threads\":0,\
-             \"tile\":\"\"}",
+             \"tile\":\"\",\"mc_mode\":\"\",\"mc_draws\":0}",
             "",
         );
         assert_ne!(legacy, text, "meta field expected in JSON form");
@@ -430,7 +486,16 @@ mod tests {
         let fmacs =
             vec![Fmac::gaussian(5, 2.0, 1e8), Fmac::gaussian(16, 2.0, 1e8)];
         let spec = OperatingPointSpec::new(Dataset::CifarSyn, 12, 0.02, 2);
-        let hw = solve(p, 3, 50, 1, &fmacs, spec.k, spec.sigma, spec.phi);
+        let hw = solve(
+            p,
+            3,
+            McSettings::paper(50),
+            1,
+            &fmacs,
+            spec.k,
+            spec.sigma,
+            spec.phi,
+        );
         let point = OperatingPoint::from_solve(
             spec,
             hw,

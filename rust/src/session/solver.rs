@@ -8,7 +8,7 @@
 //! dominates the fig8 / sigma-sweep wall time).
 
 use crate::analog::capacitor::{CapacitorModel, CapacitorSolver};
-use crate::analog::montecarlo::MonteCarlo;
+use crate::analog::montecarlo::{McSettings, MonteCarlo};
 use crate::analog::neuron::SpikeTimeSet;
 use crate::analog::params::AnalogParams;
 use crate::analog::pmap::Pmap;
@@ -31,6 +31,11 @@ pub struct HwSolve {
     pub sets: Vec<SpikeTimeSet>,
     /// Error model per matmul (the eval artifacts' runtime input).
     pub ems: Vec<ErrorModel>,
+    /// Normal draws the Monte-Carlo stages actually consumed, summed
+    /// over every pmap/full_map of the solve — provenance recorded in
+    /// `PointMeta` (never cache-key material; fast mode's adaptive
+    /// stopping makes it data-dependent).
+    pub mc_draws: u64,
 }
 
 impl HwSolve {
@@ -60,20 +65,21 @@ impl HwSolve {
 /// window (largest q_hi) — lower windows have wider time gaps and
 /// ride along for free. `phi > 0` applies CapMin-V merging to each
 /// window (clamped to its size). `sigma = 0` yields the
-/// deterministic Eq.-4 clipping maps.
+/// deterministic Eq.-4 clipping maps (exactly, with zero draws, in
+/// every [`McSettings::mode`]).
 ///
-/// `seed`, `mc_samples` and `threads` come from the session's
+/// `seed`, `mc` and `threads` come from the session's
 /// `ExperimentConfig`; the per-matmul MC streams derive
-/// deterministically from (seed, matmul index, sample chunk) alone,
-/// so the result is independent of which thread runs the solve *and*
-/// of `threads` (the Monte-Carlo fan-out over (level, chunk) work
-/// items — pass 1 when the caller already parallelizes across
-/// solves).
+/// deterministically from (seed, matmul index, sample chunk / round)
+/// alone, so within a mode the result is independent of which thread
+/// runs the solve *and* of `threads` (pass 1 when the caller already
+/// parallelizes across solves). Across modes the maps agree
+/// statistically (TV distance under tolerance), not bitwise.
 #[allow(clippy::too_many_arguments)]
 pub fn solve(
     base: AnalogParams,
     seed: u64,
-    mc_samples: usize,
+    mc: McSettings,
     threads: usize,
     per_fmac: &[Fmac],
     k: usize,
@@ -85,7 +91,7 @@ pub fn solve(
     } else {
         crate::util::pool::ScopedPool::new(threads)
     };
-    solve_on(&pool, base, seed, mc_samples, per_fmac, k, sigma, phi)
+    solve_on(&pool, base, seed, mc, per_fmac, k, sigma, phi)
 }
 
 /// [`solve`] on a caller-supplied pool: a long-running session (or
@@ -96,7 +102,7 @@ pub fn solve_on(
     pool: &crate::util::pool::ScopedPool,
     base: AnalogParams,
     seed: u64,
-    mc_samples: usize,
+    mc: McSettings,
     per_fmac: &[Fmac],
     k: usize,
     sigma: f64,
@@ -113,31 +119,32 @@ pub fn solve_on(
         .map(|w| solver.size_for_window(w.q_lo, w.q_hi))
         .fold(0.0f64, f64::max);
     let mc = MonteCarlo::new(p)
-        .with_samples(mc_samples)
+        .with_settings(mc)
         .with_pool(pool.clone());
     let mut sets = Vec::with_capacity(windows.len());
     let mut ems = Vec::with_capacity(windows.len());
+    let mut mc_draws = 0u64;
     for (i, w) in windows.iter().enumerate() {
         let base_set = SpikeTimeSet::new(&p, c, w.levels());
         let levels = if phi > 0 {
-            let pmap: Pmap = mc.pmap(
+            let (pmap, d): (Pmap, u64) = mc.pmap_counted(
                 &base_set,
                 &mut Rng::new(seed ^ 0x5107 ^ i as u64),
             );
+            mc_draws += d;
             let res = capmin_v(pmap, phi.min(w.k - 1));
             res.levels
         } else {
             w.levels()
         };
         let set = SpikeTimeSet::new(&p, c, levels);
-        let full = if sigma == 0.0 {
-            mc.clean_map(&set)
-        } else {
-            mc.full_map(
-                &set,
-                &mut Rng::new(seed ^ 0x4D43 ^ (i as u64) << 8),
-            )
-        };
+        // sigma == 0 short-circuits inside full_map_counted to the
+        // exact clean map with zero draws
+        let (full, d) = mc.full_map_counted(
+            &set,
+            &mut Rng::new(seed ^ 0x4D43 ^ (i as u64) << 8),
+        );
+        mc_draws += d;
         ems.push(ErrorModel::from_full(&full));
         sets.push(set);
     }
@@ -146,25 +153,34 @@ pub fn solve_on(
         windows,
         sets,
         ems,
+        mc_draws,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::analog::montecarlo::McMode;
 
     #[test]
     fn solve_is_deterministic_across_thread_counts() {
         let p = AnalogParams::paper_calibrated();
         let fmacs =
             vec![Fmac::gaussian(5, 2.0, 1e8), Fmac::gaussian(16, 2.0, 1e8)];
-        let a = solve(p, 42, 200, 1, &fmacs, 14, 0.02, 0);
-        let b = solve(p, 42, 200, 2, &fmacs, 14, 0.02, 0);
-        assert_eq!(a.c, b.c);
-        assert_eq!(a.windows, b.windows);
-        for (x, y) in a.ems.iter().zip(b.ems.iter()) {
-            assert_eq!(x.cdf, y.cdf);
-            assert_eq!(x.vals, y.vals);
+        for mode in [McMode::Paper, McMode::Fast, McMode::Analytic] {
+            let mc = McSettings {
+                mode,
+                ..McSettings::paper(200)
+            };
+            let a = solve(p, 42, mc, 1, &fmacs, 14, 0.02, 0);
+            let b = solve(p, 42, mc, 2, &fmacs, 14, 0.02, 0);
+            assert_eq!(a.c, b.c);
+            assert_eq!(a.windows, b.windows);
+            assert_eq!(a.mc_draws, b.mc_draws, "{mode:?}");
+            for (x, y) in a.ems.iter().zip(b.ems.iter()) {
+                assert_eq!(x.cdf, y.cdf, "{mode:?}");
+                assert_eq!(x.vals, y.vals, "{mode:?}");
+            }
         }
     }
 
@@ -173,7 +189,7 @@ mod tests {
         let p = AnalogParams::paper_calibrated();
         let fmacs =
             vec![Fmac::gaussian(5, 2.0, 1e8), Fmac::gaussian(16, 2.0, 1e8)];
-        let hw = solve(p, 42, 100, 1, &fmacs, 10, 0.0, 0);
+        let hw = solve(p, 42, McSettings::paper(100), 1, &fmacs, 10, 0.0, 0);
         let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
         let w = hw.peak_window();
         assert_eq!(hw.c, solver.size_for_window(w.q_lo, w.q_hi));
@@ -184,8 +200,38 @@ mod tests {
     fn phi_thins_the_readout() {
         let p = AnalogParams::paper_calibrated();
         let fmacs = vec![Fmac::gaussian(16, 2.0, 1e8)];
-        let hw = solve(p, 42, 200, 1, &fmacs, 16, 0.02, 2);
+        let hw = solve(p, 42, McSettings::paper(200), 1, &fmacs, 16, 0.02, 2);
         assert_eq!(hw.windows[0].k, 16);
         assert_eq!(hw.sets[0].levels.len(), 14);
+    }
+
+    #[test]
+    fn sigma_zero_solve_consumes_no_draws() {
+        let p = AnalogParams::paper_calibrated();
+        let fmacs = vec![Fmac::gaussian(16, 2.0, 1e8)];
+        let hw = solve(p, 42, McSettings::paper(100), 1, &fmacs, 10, 0.0, 0);
+        assert_eq!(hw.mc_draws, 0);
+    }
+
+    #[test]
+    fn draw_accounting_orders_analytic_fast_paper() {
+        let p = AnalogParams::paper_calibrated();
+        let fmacs = vec![Fmac::gaussian(16, 2.0, 1e8)];
+        let draws = |mode| {
+            let mc = McSettings {
+                mode,
+                ..McSettings::paper(1000)
+            };
+            solve(p, 42, mc, 1, &fmacs, 14, 0.02, 2).mc_draws
+        };
+        let paper = draws(McMode::Paper);
+        let fast = draws(McMode::Fast);
+        let analytic = draws(McMode::Analytic);
+        assert_eq!(analytic, 0);
+        assert!(fast > 0);
+        assert!(
+            paper as f64 / fast as f64 >= 3.0,
+            "paper {paper} vs fast {fast}"
+        );
     }
 }

@@ -63,16 +63,25 @@ impl OperatingPointSpec {
 
     /// Canonical material for the *hardware* half of the query:
     /// everything that can change the solve — the F_MACs (via the
-    /// training knobs), the MC scale, the base seed, and the spec's
-    /// hardware axes — but not the eval settings. The `v2` prefix is
-    /// the Monte-Carlo draw-schedule version: v2 chunks each level's
-    /// samples into independently-seeded `MC_CHUNK`-draw streams
-    /// (`analog::montecarlo`), so v1 points (whole-level streams) can
-    /// never replay as v2 answers.
+    /// training knobs), the MC scale and mode, the base seed, and the
+    /// spec's hardware axes — but not the eval settings. The `v3`
+    /// prefix is the Monte-Carlo draw-schedule version: v2 chunked
+    /// each level's samples into independently-seeded `MC_CHUNK`-draw
+    /// streams; v3 adds the solve mode (`analog::montecarlo::McMode`)
+    /// as key material — paper/fast/analytic maps agree statistically
+    /// but not bitwise, so points from one mode never replay as
+    /// another's. Fast mode also keys on its stopping tolerance; the
+    /// draw count a fast solve *actually* used is data-dependent and
+    /// deliberately excluded (it is provenance in `PointMeta`).
     fn hw_material(&self, cfg: &ExperimentConfig) -> String {
+        let mode = if cfg.mc_mode == "fast" {
+            format!("fast@{:e}", cfg.mc_tol)
+        } else {
+            cfg.mc_mode.clone()
+        };
         format!(
-            "v2|{}|k{}|sigma{:e}|phi{}|steps{}|lr{:e}|lrh{}|tl{}|hl{}|\
-             mc{}|seed{}",
+            "v3|{}|k{}|sigma{:e}|phi{}|steps{}|lr{:e}|lrh{}|tl{}|hl{}|\
+             mc{}|mode{}|seed{}",
             self.dataset.spec().name,
             self.k,
             self.sigma,
@@ -83,6 +92,7 @@ impl OperatingPointSpec {
             cfg.train_limit,
             cfg.hist_limit,
             cfg.mc_samples,
+            mode,
             cfg.seed,
         )
     }
@@ -209,6 +219,29 @@ mod tests {
         // stable across calls
         assert_eq!(a.cache_key(&cfg), a.cache_key(&cfg));
         assert_eq!(a.cache_key(&cfg).len(), 16);
+    }
+
+    #[test]
+    fn mc_mode_is_key_material_but_draw_tallies_are_not() {
+        let paper = ExperimentConfig::default();
+        let a = OperatingPointSpec::new(Dataset::FashionSyn, 14, 0.02, 0);
+        let mut fast = paper.clone();
+        fast.mc_mode = "fast".into();
+        let mut analytic = paper.clone();
+        analytic.mc_mode = "analytic".into();
+        // each mode keys separately (maps agree statistically, not
+        // bitwise — stale points must never replay across modes)
+        assert_ne!(a.hw_cache_key(&paper), a.hw_cache_key(&fast));
+        assert_ne!(a.hw_cache_key(&paper), a.hw_cache_key(&analytic));
+        assert_ne!(a.hw_cache_key(&fast), a.hw_cache_key(&analytic));
+        // the fast stopping tolerance changes the answer -> keys
+        let mut loose = fast.clone();
+        loose.mc_tol = 0.05;
+        assert_ne!(a.hw_cache_key(&fast), a.hw_cache_key(&loose));
+        // ...but in paper/analytic mode the tolerance is inert
+        let mut paper_tol = paper.clone();
+        paper_tol.mc_tol = 0.05;
+        assert_eq!(a.hw_cache_key(&paper), a.hw_cache_key(&paper_tol));
     }
 
     #[test]

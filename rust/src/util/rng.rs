@@ -4,6 +4,88 @@
 //! property-test driver. Deterministic from its seed; `split` derives
 //! decorrelated child streams (SplitMix64 over the child index).
 
+/// Standard normal CDF `Phi(x)` via the Abramowitz-Stegun 7.1.26
+/// rational erf approximation (absolute error < 1.5e-7 — far below
+/// every Monte-Carlo tolerance in this crate). Used by the analytic
+/// P_map oracle (`analog::montecarlo`).
+pub fn normal_cdf(x: f64) -> f64 {
+    // Phi(x) = (1 + erf(x / sqrt(2))) / 2, erf odd
+    let z = x / std::f64::consts::SQRT_2;
+    let a = z.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * a);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736
+                + t * (1.421_413_741
+                    + t * (-1.453_152_027 + t * 1.061_405_429))));
+    let erf_abs = 1.0 - poly * (-a * a).exp();
+    let erf = if z < 0.0 { -erf_abs } else { erf_abs };
+    0.5 * (1.0 + erf)
+}
+
+/// Inverse standard normal CDF `Phi^-1(p)` (Acklam's rational
+/// approximation, relative error < 1.15e-9). `p = 0` and `p = 1` map
+/// to -inf / +inf; the stratified sampler feeds strictly interior
+/// quantiles.
+pub fn normal_inv_cdf(p: f64) -> f64 {
+    const A: [f64; 6] = [
+        -3.969_683_028_665_376e1,
+        2.209_460_984_245_205e2,
+        -2.759_285_104_469_687e2,
+        1.383_577_518_672_690e2,
+        -3.066_479_806_614_716e1,
+        2.506_628_277_459_239,
+    ];
+    const B: [f64; 5] = [
+        -5.447_609_879_822_406e1,
+        1.615_858_368_580_409e2,
+        -1.556_989_798_598_866e2,
+        6.680_131_188_771_972e1,
+        -1.328_068_155_288_572e1,
+    ];
+    const C: [f64; 6] = [
+        -7.784_894_002_430_293e-3,
+        -3.223_964_580_411_365e-1,
+        -2.400_758_277_161_838,
+        -2.549_732_539_343_734,
+        4.374_664_141_464_968,
+        2.938_163_982_698_783,
+    ];
+    const D: [f64; 4] = [
+        7.784_695_709_041_462e-3,
+        3.224_671_290_700_398e-1,
+        2.445_134_137_142_996,
+        3.754_408_661_907_416,
+    ];
+    const P_LOW: f64 = 0.024_25;
+    if p <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p >= 1.0 {
+        return f64::INFINITY;
+    }
+    if p < P_LOW {
+        // lower tail
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q
+            + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p > 1.0 - P_LOW {
+        // upper tail: symmetry
+        -normal_inv_cdf(1.0 - p)
+    } else {
+        // central region
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r
+            + A[5])
+            * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4])
+                * r
+                + 1.0)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
@@ -192,6 +274,55 @@ mod tests {
             seen[r.below(10) as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_cdf_matches_known_values() {
+        // table values of Phi at 0, ±1, ±2, 1.96
+        let cases = [
+            (0.0, 0.5),
+            (1.0, 0.841_344_746),
+            (-1.0, 0.158_655_254),
+            (2.0, 0.977_249_868),
+            (-2.0, 0.022_750_132),
+            (1.959_964, 0.975),
+        ];
+        for (x, want) in cases {
+            let got = normal_cdf(x);
+            assert!((got - want).abs() < 2e-7, "Phi({x}) = {got}");
+        }
+        assert_eq!(normal_cdf(f64::NEG_INFINITY), 0.0);
+        assert_eq!(normal_cdf(f64::INFINITY), 1.0);
+    }
+
+    #[test]
+    fn inv_cdf_roundtrips_through_cdf() {
+        for i in 1..200 {
+            let p = i as f64 / 200.0;
+            let z = normal_inv_cdf(p);
+            let back = normal_cdf(z);
+            // limited by the cdf approximation, not Acklam
+            assert!((back - p).abs() < 5e-7, "p={p} z={z} back={back}");
+        }
+        assert!(normal_inv_cdf(0.0).is_infinite());
+        assert!(normal_inv_cdf(1.0).is_infinite());
+        assert!((normal_inv_cdf(0.5)).abs() < 1e-12);
+        // antithetic symmetry the stratified sampler relies on
+        for p in [0.01, 0.1, 0.3, 0.45] {
+            let a = normal_inv_cdf(p);
+            let b = normal_inv_cdf(1.0 - p);
+            assert!((a + b).abs() < 1e-9, "p={p}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn inv_cdf_is_monotone() {
+        let mut prev = f64::NEG_INFINITY;
+        for i in 1..1000 {
+            let z = normal_inv_cdf(i as f64 / 1000.0);
+            assert!(z > prev, "not monotone at {i}");
+            prev = z;
+        }
     }
 
     #[test]

@@ -508,7 +508,16 @@ fn prop_operating_point_json_roundtrips() {
         if rng.below(2) == 0 {
             spec = spec.with_eval(rng.below(1000) as u32, 3);
         }
-        let hw = solve(p, 7, 100, 1, &fmacs, k, sigma, phi);
+        let hw = solve(
+            p,
+            7,
+            capmin::analog::McSettings::paper(100),
+            1,
+            &fmacs,
+            k,
+            sigma,
+            phi,
+        );
         let accuracy =
             if spec.eval.is_some() { Some(rng.f64()) } else { None };
         let point = OperatingPoint::from_solve(

@@ -224,6 +224,10 @@ fn point_replies_carry_the_cost_vector() {
     assert!(cost.req("latency").as_f64() > 0.0);
     assert!(cost.req("spike_times").as_f64() >= 1.0);
     assert_eq!(cost.req("c").as_f64(), p.req("c").as_f64());
+    // Monte-Carlo provenance rides along the same way (DESIGN.md §15)
+    let mc = p.req("mc");
+    assert_eq!(mc.req("mode").as_str(), "paper");
+    assert!(mc.req("draws").as_f64() > 0.0, "sigma > 0 solve drew");
 
     // consistent with a direct DesignSession query at the same knobs
     let cfg = serve_cfg("cost_direct");
