@@ -16,12 +16,11 @@
 //! instead: `capmin suite --plans pareto --emit md`.
 
 use std::net::SocketAddr;
-use std::time::Duration;
 
 use anyhow::Result;
 use capmin::coordinator::config::ExperimentConfig;
 use capmin::data::synth::Dataset;
-use capmin::serve::{server, Client, ServeOptions};
+use capmin::serve::{server, Backoff, Client, ServeOptions};
 use capmin::util::pareto::non_dominated;
 use capmin::util::table::si;
 
@@ -57,8 +56,16 @@ fn main() -> Result<()> {
         }
     };
 
-    let mut client =
-        Client::connect_retry(addr, Duration::from_secs(60))?;
+    // the shared jittered-backoff policy (DESIGN.md §16), generous
+    // enough to ride out a `capmin serve &` still binding its socket
+    let mut client = Client::connect_backoff(
+        addr,
+        Backoff {
+            attempts: 16,
+            base_ms: 50,
+            cap_ms: 2000,
+        },
+    )?;
 
     // 1. sweep k and collect each point's typed cost vector — the
     //    server prices every reply from the shared cost model, so a

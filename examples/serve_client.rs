@@ -14,12 +14,11 @@
 //! CI smoke can start a server, run this, and wait for a clean exit).
 
 use std::net::SocketAddr;
-use std::time::Duration;
 
 use anyhow::Result;
 use capmin::coordinator::config::ExperimentConfig;
 use capmin::data::synth::Dataset;
-use capmin::serve::{server, Client, ServeOptions};
+use capmin::serve::{server, Backoff, Client, ServeOptions};
 use capmin::util::table::si;
 
 fn main() -> Result<()> {
@@ -54,8 +53,17 @@ fn main() -> Result<()> {
         }
     };
 
-    let mut client =
-        Client::connect_retry(addr, Duration::from_secs(60))?;
+    // the shared jittered-backoff policy (DESIGN.md §16) — generous
+    // enough to ride out a `capmin serve &` still binding its socket
+    // (the CI smoke races exactly that)
+    let mut client = Client::connect_backoff(
+        addr,
+        Backoff {
+            attempts: 16,
+            base_ms: 50,
+            cap_ms: 2000,
+        },
+    )?;
 
     // 1. a codesign query — answered from the warm session's caches
     //    after the first hit

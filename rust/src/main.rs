@@ -25,7 +25,8 @@ const KNOWN_OPTS: &[&str] = &[
     "eval-limit", "hist-limit", "sigma", "mc-samples", "mc", "mc-tol",
     "seeds", "ks", "k", "phi", "engine", "backend", "threads", "kernel",
     "tile", "run-dir", "seed", "emit", "plans", "suite-id", "addr",
-    "max-batch", "max-wait-ms",
+    "max-batch", "max-wait-ms", "reactors", "queue-cap",
+    "idle-timeout-ms", "shards", "peers", "shard",
 ];
 
 /// Every bare `--flag`.
@@ -158,6 +159,23 @@ serve options:
                            batching)
   --max-wait-ms N          longest a ready infer request waits for
                            company (default 2)
+  --reactors N             event-loop threads owning the sockets
+                           (default 2)
+  --queue-cap N            bound on admitted-but-unanswered compute
+                           requests; the excess sheds with structured
+                           `overloaded` replies (default 256)
+  --idle-timeout-ms N      close a connection stalled mid-request-line
+                           this long; idle connections with no partial
+                           line are never reaped (default 30000)
+  --shards N               spawn an in-process consistent-hash ring of
+                           N serving stacks: shard 0 on --addr, the
+                           rest on ephemeral loopback ports
+  --peers A:P,B:P,...      the full ordered shard ring, this server
+                           included — every member must get the same
+                           list; points owned by another shard are
+                           fetched from it (peer_point) and fall back
+                           to a local solve
+  --shard I                this server's index into --peers
 
 suite options:
   --plans a,b,c            subset of plans to run (default: all)
@@ -375,6 +393,36 @@ fn main() -> Result<()> {
             opts.max_batch = max_batch;
             opts.max_wait_ms =
                 args.usize_or("max-wait-ms", 2) as u64;
+            opts.reactors = args.usize_or("reactors", 2).max(1);
+            opts.queue_cap = args.usize_or("queue-cap", 256).max(1);
+            opts.idle_timeout_ms =
+                args.usize_or("idle-timeout-ms", 30_000).max(1) as u64;
+            let shards = args.usize_or("shards", 1);
+            if let Some(list) = args.get("peers") {
+                anyhow::ensure!(
+                    shards <= 1,
+                    "--shards spawns an in-process ring; --peers \
+                     joins an external one — pick one"
+                );
+                let peers: Vec<std::net::SocketAddr> = list
+                    .split(',')
+                    .map(|a| {
+                        a.trim().parse().map_err(|e| {
+                            anyhow::anyhow!(
+                                "bad --peers entry `{a}`: {e}"
+                            )
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                let shard = args.usize_or("shard", 0);
+                anyhow::ensure!(
+                    shard < peers.len(),
+                    "--shard {shard} out of range for {} peers",
+                    peers.len()
+                );
+                opts.peers = peers;
+                opts.shard = shard;
+            }
             // pre-warm only what was asked for; everything else warms
             // lazily on first request
             if args.get("dataset").is_some() {
@@ -384,12 +432,19 @@ fn main() -> Result<()> {
             drop(session); // the server owns its own warm session
             println!(
                 "capmin serve: binding {addr} (max-batch \
-                 {max_batch}, max-wait {} ms, native backend) — \
-                 send {{\"v\":1,\"id\":1,\"type\":\"shutdown\"}} to \
+                 {max_batch}, max-wait {} ms, {} reactors, queue \
+                 cap {}, native backend) — send \
+                 {{\"v\":1,\"id\":1,\"type\":\"shutdown\"}} to \
                  drain and exit",
-                opts.max_wait_ms
+                opts.max_wait_ms, opts.reactors, opts.queue_cap
             );
-            capmin::serve::server::run(cfg, opts)?;
+            if shards > 1 {
+                capmin::serve::server::run_sharded(
+                    cfg, opts, shards,
+                )?;
+            } else {
+                capmin::serve::server::run(cfg, opts)?;
+            }
             println!("capmin serve: drained and stopped");
         }
         "train" => {

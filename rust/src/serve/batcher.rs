@@ -12,8 +12,14 @@
 //! computes (`tests/serve.rs` pins this). With `max_batch = 1` the
 //! batcher degenerates to a plain serial executor whose lone request
 //! gets the whole kernel pool.
+//!
+//! Since the reactor rewrite (DESIGN.md §16) the batcher builds the
+//! wire reply itself and pushes it into the job's [`ReplySink`] — the
+//! reactor delivers it without any compute thread ever touching a
+//! socket. Disconnected clients cost one discarded completion, never
+//! a panic.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -22,10 +28,12 @@ use crate::bnn::ErrorModel;
 use crate::coordinator::store::NamedTensor;
 
 use super::metrics::Metrics;
+use super::protocol;
+use super::reactor::ReplySink;
 
 /// One queued inference job: everything the forward needs, resolved
-/// by the worker (via the session thread) before enqueueing, so the
-/// batcher itself never blocks on solves or model folding.
+/// by the session thread before enqueueing, so the batcher itself
+/// never blocks on solves or model folding.
 pub struct InferJob {
     pub model: &'static str,
     pub n_classes: usize,
@@ -35,17 +43,13 @@ pub struct InferJob {
     /// Row-major samples, `batch * pixels` values.
     pub x: Vec<f32>,
     pub batch: usize,
-    /// Where the connection worker waits for the result.
-    pub reply: Sender<Result<InferDone, String>>,
+    /// Request id echoed on the reply line.
+    pub id: f64,
+    /// Where the serialized reply goes (a reactor in production, a
+    /// plain channel in tests).
+    pub reply: ReplySink,
     /// Enqueue time, for the end-to-end latency histogram.
     pub t0: Instant,
-}
-
-/// A finished job: flat logits plus the row width to slice them with.
-pub struct InferDone {
-    pub logits: Vec<f32>,
-    pub batch: usize,
-    pub n_classes: usize,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -88,9 +92,9 @@ pub fn run(
     }
 }
 
-/// Run one micro-batch and fan the results back to the waiting
-/// workers.
-fn execute(
+/// Run one micro-batch and push each job's serialized reply into its
+/// sink.
+pub fn execute(
     backend: &NativeBackend,
     metrics: &Metrics,
     jobs: Vec<InferJob>,
@@ -112,19 +116,25 @@ fn execute(
         jobs.iter().map(|j| j.batch).sum(),
     );
     for (job, out) in jobs.into_iter().zip(outs) {
-        let reply = out
-            .map(|logits| InferDone {
-                logits,
-                batch: job.batch,
-                n_classes: job.n_classes,
-            })
-            .map_err(|e| e.to_string());
+        let reply = match out {
+            Ok(logits) => protocol::infer_response(
+                job.id,
+                &logits,
+                job.batch,
+                job.n_classes,
+            ),
+            Err(e) => {
+                metrics.inc_error();
+                protocol::error_response(
+                    Some(job.id),
+                    &format!("infer failed: {e}"),
+                )
+            }
+        };
         metrics
             .infer_latency_us
             .record(job.t0.elapsed().as_micros() as u64);
-        // a worker that gave up (connection died) just drops the
-        // receiver; the send error is not the batcher's problem
-        let _ = job.reply.send(reply);
+        job.reply.send(&reply);
     }
 }
 
@@ -133,6 +143,7 @@ mod tests {
     use super::*;
     use crate::backend::arch;
     use crate::backend::native::init_folded;
+    use crate::util::json::Json;
     use std::sync::mpsc;
 
     fn mk_job(
@@ -140,7 +151,7 @@ mod tests {
         ems: &Arc<Vec<ErrorModel>>,
         seed: u32,
         px: usize,
-    ) -> (InferJob, mpsc::Receiver<Result<InferDone, String>>) {
+    ) -> (InferJob, mpsc::Receiver<String>) {
         let (tx, rx) = mpsc::channel();
         let mut rng = crate::util::rng::Rng::new(seed as u64 + 77);
         let x: Vec<f32> = (0..px).map(|_| rng.pm1(0.5)).collect();
@@ -155,7 +166,8 @@ mod tests {
                 seed,
                 x,
                 batch: 1,
-                reply: tx,
+                id: seed as f64,
+                reply: ReplySink::to_channel(tx),
                 t0: Instant::now(),
             },
             rx,
@@ -173,20 +185,18 @@ mod tests {
         );
         let px: usize = meta.in_shape.iter().product();
 
-        // reference: each job alone through a max_batch=1 batcher
+        // reference: each job alone through a max_batch=1 executor
         let solo_backend = NativeBackend::new(2);
         let mut solo = vec![];
         for seed in 0..5u32 {
             let (job, rx) = mk_job(&folded, &ems, seed, px);
-            execute(
-                &solo_backend,
-                &Metrics::new(),
-                vec![job],
-            );
-            solo.push(rx.recv().unwrap().unwrap().logits);
+            execute(&solo_backend, &Metrics::new(), vec![job]);
+            solo.push(rx.recv().unwrap());
         }
 
-        // the same five jobs coalesced through a running batcher
+        // the same five jobs coalesced through a running batcher;
+        // the serialized reply lines (ids, logits, argmaxes — all of
+        // it) must be byte-identical to the solo runs
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::channel();
         let policy = BatchPolicy {
@@ -205,12 +215,14 @@ mod tests {
             })
             .collect();
         for (seed, reply_rx) in replies.into_iter().enumerate() {
-            let got = reply_rx.recv().unwrap().unwrap();
+            let got = reply_rx.recv().unwrap();
             assert_eq!(
-                got.logits, solo[seed],
+                got, solo[seed],
                 "seed {seed} changed under micro-batching"
             );
-            assert_eq!(got.n_classes, meta.n_classes);
+            let back = Json::parse(&got).unwrap();
+            assert!(back.req("ok").as_bool());
+            assert_eq!(back.req("id").as_f64(), seed as f64);
         }
         drop(tx); // drain: batcher exits once the queue is empty
         h.join().unwrap();
@@ -247,7 +259,10 @@ mod tests {
             run(rx, NativeBackend::new(1), policy, Arc::new(Metrics::new()))
         });
         for reply_rx in reply_rxs {
-            assert!(reply_rx.recv().unwrap().is_ok());
+            let line = reply_rx.recv().unwrap();
+            assert!(
+                Json::parse(&line).unwrap().req("ok").as_bool()
+            );
         }
         h.join().unwrap();
     }

@@ -12,8 +12,121 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::analog::cost::CostVector;
 use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
 
 use super::protocol::PROTOCOL_VERSION;
+
+/// Typed shed error: the server answered with an `overloaded: true`
+/// reply (admission control, DESIGN.md §16) — the request was *not*
+/// bad, the server was full. Detectable through an `anyhow` chain
+/// with [`retriable`], carrying the server's `retry_after_ms` hint.
+#[derive(Debug, Clone)]
+pub struct Overloaded {
+    pub retry_after_ms: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} (retry_after_ms {})",
+            self.message, self.retry_after_ms
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+/// `true` when `err` is worth retrying with backoff: a shed
+/// ([`Overloaded`]) or a transient connection-level IO failure.
+/// Protocol errors (bad request, unknown dataset…) are not — retrying
+/// them can only fail identically.
+pub fn retriable(err: &anyhow::Error) -> bool {
+    if err.downcast_ref::<Overloaded>().is_some() {
+        return true;
+    }
+    err.chain().any(|cause| {
+        cause
+            .downcast_ref::<std::io::Error>()
+            .map(|io| {
+                matches!(
+                    io.kind(),
+                    std::io::ErrorKind::ConnectionRefused
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::ConnectionAborted
+                        | std::io::ErrorKind::BrokenPipe
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::UnexpectedEof
+                )
+            })
+            .unwrap_or(false)
+    })
+}
+
+/// Bounded jittered exponential backoff, shared by every caller that
+/// retries against a serve endpoint (tests, benches, examples, the
+/// shard peer links). Delays double from `base_ms` up to `cap_ms`,
+/// each jittered to `[delay/2, delay]` so a thousand shed clients do
+/// not re-arrive in lockstep.
+#[derive(Clone, Copy, Debug)]
+pub struct Backoff {
+    /// Total attempts (the first try included).
+    pub attempts: u32,
+    pub base_ms: u64,
+    pub cap_ms: u64,
+}
+
+impl Default for Backoff {
+    fn default() -> Backoff {
+        Backoff {
+            attempts: 6,
+            base_ms: 20,
+            cap_ms: 2000,
+        }
+    }
+}
+
+impl Backoff {
+    /// Run `op` until it succeeds, the error stops being
+    /// [`retriable`], or the attempts run out (returning the last
+    /// error). `seed` decorrelates the jitter across callers.
+    pub fn retry<T>(
+        &self,
+        seed: u64,
+        mut op: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
+        let attempts = self.attempts.max(1);
+        let mut rng = Rng::new(seed ^ 0x6261_636b_6f66_66);
+        let mut delay = self.base_ms.max(1);
+        let mut last = None;
+        for attempt in 0..attempts {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if !retriable(&e) || attempt + 1 == attempts {
+                        return Err(e);
+                    }
+                    // a shed reply's hint floors the wait: the server
+                    // told us when it is worth coming back
+                    let hint = e
+                        .downcast_ref::<Overloaded>()
+                        .map(|o| o.retry_after_ms)
+                        .unwrap_or(0);
+                    let d = delay.max(hint).min(self.cap_ms.max(1));
+                    let jittered = d / 2 + rng.below(d / 2 + 1);
+                    std::thread::sleep(Duration::from_millis(
+                        jittered,
+                    ));
+                    delay = (delay * 2).min(self.cap_ms.max(1));
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow!("retry exhausted")))
+    }
+}
 
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -49,6 +162,15 @@ impl Client {
                 Err(_) => std::thread::sleep(Duration::from_millis(50)),
             }
         }
+    }
+
+    /// [`Client::connect`] under a [`Backoff`] policy: retries
+    /// connection-refused/reset with jittered exponential delays.
+    pub fn connect_backoff(
+        addr: SocketAddr,
+        policy: Backoff,
+    ) -> Result<Client> {
+        policy.retry(addr.port() as u64, || Client::connect(addr))
     }
 
     fn fresh_id(&mut self) -> f64 {
@@ -89,13 +211,27 @@ impl Client {
         let reply = self.send_raw(&obj(all).to_string())?;
         match reply.get("ok") {
             Some(Json::Bool(true)) => {}
-            _ => bail!(
-                "server error: {}",
-                reply
+            _ => {
+                let msg = reply
                     .get("error")
                     .map(|e| e.as_str().to_string())
-                    .unwrap_or_else(|| reply.to_string())
-            ),
+                    .unwrap_or_else(|| reply.to_string());
+                // a shed is a typed, retriable error — not a protocol
+                // failure (DESIGN.md §16)
+                if let Some(Json::Bool(true)) =
+                    reply.get("overloaded")
+                {
+                    let retry_after_ms = reply
+                        .get("retry_after_ms")
+                        .map(|j| j.as_f64() as u64)
+                        .unwrap_or(0);
+                    return Err(anyhow::Error::new(Overloaded {
+                        retry_after_ms,
+                        message: msg,
+                    }));
+                }
+                bail!("server error: {msg}");
+            }
         }
         let echoed = reply
             .get("id")
@@ -118,6 +254,29 @@ impl Client {
     ) -> Result<Json> {
         self.request(
             "point",
+            vec![
+                ("dataset", Json::Str(dataset.to_string())),
+                ("k", Json::Num(k as f64)),
+                ("sigma", Json::Num(sigma)),
+                ("phi", Json::Num(phi as f64)),
+                ("eval", Json::Bool(eval)),
+            ],
+        )
+    }
+
+    /// The shard-to-shard twin of [`Client::point`]: `peer_point` is
+    /// validated identically but ALWAYS solved locally by the
+    /// receiving shard, never re-forwarded (DESIGN.md §16).
+    pub fn peer_point(
+        &mut self,
+        dataset: &str,
+        k: usize,
+        sigma: f64,
+        phi: usize,
+        eval: bool,
+    ) -> Result<Json> {
+        self.request(
+            "peer_point",
             vec![
                 ("dataset", Json::Str(dataset.to_string())),
                 ("k", Json::Num(k as f64)),

@@ -1,7 +1,10 @@
 //! Serve-side observability: request counters, micro-batch sizes and
-//! latency histograms, all lock-free atomics so the request path never
-//! serializes on a metrics mutex (DESIGN.md §12). Served to clients
-//! through the `Stats` request.
+//! latency histograms, plus the event-loop tier's gauges — compute
+//! queue depth, admission rejections, per-reactor connection counts
+//! and peer-fetch hit/miss counters (DESIGN.md §12/§16). All lock-free
+//! atomics so the request path never serializes on a metrics mutex.
+//! Served to clients through the `Stats` request; every field added by
+//! the reactor rewrite is additive, so pre-§16 clients keep parsing.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -15,13 +18,15 @@ pub enum Kind {
     Infer,
     Stats,
     Shutdown,
+    PeerPoint,
 }
 
-const KINDS: [(&str, Kind); 4] = [
+const KINDS: [(&str, Kind); 5] = [
     ("point", Kind::Point),
     ("infer", Kind::Infer),
     ("stats", Kind::Stats),
     ("shutdown", Kind::Shutdown),
+    ("peer_point", Kind::PeerPoint),
 ];
 
 /// Power-of-two bucketed histogram: bucket `i` counts values in
@@ -90,8 +95,9 @@ impl Hist {
 /// All serve counters; one instance shared by every thread via `Arc`.
 pub struct Metrics {
     start: Instant,
-    requests: [AtomicU64; 4],
-    /// Requests answered with `ok: false` (parse errors included).
+    requests: [AtomicU64; 5],
+    /// Requests answered with `ok: false` (parse errors included;
+    /// admission sheds are counted separately below).
     errors: AtomicU64,
     /// Samples that went through the batcher.
     infer_samples: AtomicU64,
@@ -108,18 +114,42 @@ pub struct Metrics {
     pub point_latency_us: Hist,
     /// Infer latency, microseconds (queue + batch wait + forward).
     pub infer_latency_us: Hist,
+
+    // ---- event-loop tier (DESIGN.md §16), all additive ----
+    /// Compute requests admitted and not yet completed — THE
+    /// backpressure gauge ([`Metrics::try_admit`] bounds it).
+    pending: AtomicU64,
+    /// Sheds: global pending queue at capacity.
+    rejected_queue: AtomicU64,
+    /// Sheds: one connection exceeded its in-flight cap.
+    rejected_conn: AtomicU64,
+    /// Whole connections refused at accept (fd budget).
+    refused_conns: AtomicU64,
+    /// Slow clients dropped for an over-cap write buffer.
+    shed_slow_clients: AtomicU64,
+    /// Connections closed for stalling mid-request-line (slowloris).
+    idle_timeouts: AtomicU64,
+    conns_accepted: AtomicU64,
+    conns_closed: AtomicU64,
+    /// Open connections per reactor (gauges; sized at startup).
+    reactor_conns: Vec<AtomicU64>,
+    /// Peer point fetches attempted / answered by the owner /
+    /// fallen back to a local solve (DESIGN.md §16).
+    peer_fetches: AtomicU64,
+    peer_fetch_hits: AtomicU64,
+    peer_fetch_misses: AtomicU64,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
+        Metrics::with_reactors(0)
+    }
+
+    /// A metrics block with `reactors` per-reactor connection gauges.
+    pub fn with_reactors(reactors: usize) -> Metrics {
         Metrics {
             start: Instant::now(),
-            requests: [
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-            ],
+            requests: Default::default(),
             errors: AtomicU64::new(0),
             infer_samples: AtomicU64::new(0),
             micro_batches: AtomicU64::new(0),
@@ -128,6 +158,20 @@ impl Metrics {
             batch_hist: Hist::new(12),
             point_latency_us: Hist::new(28),
             infer_latency_us: Hist::new(28),
+            pending: AtomicU64::new(0),
+            rejected_queue: AtomicU64::new(0),
+            rejected_conn: AtomicU64::new(0),
+            refused_conns: AtomicU64::new(0),
+            shed_slow_clients: AtomicU64::new(0),
+            idle_timeouts: AtomicU64::new(0),
+            conns_accepted: AtomicU64::new(0),
+            conns_closed: AtomicU64::new(0),
+            reactor_conns: (0..reactors)
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            peer_fetches: AtomicU64::new(0),
+            peer_fetch_hits: AtomicU64::new(0),
+            peer_fetch_misses: AtomicU64::new(0),
         }
     }
 
@@ -145,6 +189,100 @@ impl Metrics {
 
     pub fn errors(&self) -> u64 {
         self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Admit one compute request against the bounded pending queue:
+    /// increments the gauge and returns `true`, or leaves it untouched
+    /// and returns `false` when `cap` is reached — the caller then
+    /// sheds with a structured `overloaded` reply. Lock-free CAS so
+    /// the bound is exact, never approximate.
+    pub fn try_admit(&self, cap: usize) -> bool {
+        let mut cur = self.pending.load(Ordering::Relaxed);
+        loop {
+            if cur >= cap as u64 {
+                return false;
+            }
+            match self.pending.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// One admitted request completed (reply handed to its reactor).
+    pub fn pending_dec(&self) {
+        self.pending.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.pending.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_queue(&self) {
+        self.rejected_queue.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn shed_conn_cap(&self) {
+        self.rejected_conn.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn refuse_conn(&self) {
+        self.refused_conns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn shed_slow_client(&self) {
+        self.shed_slow_clients.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn idle_timeout(&self) {
+        self.idle_timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected_queue.load(Ordering::Relaxed)
+            + self.rejected_conn.load(Ordering::Relaxed)
+    }
+
+    pub fn conn_opened(&self, reactor: usize) {
+        self.conns_accepted.fetch_add(1, Ordering::Relaxed);
+        if let Some(g) = self.reactor_conns.get(reactor) {
+            g.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn conn_closed(&self, reactor: usize) {
+        self.conns_closed.fetch_add(1, Ordering::Relaxed);
+        if let Some(g) = self.reactor_conns.get(reactor) {
+            g.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn open_conns(&self) -> u64 {
+        self.reactor_conns
+            .iter()
+            .map(|g| g.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Record the outcome of one peer point fetch: `hit` when the
+    /// owning shard answered, miss when the requester fell back to a
+    /// local solve.
+    pub fn peer_fetch(&self, hit: bool) {
+        self.peer_fetches.fetch_add(1, Ordering::Relaxed);
+        if hit {
+            self.peer_fetch_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.peer_fetch_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn peer_fetch_hits(&self) -> u64 {
+        self.peer_fetch_hits.load(Ordering::Relaxed)
     }
 
     /// Record one executed micro-batch of `reqs` requests covering
@@ -170,7 +308,7 @@ impl Metrics {
     }
 
     /// The `Stats` payload (merged with the server's static info by
-    /// the worker).
+    /// the reactor).
     pub fn to_json(&self) -> Json {
         let lat = |h: &Hist| {
             obj(vec![
@@ -179,6 +317,7 @@ impl Metrics {
                 ("p99_us_le", Json::Num(h.quantile(0.99) as f64)),
             ])
         };
+        let n = |v: &AtomicU64| Json::Num(v.load(Ordering::Relaxed) as f64);
         obj(vec![
             (
                 "uptime_s",
@@ -197,20 +336,8 @@ impl Metrics {
             (
                 "infer",
                 obj(vec![
-                    (
-                        "samples",
-                        Json::Num(
-                            self.infer_samples.load(Ordering::Relaxed)
-                                as f64,
-                        ),
-                    ),
-                    (
-                        "micro_batches",
-                        Json::Num(
-                            self.micro_batches.load(Ordering::Relaxed)
-                                as f64,
-                        ),
-                    ),
+                    ("samples", n(&self.infer_samples)),
+                    ("micro_batches", n(&self.micro_batches)),
                     (
                         "batched_requests",
                         Json::Num(self.batched_requests() as f64),
@@ -227,6 +354,59 @@ impl Metrics {
                 obj(vec![
                     ("point", lat(&self.point_latency_us)),
                     ("infer", lat(&self.infer_latency_us)),
+                ]),
+            ),
+            // event-loop tier (additive; DESIGN.md §16)
+            (
+                "serving",
+                obj(vec![
+                    ("queue_depth", n(&self.pending)),
+                    (
+                        "admission",
+                        obj(vec![
+                            ("rejected_queue", n(&self.rejected_queue)),
+                            ("rejected_conn", n(&self.rejected_conn)),
+                            ("refused_conns", n(&self.refused_conns)),
+                        ]),
+                    ),
+                    (
+                        "conns",
+                        obj(vec![
+                            (
+                                "open",
+                                Json::Num(self.open_conns() as f64),
+                            ),
+                            ("accepted", n(&self.conns_accepted)),
+                            ("closed", n(&self.conns_closed)),
+                            (
+                                "per_reactor",
+                                Json::Arr(
+                                    self.reactor_conns
+                                        .iter()
+                                        .map(|g| {
+                                            Json::Num(g.load(
+                                                Ordering::Relaxed,
+                                            )
+                                                as f64)
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    ),
+                    (
+                        "shed_slow_clients",
+                        n(&self.shed_slow_clients),
+                    ),
+                    ("idle_timeouts", n(&self.idle_timeouts)),
+                    (
+                        "peer",
+                        obj(vec![
+                            ("fetches", n(&self.peer_fetches)),
+                            ("hits", n(&self.peer_fetch_hits)),
+                            ("misses", n(&self.peer_fetch_misses)),
+                        ]),
+                    ),
                 ]),
             ),
         ])
@@ -284,5 +464,48 @@ mod tests {
         );
         assert_eq!(j.req("infer").req("samples").as_f64(), 6.0);
         assert_eq!(j.req("infer").req("micro_batches").as_f64(), 2.0);
+    }
+
+    #[test]
+    fn admission_bound_is_exact() {
+        let m = Metrics::new();
+        assert!(m.try_admit(2));
+        assert!(m.try_admit(2));
+        assert!(!m.try_admit(2), "cap 2 admitted a third request");
+        assert_eq!(m.queue_depth(), 2);
+        m.pending_dec();
+        assert!(m.try_admit(2));
+        m.shed_queue();
+        m.shed_conn_cap();
+        assert_eq!(m.rejected_total(), 2);
+        let j = m.to_json();
+        let serving = j.req("serving");
+        assert_eq!(serving.req("queue_depth").as_f64(), 2.0);
+        assert_eq!(
+            serving.req("admission").req("rejected_queue").as_f64(),
+            1.0
+        );
+    }
+
+    #[test]
+    fn reactor_conn_gauges_and_peer_counters() {
+        let m = Metrics::with_reactors(2);
+        m.conn_opened(0);
+        m.conn_opened(1);
+        m.conn_opened(1);
+        m.conn_closed(1);
+        assert_eq!(m.open_conns(), 2);
+        m.peer_fetch(true);
+        m.peer_fetch(false);
+        assert_eq!(m.peer_fetch_hits(), 1);
+        let j = m.to_json();
+        let serving = j.req("serving");
+        let per = serving.req("conns").req("per_reactor").as_arr();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].as_f64(), 1.0);
+        assert_eq!(per[1].as_f64(), 1.0);
+        assert_eq!(serving.req("conns").req("accepted").as_f64(), 3.0);
+        assert_eq!(serving.req("peer").req("fetches").as_f64(), 2.0);
+        assert_eq!(serving.req("peer").req("misses").as_f64(), 1.0);
     }
 }

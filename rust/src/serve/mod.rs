@@ -1,5 +1,5 @@
 //! `capmin serve` — a long-running, multi-client operating-point +
-//! inference server (DESIGN.md §12).
+//! inference server (DESIGN.md §12, §16).
 //!
 //! Every other entry point in this crate pays the full warmup bill —
 //! model folding, bit-packing, point-cache priming — once per process
@@ -9,40 +9,57 @@
 //! DESIGN.md §8):
 //!
 //! * [`protocol`] — typed, versioned request/response forms
-//!   (`Point`, `Infer`, `Stats`, `Shutdown`) with structured error
-//!   replies;
-//! * [`server`] — the accept loop, a fixed crew of connection workers
-//!   spawned once at startup, a session thread owning the one warm
-//!   [`crate::session::DesignSession`], and graceful drain on
-//!   shutdown;
+//!   (`Point`, `Infer`, `Stats`, `Shutdown`, the shard-internal
+//!   `PeerPoint`) with structured error replies, including the
+//!   admission-control `overloaded` shed;
+//! * [`reactor`] — the epoll/kqueue event-loop threads that own every
+//!   socket non-blocking: NDJSON framing, per-connection reply
+//!   ordering, admission control, slow-client shedding and slowloris
+//!   timeouts (built on [`crate::util::evloop`]);
+//! * [`server`] — the non-blocking acceptor, reactor crew, the
+//!   session thread owning the one warm
+//!   [`crate::session::DesignSession`] (plus the shard ring's peer
+//!   links), and graceful drain on shutdown;
 //! * [`batcher`] — the micro-batching queue that coalesces concurrent
 //!   `Infer` requests into one
 //!   [`crate::backend::NativeBackend::forward_many`] entry, replies
 //!   bit-identical to solo execution;
-//! * [`metrics`] — request counters plus batch-size and latency
-//!   histograms, served through `Stats`;
+//! * [`shard`] — consistent hashing of operating-point cache keys
+//!   over a ring of serving processes;
+//! * [`metrics`] — request counters, batch-size and latency
+//!   histograms, queue-depth/admission/connection gauges and
+//!   peer-fetch counters, served through `Stats`;
 //! * [`client`] — the blocking line-protocol client the loopback
-//!   tests, the loadgen bench and `examples/serve_client.rs` share.
+//!   tests, the loadgen bench and `examples/serve_client.rs` share,
+//!   with jittered-backoff retry ([`client::Backoff`]) for connects
+//!   and sheds.
 //!
 //! Thread model (all spawned once, at startup — no thread or pool
-//! construction on the request path):
+//! construction on the request path, and no thread ever blocked on a
+//! client socket):
 //!
 //! ```text
-//!  accept loop ── conn queue ──> worker 0..W  (socket IO, parse)
-//!                                  │      │
-//!                    Point/Prepare │      │ Infer jobs
-//!                                  v      v
-//!                          session thread  batcher thread
-//!                          (DesignSession, (NativeBackend,
-//!                           persistent      persistent kernel
-//!                           solve pool)     pool, micro-batches)
+//!  acceptor ──round robin──> reactor 0..R   (epoll/kqueue loops:
+//!                              │      ^      all sockets, framing,
+//!                     Work     │      │      admission, ordering)
+//!                              v      │ replies (inbox + waker)
+//!                        session thread ───────────┐
+//!                        (DesignSession,           │ InferJob
+//!                         persistent solve pool,   v
+//!                         peer links to shards)  batcher thread
+//!                                                (NativeBackend,
+//!                                                 persistent kernel
+//!                                                 pool, micro-batches)
 //! ```
 
 pub mod batcher;
 pub mod client;
 pub mod metrics;
 pub mod protocol;
+pub mod reactor;
 pub mod server;
+pub mod shard;
 
-pub use client::Client;
+pub use client::{Backoff, Client, Overloaded};
 pub use server::{ServeOptions, Server};
+pub use shard::HashRing;

@@ -56,6 +56,11 @@ pub struct InferReq {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Point(PointReq),
+    /// A shard-to-shard point fetch (DESIGN.md §16): parsed and
+    /// validated exactly like `Point`, but always solved *locally* by
+    /// the receiving shard — never re-forwarded, so a misconfigured
+    /// ring can produce an extra solve but never a forwarding loop.
+    PeerPoint(PointReq),
     Infer(InferReq),
     Stats { id: f64 },
     Shutdown { id: f64 },
@@ -107,7 +112,7 @@ impl Request {
         match ty.as_str() {
             "stats" => Ok(Request::Stats { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
-            "point" | "infer" => {
+            "point" | "peer_point" | "infer" => {
                 let dataset = match j.get("dataset") {
                     Some(Json::Str(s)) => {
                         Dataset::from_name(s).ok_or_else(|| {
@@ -176,7 +181,7 @@ impl Request {
                          least one spike time (phi < k)"
                     )));
                 }
-                if ty == "point" {
+                if ty != "infer" {
                     let eval = match j.get("eval") {
                         Some(Json::Bool(b)) => *b,
                         None => false,
@@ -187,14 +192,19 @@ impl Request {
                             )))
                         }
                     };
-                    return Ok(Request::Point(PointReq {
+                    let p = PointReq {
                         id,
                         dataset,
                         k,
                         sigma,
                         phi,
                         eval,
-                    }));
+                    };
+                    return Ok(if ty == "point" {
+                        Request::Point(p)
+                    } else {
+                        Request::PeerPoint(p)
+                    });
                 }
                 let seed = int_or("seed", 1)? as u32;
                 let pixels = dataset.spec().pixels();
@@ -262,7 +272,7 @@ impl Request {
             }
             other => Err(fail(format!(
                 "unknown request type `{other}` (valid: point, infer, \
-                 stats, shutdown)"
+                 peer_point, stats, shutdown)"
             ))),
         }
     }
@@ -378,6 +388,35 @@ pub fn error_response(id: Option<f64>, error: &str) -> Json {
     ])
 }
 
+/// The admission-control shed reply (DESIGN.md §16): an ordinary
+/// `ok: false` error — old clients parse and surface it untouched —
+/// plus two additive fields new clients use to back off:
+/// `"overloaded": true` (machine-checkable: *this* failure is
+/// load, not a bad request) and a `retry_after_ms` hint.
+pub fn overloaded_response(
+    id: Option<f64>,
+    why: &str,
+    retry_after_ms: u64,
+) -> Json {
+    obj(vec![
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+        (
+            "id",
+            match id {
+                Some(i) => Json::Num(i),
+                None => Json::Null,
+            },
+        ),
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::Str(format!("overloaded: {why} — retry with backoff")),
+        ),
+        ("overloaded", Json::Bool(true)),
+        ("retry_after_ms", Json::Num(retry_after_ms as f64)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -480,6 +519,40 @@ mod tests {
         )
         .unwrap_err();
         assert!(e.1.contains("at least one"), "{}", e.1);
+    }
+
+    #[test]
+    fn peer_point_parses_like_point_but_is_marked() {
+        let line = r#"{"v":1,"id":8,"type":"peer_point",
+            "dataset":"fashion_syn","k":14,"sigma":0.02,"phi":2}"#;
+        match Request::parse(line).unwrap() {
+            Request::PeerPoint(p) => {
+                assert_eq!(p.dataset, Dataset::FashionSyn);
+                assert_eq!((p.k, p.phi), (14, 2));
+                assert!(!p.eval);
+            }
+            other => panic!("{other:?}"),
+        }
+        // same validation rules as point
+        let e = Request::parse(
+            r#"{"v":1,"id":8,"type":"peer_point",
+                "dataset":"fashion_syn","k":99}"#,
+        )
+        .unwrap_err();
+        assert!(e.1.contains("1..=32"), "{}", e.1);
+    }
+
+    #[test]
+    fn overloaded_reply_is_a_parsable_error_plus_markers() {
+        let j = overloaded_response(Some(4.0), "queue full", 25);
+        let back = Json::parse(&j.to_string()).unwrap();
+        // an old client sees a plain structured error
+        assert!(!back.req("ok").as_bool());
+        assert!(back.req("error").as_str().contains("overloaded"));
+        assert_eq!(back.req("id").as_f64(), 4.0);
+        // a new client can detect shed-vs-bad-request and back off
+        assert!(back.req("overloaded").as_bool());
+        assert_eq!(back.req("retry_after_ms").as_f64(), 25.0);
     }
 
     #[test]

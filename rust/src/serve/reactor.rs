@@ -1,0 +1,951 @@
+//! The serving event loop (DESIGN.md §16): each reactor thread owns a
+//! [`Poller`] and a slab of non-blocking connections, frames NDJSON
+//! request lines, runs admission control, and hands compute work to
+//! the session/batcher tier over a channel. Completed replies come
+//! back through a [`ReplySink`] — a mutex inbox plus [`Waker`] — so
+//! compute threads never touch a socket and a reactor is never blocked
+//! on one.
+//!
+//! Invariants the tests pin:
+//! - **Ordered replies.** Every non-empty request line gets exactly
+//!   one reply line, in arrival order per connection, even though
+//!   point and infer completions finish on different threads
+//!   ([`Sequencer`] parks early completions).
+//! - **Bounded memory.** A request line without a newline beyond
+//!   `max_line` gets a structured error and the connection is closed
+//!   after the reply flushes — never an unbounded buffer. A client
+//!   that stops reading its replies is shed at `wbuf_cap`.
+//! - **Bounded queue.** Compute admission goes through
+//!   [`Metrics::try_admit`]; a full queue or a connection over its
+//!   in-flight cap sheds with [`protocol::overloaded_response`], it
+//!   never queues unboundedly.
+//! - **Slowloris containment.** A connection stalled mid-line longer
+//!   than `idle_timeout` is closed (timer runs from the *start* of the
+//!   partial line, so trickling one byte per second does not reset
+//!   it). Fully idle connections — no partial line — cost nothing and
+//!   are never reaped; cheap idle connections are the point of the
+//!   reactor.
+//! - **Stale-completion safety.** Slots are reused under a
+//!   generation counter; a completion for a connection that died
+//!   mid-request is discarded, never delivered to the slot's new
+//!   tenant.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::evloop::{fd_of, would_block, Event, Interest, Poller, Waker};
+use crate::util::json::Json;
+
+use super::metrics::{Kind, Metrics};
+use super::protocol::{self, InferReq, PointReq, Request};
+
+/// Poller token reserved for the cross-thread waker; connection slots
+/// use their index.
+const WAKE: u64 = u64::MAX;
+
+/// Hard cap on a request line (bytes) before the reactor replies with
+/// a structured error and closes: an oversized line must cost one
+/// buffer, not the heap. Generous — the largest legal request (a
+/// 64-sample infer on the widest dataset) is well under 1 MiB.
+pub const DEFAULT_MAX_LINE: usize = 4 << 20;
+/// Unflushed reply bytes tolerated per connection before the client
+/// is shed as too slow.
+pub const DEFAULT_WBUF_CAP: usize = 4 << 20;
+/// Per-connection cap on admitted-but-unanswered compute requests.
+pub const DEFAULT_INFLIGHT_CAP: u64 = 32;
+/// `retry_after_ms` hint carried on shed replies.
+pub const DEFAULT_RETRY_AFTER_MS: u64 = 25;
+
+/// Compute work a reactor hands to the session thread. Everything
+/// protocol-validated; `sink` is where the (serialized) reply goes.
+pub enum Work {
+    Point {
+        req: PointReq,
+        /// `true` for a shard-to-shard `peer_point` fetch — always
+        /// solved locally, never re-forwarded (DESIGN.md §16).
+        peer: bool,
+        sink: ReplySink,
+        t0: Instant,
+    },
+    Infer {
+        req: InferReq,
+        sink: ReplySink,
+        t0: Instant,
+    },
+}
+
+/// One finished reply heading back to its reactor.
+pub struct Completion {
+    slot: usize,
+    gen: u64,
+    seq: u64,
+    line: String,
+}
+
+#[derive(Default)]
+struct Inbox {
+    conns: Vec<TcpStream>,
+    completions: Vec<Completion>,
+}
+
+/// The cross-thread half of a reactor: the acceptor pushes fresh
+/// connections, compute threads push completions; both wake the loop.
+pub struct ReactorShared {
+    inbox: Mutex<Inbox>,
+    waker: Waker,
+}
+
+impl ReactorShared {
+    /// Hand a freshly accepted connection to this reactor.
+    pub fn push_conn(&self, stream: TcpStream) {
+        self.inbox.lock().unwrap().conns.push(stream);
+        self.waker.wake();
+    }
+
+    fn push_completion(&self, c: Completion) {
+        self.inbox.lock().unwrap().completions.push(c);
+        self.waker.wake();
+    }
+}
+
+enum SinkTarget {
+    Reactor {
+        shared: Arc<ReactorShared>,
+        slot: usize,
+        gen: u64,
+        seq: u64,
+    },
+    /// Test/bench harness: the serialized reply line goes to a plain
+    /// channel instead of a reactor (lets the batcher run without any
+    /// sockets).
+    Channel(Sender<String>),
+}
+
+/// Single-use reply address for one admitted compute request.
+/// Consuming it decrements the global pending gauge, so the bounded
+/// queue accounts every admitted request exactly once.
+pub struct ReplySink {
+    target: SinkTarget,
+    pending: Option<Arc<Metrics>>,
+}
+
+impl ReplySink {
+    fn to_reactor(
+        shared: Arc<ReactorShared>,
+        slot: usize,
+        gen: u64,
+        seq: u64,
+        metrics: Arc<Metrics>,
+    ) -> ReplySink {
+        ReplySink {
+            target: SinkTarget::Reactor {
+                shared,
+                slot,
+                gen,
+                seq,
+            },
+            pending: Some(metrics),
+        }
+    }
+
+    /// A sink that forwards the serialized reply line to `tx` (unit
+    /// tests and the batcher's own tests).
+    pub fn to_channel(tx: Sender<String>) -> ReplySink {
+        ReplySink {
+            target: SinkTarget::Channel(tx),
+            pending: None,
+        }
+    }
+
+    /// Deliver the reply. Infallible from the caller's view: a dead
+    /// reactor or dropped test receiver just discards the line (the
+    /// connection it was for is gone anyway).
+    pub fn send(self, reply: &Json) {
+        let line = reply.to_string();
+        if let Some(m) = &self.pending {
+            m.pending_dec();
+        }
+        match self.target {
+            SinkTarget::Reactor {
+                shared,
+                slot,
+                gen,
+                seq,
+            } => shared.push_completion(Completion {
+                slot,
+                gen,
+                seq,
+                line,
+            }),
+            SinkTarget::Channel(tx) => {
+                let _ = tx.send(line);
+            }
+        }
+    }
+}
+
+/// Per-connection reply ordering: every non-empty request line is
+/// allocated the next sequence number on arrival; replies are released
+/// strictly in that order, parking any that finish early.
+pub struct Sequencer {
+    next_alloc: u64,
+    next_deliver: u64,
+    parked: Vec<(u64, String)>,
+}
+
+impl Sequencer {
+    pub fn new() -> Sequencer {
+        Sequencer {
+            next_alloc: 0,
+            next_deliver: 0,
+            parked: Vec::new(),
+        }
+    }
+
+    pub fn alloc(&mut self) -> u64 {
+        let s = self.next_alloc;
+        self.next_alloc += 1;
+        s
+    }
+
+    /// Accept the reply for `seq`; returns every line now ready to
+    /// write, in order (empty if `seq` is still ahead of the stream).
+    pub fn accept(&mut self, seq: u64, line: String) -> Vec<String> {
+        if seq != self.next_deliver {
+            self.parked.push((seq, line));
+            return Vec::new();
+        }
+        let mut out = vec![line];
+        self.next_deliver += 1;
+        while let Some(i) = self
+            .parked
+            .iter()
+            .position(|(s, _)| *s == self.next_deliver)
+        {
+            out.push(self.parked.swap_remove(i).1);
+            self.next_deliver += 1;
+        }
+        out
+    }
+}
+
+impl Default for Sequencer {
+    fn default() -> Self {
+        Sequencer::new()
+    }
+}
+
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    seq: Sequencer,
+    /// Admitted compute requests not yet answered.
+    inflight: u64,
+    /// When the current partial (newline-less) request line started;
+    /// `None` while the read buffer is empty.
+    partial_since: Option<Instant>,
+    /// Flush the write buffer, then close; stop reading now.
+    draining: bool,
+    /// Whether the poller registration currently includes write
+    /// interest.
+    want_write: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            seq: Sequencer::new(),
+            inflight: 0,
+            partial_since: None,
+            draining: false,
+            want_write: false,
+        }
+    }
+
+    fn flushed(&self) -> bool {
+        self.wpos >= self.wbuf.len()
+    }
+}
+
+/// Everything a reactor thread needs; built by the server.
+pub struct ReactorCfg {
+    /// This reactor's index (metrics gauge slot).
+    pub index: usize,
+    /// Global bound on admitted-but-unanswered compute requests
+    /// (shared via [`Metrics::try_admit`]).
+    pub queue_cap: usize,
+    pub inflight_cap: u64,
+    pub max_line: usize,
+    pub wbuf_cap: usize,
+    pub idle_timeout: Duration,
+    pub retry_after_ms: u64,
+    pub shutdown: Arc<AtomicBool>,
+    pub metrics: Arc<Metrics>,
+    /// Static server info merged into every stats reply.
+    pub info: Json,
+    pub work_tx: Sender<Work>,
+}
+
+/// Spawn one reactor thread; returns its cross-thread handle and the
+/// join handle (joins once shutdown is flagged and its connections
+/// have drained).
+pub fn spawn(
+    cfg: ReactorCfg,
+) -> io::Result<(Arc<ReactorShared>, JoinHandle<()>)> {
+    let poller = Poller::new()?;
+    let waker = Waker::new(&poller, WAKE)?;
+    let shared = Arc::new(ReactorShared {
+        inbox: Mutex::new(Inbox::default()),
+        waker,
+    });
+    let name = format!("serve-reactor-{}", cfg.index);
+    let sh = shared.clone();
+    let handle = std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            Reactor {
+                cfg,
+                poller,
+                shared: sh,
+                conns: Vec::new(),
+                gens: Vec::new(),
+                free: Vec::new(),
+            }
+            .run()
+        })
+        .map_err(io::Error::other)?;
+    Ok((shared, handle))
+}
+
+struct Reactor {
+    cfg: ReactorCfg,
+    poller: Poller,
+    shared: Arc<ReactorShared>,
+    conns: Vec<Option<Conn>>,
+    /// Per-slot generation, bumped on close so stale completions are
+    /// discarded (lives outside `Conn` to survive slot reuse).
+    gens: Vec<u64>,
+    free: Vec<usize>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let tick = self
+            .cfg
+            .idle_timeout
+            .min(Duration::from_millis(100))
+            .max(Duration::from_millis(5));
+        let mut events: Vec<Event> = Vec::new();
+        let mut drain_since: Option<Instant> = None;
+        loop {
+            if let Err(e) = self.poller.wait(&mut events, Some(tick)) {
+                eprintln!(
+                    "capmin serve: reactor {} poller failed: {e}",
+                    self.cfg.index
+                );
+                return;
+            }
+            // IO first, inbox second: a slot freed by an IO close must
+            // not be re-tenanted before this batch's (now stale)
+            // events for it are done.
+            let mut woke = false;
+            for ev in &events {
+                if ev.token == WAKE {
+                    woke = true;
+                }
+            }
+            let batch: Vec<Event> = events
+                .iter()
+                .filter(|e| e.token != WAKE)
+                .copied()
+                .collect();
+            for ev in batch {
+                let slot = ev.token as usize;
+                if slot < self.conns.len() {
+                    self.handle_io(
+                        slot,
+                        ev.readable,
+                        ev.writable,
+                        ev.hangup,
+                    );
+                }
+            }
+            if woke {
+                self.drain_inbox();
+            }
+            self.sweep_stalled(Instant::now());
+            if self.cfg.shutdown.load(Ordering::SeqCst) {
+                let since =
+                    *drain_since.get_or_insert_with(Instant::now);
+                // hard backstop: a shed-proof client that never reads
+                // its last replies cannot wedge shutdown forever
+                if since.elapsed() > Duration::from_secs(30) {
+                    for slot in 0..self.conns.len() {
+                        self.close(slot);
+                    }
+                }
+                if self.drain_step() {
+                    return;
+                }
+            }
+        }
+    }
+
+    fn handle_io(
+        &mut self,
+        slot: usize,
+        readable: bool,
+        writable: bool,
+        hangup: bool,
+    ) {
+        if readable || hangup {
+            if self.read_phase(slot).is_err() {
+                self.close(slot);
+                return;
+            }
+            self.process_lines(slot);
+        }
+        if writable || readable || hangup {
+            self.flush(slot);
+        }
+    }
+
+    /// Drain the socket into the read buffer. `Err` means the
+    /// connection is dead (EOF or hard error).
+    fn read_phase(&mut self, slot: usize) -> Result<(), ()> {
+        let Some(conn) = self.conns[slot].as_mut() else {
+            return Ok(());
+        };
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => return Err(()), // peer closed
+                Ok(n) => {
+                    if conn.draining {
+                        continue; // discard: reply is on its way out
+                    }
+                    conn.rbuf.extend_from_slice(&buf[..n]);
+                    // stop pulling once far past the line cap; the
+                    // oversized-line error path takes it from here
+                    if conn.rbuf.len() > self.cfg.max_line {
+                        return Ok(());
+                    }
+                }
+                Err(ref e) if would_block(e) => return Ok(()),
+                Err(_) => return Err(()),
+            }
+        }
+    }
+
+    /// Frame and handle every complete request line buffered on
+    /// `slot`, then update the partial-line stall timer.
+    fn process_lines(&mut self, slot: usize) {
+        let mut progressed = false;
+        loop {
+            let Some(conn) = self.conns[slot].as_mut() else {
+                return;
+            };
+            if conn.draining {
+                conn.rbuf.clear();
+                break;
+            }
+            match conn.rbuf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    let raw: Vec<u8> =
+                        conn.rbuf.drain(..=pos).collect();
+                    let line = String::from_utf8_lossy(&raw[..pos])
+                        .into_owned();
+                    progressed = true;
+                    self.handle_line(slot, &line);
+                }
+                None => {
+                    if conn.rbuf.len() > self.cfg.max_line {
+                        // structured refusal, then close once the
+                        // reply has flushed — bounded memory, not OOM
+                        let seq = conn.seq.alloc();
+                        conn.draining = true;
+                        conn.rbuf = Vec::new(); // free, not retain
+                        self.cfg.metrics.inc_error();
+                        let reply = protocol::error_response(
+                            None,
+                            &format!(
+                                "request line exceeds {} bytes \
+                                 (closing)",
+                                self.cfg.max_line
+                            ),
+                        );
+                        self.deliver(slot, seq, &reply);
+                    }
+                    break;
+                }
+            }
+        }
+        if let Some(conn) = self.conns[slot].as_mut() {
+            if conn.rbuf.is_empty() {
+                conn.partial_since = None;
+            } else if progressed || conn.partial_since.is_none() {
+                // a fresh partial line starts its stall clock; an
+                // unfinished one keeps its original start so a
+                // byte-trickling client cannot reset it
+                conn.partial_since = Some(Instant::now());
+            }
+        }
+    }
+
+    fn handle_line(&mut self, slot: usize, line: &str) {
+        let line = line.trim();
+        if line.is_empty() {
+            return; // keep-alive blank lines get no seq and no reply
+        }
+        let seq = match self.conns[slot].as_mut() {
+            Some(conn) => conn.seq.alloc(),
+            None => return,
+        };
+        let m = self.cfg.metrics.clone();
+        match Request::parse(line) {
+            Err((id, msg)) => {
+                m.inc_error();
+                let reply = protocol::error_response(id, &msg);
+                self.deliver(slot, seq, &reply);
+            }
+            Ok(Request::Stats { id }) => {
+                m.inc(Kind::Stats);
+                let stats = merge_stats(&self.cfg.info, m.to_json());
+                let reply = protocol::stats_response(id, stats);
+                self.deliver(slot, seq, &reply);
+            }
+            Ok(Request::Shutdown { id }) => {
+                m.inc(Kind::Shutdown);
+                let reply = protocol::shutdown_response(id);
+                self.deliver(slot, seq, &reply);
+                // reply first, then flag: the drain pass below must
+                // find this reply already queued on the socket
+                self.cfg.shutdown.store(true, Ordering::SeqCst);
+            }
+            Ok(req) => self.admit(slot, seq, req),
+        }
+    }
+
+    /// Admission control for compute requests (DESIGN.md §16): per-
+    /// connection in-flight cap first, then the global bounded queue.
+    /// Sheds answer inline with a structured `overloaded` reply — in
+    /// sequence, like any other reply.
+    fn admit(&mut self, slot: usize, seq: u64, req: Request) {
+        let m = self.cfg.metrics.clone();
+        let (id, kind) = match &req {
+            Request::Point(p) => (p.id, Kind::Point),
+            Request::PeerPoint(p) => (p.id, Kind::PeerPoint),
+            Request::Infer(q) => (q.id, Kind::Infer),
+            _ => unreachable!("admit() only sees compute requests"),
+        };
+        let inflight = match self.conns[slot].as_ref() {
+            Some(c) => c.inflight,
+            None => return,
+        };
+        if inflight >= self.cfg.inflight_cap {
+            m.shed_conn_cap();
+            let reply = protocol::overloaded_response(
+                Some(id),
+                &format!(
+                    "connection in-flight cap ({}) reached",
+                    self.cfg.inflight_cap
+                ),
+                self.cfg.retry_after_ms,
+            );
+            self.deliver(slot, seq, &reply);
+            return;
+        }
+        if !m.try_admit(self.cfg.queue_cap) {
+            m.shed_queue();
+            let reply = protocol::overloaded_response(
+                Some(id),
+                &format!(
+                    "compute queue full ({} pending)",
+                    self.cfg.queue_cap
+                ),
+                self.cfg.retry_after_ms,
+            );
+            self.deliver(slot, seq, &reply);
+            return;
+        }
+        m.inc(kind);
+        let sink = ReplySink::to_reactor(
+            self.shared.clone(),
+            slot,
+            self.gens[slot],
+            seq,
+            m,
+        );
+        let t0 = Instant::now();
+        let work = match req {
+            Request::Point(p) => Work::Point {
+                req: p,
+                peer: false,
+                sink,
+                t0,
+            },
+            Request::PeerPoint(p) => Work::Point {
+                req: p,
+                peer: true,
+                sink,
+                t0,
+            },
+            Request::Infer(q) => Work::Infer { req: q, sink, t0 },
+            _ => unreachable!(),
+        };
+        if let Some(conn) = self.conns[slot].as_mut() {
+            conn.inflight += 1;
+        }
+        if let Err(lost) = self.cfg.work_tx.send(work) {
+            // session thread already gone (drain race): answer here.
+            // The sink routes through our own inbox, so the normal
+            // completion path still delivers it in order.
+            let sink = match lost.0 {
+                Work::Point { sink, .. } | Work::Infer { sink, .. } => {
+                    sink
+                }
+            };
+            sink.send(&protocol::error_response(
+                Some(id),
+                "server is draining",
+            ));
+        }
+    }
+
+    /// Queue one serialized reply line in per-connection order.
+    fn deliver(&mut self, slot: usize, seq: u64, reply: &Json) {
+        let Some(conn) = self.conns[slot].as_mut() else {
+            return;
+        };
+        for line in conn.seq.accept(seq, reply.to_string()) {
+            conn.wbuf.extend_from_slice(line.as_bytes());
+            conn.wbuf.push(b'\n');
+        }
+    }
+
+    /// Write out as much of `slot`'s buffer as the socket takes;
+    /// manage write interest; shed over-cap slow clients; finish
+    /// drain-closes.
+    fn flush(&mut self, slot: usize) {
+        enum After {
+            Keep { want_write: bool },
+            Close,
+        }
+        let after = {
+            let Some(conn) = self.conns[slot].as_mut() else {
+                return;
+            };
+            let mut verdict = None;
+            while conn.wpos < conn.wbuf.len() {
+                match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                    Ok(0) => {
+                        verdict = Some(After::Close);
+                        break;
+                    }
+                    Ok(n) => conn.wpos += n,
+                    Err(ref e) if would_block(e) => {
+                        verdict =
+                            Some(After::Keep { want_write: true });
+                        break;
+                    }
+                    Err(_) => {
+                        verdict = Some(After::Close);
+                        break;
+                    }
+                }
+            }
+            verdict.unwrap_or_else(|| {
+                conn.wbuf.clear();
+                conn.wpos = 0;
+                if conn.draining && conn.inflight == 0 {
+                    After::Close
+                } else {
+                    After::Keep { want_write: false }
+                }
+            })
+        };
+        match after {
+            After::Close => self.close(slot),
+            After::Keep { want_write } => {
+                let conn = self.conns[slot].as_mut().unwrap();
+                if conn.wbuf.len() - conn.wpos > self.cfg.wbuf_cap {
+                    // client not reading its replies: shed it rather
+                    // than buffer without bound
+                    self.cfg.metrics.shed_slow_client();
+                    self.close(slot);
+                    return;
+                }
+                if want_write != conn.want_write {
+                    conn.want_write = want_write;
+                    let interest = if want_write {
+                        Interest::BOTH
+                    } else {
+                        Interest::READ
+                    };
+                    let fd = fd_of(&conn.stream);
+                    let _ =
+                        self.poller.modify(fd, slot as u64, interest);
+                }
+            }
+        }
+    }
+
+    /// Register freshly accepted connections and apply completions
+    /// pushed by the compute tier.
+    fn drain_inbox(&mut self) {
+        self.shared.waker.drain();
+        let (new_conns, completions) = {
+            let mut inbox = self.shared.inbox.lock().unwrap();
+            (
+                std::mem::take(&mut inbox.conns),
+                std::mem::take(&mut inbox.completions),
+            )
+        };
+        for stream in new_conns {
+            self.add_conn(stream);
+        }
+        let mut touched = Vec::new();
+        for c in completions {
+            if c.slot >= self.conns.len()
+                || self.gens[c.slot] != c.gen
+            {
+                continue; // connection died; its slot may be reused
+            }
+            let Some(conn) = self.conns[c.slot].as_mut() else {
+                continue;
+            };
+            conn.inflight = conn.inflight.saturating_sub(1);
+            for line in conn.seq.accept(c.seq, c.line) {
+                conn.wbuf.extend_from_slice(line.as_bytes());
+                conn.wbuf.push(b'\n');
+            }
+            if !touched.contains(&c.slot) {
+                touched.push(c.slot);
+            }
+        }
+        for slot in touched {
+            self.flush(slot);
+        }
+    }
+
+    fn add_conn(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            return; // fd already dead; drop it
+        }
+        let _ = stream.set_nodelay(true);
+        let slot = self.free.pop().unwrap_or_else(|| {
+            self.conns.push(None);
+            self.gens.push(0);
+            self.conns.len() - 1
+        });
+        if self
+            .poller
+            .register(fd_of(&stream), slot as u64, Interest::READ)
+            .is_err()
+        {
+            self.free.push(slot);
+            return;
+        }
+        self.conns[slot] = Some(Conn::new(stream));
+        self.cfg.metrics.conn_opened(self.cfg.index);
+    }
+
+    /// Close connections stalled mid-request-line past the idle
+    /// timeout (slowloris containment; truly idle connections are
+    /// untouched).
+    fn sweep_stalled(&mut self, now: Instant) {
+        let stalled: Vec<usize> = self
+            .conns
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let conn = c.as_ref()?;
+                let since = conn.partial_since?;
+                (now.duration_since(since) > self.cfg.idle_timeout)
+                    .then_some(i)
+            })
+            .collect();
+        for slot in stalled {
+            self.cfg.metrics.idle_timeout();
+            self.close(slot);
+        }
+    }
+
+    /// One shutdown-drain pass: stop reading everywhere, close every
+    /// connection with nothing left to answer or flush. `true` when
+    /// the reactor is empty and may exit.
+    fn drain_step(&mut self) -> bool {
+        let mut closable = Vec::new();
+        for (i, c) in self.conns.iter_mut().enumerate() {
+            if let Some(conn) = c {
+                conn.draining = true;
+                conn.rbuf.clear();
+                if conn.inflight == 0 && conn.flushed() {
+                    closable.push(i);
+                }
+            }
+        }
+        for slot in closable {
+            self.close(slot);
+        }
+        self.conns.iter().all(|c| c.is_none())
+    }
+
+    fn close(&mut self, slot: usize) {
+        if let Some(conn) = self.conns[slot].take() {
+            let _ = self.poller.deregister(fd_of(&conn.stream));
+            self.gens[slot] += 1;
+            self.free.push(slot);
+            self.cfg.metrics.conn_closed(self.cfg.index);
+            // `conn.stream` drops here, closing the fd
+        }
+    }
+}
+
+/// Live metrics with the static server info under `"server"` — the
+/// exact shape the pre-§16 stats reply had, so existing clients keep
+/// parsing.
+fn merge_stats(info: &Json, metrics: Json) -> Json {
+    let mut map = match metrics {
+        Json::Obj(m) => m,
+        _ => Default::default(),
+    };
+    map.insert("server".into(), info.clone());
+    Json::Obj(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+    use std::io::{BufRead, BufReader, Write as _};
+    use std::net::TcpListener;
+    use std::sync::mpsc;
+
+    #[test]
+    fn sequencer_releases_in_alloc_order() {
+        let mut s = Sequencer::new();
+        let (a, b, c) = (s.alloc(), s.alloc(), s.alloc());
+        assert_eq!((a, b, c), (0, 1, 2));
+        // c and b finish before a: both park
+        assert!(s.accept(c, "C".into()).is_empty());
+        assert!(s.accept(b, "B".into()).is_empty());
+        // a releases everything, in order
+        assert_eq!(
+            s.accept(a, "A".into()),
+            vec!["A".to_string(), "B".into(), "C".into()]
+        );
+        // the stream continues where it left off
+        let d = s.alloc();
+        assert_eq!(s.accept(d, "D".into()), vec!["D".to_string()]);
+    }
+
+    #[test]
+    fn channel_sink_decrements_nothing_and_delivers() {
+        let (tx, rx) = mpsc::channel();
+        let sink = ReplySink::to_channel(tx);
+        sink.send(&protocol::error_response(Some(1.0), "x"));
+        let line = rx.recv().unwrap();
+        assert!(line.contains("\"ok\":false") || line.contains("x"));
+    }
+
+    /// End-to-end through a real reactor with a fake compute tier:
+    /// pipelined requests get their replies strictly in order even
+    /// when the compute reply for the first arrives late.
+    #[test]
+    fn reactor_orders_pipelined_replies() {
+        let metrics = Arc::new(Metrics::with_reactors(1));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (work_tx, work_rx) = mpsc::channel::<Work>();
+        let cfg = ReactorCfg {
+            index: 0,
+            queue_cap: 16,
+            inflight_cap: 8,
+            max_line: 1 << 20,
+            wbuf_cap: 1 << 20,
+            idle_timeout: Duration::from_secs(5),
+            retry_after_ms: 10,
+            shutdown: shutdown.clone(),
+            metrics: metrics.clone(),
+            info: obj(vec![("backend", Json::Str("test".into()))]),
+            work_tx,
+        };
+        let (shared, handle) = spawn(cfg).unwrap();
+        // fake session: sits on the first job for a beat, then
+        // answers — the stats reply (handled inline, instantly) must
+        // still come second on the wire
+        let fake = std::thread::spawn(move || {
+            while let Ok(w) = work_rx.recv() {
+                std::thread::sleep(Duration::from_millis(80));
+                match w {
+                    Work::Point { req, sink, .. } => sink.send(
+                        &protocol::error_response(
+                            Some(req.id),
+                            "fake point",
+                        ),
+                    ),
+                    Work::Infer { req, sink, .. } => sink.send(
+                        &protocol::error_response(
+                            Some(req.id),
+                            "fake infer",
+                        ),
+                    ),
+                }
+            }
+        });
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        shared.push_conn(server_side);
+
+        let mut w = client.try_clone().unwrap();
+        w.write_all(
+            b"{\"v\":1,\"id\":1,\"type\":\"point\",\
+              \"dataset\":\"fashion_syn\",\"k\":14}\n\
+              {\"v\":1,\"id\":2,\"type\":\"stats\"}\n",
+        )
+        .unwrap();
+        let mut r = BufReader::new(client);
+        let mut first = String::new();
+        let mut second = String::new();
+        r.read_line(&mut first).unwrap();
+        r.read_line(&mut second).unwrap();
+        let first = Json::parse(&first).unwrap();
+        let second = Json::parse(&second).unwrap();
+        assert_eq!(
+            first.req("id").as_f64(),
+            1.0,
+            "slow compute reply must still come first"
+        );
+        assert_eq!(second.req("id").as_f64(), 2.0);
+        assert_eq!(second.req("type").as_str(), "stats");
+        assert_eq!(
+            second
+                .req("stats")
+                .req("server")
+                .req("backend")
+                .as_str(),
+            "test"
+        );
+        assert_eq!(metrics.queue_depth(), 0, "pending leaked");
+
+        // drain: flag + wake, reactor exits once the conn closes
+        drop(r);
+        shutdown.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+        drop(fake);
+    }
+}

@@ -1,28 +1,47 @@
-//! The serve runtime (DESIGN.md §12): accept loop, a fixed crew of
-//! connection workers, the session thread owning the one warm
-//! [`DesignSession`], and the batcher thread owning the serving
-//! [`NativeBackend`] — every thread and pool spawned once at startup,
-//! nothing constructed per request.
+//! The serve runtime (DESIGN.md §16): a non-blocking acceptor, a crew
+//! of epoll/kqueue reactor threads that own every socket, the session
+//! thread owning the one warm [`DesignSession`], and the batcher
+//! thread owning the serving [`NativeBackend`] — every thread and pool
+//! spawned once at startup, nothing constructed per request, and no
+//! thread ever blocked on a client's socket.
+//!
+//! Request flow: reactor frames a line → admission control
+//! ([`Metrics::try_admit`] bounds the compute queue; over-cap requests
+//! shed with a structured `overloaded` reply) → [`Work`] to the
+//! session thread → point solves answer directly, infers resolve
+//! their folded model then queue on the batcher → the completed reply
+//! returns through a [`reactor::ReplySink`] to the owning reactor,
+//! which writes it in per-connection order.
+//!
+//! Sharding (`--peers`/`--shards`): N processes (or in-process
+//! servers) agree on a consistent-hash ring over operating-point
+//! cache keys ([`HashRing`]); a point owned by another shard is
+//! fetched from it over a `peer_point` request — always solved
+//! locally by the owner, never re-forwarded — and falls back to a
+//! local solve when the peer is unreachable. Peer replies are
+//! bit-identical to local solves because the cache key excludes
+//! run-dir and thread-count knobs (`tests/serve.rs` pins this).
 //!
 //! Lifetimes / shutdown (the drain order is the design):
 //!
-//! 1. a `Shutdown` request flips the flag and pokes the accept loop
-//!    awake; the requesting connection is answered, then closed;
-//! 2. the accept loop stops and drops the connection queue — workers
-//!    finish their current connections (in-flight requests complete
-//!    and reply) and exit;
-//! 3. with every worker gone, the batcher's job senders are gone: it
-//!    finishes the queued micro-batches and exits; likewise the
-//!    session thread;
-//! 4. `run`/`Server::join` returns only after every thread is joined,
+//! 1. a `Shutdown` request is answered by its reactor, which then
+//!    flips the shared flag;
+//! 2. the acceptor notices within a tick, stops accepting, and drops
+//!    the listener (the port is released before the drain finishes);
+//! 3. each reactor stops reading, finishes delivering every admitted
+//!    request's reply, closes its connections and exits — dropping
+//!    its work sender;
+//! 4. with every reactor gone, the session thread's queue closes: it
+//!    finishes queued work and exits, dropping the batcher's job
+//!    sender; the batcher finishes its micro-batches and exits;
+//! 5. `run`/`Server::join` returns only after every thread is joined,
 //!    so a clean exit means a clean drain.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, ErrorKind, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -35,17 +54,20 @@ use crate::bnn::ErrorModel;
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::store::NamedTensor;
 use crate::data::synth::Dataset;
-use crate::session::{DesignSession, OperatingPoint, OperatingPointSpec};
+use crate::session::{DesignSession, OperatingPointSpec};
+use crate::util::evloop::{fd_of, would_block, Interest, Poller};
 use crate::util::json::{obj, Json};
 use crate::util::pool::ScopedPool;
 
 use super::batcher::{self, BatchPolicy, InferJob};
-use super::metrics::{Kind, Metrics};
-use super::protocol::{self, Request};
+use super::client::{Backoff, Client};
+use super::metrics::Metrics;
+use super::protocol::{self, PointReq};
+use super::reactor::{self, ReactorCfg, Work};
+use super::shard::HashRing;
 
-/// How often a blocked connection read wakes up to check the shutdown
-/// flag.
-const READ_POLL: Duration = Duration::from_millis(50);
+/// How often the acceptor wakes to check the shutdown flag.
+const ACCEPT_TICK: Duration = Duration::from_millis(50);
 
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
@@ -56,6 +78,26 @@ pub struct ServeOptions {
     pub max_wait_ms: u64,
     /// Datasets to pre-warm (fold + F_MAC) before serving traffic.
     pub warm: Vec<Dataset>,
+    /// Event-loop threads owning the sockets (DESIGN.md §16).
+    pub reactors: usize,
+    /// Bound on admitted-but-unanswered compute requests across all
+    /// connections; the excess sheds with `overloaded` replies.
+    pub queue_cap: usize,
+    /// Per-connection cap on in-flight compute requests.
+    pub inflight_cap: u64,
+    /// Close a connection stalled mid-request-line this long
+    /// (milliseconds). Fully idle connections are never reaped.
+    pub idle_timeout_ms: u64,
+    /// Largest accepted request line, bytes.
+    pub max_line: usize,
+    /// Unflushed reply bytes tolerated before a slow client is shed.
+    pub wbuf_cap: usize,
+    /// The full ordered shard ring, **including this server**; empty
+    /// means standalone. Every member must be started with the same
+    /// list (order matters — ring points hash indices).
+    pub peers: Vec<SocketAddr>,
+    /// This server's index into `peers`.
+    pub shard: usize,
 }
 
 impl ServeOptions {
@@ -65,29 +107,43 @@ impl ServeOptions {
             max_batch: 8,
             max_wait_ms: 2,
             warm: vec![],
+            reactors: 2,
+            queue_cap: 256,
+            inflight_cap: reactor::DEFAULT_INFLIGHT_CAP,
+            idle_timeout_ms: 30_000,
+            max_line: reactor::DEFAULT_MAX_LINE,
+            wbuf_cap: reactor::DEFAULT_WBUF_CAP,
+            peers: vec![],
+            shard: 0,
         }
     }
 }
 
-/// Static facts fixed at startup, reported by `Stats` so clients can
-/// pin that nothing is re-spawned per request.
+/// Static facts fixed at startup, reported under `"server"` in every
+/// `Stats` reply so clients can pin that nothing is re-spawned per
+/// request.
 struct ServerInfo {
-    addr: SocketAddr,
     backend: &'static str,
-    workers: usize,
+    /// Reactor threads (kept under the historical `workers` key too,
+    /// so pre-§16 stability checks keep holding).
+    reactors: usize,
     /// Persistent kernel-pool crews: (session solve pool, batcher
     /// inference pool). Stable for the server's life.
     session_pool_workers: usize,
     infer_pool_workers: usize,
     max_batch: usize,
     max_wait_ms: u64,
+    queue_cap: usize,
+    shards: usize,
+    shard: usize,
 }
 
 impl ServerInfo {
     fn to_json(&self) -> Json {
         obj(vec![
             ("backend", Json::Str(self.backend.to_string())),
-            ("workers", Json::Num(self.workers as f64)),
+            ("workers", Json::Num(self.reactors as f64)),
+            ("reactors", Json::Num(self.reactors as f64)),
             (
                 "session_pool_workers",
                 Json::Num(self.session_pool_workers as f64),
@@ -98,33 +154,11 @@ impl ServerInfo {
             ),
             ("max_batch", Json::Num(self.max_batch as f64)),
             ("max_wait_ms", Json::Num(self.max_wait_ms as f64)),
+            ("queue_cap", Json::Num(self.queue_cap as f64)),
+            ("shards", Json::Num(self.shards as f64)),
+            ("shard", Json::Num(self.shard as f64)),
         ])
     }
-}
-
-/// Everything a prepared `Infer` needs, resolved once per
-/// (dataset, k, sigma, phi) by the session thread and cached there.
-#[derive(Clone)]
-struct Prepared {
-    model: &'static str,
-    pixels: usize,
-    n_classes: usize,
-    folded: Arc<Vec<NamedTensor>>,
-    ems: Arc<Vec<ErrorModel>>,
-}
-
-enum SessionMsg {
-    Point {
-        spec: OperatingPointSpec,
-        reply: Sender<Result<(String, Arc<OperatingPoint>), String>>,
-    },
-    Prepare {
-        ds: Dataset,
-        k: usize,
-        sigma: f64,
-        phi: usize,
-        reply: Sender<Result<Prepared, String>>,
-    },
 }
 
 /// A running server handle (`spawn`); `join` blocks until drain.
@@ -153,6 +187,16 @@ pub fn spawn(
 ) -> Result<Server> {
     let listener = TcpListener::bind(opts.addr)
         .with_context(|| format!("binding {}", opts.addr))?;
+    spawn_on(listener, cfg, opts)
+}
+
+/// [`spawn`] on an already-bound listener — shard rings bind every
+/// member first so each server can be handed the full address list.
+pub fn spawn_on(
+    listener: TcpListener,
+    cfg: ExperimentConfig,
+    opts: ServeOptions,
+) -> Result<Server> {
     let addr = listener.local_addr()?;
     let handle =
         std::thread::spawn(move || run_bound(listener, cfg, opts));
@@ -171,43 +215,116 @@ pub fn run(cfg: ExperimentConfig, opts: ServeOptions) -> Result<()> {
     run_bound(listener, cfg, opts)
 }
 
+/// `capmin serve --shards N`: spawn an in-process consistent-hash
+/// ring — shard 0 on the requested address, the rest on ephemeral
+/// loopback ports — and serve until shard 0 is shut down, then drain
+/// the rest. One process, N independent serving stacks.
+pub fn run_sharded(
+    cfg: ExperimentConfig,
+    opts: ServeOptions,
+    shards: usize,
+) -> Result<()> {
+    let shards = shards.max(1);
+    let mut listeners = vec![TcpListener::bind(opts.addr)
+        .with_context(|| format!("binding {}", opts.addr))?];
+    for _ in 1..shards {
+        listeners.push(TcpListener::bind("127.0.0.1:0")?);
+    }
+    let addrs: Vec<SocketAddr> = listeners
+        .iter()
+        .map(|l| l.local_addr())
+        .collect::<std::io::Result<_>>()?;
+    println!(
+        "capmin serve: listening on {} ({} shard ring: {})",
+        addrs[0],
+        shards,
+        addrs
+            .iter()
+            .map(|a| a.to_string())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let mut rest = Vec::new();
+    let mut iter = listeners.into_iter();
+    let first = iter.next().unwrap();
+    for (i, l) in iter.enumerate() {
+        let mut o = opts.clone();
+        o.addr = addrs[i + 1];
+        o.peers = addrs.clone();
+        o.shard = i + 1;
+        rest.push(spawn_on(l, cfg.clone(), o)?);
+    }
+    let mut o = opts;
+    o.peers = addrs.clone();
+    o.shard = 0;
+    let r = run_bound(first, cfg, o);
+    // shard 0 drained: drain the others, best-effort, then join
+    for addr in addrs.iter().skip(1) {
+        if let Ok(mut c) = Client::connect(*addr) {
+            let _ = c.shutdown();
+        }
+    }
+    for s in rest {
+        let _ = s.join();
+    }
+    r
+}
+
+/// Spawn a ring of in-process shard servers on ephemeral loopback
+/// ports, one config per shard (tests give each its own run dir to
+/// prove peer fetches really cross the wire). Returns the servers in
+/// ring order.
+pub fn spawn_ring(
+    cfgs: Vec<ExperimentConfig>,
+    base: ServeOptions,
+) -> Result<Vec<Server>> {
+    let mut listeners = Vec::new();
+    for _ in 0..cfgs.len() {
+        listeners.push(TcpListener::bind("127.0.0.1:0")?);
+    }
+    let addrs: Vec<SocketAddr> = listeners
+        .iter()
+        .map(|l| l.local_addr())
+        .collect::<std::io::Result<_>>()?;
+    cfgs.into_iter()
+        .zip(listeners)
+        .enumerate()
+        .map(|(i, (cfg, l))| {
+            let mut o = base.clone();
+            o.addr = addrs[i];
+            o.peers = addrs.clone();
+            o.shard = i;
+            spawn_on(l, cfg, o)
+        })
+        .collect()
+}
+
 fn run_bound(
     listener: TcpListener,
     cfg: ExperimentConfig,
     opts: ServeOptions,
 ) -> Result<()> {
-    let addr = listener.local_addr()?;
-    let threads = ScopedPool::new(cfg.threads).threads();
-    // enough connection workers that a full micro-batch of
-    // single-request clients can be in flight at once (workers block
-    // on their request's reply; they are IO threads, not compute)
-    let workers = threads.max(opts.max_batch).clamp(2, 64);
-    let metrics = Arc::new(Metrics::new());
+    let n_reactors = opts.reactors.max(1);
+    let metrics = Arc::new(Metrics::with_reactors(n_reactors));
     let shutdown = Arc::new(AtomicBool::new(false));
 
     // both kernel crews are spawned here, once, and only referenced
     // afterwards (ScopedPool::spawned_workers stays constant)
     let session_pool = ScopedPool::persistent(cfg.threads);
     let infer_pool = ScopedPool::persistent(cfg.threads);
-    let info = Arc::new(ServerInfo {
-        addr,
+    let shards = opts.peers.len().max(1);
+    let info = ServerInfo {
         backend: "native",
-        workers,
+        reactors: n_reactors,
         session_pool_workers: session_pool.spawned_workers(),
         infer_pool_workers: infer_pool.spawned_workers(),
         max_batch: opts.max_batch.max(1),
         max_wait_ms: opts.max_wait_ms,
-    });
-
-    // session thread: owns the one warm DesignSession
-    let (session_tx, session_rx) = mpsc::channel::<SessionMsg>();
-    let session_handle = {
-        let cfg = cfg.clone();
-        let warm = opts.warm.clone();
-        std::thread::spawn(move || {
-            session_thread(cfg, warm, session_pool, session_rx)
-        })
-    };
+        queue_cap: opts.queue_cap,
+        shards,
+        shard: opts.shard,
+    }
+    .to_json();
 
     // batcher thread: owns the serving NativeBackend
     let (infer_tx, infer_rx) = mpsc::channel::<InferJob>();
@@ -225,88 +342,181 @@ fn run_bound(
         })
     };
 
-    // connection workers: the fixed crew, spawned once. `admitted`
-    // counts connections handed to the crew and not yet finished, so
-    // the accept loop can refuse (with a structured error, not silent
-    // starvation) instead of queueing behind long-lived connections.
-    let admitted = Arc::new(std::sync::atomic::AtomicUsize::new(0));
-    let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
-    let conn_rx = Arc::new(Mutex::new(conn_rx));
-    let worker_handles: Vec<JoinHandle<()>> = (0..workers)
-        .map(|_| {
-            let conn_rx = conn_rx.clone();
-            let session_tx = session_tx.clone();
-            let infer_tx = infer_tx.clone();
-            let metrics = metrics.clone();
-            let shutdown = shutdown.clone();
-            let info = info.clone();
-            let admitted = admitted.clone();
-            std::thread::spawn(move || {
-                worker_loop(
-                    &conn_rx, &session_tx, &infer_tx, &metrics,
-                    &shutdown, &info, &admitted,
-                )
-            })
+    // session thread: owns the one warm DesignSession and the shard
+    // ring's outbound peer links
+    let (work_tx, work_rx) = mpsc::channel::<Work>();
+    let session_handle = {
+        let cfg = cfg.clone();
+        let warm = opts.warm.clone();
+        let metrics = metrics.clone();
+        let peers = opts.peers.clone();
+        let shard = opts.shard;
+        std::thread::spawn(move || {
+            session_thread(
+                cfg, warm, session_pool, work_rx, infer_tx, metrics,
+                peers, shard,
+            )
         })
-        .collect();
-    // workers hold the only long-lived clones: when they exit, the
-    // compute threads see their queues close and drain out
-    drop(session_tx);
-    drop(infer_tx);
+    };
 
-    // accept loop (this thread)
-    for conn in listener.incoming() {
-        if shutdown.load(Ordering::SeqCst) {
-            break; // the waking connection is dropped unserved
-        }
-        match conn {
-            Ok(mut stream) => {
-                // every worker busy AND a full extra batch already
-                // queued: refuse loudly rather than park the client
-                // behind connections that may never close
-                if admitted.load(Ordering::SeqCst) >= 2 * workers {
-                    metrics.inc_error();
-                    let mut s = protocol::error_response(
-                        None,
-                        &format!(
-                            "server at connection capacity ({workers} \
-                             workers busy, {workers} queued) — retry"
-                        ),
-                    )
-                    .to_string();
-                    s.push('\n');
-                    let _ = stream.write_all(s.as_bytes());
-                    continue; // stream drops closed
+    // reactor crew: own every socket from here on
+    let mut reactor_shareds = Vec::new();
+    let mut reactor_handles = Vec::new();
+    for index in 0..n_reactors {
+        let (shared, handle) = reactor::spawn(ReactorCfg {
+            index,
+            queue_cap: opts.queue_cap,
+            inflight_cap: opts.inflight_cap.max(1),
+            max_line: opts.max_line,
+            wbuf_cap: opts.wbuf_cap,
+            idle_timeout: Duration::from_millis(
+                opts.idle_timeout_ms.max(1),
+            ),
+            retry_after_ms: reactor::DEFAULT_RETRY_AFTER_MS,
+            shutdown: shutdown.clone(),
+            metrics: metrics.clone(),
+            info: info.clone(),
+            work_tx: work_tx.clone(),
+        })?;
+        reactor_shareds.push(shared);
+        reactor_handles.push(handle);
+    }
+    // the reactors hold the only work senders: when the last one
+    // exits, the session thread sees its queue close and drains
+    drop(work_tx);
+
+    // non-blocking accept loop (this thread): hand connections to the
+    // reactors round-robin
+    listener.set_nonblocking(true)?;
+    let poller = Poller::new()?;
+    poller.register(fd_of(&listener), 0, Interest::READ)?;
+    let mut events = Vec::new();
+    let mut next = 0usize;
+    while !shutdown.load(Ordering::SeqCst) {
+        poller.wait(&mut events, Some(ACCEPT_TICK))?;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    reactor_shareds[next % n_reactors]
+                        .push_conn(stream);
+                    next += 1;
                 }
-                admitted.fetch_add(1, Ordering::SeqCst);
-                // a send can only fail after every worker exited,
-                // which only happens on shutdown
-                if conn_tx.send(stream).is_err() {
+                Err(ref e) if would_block(e) => break,
+                Err(ref e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted =>
+                {
+                    continue
+                }
+                Err(_) => {
+                    // transient accept failure (EMFILE and friends):
+                    // refuse loudly in the metrics and back off a beat
+                    metrics.refuse_conn();
+                    std::thread::sleep(Duration::from_millis(10));
                     break;
                 }
             }
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(_) => continue,
         }
     }
-    drop(conn_tx);
-    for h in worker_handles {
+    // release the port before the drain finishes so a restart can
+    // bind immediately
+    poller.deregister(fd_of(&listener)).ok();
+    drop(listener);
+    for h in reactor_handles {
         let _ = h.join();
     }
-    let _ = batcher_handle.join();
     let _ = session_handle.join();
+    let _ = batcher_handle.join();
     Ok(())
+}
+
+/// Everything a prepared `Infer` needs, resolved once per
+/// (dataset, k, sigma, phi) by the session thread and cached there.
+#[derive(Clone)]
+struct Prepared {
+    model: &'static str,
+    pixels: usize,
+    n_classes: usize,
+    folded: Arc<Vec<NamedTensor>>,
+    ems: Arc<Vec<ErrorModel>>,
+}
+
+/// A lazily-connected outbound link to one ring peer; reconnects (with
+/// a short backoff) after any failure.
+struct PeerLink {
+    addr: SocketAddr,
+    conn: Option<Client>,
+}
+
+impl PeerLink {
+    fn fetch(&mut self, req: &PointReq) -> Result<Json> {
+        let mut last = None;
+        for _ in 0..2 {
+            if self.conn.is_none() {
+                match Client::connect_backoff(
+                    self.addr,
+                    Backoff {
+                        attempts: 2,
+                        base_ms: 10,
+                        cap_ms: 50,
+                    },
+                ) {
+                    Ok(c) => self.conn = Some(c),
+                    Err(e) => {
+                        last = Some(e);
+                        continue;
+                    }
+                }
+            }
+            let c = self.conn.as_mut().unwrap();
+            match c.peer_point(
+                req.dataset.spec().name,
+                req.k,
+                req.sigma,
+                req.phi,
+                req.eval,
+            ) {
+                Ok(j) => return Ok(j),
+                Err(e) => {
+                    // a broken link is dropped, not nursed; the retry
+                    // reconnects fresh
+                    self.conn = None;
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            anyhow::anyhow!("peer {} unreachable", self.addr)
+        }))
+    }
+}
+
+struct SessionSrv {
+    session: DesignSession,
+    metrics: Arc<Metrics>,
+    infer_tx: Sender<InferJob>,
+    ring: HashRing,
+    shard: usize,
+    peers: Vec<PeerLink>,
+    /// key -> verified peer reply (id rewritten per request).
+    peer_cache: HashMap<String, Json>,
+    prepared: HashMap<(Dataset, usize, u64, usize), Prepared>,
 }
 
 /// The session thread: builds the `DesignSession` (on its own thread —
 /// the session facade is deliberately single-threaded), pre-warms the
-/// requested datasets, then serves Point/Prepare messages until every
-/// worker is gone.
+/// requested datasets, then serves reactor work until every reactor is
+/// gone. Dropping `infer_tx` on exit is what lets the batcher drain.
+#[allow(clippy::too_many_arguments)]
 fn session_thread(
     cfg: ExperimentConfig,
     warm: Vec<Dataset>,
     pool: ScopedPool,
-    rx: Receiver<SessionMsg>,
+    rx: Receiver<Work>,
+    infer_tx: Sender<InferJob>,
+    metrics: Arc<Metrics>,
+    peers: Vec<SocketAddr>,
+    shard: usize,
 ) {
     let session = match DesignSession::builder()
         .config(cfg)
@@ -318,15 +528,16 @@ fn session_thread(
             // a session that cannot build answers every request with
             // the build error instead of hanging clients
             let msg = format!("session unavailable: {e}");
-            for m in rx {
-                match m {
-                    SessionMsg::Point { reply, .. } => {
-                        let _ = reply.send(Err(msg.clone()));
-                    }
-                    SessionMsg::Prepare { reply, .. } => {
-                        let _ = reply.send(Err(msg.clone()));
-                    }
-                }
+            for w in rx {
+                let (id, sink) = match w {
+                    Work::Point { req, sink, .. } => (req.id, sink),
+                    Work::Infer { req, sink, .. } => (req.id, sink),
+                };
+                metrics.inc_error();
+                sink.send(&protocol::error_response(
+                    Some(id),
+                    &msg,
+                ));
             }
             return;
         }
@@ -340,290 +551,191 @@ fn session_thread(
             );
         }
     }
-    // (dataset, k, sigma bits, phi) -> prepared infer inputs
-    let mut prepared: HashMap<(Dataset, usize, u64, usize), Prepared> =
-        HashMap::new();
-    for m in rx {
-        match m {
-            SessionMsg::Point { spec, reply } => {
-                let r = session
-                    .query(&spec)
-                    .map(|p| {
-                        (spec.cache_key(session.config()), p)
-                    })
-                    .map_err(|e| e.to_string());
-                let _ = reply.send(r);
-            }
-            SessionMsg::Prepare {
-                ds,
-                k,
-                sigma,
-                phi,
-                reply,
+    let mut srv = SessionSrv {
+        session,
+        metrics,
+        infer_tx,
+        ring: HashRing::new(peers.len()),
+        shard,
+        peers: peers
+            .into_iter()
+            .map(|addr| PeerLink { addr, conn: None })
+            .collect(),
+        peer_cache: HashMap::new(),
+        prepared: HashMap::new(),
+    };
+    for w in rx {
+        srv.handle(w);
+    }
+}
+
+impl SessionSrv {
+    fn handle(&mut self, work: Work) {
+        match work {
+            Work::Point {
+                req,
+                peer,
+                sink,
+                t0,
             } => {
-                let key = (ds, k, sigma.to_bits(), phi);
-                if let Some(p) = prepared.get(&key) {
-                    let _ = reply.send(Ok(p.clone()));
-                    continue;
+                let reply = self.solve_point(&req, peer);
+                self.metrics
+                    .point_latency_us
+                    .record(t0.elapsed().as_micros() as u64);
+                sink.send(&reply);
+            }
+            Work::Infer { req, sink, t0 } => {
+                let prep = self.prepare(
+                    req.dataset,
+                    req.k,
+                    req.sigma,
+                    req.phi,
+                );
+                let prep = match prep {
+                    Ok(p) => p,
+                    Err(e) => {
+                        self.metrics.inc_error();
+                        sink.send(&protocol::error_response(
+                            Some(req.id),
+                            &e,
+                        ));
+                        return;
+                    }
+                };
+                debug_assert_eq!(
+                    req.x.len(),
+                    req.n * prep.pixels
+                );
+                let job = InferJob {
+                    model: prep.model,
+                    n_classes: prep.n_classes,
+                    folded: prep.folded,
+                    ems: prep.ems,
+                    seed: req.seed,
+                    x: req.x,
+                    batch: req.n,
+                    id: req.id,
+                    reply: sink,
+                    t0,
+                };
+                if let Err(lost) = self.infer_tx.send(job) {
+                    self.metrics.inc_error();
+                    lost.0.reply.send(&protocol::error_response(
+                        Some(req.id),
+                        "server is draining",
+                    ));
                 }
-                let r = (|| -> Result<Prepared> {
-                    let spec =
-                        OperatingPointSpec::new(ds, k, sigma, phi);
-                    let point = session.query(&spec)?;
-                    let folded = session.folded(ds)?;
-                    let dspec = ds.spec();
-                    let meta = arch::model_meta(dspec.model)?;
-                    Ok(Prepared {
-                        model: dspec.model,
-                        pixels: dspec.pixels(),
-                        n_classes: meta.n_classes,
-                        folded,
-                        ems: Arc::new(point.ems.clone()),
-                    })
-                })();
-                match r {
-                    Ok(p) => {
-                        prepared.insert(key, p.clone());
-                        let _ = reply.send(Ok(p));
+            }
+        }
+    }
+
+    /// Solve a point — locally, or via the ring peer that owns its
+    /// cache key. `peer_req` marks an inbound `peer_point`, which is
+    /// ALWAYS solved locally (the no-forwarding rule that makes
+    /// routing loops structurally impossible).
+    fn solve_point(&mut self, req: &PointReq, peer_req: bool) -> Json {
+        let mut spec = OperatingPointSpec::new(
+            req.dataset,
+            req.k,
+            req.sigma,
+            req.phi,
+        );
+        if req.eval {
+            spec = spec.with_eval(1, 1);
+        }
+        let key = spec.cache_key(self.session.config());
+        if !peer_req && self.ring.shards() > 1 {
+            let owner = self.ring.owner(&key);
+            if owner != self.shard {
+                if let Some(cached) = self.peer_cache.get(&key) {
+                    return with_id(cached.clone(), req.id);
+                }
+                match self.peers[owner].fetch(req) {
+                    Ok(reply)
+                        if reply
+                            .get("key")
+                            .map(|k| k.as_str() == key)
+                            .unwrap_or(false) =>
+                    {
+                        self.metrics.peer_fetch(true);
+                        self.peer_cache
+                            .insert(key, reply.clone());
+                        return with_id(reply, req.id);
+                    }
+                    Ok(reply) => {
+                        // answered, but for a different key: the peer
+                        // runs different knobs — fall back local
+                        self.metrics.peer_fetch(false);
+                        eprintln!(
+                            "[serve] shard {} returned key {:?}, \
+                             wanted {key}; solving locally",
+                            owner,
+                            reply.get("key").map(|k| k.to_string()),
+                        );
                     }
                     Err(e) => {
-                        let _ = reply.send(Err(e.to_string()));
+                        self.metrics.peer_fetch(false);
+                        eprintln!(
+                            "[serve] peer fetch from shard {owner} \
+                             failed ({e}); solving locally"
+                        );
                     }
                 }
             }
         }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    conn_rx: &Mutex<Receiver<TcpStream>>,
-    session_tx: &Sender<SessionMsg>,
-    infer_tx: &Sender<InferJob>,
-    metrics: &Metrics,
-    shutdown: &AtomicBool,
-    info: &ServerInfo,
-    admitted: &std::sync::atomic::AtomicUsize,
-) {
-    loop {
-        // one worker blocks in recv holding the lock; the rest queue
-        // on the mutex — either way a new connection wakes exactly one
-        let conn = { conn_rx.lock().unwrap().recv() };
-        let Ok(stream) = conn else { return };
-        let _ = handle_conn(
-            stream, session_tx, infer_tx, metrics, shutdown, info,
-        );
-        admitted.fetch_sub(1, Ordering::SeqCst);
-    }
-}
-
-/// Serve one connection until EOF, a `Shutdown`, an IO error, or the
-/// drain flag. Any number of requests per connection, answered in
-/// order.
-fn handle_conn(
-    stream: TcpStream,
-    session_tx: &Sender<SessionMsg>,
-    infer_tx: &Sender<InferJob>,
-    metrics: &Metrics,
-    shutdown: &AtomicBool,
-    info: &ServerInfo,
-) -> std::io::Result<()> {
-    stream.set_read_timeout(Some(READ_POLL))?;
-    let _ = stream.set_nodelay(true);
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    let mut line = String::new();
-    loop {
-        if shutdown.load(Ordering::SeqCst) {
-            return Ok(()); // in-flight work already replied
-        }
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // EOF
-            Ok(_) => {
-                let keep_going = process_line(
-                    &line, &mut writer, session_tx, infer_tx, metrics,
-                    shutdown, info,
-                )?;
-                line.clear();
-                if !keep_going {
-                    return Ok(());
-                }
+        match self.session.query(&spec) {
+            Ok(point) => {
+                protocol::point_response(req.id, &key, &point)
             }
-            Err(e)
-                if e.kind() == ErrorKind::WouldBlock
-                    || e.kind() == ErrorKind::TimedOut =>
-            {
-                // poll tick; a partial line stays buffered in `line`
-                continue;
+            Err(e) => {
+                self.metrics.inc_error();
+                protocol::error_response(
+                    Some(req.id),
+                    &e.to_string(),
+                )
             }
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e),
+        }
+    }
+
+    fn prepare(
+        &mut self,
+        ds: Dataset,
+        k: usize,
+        sigma: f64,
+        phi: usize,
+    ) -> std::result::Result<Prepared, String> {
+        let cache_key = (ds, k, sigma.to_bits(), phi);
+        if let Some(p) = self.prepared.get(&cache_key) {
+            return Ok(p.clone());
+        }
+        let r = (|| -> Result<Prepared> {
+            let spec = OperatingPointSpec::new(ds, k, sigma, phi);
+            let point = self.session.query(&spec)?;
+            let folded = self.session.folded(ds)?;
+            let dspec = ds.spec();
+            let meta = arch::model_meta(dspec.model)?;
+            Ok(Prepared {
+                model: dspec.model,
+                pixels: dspec.pixels(),
+                n_classes: meta.n_classes,
+                folded,
+                ems: Arc::new(point.ems.clone()),
+            })
+        })();
+        match r {
+            Ok(p) => {
+                self.prepared.insert(cache_key, p.clone());
+                Ok(p)
+            }
+            Err(e) => Err(e.to_string()),
         }
     }
 }
 
-fn write_line(
-    writer: &mut TcpStream,
-    json: Json,
-) -> std::io::Result<()> {
-    let mut s = json.to_string();
-    s.push('\n');
-    writer.write_all(s.as_bytes())?;
-    writer.flush()
-}
-
-/// Handle one request line; `Ok(false)` closes the connection (after
-/// a `Shutdown`).
-#[allow(clippy::too_many_arguments)]
-fn process_line(
-    line: &str,
-    writer: &mut TcpStream,
-    session_tx: &Sender<SessionMsg>,
-    infer_tx: &Sender<InferJob>,
-    metrics: &Metrics,
-    shutdown: &AtomicBool,
-    info: &ServerInfo,
-) -> std::io::Result<bool> {
-    if line.trim().is_empty() {
-        return Ok(true); // blank keep-alives are free
+/// A peer reply re-addressed to the request that triggered it.
+fn with_id(mut reply: Json, id: f64) -> Json {
+    if let Json::Obj(m) = &mut reply {
+        m.insert("id".into(), Json::Num(id));
     }
-    let t0 = Instant::now();
-    let req = match Request::parse(line) {
-        Ok(r) => r,
-        Err((id, msg)) => {
-            metrics.inc_error();
-            write_line(writer, protocol::error_response(id, &msg))?;
-            return Ok(true);
-        }
-    };
-    match req {
-        Request::Stats { id } => {
-            metrics.inc(Kind::Stats);
-            let mut stats = match metrics.to_json() {
-                Json::Obj(m) => m,
-                _ => unreachable!("metrics emit an object"),
-            };
-            stats.insert("server".into(), info.to_json());
-            write_line(
-                writer,
-                protocol::stats_response(id, Json::Obj(stats)),
-            )?;
-            Ok(true)
-        }
-        Request::Shutdown { id } => {
-            metrics.inc(Kind::Shutdown);
-            write_line(writer, protocol::shutdown_response(id))?;
-            shutdown.store(true, Ordering::SeqCst);
-            // poke the accept loop out of `incoming()`; a wildcard
-            // bind address is not connectable everywhere, so aim the
-            // poke at loopback on the bound port
-            let mut poke = info.addr;
-            if poke.ip().is_unspecified() {
-                poke.set_ip(match poke {
-                    SocketAddr::V4(_) => std::net::IpAddr::V4(
-                        std::net::Ipv4Addr::LOCALHOST,
-                    ),
-                    SocketAddr::V6(_) => std::net::IpAddr::V6(
-                        std::net::Ipv6Addr::LOCALHOST,
-                    ),
-                });
-            }
-            let _ = TcpStream::connect(poke);
-            Ok(false)
-        }
-        Request::Point(p) => {
-            metrics.inc(Kind::Point);
-            let mut spec = OperatingPointSpec::new(
-                p.dataset, p.k, p.sigma, p.phi,
-            );
-            if p.eval {
-                spec = spec.with_eval(1, 1);
-            }
-            let (tx, rx) = mpsc::channel();
-            let sent = session_tx
-                .send(SessionMsg::Point { spec, reply: tx })
-                .is_ok();
-            let reply = if sent {
-                rx.recv().unwrap_or_else(|_| {
-                    Err("session thread gone".into())
-                })
-            } else {
-                Err("server draining".into())
-            };
-            let out = match reply {
-                Ok((key, point)) => {
-                    protocol::point_response(p.id, &key, &point)
-                }
-                Err(e) => {
-                    metrics.inc_error();
-                    protocol::error_response(Some(p.id), &e)
-                }
-            };
-            metrics
-                .point_latency_us
-                .record(t0.elapsed().as_micros() as u64);
-            write_line(writer, out)?;
-            Ok(true)
-        }
-        Request::Infer(q) => {
-            metrics.inc(Kind::Infer);
-            let id = q.id;
-            let out = run_infer(q, session_tx, infer_tx, t0);
-            let out = match out {
-                Ok(done) => protocol::infer_response(
-                    id,
-                    &done.logits,
-                    done.batch,
-                    done.n_classes,
-                ),
-                Err(e) => {
-                    metrics.inc_error();
-                    protocol::error_response(Some(id), &e)
-                }
-            };
-            write_line(writer, out)?;
-            Ok(true)
-        }
-    }
-}
-
-/// Resolve the operating point (cached in the session thread), then
-/// queue the forward on the batcher and wait for the fan-back. Takes
-/// the request by value so the sample buffer moves straight into the
-/// job — no copies on the hot path.
-fn run_infer(
-    q: protocol::InferReq,
-    session_tx: &Sender<SessionMsg>,
-    infer_tx: &Sender<InferJob>,
-    t0: Instant,
-) -> Result<batcher::InferDone, String> {
-    let (ptx, prx) = mpsc::channel();
-    session_tx
-        .send(SessionMsg::Prepare {
-            ds: q.dataset,
-            k: q.k,
-            sigma: q.sigma,
-            phi: q.phi,
-            reply: ptx,
-        })
-        .map_err(|_| "server draining".to_string())?;
-    let prep = prx
-        .recv()
-        .map_err(|_| "session thread gone".to_string())??;
-    debug_assert_eq!(q.x.len(), q.n * prep.pixels);
-    let (rtx, rrx) = mpsc::channel();
-    infer_tx
-        .send(InferJob {
-            model: prep.model,
-            n_classes: prep.n_classes,
-            folded: prep.folded,
-            ems: prep.ems,
-            seed: q.seed,
-            x: q.x,
-            batch: q.n,
-            reply: rtx,
-            t0,
-        })
-        .map_err(|_| "server draining".to_string())?;
-    rrx.recv().map_err(|_| "batcher gone".to_string())?
+    reply
 }

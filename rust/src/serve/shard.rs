@@ -1,0 +1,131 @@
+//! Consistent hashing of operating-point cache keys across serving
+//! shards (DESIGN.md §16).
+//!
+//! Every shard in a `--peers` ring builds the same [`HashRing`] from
+//! the *ordered* peer list alone — ring points hash shard indices, not
+//! addresses, so processes agree on ownership regardless of how each
+//! one writes the others' addresses (`127.0.0.1` vs `localhost`), and
+//! the ring never depends on DNS. Ownership of a spec is decided by
+//! its content-addressed cache key
+//! ([`crate::session::OperatingPointSpec::cache_key`]), which two
+//! shards with identical config knobs compute identically — the
+//! precondition for a peer-fetched point being bit-identical to a
+//! local solve.
+//!
+//! `VNODES` virtual points per shard smooth the key distribution; with
+//! a handful of shards the worst/best load ratio stays under ~2 (the
+//! distribution test pins a looser bound).
+
+use crate::util::hash::fnv1a;
+
+/// Virtual ring points per shard.
+pub const VNODES: usize = 64;
+
+/// A consistent-hash ring over shard indices `0..n`.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    /// (ring position, shard index), sorted by position.
+    points: Vec<(u64, usize)>,
+    n: usize,
+}
+
+impl HashRing {
+    /// A ring over `n` shards (`n = 0` is treated as standalone:
+    /// every key is owned by shard 0).
+    pub fn new(n: usize) -> HashRing {
+        let n = n.max(1);
+        let mut points = Vec::with_capacity(n * VNODES);
+        for shard in 0..n {
+            for v in 0..VNODES {
+                points.push((
+                    fnv1a(format!("shard{shard}#{v}").as_bytes()),
+                    shard,
+                ));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points, n }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.n
+    }
+
+    /// The shard owning `key`: the first ring point at or after the
+    /// key's hash, wrapping at the top.
+    pub fn owner(&self, key: &str) -> usize {
+        if self.n <= 1 {
+            return 0;
+        }
+        let h = fnv1a(key.as_bytes());
+        let i = self
+            .points
+            .partition_point(|&(pos, _)| pos < h);
+        self.points[i % self.points.len()].1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("16charhexkey{i:04x}")).collect()
+    }
+
+    #[test]
+    fn ownership_is_deterministic_and_total() {
+        let a = HashRing::new(4);
+        let b = HashRing::new(4);
+        for k in keys(500) {
+            let o = a.owner(&k);
+            assert!(o < 4);
+            assert_eq!(o, b.owner(&k), "rings disagree on {k}");
+        }
+    }
+
+    #[test]
+    fn standalone_and_single_shard_own_everything() {
+        for ring in [HashRing::new(0), HashRing::new(1)] {
+            for k in keys(50) {
+                assert_eq!(ring.owner(&k), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn distribution_is_roughly_balanced() {
+        let ring = HashRing::new(4);
+        let mut counts = [0usize; 4];
+        for k in keys(4000) {
+            counts[ring.owner(&k)] += 1;
+        }
+        let (min, max) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        assert!(min > 0, "a shard owns nothing: {counts:?}");
+        assert!(
+            (max as f64) < 3.0 * min as f64,
+            "wildly unbalanced: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn growing_the_ring_moves_only_a_fraction_of_keys() {
+        let four = HashRing::new(4);
+        let five = HashRing::new(5);
+        let ks = keys(4000);
+        let moved = ks
+            .iter()
+            .filter(|k| four.owner(k) != five.owner(k))
+            .count();
+        // consistent hashing: adding one shard to four should move
+        // about 1/5 of the keys, not rehash the world
+        assert!(
+            moved < ks.len() / 2,
+            "{moved}/{} keys moved going 4 -> 5 shards",
+            ks.len()
+        );
+    }
+}

@@ -1,0 +1,728 @@
+//! Raw-syscall event-loop primitives (no mio/tokio offline —
+//! DESIGN.md §8): a level-triggered readiness [`Poller`] over
+//! `epoll(7)` on Linux and `kqueue(2)` on macOS, plus a [`Waker`] for
+//! cross-thread wakeups (an `eventfd` under epoll, an `EVFILT_USER`
+//! event under kqueue — no self-pipe, no spare fds).
+//!
+//! The syscalls are declared here as plain `extern "C"` bindings into
+//! the libc every Rust binary already links — the crate's
+//! zero-dependency rule holds (DESIGN.md §8). Only what the serve
+//! reactor needs is wrapped: register/modify/deregister an fd with a
+//! `u64` token, wait with a timeout, and wake. Readiness is
+//! **level-triggered** everywhere: a socket with unread bytes (or
+//! writable space) keeps reporting until the caller drains it, so a
+//! reactor that stops mid-buffer is re-told, not deadlocked.
+//!
+//! Nothing in this module knows about connections or protocols; the
+//! serve reactor (DESIGN.md §16) and the open-loop loadgen in
+//! `benches/serve.rs` both build on exactly this surface.
+
+use std::io;
+use std::os::fd::RawFd;
+use std::time::Duration;
+
+/// Which readiness a registration asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest {
+        readable: true,
+        writable: false,
+    };
+    pub const WRITE: Interest = Interest {
+        readable: false,
+        writable: true,
+    };
+    pub const BOTH: Interest = Interest {
+        readable: true,
+        writable: true,
+    };
+}
+
+/// One readiness report: the registration's token plus what fired.
+/// `hangup` folds in peer-close/error conditions — the owner should
+/// read (to observe EOF/errno) and drop the connection.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub hangup: bool,
+}
+
+#[cfg(any(target_os = "linux", target_os = "android"))]
+mod sys {
+    use super::{Event, Interest};
+    use std::io;
+    use std::os::fd::RawFd;
+    use std::os::raw::{c_int, c_void};
+    use std::time::Duration;
+
+    // x86 kernels lay epoll_event out packed; everything else pads.
+    #[cfg(any(target_arch = "x86_64", target_arch = "x86"))]
+    #[repr(C, packed)]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "x86")))]
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(
+            epfd: c_int,
+            op: c_int,
+            fd: c_int,
+            event: *mut EpollEvent,
+        ) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn eventfd(initval: u32, flags: c_int) -> c_int;
+        fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const EFD_NONBLOCK: c_int = 0o4000;
+    const EFD_CLOEXEC: c_int = 0o2000000;
+
+    fn cvt(r: c_int) -> io::Result<c_int> {
+        if r < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(r)
+        }
+    }
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = EPOLLRDHUP;
+        if interest.readable {
+            m |= EPOLLIN;
+        }
+        if interest.writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    pub struct Poller {
+        epfd: RawFd,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd =
+                cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            Ok(Poller { epfd })
+        }
+
+        fn ctl(
+            &self,
+            op: c_int,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: mask(interest),
+                data: token,
+            };
+            cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        pub fn register(
+            &self,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(
+            &self,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            // the event argument is ignored for DEL on any kernel
+            // this crate supports (>= 2.6.9)
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            cvt(unsafe {
+                epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev)
+            })?;
+            Ok(())
+        }
+
+        /// Block until readiness or `timeout` (None = forever),
+        /// replacing `out` with the fired events.
+        pub fn wait(
+            &self,
+            out: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            out.clear();
+            let mut buf = [EpollEvent { events: 0, data: 0 }; 256];
+            let ms: c_int = match timeout {
+                None => -1,
+                // round up so a 1 ns ask never busy-spins at 0
+                Some(t) => t
+                    .as_millis()
+                    .max(if t.is_zero() { 0 } else { 1 })
+                    .min(i32::MAX as u128)
+                    as c_int,
+            };
+            let n = loop {
+                let r = unsafe {
+                    epoll_wait(
+                        self.epfd,
+                        buf.as_mut_ptr(),
+                        buf.len() as c_int,
+                        ms,
+                    )
+                };
+                if r >= 0 {
+                    break r as usize;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            };
+            for ev in &buf[..n] {
+                let bits = ev.events;
+                out.push(Event {
+                    token: ev.data,
+                    readable: bits & EPOLLIN != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    hangup: bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP)
+                        != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe { close(self.epfd) };
+        }
+    }
+
+    /// Cross-thread wakeup: an `eventfd` registered read-interest in
+    /// the poller under the caller's token.
+    pub struct Waker {
+        efd: RawFd,
+    }
+
+    impl Waker {
+        pub fn new(poller: &Poller, token: u64) -> io::Result<Waker> {
+            let efd = cvt(unsafe {
+                eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC)
+            })?;
+            poller.register(efd, token, Interest::READ)?;
+            Ok(Waker { efd })
+        }
+
+        pub fn wake(&self) {
+            let one: u64 = 1;
+            // EAGAIN means the counter is already non-zero — the
+            // sleeper is waking anyway
+            unsafe {
+                write(
+                    self.efd,
+                    &one as *const u64 as *const c_void,
+                    8,
+                )
+            };
+        }
+
+        /// Reset after a wake-token event so level-triggered polling
+        /// goes back to sleep.
+        pub fn drain(&self) {
+            let mut buf = [0u8; 8];
+            unsafe {
+                read(self.efd, buf.as_mut_ptr() as *mut c_void, 8)
+            };
+        }
+    }
+
+    impl Drop for Waker {
+        fn drop(&mut self) {
+            unsafe { close(self.efd) };
+        }
+    }
+
+    // rlimit for the fd-hungry paths (1k-connection loadgen)
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: c_int, rlim: *mut Rlimit) -> c_int;
+        fn setrlimit(resource: c_int, rlim: *const Rlimit) -> c_int;
+    }
+    const RLIMIT_NOFILE: c_int = 7;
+
+    /// Best-effort: raise the soft fd limit toward `want` (capped at
+    /// the hard limit); returns the resulting soft limit.
+    pub fn raise_nofile_limit(want: u64) -> u64 {
+        let mut lim = Rlimit { cur: 0, max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+            return 0;
+        }
+        if lim.cur < want {
+            let new = Rlimit {
+                cur: want.min(lim.max),
+                max: lim.max,
+            };
+            if unsafe { setrlimit(RLIMIT_NOFILE, &new) } == 0 {
+                return new.cur;
+            }
+        }
+        lim.cur
+    }
+}
+
+#[cfg(target_os = "macos")]
+mod sys {
+    use super::{Event, Interest};
+    use std::io;
+    use std::os::fd::RawFd;
+    use std::os::raw::{c_int, c_void};
+    use std::time::Duration;
+
+    #[repr(C)]
+    struct Kevent {
+        ident: usize,
+        filter: i16,
+        flags: u16,
+        fflags: u32,
+        data: isize,
+        udata: *mut c_void,
+    }
+
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: isize,
+        tv_nsec: isize,
+    }
+
+    extern "C" {
+        fn kqueue() -> c_int;
+        fn kevent(
+            kq: c_int,
+            changelist: *const Kevent,
+            nchanges: c_int,
+            eventlist: *mut Kevent,
+            nevents: c_int,
+            timeout: *const Timespec,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    const EVFILT_READ: i16 = -1;
+    const EVFILT_WRITE: i16 = -2;
+    const EVFILT_USER: i16 = -10;
+    const EV_ADD: u16 = 0x1;
+    const EV_DELETE: u16 = 0x2;
+    const EV_CLEAR: u16 = 0x20;
+    const EV_ERROR: u16 = 0x4000;
+    const EV_EOF: u16 = 0x8000;
+    const NOTE_TRIGGER: u32 = 0x0100_0000;
+
+    fn kev(
+        ident: usize,
+        filter: i16,
+        flags: u16,
+        fflags: u32,
+        token: u64,
+    ) -> Kevent {
+        Kevent {
+            ident,
+            filter,
+            flags,
+            fflags,
+            data: 0,
+            udata: token as usize as *mut c_void,
+        }
+    }
+
+    pub struct Poller {
+        kq: RawFd,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let kq = unsafe { kqueue() };
+            if kq < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { kq })
+        }
+
+        fn apply(&self, changes: &[Kevent]) -> io::Result<()> {
+            let r = unsafe {
+                kevent(
+                    self.kq,
+                    changes.as_ptr(),
+                    changes.len() as c_int,
+                    std::ptr::null_mut(),
+                    0,
+                    std::ptr::null(),
+                )
+            };
+            if r < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        fn set(
+            &self,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            // add what is wanted; delete what is not (ENOENT from a
+            // delete of an absent filter is fine and not reported by
+            // kevent unless EV_RECEIPT is used)
+            let mut changes = vec![];
+            let f = fd as usize;
+            if interest.readable {
+                changes.push(kev(f, EVFILT_READ, EV_ADD, 0, token));
+            } else {
+                changes.push(kev(f, EVFILT_READ, EV_DELETE, 0, token));
+            }
+            if interest.writable {
+                changes.push(kev(f, EVFILT_WRITE, EV_ADD, 0, token));
+            } else {
+                changes
+                    .push(kev(f, EVFILT_WRITE, EV_DELETE, 0, token));
+            }
+            // apply one at a time so a harmless ENOENT on the delete
+            // half never masks the add half
+            for c in changes {
+                let _ = self.apply(std::slice::from_ref(&c));
+            }
+            Ok(())
+        }
+
+        pub fn register(
+            &self,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.set(fd, token, interest)
+        }
+
+        pub fn modify(
+            &self,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.set(fd, token, interest)
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            let f = fd as usize;
+            let _ = self
+                .apply(&[kev(f, EVFILT_READ, EV_DELETE, 0, 0)]);
+            let _ = self
+                .apply(&[kev(f, EVFILT_WRITE, EV_DELETE, 0, 0)]);
+            Ok(())
+        }
+
+        pub fn wait(
+            &self,
+            out: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            out.clear();
+            let mut buf: Vec<Kevent> = (0..256)
+                .map(|_| kev(0, 0, 0, 0, 0))
+                .collect();
+            let ts = timeout.map(|t| Timespec {
+                tv_sec: t.as_secs() as isize,
+                tv_nsec: t.subsec_nanos() as isize,
+            });
+            let n = loop {
+                let r = unsafe {
+                    kevent(
+                        self.kq,
+                        std::ptr::null(),
+                        0,
+                        buf.as_mut_ptr(),
+                        buf.len() as c_int,
+                        ts.as_ref()
+                            .map(|t| t as *const Timespec)
+                            .unwrap_or(std::ptr::null()),
+                    )
+                };
+                if r >= 0 {
+                    break r as usize;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            };
+            for ev in &buf[..n] {
+                out.push(Event {
+                    token: ev.udata as usize as u64,
+                    readable: ev.filter == EVFILT_READ
+                        || ev.filter == EVFILT_USER,
+                    writable: ev.filter == EVFILT_WRITE,
+                    hangup: ev.flags & (EV_EOF | EV_ERROR) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe { close(self.kq) };
+        }
+    }
+
+    /// Cross-thread wakeup via `EVFILT_USER` — no fd consumed.
+    pub struct Waker {
+        kq: RawFd,
+        token: u64,
+    }
+
+    impl Waker {
+        pub fn new(poller: &Poller, token: u64) -> io::Result<Waker> {
+            let kq = poller.kq;
+            let ev = kev(
+                token as usize,
+                EVFILT_USER,
+                EV_ADD | EV_CLEAR,
+                0,
+                token,
+            );
+            poller.apply(std::slice::from_ref(&ev))?;
+            Ok(Waker { kq, token })
+        }
+
+        pub fn wake(&self) {
+            let ev = kev(
+                self.token as usize,
+                EVFILT_USER,
+                0,
+                NOTE_TRIGGER,
+                self.token,
+            );
+            unsafe {
+                kevent(
+                    self.kq,
+                    &ev,
+                    1,
+                    std::ptr::null_mut(),
+                    0,
+                    std::ptr::null(),
+                )
+            };
+        }
+
+        /// EV_CLEAR resets the trigger on delivery; nothing to drain.
+        pub fn drain(&self) {}
+    }
+
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: c_int, rlim: *mut Rlimit) -> c_int;
+        fn setrlimit(resource: c_int, rlim: *const Rlimit) -> c_int;
+    }
+    const RLIMIT_NOFILE: c_int = 8;
+
+    pub fn raise_nofile_limit(want: u64) -> u64 {
+        let mut lim = Rlimit { cur: 0, max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+            return 0;
+        }
+        if lim.cur < want {
+            let new = Rlimit {
+                cur: want.min(lim.max),
+                max: lim.max,
+            };
+            if unsafe { setrlimit(RLIMIT_NOFILE, &new) } == 0 {
+                return new.cur;
+            }
+        }
+        lim.cur
+    }
+}
+
+#[cfg(not(any(
+    target_os = "linux",
+    target_os = "android",
+    target_os = "macos"
+)))]
+compile_error!(
+    "util::evloop supports epoll (Linux/Android) and kqueue (macOS) \
+     only; add a kqueue/poll backend for this target"
+);
+
+pub use sys::{raise_nofile_limit, Poller, Waker};
+
+/// Shorthand: register a socket-like type that exposes `AsRawFd`.
+pub fn fd_of<T: std::os::fd::AsRawFd>(sock: &T) -> RawFd {
+    sock.as_raw_fd()
+}
+
+/// `true` for the error kinds a non-blocking IO loop treats as "come
+/// back later" rather than failure.
+pub fn would_block(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn poller_reports_readability_and_tokens() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let poller = Poller::new().unwrap();
+        listener.set_nonblocking(true).unwrap();
+        poller
+            .register(fd_of(&listener), 7, Interest::READ)
+            .unwrap();
+
+        let mut events = Vec::new();
+        // nothing pending: timeout elapses empty
+        poller
+            .wait(&mut events, Some(Duration::from_millis(10)))
+            .unwrap();
+        assert!(events.is_empty());
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(2000)))
+            .unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+
+        // accepted socket: readable only once the client writes
+        let (mut conn, _) = listener.accept().unwrap();
+        conn.set_nonblocking(true).unwrap();
+        poller
+            .register(fd_of(&conn), 9, Interest::READ)
+            .unwrap();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(10)))
+            .unwrap();
+        assert!(!events.iter().any(|e| e.token == 9));
+        client.write_all(b"hi").unwrap();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(2000)))
+            .unwrap();
+        assert!(events.iter().any(|e| e.token == 9 && e.readable));
+        let mut buf = [0u8; 8];
+        assert_eq!(conn.read(&mut buf).unwrap(), 2);
+
+        // peer close surfaces as readable and/or hangup (EOF read)
+        drop(client);
+        poller
+            .wait(&mut events, Some(Duration::from_millis(2000)))
+            .unwrap();
+        assert!(events
+            .iter()
+            .any(|e| e.token == 9 && (e.readable || e.hangup)));
+        poller.deregister(fd_of(&conn)).unwrap();
+    }
+
+    #[test]
+    fn write_interest_fires_when_buffer_drains() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        client.set_nonblocking(true).unwrap();
+        let poller = Poller::new().unwrap();
+        poller
+            .register(fd_of(&client), 1, Interest::BOTH)
+            .unwrap();
+        let mut events = Vec::new();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(2000)))
+            .unwrap();
+        // a fresh connected socket is immediately writable
+        assert!(events.iter().any(|e| e.token == 1 && e.writable));
+    }
+
+    #[test]
+    fn waker_crosses_threads_and_drains() {
+        let poller = Poller::new().unwrap();
+        let waker =
+            std::sync::Arc::new(Waker::new(&poller, 42).unwrap());
+        let w2 = waker.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            w2.wake();
+        });
+        let mut events = Vec::new();
+        let t0 = Instant::now();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(10)))
+            .unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert!(events.iter().any(|e| e.token == 42 && e.readable));
+        waker.drain();
+        // drained: the next wait sleeps its full (short) timeout
+        poller
+            .wait(&mut events, Some(Duration::from_millis(20)))
+            .unwrap();
+        assert!(!events.iter().any(|e| e.token == 42));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn nofile_limit_is_at_least_queryable() {
+        let got = raise_nofile_limit(256);
+        assert!(got >= 256 || got == 0, "soft limit {got}");
+    }
+}

@@ -6,6 +6,7 @@
 //! (DESIGN.md §8). Each has its own tests.
 
 pub mod cli;
+pub mod evloop;
 pub mod hash;
 pub mod json;
 pub mod pareto;
