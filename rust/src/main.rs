@@ -27,6 +27,7 @@ const KNOWN_OPTS: &[&str] = &[
     "tile", "run-dir", "seed", "emit", "plans", "suite-id", "addr",
     "max-batch", "max-wait-ms", "reactors", "queue-cap",
     "idle-timeout-ms", "shards", "peers", "shard",
+    "peer-timeout-ms",
 ];
 
 /// Every bare `--flag`.
@@ -176,6 +177,10 @@ serve options:
                            fetched from it (peer_point) and fall back
                            to a local solve
   --shard I                this server's index into --peers
+  --peer-timeout-ms N      bound on every peer-link socket operation;
+                           a stalled owner costs at most this long
+                           before the requester solves locally
+                           (default 5000)
 
 suite options:
   --plans a,b,c            subset of plans to run (default: all)
@@ -397,6 +402,8 @@ fn main() -> Result<()> {
             opts.queue_cap = args.usize_or("queue-cap", 256).max(1);
             opts.idle_timeout_ms =
                 args.usize_or("idle-timeout-ms", 30_000).max(1) as u64;
+            opts.peer_timeout_ms =
+                args.usize_or("peer-timeout-ms", 5_000).max(1) as u64;
             let shards = args.usize_or("shards", 1);
             if let Some(list) = args.get("peers") {
                 anyhow::ensure!(

@@ -65,6 +65,27 @@ pub fn retriable(err: &anyhow::Error) -> bool {
     })
 }
 
+/// `true` when `err` is a timed-out socket operation (a connect,
+/// read or write that ran into [`Client::set_io_timeout`] /
+/// [`Client::connect_within`] — `TimedOut` on connect, `WouldBlock`
+/// on a timed-out read under Linux's `SO_RCVTIMEO`). Callers with a
+/// local fallback use this to stop retrying: a second identical wait
+/// against a wedged server only doubles the stall.
+pub fn timed_out(err: &anyhow::Error) -> bool {
+    err.chain().any(|cause| {
+        cause
+            .downcast_ref::<std::io::Error>()
+            .map(|io| {
+                matches!(
+                    io.kind(),
+                    std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::WouldBlock
+                )
+            })
+            .unwrap_or(false)
+    })
+}
+
 /// Bounded jittered exponential backoff, shared by every caller that
 /// retries against a serve endpoint (tests, benches, examples, the
 /// shard peer links). Delays double from `base_ms` up to `cap_ms`,
@@ -138,12 +159,44 @@ impl Client {
     pub fn connect(addr: SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting {addr}"))?;
+        Client::from_stream(stream)
+    }
+
+    /// [`Client::connect`] with a bound on the connect itself — for
+    /// callers (the shard peer links) that must never block a serving
+    /// thread on an unreachable host.
+    pub fn connect_within(
+        addr: SocketAddr,
+        timeout: Duration,
+    ) -> Result<Client> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)
+            .with_context(|| format!("connecting {addr}"))?;
+        Client::from_stream(stream)
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<Client> {
         let _ = stream.set_nodelay(true);
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
             next_id: 1,
         })
+    }
+
+    /// Bound every subsequent read/write on this connection (`None`
+    /// blocks forever, the default). A timed-out call surfaces as a
+    /// [`retriable`] IO error; the connection should be dropped, not
+    /// reused, since a late reply would desynchronize the line
+    /// protocol.
+    pub fn set_io_timeout(
+        &self,
+        timeout: Option<Duration>,
+    ) -> Result<()> {
+        // reader and writer share one socket (try_clone dups the fd),
+        // so setting the options once covers both directions
+        self.writer.set_read_timeout(timeout)?;
+        self.writer.set_write_timeout(timeout)?;
+        Ok(())
     }
 
     /// Retry `connect` until `timeout` elapses — for drivers that

@@ -127,10 +127,12 @@ enum SinkTarget {
 }
 
 /// Single-use reply address for one admitted compute request.
-/// Consuming it decrements the global pending gauge, so the bounded
-/// queue accounts every admitted request exactly once.
+/// Delivering it — by [`ReplySink::send`], or by the `Drop` backstop
+/// if a compute thread panics mid-request — decrements the global
+/// pending gauge, so the bounded queue accounts every admitted
+/// request exactly once and the admission budget can never leak.
 pub struct ReplySink {
-    target: SinkTarget,
+    target: Option<SinkTarget>,
     pending: Option<Arc<Metrics>>,
 }
 
@@ -143,12 +145,12 @@ impl ReplySink {
         metrics: Arc<Metrics>,
     ) -> ReplySink {
         ReplySink {
-            target: SinkTarget::Reactor {
+            target: Some(SinkTarget::Reactor {
                 shared,
                 slot,
                 gen,
                 seq,
-            },
+            }),
             pending: Some(metrics),
         }
     }
@@ -157,7 +159,7 @@ impl ReplySink {
     /// tests and the batcher's own tests).
     pub fn to_channel(tx: Sender<String>) -> ReplySink {
         ReplySink {
-            target: SinkTarget::Channel(tx),
+            target: Some(SinkTarget::Channel(tx)),
             pending: None,
         }
     }
@@ -165,26 +167,49 @@ impl ReplySink {
     /// Deliver the reply. Infallible from the caller's view: a dead
     /// reactor or dropped test receiver just discards the line (the
     /// connection it was for is gone anyway).
-    pub fn send(self, reply: &Json) {
-        let line = reply.to_string();
-        if let Some(m) = &self.pending {
+    pub fn send(mut self, reply: &Json) {
+        self.deliver(reply.to_string());
+    }
+
+    fn deliver(&mut self, line: String) {
+        if let Some(m) = self.pending.take() {
             m.pending_dec();
         }
-        match self.target {
-            SinkTarget::Reactor {
+        match self.target.take() {
+            Some(SinkTarget::Reactor {
                 shared,
                 slot,
                 gen,
                 seq,
-            } => shared.push_completion(Completion {
+            }) => shared.push_completion(Completion {
                 slot,
                 gen,
                 seq,
                 line,
             }),
-            SinkTarget::Channel(tx) => {
+            Some(SinkTarget::Channel(tx)) => {
                 let _ = tx.send(line);
             }
+            None => {}
+        }
+    }
+}
+
+impl Drop for ReplySink {
+    fn drop(&mut self) {
+        if self.target.is_some() || self.pending.is_some() {
+            // dropped without send — a compute thread panicked (or a
+            // queue was torn down) with this request admitted. Two
+            // things must not leak: the global pending gauge (or the
+            // admission budget shrinks forever) and this sequence slot
+            // (or every later reply on the connection parks behind it)
+            self.deliver(
+                protocol::error_response(
+                    None,
+                    "request dropped by server",
+                )
+                .to_string(),
+            );
         }
     }
 }
@@ -253,9 +278,14 @@ struct Conn {
     partial_since: Option<Instant>,
     /// Flush the write buffer, then close; stop reading now.
     draining: bool,
-    /// Whether the poller registration currently includes write
-    /// interest.
-    want_write: bool,
+    /// The peer closed its write side (EOF). No more requests will
+    /// arrive, but buffered lines and in-flight completions still owe
+    /// replies — the connection drains instead of closing.
+    read_closed: bool,
+    /// What the poller registration currently asks for; kept exact so
+    /// a half-closed or fully-quiet socket is never level-polled in a
+    /// busy loop. `readable && writable == false` means deregistered.
+    interest: Interest,
 }
 
 impl Conn {
@@ -269,7 +299,8 @@ impl Conn {
             inflight: 0,
             partial_since: None,
             draining: false,
-            want_write: false,
+            read_closed: false,
+            interest: Interest::READ,
         }
     }
 
@@ -415,6 +446,7 @@ impl Reactor {
                 return;
             }
             self.process_lines(slot);
+            self.finish_read_closed(slot);
         }
         if writable || readable || hangup {
             self.flush(slot);
@@ -422,15 +454,23 @@ impl Reactor {
     }
 
     /// Drain the socket into the read buffer. `Err` means the
-    /// connection is dead (EOF or hard error).
+    /// connection is dead (hard error); EOF is NOT death — a
+    /// pipelined client may half-close its write side and still be
+    /// owed every reply.
     fn read_phase(&mut self, slot: usize) -> Result<(), ()> {
         let Some(conn) = self.conns[slot].as_mut() else {
             return Ok(());
         };
+        if conn.read_closed {
+            return Ok(());
+        }
         let mut buf = [0u8; 16 * 1024];
         loop {
             match conn.stream.read(&mut buf) {
-                Ok(0) => return Err(()), // peer closed
+                Ok(0) => {
+                    conn.read_closed = true;
+                    return Ok(());
+                }
                 Ok(n) => {
                     if conn.draining {
                         continue; // discard: reply is on its way out
@@ -500,6 +540,23 @@ impl Reactor {
                 // byte-trickling client cannot reset it
                 conn.partial_since = Some(Instant::now());
             }
+        }
+    }
+
+    /// After EOF every buffered complete line has been handled above;
+    /// whatever is admitted or unflushed still owes a reply. Switch
+    /// the connection to draining — flush, then close once in-flight
+    /// completions land — so a client that `shutdown(SHUT_WR)`s after
+    /// pipelining requests still receives every reply. A connection
+    /// with nothing owed closes on the very next `flush`.
+    fn finish_read_closed(&mut self, slot: usize) {
+        let Some(conn) = self.conns[slot].as_mut() else {
+            return;
+        };
+        if conn.read_closed && !conn.draining {
+            conn.draining = true;
+            conn.rbuf = Vec::new(); // a partial line can never finish
+            conn.partial_since = None;
         }
     }
 
@@ -635,11 +692,11 @@ impl Reactor {
     }
 
     /// Write out as much of `slot`'s buffer as the socket takes;
-    /// manage write interest; shed over-cap slow clients; finish
+    /// manage poller interest; shed over-cap slow clients; finish
     /// drain-closes.
     fn flush(&mut self, slot: usize) {
         enum After {
-            Keep { want_write: bool },
+            Keep,
             Close,
         }
         let after = {
@@ -655,8 +712,7 @@ impl Reactor {
                     }
                     Ok(n) => conn.wpos += n,
                     Err(ref e) if would_block(e) => {
-                        verdict =
-                            Some(After::Keep { want_write: true });
+                        verdict = Some(After::Keep);
                         break;
                     }
                     Err(_) => {
@@ -671,13 +727,13 @@ impl Reactor {
                 if conn.draining && conn.inflight == 0 {
                     After::Close
                 } else {
-                    After::Keep { want_write: false }
+                    After::Keep
                 }
             })
         };
         match after {
             After::Close => self.close(slot),
-            After::Keep { want_write } => {
+            After::Keep => {
                 let conn = self.conns[slot].as_mut().unwrap();
                 if conn.wbuf.len() - conn.wpos > self.cfg.wbuf_cap {
                     // client not reading its replies: shed it rather
@@ -686,18 +742,49 @@ impl Reactor {
                     self.close(slot);
                     return;
                 }
-                if want_write != conn.want_write {
-                    conn.want_write = want_write;
-                    let interest = if want_write {
-                        Interest::BOTH
-                    } else {
-                        Interest::READ
-                    };
-                    let fd = fd_of(&conn.stream);
-                    let _ =
-                        self.poller.modify(fd, slot as u64, interest);
+                self.update_interest(slot);
+            }
+        }
+    }
+
+    /// Re-derive the poller registration from connection state: read
+    /// interest while the peer can still send requests, write
+    /// interest while there are unflushed bytes. A connection wanting
+    /// neither (half-closed, waiting only on compute completions) is
+    /// deregistered entirely — the inbox waker re-arms it — so a
+    /// level-triggered poller never busy-spins on its EOF.
+    fn update_interest(&mut self, slot: usize) {
+        let (want, cur, fd) = {
+            let Some(conn) = self.conns[slot].as_ref() else {
+                return;
+            };
+            let want = Interest {
+                readable: !conn.read_closed,
+                writable: !conn.flushed(),
+            };
+            (want, conn.interest, fd_of(&conn.stream))
+        };
+        if want == cur {
+            return;
+        }
+        let none =
+            |i: Interest| !i.readable && !i.writable;
+        let r = if none(want) {
+            self.poller.deregister(fd)
+        } else if none(cur) {
+            self.poller.register(fd, slot as u64, want)
+        } else {
+            self.poller.modify(fd, slot as u64, want)
+        };
+        match r {
+            Ok(()) => {
+                if let Some(conn) = self.conns[slot].as_mut() {
+                    conn.interest = want;
                 }
             }
+            // a registration we cannot track is a connection we
+            // cannot serve correctly
+            Err(_) => self.close(slot),
         }
     }
 
@@ -860,6 +947,44 @@ mod tests {
         assert!(line.contains("\"ok\":false") || line.contains("x"));
     }
 
+    /// A sink dropped without `send` (compute-thread panic path) must
+    /// restore the admission budget and still deliver a structured
+    /// error, exactly once; a sent sink's drop must do nothing.
+    #[test]
+    fn dropped_sink_restores_pending_and_answers() {
+        let metrics = Arc::new(Metrics::with_reactors(1));
+        assert!(metrics.try_admit(4));
+        let (tx, rx) = mpsc::channel();
+        let sink = ReplySink {
+            target: Some(SinkTarget::Channel(tx)),
+            pending: Some(metrics.clone()),
+        };
+        assert_eq!(metrics.queue_depth(), 1);
+        drop(sink);
+        assert_eq!(
+            metrics.queue_depth(),
+            0,
+            "dropped sink leaked the admission budget"
+        );
+        let line = rx.recv().unwrap();
+        assert!(line.contains("dropped"), "no backstop reply: {line}");
+
+        // the send path pays the budget back exactly once
+        assert!(metrics.try_admit(4));
+        let (tx, rx) = mpsc::channel();
+        let sink = ReplySink {
+            target: Some(SinkTarget::Channel(tx)),
+            pending: Some(metrics.clone()),
+        };
+        sink.send(&protocol::error_response(Some(1.0), "x"));
+        assert_eq!(metrics.queue_depth(), 0);
+        assert_eq!(
+            rx.try_iter().count(),
+            1,
+            "send-then-drop must deliver exactly one line"
+        );
+    }
+
     /// End-to-end through a real reactor with a fake compute tier:
     /// pipelined requests get their replies strictly in order even
     /// when the compute reply for the first arrives late.
@@ -944,6 +1069,92 @@ mod tests {
 
         // drain: flag + wake, reactor exits once the conn closes
         drop(r);
+        shutdown.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+        drop(fake);
+    }
+
+    /// A pipelined client that half-closes its write side
+    /// (`shutdown(SHUT_WR)`) right after sending must still receive
+    /// every reply — EOF drains the connection, it does not kill it.
+    #[test]
+    fn half_closed_client_still_receives_pipelined_replies() {
+        let metrics = Arc::new(Metrics::with_reactors(1));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (work_tx, work_rx) = mpsc::channel::<Work>();
+        let cfg = ReactorCfg {
+            index: 0,
+            queue_cap: 16,
+            inflight_cap: 8,
+            max_line: 1 << 20,
+            wbuf_cap: 1 << 20,
+            idle_timeout: Duration::from_secs(5),
+            retry_after_ms: 10,
+            shutdown: shutdown.clone(),
+            metrics: metrics.clone(),
+            info: obj(vec![("backend", Json::Str("test".into()))]),
+            work_tx,
+        };
+        let (shared, handle) = spawn(cfg).unwrap();
+        // the compute reply lands well after the EOF reaches the
+        // reactor — the drain has to hold the connection open for it
+        let fake = std::thread::spawn(move || {
+            while let Ok(w) = work_rx.recv() {
+                std::thread::sleep(Duration::from_millis(80));
+                match w {
+                    Work::Point { req, sink, .. } => sink.send(
+                        &protocol::error_response(
+                            Some(req.id),
+                            "fake point",
+                        ),
+                    ),
+                    Work::Infer { req, sink, .. } => sink.send(
+                        &protocol::error_response(
+                            Some(req.id),
+                            "fake infer",
+                        ),
+                    ),
+                }
+            }
+        });
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        shared.push_conn(server_side);
+
+        let mut w = client.try_clone().unwrap();
+        w.write_all(
+            b"{\"v\":1,\"id\":1,\"type\":\"point\",\
+              \"dataset\":\"fashion_syn\",\"k\":14}\n\
+              {\"v\":1,\"id\":2,\"type\":\"stats\"}\n",
+        )
+        .unwrap();
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut r = BufReader::new(client);
+        let mut first = String::new();
+        let mut second = String::new();
+        r.read_line(&mut first).unwrap();
+        r.read_line(&mut second).unwrap();
+        assert_eq!(
+            Json::parse(&first).unwrap().req("id").as_f64(),
+            1.0,
+            "half-close lost the in-flight compute reply"
+        );
+        assert_eq!(
+            Json::parse(&second).unwrap().req("id").as_f64(),
+            2.0
+        );
+        // with everything owed delivered, the server closes its side
+        let mut rest = String::new();
+        assert_eq!(
+            r.read_line(&mut rest).unwrap(),
+            0,
+            "drained connection must close"
+        );
+        assert_eq!(metrics.queue_depth(), 0, "pending leaked");
+
         shutdown.store(true, Ordering::SeqCst);
         handle.join().unwrap();
         drop(fake);

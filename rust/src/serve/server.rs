@@ -37,7 +37,8 @@
 //! 5. `run`/`Server::join` returns only after every thread is joined,
 //!    so a clean exit means a clean drain.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -60,7 +61,7 @@ use crate::util::json::{obj, Json};
 use crate::util::pool::ScopedPool;
 
 use super::batcher::{self, BatchPolicy, InferJob};
-use super::client::{Backoff, Client};
+use super::client::{self, Backoff, Client};
 use super::metrics::Metrics;
 use super::protocol::{self, PointReq};
 use super::reactor::{self, ReactorCfg, Work};
@@ -68,6 +69,15 @@ use super::shard::HashRing;
 
 /// How often the acceptor wakes to check the shutdown flag.
 const ACCEPT_TICK: Duration = Duration::from_millis(50);
+
+/// Entry caps on the session thread's two lazily-filled caches.
+/// Both are keyed by client-controlled knobs (sigma is a continuous
+/// f64), so without a cap a client could mint unlimited distinct keys
+/// and grow server memory monotonically — the same bounded-memory
+/// rule as rbuf/wbuf/queue. Eviction re-costs one solve, so the caps
+/// are generous versus any honest working set.
+const PEER_CACHE_CAP: usize = 512;
+const PREPARED_CACHE_CAP: usize = 64;
 
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
@@ -98,6 +108,12 @@ pub struct ServeOptions {
     pub peers: Vec<SocketAddr>,
     /// This server's index into `peers`.
     pub shard: usize,
+    /// Bound on every peer-link socket operation (connect, read,
+    /// write), milliseconds. A stalled or wedged owner costs at most
+    /// this long before the requester falls back to a local solve —
+    /// without it two shards fetching keys owned by each other would
+    /// deadlock their session threads permanently.
+    pub peer_timeout_ms: u64,
 }
 
 impl ServeOptions {
@@ -115,6 +131,7 @@ impl ServeOptions {
             wbuf_cap: reactor::DEFAULT_WBUF_CAP,
             peers: vec![],
             shard: 0,
+            peer_timeout_ms: 5_000,
         }
     }
 }
@@ -351,10 +368,12 @@ fn run_bound(
         let metrics = metrics.clone();
         let peers = opts.peers.clone();
         let shard = opts.shard;
+        let peer_timeout =
+            Duration::from_millis(opts.peer_timeout_ms.max(1));
         std::thread::spawn(move || {
             session_thread(
                 cfg, warm, session_pool, work_rx, infer_tx, metrics,
-                peers, shard,
+                peers, shard, peer_timeout,
             )
         })
     };
@@ -386,48 +405,59 @@ fn run_bound(
     drop(work_tx);
 
     // non-blocking accept loop (this thread): hand connections to the
-    // reactors round-robin
-    listener.set_nonblocking(true)?;
-    let poller = Poller::new()?;
-    poller.register(fd_of(&listener), 0, Interest::READ)?;
-    let mut events = Vec::new();
-    let mut next = 0usize;
-    while !shutdown.load(Ordering::SeqCst) {
-        poller.wait(&mut events, Some(ACCEPT_TICK))?;
-        loop {
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    reactor_shareds[next % n_reactors]
-                        .push_conn(stream);
-                    next += 1;
-                }
-                Err(ref e) if would_block(e) => break,
-                Err(ref e)
-                    if e.kind()
-                        == std::io::ErrorKind::Interrupted =>
-                {
-                    continue
-                }
-                Err(_) => {
-                    // transient accept failure (EMFILE and friends):
-                    // refuse loudly in the metrics and back off a beat
-                    metrics.refuse_conn();
-                    std::thread::sleep(Duration::from_millis(10));
-                    break;
+    // reactors round-robin. Errors here must NOT return early — the
+    // worker threads would keep running headless with live
+    // connections — so the loop's result is captured and the normal
+    // shutdown/drain/join sequence below runs either way.
+    let accept_result = (|| -> Result<()> {
+        listener.set_nonblocking(true)?;
+        let poller = Poller::new()?;
+        poller.register(fd_of(&listener), 0, Interest::READ)?;
+        let mut events = Vec::new();
+        let mut next = 0usize;
+        while !shutdown.load(Ordering::SeqCst) {
+            poller.wait(&mut events, Some(ACCEPT_TICK))?;
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        reactor_shareds[next % n_reactors]
+                            .push_conn(stream);
+                        next += 1;
+                    }
+                    Err(ref e) if would_block(e) => break,
+                    Err(ref e)
+                        if e.kind()
+                            == std::io::ErrorKind::Interrupted =>
+                    {
+                        continue
+                    }
+                    Err(_) => {
+                        // transient accept failure (EMFILE and
+                        // friends): refuse loudly in the metrics and
+                        // back off a beat
+                        metrics.refuse_conn();
+                        std::thread::sleep(Duration::from_millis(10));
+                        break;
+                    }
                 }
             }
         }
-    }
+        poller.deregister(fd_of(&listener)).ok();
+        Ok(())
+    })();
+    // a no-op on the clean path; on an accept-loop error this is what
+    // tells the reactors (and through them the session and batcher)
+    // to drain instead of serving forever under a dead acceptor
+    shutdown.store(true, Ordering::SeqCst);
     // release the port before the drain finishes so a restart can
     // bind immediately
-    poller.deregister(fd_of(&listener)).ok();
     drop(listener);
     for h in reactor_handles {
         let _ = h.join();
     }
     let _ = session_handle.join();
     let _ = batcher_handle.join();
-    Ok(())
+    accept_result
 }
 
 /// Everything a prepared `Infer` needs, resolved once per
@@ -442,28 +472,45 @@ struct Prepared {
 }
 
 /// A lazily-connected outbound link to one ring peer; reconnects (with
-/// a short backoff) after any failure.
+/// a short backoff) after any failure. Every socket operation is
+/// bounded by `timeout`: the link runs on the single session thread,
+/// so an unbounded read against a wedged owner would block all compute
+/// on this shard — and deadlock permanently if two shards ever fetch
+/// keys owned by each other (each owner's inbound `peer_point` sits
+/// unprocessed behind its own outbound fetch). With the bound, the
+/// worst case is one timeout and a local-solve fallback.
 struct PeerLink {
     addr: SocketAddr,
+    timeout: Duration,
     conn: Option<Client>,
 }
 
 impl PeerLink {
+    fn connect(&self) -> Result<Client> {
+        let c = Backoff {
+            attempts: 2,
+            base_ms: 10,
+            cap_ms: 50,
+        }
+        .retry(self.addr.port() as u64, || {
+            Client::connect_within(self.addr, self.timeout)
+        })?;
+        c.set_io_timeout(Some(self.timeout))?;
+        Ok(c)
+    }
+
     fn fetch(&mut self, req: &PointReq) -> Result<Json> {
         let mut last = None;
         for _ in 0..2 {
             if self.conn.is_none() {
-                match Client::connect_backoff(
-                    self.addr,
-                    Backoff {
-                        attempts: 2,
-                        base_ms: 10,
-                        cap_ms: 50,
-                    },
-                ) {
+                match self.connect() {
                     Ok(c) => self.conn = Some(c),
                     Err(e) => {
+                        let hung = client::timed_out(&e);
                         last = Some(e);
+                        if hung {
+                            break;
+                        }
                         continue;
                     }
                 }
@@ -479,15 +526,63 @@ impl PeerLink {
                 Ok(j) => return Ok(j),
                 Err(e) => {
                     // a broken link is dropped, not nursed; the retry
-                    // reconnects fresh
+                    // reconnects fresh — unless the peer is wedged
+                    // (timeout), where a retry would only double the
+                    // stall before the caller's local-solve fallback
                     self.conn = None;
+                    let hung = client::timed_out(&e);
                     last = Some(e);
+                    if hung {
+                        break;
+                    }
                 }
             }
         }
         Err(last.unwrap_or_else(|| {
             anyhow::anyhow!("peer {} unreachable", self.addr)
         }))
+    }
+}
+
+/// A HashMap bounded by entry count: inserting at capacity evicts the
+/// oldest-inserted entry (FIFO). Both session-side caches are keyed by
+/// client-controlled knobs, so an unbounded map would let any client
+/// grow server memory monotonically — this holds the §16
+/// bounded-memory invariant at the cost of a re-solve on re-miss.
+struct BoundedMap<K, V> {
+    cap: usize,
+    order: VecDeque<K>,
+    map: HashMap<K, V>,
+}
+
+impl<K: Eq + Hash + Clone, V> BoundedMap<K, V> {
+    fn new(cap: usize) -> BoundedMap<K, V> {
+        BoundedMap {
+            cap: cap.max(1),
+            order: VecDeque::new(),
+            map: HashMap::new(),
+        }
+    }
+
+    fn get(&self, key: &K) -> Option<&V> {
+        self.map.get(key)
+    }
+
+    fn insert(&mut self, key: K, value: V) {
+        if !self.map.contains_key(&key) {
+            if self.order.len() >= self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+            self.order.push_back(key.clone());
+        }
+        self.map.insert(key, value);
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.map.len()
     }
 }
 
@@ -499,8 +594,8 @@ struct SessionSrv {
     shard: usize,
     peers: Vec<PeerLink>,
     /// key -> verified peer reply (id rewritten per request).
-    peer_cache: HashMap<String, Json>,
-    prepared: HashMap<(Dataset, usize, u64, usize), Prepared>,
+    peer_cache: BoundedMap<String, Json>,
+    prepared: BoundedMap<(Dataset, usize, u64, usize), Prepared>,
 }
 
 /// The session thread: builds the `DesignSession` (on its own thread —
@@ -517,6 +612,7 @@ fn session_thread(
     metrics: Arc<Metrics>,
     peers: Vec<SocketAddr>,
     shard: usize,
+    peer_timeout: Duration,
 ) {
     let session = match DesignSession::builder()
         .config(cfg)
@@ -559,10 +655,14 @@ fn session_thread(
         shard,
         peers: peers
             .into_iter()
-            .map(|addr| PeerLink { addr, conn: None })
+            .map(|addr| PeerLink {
+                addr,
+                timeout: peer_timeout,
+                conn: None,
+            })
             .collect(),
-        peer_cache: HashMap::new(),
-        prepared: HashMap::new(),
+        peer_cache: BoundedMap::new(PEER_CACHE_CAP),
+        prepared: BoundedMap::new(PREPARED_CACHE_CAP),
     };
     for w in rx {
         srv.handle(w);
@@ -738,4 +838,30 @@ fn with_id(mut reply: Json, id: f64) -> Json {
         m.insert("id".into(), Json::Num(id));
     }
     reply
+}
+
+#[cfg(test)]
+mod tests {
+    use super::BoundedMap;
+
+    #[test]
+    fn bounded_map_evicts_oldest_and_never_exceeds_cap() {
+        let mut m: BoundedMap<u64, u64> = BoundedMap::new(3);
+        for k in 0..10 {
+            m.insert(k, k * k);
+            assert!(m.len() <= 3, "cap 3 exceeded at {k}");
+        }
+        // the three youngest survive, the rest were evicted FIFO
+        for k in 7..10 {
+            assert_eq!(m.get(&k), Some(&(k * k)));
+        }
+        for k in 0..7 {
+            assert_eq!(m.get(&k), None);
+        }
+        // overwriting a live key neither grows nor evicts
+        m.insert(8, 1);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.get(&8), Some(&1));
+        assert_eq!(m.get(&7), Some(&49));
+    }
 }

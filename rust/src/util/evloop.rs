@@ -119,9 +119,14 @@ mod sys {
     }
 
     fn mask(interest: Interest) -> u32 {
-        let mut m = EPOLLRDHUP;
+        // RDHUP rides with read interest only: a write-only
+        // registration is exactly what a reactor uses for a
+        // half-closed connection still owed replies, and reporting
+        // the (permanent, level-triggered) RDHUP there would busy-
+        // wake the loop until the last reply flushed
+        let mut m = 0;
         if interest.readable {
-            m |= EPOLLIN;
+            m |= EPOLLIN | EPOLLRDHUP;
         }
         if interest.writable {
             m |= EPOLLOUT;

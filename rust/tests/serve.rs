@@ -15,8 +15,8 @@
 //! offline suites.
 
 use std::io::{BufRead, BufReader, Read as _, Write as _};
-use std::net::{SocketAddr, TcpStream};
-use std::time::Duration;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
 
 use capmin::coordinator::config::ExperimentConfig;
 use capmin::data::synth::Dataset;
@@ -541,6 +541,117 @@ fn overload_sheds_in_order_and_backoff_retries_through() {
 
     c.shutdown().unwrap();
     srv.join().unwrap();
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// A pipelined client that half-closes its write side after sending
+/// (shutdown(SHUT_WR)) is owed every reply: EOF must drain the
+/// connection — buffered requests answered, in order — not kill it.
+#[test]
+fn half_closed_pipeline_still_gets_all_replies() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    let (srv, addr, run_dir) = spawn_server("halfclose", 4, 10);
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(
+        b"{\"v\":1,\"id\":1,\"type\":\"point\",\
+           \"dataset\":\"fashion_syn\",\"k\":14,\"sigma\":0.02}\n\
+          {\"v\":1,\"id\":2,\"type\":\"point\",\
+           \"dataset\":\"fashion_syn\",\"k\":14,\"sigma\":0.02}\n\
+          {\"v\":1,\"id\":3,\"type\":\"stats\"}\n",
+    )
+    .unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    let mut r = BufReader::new(s);
+    for want in 1..=3 {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap_or_else(|e| {
+            panic!("reply {want} unparsable ({e}): {line:?}")
+        });
+        assert!(
+            j.req("ok").as_bool(),
+            "reply {want} failed: {line:?}"
+        );
+        assert_eq!(j.req("id").as_f64(), want as f64);
+    }
+    // everything owed was delivered; now the server closes its side
+    let mut rest = String::new();
+    assert_eq!(r.read_line(&mut rest).unwrap(), 0);
+
+    let mut c = Client::connect(addr).unwrap();
+    c.shutdown().unwrap();
+    srv.join().unwrap();
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// A ring peer that accepts connections but never replies (wedged,
+/// not down) must cost at most the peer timeout before the requester
+/// falls back to a local solve — never a blocked session thread.
+#[test]
+fn wedged_peer_times_out_and_falls_back_to_local_solve() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    let cfg = serve_cfg("wedged_peer");
+    let run_dir = cfg.run_dir.clone();
+    // the wedge: a bound listener whose backlog completes TCP
+    // handshakes, but nothing ever accepts or answers
+    let wedge = TcpListener::bind("127.0.0.1:0").unwrap();
+    let wedge_addr = wedge.local_addr().unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut opts = ServeOptions::new(addr);
+    opts.peers = vec![addr, wedge_addr];
+    opts.shard = 0;
+    opts.peer_timeout_ms = 150;
+    // a spec the wedged shard 1 owns, so shard 0 must try the fetch
+    let ring = HashRing::new(2);
+    let probe = cfg.clone();
+    let srv = server::spawn_on(listener, cfg, opts).unwrap();
+    let (k1, sigma1) = (1..=32usize)
+        .flat_map(|k| {
+            [0.0, 0.01, 0.02, 0.03, 0.05]
+                .into_iter()
+                .map(move |s| (k, s))
+        })
+        .find(|&(k, s)| {
+            let spec = OperatingPointSpec::new(
+                Dataset::FashionSyn,
+                k,
+                s,
+                0,
+            );
+            ring.owner(&spec.cache_key(&probe)) == 1
+        })
+        .expect("some (k, sigma) must hash to shard 1");
+
+    let mut c = Client::connect(addr).unwrap();
+    let t0 = Instant::now();
+    let p = c.point(DS, k1, sigma1, 0, false).unwrap();
+    assert!(p.req("c").as_f64() > 0.0, "local fallback failed");
+    // the fetch is bounded by the 150 ms timeout (no retry doubles a
+    // timeout), plus the local cold solve — nowhere near a deadlock
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "peer fetch not bounded: {:?}",
+        t0.elapsed()
+    );
+    let st = c.stats().unwrap();
+    let peer = st.req("stats").req("serving").req("peer");
+    assert!(
+        peer.req("misses").as_f64() >= 1.0,
+        "the wedged peer was never tried: {}",
+        st.to_string()
+    );
+    assert_eq!(peer.req("hits").as_f64(), 0.0);
+
+    c.shutdown().unwrap();
+    srv.join().unwrap();
+    drop(wedge);
     let _ = std::fs::remove_dir_all(&run_dir);
 }
 
