@@ -1,0 +1,84 @@
+//! Bench: telemetry span overhead (DESIGN.md §17). The hot-path
+//! contract is that a `span!` callsite with tracing disabled (the
+//! default) costs one relaxed atomic load — instrumenting a kernel
+//! must not perturb it. Measures, on a fig8-shaped exact matmul
+//! (O=32, K=288, D=768):
+//!
+//! * the uninstrumented kernel baseline;
+//! * the same kernel under a `span!` guard with tracing DISABLED —
+//!   the CI gate holds `speedup_vs_baseline >= 0.98` (<= 2%
+//!   overhead);
+//! * the same under tracing ENABLED (ring writes on), informational.
+//!
+//! Fully offline; `BENCH_FAST=1` shrinks iteration counts. Results
+//! land in `BENCH_obs.json` (uniform schema, see bench_harness).
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, header, report, scaled, Emitter};
+use capmin::bnn::{BitMatrix, SubMacEngine};
+use capmin::util::rng::Rng;
+
+/// Kernel calls per timed iteration (each under its own span guard,
+/// so the measured overhead is per-callsite, smoothed over repeats).
+const REPS: usize = 4;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let mut emit = Emitter::new("obs");
+
+    // fig8-shaped engine slice: vgg3 conv2 at a reduced batch
+    let (o, k, d) = (32usize, 288usize, 768usize);
+    let w: Vec<f32> = (0..o * k).map(|_| rng.pm1(0.5)).collect();
+    let x: Vec<f32> = (0..d * k).map(|_| rng.pm1(0.5)).collect();
+    let eng = SubMacEngine::new(o, k, &w, k);
+    let xb = BitMatrix::pack(d, k, &x, false);
+    let macs = (REPS * o * k * d) as f64;
+
+    header("span overhead (fig8-shaped kernel: O=32, K=288, D=768)");
+    assert!(
+        !capmin::obs::tracing_enabled(),
+        "tracing must start disabled"
+    );
+    let iters = scaled(60);
+    let base = bench("kernel uninstrumented", 3, iters, || {
+        for _ in 0..REPS {
+            std::hint::black_box(eng.matmul_exact(&xb));
+        }
+    });
+    report(&base, macs, "MAC");
+
+    let disabled =
+        bench("kernel under span! (tracing off)", 3, iters, || {
+            for _ in 0..REPS {
+                let _s = capmin::span!("bench.obs.kernel");
+                std::hint::black_box(eng.matmul_exact(&xb));
+            }
+        });
+    report(&disabled, macs, "MAC");
+    println!(
+        "    -> {:.4}x vs uninstrumented (CI gate: >= 0.98)",
+        base.p50_s / disabled.p50_s
+    );
+
+    capmin::obs::set_tracing(true);
+    let enabled =
+        bench("kernel under span! (tracing on)", 3, iters, || {
+            for _ in 0..REPS {
+                let _s = capmin::span!("bench.obs.kernel");
+                std::hint::black_box(eng.matmul_exact(&xb));
+            }
+        });
+    capmin::obs::set_tracing(false);
+    report(&enabled, macs, "MAC");
+    println!(
+        "    -> {:.4}x vs uninstrumented (ring writes on)",
+        base.p50_s / enabled.p50_s
+    );
+
+    emit.add(&base, None);
+    emit.add(&disabled, Some(&base));
+    emit.add(&enabled, Some(&base));
+    emit.write();
+}

@@ -529,6 +529,26 @@ fn main() {
             None,
         );
         let mut fin = Client::connect(addr).unwrap();
+        // server-side phase medians from the unified registry
+        // (DESIGN.md §17): where the admitted requests actually spent
+        // their time, next to the client-observed latencies above
+        let st = fin.stats().unwrap();
+        let reg = st.req("stats").req("registry");
+        for phase in ["queue_us", "batch_wait_us", "forward_us"] {
+            let h = reg.req(&format!("serve.phase.{phase}"));
+            let p50_us = h.req("p50_le").as_f64();
+            println!(
+                "  server phase {phase:<14} p50 <= {p50_us:>8.0} us  \
+                 ({} samples)",
+                h.req("count").as_f64()
+            );
+            emitter.push(
+                &format!("serve_open_phase_{phase}_p50"),
+                h.req("count").as_f64() as usize,
+                p50_us * 1e3, // envelope in ns, uniform schema
+                None,
+            );
+        }
         fin.shutdown().unwrap();
         srv.join().unwrap();
         let _ = std::fs::remove_dir_all(&run_dir);

@@ -303,6 +303,7 @@ impl MonteCarlo {
         set: &SpikeTimeSet,
         rng: &mut Rng,
     ) -> (Pmap, u64) {
+        let _span = crate::span!("mc.pmap");
         if self.params.sigma_rel == 0.0 || self.mode == McMode::Analytic
         {
             return (self.analytic_pmap(set), 0);
@@ -327,6 +328,9 @@ impl MonteCarlo {
         let parent: &Rng = rng;
         let nc = self.chunks();
         let parts: Vec<Vec<u64>> = self.pool.map(k * nc, |j| {
+            // nests under mc.pmap even on pool workers: for_each
+            // forwards the submitter's trace context (DESIGN.md §17)
+            let _span = crate::span!("mc.chunk");
             let (i, chunk) = (j / nc, j % nc);
             let m = set.levels[i];
             let mut row = vec![0u64; k];
@@ -370,6 +374,7 @@ impl MonteCarlo {
         let k = set.levels.len();
         let parent: &Rng = rng;
         let rows: Vec<(Vec<f64>, u64)> = self.pool.map(k, |i| {
+            let _span = crate::span!("mc.chunk");
             let m = set.levels[i];
             let stream = parent.split(m as u64 + 1);
             self.fast_row(set, m, &stream)
@@ -624,6 +629,7 @@ impl MonteCarlo {
         set: &SpikeTimeSet,
         rng: &mut Rng,
     ) -> (Vec<Vec<f64>>, u64) {
+        let _span = crate::span!("mc.full_map");
         if self.params.sigma_rel == 0.0 || self.mode == McMode::Analytic
         {
             return (self.analytic_full_map(set), 0);
@@ -643,6 +649,7 @@ impl MonteCarlo {
         let parent: &Rng = rng;
         let nc = self.chunks();
         let parts: Vec<Vec<u64>> = self.pool.map(N_LEVELS * nc, |j| {
+            let _span = crate::span!("mc.chunk");
             let (m, chunk) = (j / nc, j % nc);
             let mut row = vec![0u64; N_LEVELS];
             let mut r = parent.split(1000 + m as u64).split(chunk as u64);
@@ -676,6 +683,7 @@ impl MonteCarlo {
         let parent: &Rng = rng;
         let rows: Vec<(Vec<f64>, u64)> =
             self.pool.map(N_LEVELS, |m| {
+                let _span = crate::span!("mc.chunk");
                 let stream = parent.split(1000 + m as u64);
                 self.fast_row(set, m, &stream)
             });

@@ -210,8 +210,10 @@ pub fn measure_best(kind: KernelKind) -> Tile {
 /// drive this directly so every call re-reads the file).
 pub fn tuned_tile_uncached(kind: KernelKind, path: &Path) -> Tile {
     if let Some(t) = load_cached(kind, path) {
+        crate::obs::registry::inc("backend.autotune.cache_hits");
         return t;
     }
+    crate::obs::registry::inc("backend.autotune.measures");
     let t = measure_best(kind);
     save_cached(kind, t, path);
     t
@@ -225,6 +227,7 @@ pub fn tuned_tile(kind: KernelKind, path: &Path) -> Tile {
     let memo = MEMO.get_or_init(|| Mutex::new(HashMap::new()));
     let key = format!("{}|{}", cache_key(kind), path.display());
     if let Some(t) = memo.lock().unwrap().get(&key) {
+        crate::obs::registry::inc("backend.autotune.memo_hits");
         return *t;
     }
     let t = tuned_tile_uncached(kind, path);

@@ -730,6 +730,31 @@ fn merge_hists(parts: Vec<[u64; N_LEVELS]>) -> [u64; N_LEVELS] {
     hist
 }
 
+/// Bump the per-tier dispatch counter (`kernel.dispatch.<tier>`,
+/// DESIGN.md §17). Handles resolve through the registry mutex once
+/// per process and are cached, so each kernel entry pays one relaxed
+/// atomic add — benches dispatch these thousands of times per second.
+fn count_dispatch(kind: KernelKind) {
+    use crate::obs::registry::{counter, Counter};
+    use std::sync::{Arc, OnceLock};
+    static TIERS: OnceLock<[Arc<Counter>; 4]> = OnceLock::new();
+    let tiers = TIERS.get_or_init(|| {
+        [
+            counter("kernel.dispatch.scalar"),
+            counter("kernel.dispatch.avx2"),
+            counter("kernel.dispatch.avx512"),
+            counter("kernel.dispatch.neon"),
+        ]
+    });
+    let idx = match kind {
+        KernelKind::Scalar => 0,
+        KernelKind::Avx2 => 1,
+        KernelKind::Avx512 => 2,
+        KernelKind::Neon => 3,
+    };
+    tiers[idx].inc();
+}
+
 /// F_MAC level histogram of one matmul, fanned over `pool` (per-block
 /// histograms merge by addition, so the fan-out is exact).
 /// Bit-identical to [`SubMacEngine::histogram`].
@@ -739,6 +764,7 @@ pub fn histogram(
     x: &BitMatrix,
     kind: KernelKind,
 ) -> [u64; N_LEVELS] {
+    count_dispatch(kind);
     let (o, d) = (eng.w.rows, x.rows);
     let blocks = work_blocks(o, d, pool.threads());
     merge_hists(
@@ -965,6 +991,7 @@ pub fn matmul_error_into(
     kind: KernelKind,
     out: &mut [f32],
 ) {
+    count_dispatch(kind);
     let (o, d) = (eng.w.rows, x.rows);
     assert_eq!(x.words_per_row, eng.n_groups());
     assert_eq!(out.len(), o * d);
@@ -1485,6 +1512,7 @@ pub fn matmul_exact_tiled_into(
     scratch: &mut PackScratch,
     out: &mut [f32],
 ) {
+    count_dispatch(kind);
     let t = match tile {
         ResolvedTile::ScalarSafe => {
             return matmul_exact_into(pool, eng, x, kind, out)
@@ -1556,6 +1584,7 @@ pub fn matmul_exact_fused_tiled_into(
     scratch: &mut PackScratch,
     out: &mut [f32],
 ) -> [u64; N_LEVELS] {
+    count_dispatch(kind);
     let t = match tile {
         ResolvedTile::ScalarSafe => {
             return matmul_exact_fused_into(pool, eng, x, kind, out)

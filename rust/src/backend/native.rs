@@ -195,7 +195,18 @@ impl NativePlan {
     /// empty one only when every arena is in use by a concurrent
     /// request).
     fn take_arena(&self) -> Arena {
-        self.arenas.lock().unwrap().pop().unwrap_or_default()
+        // observation only (DESIGN.md §17): the freelist tests pin
+        // parked-buffer counts, which these counters never affect
+        match self.arenas.lock().unwrap().pop() {
+            Some(a) => {
+                crate::obs::registry::inc("backend.arena.reuse");
+                a
+            }
+            None => {
+                crate::obs::registry::inc("backend.arena.alloc");
+                Arena::default()
+            }
+        }
     }
 
     /// Park an arena back for the next pass or request.
@@ -727,6 +738,21 @@ impl NativeBackend {
         r: &ForwardReq,
         pool: &ScopedPool,
     ) -> Result<Vec<f32>> {
+        // re-home this request under its own trace id (a batched
+        // request runs on a pool worker that inherited the *batcher's*
+        // context); the span still nests under the submitter's span
+        let _ctx = if r.trace != 0 {
+            Some(
+                crate::obs::TraceCtx {
+                    trace_id: r.trace,
+                    span: crate::obs::current_ctx().span,
+                }
+                .attach(),
+            )
+        } else {
+            None
+        };
+        let _span = crate::span!("backend.forward");
         let plan = self.plan(r.model, r.folded)?;
         ensure!(
             r.ems.len() == plan.n_matmuls(),
@@ -798,6 +824,9 @@ pub struct ForwardReq<'a> {
     pub seed: u32,
     pub x: &'a [f32],
     pub batch: usize,
+    /// Request-scoped trace id (DESIGN.md §17); 0 when the caller is
+    /// not serving a traced request (CLI, eval, benches).
+    pub trace: u64,
 }
 
 impl InferenceBackend for NativeBackend {
@@ -822,6 +851,7 @@ impl InferenceBackend for NativeBackend {
                 seed,
                 x,
                 batch,
+                trace: 0,
             },
             &self.pool,
         )
@@ -1169,6 +1199,7 @@ mod tests {
                 seed: *seed,
                 x,
                 batch: *b,
+                trace: 0,
             })
             .collect();
         let batched = be.forward_many(&reqs);
@@ -1222,6 +1253,7 @@ mod tests {
                 seed: 1,
                 x: &good,
                 batch: 1,
+                trace: 0,
             },
             // wrong error-model arity: this request fails, the other
             // still answers
@@ -1232,6 +1264,7 @@ mod tests {
                 seed: 1,
                 x: &good,
                 batch: 1,
+                trace: 0,
             },
         ];
         let be = NativeBackend::new(2);

@@ -32,6 +32,12 @@
 //! weights, scratch arenas — behind a newline-delimited-JSON TCP
 //! protocol (`capmin serve`), micro-batching concurrent inference
 //! requests with replies bit-identical to solo execution.
+//!
+//! Telemetry — tracing spans over per-thread ring buffers, the
+//! cross-layer metrics registry, Chrome-trace export and leveled
+//! logging — lives in [`obs`] (DESIGN.md §17) and is threaded through
+//! every layer above; it is off by default and allocation-free on the
+//! hot path.
 
 pub mod analog;
 pub mod backend;
@@ -40,6 +46,7 @@ pub mod capmin;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod obs;
 pub mod plan;
 pub mod runtime;
 pub mod serve;

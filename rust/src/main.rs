@@ -27,13 +27,14 @@ const KNOWN_OPTS: &[&str] = &[
     "tile", "run-dir", "seed", "emit", "plans", "suite-id", "addr",
     "max-batch", "max-wait-ms", "reactors", "queue-cap",
     "idle-timeout-ms", "shards", "peers", "shard",
-    "peer-timeout-ms",
+    "peer-timeout-ms", "trace", "log-level",
 ];
 
-/// Every bare `--flag`.
+/// Every bare `--flag`. `trace` appears in both lists: bare it picks
+/// the default export path, with a value it pins one.
 const KNOWN_FLAGS: &[&str] = &[
     "help", "quick", "paper-scale", "no-point-cache", "no-eval",
-    "no-resume",
+    "no-resume", "trace", "prom",
 ];
 
 const HELP: &str = "\
@@ -87,6 +88,13 @@ session commands:
                   (--addr HOST:PORT  --max-batch N  --max-wait-ms N;
                    --dataset pre-warms; shut down with a {"type":
                    "shutdown"} request — in-flight work drains first)
+  stats           query a running server's Stats endpoint and print
+                  the reply (--addr HOST:PORT; --prom prints the
+                  unified metrics registry as Prometheus text
+                  exposition instead — DESIGN.md §17)
+  trace-summary   aggregate an exported trace file into a per-phase
+                  count/total/self table (--trace PATH, default: the
+                  newest <run-dir>/trace/*.trace.json)
   train           train a model on a dataset (cached in runs/; needs
                   the xla build — native builds fall back to a flagged
                   untrained init)
@@ -152,6 +160,23 @@ common options:
   --run-dir DIR            cache directory (default runs/)
   --no-point-cache         keep operating points in memory only
 
+telemetry options (DESIGN.md §17):
+  --trace [PATH]           record structured spans (session solves,
+                           MC maps, kernel forwards, serve phases)
+                           into lock-free per-thread rings and export
+                           them as Chrome/Perfetto trace JSON on
+                           exit: bare picks the default path
+                           <run-dir>/trace/<ts>.trace.json, a value
+                           pins one; open the file in ui.perfetto.dev
+                           or chrome://tracing, or aggregate it with
+                           `capmin trace-summary`. Off by default:
+                           disabled instrumentation costs one relaxed
+                           atomic load per span (benches/obs.rs gates
+                           this)
+  --log-level LVL          error|warn|info|debug (default info); gates
+                           the leveled stderr log lines the serve tier
+                           emits (replacing its raw prints)
+
 serve options:
   --addr HOST:PORT         bind address (default 127.0.0.1:7878;
                            port 0 picks a free port and prints it)
@@ -214,6 +239,31 @@ fn main() -> Result<()> {
     // typo'd or misplaced options error with the valid set up front,
     // instead of being silently ignored
     args.reject_unknown(KNOWN_OPTS, KNOWN_FLAGS)?;
+    if let Some(l) =
+        args.choice("log-level", &capmin::obs::LogLevel::CHOICES)?
+    {
+        capmin::obs::set_log_level(
+            capmin::obs::LogLevel::parse(&l)
+                .expect("validated choice"),
+        );
+    }
+    // --trace turns span recording on for the whole command and
+    // exports the rings on exit (DESIGN.md §17); for trace-summary
+    // the same option names the *input* file instead
+    let trace_out: Option<std::path::PathBuf> = if args.cmd
+        != "trace-summary"
+        && (args.flag("trace") || args.get("trace").is_some())
+    {
+        capmin::obs::set_tracing(true);
+        Some(match args.get("trace") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => capmin::obs::trace::default_trace_path(
+                &args.str_or("run-dir", "runs"),
+            ),
+        })
+    } else {
+        None
+    };
     // --emit is validated here even for commands that don't consume it
     let emit: Vec<Emit> = args
         .choice_list("emit", EMIT_CHOICES)?
@@ -366,6 +416,12 @@ fn main() -> Result<()> {
                         .map(|a| format!("{:.1}%", 100.0 * a))
                         .unwrap_or_else(|| "-".into()),
                 );
+                // provenance (DESIGN.md §17): replays report the wall
+                // time of the solve that minted the point, not 0
+                println!(
+                    "  timing: solve {:.1} ms | queue {:.2} ms",
+                    point.meta.solve_ms, point.meta.queue_ms
+                );
                 if cfg.point_cache {
                     println!(
                         "  cached at {}",
@@ -437,13 +493,16 @@ fn main() -> Result<()> {
             }
             let cfg = session.config().clone();
             drop(session); // the server owns its own warm session
-            println!(
+            capmin::log_info!(
+                "serve",
                 "capmin serve: binding {addr} (max-batch \
                  {max_batch}, max-wait {} ms, {} reactors, queue \
                  cap {}, native backend) — send \
                  {{\"v\":1,\"id\":1,\"type\":\"shutdown\"}} to \
                  drain and exit",
-                opts.max_wait_ms, opts.reactors, opts.queue_cap
+                opts.max_wait_ms,
+                opts.reactors,
+                opts.queue_cap
             );
             if shards > 1 {
                 capmin::serve::server::run_sharded(
@@ -452,7 +511,44 @@ fn main() -> Result<()> {
             } else {
                 capmin::serve::server::run(cfg, opts)?;
             }
-            println!("capmin serve: drained and stopped");
+            capmin::log_info!(
+                "serve",
+                "capmin serve: drained and stopped"
+            );
+        }
+        "stats" => {
+            let addr = args.addr("addr", "127.0.0.1:7878")?;
+            let mut c = capmin::serve::Client::connect(addr)?;
+            if args.flag("prom") {
+                let (_, text) = c.stats_prom()?;
+                print!("{text}");
+            } else {
+                println!("{}", c.stats()?);
+            }
+        }
+        "trace-summary" => {
+            let path = match args.get("trace") {
+                Some(p) => std::path::PathBuf::from(p),
+                None => newest_trace(&session.config().run_dir)?,
+            };
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!(
+                    "reading trace {}: {e}",
+                    path.display()
+                ))?;
+            let j = capmin::util::json::Json::parse(&text)?;
+            let evs =
+                capmin::obs::trace::parse_chrome_trace(&j)?;
+            println!(
+                "trace: {} ({} spans)",
+                path.display(),
+                evs.len()
+            );
+            let rows = capmin::obs::trace::summarize(&evs);
+            print!(
+                "{}",
+                capmin::obs::trace::render_summary(&rows)
+            );
         }
         "train" => {
             for ds in datasets {
@@ -476,7 +572,51 @@ fn main() -> Result<()> {
             std::process::exit(2);
         }
     }
+    if let Some(path) = trace_out {
+        capmin::obs::trace::write_trace(&path)?;
+        println!("trace written to {}", path.display());
+    }
     Ok(())
+}
+
+/// The newest `<run-dir>/trace/*.trace.json`, for a bare
+/// `trace-summary` right after a `--trace` run.
+fn newest_trace(run_dir: &str) -> Result<std::path::PathBuf> {
+    let dir = std::path::Path::new(run_dir).join("trace");
+    let mut best: Option<(std::time::SystemTime, std::path::PathBuf)> =
+        None;
+    for entry in std::fs::read_dir(&dir).map_err(|e| {
+        anyhow::anyhow!(
+            "no trace files under {} ({e}); run a command with \
+             --trace first or pass --trace PATH",
+            dir.display()
+        )
+    })? {
+        let entry = entry?;
+        let path = entry.path();
+        if !path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.ends_with(".trace.json"))
+            .unwrap_or(false)
+        {
+            continue;
+        }
+        let mtime = entry
+            .metadata()?
+            .modified()
+            .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        if best.as_ref().map(|(t, _)| mtime > *t).unwrap_or(true) {
+            best = Some((mtime, path));
+        }
+    }
+    best.map(|(_, p)| p).ok_or_else(|| {
+        anyhow::anyhow!(
+            "no *.trace.json under {}; run a command with --trace \
+             first or pass --trace PATH",
+            dir.display()
+        )
+    })
 }
 
 /// Sanity pass over the full wiring on whatever backend the session

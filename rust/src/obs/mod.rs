@@ -1,0 +1,509 @@
+//! Unified telemetry (DESIGN.md §17): structured tracing spans over
+//! lock-free per-thread ring buffers, a cross-layer metrics registry,
+//! Chrome-trace export for Perfetto, and leveled logging — all
+//! zero-dependency, all off by default.
+//!
+//! Hot-path contract: with tracing disabled (the default) a
+//! [`span!`](crate::span!) callsite is a single relaxed atomic load
+//! plus a no-op guard; with tracing enabled, entering and leaving a
+//! span allocates nothing and takes no lock — it bumps two atomics
+//! and writes one fixed-size slot into the current thread's
+//! [`ring::SpanRing`].
+//!
+//! Trace ids are allocated per serve request at admission, carried
+//! through batcher → session → solver → kernels (pool workers inherit
+//! the spawning thread's span context, see `util/pool.rs`) and echoed
+//! in replies as a hex string, so a slow request can be attributed to
+//! queueing vs batching vs forward vs reply from the exported trace.
+
+pub mod registry;
+pub mod ring;
+pub mod trace;
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use ring::{SpanEvent, SpanRing};
+
+/// Events per thread ring; overflow wraps and keeps the newest
+/// (DESIGN.md §17 sizing rationale).
+pub const RING_CAP: usize = 8192;
+
+// ---------------------------------------------------------------
+// Monotonic clock
+// ---------------------------------------------------------------
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process obs epoch (first clock use).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Nanoseconds-since-epoch of an `Instant` captured earlier (e.g. a
+/// request's admission time). Saturates to 0 for pre-epoch instants.
+pub fn ns_of(t: Instant) -> u64 {
+    t.checked_duration_since(epoch())
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------
+// Tracing enable flag (THE disabled-mode fast path)
+// ---------------------------------------------------------------
+
+static TRACING: AtomicBool = AtomicBool::new(false);
+
+#[inline]
+pub fn tracing_enabled() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// Turn span collection on or off process-wide. Enabling pins the
+/// obs epoch so all span timestamps share one origin.
+pub fn set_tracing(on: bool) {
+    if on {
+        epoch();
+    }
+    TRACING.store(on, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------
+// Span-name interning
+// ---------------------------------------------------------------
+
+fn names() -> &'static Mutex<Vec<&'static str>> {
+    static NAMES: OnceLock<Mutex<Vec<&'static str>>> = OnceLock::new();
+    NAMES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Intern a span name, returning its dense id. Called once per
+/// callsite (the [`span!`](crate::span!) macro caches the id in a
+/// `OnceLock`), so the mutex here is cold.
+pub fn intern(name: &'static str) -> u32 {
+    let mut v = names().lock().unwrap();
+    if let Some(i) = v.iter().position(|n| *n == name) {
+        return i as u32;
+    }
+    v.push(name);
+    (v.len() - 1) as u32
+}
+
+/// Resolve an interned id back to its name (`"?"` if unknown).
+pub fn name_of(id: u32) -> &'static str {
+    names()
+        .lock()
+        .unwrap()
+        .get(id as usize)
+        .copied()
+        .unwrap_or("?")
+}
+
+// ---------------------------------------------------------------
+// Per-thread ring + span context
+// ---------------------------------------------------------------
+
+fn rings() -> &'static Mutex<Vec<Arc<SpanRing>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<SpanRing>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Every ring ever registered (rings of finished threads survive via
+/// the `Arc`, so pool workers' spans remain flushable).
+pub fn all_rings() -> Vec<Arc<SpanRing>> {
+    rings().lock().unwrap().clone()
+}
+
+struct ThreadCtx {
+    ring: Arc<SpanRing>,
+    trace_id: Cell<u64>,
+    current_span: Cell<u64>,
+}
+
+impl ThreadCtx {
+    fn register() -> ThreadCtx {
+        static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current()
+            .name()
+            .unwrap_or("thread")
+            .to_string();
+        let ring = Arc::new(SpanRing::new(tid, name, RING_CAP));
+        rings().lock().unwrap().push(ring.clone());
+        ThreadCtx {
+            ring,
+            trace_id: Cell::new(0),
+            current_span: Cell::new(0),
+        }
+    }
+}
+
+thread_local! {
+    static CTX: ThreadCtx = ThreadCtx::register();
+}
+
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate a request trace id (never 0; cheap enough to run even
+/// with tracing disabled — the id is echoed in serve replies either
+/// way). Mixed with the pid so ids from different shard processes
+/// don't collide in a merged trace.
+pub fn new_trace_id() -> u64 {
+    let n = NEXT_TRACE.fetch_add(1, Ordering::Relaxed);
+    ((std::process::id() as u64) << 40) | n
+}
+
+/// The ambient (trace id, current span) pair of this thread —
+/// captured by pools before a fan-out and re-attached on workers so
+/// child spans nest under the spawning span.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub span: u64,
+}
+
+pub fn current_ctx() -> TraceCtx {
+    if !tracing_enabled() {
+        return TraceCtx::default();
+    }
+    CTX.with(|c| TraceCtx {
+        trace_id: c.trace_id.get(),
+        span: c.current_span.get(),
+    })
+}
+
+/// RAII restore for [`TraceCtx::attach`].
+pub struct CtxGuard {
+    prev: TraceCtx,
+    active: bool,
+}
+
+impl TraceCtx {
+    /// Install this context on the current thread until the guard
+    /// drops. A no-op (and allocation-free) when tracing is off.
+    pub fn attach(self) -> CtxGuard {
+        if !tracing_enabled() {
+            return CtxGuard {
+                prev: TraceCtx::default(),
+                active: false,
+            };
+        }
+        CTX.with(|c| {
+            let prev = TraceCtx {
+                trace_id: c.trace_id.get(),
+                span: c.current_span.get(),
+            };
+            c.trace_id.set(self.trace_id);
+            c.current_span.set(self.span);
+            CtxGuard { prev, active: true }
+        })
+    }
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        if self.active {
+            CTX.with(|c| {
+                c.trace_id.set(self.prev.trace_id);
+                c.current_span.set(self.prev.span);
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------
+
+struct ActiveSpan {
+    name: u32,
+    span_id: u64,
+    parent: u64,
+    trace_id: u64,
+    start_ns: u64,
+}
+
+/// RAII span: records a completed event into the thread ring on drop.
+/// Construct via the [`span!`](crate::span!) macro, which handles
+/// name interning and the disabled-mode fast path.
+pub struct SpanGuard {
+    active: Option<ActiveSpan>,
+}
+
+impl SpanGuard {
+    /// The no-op guard returned when tracing is off.
+    #[inline]
+    pub fn disabled() -> SpanGuard {
+        SpanGuard { active: None }
+    }
+
+    /// Open a span starting now.
+    pub fn enter(name: u32) -> SpanGuard {
+        if !tracing_enabled() {
+            return SpanGuard::disabled();
+        }
+        SpanGuard::enter_at(name, now_ns())
+    }
+
+    /// Open a span whose start predates this call (e.g. measured from
+    /// a request's admission instant).
+    pub fn enter_at(name: u32, start_ns: u64) -> SpanGuard {
+        if !tracing_enabled() {
+            return SpanGuard::disabled();
+        }
+        CTX.with(|c| {
+            let span_id = NEXT_SPAN.fetch_add(1, Ordering::Relaxed);
+            let parent = c.current_span.replace(span_id);
+            SpanGuard {
+                active: Some(ActiveSpan {
+                    name,
+                    span_id,
+                    parent,
+                    trace_id: c.trace_id.get(),
+                    start_ns,
+                }),
+            }
+        })
+    }
+
+    /// This span's id (0 when disabled) — attach it to a [`TraceCtx`]
+    /// to parent work on other threads under this span.
+    pub fn id(&self) -> u64 {
+        self.active.as_ref().map(|a| a.span_id).unwrap_or(0)
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(a) = self.active.take() {
+            let end = now_ns();
+            CTX.with(|c| {
+                c.current_span.set(a.parent);
+                c.ring.push(SpanEvent {
+                    name: a.name,
+                    tid: c.ring.tid(),
+                    trace: a.trace_id,
+                    span: a.span_id,
+                    parent: a.parent,
+                    start_ns: a.start_ns,
+                    dur_ns: end.saturating_sub(a.start_ns),
+                });
+            });
+        }
+    }
+}
+
+/// Record an already-elapsed interval `[t0, now]` as a completed span
+/// under the current context (used for queue-time spans whose start
+/// was stamped on another thread). Returns the span id (0 when
+/// tracing is off).
+pub fn record_since(name: u32, t0: Instant) -> u64 {
+    if !tracing_enabled() {
+        return 0;
+    }
+    let start_ns = ns_of(t0);
+    let end = now_ns();
+    CTX.with(|c| {
+        let span_id = NEXT_SPAN.fetch_add(1, Ordering::Relaxed);
+        c.ring.push(SpanEvent {
+            name,
+            tid: c.ring.tid(),
+            trace: c.trace_id.get(),
+            span: span_id,
+            parent: c.current_span.get(),
+            start_ns,
+            dur_ns: end.saturating_sub(start_ns),
+        });
+        span_id
+    })
+}
+
+/// Open a lexically scoped span. `$name` must be a string literal;
+/// the interned id is cached per callsite, and the disabled path is
+/// one relaxed atomic load.
+#[macro_export]
+macro_rules! span {
+    ($name:literal) => {{
+        if $crate::obs::tracing_enabled() {
+            static __SPAN_ID: std::sync::OnceLock<u32> =
+                std::sync::OnceLock::new();
+            $crate::obs::SpanGuard::enter(
+                *__SPAN_ID.get_or_init(|| $crate::obs::intern($name)),
+            )
+        } else {
+            $crate::obs::SpanGuard::disabled()
+        }
+    }};
+}
+
+/// Record the interval from `$t0` (an `Instant`) to now as a closed
+/// span under the current context; evaluates to the span id.
+#[macro_export]
+macro_rules! span_since {
+    ($name:literal, $t0:expr) => {{
+        if $crate::obs::tracing_enabled() {
+            static __SPAN_ID: std::sync::OnceLock<u32> =
+                std::sync::OnceLock::new();
+            $crate::obs::record_since(
+                *__SPAN_ID.get_or_init(|| $crate::obs::intern($name)),
+                $t0,
+            )
+        } else {
+            0u64
+        }
+    }};
+}
+
+// ---------------------------------------------------------------
+// Leveled logging
+// ---------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl LogLevel {
+    pub const CHOICES: [&'static str; 4] =
+        ["error", "warn", "info", "debug"];
+
+    pub fn parse(s: &str) -> Option<LogLevel> {
+        match s {
+            "error" => Some(LogLevel::Error),
+            "warn" => Some(LogLevel::Warn),
+            "info" => Some(LogLevel::Info),
+            "debug" => Some(LogLevel::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        Self::CHOICES[self as usize]
+    }
+}
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(LogLevel::Info as u8);
+
+pub fn set_log_level(l: LogLevel) {
+    LOG_LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn log_enabled(l: LogLevel) -> bool {
+    (l as u8) <= LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one formatted log line to stderr:
+/// `[<secs-since-start> LEVEL target] message`.
+pub fn log_line(l: LogLevel, target: &str, msg: &str) {
+    eprintln!(
+        "[{:10.3} {:<5} {}] {}",
+        epoch().elapsed().as_secs_f64(),
+        l.name(),
+        target,
+        msg
+    );
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log_enabled($crate::obs::LogLevel::Error) {
+            $crate::obs::log_line(
+                $crate::obs::LogLevel::Error,
+                $target,
+                &format!($($arg)*),
+            );
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log_enabled($crate::obs::LogLevel::Warn) {
+            $crate::obs::log_line(
+                $crate::obs::LogLevel::Warn,
+                $target,
+                &format!($($arg)*),
+            );
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log_enabled($crate::obs::LogLevel::Info) {
+            $crate::obs::log_line(
+                $crate::obs::LogLevel::Info,
+                $target,
+                &format!($($arg)*),
+            );
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log_enabled($crate::obs::LogLevel::Debug) {
+            $crate::obs::log_line(
+                $crate::obs::LogLevel::Debug,
+                $target,
+                &format!($($arg)*),
+            );
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_is_inert() {
+        // tracing defaults off: guards are no-ops and allocate no ids
+        assert!(!tracing_enabled());
+        let g = crate::span!("test.disabled");
+        assert_eq!(g.id(), 0);
+        drop(g);
+        assert_eq!(crate::span_since!("test.disabled", Instant::now()), 0);
+        assert_eq!(current_ctx(), TraceCtx::default());
+    }
+
+    #[test]
+    fn intern_is_stable_and_resolvable() {
+        let a = intern("test.alpha");
+        let b = intern("test.beta");
+        assert_ne!(a, b);
+        assert_eq!(intern("test.alpha"), a);
+        assert_eq!(name_of(a), "test.alpha");
+        assert_eq!(name_of(u32::MAX), "?");
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = new_trace_id();
+        let b = new_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn log_levels_order_and_parse() {
+        assert!(LogLevel::Error < LogLevel::Debug);
+        assert_eq!(LogLevel::parse("warn"), Some(LogLevel::Warn));
+        assert_eq!(LogLevel::parse("nope"), None);
+        assert_eq!(LogLevel::Debug.name(), "debug");
+    }
+}

@@ -1,0 +1,419 @@
+//! Cross-layer metrics registry (DESIGN.md §17): named atomic
+//! counters, gauges and power-of-two histograms, created on demand and
+//! snapshotted without stopping writers. Handles are `Arc`s to plain
+//! atomics, so the hot path is a single relaxed RMW — the registry
+//! mutex is only taken when a handle is first resolved (or a snapshot
+//! is built), never per increment.
+//!
+//! Naming convention: `layer.subsystem.metric` (e.g.
+//! `session.cache.mem_hits`, `mc.draws.paper`, `serve.phase.queue_us`).
+//! The process-global registry ([`global`]) aggregates series from
+//! every layer; code that needs isolation (unit tests, the serve
+//! metrics facade) builds private [`Registry`] instances instead.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::{obj, Json};
+
+/// Monotone event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depths, freelist sizes).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if it is below (running-max tracker).
+    pub fn set_max(&self, v: i64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Bounded increment: add 1 and return `true` iff the gauge is
+    /// below `cap`. Lock-free CAS so the bound is exact under
+    /// contention — this is the serve tier's admission primitive.
+    pub fn try_raise(&self, cap: i64) -> bool {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            if cur >= cap {
+                return false;
+            }
+            match self.0.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Power-of-two bucketed histogram: bucket `i` counts values in
+/// `(2^(i-1), 2^i]` (bucket 0 counts zeros and ones). Quantiles
+/// report the chosen bucket's upper bound `2^i` — coarse by design,
+/// cheap to record, and honest about being an envelope (a p99 of
+/// `4096` means "under 4.1 ms", not "exactly 4.096 ms"). Promoted
+/// here from `serve/metrics.rs` so every layer shares one
+/// implementation.
+pub struct Hist {
+    buckets: Vec<AtomicU64>,
+}
+
+impl Hist {
+    pub fn new(n_buckets: usize) -> Hist {
+        Hist {
+            buckets: (0..n_buckets).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Ceil-log2 bucket index: the smallest `i` with `v <= 2^i`
+    /// (clamped into the last bucket).
+    fn bucket_of(&self, v: u64) -> usize {
+        let b = (64 - v.saturating_sub(1).leading_zeros()) as usize;
+        b.min(self.buckets.len() - 1)
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[self.bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Upper bound of the bucket holding the q-quantile (0 when
+    /// empty).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        1u64 << (self.buckets.len() - 1)
+    }
+
+    /// Raw bucket counts, oldest bucket first (trailing zero buckets
+    /// trimmed). Bucket `i` covers `(2^(i-1), 2^i]`.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        let mut counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        while counts.len() > 1 && counts.last() == Some(&0) {
+            counts.pop();
+        }
+        counts
+    }
+
+    /// Raw bucket counts (trailing zero buckets trimmed).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.bucket_counts()
+                .into_iter()
+                .map(|c| Json::Num(c as f64))
+                .collect(),
+        )
+    }
+
+    /// Quantile summary used by registry snapshots.
+    fn summary_json(&self) -> Json {
+        obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("p50_le", Json::Num(self.quantile(0.5) as f64)),
+            ("p90_le", Json::Num(self.quantile(0.9) as f64)),
+            ("p99_le", Json::Num(self.quantile(0.99) as f64)),
+        ])
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Hist>),
+}
+
+/// A named family of metrics. Most code uses the process-global
+/// instance via the free functions below; serve tests build private
+/// registries so parallel tests never see each other's counts.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            metrics: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Resolve (creating on first use) the counter called `name`. A
+    /// name already registered as a different kind yields a detached
+    /// handle that still counts but is not exported — callers are
+    /// expected to keep one kind per name.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => Arc::new(Counter::new()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())))
+        {
+            Metric::Gauge(g) => g.clone(),
+            _ => Arc::new(Gauge::new()),
+        }
+    }
+
+    /// Resolve a histogram with `n_buckets` power-of-two buckets
+    /// (ignored when the name already exists).
+    pub fn hist(&self, name: &str, n_buckets: usize) -> Arc<Hist> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Hist(Arc::new(Hist::new(n_buckets))))
+        {
+            Metric::Hist(h) => h.clone(),
+            _ => Arc::new(Hist::new(n_buckets)),
+        }
+    }
+
+    /// One JSON object mapping every registered series to its current
+    /// value: counters/gauges as numbers, histograms as
+    /// `{count, p50_le, p90_le, p99_le}` summaries. Additive payload
+    /// for the serve `Stats` reply.
+    pub fn snapshot_json(&self) -> Json {
+        let m = self.metrics.lock().unwrap();
+        let mut out = BTreeMap::new();
+        for (name, metric) in m.iter() {
+            let v = match metric {
+                Metric::Counter(c) => Json::Num(c.get() as f64),
+                Metric::Gauge(g) => Json::Num(g.get() as f64),
+                Metric::Hist(h) => h.summary_json(),
+            };
+            out.insert(name.clone(), v);
+        }
+        Json::Obj(out)
+    }
+
+    /// Prometheus text exposition (`capmin_` prefix, dots become
+    /// underscores; histograms as cumulative `_bucket{le=...}` series
+    /// plus `_count`).
+    pub fn prom_text(&self) -> String {
+        let m = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        for (name, metric) in m.iter() {
+            let pname = prom_name(name);
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {pname} counter\n"));
+                    out.push_str(&format!("{pname} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {pname} gauge\n"));
+                    out.push_str(&format!("{pname} {}\n", g.get()));
+                }
+                Metric::Hist(h) => {
+                    out.push_str(&format!("# TYPE {pname} histogram\n"));
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (i, c) in counts.iter().enumerate() {
+                        cum += c;
+                        out.push_str(&format!(
+                            "{pname}_bucket{{le=\"{}\"}} {cum}\n",
+                            1u64 << i
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{pname}_bucket{{le=\"+Inf\"}} {cum}\n"
+                    ));
+                    out.push_str(&format!("{pname}_count {cum}\n"));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn prom_name(name: &str) -> String {
+    let mut s = String::with_capacity(name.len() + 7);
+    s.push_str("capmin_");
+    for ch in name.chars() {
+        if ch.is_ascii_alphanumeric() {
+            s.push(ch);
+        } else {
+            s.push('_');
+        }
+    }
+    s
+}
+
+/// The process-global registry every layer reports into.
+pub fn global() -> Arc<Registry> {
+    static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(Registry::new())).clone()
+}
+
+/// `global().counter(name)` — convenience for cold resolution sites.
+pub fn counter(name: &str) -> Arc<Counter> {
+    global().counter(name)
+}
+
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    global().gauge(name)
+}
+
+pub fn hist(name: &str, n_buckets: usize) -> Arc<Hist> {
+    global().hist(name, n_buckets)
+}
+
+/// Bump a global counter by `n`. Takes the registry mutex to resolve
+/// the name — fine for per-request/per-solve sites; per-iteration hot
+/// paths should cache the `Arc<Counter>` in a `OnceLock` instead.
+pub fn add(name: &str, n: u64) {
+    global().counter(name).add(n);
+}
+
+pub fn inc(name: &str) {
+    add(name, 1);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_buckets_and_quantiles_envelope() {
+        let h = Hist::new(12);
+        for v in [1u64, 1, 1, 2, 3, 900] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        // p50 of {1,1,1,2,3,900}: 3rd value = 1 -> bucket upper 1
+        assert_eq!(h.quantile(0.5), 1);
+        // the outlier lands in [512,1024) -> upper bound 1024
+        assert_eq!(h.quantile(1.0), 1024);
+        assert_eq!(h.quantile(0.99), 1024);
+        // zero treated as the smallest bucket, values beyond the last
+        // bucket clamp into it
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 8);
+    }
+
+    #[test]
+    fn registry_resolves_one_handle_per_name() {
+        let r = Registry::new();
+        let a = r.counter("layer.thing");
+        let b = r.counter("layer.thing");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let g = r.gauge("layer.level");
+        g.set(5);
+        g.dec();
+        assert_eq!(r.gauge("layer.level").get(), 4);
+        g.set_max(2);
+        assert_eq!(g.get(), 4);
+        g.set_max(9);
+        assert_eq!(g.get(), 9);
+    }
+
+    #[test]
+    fn snapshot_and_prom_text_cover_all_kinds() {
+        let r = Registry::new();
+        r.counter("a.count").add(3);
+        r.gauge("b.depth").set(2);
+        let h = r.hist("c.lat_us", 12);
+        h.record(1);
+        h.record(3);
+        let j = r.snapshot_json();
+        assert_eq!(j.req("a.count").as_f64(), 3.0);
+        assert_eq!(j.req("b.depth").as_f64(), 2.0);
+        assert_eq!(j.req("c.lat_us").req("count").as_f64(), 2.0);
+        let prom = r.prom_text();
+        assert!(prom.contains("capmin_a_count 3"));
+        assert!(prom.contains("# TYPE capmin_b_depth gauge"));
+        assert!(prom.contains("capmin_c_lat_us_bucket{le=\"+Inf\"} 2"));
+        assert!(prom.contains("capmin_c_lat_us_count 2"));
+    }
+
+    #[test]
+    fn kind_mismatch_yields_detached_handle() {
+        let r = Registry::new();
+        r.counter("x").inc();
+        // resolving "x" as a gauge must not panic or corrupt the
+        // counter; it returns a detached handle
+        let g = r.gauge("x");
+        g.set(99);
+        assert_eq!(r.snapshot_json().req("x").as_f64(), 1.0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Lock-free per-thread span ring buffer (DESIGN.md §17). Each
+//! traced thread owns one [`SpanRing`]: a fixed array of atomic slots
+//! written only by the owning thread and snapshotted by any reader
+//! through a per-slot sequence counter (seqlock protocol — readers
+//! discard slots whose sequence is odd or changed mid-read, so a
+//! concurrent flush never blocks the hot path and never observes a
+//! torn event). On overflow the ring wraps and keeps the newest
+//! events; `pushed() - len()` is the drop count, reported by the
+//! trace exporter so truncation is visible rather than silent.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+/// One completed span, as stored in (and read back from) a ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Interned name id (`obs::name_of` resolves it).
+    pub name: u32,
+    /// Ring-owner thread id (dense obs-assigned id, not the OS tid).
+    pub tid: u32,
+    /// Request trace id (0 = untraced / process-local work).
+    pub trace: u64,
+    pub span: u64,
+    /// Parent span id (0 = root).
+    pub parent: u64,
+    /// Start, nanoseconds since the obs epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+#[derive(Default)]
+struct Slot {
+    /// 0 = never written; odd = write in progress; even = committed
+    /// (value `2*(n+1)` for the n-th push overall).
+    seq: AtomicU64,
+    name_tid: AtomicU64,
+    trace: AtomicU64,
+    span: AtomicU64,
+    parent: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+}
+
+pub struct SpanRing {
+    tid: u32,
+    name: String,
+    /// Total events ever pushed (monotone; head % cap is the next
+    /// slot).
+    head: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+impl SpanRing {
+    pub fn new(tid: u32, name: String, cap: usize) -> SpanRing {
+        SpanRing {
+            tid,
+            name,
+            head: AtomicU64::new(0),
+            slots: (0..cap.max(1)).map(|_| Slot::default()).collect(),
+        }
+    }
+
+    pub fn tid(&self) -> u32 {
+        self.tid
+    }
+
+    /// Thread name captured at registration (for trace metadata).
+    pub fn thread_name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events pushed over the ring's lifetime.
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Events overwritten by wraparound (oldest-first eviction).
+    pub fn dropped(&self) -> u64 {
+        self.pushed().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Record one completed span. Called only by the owning thread —
+    /// single-writer, so no CAS loop: bump head, mark the slot
+    /// in-progress (odd seq), store fields, commit (even seq). No
+    /// allocation, no lock. Field stores are `Release` so the odd
+    /// marker is globally visible before any field of the new event —
+    /// the reader-side acquire fence in [`SpanRing::snapshot`] then
+    /// rejects any slot it caught mid-write.
+    pub fn push(&self, ev: SpanEvent) {
+        let n = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(n % self.slots.len() as u64) as usize];
+        let commit = 2 * (n + 1);
+        slot.seq.store(commit - 1, Ordering::Release);
+        slot.name_tid.store(
+            ((self.tid as u64) << 32) | ev.name as u64,
+            Ordering::Release,
+        );
+        slot.trace.store(ev.trace, Ordering::Release);
+        slot.span.store(ev.span, Ordering::Release);
+        slot.parent.store(ev.parent, Ordering::Release);
+        slot.start_ns.store(ev.start_ns, Ordering::Release);
+        slot.dur_ns.store(ev.dur_ns, Ordering::Release);
+        slot.seq.store(commit, Ordering::Release);
+    }
+
+    /// Copy out every committed event, oldest first. Slots caught
+    /// mid-write (or rewritten during the read) are skipped — a
+    /// snapshot taken concurrently with pushes is approximate but
+    /// never torn.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::new();
+        for slot in &self.slots {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue;
+            }
+            let name_tid = slot.name_tid.load(Ordering::Relaxed);
+            let ev = SpanEvent {
+                name: (name_tid & 0xffff_ffff) as u32,
+                tid: (name_tid >> 32) as u32,
+                trace: slot.trace.load(Ordering::Relaxed),
+                span: slot.span.load(Ordering::Relaxed),
+                parent: slot.parent.load(Ordering::Relaxed),
+                start_ns: slot.start_ns.load(Ordering::Relaxed),
+                dur_ns: slot.dur_ns.load(Ordering::Relaxed),
+            };
+            fence(Ordering::Acquire);
+            let s2 = slot.seq.load(Ordering::Relaxed);
+            if s1 == s2 {
+                out.push((s1, ev));
+            }
+        }
+        out.sort_by_key(|&(seq, _)| seq);
+        out.into_iter().map(|(_, ev)| ev).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: u64) -> SpanEvent {
+        SpanEvent {
+            name: 7,
+            tid: 0,
+            trace: 1,
+            span: i,
+            parent: 0,
+            start_ns: i * 100,
+            dur_ns: 10,
+        }
+    }
+
+    #[test]
+    fn push_and_snapshot_roundtrip() {
+        let r = SpanRing::new(3, "t".into(), 8);
+        for i in 1..=5 {
+            r.push(ev(i));
+        }
+        let evs = r.snapshot();
+        assert_eq!(evs.len(), 5);
+        assert_eq!(r.pushed(), 5);
+        assert_eq!(r.dropped(), 0);
+        // oldest first, tid stamped by the ring
+        assert_eq!(evs[0].span, 1);
+        assert_eq!(evs[4].span, 5);
+        assert!(evs.iter().all(|e| e.tid == 3));
+    }
+
+    #[test]
+    fn wraparound_keeps_newest_events() {
+        let r = SpanRing::new(0, "t".into(), 8);
+        for i in 1..=20 {
+            r.push(ev(i));
+        }
+        let evs = r.snapshot();
+        assert_eq!(evs.len(), 8);
+        assert_eq!(r.pushed(), 20);
+        assert_eq!(r.dropped(), 12);
+        let spans: Vec<u64> = evs.iter().map(|e| e.span).collect();
+        assert_eq!(spans, (13..=20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn concurrent_snapshot_never_tears() {
+        use std::sync::Arc;
+        let r = Arc::new(SpanRing::new(0, "t".into(), 16));
+        let writer = {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                for i in 1..=20_000u64 {
+                    // span and start encode the same index; a torn
+                    // read would mix two pushes and break the pairing
+                    r.push(SpanEvent {
+                        name: 1,
+                        tid: 0,
+                        trace: 0,
+                        span: i,
+                        parent: 0,
+                        start_ns: i,
+                        dur_ns: i * 2,
+                    });
+                }
+            })
+        };
+        for _ in 0..200 {
+            for e in r.snapshot() {
+                assert_eq!(e.span, e.start_ns, "torn slot read");
+                assert_eq!(e.dur_ns, e.start_ns * 2, "torn slot read");
+            }
+        }
+        writer.join().unwrap();
+        assert_eq!(r.pushed(), 20_000);
+    }
+}

@@ -1,0 +1,283 @@
+//! Chrome-trace-event export and per-phase summaries (DESIGN.md
+//! §17). [`chrome_trace_json`] drains every registered span ring into
+//! the JSON object format understood by Perfetto and
+//! `chrome://tracing`: one `"X"` (complete) event per span with
+//! microsecond `ts`/`dur`, span/parent/trace ids in `args` as hex
+//! strings, plus `"M"` metadata events naming each thread lane.
+//! [`summarize`] folds the same events into per-phase self/total
+//! tables for `capmin trace-summary`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+use super::ring::SpanEvent;
+use super::{all_rings, name_of};
+
+fn hex(v: u64) -> Json {
+    Json::Str(format!("{v:x}"))
+}
+
+/// Collect every committed span event from all thread rings, oldest
+/// first per ring.
+pub fn collect_events() -> Vec<SpanEvent> {
+    let mut out = Vec::new();
+    for ring in all_rings() {
+        out.extend(ring.snapshot());
+    }
+    out
+}
+
+/// Total events evicted by ring wraparound across all threads.
+pub fn dropped_events() -> u64 {
+    all_rings().iter().map(|r| r.dropped()).sum()
+}
+
+/// Build the Chrome trace object from the given events plus thread
+/// metadata from the ring registry.
+pub fn chrome_trace_from(events: &[SpanEvent]) -> Json {
+    let mut evs: Vec<Json> = Vec::with_capacity(events.len() + 8);
+    for ring in all_rings() {
+        evs.push(obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(ring.tid() as f64)),
+            ("name", Json::Str("thread_name".into())),
+            (
+                "args",
+                obj(vec![(
+                    "name",
+                    Json::Str(format!(
+                        "{} (t{})",
+                        ring.thread_name(),
+                        ring.tid()
+                    )),
+                )]),
+            ),
+        ]));
+    }
+    for e in events {
+        evs.push(obj(vec![
+            ("ph", Json::Str("X".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(e.tid as f64)),
+            ("name", Json::Str(name_of(e.name).to_string())),
+            ("ts", Json::Num(e.start_ns as f64 / 1000.0)),
+            ("dur", Json::Num(e.dur_ns as f64 / 1000.0)),
+            (
+                "args",
+                obj(vec![
+                    ("span", hex(e.span)),
+                    ("parent", hex(e.parent)),
+                    ("trace", hex(e.trace)),
+                ]),
+            ),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(evs)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("droppedEvents", Json::Num(dropped_events() as f64)),
+    ])
+}
+
+/// Snapshot all rings into a Chrome trace object.
+pub fn chrome_trace_json() -> Json {
+    chrome_trace_from(&collect_events())
+}
+
+/// Write the current trace to `path`, creating parent directories.
+pub fn write_trace(path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    std::fs::write(path, chrome_trace_json().to_string())
+        .with_context(|| format!("writing trace {}", path.display()))?;
+    Ok(())
+}
+
+/// `<run_dir>/trace/<unix-seconds>.trace.json`.
+pub fn default_trace_path(run_dir: &str) -> std::path::PathBuf {
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    Path::new(run_dir)
+        .join("trace")
+        .join(format!("{ts}.trace.json"))
+}
+
+/// A span event as re-read from an exported trace file (names
+/// resolved to strings, ids parsed back from hex).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEv {
+    pub name: String,
+    pub span: u64,
+    pub parent: u64,
+    pub trace: u64,
+    pub dur_ns: u64,
+}
+
+/// Parse the `"X"` events out of a Chrome trace object (as written by
+/// [`write_trace`]; metadata events are skipped).
+pub fn parse_chrome_trace(j: &Json) -> Result<Vec<TraceEv>> {
+    let evs = j
+        .get("traceEvents")
+        .ok_or_else(|| anyhow!("trace file has no traceEvents array"))?
+        .as_arr();
+    let id = |e: &Json, k: &str| -> u64 {
+        e.get("args")
+            .and_then(|a| a.get(k))
+            .map(|v| u64::from_str_radix(v.as_str(), 16).unwrap_or(0))
+            .unwrap_or(0)
+    };
+    let mut out = Vec::new();
+    for e in evs {
+        if e.get("ph").map(|p| p.as_str()) != Some("X") {
+            continue;
+        }
+        out.push(TraceEv {
+            name: e.req("name").as_str().to_string(),
+            span: id(e, "span"),
+            parent: id(e, "parent"),
+            trace: id(e, "trace"),
+            dur_ns: (e.req("dur").as_f64() * 1000.0) as u64,
+        });
+    }
+    Ok(out)
+}
+
+/// One row of the `trace-summary` table.
+#[derive(Clone, Debug)]
+pub struct PhaseRow {
+    pub name: String,
+    pub count: u64,
+    /// Wall time inside spans of this phase, children included.
+    pub total_ms: f64,
+    /// Wall time inside this phase excluding child spans present in
+    /// the trace.
+    pub self_ms: f64,
+}
+
+/// Aggregate events into per-phase self/total time, sorted by total
+/// descending. Self time subtracts only children that survived ring
+/// wraparound, so it is an upper bound under truncation.
+pub fn summarize(events: &[TraceEv]) -> Vec<PhaseRow> {
+    let mut child_ns: HashMap<u64, u64> = HashMap::new();
+    for e in events {
+        if e.parent != 0 {
+            *child_ns.entry(e.parent).or_insert(0) += e.dur_ns;
+        }
+    }
+    let mut rows: HashMap<&str, PhaseRow> = HashMap::new();
+    for e in events {
+        let own = e
+            .dur_ns
+            .saturating_sub(child_ns.get(&e.span).copied().unwrap_or(0));
+        let row = rows.entry(e.name.as_str()).or_insert_with(|| PhaseRow {
+            name: e.name.clone(),
+            count: 0,
+            total_ms: 0.0,
+            self_ms: 0.0,
+        });
+        row.count += 1;
+        row.total_ms += e.dur_ns as f64 / 1e6;
+        row.self_ms += own as f64 / 1e6;
+    }
+    let mut out: Vec<PhaseRow> = rows.into_values().collect();
+    out.sort_by(|a, b| {
+        b.total_ms
+            .partial_cmp(&a.total_ms)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    out
+}
+
+/// Render the summary table for the CLI.
+pub fn render_summary(rows: &[PhaseRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<28} {:>8} {:>12} {:>12}\n",
+        "phase", "count", "total_ms", "self_ms"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<28} {:>8} {:>12.3} {:>12.3}\n",
+            r.name, r.count, r.total_ms, r.self_ms
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, span: u64, parent: u64, dur_ns: u64) -> TraceEv {
+        TraceEv {
+            name: name.to_string(),
+            span,
+            parent,
+            trace: 1,
+            dur_ns,
+        }
+    }
+
+    #[test]
+    fn summary_self_time_excludes_children() {
+        let events = vec![
+            ev("solve", 1, 0, 10_000_000),
+            ev("mc", 2, 1, 6_000_000),
+            ev("mc", 3, 1, 2_000_000),
+        ];
+        let rows = summarize(&events);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].name, "solve");
+        assert!((rows[0].total_ms - 10.0).abs() < 1e-9);
+        assert!((rows[0].self_ms - 2.0).abs() < 1e-9);
+        assert_eq!(rows[1].count, 2);
+        assert!((rows[1].self_ms - 8.0).abs() < 1e-9);
+        let table = render_summary(&rows);
+        assert!(table.contains("solve"));
+        assert!(table.contains("total_ms"));
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_through_parse() {
+        let j = obj(vec![
+            (
+                "traceEvents",
+                Json::Arr(vec![
+                    obj(vec![
+                        ("ph", Json::Str("M".into())),
+                        ("name", Json::Str("thread_name".into())),
+                    ]),
+                    obj(vec![
+                        ("ph", Json::Str("X".into())),
+                        ("name", Json::Str("solve".into())),
+                        ("ts", Json::Num(1.5)),
+                        ("dur", Json::Num(2.0)),
+                        (
+                            "args",
+                            obj(vec![
+                                ("span", Json::Str("a".into())),
+                                ("parent", Json::Str("0".into())),
+                                ("trace", Json::Str("ff".into())),
+                            ]),
+                        ),
+                    ]),
+                ]),
+            ),
+        ]);
+        let evs = parse_chrome_trace(&j).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "solve");
+        assert_eq!(evs[0].span, 0xa);
+        assert_eq!(evs[0].trace, 0xff);
+        assert_eq!(evs[0].dur_ns, 2000);
+    }
+}

@@ -50,6 +50,9 @@ pub struct InferJob {
     pub reply: ReplySink,
     /// Enqueue time, for the end-to-end latency histogram.
     pub t0: Instant,
+    /// Request-scoped trace id (DESIGN.md §17); 0 in tests that don't
+    /// exercise tracing.
+    pub trace: u64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -76,7 +79,8 @@ pub fn run(
             Err(_) => return, // all senders gone and queue empty
         };
         let mut jobs = vec![first];
-        let deadline = Instant::now() + policy.max_wait;
+        let t_first = Instant::now();
+        let deadline = t_first + policy.max_wait;
         while jobs.len() < max_batch {
             let now = Instant::now();
             if now >= deadline {
@@ -88,6 +92,10 @@ pub fn run(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
+        // how long the first job waited for company before compute
+        metrics
+            .phase_batch_wait_us
+            .record(t_first.elapsed().as_micros() as u64);
         execute(&backend, &metrics, jobs);
     }
 }
@@ -99,6 +107,29 @@ pub fn execute(
     metrics: &Metrics,
     jobs: Vec<InferJob>,
 ) {
+    // the batch span is homed on the first job's trace (a micro-batch
+    // serves many traces but an event names one); forward and reply
+    // spans parent under it so every member trace links into it
+    let _batch_ctx = crate::obs::TraceCtx {
+        trace_id: jobs.first().map(|j| j.trace).unwrap_or(0),
+        span: 0,
+    }
+    .attach();
+    let _batch_span = crate::span!("serve.batch");
+    let batch_span = _batch_span.id();
+    for j in &jobs {
+        // queue wait (admission -> compute start), as the root span of
+        // the job's own trace and in the phase histogram
+        let _ctx = crate::obs::TraceCtx {
+            trace_id: j.trace,
+            span: 0,
+        }
+        .attach();
+        crate::span_since!("serve.queue", j.t0);
+        metrics
+            .phase_queue_us
+            .record(j.t0.elapsed().as_micros() as u64);
+    }
     let reqs: Vec<ForwardReq<'_>> = jobs
         .iter()
         .map(|j| ForwardReq {
@@ -108,14 +139,25 @@ pub fn execute(
             seed: j.seed,
             x: &j.x,
             batch: j.batch,
+            trace: j.trace,
         })
         .collect();
+    let t_fwd = Instant::now();
     let outs = backend.forward_many(&reqs);
+    metrics
+        .phase_forward_us
+        .record(t_fwd.elapsed().as_micros() as u64);
     metrics.record_batch(
         jobs.len(),
         jobs.iter().map(|j| j.batch).sum(),
     );
     for (job, out) in jobs.into_iter().zip(outs) {
+        let _ctx = crate::obs::TraceCtx {
+            trace_id: job.trace,
+            span: batch_span,
+        }
+        .attach();
+        let t_reply = Instant::now();
         let reply = match out {
             Ok(logits) => protocol::infer_response(
                 job.id,
@@ -125,16 +167,23 @@ pub fn execute(
             ),
             Err(e) => {
                 metrics.inc_error();
+                crate::log_warn!(
+                    "serve.batcher",
+                    "infer id {} failed: {e}",
+                    job.id
+                );
                 protocol::error_response(
                     Some(job.id),
                     &format!("infer failed: {e}"),
                 )
             }
         };
+        let reply = protocol::with_trace(reply, job.trace);
         metrics
             .infer_latency_us
             .record(job.t0.elapsed().as_micros() as u64);
         job.reply.send(&reply);
+        crate::span_since!("serve.reply", t_reply);
     }
 }
 
@@ -169,6 +218,7 @@ mod tests {
                 id: seed as f64,
                 reply: ReplySink::to_channel(tx),
                 t0: Instant::now(),
+                trace: 0,
             },
             rx,
         )

@@ -431,6 +431,19 @@ impl Client {
         self.request("stats", vec![])
     }
 
+    /// [`Client::stats`] with `prom: true`: the reply additionally
+    /// carries the registry's Prometheus text exposition under
+    /// `"prom"` (DESIGN.md §17). Returns `(reply, prom_text)`.
+    pub fn stats_prom(&mut self) -> Result<(Json, String)> {
+        let reply =
+            self.request("stats", vec![("prom", Json::Bool(true))])?;
+        let text = match reply.get("prom") {
+            Some(Json::Str(s)) => s.clone(),
+            other => bail!("reply missing prom text: {other:?}"),
+        };
+        Ok((reply, text))
+    }
+
     /// Ask the server to drain and exit; the reply confirms the drain
     /// started.
     pub fn shutdown(&mut self) -> Result<Json> {

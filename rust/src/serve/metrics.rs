@@ -1,15 +1,24 @@
 //! Serve-side observability: request counters, micro-batch sizes and
 //! latency histograms, plus the event-loop tier's gauges — compute
 //! queue depth, admission rejections, per-reactor connection counts
-//! and peer-fetch hit/miss counters (DESIGN.md §12/§16). All lock-free
-//! atomics so the request path never serializes on a metrics mutex.
-//! Served to clients through the `Stats` request; every field added by
-//! the reactor rewrite is additive, so pre-§16 clients keep parsing.
+//! and peer-fetch hit/miss counters (DESIGN.md §12/§16). Since the
+//! telemetry PR (§17) every series here is a named handle into an
+//! [`obs::registry::Registry`](crate::obs::registry::Registry) —
+//! still lock-free atomics on the request path, but now scrapeable
+//! through `stats --prom` and the additive `registry` section of the
+//! `Stats` reply alongside the cross-layer session/MC/kernel series.
+//! `Metrics::new()` builds on a fresh private registry (so unit tests
+//! and side-by-side servers in one process never share counts); the
+//! real server wires the process-global registry via
+//! [`Metrics::on_registry`] so one snapshot covers every layer.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::obs::registry::{Counter, Gauge, Registry};
 use crate::util::json::{obj, Json};
+
+pub use crate::obs::registry::Hist;
 
 /// Request kinds tracked by the counters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,115 +38,65 @@ const KINDS: [(&str, Kind); 5] = [
     ("peer_point", Kind::PeerPoint),
 ];
 
-/// Power-of-two bucketed histogram: bucket `i` counts values in
-/// `(2^(i-1), 2^i]` (bucket 0 counts zeros and ones). Quantiles
-/// report the chosen bucket's upper bound `2^i` — coarse by design,
-/// cheap to record, and honest about being an envelope (a p99 of
-/// `4096` means "under 4.1 ms", not "exactly 4.096 ms").
-pub struct Hist {
-    buckets: Vec<AtomicU64>,
-}
-
-impl Hist {
-    pub fn new(n_buckets: usize) -> Hist {
-        Hist {
-            buckets: (0..n_buckets).map(|_| AtomicU64::new(0)).collect(),
-        }
-    }
-
-    /// Ceil-log2 bucket index: the smallest `i` with `v <= 2^i`
-    /// (clamped into the last bucket).
-    fn bucket_of(&self, v: u64) -> usize {
-        let b = (64 - v.saturating_sub(1).leading_zeros()) as usize;
-        b.min(self.buckets.len() - 1)
-    }
-
-    pub fn record(&self, v: u64) {
-        self.buckets[self.bucket_of(v)].fetch_add(1, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
-    }
-
-    /// Upper bound of the bucket holding the q-quantile (0 when
-    /// empty).
-    pub fn quantile(&self, q: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
-        let mut seen = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << i;
-            }
-        }
-        1u64 << (self.buckets.len() - 1)
-    }
-
-    /// Raw bucket counts (trailing zero buckets trimmed).
-    pub fn to_json(&self) -> Json {
-        let mut counts: Vec<u64> = self
-            .buckets
-            .iter()
-            .map(|b| b.load(Ordering::Relaxed))
-            .collect();
-        while counts.len() > 1 && counts.last() == Some(&0) {
-            counts.pop();
-        }
-        Json::Arr(counts.into_iter().map(|c| Json::Num(c as f64)).collect())
-    }
-}
-
 /// All serve counters; one instance shared by every thread via `Arc`.
+/// Handles resolve once at construction — the hot path never touches
+/// the registry mutex.
 pub struct Metrics {
+    reg: Arc<Registry>,
     start: Instant,
-    requests: [AtomicU64; 5],
+    requests: [Arc<Counter>; 5],
     /// Requests answered with `ok: false` (parse errors included;
     /// admission sheds are counted separately below).
-    errors: AtomicU64,
+    errors: Arc<Counter>,
     /// Samples that went through the batcher.
-    infer_samples: AtomicU64,
+    infer_samples: Arc<Counter>,
     /// `forward_many` entries executed.
-    micro_batches: AtomicU64,
+    micro_batches: Arc<Counter>,
     /// Infer requests that shared their micro-batch with at least one
     /// other request — the coalescing the batcher exists for.
-    batched_requests: AtomicU64,
+    batched_requests: Arc<Counter>,
     /// Largest micro-batch observed, in requests.
-    max_batch: AtomicU64,
+    max_batch: Arc<Gauge>,
     /// Micro-batch size in requests.
-    pub batch_hist: Hist,
+    pub batch_hist: Arc<Hist>,
     /// Point latency, microseconds (queue + solve + reply).
-    pub point_latency_us: Hist,
+    pub point_latency_us: Arc<Hist>,
     /// Infer latency, microseconds (queue + batch wait + forward).
-    pub infer_latency_us: Hist,
+    pub infer_latency_us: Arc<Hist>,
+
+    // ---- server-side phase attribution (DESIGN.md §17) ----
+    /// Admission → worker pickup (reactor queue + channel).
+    pub phase_queue_us: Arc<Hist>,
+    /// Batcher receipt → micro-batch execution start.
+    pub phase_batch_wait_us: Arc<Hist>,
+    /// `forward_many` wall time per micro-batch.
+    pub phase_forward_us: Arc<Hist>,
+    /// Session solve wall time per point request.
+    pub phase_solve_us: Arc<Hist>,
 
     // ---- event-loop tier (DESIGN.md §16), all additive ----
     /// Compute requests admitted and not yet completed — THE
     /// backpressure gauge ([`Metrics::try_admit`] bounds it).
-    pending: AtomicU64,
+    pending: Arc<Gauge>,
     /// Sheds: global pending queue at capacity.
-    rejected_queue: AtomicU64,
+    rejected_queue: Arc<Counter>,
     /// Sheds: one connection exceeded its in-flight cap.
-    rejected_conn: AtomicU64,
+    rejected_conn: Arc<Counter>,
     /// Whole connections refused at accept (fd budget).
-    refused_conns: AtomicU64,
+    refused_conns: Arc<Counter>,
     /// Slow clients dropped for an over-cap write buffer.
-    shed_slow_clients: AtomicU64,
+    shed_slow_clients: Arc<Counter>,
     /// Connections closed for stalling mid-request-line (slowloris).
-    idle_timeouts: AtomicU64,
-    conns_accepted: AtomicU64,
-    conns_closed: AtomicU64,
+    idle_timeouts: Arc<Counter>,
+    conns_accepted: Arc<Counter>,
+    conns_closed: Arc<Counter>,
     /// Open connections per reactor (gauges; sized at startup).
-    reactor_conns: Vec<AtomicU64>,
+    reactor_conns: Vec<Arc<Gauge>>,
     /// Peer point fetches attempted / answered by the owner /
     /// fallen back to a local solve (DESIGN.md §16).
-    peer_fetches: AtomicU64,
-    peer_fetch_hits: AtomicU64,
-    peer_fetch_misses: AtomicU64,
+    peer_fetches: Arc<Counter>,
+    peer_fetch_hits: Arc<Counter>,
+    peer_fetch_misses: Arc<Counter>,
 }
 
 impl Metrics {
@@ -145,50 +104,77 @@ impl Metrics {
         Metrics::with_reactors(0)
     }
 
-    /// A metrics block with `reactors` per-reactor connection gauges.
+    /// A metrics block with `reactors` per-reactor connection gauges,
+    /// on a fresh private registry (test/process isolation).
     pub fn with_reactors(reactors: usize) -> Metrics {
+        Metrics::on_registry(Arc::new(Registry::new()), reactors)
+    }
+
+    /// A metrics block whose series live in `reg` — the server passes
+    /// `obs::registry::global()` here so serve counters and the
+    /// cross-layer session/MC/kernel series share one snapshot.
+    pub fn on_registry(reg: Arc<Registry>, reactors: usize) -> Metrics {
+        let c = |name: &str| reg.counter(name);
+        let g = |name: &str| reg.gauge(name);
+        let h = |name: &str, n: usize| reg.hist(name, n);
         Metrics {
             start: Instant::now(),
-            requests: Default::default(),
-            errors: AtomicU64::new(0),
-            infer_samples: AtomicU64::new(0),
-            micro_batches: AtomicU64::new(0),
-            batched_requests: AtomicU64::new(0),
-            max_batch: AtomicU64::new(0),
-            batch_hist: Hist::new(12),
-            point_latency_us: Hist::new(28),
-            infer_latency_us: Hist::new(28),
-            pending: AtomicU64::new(0),
-            rejected_queue: AtomicU64::new(0),
-            rejected_conn: AtomicU64::new(0),
-            refused_conns: AtomicU64::new(0),
-            shed_slow_clients: AtomicU64::new(0),
-            idle_timeouts: AtomicU64::new(0),
-            conns_accepted: AtomicU64::new(0),
-            conns_closed: AtomicU64::new(0),
+            requests: [
+                c("serve.requests.point"),
+                c("serve.requests.infer"),
+                c("serve.requests.stats"),
+                c("serve.requests.shutdown"),
+                c("serve.requests.peer_point"),
+            ],
+            errors: c("serve.errors"),
+            infer_samples: c("serve.infer.samples"),
+            micro_batches: c("serve.infer.micro_batches"),
+            batched_requests: c("serve.infer.batched_requests"),
+            max_batch: g("serve.infer.max_batch_requests"),
+            batch_hist: h("serve.infer.batch_size", 12),
+            point_latency_us: h("serve.latency.point_us", 28),
+            infer_latency_us: h("serve.latency.infer_us", 28),
+            phase_queue_us: h("serve.phase.queue_us", 28),
+            phase_batch_wait_us: h("serve.phase.batch_wait_us", 28),
+            phase_forward_us: h("serve.phase.forward_us", 28),
+            phase_solve_us: h("serve.phase.solve_us", 28),
+            pending: g("serve.pending"),
+            rejected_queue: c("serve.admission.rejected_queue"),
+            rejected_conn: c("serve.admission.rejected_conn"),
+            refused_conns: c("serve.admission.refused_conns"),
+            shed_slow_clients: c("serve.shed_slow_clients"),
+            idle_timeouts: c("serve.idle_timeouts"),
+            conns_accepted: c("serve.conns.accepted"),
+            conns_closed: c("serve.conns.closed"),
             reactor_conns: (0..reactors)
-                .map(|_| AtomicU64::new(0))
+                .map(|i| g(&format!("serve.reactor.{i}.conns")))
                 .collect(),
-            peer_fetches: AtomicU64::new(0),
-            peer_fetch_hits: AtomicU64::new(0),
-            peer_fetch_misses: AtomicU64::new(0),
+            peer_fetches: c("serve.peer.fetches"),
+            peer_fetch_hits: c("serve.peer.hits"),
+            peer_fetch_misses: c("serve.peer.misses"),
+            reg,
         }
     }
 
+    /// The registry backing this block (for `Stats`/prom exposition).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.reg
+    }
+
     pub fn inc(&self, kind: Kind) {
-        self.requests[kind as usize].fetch_add(1, Ordering::Relaxed);
+        self.requests[kind as usize].inc();
     }
 
     pub fn inc_error(&self) {
-        self.errors.fetch_add(1, Ordering::Relaxed);
+        self.errors.inc();
     }
 
     pub fn count(&self, kind: Kind) -> u64 {
-        self.requests[kind as usize].load(Ordering::Relaxed)
+        self.requests[kind as usize].get()
     }
 
     pub fn errors(&self) -> u64 {
-        self.errors.load(Ordering::Relaxed)
+        self.errors.get()
     }
 
     /// Admit one compute request against the bounded pending queue:
@@ -197,75 +183,60 @@ impl Metrics {
     /// sheds with a structured `overloaded` reply. Lock-free CAS so
     /// the bound is exact, never approximate.
     pub fn try_admit(&self, cap: usize) -> bool {
-        let mut cur = self.pending.load(Ordering::Relaxed);
-        loop {
-            if cur >= cap as u64 {
-                return false;
-            }
-            match self.pending.compare_exchange_weak(
-                cur,
-                cur + 1,
-                Ordering::Relaxed,
-                Ordering::Relaxed,
-            ) {
-                Ok(_) => return true,
-                Err(now) => cur = now,
-            }
-        }
+        self.pending.try_raise(cap as i64)
     }
 
     /// One admitted request completed (reply handed to its reactor).
     pub fn pending_dec(&self) {
-        self.pending.fetch_sub(1, Ordering::Relaxed);
+        self.pending.dec();
     }
 
     pub fn queue_depth(&self) -> u64 {
-        self.pending.load(Ordering::Relaxed)
+        self.pending.get().max(0) as u64
     }
 
     pub fn shed_queue(&self) {
-        self.rejected_queue.fetch_add(1, Ordering::Relaxed);
+        self.rejected_queue.inc();
     }
 
     pub fn shed_conn_cap(&self) {
-        self.rejected_conn.fetch_add(1, Ordering::Relaxed);
+        self.rejected_conn.inc();
     }
 
     pub fn refuse_conn(&self) {
-        self.refused_conns.fetch_add(1, Ordering::Relaxed);
+        self.refused_conns.inc();
     }
 
     pub fn shed_slow_client(&self) {
-        self.shed_slow_clients.fetch_add(1, Ordering::Relaxed);
+        self.shed_slow_clients.inc();
     }
 
     pub fn idle_timeout(&self) {
-        self.idle_timeouts.fetch_add(1, Ordering::Relaxed);
+        self.idle_timeouts.inc();
     }
 
     pub fn rejected_total(&self) -> u64 {
-        self.rejected_queue.load(Ordering::Relaxed)
-            + self.rejected_conn.load(Ordering::Relaxed)
+        self.rejected_queue.get() + self.rejected_conn.get()
     }
 
     pub fn conn_opened(&self, reactor: usize) {
-        self.conns_accepted.fetch_add(1, Ordering::Relaxed);
+        self.conns_accepted.inc();
         if let Some(g) = self.reactor_conns.get(reactor) {
-            g.fetch_add(1, Ordering::Relaxed);
+            g.inc();
         }
     }
 
     pub fn conn_closed(&self, reactor: usize) {
-        self.conns_closed.fetch_add(1, Ordering::Relaxed);
+        self.conns_closed.inc();
         if let Some(g) = self.reactor_conns.get(reactor) {
-            g.fetch_sub(1, Ordering::Relaxed);
+            g.dec();
         }
     }
 
     pub fn open_conns(&self) -> u64 {
         self.reactor_conns
             .iter()
-            .map(|g| g.load(Ordering::Relaxed))
+            .map(|g| g.get().max(0) as u64)
             .sum()
     }
 
@@ -273,42 +244,42 @@ impl Metrics {
     /// owning shard answered, miss when the requester fell back to a
     /// local solve.
     pub fn peer_fetch(&self, hit: bool) {
-        self.peer_fetches.fetch_add(1, Ordering::Relaxed);
+        self.peer_fetches.inc();
         if hit {
-            self.peer_fetch_hits.fetch_add(1, Ordering::Relaxed);
+            self.peer_fetch_hits.inc();
         } else {
-            self.peer_fetch_misses.fetch_add(1, Ordering::Relaxed);
+            self.peer_fetch_misses.inc();
         }
     }
 
     pub fn peer_fetch_hits(&self) -> u64 {
-        self.peer_fetch_hits.load(Ordering::Relaxed)
+        self.peer_fetch_hits.get()
     }
 
     /// Record one executed micro-batch of `reqs` requests covering
     /// `samples` samples.
     pub fn record_batch(&self, reqs: usize, samples: usize) {
-        self.micro_batches.fetch_add(1, Ordering::Relaxed);
-        self.infer_samples
-            .fetch_add(samples as u64, Ordering::Relaxed);
+        self.micro_batches.inc();
+        self.infer_samples.add(samples as u64);
         self.batch_hist.record(reqs as u64);
         if reqs > 1 {
-            self.batched_requests
-                .fetch_add(reqs as u64, Ordering::Relaxed);
+            self.batched_requests.add(reqs as u64);
         }
-        self.max_batch.fetch_max(reqs as u64, Ordering::Relaxed);
+        self.max_batch.set_max(reqs as i64);
     }
 
     pub fn max_batch(&self) -> u64 {
-        self.max_batch.load(Ordering::Relaxed)
+        self.max_batch.get().max(0) as u64
     }
 
     pub fn batched_requests(&self) -> u64 {
-        self.batched_requests.load(Ordering::Relaxed)
+        self.batched_requests.get()
     }
 
     /// The `Stats` payload (merged with the server's static info by
-    /// the reactor).
+    /// the reactor). Every pre-§17 field keeps its exact shape; the
+    /// `registry` section is additive and mirrors the full backing
+    /// registry, cross-layer series included.
     pub fn to_json(&self) -> Json {
         let lat = |h: &Hist| {
             obj(vec![
@@ -317,7 +288,7 @@ impl Metrics {
                 ("p99_us_le", Json::Num(h.quantile(0.99) as f64)),
             ])
         };
-        let n = |v: &AtomicU64| Json::Num(v.load(Ordering::Relaxed) as f64);
+        let n = |c: &Counter| Json::Num(c.get() as f64);
         obj(vec![
             (
                 "uptime_s",
@@ -360,7 +331,10 @@ impl Metrics {
             (
                 "serving",
                 obj(vec![
-                    ("queue_depth", n(&self.pending)),
+                    (
+                        "queue_depth",
+                        Json::Num(self.queue_depth() as f64),
+                    ),
                     (
                         "admission",
                         obj(vec![
@@ -384,10 +358,9 @@ impl Metrics {
                                     self.reactor_conns
                                         .iter()
                                         .map(|g| {
-                                            Json::Num(g.load(
-                                                Ordering::Relaxed,
+                                            Json::Num(
+                                                g.get().max(0) as f64,
                                             )
-                                                as f64)
                                         })
                                         .collect(),
                                 ),
@@ -409,6 +382,8 @@ impl Metrics {
                     ),
                 ]),
             ),
+            // cross-layer registry snapshot (additive; DESIGN.md §17)
+            ("registry", self.reg.snapshot_json()),
         ])
     }
 }
@@ -422,25 +397,6 @@ impl Default for Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn hist_buckets_and_quantiles_envelope() {
-        let h = Hist::new(12);
-        for v in [1u64, 1, 1, 2, 3, 900] {
-            h.record(v);
-        }
-        assert_eq!(h.count(), 6);
-        // p50 of {1,1,1,2,3,900}: 3rd value = 1 -> bucket upper 1
-        assert_eq!(h.quantile(0.5), 1);
-        // the outlier lands in [512,1024) -> upper bound 1024
-        assert_eq!(h.quantile(1.0), 1024);
-        assert_eq!(h.quantile(0.99), 1024);
-        // zero treated as the smallest bucket, values beyond the last
-        // bucket clamp into it
-        h.record(0);
-        h.record(u64::MAX);
-        assert_eq!(h.count(), 8);
-    }
 
     #[test]
     fn counters_and_batches_add_up() {
@@ -507,5 +463,30 @@ mod tests {
         assert_eq!(serving.req("conns").req("accepted").as_f64(), 3.0);
         assert_eq!(serving.req("peer").req("fetches").as_f64(), 2.0);
         assert_eq!(serving.req("peer").req("misses").as_f64(), 1.0);
+    }
+
+    #[test]
+    fn fresh_instances_do_not_share_series() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.inc(Kind::Point);
+        assert_eq!(b.count(Kind::Point), 0);
+    }
+
+    #[test]
+    fn registry_section_mirrors_serve_series() {
+        let m = Metrics::new();
+        m.inc(Kind::Infer);
+        m.phase_queue_us.record(40);
+        let j = m.to_json();
+        let reg = j.req("registry");
+        assert_eq!(reg.req("serve.requests.infer").as_f64(), 1.0);
+        assert_eq!(
+            reg.req("serve.phase.queue_us").req("count").as_f64(),
+            1.0
+        );
+        let prom = m.registry().prom_text();
+        assert!(prom.contains("capmin_serve_requests_infer 1"));
+        assert!(prom.contains("capmin_serve_phase_queue_us_count 1"));
     }
 }

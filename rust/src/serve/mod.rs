@@ -28,11 +28,23 @@
 //!   over a ring of serving processes;
 //! * [`metrics`] — request counters, batch-size and latency
 //!   histograms, queue-depth/admission/connection gauges and
-//!   peer-fetch counters, served through `Stats`;
+//!   peer-fetch counters — all registered on the process-global
+//!   [`crate::obs::registry`] (DESIGN.md §17), so a `Stats` reply
+//!   (or `stats --prom`) also exposes the session/MC/kernel series
+//!   bumped by the same requests, plus the per-phase
+//!   queue/batch-wait/forward/solve histograms;
 //! * [`client`] — the blocking line-protocol client the loopback
 //!   tests, the loadgen bench and `examples/serve_client.rs` share,
 //!   with jittered-backoff retry ([`client::Backoff`]) for connects
 //!   and sheds.
+//!
+//! Telemetry (DESIGN.md §17): every admitted compute request gets a
+//! trace id at admission, carried reactor → session → batcher →
+//! backend and echoed on the reply as a hex `"trace"` field; under
+//! `--trace` the spans it links (`serve.queue`, `serve.batch`,
+//! `backend.forward`, `serve.reply`, …) land in the Chrome-trace
+//! export. Raw prints are gone — the serve tier logs through the
+//! leveled [`crate::log_info!`]-family macros gated by `--log-level`.
 //!
 //! Thread model (all spawned once, at startup — no thread or pool
 //! construction on the request path, and no thread ever blocked on a

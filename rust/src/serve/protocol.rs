@@ -62,7 +62,13 @@ pub enum Request {
     /// ring can produce an extra solve but never a forwarding loop.
     PeerPoint(PointReq),
     Infer(InferReq),
-    Stats { id: f64 },
+    Stats {
+        id: f64,
+        /// Also include the Prometheus text exposition of the global
+        /// metrics registry in the reply (`"prom"` field,
+        /// DESIGN.md §17).
+        prom: bool,
+    },
     Shutdown { id: f64 },
 }
 
@@ -110,7 +116,18 @@ impl Request {
             _ => return Err(fail("missing `type`".into())),
         };
         match ty.as_str() {
-            "stats" => Ok(Request::Stats { id }),
+            "stats" => {
+                let prom = match j.get("prom") {
+                    Some(Json::Bool(b)) => *b,
+                    None => false,
+                    Some(other) => {
+                        return Err(fail(format!(
+                            "bad `prom`: expected a bool, got {other:?}"
+                        )))
+                    }
+                };
+                Ok(Request::Stats { id, prom })
+            }
             "shutdown" => Ok(Request::Shutdown { id }),
             "point" | "peer_point" | "infer" => {
                 let dataset = match j.get("dataset") {
@@ -358,11 +375,35 @@ pub fn infer_response(
 
 /// Reply to a `Stats` request; `stats` comes from
 /// [`super::metrics::Metrics::to_json`] merged with the server's
-/// static info.
-pub fn stats_response(id: f64, stats: Json) -> Json {
+/// static info. `prom` (from a `"prom": true` request) carries the
+/// registry's Prometheus text exposition verbatim.
+pub fn stats_response(id: f64, stats: Json, prom: Option<String>)
+    -> Json {
     let mut fields = reply_head(id, "stats");
     fields.push(("stats", stats));
+    if let Some(text) = prom {
+        fields.push(("prom", Json::Str(text)));
+    }
     obj(fields)
+}
+
+/// Tag a reply with the request's trace id (lowercase hex,
+/// DESIGN.md §17) — an additive field old clients ignore. Trace id 0
+/// (untraced internal paths) leaves the reply untouched.
+pub fn with_trace(reply: Json, trace: u64) -> Json {
+    if trace == 0 {
+        return reply;
+    }
+    match reply {
+        Json::Obj(mut m) => {
+            m.insert(
+                "trace".to_string(),
+                Json::Str(format!("{trace:x}")),
+            );
+            Json::Obj(m)
+        }
+        other => other,
+    }
 }
 
 /// Reply to a `Shutdown` request, sent before the drain begins.
@@ -540,6 +581,42 @@ mod tests {
         )
         .unwrap_err();
         assert!(e.1.contains("1..=32"), "{}", e.1);
+    }
+
+    #[test]
+    fn stats_prom_flag_parses_and_defaults_off() {
+        match Request::parse(r#"{"v":1,"id":1,"type":"stats"}"#).unwrap()
+        {
+            Request::Stats { prom, .. } => assert!(!prom),
+            other => panic!("{other:?}"),
+        }
+        match Request::parse(
+            r#"{"v":1,"id":1,"type":"stats","prom":true}"#,
+        )
+        .unwrap()
+        {
+            Request::Stats { prom, .. } => assert!(prom),
+            other => panic!("{other:?}"),
+        }
+        let e = Request::parse(
+            r#"{"v":1,"id":1,"type":"stats","prom":"yes"}"#,
+        )
+        .unwrap_err();
+        assert!(e.1.contains("prom"), "{}", e.1);
+    }
+
+    #[test]
+    fn with_trace_tags_replies_additively() {
+        let j = with_trace(shutdown_response(1.0), 0xabc123);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.req("trace").as_str(), "abc123");
+        assert!(back.req("ok").as_bool());
+        // trace 0 (untraced) leaves the reply untouched
+        let j = with_trace(shutdown_response(1.0), 0);
+        assert!(Json::parse(&j.to_string())
+            .unwrap()
+            .get("trace")
+            .is_none());
     }
 
     #[test]

@@ -71,11 +71,17 @@ pub enum Work {
         peer: bool,
         sink: ReplySink,
         t0: Instant,
+        /// Request-scoped trace id allocated at admission
+        /// (DESIGN.md §17): carried through batcher → session →
+        /// solver → kernels and echoed on the reply.
+        trace: u64,
     },
     Infer {
         req: InferReq,
         sink: ReplySink,
         t0: Instant,
+        /// See [`Work::Point::trace`].
+        trace: u64,
     },
 }
 
@@ -381,8 +387,9 @@ impl Reactor {
         let mut drain_since: Option<Instant> = None;
         loop {
             if let Err(e) = self.poller.wait(&mut events, Some(tick)) {
-                eprintln!(
-                    "capmin serve: reactor {} poller failed: {e}",
+                crate::log_error!(
+                    "serve.reactor",
+                    "reactor {} poller failed: {e}",
                     self.cfg.index
                 );
                 return;
@@ -576,10 +583,12 @@ impl Reactor {
                 let reply = protocol::error_response(id, &msg);
                 self.deliver(slot, seq, &reply);
             }
-            Ok(Request::Stats { id }) => {
+            Ok(Request::Stats { id, prom }) => {
                 m.inc(Kind::Stats);
                 let stats = merge_stats(&self.cfg.info, m.to_json());
-                let reply = protocol::stats_response(id, stats);
+                let text =
+                    prom.then(|| m.registry().prom_text());
+                let reply = protocol::stats_response(id, stats, text);
                 self.deliver(slot, seq, &reply);
             }
             Ok(Request::Shutdown { id }) => {
@@ -645,20 +654,30 @@ impl Reactor {
             m,
         );
         let t0 = Instant::now();
+        // allocated unconditionally (cheap: one atomic) so the reply's
+        // trace echo works even when tracing is off
+        let trace = crate::obs::new_trace_id();
         let work = match req {
             Request::Point(p) => Work::Point {
                 req: p,
                 peer: false,
                 sink,
                 t0,
+                trace,
             },
             Request::PeerPoint(p) => Work::Point {
                 req: p,
                 peer: true,
                 sink,
                 t0,
+                trace,
             },
-            Request::Infer(q) => Work::Infer { req: q, sink, t0 },
+            Request::Infer(q) => Work::Infer {
+                req: q,
+                sink,
+                t0,
+                trace,
+            },
             _ => unreachable!(),
         };
         if let Some(conn) = self.conns[slot].as_mut() {

@@ -225,7 +225,8 @@ pub fn spawn_on(
 pub fn run(cfg: ExperimentConfig, opts: ServeOptions) -> Result<()> {
     let listener = TcpListener::bind(opts.addr)
         .with_context(|| format!("binding {}", opts.addr))?;
-    println!(
+    crate::log_info!(
+        "serve",
         "capmin serve: listening on {}",
         listener.local_addr()?
     );
@@ -251,7 +252,8 @@ pub fn run_sharded(
         .iter()
         .map(|l| l.local_addr())
         .collect::<std::io::Result<_>>()?;
-    println!(
+    crate::log_info!(
+        "serve",
         "capmin serve: listening on {} ({} shard ring: {})",
         addrs[0],
         shards,
@@ -322,7 +324,13 @@ fn run_bound(
     opts: ServeOptions,
 ) -> Result<()> {
     let n_reactors = opts.reactors.max(1);
-    let metrics = Arc::new(Metrics::with_reactors(n_reactors));
+    // serve metrics live on the process-global registry (DESIGN.md
+    // §17) so one Stats/`--prom` exposition carries the serve series
+    // next to the session/MC/kernel counters bumped by the same work
+    let metrics = Arc::new(Metrics::on_registry(
+        crate::obs::registry::global(),
+        n_reactors,
+    ));
     let shutdown = Arc::new(AtomicBool::new(false));
 
     // both kernel crews are spawned here, once, and only referenced
@@ -641,8 +649,9 @@ fn session_thread(
     for ds in warm {
         // failures surface per request; warmup is best-effort priming
         if let Err(e) = session.fmac(ds) {
-            eprintln!(
-                "[serve] warmup {} failed: {e}",
+            crate::log_warn!(
+                "serve.warmup",
+                "warmup {} failed: {e}",
                 ds.spec().name
             );
         }
@@ -677,14 +686,41 @@ impl SessionSrv {
                 peer,
                 sink,
                 t0,
+                trace,
             } => {
-                let reply = self.solve_point(&req, peer);
+                // the request's own trace: queue wait is its root span
+                let _ctx = crate::obs::TraceCtx {
+                    trace_id: trace,
+                    span: 0,
+                }
+                .attach();
+                let queue_us = t0.elapsed().as_micros() as u64;
+                crate::span_since!("serve.queue", t0);
+                self.metrics.phase_queue_us.record(queue_us);
+                self.session
+                    .note_queue_ms(queue_us as f64 / 1_000.0);
+                let t_solve = Instant::now();
+                let reply = {
+                    let _span = crate::span!("serve.point");
+                    self.solve_point(&req, peer)
+                };
+                self.metrics
+                    .phase_solve_us
+                    .record(t_solve.elapsed().as_micros() as u64);
+                let reply = protocol::with_trace(reply, trace);
                 self.metrics
                     .point_latency_us
                     .record(t0.elapsed().as_micros() as u64);
+                let t_reply = Instant::now();
                 sink.send(&reply);
+                crate::span_since!("serve.reply", t_reply);
             }
-            Work::Infer { req, sink, t0 } => {
+            Work::Infer {
+                req,
+                sink,
+                t0,
+                trace,
+            } => {
                 let prep = self.prepare(
                     req.dataset,
                     req.k,
@@ -717,6 +753,7 @@ impl SessionSrv {
                     id: req.id,
                     reply: sink,
                     t0,
+                    trace,
                 };
                 if let Err(lost) = self.infer_tx.send(job) {
                     self.metrics.inc_error();
@@ -766,18 +803,20 @@ impl SessionSrv {
                         // answered, but for a different key: the peer
                         // runs different knobs — fall back local
                         self.metrics.peer_fetch(false);
-                        eprintln!(
-                            "[serve] shard {} returned key {:?}, \
-                             wanted {key}; solving locally",
+                        crate::log_warn!(
+                            "serve.peer",
+                            "shard {} returned key {:?}, wanted \
+                             {key}; solving locally",
                             owner,
                             reply.get("key").map(|k| k.to_string()),
                         );
                     }
                     Err(e) => {
                         self.metrics.peer_fetch(false);
-                        eprintln!(
-                            "[serve] peer fetch from shard {owner} \
-                             failed ({e}); solving locally"
+                        crate::log_warn!(
+                            "serve.peer",
+                            "peer fetch from shard {owner} failed \
+                             ({e}); solving locally"
                         );
                     }
                 }

@@ -87,6 +87,7 @@ impl PointCache {
             fs::write(&tmp, point.to_json().to_string())?;
             fs::rename(tmp, self.path(key))?;
         }
+        crate::obs::registry::inc("session.cache.stores");
         self.mem
             .lock()
             .unwrap()

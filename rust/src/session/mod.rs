@@ -40,8 +40,11 @@ pub mod spec;
 use std::cell::{Cell, OnceCell};
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
+
+use crate::obs;
 
 use crate::analog::params::AnalogParams;
 use crate::backend::autotune;
@@ -120,8 +123,11 @@ pub struct DesignSession {
     points: PointCache,
     /// Hardware solves keyed without the eval settings: querying the
     /// same (dataset, k, sigma, phi) with and without accuracy
-    /// evaluation shares one Monte-Carlo solve.
-    hw_solves: Mutex<HashMap<String, HwSolve>>,
+    /// evaluation shares one Monte-Carlo solve. The paired `f64` is
+    /// the solve's wall time in ms — provenance for
+    /// [`PointMeta::solve_ms`]; memoized replays report the original
+    /// solve's cost.
+    hw_solves: Mutex<HashMap<String, (HwSolve, f64)>>,
     fmacs: Mutex<HashMap<Dataset, (Vec<Fmac>, Fmac)>>,
     /// Folded hardware tensors per dataset, in host (backend-agnostic)
     /// form.
@@ -138,6 +144,11 @@ pub struct DesignSession {
     /// way.
     pool: ScopedPool,
     stats: Cell<SessionStats>,
+    /// Queue wait (ms) the serving tier attributes to the *next*
+    /// freshly built point (DESIGN.md §17). `Cell` is fine: the
+    /// session is a single-threaded facade (`stats` already makes it
+    /// `!Sync`) and the serve session thread owns it exclusively.
+    queue_ms: Cell<f64>,
 }
 
 pub struct DesignSessionBuilder {
@@ -212,6 +223,7 @@ impl DesignSessionBuilder {
             untrained: Mutex::new(HashSet::new()),
             pool,
             stats: Cell::new(SessionStats::default()),
+            queue_ms: Cell::new(0.0),
         })
     }
 }
@@ -495,18 +507,23 @@ impl DesignSession {
         if let Some(p) = self.lookup(&key, spec) {
             return Ok(p);
         }
-        let hw = self.hw_solve(spec)?;
-        self.finish(spec, &key, hw)
+        let (hw, solve_ms) = self.hw_solve(spec)?;
+        self.finish(spec, &key, hw, solve_ms)
     }
 
     /// The shared hardware solve behind a spec: served from the
     /// in-memory solve cache when only the eval settings differ.
-    fn hw_solve(&self, spec: &OperatingPointSpec) -> Result<HwSolve> {
+    /// Returns the solve and its wall time in ms (the original solve's
+    /// time on a memoized replay).
+    fn hw_solve(&self, spec: &OperatingPointSpec)
+        -> Result<(HwSolve, f64)> {
         let hkey = spec.hw_cache_key(&self.cfg);
-        if let Some(hw) = self.hw_solves.lock().unwrap().get(&hkey) {
-            return Ok(hw.clone());
+        if let Some(hit) = self.hw_solves.lock().unwrap().get(&hkey) {
+            return Ok(hit.clone());
         }
         let (per_fmac, _) = self.fmac(spec.dataset)?;
+        let _span = crate::span!("session.solve");
+        let t0 = Instant::now();
         let hw = solver::solve_on(
             &self.pool,
             self.params(),
@@ -517,9 +534,14 @@ impl DesignSession {
             spec.sigma,
             spec.phi,
         );
+        let solve_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.bump(|s| s.solves += 1);
-        self.hw_solves.lock().unwrap().insert(hkey, hw.clone());
-        Ok(hw)
+        obs::registry::inc("session.solves");
+        self.hw_solves
+            .lock()
+            .unwrap()
+            .insert(hkey, (hw.clone(), solve_ms));
+        Ok((hw, solve_ms))
     }
 
     /// Answer a batch of independent queries, solving cache misses in
@@ -563,6 +585,7 @@ impl DesignSession {
         let dups = dup_of.iter().filter(|d| d.is_some()).count() as u64;
         if dups > 0 {
             self.bump(|s| s.deduped += dups);
+            obs::registry::add("session.deduped", dups);
         }
 
         // one solve job per distinct *hardware* key among the misses
@@ -618,8 +641,10 @@ impl DesignSession {
             // persistent — a persistent crew must not re-enter itself
             let pool = &self.pool;
             let per_job = (pool.threads() / jobs.len()).max(1);
-            let solved: Vec<(String, HwSolve)> =
+            let solved: Vec<(String, HwSolve, f64)> =
                 pool.map(jobs.len(), |i| {
+                    let _span = crate::span!("session.solve");
+                    let t0 = Instant::now();
                     let j = &jobs[i];
                     let hw = solver::solve(
                         j.base,
@@ -631,12 +656,14 @@ impl DesignSession {
                         j.sigma,
                         j.phi,
                     );
-                    (j.hkey.clone(), hw)
+                    let ms = t0.elapsed().as_secs_f64() * 1e3;
+                    (j.hkey.clone(), hw, ms)
                 });
             self.bump(|s| s.solves += jobs.len() as u64);
+            obs::registry::add("session.solves", jobs.len() as u64);
             let mut hw_solves = self.hw_solves.lock().unwrap();
-            for (hkey, hw) in solved {
-                hw_solves.insert(hkey, hw);
+            for (hkey, hw, ms) in solved {
+                hw_solves.insert(hkey, (hw, ms));
             }
         }
 
@@ -651,14 +678,14 @@ impl DesignSession {
                 out[i] = Some(p);
                 continue;
             }
-            let hw = self
+            let (hw, solve_ms) = self
                 .hw_solves
                 .lock()
                 .unwrap()
                 .get(&hkeys[i])
                 .cloned()
                 .expect("a solve was queued for every miss");
-            out[i] = Some(self.finish(spec, &keys[i], hw)?);
+            out[i] = Some(self.finish(spec, &keys[i], hw, solve_ms)?);
         }
         for i in 0..specs.len() {
             if let Some(rep) = dup_of[i] {
@@ -673,13 +700,26 @@ impl DesignSession {
         -> Option<Arc<OperatingPoint>> {
         if let Some(p) = self.points.get_memory(key) {
             self.bump(|s| s.mem_hits += 1);
+            obs::registry::inc("session.cache.mem_hits");
+            self.queue_ms.set(0.0);
             return Some(p);
         }
         if let Some(p) = self.points.get_disk(key, spec) {
             self.bump(|s| s.disk_hits += 1);
+            obs::registry::inc("session.cache.disk_hits");
+            self.queue_ms.set(0.0);
             return Some(p);
         }
+        obs::registry::inc("session.cache.misses");
         None
+    }
+
+    /// Attribute the *next* freshly built point to a serve request that
+    /// waited `ms` between admission and solve start. Consumed (reset
+    /// to 0) by the next [`DesignSession::query`] that actually builds
+    /// a point; cache hits ignore and clear it.
+    pub fn note_queue_ms(&self, ms: f64) {
+        self.queue_ms.set(ms);
     }
 
     /// Accuracy-evaluate (if requested), package, and cache one solved
@@ -689,14 +729,17 @@ impl DesignSession {
         spec: &OperatingPointSpec,
         key: &str,
         hw: HwSolve,
+        solve_ms: f64,
     ) -> Result<Arc<OperatingPoint>> {
         let accuracy = match spec.eval {
             None => None,
             Some(e) => {
+                let _span = crate::span!("session.eval");
                 let ds = spec.dataset.spec();
                 let folded = self.folded(spec.dataset)?;
                 let be = self.backend()?;
                 self.bump(|s| s.evals += 1);
+                obs::registry::inc("session.evals");
                 Some(be.accuracy_multi_seed(
                     ds.model,
                     &folded,
@@ -715,6 +758,8 @@ impl DesignSession {
             tile: self.tile_name(),
             mc_mode: self.cfg.mc_mode.clone(),
             mc_draws: hw.mc_draws,
+            solve_ms,
+            queue_ms: self.queue_ms.replace(0.0),
         };
         let point = Arc::new(OperatingPoint::from_solve(
             *spec, hw, accuracy, meta,

@@ -50,6 +50,17 @@ pub struct PointMeta {
     /// accounting). Data-dependent under fast mode's early stopping —
     /// which is exactly why it is provenance and never key material.
     pub mc_draws: u64,
+    /// Wall-clock milliseconds the hardware solve took when this
+    /// point was first produced (0 for cache replays and for points
+    /// written before timing provenance; DESIGN.md §17). Machine- and
+    /// load-dependent, so like every meta field it is never part of a
+    /// cache key.
+    pub solve_ms: f64,
+    /// Milliseconds the originating request waited between serve-tier
+    /// admission and solve start, when the point was produced by
+    /// `capmin serve` (0 for CLI solves, cache replays and legacy
+    /// points).
+    pub queue_ms: f64,
 }
 
 /// One hardware operating point: the answer to an
@@ -206,6 +217,8 @@ impl OperatingPoint {
                     ("tile", Json::Str(self.meta.tile.clone())),
                     ("mc_mode", Json::Str(self.meta.mc_mode.clone())),
                     ("mc_draws", Json::Num(self.meta.mc_draws as f64)),
+                    ("solve_ms", Json::Num(self.meta.solve_ms)),
+                    ("queue_ms", Json::Num(self.meta.queue_ms)),
                 ]),
             ),
             // informational for external readers: `from_json`
@@ -335,6 +348,15 @@ impl OperatingPoint {
                     Some(Json::Num(n)) => *n as u64,
                     _ => 0,
                 },
+                // absent in pre-§17 points: no timing provenance
+                solve_ms: match m.get("solve_ms") {
+                    Some(Json::Num(n)) => *n,
+                    _ => 0.0,
+                },
+                queue_ms: match m.get("queue_ms") {
+                    Some(Json::Num(n)) => *n,
+                    _ => 0.0,
+                },
             },
             None => PointMeta::default(),
         };
@@ -394,6 +416,8 @@ mod tests {
             tile: "4x8k64".into(),
             mc_mode: "paper".into(),
             mc_draws: draws,
+            solve_ms: 12.5,
+            queue_ms: 0.25,
         };
         let point =
             OperatingPoint::from_solve(spec, hw, Some(0.913), meta);
@@ -409,6 +433,8 @@ mod tests {
         assert_eq!(back.meta.tile, "4x8k64");
         assert_eq!(back.meta.mc_mode, "paper");
         assert_eq!(back.meta.mc_draws, draws);
+        assert_eq!(back.meta.solve_ms, 12.5);
+        assert_eq!(back.meta.queue_ms, 0.25);
     }
 
     #[test]
@@ -464,18 +490,64 @@ mod tests {
             PointMeta::default(),
         );
         let text = point.to_json().to_string();
-        // strip the meta field to emulate the old format
-        let legacy = text.replace(
-            ",\"meta\":{\"backend\":\"\",\"kernel\":\"\",\"threads\":0,\
-             \"tile\":\"\",\"mc_mode\":\"\",\"mc_draws\":0}",
-            "",
-        );
-        assert_ne!(legacy, text, "meta field expected in JSON form");
-        let back = OperatingPoint::from_json(
-            &Json::parse(&legacy).map_err(anyhow::Error::msg).unwrap(),
-        )
-        .unwrap();
+        // drop the meta field structurally (key order in the text form
+        // is the writer's business, not this test's) to emulate the
+        // old format
+        let mut legacy = Json::parse(&text)
+            .map_err(anyhow::Error::msg)
+            .unwrap();
+        match &mut legacy {
+            Json::Obj(m) => {
+                assert!(
+                    m.remove("meta").is_some(),
+                    "meta field expected in JSON form"
+                );
+            }
+            other => panic!("point JSON not an object: {other:?}"),
+        }
+        let back = OperatingPoint::from_json(&legacy).unwrap();
         assert_eq!(back.meta, PointMeta::default());
+    }
+
+    #[test]
+    fn pre_timing_meta_parses_with_zero_provenance() {
+        // a pre-§17 meta object has no solve_ms/queue_ms — both must
+        // default to 0 rather than fail the parse
+        let p = AnalogParams::paper_calibrated();
+        let fmacs = vec![Fmac::gaussian(16, 2.0, 1e8)];
+        let spec = OperatingPointSpec::new(Dataset::KmnistSyn, 10, 0.0, 0);
+        let hw = solve(
+            p,
+            1,
+            McSettings::paper(50),
+            1,
+            &fmacs,
+            spec.k,
+            spec.sigma,
+            spec.phi,
+        );
+        let meta = PointMeta {
+            solve_ms: 9.5,
+            queue_ms: 1.5,
+            ..PointMeta::default()
+        };
+        let point = OperatingPoint::from_solve(spec, hw, None, meta);
+        let mut legacy = Json::parse(&point.to_json().to_string())
+            .map_err(anyhow::Error::msg)
+            .unwrap();
+        match &mut legacy {
+            Json::Obj(m) => match m.get_mut("meta") {
+                Some(Json::Obj(meta)) => {
+                    assert!(meta.remove("solve_ms").is_some());
+                    assert!(meta.remove("queue_ms").is_some());
+                }
+                other => panic!("bad meta: {other:?}"),
+            },
+            other => panic!("point JSON not an object: {other:?}"),
+        }
+        let back = OperatingPoint::from_json(&legacy).unwrap();
+        assert_eq!(back.meta.solve_ms, 0.0);
+        assert_eq!(back.meta.queue_ms, 0.0);
     }
 
     #[test]

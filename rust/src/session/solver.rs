@@ -109,6 +109,8 @@ pub fn solve_on(
     phi: usize,
 ) -> HwSolve {
     let p = base.with_sigma(sigma);
+    // captured before `mc` is shadowed by the MonteCarlo engine below
+    let mode_name = mc.mode.name();
     let solver = CapacitorSolver::new(p, CapacitorModel::Physics);
     let windows: Vec<_> = per_fmac
         .iter()
@@ -148,6 +150,13 @@ pub fn solve_on(
         ems.push(ErrorModel::from_full(&full));
         sets.push(set);
     }
+    // per-mode draw accounting (DESIGN.md §17): analytic mode shows up
+    // as a zero-increment series only if ever created — add() creates
+    // the counter even for 0 so the exposition lists the mode used
+    crate::obs::registry::add(
+        &format!("mc.draws.{mode_name}"),
+        mc_draws,
+    );
     HwSolve {
         c,
         windows,

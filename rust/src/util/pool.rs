@@ -99,6 +99,11 @@ impl ScopedPool {
 
     /// Run `f(i)` for every `i in 0..n`, work-stealing over an atomic
     /// counter. Runs inline when the pool is sequential or `n <= 1`.
+    ///
+    /// Workers inherit the submitting thread's span context
+    /// ([`crate::obs::current_ctx`]), so spans opened inside `f` nest
+    /// under the span that issued the fan-out — a no-op (one relaxed
+    /// load per item) while tracing is disabled.
     pub fn for_each<F>(&self, n: usize, f: F)
     where
         F: Fn(usize) + Sync,
@@ -109,6 +114,11 @@ impl ScopedPool {
             }
             return;
         }
+        let ctx = crate::obs::current_ctx();
+        let f = move |i: usize| {
+            let _ctx = ctx.attach();
+            f(i);
+        };
         if let Some(engine) = &self.engine {
             engine.run(n, &f);
             return;

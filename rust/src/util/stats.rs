@@ -1,4 +1,11 @@
 //! Scalar statistics helpers used by benches and the evaluator.
+//!
+//! The concurrent power-of-two histogram that used to live beside the
+//! serve metrics is now `obs::registry::Hist` (DESIGN.md §17);
+//! re-exported here for callers that think of it as a stats
+//! primitive.
+
+pub use crate::obs::registry::Hist;
 
 /// Mean of a slice.
 pub fn mean(xs: &[f64]) -> f64 {

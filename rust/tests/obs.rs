@@ -1,0 +1,192 @@
+//! Telemetry integration tests (DESIGN.md §17): the cross-layer
+//! metrics registry stays exact under concurrent writers, and a real
+//! loopback serve run under tracing exports a valid Chrome-trace file
+//! whose per-request trace ids link the queue → batch → forward →
+//! reply spans across threads.
+//!
+//! Tracing is process-global, so everything that needs it enabled
+//! lives in this integration binary — the lib unit tests pin the
+//! disabled fast path and must never see it switched on.
+
+use std::collections::HashSet;
+
+use capmin::coordinator::config::ExperimentConfig;
+use capmin::data::synth::Dataset;
+use capmin::obs;
+use capmin::serve::{client::Client, server, ServeOptions};
+use capmin::util::json::Json;
+
+mod common;
+use common::{artifacts_present, tmp_dir};
+
+#[test]
+fn registry_counts_are_exact_under_concurrent_increments() {
+    let reg = obs::registry::Registry::new();
+    let h = reg.hist("t.lat_us", 16);
+    std::thread::scope(|s| {
+        for t in 0..8u64 {
+            let reg = &reg;
+            let h = h.clone();
+            s.spawn(move || {
+                // one cached handle, one per-call resolution — both
+                // must land every increment
+                let c = reg.counter("t.hits");
+                for i in 0..10_000u64 {
+                    c.inc();
+                    reg.counter("t.by_name").add(2);
+                    h.record(i % 7 + t);
+                }
+            });
+        }
+    });
+    assert_eq!(reg.counter("t.hits").get(), 80_000);
+    assert_eq!(reg.counter("t.by_name").get(), 160_000);
+    assert_eq!(h.count(), 80_000);
+    let j = reg.snapshot_json();
+    assert_eq!(j.req("t.hits").as_f64(), 80_000.0);
+    assert_eq!(j.req("t.lat_us").req("count").as_f64(), 80_000.0);
+    // the prom exposition agrees with the snapshot
+    let prom = reg.prom_text();
+    assert!(prom.contains("capmin_t_hits 80000"), "{prom}");
+    assert!(prom.contains("capmin_t_lat_us_count 80000"), "{prom}");
+}
+
+#[test]
+fn loopback_serve_trace_links_request_spans_across_threads() {
+    if artifacts_present() {
+        eprintln!("skipping: artifacts present");
+        return;
+    }
+    obs::set_tracing(true);
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = "native".into();
+    cfg.threads = 2;
+    cfg.mc_samples = 100;
+    cfg.hist_limit = 32;
+    cfg.eval_limit = 16;
+    cfg.run_dir = tmp_dir("obs_trace");
+    let _ = std::fs::remove_dir_all(&cfg.run_dir);
+    let run_dir = cfg.run_dir.clone();
+    let mut opts =
+        ServeOptions::new("127.0.0.1:0".parse().unwrap());
+    opts.max_batch = 4;
+    opts.max_wait_ms = 5;
+    let srv = server::spawn(cfg, opts).unwrap();
+    let addr = srv.addr();
+
+    let mut c = Client::connect(addr).unwrap();
+    let px = Dataset::FashionSyn.spec().pixels();
+    let mut rng = capmin::util::rng::Rng::new(5);
+    let xs: Vec<Vec<f32>> = (0..2)
+        .map(|_| (0..px).map(|_| rng.pm1(0.5)).collect())
+        .collect();
+
+    // every admitted compute request echoes its own trace id
+    let p = c.point("fashion_syn", 14, 0.02, 0, false).unwrap();
+    let point_trace =
+        u64::from_str_radix(p.req("trace").as_str(), 16).unwrap();
+    assert_ne!(point_trace, 0, "point reply lost its trace id");
+    let r = c
+        .infer("fashion_syn", 14, 0.02, 0, 7, &xs)
+        .unwrap();
+    let infer_trace =
+        u64::from_str_radix(r.req("trace").as_str(), 16).unwrap();
+    assert_ne!(infer_trace, 0, "infer reply lost its trace id");
+    assert_ne!(infer_trace, point_trace, "trace ids must be fresh");
+
+    c.shutdown().unwrap();
+    srv.join().unwrap();
+
+    // export exactly what `--trace` writes, then re-read the file
+    let path =
+        std::path::Path::new(&run_dir).join("loopback.trace.json");
+    obs::trace::write_trace(&path).unwrap();
+    let j =
+        Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+
+    // Chrome-trace shape: complete events carry the mandatory keys
+    let raw = j.req("traceEvents").as_arr();
+    assert!(!raw.is_empty(), "trace exported no events");
+    for e in raw {
+        if e.req("ph").as_str() != "X" {
+            continue;
+        }
+        for key in ["pid", "tid", "ts", "dur", "name"] {
+            assert!(
+                e.get(key).is_some(),
+                "event missing `{key}`: {e}"
+            );
+        }
+    }
+
+    let evs = obs::trace::parse_chrome_trace(&j).unwrap();
+    let all_spans: HashSet<u64> =
+        evs.iter().map(|e| e.span).collect();
+    let of = |t: u64| -> Vec<&obs::trace::TraceEv> {
+        evs.iter().filter(|e| e.trace == t).collect()
+    };
+
+    // the infer's trace links queue -> batch -> forward -> reply (the
+    // lone in-flight infer makes its trace the batch's home trace)
+    let infer_evs = of(infer_trace);
+    for want in
+        ["serve.queue", "serve.batch", "backend.forward", "serve.reply"]
+    {
+        assert!(
+            infer_evs.iter().any(|e| e.name == want),
+            "missing `{want}` on the infer trace; got {:?}",
+            infer_evs.iter().map(|e| &e.name).collect::<Vec<_>>()
+        );
+    }
+    // nesting: every parent ref on the trace resolves inside the file
+    let mut nested = 0;
+    for e in &infer_evs {
+        if e.parent != 0 {
+            assert!(
+                all_spans.contains(&e.parent),
+                "span {} ({}) has dangling parent {}",
+                e.span,
+                e.name,
+                e.parent
+            );
+            nested += 1;
+        }
+    }
+    assert!(nested >= 1, "no nested spans on the infer trace");
+
+    // across threads: the batcher records queue/reply, a pool worker
+    // records the forward — at least two distinct tids per trace
+    let hex = format!("{infer_trace:x}");
+    let tids: HashSet<u64> = raw
+        .iter()
+        .filter(|e| {
+            e.get("args")
+                .and_then(|a| a.get("trace"))
+                .map(|t| t.as_str() == hex)
+                .unwrap_or(false)
+        })
+        .map(|e| e.req("tid").as_f64() as u64)
+        .collect();
+    assert!(
+        tids.len() >= 2,
+        "infer trace confined to one thread: tids {tids:?}"
+    );
+
+    // the point's trace carries the session-thread phases
+    let point_evs = of(point_trace);
+    for want in ["serve.queue", "serve.point", "serve.reply"] {
+        assert!(
+            point_evs.iter().any(|e| e.name == want),
+            "missing `{want}` on the point trace; got {:?}",
+            point_evs.iter().map(|e| &e.name).collect::<Vec<_>>()
+        );
+    }
+    // the cold solve itself ran under the point's request trace
+    assert!(
+        evs.iter().any(|e| e.name == "session.solve"),
+        "no session.solve span recorded"
+    );
+
+    let _ = std::fs::remove_dir_all(&run_dir);
+}

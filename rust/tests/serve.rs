@@ -713,11 +713,14 @@ fn two_shard_peer_fetch_is_bit_identical_to_a_local_solve() {
     let mut sc = Client::connect(solo_addr).unwrap();
     let solo = sc.point(DS, k1, sigma1, 0, false).unwrap();
 
-    // bit-identical replies modulo the client-chosen request id
+    // bit-identical replies modulo the client-chosen request id and
+    // the per-request trace id (every admission mints a fresh one —
+    // DESIGN.md §17)
     let strip = |j: &Json| {
         let mut j = j.clone();
         if let Json::Obj(m) = &mut j {
             m.remove("id");
+            m.remove("trace");
         }
         j
     };
